@@ -1,0 +1,152 @@
+//! End-to-end driver (DESIGN.md §5): boot the FULL stack — CPU socket
+//! model, ECI transport, stateless smart memory controller whose datapath
+//! is the AOT-compiled XLA kernels (JAX/Pallas -> HLO -> PJRT) — run
+//! SELECT and regex pushdown queries from 16 simulated cores over a real
+//! generated table, verify every returned row against the CPU baseline,
+//! and report throughput/latency.
+//!
+//!     make artifacts && cargo run --release --example e2e_select_serve
+//!
+//! Scale with ECI_SCALE={ci,default,paper}.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use eci::agents::dram::MemStore;
+use eci::harness::Scale;
+use eci::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
+use eci::memctl::{regex_row_cycles, FifoServer, ScanTiming};
+use eci::operators::redfa::compile_regex;
+use eci::operators::regex_op::{cpu_regex_scan, fpga_regex_scan};
+use eci::operators::select::{cpu_select_scan, fpga_select_scan};
+use eci::operators::table::{build_table, row_str, select_params, TableSpec};
+use eci::proto::messages::{LineAddr, LINE_BYTES};
+use eci::runtime::{Runtime, DFA_STATES};
+use eci::sim::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let rows = scale.rows(5_120_000).max(40_000);
+    let threads = 16;
+    println!("== ECI end-to-end driver: {rows} rows, {threads} threads (scale {scale:?}) ==\n");
+
+    let mut rt = Runtime::load_default()
+        .expect("artifacts missing — run `make artifacts` first");
+
+    // ---- build the table in simulated FPGA DRAM -------------------------
+    let spec = TableSpec::new(rows, 0.10);
+    let mut store = MemStore::new(map::TABLE_BASE, rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    println!("table: {} MB in FPGA DRAM, 10% selectivity", rows * 128 / 1_000_000);
+
+    // ======================= query 1: SELECT =============================
+    let (x, y) = select_params(0.10);
+    let t0 = std::time::Instant::now();
+    let matches = fpga_select_scan(&mut rt, &store, map::TABLE_BASE, rows, x, y)?;
+    println!(
+        "\n[select] XLA kernel scanned {rows} rows in {:?} (host) -> {} matches",
+        t0.elapsed(),
+        matches.len()
+    );
+    // oracle: CPU baseline must agree exactly
+    let oracle = cpu_select_scan(&store, map::TABLE_BASE, rows, x, y);
+    assert_eq!(matches, oracle, "XLA kernel vs CPU baseline mismatch");
+    println!("[select] kernel results verified against CPU baseline");
+
+    let payloads: Vec<_> = matches
+        .iter()
+        .map(|&i| Box::new(store.read_line(LineAddr(map::TABLE_BASE.0 + i))))
+        .collect();
+    let expect: HashSet<[u8; 16]> = payloads
+        .iter()
+        .map(|p| p[0..16].try_into().unwrap())
+        .collect();
+    let fifo = FifoServer::new(rows, matches, payloads, |_| 1, ScanTiming::enzian(8), 64 << 10);
+    let n_results = fifo.total_results();
+
+    let cfg = MachineConfig::enzian_eci();
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    let mut m = Machine::new(cfg, FpgaApp::Fifo(fifo), store, cpu_mem);
+    m.config_block.set_select_params(x, y);
+    // verify every line delivered into the LLC is a genuine match
+    let seen = Rc::new(RefCell::new(0u64));
+    {
+        let seen = Rc::clone(&seen);
+        m.verify_fill = Some(Box::new(move |_addr, data| {
+            if data[0] == 0xFF && data[..8].iter().all(|&b| b == 0xFF) {
+                return; // end marker
+            }
+            let key: [u8; 16] = data[0..16].try_into().unwrap();
+            assert!(expect.contains(&key), "served a non-matching row");
+            *seen.borrow_mut() += 1;
+        }));
+    }
+    m.set_workload(Workload::FifoConsume { think: Duration::from_ns(5) }, threads);
+    let r = m.run();
+    assert_eq!(r.results as usize, n_results);
+    assert_eq!(*seen.borrow() as usize, n_results);
+    println!(
+        "[select] served {} results over ECI: {:.1}M results/s, scan {:.1}M rows/s, \
+         mean load {:.0} ns, link {:.2} GiB/s",
+        r.results,
+        r.results_per_s() / 1e6,
+        rows as f64 / r.sim_time.as_secs() / 1e6,
+        r.mean_load_ns(),
+        r.remote_gib_per_s(),
+    );
+
+    // ======================= query 2: regex ==============================
+    // rebuild the table store (the select machine consumed it)
+    let mut store = MemStore::new(map::TABLE_BASE, rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    let dfa = compile_regex(&spec.needle, DFA_STATES)?;
+    let t0 = std::time::Instant::now();
+    let matches = fpga_regex_scan(&mut rt, &store, map::TABLE_BASE, rows, &dfa)?;
+    println!(
+        "\n[regex]  XLA kernel ({}-state DFA for {:?}) matched {} rows in {:?} (host)",
+        dfa.n_states(),
+        spec.needle,
+        matches.len(),
+        t0.elapsed()
+    );
+    let oracle = cpu_regex_scan(&store, map::TABLE_BASE, rows, &dfa);
+    assert_eq!(matches, oracle, "regex kernel vs CPU baseline mismatch");
+    println!("[regex]  kernel results verified against CPU baseline");
+
+    let payloads: Vec<_> = matches
+        .iter()
+        .map(|&i| Box::new(store.read_line(LineAddr(map::TABLE_BASE.0 + i))))
+        .collect();
+    let cycles: Vec<u64> = (0..rows)
+        .map(|i| {
+            let l = store.read_line(LineAddr(map::TABLE_BASE.0 + i));
+            regex_row_cycles(&dfa, row_str(&l))
+        })
+        .collect();
+    let fifo = FifoServer::new(
+        rows,
+        matches,
+        payloads,
+        move |r| cycles[r as usize],
+        ScanTiming::enzian(48),
+        64 << 10,
+    );
+    let n_results = fifo.total_results();
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    let mut m = Machine::new(MachineConfig::enzian_eci(), FpgaApp::Fifo(fifo), store, cpu_mem);
+    m.set_workload(Workload::FifoConsume { think: Duration::from_ns(5) }, threads);
+    let r = m.run();
+    assert_eq!(r.results as usize, n_results);
+    println!(
+        "[regex]  served {} results over ECI: {:.1}M results/s, scan {:.1}M rows/s, \
+         mean load {:.0} ns",
+        r.results,
+        r.results_per_s() / 1e6,
+        rows as f64 / r.sim_time.as_secs() / 1e6,
+        r.mean_load_ns(),
+    );
+
+    println!("\nOK — all layers composed: Pallas/JAX kernels (AOT) -> PJRT -> memctl -> ECI -> CPU socket");
+    Ok(())
+}

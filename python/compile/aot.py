@@ -1,0 +1,82 @@
+"""AOT compile the Layer-2 graphs to HLO **text** artifacts.
+
+HLO text — not ``lowered.compile().serialize()`` and not the proto —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python python/compile/aot.py --out artifacts
+
+Writes one ``<op>.hlo.txt`` per operator plus ``manifest.json`` recording
+shapes/dtypes (consumed by rust/src/runtime/artifacts.rs) and the HLO
+cost summary used by the L2 perf notes in EXPERIMENTS.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import OPS, example_args
+from compile.kernels.ref import BATCH, DFA_STATES, ROW_WORDS, STR_LEN
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "geometry": {
+            "batch": BATCH,
+            "row_words": ROW_WORDS,
+            "str_len": STR_LEN,
+            "dfa_states": DFA_STATES,
+        },
+        "ops": {},
+    }
+    for name, fn in OPS.items():
+        ex = example_args()[name]
+        lowered = jax.jit(fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_avals = [spec_of(x) for x in jax.tree_util.tree_leaves(lowered.out_info)]
+        manifest["ops"][name] = {
+            "file": fname,
+            "inputs": [spec_of(s) for s in ex],
+            "outputs": out_avals,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {fname}: {len(text)} chars, "
+              f"{len(ex)} inputs -> {len(out_avals)} outputs")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['ops'])} ops)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas kernel: KVS bucket hashing (paper §5.5).
+
+The FPGA pipelines a multiplicative hash per request; the TPU formulation
+is a lane-vectorized multiply + xor-fold over a `[TILE]` i32 key block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+
+HASH_MULT = -1640531527  # 2654435761 wrapped to int32 (plain int: pallas
+                         # kernels cannot capture jax-array constants)
+
+
+def _kernel(mask_ref, keys_ref, out_ref):
+    keys = keys_ref[...]
+    h = (keys * HASH_MULT).astype(jnp.int32)
+    h = jnp.bitwise_xor(h, jnp.right_shift(h.astype(jnp.uint32), 16).astype(jnp.int32))
+    out_ref[...] = jnp.bitwise_and(h, mask_ref[0])
+
+
+def hash_buckets(keys, bucket_mask):
+    """keys: [B] i32, bucket_mask: [1] i32 (= nbuckets-1) -> [B] i32."""
+    b = keys.shape[0]
+    assert b % TILE == 0, f"batch {b} not a multiple of {TILE}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // TILE,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(bucket_mask, keys)

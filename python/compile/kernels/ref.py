@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the single source of truth for kernel semantics: pytest sweeps
+shapes/dtypes (hypothesis) and asserts the Pallas kernels match these
+bit-for-bit (integers) / allclose (floats). The Rust CPU baselines
+re-implement the same definitions natively; `python/tests/test_abi.py`
+pins the shared data layout.
+
+Row ABI (shared with rust/src/operators):
+  * 128-byte row = 32 little-endian f32 words for SELECT; attribute
+    ``a`` = word 0, ``b`` = word 1.
+  * regex string field = bytes 64..126 of the row (62 bytes), evaluated
+    as int32 character codes 0..255.
+  * KVS key = low 32 bits of the 8-byte key, as int32.
+"""
+
+import jax.numpy as jnp
+
+# Fixed kernel geometry (mirrored in rust/src/runtime/artifacts.rs).
+BATCH = 4096
+STR_LEN = 62
+DFA_STATES = 32
+ROW_WORDS = 32
+
+# Knuth's multiplicative constant 2654435761 as a wrapped int32.
+HASH_MULT = jnp.int32(-1640531527)
+
+
+def select_mask(rows, x, y):
+    """SELECT * FROM S WHERE S.a > X AND S.b < Y  (paper §5.4).
+
+    rows: [B, 32] f32; returns [B] int32 0/1 mask.
+    """
+    a = rows[:, 0]
+    b = rows[:, 1]
+    return ((a > x) & (b < y)).astype(jnp.int32)
+
+
+def hash_buckets(keys, bucket_mask):
+    """Multiplicative hash -> bucket id (paper §5.5 KVS).
+
+    keys: [B] int32; bucket_mask: () int32 = nbuckets-1 (power of two).
+    Returns [B] int32 bucket ids.
+    """
+    h = (keys.astype(jnp.int32) * HASH_MULT).astype(jnp.int32)
+    # xor-fold the high half down so low bits depend on all 32 bits
+    h = jnp.bitwise_xor(h, jnp.right_shift(h.astype(jnp.uint32), 16).astype(jnp.int32))
+    return jnp.bitwise_and(h, bucket_mask)
+
+
+def regex_mask_table(chars, table, accept):
+    """DFA evaluation by table lookup (the CPU-shaped formulation).
+
+    chars:  [B, L] int32 in 0..255
+    table:  [S, 256] int32 next-state table
+    accept: [S] int32 0/1
+    Returns [B] int32 0/1 'string contains a match' (the DFA is built with
+    a .*-style start loop and absorbing accept states, see redfa.py).
+    """
+    b = chars.shape[0]
+    state = jnp.zeros((b,), dtype=jnp.int32)
+    for t in range(chars.shape[1]):
+        state = table[state, chars[:, t]]
+    return accept[state]
+
+
+def regex_mask_onehot(chars, tmat, accept_vec):
+    """DFA evaluation as one-hot state x per-character transition-matrix
+    products — the MXU-shaped formulation the Pallas kernel uses
+    (DESIGN.md §2 Hardware-Adaptation).
+
+    chars:      [B, L] int32
+    tmat:       [256, S, S] f32, tmat[c, s, s'] = 1 iff delta(s, c) = s'
+    accept_vec: [S] f32 0/1
+    Returns [B] int32.
+    """
+    b = chars.shape[0]
+    s = tmat.shape[1]
+    state = jnp.zeros((b, s), dtype=jnp.float32).at[:, 0].set(1.0)
+    for t in range(chars.shape[1]):
+        m = tmat[chars[:, t]]  # [B, S, S]
+        state = jnp.einsum("bs,bst->bt", state, m)
+    return (state @ accept_vec > 0.5).astype(jnp.int32)

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: regex/DFA matching (paper §5.6).
+
+Hardware adaptation (DESIGN.md §2): the paper's FPGA engine consumes one
+character per cycle through an NFA circuit. A mechanical port would be a
+scalar loop; instead we map the per-character step onto the MXU systolic
+array: the DFA state is a one-hot f32 vector and each step is a batched
+vector x transition-matrix product over the boolean semiring,
+
+    state[B, S] <- state[B, S] @ T[c_t][S, S]
+
+with `T` the per-character one-hot transition matrices ([256, S, S] f32,
+1 MiB at S=32 — resident in VMEM across the whole string scan). The
+batch is tiled `TILE_B` strings per grid step; `lax.fori_loop` walks the
+string axis so the HLO stays a single fused loop instead of L unrolled
+matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 512
+STATES = 32
+
+
+def _kernel(chars_ref, tmat_ref, accept_ref, out_ref, *, length):
+    chars = chars_ref[...]        # [TILE_B, L] i32
+    tmat = tmat_ref[...]          # [256, S, S] f32
+    accept = accept_ref[...]      # [S] f32
+    b = chars.shape[0]
+    s = tmat.shape[1]
+    init = jnp.zeros((b, s), dtype=jnp.float32).at[:, 0].set(1.0)
+
+    def step(t, state):
+        m = tmat[chars[:, t]]                      # [TILE_B, S, S] gather
+        return jnp.einsum("bs,bst->bt", state, m)  # MXU-shaped product
+
+    state = jax.lax.fori_loop(0, length, step, init)
+    out_ref[...] = (state @ accept > 0.5).astype(jnp.int32)
+
+
+def regex_mask(chars, tmat, accept):
+    """chars: [B, L] i32; tmat: [256, S, S] f32; accept: [S] f32 -> [B] i32."""
+    b, length = chars.shape
+    assert b % TILE_B == 0, f"batch {b} not a multiple of {TILE_B}"
+    s = tmat.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, length=length),
+        grid=(b // TILE_B,),
+        in_specs=[
+            pl.BlockSpec((TILE_B, length), lambda i: (i, 0)),
+            pl.BlockSpec((256, s, s), lambda i: (0, 0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(chars, tmat, accept)

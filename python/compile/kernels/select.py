@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: SELECT predicate pushdown (paper §5.4).
+
+Hardware adaptation (DESIGN.md §2): the paper's FPGA operator is a
+per-row comparator pipeline. On a TPU the same data reduction is a
+VMEM-tiled vector compare: each grid step streams one `[TILE, 32]` f32
+row-block HBM->VMEM (16 KiB/block — double-buffered 32 KiB, far under
+VMEM), evaluates the predicate across lanes, and writes a `[TILE]` i32
+mask. `interpret=True` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls; real-TPU efficiency is estimated statically
+(EXPERIMENTS.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096
+
+
+def _kernel(x_ref, y_ref, rows_ref, out_ref):
+    rows = rows_ref[...]  # [TILE, 32] f32
+    a = rows[:, 0]
+    b = rows[:, 1]
+    x = x_ref[0]
+    y = y_ref[0]
+    out_ref[...] = ((a > x) & (b < y)).astype(jnp.int32)
+
+
+def select_mask(rows, x, y):
+    """rows: [B, 32] f32, x/y: [1] f32 -> [B] i32 mask. B % TILE == 0."""
+    b = rows.shape[0]
+    assert b % TILE == 0, f"batch {b} not a multiple of {TILE}"
+    grid = (b // TILE,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # x
+            pl.BlockSpec((1,), lambda i: (0,)),            # y
+            pl.BlockSpec((TILE, rows.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(x, y, rows)

@@ -1,0 +1,73 @@
+"""Layer-2 JAX operator graphs (build-time only; never on the request path).
+
+Each function is the complete compute graph for one smart-memory-controller
+operator's datapath, calling the Layer-1 Pallas kernels. `aot.py` lowers
+them once to HLO text; the Rust coordinator loads and executes the
+artifacts through PJRT (rust/src/runtime).
+
+Shapes are fixed at AOT time (PJRT executables are monomorphic): batch
+4096 rows/keys/strings per invocation; the Rust side pads final batches.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import hash as hash_kernel
+from .kernels import regex as regex_kernel
+from .kernels import select as select_kernel
+from .kernels.ref import BATCH, DFA_STATES, ROW_WORDS, STR_LEN
+
+
+def select_op(rows, x, y):
+    """SELECT pushdown datapath: [B, 32] f32 rows -> [B] i32 match mask
+    plus the running match count (the operator's FIFO fill accounting).
+    """
+    mask = select_kernel.select_mask(rows, x, y)
+    # PERF: the result-FIFO slot assignment (exclusive cumsum) was lowered
+    # by the runtime's XLA 0.5.1 backend as a serial 4096-step loop and
+    # dominated batch time; the coordinator derives slots from the mask on
+    # the Rust side instead (EXPERIMENTS.md §Perf).
+    count = jnp.sum(mask)
+    return mask, count
+
+
+def regex_op(chars, tmat, accept):
+    """Regex pushdown datapath: [B, 62] i32 strings -> mask/slots/count."""
+    mask = regex_kernel.regex_mask(chars, tmat, accept)
+    count = jnp.sum(mask)
+    return mask, count
+
+
+def hash_op(keys, bucket_mask):
+    """KVS request hashing: [B] i32 keys -> [B] i32 bucket ids."""
+    return (hash_kernel.hash_buckets(keys, bucket_mask),)
+
+
+def example_args():
+    """Example (abstract) arguments for AOT lowering, keyed by op name."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return {
+        "select": (
+            jax.ShapeDtypeStruct((BATCH, ROW_WORDS), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+        ),
+        "regex": (
+            jax.ShapeDtypeStruct((BATCH, STR_LEN), i32),
+            jax.ShapeDtypeStruct((256, DFA_STATES, DFA_STATES), f32),
+            jax.ShapeDtypeStruct((DFA_STATES,), f32),
+        ),
+        "hash": (
+            jax.ShapeDtypeStruct((BATCH,), i32),
+            jax.ShapeDtypeStruct((1,), i32),
+        ),
+    }
+
+
+OPS = {
+    "select": select_op,
+    "regex": regex_op,
+    "hash": hash_op,
+}

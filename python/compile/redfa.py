@@ -1,0 +1,318 @@
+"""Regex -> DFA compiler for the FPGA regex operator (paper §5.6).
+
+The paper integrates an open-source FPGA regex engine [Sidler et al.];
+we need the equivalent build-time artifact: a regex compiled to a dense
+DFA the kernels can evaluate. Pipeline:
+
+    pattern --parse--> AST --Thompson--> NFA --subset--> DFA (<= S states)
+
+Search semantics ("REGEXP LIKE", i.e. match anywhere in the string) are
+baked in structurally: the NFA start state self-loops on every byte
+(a ".*" prefix) and DFA accept states are absorbing (".*" suffix), so a
+fixed-length scan over the whole 62-byte field answers "contains a
+match". Pad bytes are NUL; patterns over printable characters therefore
+behave as over the unpadded string.
+
+Supported syntax: literals, '.', '*', '+', '?', '|', '(...)',
+classes '[a-z0-9]' / negated '[^...]', escapes \\d \\w \\s \\. etc.
+
+Outputs:
+  * ``table``  [S, 256] int32 next-state (state 0 initial) — CPU form
+  * ``accept`` [S] int32
+  * ``tmat``   [256, S, S] float32 one-hot — MXU form
+  * JSON export for the Rust side (operators/regex_op.rs loads it).
+"""
+
+import json
+
+import numpy as np
+
+ALPHABET = 256
+
+
+# --------------------------------------------------------------------------
+# Parsing: recursive descent to a tiny AST.
+# --------------------------------------------------------------------------
+
+class _Parser:
+    def __init__(self, pattern: str):
+        self.p = pattern
+        self.i = 0
+
+    def peek(self):
+        return self.p[self.i] if self.i < len(self.p) else None
+
+    def take(self):
+        c = self.peek()
+        self.i += 1
+        return c
+
+    def parse(self):
+        node = self.alternation()
+        if self.peek() is not None:
+            raise ValueError(f"unexpected {self.peek()!r} at {self.i} in {self.p!r}")
+        return node
+
+    def alternation(self):
+        branches = [self.concat()]
+        while self.peek() == "|":
+            self.take()
+            branches.append(self.concat())
+        return ("alt", branches) if len(branches) > 1 else branches[0]
+
+    def concat(self):
+        parts = []
+        while self.peek() not in (None, "|", ")"):
+            parts.append(self.repeat())
+        if not parts:
+            return ("empty",)
+        return ("cat", parts) if len(parts) > 1 else parts[0]
+
+    def repeat(self):
+        node = self.atom()
+        while self.peek() in ("*", "+", "?"):
+            op = self.take()
+            node = ({"*": "star", "+": "plus", "?": "opt"}[op], node)
+        return node
+
+    def atom(self):
+        c = self.take()
+        if c is None:
+            raise ValueError("unexpected end of pattern")
+        if c == "(":
+            node = self.alternation()
+            if self.take() != ")":
+                raise ValueError("unbalanced parenthesis")
+            return node
+        if c == "[":
+            return ("class", self.char_class())
+        if c == ".":
+            return ("class", frozenset(range(ALPHABET)))
+        if c == "\\":
+            return ("class", escape_class(self.take()))
+        if c in "*+?)|":
+            raise ValueError(f"misplaced {c!r}")
+        return ("class", frozenset([ord(c)]))
+
+    def char_class(self):
+        negate = False
+        if self.peek() == "^":
+            self.take()
+            negate = True
+        chars: set[int] = set()
+        first = True
+        while True:
+            c = self.take()
+            if c is None:
+                raise ValueError("unterminated character class")
+            if c == "]" and not first:
+                break
+            first = False
+            if c == "\\":
+                chars |= escape_class(self.take())
+                continue
+            if self.peek() == "-" and self.p[self.i + 1 : self.i + 2] not in ("]", ""):
+                self.take()  # '-'
+                hi = self.take()
+                chars |= set(range(ord(c), ord(hi) + 1))
+            else:
+                chars.add(ord(c))
+        if negate:
+            return frozenset(set(range(ALPHABET)) - chars)
+        return frozenset(chars)
+
+
+def escape_class(c):
+    if c is None:
+        raise ValueError("dangling escape")
+    if c == "d":
+        return frozenset(range(ord("0"), ord("9") + 1))
+    if c == "w":
+        s = set(range(ord("a"), ord("z") + 1)) | set(range(ord("A"), ord("Z") + 1))
+        s |= set(range(ord("0"), ord("9") + 1)) | {ord("_")}
+        return frozenset(s)
+    if c == "s":
+        return frozenset(map(ord, " \t\r\n\f\v"))
+    return frozenset([ord(c)])
+
+
+# --------------------------------------------------------------------------
+# Thompson construction.
+# --------------------------------------------------------------------------
+
+class Nfa:
+    def __init__(self):
+        self.eps: list[set[int]] = []
+        self.edges: list[dict[int, set[int]]] = []  # state -> char -> {next}
+
+    def new_state(self) -> int:
+        self.eps.append(set())
+        self.edges.append({})
+        return len(self.eps) - 1
+
+    def add_eps(self, a, b):
+        self.eps[a].add(b)
+
+    def add_edge(self, a, chars, b):
+        for c in chars:
+            self.edges[a].setdefault(c, set()).add(b)
+
+
+def _build(nfa: Nfa, node) -> tuple[int, int]:
+    """Return (entry, exit) states for an AST node."""
+    kind = node[0]
+    if kind == "empty":
+        s = nfa.new_state()
+        return s, s
+    if kind == "class":
+        a, b = nfa.new_state(), nfa.new_state()
+        nfa.add_edge(a, node[1], b)
+        return a, b
+    if kind == "cat":
+        first_in, prev_out = _build(nfa, node[1][0])
+        for part in node[1][1:]:
+            pin, pout = _build(nfa, part)
+            nfa.add_eps(prev_out, pin)
+            prev_out = pout
+        return first_in, prev_out
+    if kind == "alt":
+        a, b = nfa.new_state(), nfa.new_state()
+        for branch in node[1]:
+            bin_, bout = _build(nfa, branch)
+            nfa.add_eps(a, bin_)
+            nfa.add_eps(bout, b)
+        return a, b
+    if kind in ("star", "opt", "plus"):
+        inner_in, inner_out = _build(nfa, node[1])
+        a, b = nfa.new_state(), nfa.new_state()
+        nfa.add_eps(a, inner_in)
+        nfa.add_eps(inner_out, b)
+        if kind in ("star", "opt"):
+            nfa.add_eps(a, b)
+        if kind in ("star", "plus"):
+            nfa.add_eps(inner_out, inner_in)
+        return a, b
+    raise AssertionError(kind)
+
+
+def _eps_closure(nfa: Nfa, states: frozenset[int]) -> frozenset[int]:
+    stack = list(states)
+    seen = set(states)
+    while stack:
+        s = stack.pop()
+        for t in nfa.eps[s]:
+            if t not in seen:
+                seen.add(t)
+                stack.append(t)
+    return frozenset(seen)
+
+
+class Dfa:
+    """Dense DFA with search semantics baked in."""
+
+    def __init__(self, table: np.ndarray, accept: np.ndarray, pattern: str):
+        self.table = table    # [S, 256] int32
+        self.accept = accept  # [S] int32
+        self.pattern = pattern
+
+    @property
+    def n_states(self) -> int:
+        return self.table.shape[0]
+
+    def matches(self, data: bytes) -> bool:
+        s = 0
+        for ch in data:
+            s = int(self.table[s, ch])
+        return bool(self.accept[s])
+
+    def onehot_tmat(self, padded_states: int | None = None) -> np.ndarray:
+        """[256, S, S] f32 one-hot transition matrices (optionally padded
+        to a fixed state count for the AOT kernel)."""
+        s = padded_states or self.n_states
+        assert s >= self.n_states
+        t = np.zeros((ALPHABET, s, s), dtype=np.float32)
+        for st in range(self.n_states):
+            for c in range(ALPHABET):
+                t[c, st, self.table[st, c]] = 1.0
+        # padding states self-loop (unreachable; keeps the product stochastic)
+        for st in range(self.n_states, s):
+            t[:, st, st] = 1.0
+        return t
+
+    def accept_vec(self, padded_states: int | None = None) -> np.ndarray:
+        s = padded_states or self.n_states
+        v = np.zeros((s,), dtype=np.float32)
+        v[: self.n_states] = self.accept.astype(np.float32)
+        return v
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "pattern": self.pattern,
+                "n_states": self.n_states,
+                "table": self.table.flatten().tolist(),
+                "accept": self.accept.tolist(),
+            }
+        )
+
+
+def compile_regex(pattern: str, max_states: int = 32) -> Dfa:
+    """Compile to a search-semantics DFA with at most `max_states` states."""
+    ast = _Parser(pattern).parse()
+    nfa = Nfa()
+    entry, exit_ = _build(nfa, ast)
+    # search semantics: start self-loops on any byte (".*" prefix)
+    start = nfa.new_state()
+    nfa.add_eps(start, entry)
+    nfa.add_edge(start, range(ALPHABET), start)
+    accept_nfa = exit_
+
+    # subset construction
+    start_set = _eps_closure(nfa, frozenset([start]))
+    index: dict[frozenset[int], int] = {start_set: 0}
+    worklist = [start_set]
+    rows: list[list[int]] = []
+    accept: list[int] = []
+    matched_sink = None  # absorbing accept state id, created lazily
+
+    while worklist:
+        cur = worklist.pop(0)
+        rows.append([0] * ALPHABET)
+        accept.append(1 if accept_nfa in cur else 0)
+        row = rows[index[cur]]
+        if accept_nfa in cur:
+            # absorbing accept (".*" suffix): once matched, stay matched
+            row[:] = [index[cur]] * ALPHABET
+            continue
+        for c in range(ALPHABET):
+            nxt = set()
+            for s in cur:
+                nxt |= nfa.edges[s].get(c, set())
+            nxt = _eps_closure(nfa, frozenset(nxt))
+            if accept_nfa in nxt:
+                # collapse all accepting subsets into one absorbing state
+                if matched_sink is None:
+                    sink = frozenset([accept_nfa])
+                    if sink not in index:
+                        index[sink] = len(index)
+                        worklist.append(sink)
+                    matched_sink = index[sink]
+                row[c] = matched_sink
+                continue
+            if nxt not in index:
+                if len(index) >= max_states:
+                    raise ValueError(
+                        f"pattern {pattern!r} needs more than {max_states} DFA states"
+                    )
+                index[nxt] = len(index)
+                worklist.append(nxt)
+            row[c] = index[nxt]
+
+    table = np.array(rows, dtype=np.int32)
+    return Dfa(table, np.array(accept, dtype=np.int32), pattern)
+
+
+def from_json(text: str) -> Dfa:
+    d = json.loads(text)
+    table = np.array(d["table"], dtype=np.int32).reshape(d["n_states"], ALPHABET)
+    return Dfa(table, np.array(d["accept"], dtype=np.int32), d["pattern"])

@@ -1,0 +1,149 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value distributions; integer outputs must
+match exactly, float comparisons use allclose. This is the CORE
+correctness signal for the compute layer — the Rust runtime executes the
+same graphs AOT, and rust integration tests compare against the same
+semantics re-implemented natively.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import redfa
+from compile.kernels import hash as hash_kernel
+from compile.kernels import ref
+from compile.kernels import regex as regex_kernel
+from compile.kernels import select as select_kernel
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# SELECT
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n_tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    x=st.floats(-100, 100, allow_nan=False, width=32),
+    y=st.floats(-100, 100, allow_nan=False, width=32),
+)
+def test_select_matches_ref(n_tiles, seed, x, y):
+    rng = np.random.default_rng(seed)
+    b = select_kernel.TILE * n_tiles
+    rows = rng.uniform(-100, 100, size=(b, ref.ROW_WORDS)).astype(np.float32)
+    got = select_kernel.select_mask(
+        jnp.asarray(rows), jnp.asarray([x], jnp.float32), jnp.asarray([y], jnp.float32)
+    )
+    want = ref.select_mask(jnp.asarray(rows), jnp.float32(x), jnp.float32(y))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_select_boundary_values_not_selected():
+    # strict inequalities: a > X AND b < Y
+    rows = np.zeros((select_kernel.TILE, ref.ROW_WORDS), np.float32)
+    rows[:, 0] = 5.0
+    rows[:, 1] = 3.0
+    m = select_kernel.select_mask(
+        jnp.asarray(rows), jnp.asarray([5.0], jnp.float32), jnp.asarray([3.0], jnp.float32)
+    )
+    assert int(np.asarray(m).sum()) == 0
+
+
+# --------------------------------------------------------------------------
+# HASH
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n_tiles=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    log2_buckets=st.integers(1, 24),
+)
+def test_hash_matches_ref(n_tiles, seed, log2_buckets):
+    rng = np.random.default_rng(seed)
+    b = hash_kernel.TILE * n_tiles
+    keys = rng.integers(-(2**31), 2**31, size=(b,), dtype=np.int64).astype(np.int32)
+    mask = np.int32((1 << log2_buckets) - 1)
+    got = hash_kernel.hash_buckets(jnp.asarray(keys), jnp.asarray([mask], jnp.int32))
+    want = ref.hash_buckets(jnp.asarray(keys), jnp.int32(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).min() >= 0
+    assert np.asarray(got).max() <= mask
+
+
+def test_hash_spreads_sequential_keys():
+    # multiplicative hashing must decorrelate dense key ranges
+    b = hash_kernel.TILE
+    keys = np.arange(b, dtype=np.int32)
+    mask = np.int32(255)
+    got = np.asarray(hash_kernel.hash_buckets(jnp.asarray(keys), jnp.asarray([mask], jnp.int32)))
+    counts = np.bincount(got, minlength=256)
+    assert counts.max() < 4 * b / 256, f"bucket skew too high: {counts.max()}"
+
+
+# --------------------------------------------------------------------------
+# REGEX
+# --------------------------------------------------------------------------
+
+def _random_strings(rng, n, alphabet=b"abc01 "):
+    out = np.zeros((n, ref.STR_LEN), dtype=np.int32)
+    for i in range(n):
+        ln = rng.integers(0, ref.STR_LEN + 1)
+        s = rng.choice(list(alphabet), size=ln)
+        out[i, :ln] = s
+    return out
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), pattern=st.sampled_from([
+    "abc",
+    "a+b",
+    "a(b|c)*",
+    "[ab]+c",
+    "a.c",
+    "(0|1)+",
+    "ab?c",
+]))
+def test_regex_kernel_matches_table_ref_and_onehot_ref(seed, pattern):
+    rng = np.random.default_rng(seed)
+    dfa = redfa.compile_regex(pattern, max_states=ref.DFA_STATES)
+    chars = _random_strings(rng, regex_kernel.TILE_B)
+    tmat = jnp.asarray(dfa.onehot_tmat(ref.DFA_STATES))
+    accept = jnp.asarray(dfa.accept_vec(ref.DFA_STATES))
+    got = np.asarray(regex_kernel.regex_mask(jnp.asarray(chars), tmat, accept))
+    want_oh = np.asarray(ref.regex_mask_onehot(jnp.asarray(chars), tmat, accept))
+    want_tbl = np.asarray(
+        ref.regex_mask_table(
+            jnp.asarray(chars), jnp.asarray(dfa.table), jnp.asarray(dfa.accept)
+        )
+    )
+    np.testing.assert_array_equal(got, want_oh)
+    np.testing.assert_array_equal(got, want_tbl)
+
+
+def test_regex_kernel_finds_planted_matches():
+    dfa = redfa.compile_regex("needle", max_states=ref.DFA_STATES)
+    chars = np.zeros((regex_kernel.TILE_B, ref.STR_LEN), dtype=np.int32)
+    # plant "needle" at various offsets in rows 0..9
+    for i in range(10):
+        s = b"x" * i + b"needle"
+        chars[i, : len(s)] = np.frombuffer(s, dtype=np.uint8)
+    got = np.asarray(
+        regex_kernel.regex_mask(
+            jnp.asarray(chars),
+            jnp.asarray(dfa.onehot_tmat(ref.DFA_STATES)),
+            jnp.asarray(dfa.accept_vec(ref.DFA_STATES)),
+        )
+    )
+    assert got[:10].sum() == 10
+    assert got[10:].sum() == 0

@@ -1,0 +1,107 @@
+"""redfa (regex -> DFA compiler) vs Python's `re` on search semantics."""
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import redfa
+
+PATTERNS = [
+    "abc",
+    "a|b",
+    "ab*c",
+    "a+",
+    "(ab)+",
+    "a?b",
+    "[abc]",
+    "[a-c]x",
+    "[^a]b",
+    "a.c",
+    "x(y|z)*w",
+    r"\d\d",
+    r"\w+",
+    "a[0-9]+b",
+    "(a|b)(c|d)",
+]
+
+
+def dfa_search(pattern: str, data: bytes) -> bool:
+    return redfa.compile_regex(pattern).matches(data)
+
+
+def re_search(pattern: str, data: bytes) -> bool:
+    return re.search(pattern.encode(), data) is not None
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    pattern=st.sampled_from(PATTERNS),
+    data=st.binary(max_size=40),
+)
+def test_matches_python_re_on_random_bytes(pattern, data):
+    assert dfa_search(pattern, data) == re_search(pattern, data), (pattern, data)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    pattern=st.sampled_from(PATTERNS),
+    data=st.text(alphabet="abcxyz019 ", max_size=40),
+)
+def test_matches_python_re_on_text(pattern, data):
+    b = data.encode()
+    assert dfa_search(pattern, b) == re_search(pattern, b), (pattern, data)
+
+
+def test_accept_states_are_absorbing():
+    dfa = redfa.compile_regex("ab")
+    # find an accepting state and check all its transitions self-loop
+    for s in range(dfa.n_states):
+        if dfa.accept[s]:
+            assert (dfa.table[s] == s).all()
+
+
+def test_match_anywhere_semantics():
+    dfa = redfa.compile_regex("abc")
+    assert dfa.matches(b"abc")
+    assert dfa.matches(b"xxabcxx")
+    assert dfa.matches(b"xxabc")
+    assert not dfa.matches(b"ab c")
+    assert not dfa.matches(b"")
+
+
+def test_empty_matching_pattern_accepts_everything():
+    dfa = redfa.compile_regex("a*")
+    assert dfa.matches(b"")
+    assert dfa.matches(b"zzz")
+
+
+def test_state_budget_enforced():
+    import pytest
+
+    with pytest.raises(ValueError):
+        # forces exponential subset blowup past 32 states
+        redfa.compile_regex("(a|b)*a(a|b)(a|b)(a|b)(a|b)(a|b)(a|b)", max_states=32)
+
+
+def test_json_round_trip():
+    dfa = redfa.compile_regex("a(b|c)+d")
+    clone = redfa.from_json(dfa.to_json())
+    np.testing.assert_array_equal(dfa.table, clone.table)
+    np.testing.assert_array_equal(dfa.accept, clone.accept)
+    for s in [b"abd", b"abcbcd", b"ad", b"xxacdyy"]:
+        assert dfa.matches(s) == clone.matches(s)
+
+
+def test_onehot_padding_is_stochastic():
+    dfa = redfa.compile_regex("ab")
+    t = dfa.onehot_tmat(32)
+    assert t.shape == (256, 32, 32)
+    # every row of every per-char matrix sums to exactly 1
+    sums = t.sum(axis=2)
+    np.testing.assert_allclose(sums, np.ones_like(sums))

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 5 (SELECT pushdown vs CPU scan).
+
+use eci::harness::{fig5, Scale};
+use eci::runtime::Runtime;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut rt = Runtime::load_default().expect("artifacts (run `make artifacts`)");
+    let t0 = std::time::Instant::now();
+    let f = fig5::run(&mut rt, scale).expect("fig5");
+    println!("{}", fig5::render(&f).to_markdown());
+    eprintln!("fig5 done in {:?} (scale {scale:?})", t0.elapsed());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 6 (KVS pointer chasing — the negative result).
+
+use eci::harness::{fig6, Scale};
+use eci::runtime::Runtime;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut rt = Runtime::load_default().expect("artifacts (run `make artifacts`)");
+    let t0 = std::time::Instant::now();
+    let f = fig6::run(&mut rt, scale).expect("fig6");
+    println!("{}", fig6::render(&f).to_markdown());
+    eprintln!("fig6 done in {:?} (scale {scale:?})", t0.elapsed());
+}

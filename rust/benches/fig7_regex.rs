@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 7 (regex pushdown vs CPU regex).
+
+use eci::harness::{fig7, Scale};
+use eci::runtime::Runtime;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut rt = Runtime::load_default().expect("artifacts (run `make artifacts`)");
+    let t0 = std::time::Instant::now();
+    let f = fig7::run(&mut rt, scale).expect("fig7");
+    println!("{}", fig7::render(&f).to_markdown());
+    eprintln!("fig7 done in {:?} (scale {scale:?})", t0.elapsed());
+}

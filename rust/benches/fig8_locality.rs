@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 8 (temporal locality / result reuse).
+
+use eci::harness::{fig8, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig8::run(scale);
+    println!("{}", fig8::render(&f).to_markdown());
+    eprintln!("fig8 done in {:?} (scale {scale:?})", t0.elapsed());
+}

@@ -1,0 +1,107 @@
+//! Microbenchmarks of the hot paths themselves (host-side performance —
+//! the L3 optimization targets of EXPERIMENTS.md §Perf):
+//!
+//! * DES event throughput (events/s of the machine's inner loop)
+//! * transport layer frame rate
+//! * PJRT operator batch latency (select/regex/hash)
+//! * spec-generated rule-map construction rate
+
+use std::time::Instant;
+
+use eci::agents::dram::MemStore;
+use eci::machine::{map, Machine, MachineConfig, Workload};
+use eci::proto::messages::{CohOp, LineAddr, Message, ReqId};
+use eci::proto::states::Node;
+use eci::runtime::{Runtime, BATCH, ROW_WORDS};
+use eci::sim::rng::Rng;
+use eci::transport::{LinkConfig, LinkDir};
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    let mut units = 0u64;
+    let mut iters = 0u32;
+    while t0.elapsed().as_secs_f64() < 1.0 {
+        units += f();
+        iters += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<40} {:>12.0} units/s   ({iters} iters, {dt:.2}s)",
+        units as f64 / dt
+    );
+}
+
+fn main() {
+    println!("== eci microbench ==");
+
+    bench("DES: remote stream events/s", || {
+        let cfg = MachineConfig::test_small();
+        let fpga = MemStore::new(map::TABLE_BASE, 4 << 20);
+        let cpu = MemStore::new(LineAddr(0), 1 << 20);
+        let mut m = Machine::memory_node(cfg, fpga, cpu);
+        m.set_workload(Workload::StreamRemote { lines: 20_000 }, 4);
+        let r = m.run();
+        r.events
+    });
+
+    bench("transport: frames/s (loopback)", || {
+        let mut dir = LinkDir::new(LinkConfig::eci(), Node::Remote, Rng::new(1));
+        let n = 50_000u32;
+        let mut delivered = 0u64;
+        let mut now = eci::sim::time::Time(0);
+        for i in 0..n {
+            dir.send(Message::coh_req(ReqId(i), Node::Remote, CohOp::ReadShared, LineAddr(i as u64)));
+            if let Some((arr, frame)) = dir.try_launch(now) {
+                now = arr;
+                let vc = frame.vc;
+                let (msg, _) = dir.receive(frame);
+                if msg.is_some() {
+                    delivered += 1;
+                    dir.credit_return(vc);
+                }
+            }
+        }
+        delivered
+    });
+
+    if let Ok(mut rt) = Runtime::load_default() {
+        let rows = vec![0.5f32; BATCH * ROW_WORDS];
+        bench("PJRT: select rows/s", || {
+            let (_m, _c) = rt.select(&rows, 0.3, 0.7).unwrap();
+            BATCH as u64
+        });
+        let keys = vec![7i32; BATCH];
+        bench("PJRT: hash keys/s", || {
+            let _ = rt.hash(&keys, 1023).unwrap();
+            BATCH as u64
+        });
+        let dfa = eci::operators::redfa::compile_regex("erro+r", 32).unwrap();
+        let tmat = dfa.onehot_tmat(32);
+        let acc = dfa.accept_vec(32);
+        let chars = vec![b'x' as i32; BATCH * eci::runtime::STR_LEN];
+        bench("PJRT: regex strings/s", || {
+            let _ = rt.regex(&chars, &tmat, &acc).unwrap();
+            BATCH as u64
+        });
+    } else {
+        eprintln!("(artifacts not built; skipping PJRT benches)");
+    }
+
+    bench("redfa: compiles/s", || {
+        let mut n = 0;
+        for p in ["abc", "a(b|c)+d", "[a-z]+[0-9]?x", "err(o|0)+r"] {
+            let _ = eci::operators::redfa::compile_regex(p, 32).unwrap();
+            n += 1;
+        }
+        n
+    });
+
+    bench("spec: rule-map generations/s", || {
+        let spec = eci::proto::transitions::reference_transitions();
+        let _ = eci::proto::spec::generate_home(&spec, Default::default());
+        let _ = eci::proto::spec::generate_remote(&spec);
+        2
+    });
+}

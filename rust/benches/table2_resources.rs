@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 2 (FPGA resource consumption) plus the
+//! protocol-subsetting area ablation.
+
+use eci::harness::table2;
+
+fn main() {
+    for t in table2::render() {
+        println!("{}", t.to_markdown());
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Table 3 (inter-socket throughput & latency,
+//! Enzian+ECI vs native 2-socket). Custom harness (criterion is not
+//! available in the offline registry).
+
+use eci::harness::{table3, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let t = table3::run(scale);
+    println!("{}", table3::render(&t).to_markdown());
+    println!("paper:    ECI 12.8 GiB/s / 320 ns   native 19 GiB/s / 150 ns");
+    println!(
+        "measured: ECI {:.1} GiB/s / {:.0} ns   native {:.1} GiB/s / {:.0} ns   (host {:?}, scale {scale:?})",
+        t.eci.throughput_gib, t.eci.latency_ns, t.native.throughput_gib, t.native.latency_ns,
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,476 @@
+//! The home agent: the FPGA-side directory controller of §4.2,
+//! interpreting the spec-generated [`HomeRules`]. Supports the symmetric
+//! configuration (directory + optional home cache) and degrades cleanly
+//! to the asymmetric configurations; the fully-stateless read-only home
+//! of §3.4 bypasses this agent entirely (see [`crate::memctl`]).
+//!
+//! Data plane is synchronous against the backing [`MemStore`] (real
+//! bytes); the timing of RAM reads is carried by the `from_ram` flag on
+//! [`HomeEffect::Respond`], which the machine model turns into DRAM
+//! occupancy before the response enters the link.
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashMap as HashMap;
+
+use crate::proto::messages::{Line, LineAddr, Message, MsgKind, ReqId};
+use crate::proto::spec::{HAction, HEvent, HRule, HomePolicy, HomeRules, HomeSt};
+use crate::proto::states::{CacheState, Node};
+use crate::sim::stats::Counters;
+
+use super::cache::Cache;
+use super::dram::MemStore;
+
+/// Effects for the machine model to act on.
+#[derive(Debug)]
+pub enum HomeEffect {
+    /// Send a response. `from_ram` adds backing-store read latency.
+    Respond { msg: Message, from_ram: bool },
+    /// Issue a home-initiated downgrade to the remote.
+    Fwd { msg: Message },
+    /// A (posted) RAM write happened; account DRAM occupancy.
+    RamWrite { addr: LineAddr },
+    /// A home-side local access completed (symmetric configurations).
+    LocalDone { tag: u64, data: Box<Line> },
+}
+
+/// A stalled event waiting for the line to settle.
+struct Pending {
+    ev: HEvent,
+    payload: Option<Box<Line>>,
+    /// request id to respond to (for remote requests)
+    rsp_id: Option<ReqId>,
+    tag: u64,
+}
+
+/// The directory controller.
+pub struct HomeAgent {
+    rules: HomeRules,
+    policy: HomePolicy,
+    /// Per-line directory state; absent = idle (I/I, no pending).
+    dir: HashMap<LineAddr, HomeSt>,
+    /// Grant-epoch possession counter per line: grants of a copy
+    /// increment, surrenders (voluntary invalidations, fwd-to-I
+    /// responses) decrement. A voluntary downgrade arriving while the
+    /// count stays positive is a *stale epoch* (the remote re-requested
+    /// before its downgrade landed) and must not clear the view.
+    possession: HashMap<LineAddr, u32>,
+    /// Stalled events per line.
+    stalled: HashMap<LineAddr, VecDeque<Pending>>,
+    /// Optional home-side cache (symmetric config).
+    pub cache: Option<Cache>,
+    next_id: u32,
+    pub stats: Counters,
+}
+
+impl HomeAgent {
+    pub fn new(rules: HomeRules, policy: HomePolicy, cache: Option<Cache>) -> HomeAgent {
+        HomeAgent {
+            rules,
+            policy,
+            dir: HashMap::default(),
+            possession: HashMap::default(),
+            stalled: HashMap::default(),
+            cache,
+            next_id: 0,
+            stats: Counters::new(),
+        }
+    }
+
+    pub fn policy(&self) -> HomePolicy {
+        self.policy
+    }
+
+    pub fn state_of(&self, addr: LineAddr) -> HomeSt {
+        self.dir.get(&addr).copied().unwrap_or(HomeSt::idle())
+    }
+
+    /// Directory footprint (lines tracked) — the §3.4 space argument.
+    pub fn tracked_lines(&self) -> usize {
+        self.dir.len()
+    }
+
+    /// Outstanding grant-epochs for a line (diagnostics).
+    pub fn possession_count(&self, addr: LineAddr) -> u32 {
+        self.possession.get(&addr).copied().unwrap_or(0)
+    }
+
+    fn fresh_id(&mut self) -> ReqId {
+        let id = ReqId(self.next_id);
+        self.next_id = self.next_id.wrapping_add(1);
+        id
+    }
+
+    fn set_state(&mut self, addr: LineAddr, st: HomeSt) {
+        if st == HomeSt::idle() {
+            self.dir.remove(&addr);
+        } else {
+            self.dir.insert(addr, st);
+        }
+    }
+
+    /// A coherence message arrived from the remote.
+    pub fn on_message(&mut self, msg: Message, ram: &mut MemStore) -> Vec<HomeEffect> {
+        let addr = msg.addr;
+        match msg.kind {
+            MsgKind::CohReq { op } => {
+                debug_assert_eq!(op.initiator(), Node::Remote);
+                let with_data = msg.payload.is_some();
+                if op == crate::proto::messages::CohOp::VolDowngradeI {
+                    // epoch check: a surrender for a copy we have since
+                    // re-granted must not clear the fresh epoch's view.
+                    let cnt = self.possession.entry(addr).or_insert(0);
+                    *cnt = cnt.saturating_sub(1);
+                    if *cnt > 0 {
+                        // stale epoch: only clean surrenders can be stale
+                        // (dirty owners are stalled at the home until
+                        // their downgrade lands)
+                        debug_assert!(!with_data, "stale dirty downgrade");
+                        self.stats.inc("stale_downgrade_ignored");
+                        return Vec::new();
+                    }
+                    self.possession.remove(&addr);
+                }
+                self.dispatch(addr, HEvent::Req { op, with_data }, msg.payload, Some(msg.id), 0, ram)
+            }
+            MsgKind::CohRsp { op, dirty, had_copy } => {
+                debug_assert_eq!(op.initiator(), Node::Home, "unexpected response {op:?}");
+                if matches!(op, crate::proto::messages::CohOp::FwdDowngradeI) && had_copy {
+                    let cnt = self.possession.entry(addr).or_insert(0);
+                    *cnt = cnt.saturating_sub(1);
+                    if *cnt == 0 {
+                        self.possession.remove(&addr);
+                    }
+                }
+                self.dispatch(addr, HEvent::FwdRsp { dirty }, msg.payload, None, 0, ram)
+            }
+            ref k => panic!("home agent: unexpected message kind {k:?}"),
+        }
+    }
+
+    /// Home-side application access (symmetric configurations). `tag`
+    /// correlates the eventual `LocalDone`.
+    pub fn local_access(&mut self, addr: LineAddr, write: bool, tag: u64, ram: &mut MemStore) -> Vec<HomeEffect> {
+        let ev = if write { HEvent::LocalWrite } else { HEvent::LocalRead };
+        self.dispatch(addr, ev, None, None, tag, ram)
+    }
+
+    /// Application wants the remote's copy recalled (e.g. before an
+    /// in-place result update).
+    pub fn recall(&mut self, addr: LineAddr, ram: &mut MemStore) -> Vec<HomeEffect> {
+        self.dispatch(addr, HEvent::RecallI, None, None, 0, ram)
+    }
+
+    fn rule(&self, st: HomeSt, ev: HEvent) -> HRule {
+        self.rules
+            .get(&(st, ev))
+            .unwrap_or_else(|| panic!("home agent: no rule for {st:?} x {ev:?}"))
+            .clone()
+    }
+
+    fn dispatch(
+        &mut self,
+        addr: LineAddr,
+        ev: HEvent,
+        payload: Option<Box<Line>>,
+        rsp_id: Option<ReqId>,
+        tag: u64,
+        ram: &mut MemStore,
+    ) -> Vec<HomeEffect> {
+        let mut fx = Vec::new();
+        let st = self.state_of(addr);
+        let rule = self.rule(st, ev);
+        let stalled = rule.actions.contains(&HAction::Stall);
+        self.set_state(addr, rule.next);
+        self.run_actions(addr, &rule, &ev, payload.clone(), rsp_id, tag, ram, &mut fx);
+        if stalled {
+            self.stalled
+                .entry(addr)
+                .or_default()
+                .push_back(Pending { ev, payload, rsp_id, tag });
+            self.stats.inc("stalled");
+        } else if st.pending_fwd.is_some() && rule.next.pending_fwd.is_none() {
+            // the line settled: replay stalled events in arrival order
+            if let Some(mut q) = self.stalled.remove(&addr) {
+                while let Some(p) = q.pop_front() {
+                    let more = self.dispatch(addr, p.ev, p.payload, p.rsp_id, p.tag, ram);
+                    fx.extend(more);
+                    // if the replayed event stalled again, the rest of the
+                    // queue was re-queued behind it by the recursion; stop.
+                    if self.state_of(addr).pending_fwd.is_some() {
+                        if let Some(rest) = self.stalled.get_mut(&addr) {
+                            while let Some(r) = q.pop_front() {
+                                rest.push_back(r);
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        fx
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_actions(
+        &mut self,
+        addr: LineAddr,
+        rule: &HRule,
+        ev: &HEvent,
+        payload: Option<Box<Line>>,
+        rsp_id: Option<ReqId>,
+        tag: u64,
+        ram: &mut MemStore,
+        fx: &mut Vec<HomeEffect>,
+    ) {
+        for act in &rule.actions {
+            match *act {
+                HAction::SendRsp { op, with_data, from_ram, dirty } => {
+                    let id = rsp_id.expect("response without a request id");
+                    if matches!(
+                        op,
+                        crate::proto::messages::CohOp::ReadShared
+                            | crate::proto::messages::CohOp::ReadExclusive
+                    ) {
+                        // a copy is being granted: open a possession epoch
+                        *self.possession.entry(addr).or_insert(0) += 1;
+                    }
+                    let data = if with_data {
+                        let line = if from_ram {
+                            ram.read_line(addr)
+                        } else {
+                            self.cached_line(addr)
+                                .unwrap_or_else(|| ram.read_line(addr))
+                        };
+                        Some(Box::new(line))
+                    } else {
+                        None
+                    };
+                    self.stats.inc("rsp_sent");
+                    fx.push(HomeEffect::Respond {
+                        msg: Message::coh_rsp(id, Node::Home, op, addr, dirty, data),
+                        from_ram,
+                    });
+                }
+                HAction::SendFwd { op } => {
+                    let id = self.fresh_id();
+                    self.stats.inc("fwd_sent");
+                    fx.push(HomeEffect::Fwd { msg: Message::coh_req(id, Node::Home, op, addr) });
+                }
+                HAction::WriteRam => {
+                    // the freshest copy is the payload (writeback / fwd
+                    // response) or our own cached line
+                    let line = payload
+                        .as_deref()
+                        .copied()
+                        .or_else(|| self.cached_line(addr))
+                        .expect("WriteRam without a data source");
+                    ram.write_line(addr, &line);
+                    self.stats.inc("ram_write");
+                    fx.push(HomeEffect::RamWrite { addr });
+                }
+                HAction::FillOwn { state, dirty } => {
+                    let line = payload
+                        .as_deref()
+                        .copied()
+                        .unwrap_or_else(|| ram.read_line(addr));
+                    if let Some(c) = self.cache.as_mut() {
+                        // home-cache victims write back if dirty
+                        if let Some(v) = c.insert(addr, state, Box::new(line)) {
+                            if v.state == CacheState::M {
+                                ram.write_line(v.addr, &v.data);
+                                fx.push(HomeEffect::RamWrite { addr: v.addr });
+                            }
+                            // directory entry for the victim's own state
+                            let mut vst = self.state_of(v.addr);
+                            vst.own = CacheState::I;
+                            vst.own_dirty = false;
+                            self.set_state(v.addr, vst);
+                        }
+                    }
+                    let _ = dirty;
+                }
+                HAction::DropOwn => {
+                    if let Some(c) = self.cache.as_mut() {
+                        c.remove(addr);
+                    }
+                }
+                HAction::SetOwnDirty(d) => {
+                    if let Some(c) = self.cache.as_mut() {
+                        if d {
+                            c.set_state(addr, CacheState::M);
+                        }
+                    }
+                }
+                HAction::Stall => { /* queued by dispatch() */ }
+                HAction::AcceptWriteback => {
+                    debug_assert!(payload.is_some(), "AcceptWriteback without payload");
+                    self.stats.inc("writeback");
+                }
+            }
+        }
+        // local accesses complete when not stalled
+        if matches!(ev, HEvent::LocalRead | HEvent::LocalWrite)
+            && !rule.actions.contains(&HAction::Stall)
+        {
+            let line = self
+                .cached_line(addr)
+                .unwrap_or_else(|| ram.read_line(addr));
+            fx.push(HomeEffect::LocalDone { tag, data: Box::new(line) });
+        }
+    }
+
+    fn cached_line(&self, addr: LineAddr) -> Option<Line> {
+        self.cache.as_ref().and_then(|c| c.peek(addr).map(|e| *e.data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::CohOp;
+    use crate::proto::spec::{generate_home, PendingFwd, RemoteView};
+    use crate::proto::transitions::reference_transitions;
+
+    fn mk(cache: bool) -> (HomeAgent, MemStore) {
+        let rules = generate_home(&reference_transitions(), HomePolicy::default());
+        let agent = HomeAgent::new(
+            rules,
+            HomePolicy::default(),
+            cache.then(|| Cache::new(64 * 1024, 4)),
+        );
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            let mut l = [0u8; 128];
+            l[0] = i as u8;
+            ram.write_line(LineAddr(i), &l);
+        }
+        (agent, ram)
+    }
+
+    #[test]
+    fn read_shared_served_from_ram() {
+        let (mut a, mut ram) = mk(false);
+        let req = Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(5));
+        let fx = a.on_message(req, &mut ram);
+        assert_eq!(fx.len(), 1);
+        match &fx[0] {
+            HomeEffect::Respond { msg, from_ram } => {
+                assert!(from_ram);
+                assert_eq!(msg.id, ReqId(1));
+                assert_eq!(msg.payload.as_ref().unwrap()[0], 5);
+                assert!(matches!(msg.kind, MsgKind::CohRsp { op: CohOp::ReadShared, dirty: false, .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(a.state_of(LineAddr(5)).view, RemoteView::S);
+    }
+
+    #[test]
+    fn exclusive_then_writeback_round_trip() {
+        let (mut a, mut ram) = mk(false);
+        let req = Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadExclusive, LineAddr(7));
+        let fx = a.on_message(req, &mut ram);
+        assert!(matches!(&fx[0], HomeEffect::Respond { .. }));
+        assert_eq!(a.state_of(LineAddr(7)).view, RemoteView::EorM);
+        // dirty writeback returns
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0xFF;
+        let wb = Message::coh_req_data(ReqId(3), Node::Remote, CohOp::VolDowngradeI, LineAddr(7), Box::new(dirty));
+        let fx = a.on_message(wb, &mut ram);
+        assert!(fx.iter().any(|e| matches!(e, HomeEffect::RamWrite { .. })));
+        assert_eq!(ram.read_line(LineAddr(7))[0], 0xFF, "writeback must reach RAM");
+        assert_eq!(a.state_of(LineAddr(7)), HomeSt::idle());
+        assert_eq!(a.tracked_lines(), 0, "idle lines are not tracked");
+    }
+
+    #[test]
+    fn request_overtaking_downgrade_stalls_then_replays() {
+        let (mut a, mut ram) = mk(false);
+        // remote takes the line exclusive
+        let fx = a.on_message(
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadExclusive, LineAddr(9)),
+            &mut ram,
+        );
+        assert_eq!(fx.len(), 1);
+        // a new ReadShared arrives while the directory still says EorM
+        // (the voluntary downgrade is in flight): must stall, no response.
+        let fx = a.on_message(
+            Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(9)),
+            &mut ram,
+        );
+        assert!(fx.is_empty(), "{fx:?}");
+        assert_eq!(a.state_of(LineAddr(9)).pending_fwd, Some(PendingFwd::AwaitVolDowngrade));
+        // the in-flight downgrade lands: the stalled read replays and is
+        // answered.
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0xAB;
+        let fx = a.on_message(
+            Message::coh_req_data(ReqId(3), Node::Remote, CohOp::VolDowngradeI, LineAddr(9), Box::new(dirty)),
+            &mut ram,
+        );
+        let rsp: Vec<_> = fx
+            .iter()
+            .filter_map(|e| match e {
+                HomeEffect::Respond { msg, .. } => Some(msg),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rsp.len(), 1);
+        assert_eq!(rsp[0].id, ReqId(2));
+        assert_eq!(rsp[0].payload.as_ref().unwrap()[0], 0xAB, "replayed read sees the writeback");
+        assert_eq!(a.state_of(LineAddr(9)).view, RemoteView::S);
+    }
+
+    #[test]
+    fn local_write_recalls_shared_copy_then_completes() {
+        let (mut a, mut ram) = mk(true);
+        // remote shares the line
+        a.on_message(Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(4)), &mut ram);
+        // home-side app writes it: must recall first
+        let fx = a.local_access(LineAddr(4), true, 42, &mut ram);
+        let fwd: Vec<_> = fx
+            .iter()
+            .filter_map(|e| match e {
+                HomeEffect::Fwd { msg } => Some(msg),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fwd.len(), 1);
+        assert!(matches!(fwd[0].kind, MsgKind::CohReq { op: CohOp::FwdDowngradeI }));
+        assert!(!fx.iter().any(|e| matches!(e, HomeEffect::LocalDone { .. })));
+        // the remote's (clean) response settles the line; the local write
+        // replays and completes.
+        let fx = a.on_message(
+            Message::coh_rsp(ReqId(9), Node::Remote, CohOp::FwdDowngradeI, LineAddr(4), false, None),
+            &mut ram,
+        );
+        assert!(
+            fx.iter().any(|e| matches!(e, HomeEffect::LocalDone { tag: 42, .. })),
+            "{fx:?}"
+        );
+        assert_eq!(a.state_of(LineAddr(4)).view, RemoteView::I);
+    }
+
+    #[test]
+    fn hidden_o_shares_dirty_line_without_ram_write() {
+        let (mut a, mut ram) = mk(true);
+        // make the home copy dirty via a local write
+        let fx = a.local_access(LineAddr(8), true, 1, &mut ram);
+        assert!(fx.iter().any(|e| matches!(e, HomeEffect::LocalDone { .. })));
+        assert_eq!(a.state_of(LineAddr(8)).own, CacheState::M);
+        // remote reads: transition 10 with hidden_o policy
+        let fx = a.on_message(
+            Message::coh_req(ReqId(5), Node::Remote, CohOp::ReadShared, LineAddr(8)),
+            &mut ram,
+        );
+        assert!(
+            !fx.iter().any(|e| matches!(e, HomeEffect::RamWrite { .. })),
+            "hidden O must not write RAM: {fx:?}"
+        );
+        let st = a.state_of(LineAddr(8));
+        assert_eq!(st.own, CacheState::S);
+        assert!(st.own_dirty, "home keeps the hidden-O dirty bit");
+        assert_eq!(st.view, RemoteView::S);
+    }
+}

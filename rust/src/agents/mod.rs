@@ -1,0 +1,14 @@
+//! Coherence agents and machine-component models: the spec-driven home
+//! (directory) and remote (caching) agents, the set-associative cache
+//! arrays, and the DDR4 channel model. The CPU-socket composition (cores +
+//! L1s + LLC) lives in [`crate::machine`].
+
+pub mod cache;
+pub mod dram;
+pub mod home;
+pub mod remote;
+
+pub use cache::{Cache, Entry, Victim};
+pub use dram::{Dram, DramConfig, MemStore};
+pub use home::{HomeAgent, HomeEffect};
+pub use remote::{Access, RemoteAgent, RemoteEffect};

@@ -1,0 +1,543 @@
+//! The remote (caching) agent: interprets the spec-generated
+//! [`RemoteRules`] against a line store. In the paper's smart-memory
+//! configuration this is the role the **CPU socket** plays toward
+//! FPGA-homed memory; in the Fig. 2(a) accelerator configuration the FPGA
+//! plays it toward CPU memory. The agent is role-agnostic: it owns
+//! transaction state (MSHRs, transient line states) and drives a
+//! [`Cache`] supplied by its host socket.
+//!
+//! No transition is hand-coded here: every state change executes a rule
+//! from [`generate_remote`], so the envelope checks of
+//! [`crate::proto::envelope`] apply to the running agent.
+
+use rustc_hash::FxHashMap as HashMap;
+
+use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
+use crate::proto::spec::{DeferredFwd, RAction, REvent, RRule, RemoteRules, RemoteSt};
+use crate::proto::states::{CacheState, Node};
+use crate::sim::stats::Counters;
+
+use super::cache::{Cache, Victim};
+
+/// Effects for the host (socket model / machine) to act on.
+#[derive(Debug)]
+pub enum RemoteEffect {
+    /// Put this message on the link.
+    Send(Message),
+    /// A response was installed for `addr`: waiters can be retried.
+    Filled { addr: LineAddr },
+    /// The local access could not complete; park it and retry on `Filled`.
+    Stalled,
+    /// The fill displaced a victim line belonging to *this* home —
+    /// already handled (a voluntary downgrade was emitted). Victims of
+    /// other regions are returned for the host to route.
+    ForeignVictim(Victim),
+}
+
+/// Outcome of a local access attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Access {
+    /// Hit: data available in the cache now.
+    Hit,
+    /// Transaction started or in progress: retry on `Filled`.
+    Pending,
+}
+
+/// The caching agent for one home region.
+pub struct RemoteAgent {
+    node: Node,
+    rules: RemoteRules,
+    /// Transient per-line states (stable states live in the cache array).
+    trans: HashMap<LineAddr, RemoteSt>,
+    /// Outstanding request id -> line.
+    outstanding: HashMap<ReqId, LineAddr>,
+    /// The home region this agent fronts.
+    region_base: LineAddr,
+    region_lines: u64,
+    next_id: u32,
+    pub stats: Counters,
+}
+
+impl RemoteAgent {
+    pub fn new(node: Node, rules: RemoteRules, region_base: LineAddr, region_lines: u64) -> Self {
+        RemoteAgent {
+            node,
+            rules,
+            trans: HashMap::default(),
+            outstanding: HashMap::default(),
+            region_base,
+            region_lines,
+            next_id: 0,
+            stats: Counters::new(),
+        }
+    }
+
+    pub fn owns(&self, addr: LineAddr) -> bool {
+        addr >= self.region_base && addr.0 < self.region_base.0 + self.region_lines
+    }
+
+    pub fn outstanding_count(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    fn state_of(&self, addr: LineAddr, cache: &Cache) -> RemoteSt {
+        if let Some(&t) = self.trans.get(&addr) {
+            t
+        } else {
+            RemoteSt::Stable(cache.state_of(addr))
+        }
+    }
+
+    fn rule(&self, st: RemoteSt, ev: REvent) -> &RRule {
+        self.rules
+            .get(&(st, ev))
+            .unwrap_or_else(|| panic!("remote agent: no rule for {st:?} x {ev:?}"))
+    }
+
+    fn fresh_id(&mut self) -> ReqId {
+        let id = ReqId(self.next_id);
+        self.next_id = self.next_id.wrapping_add(1);
+        id
+    }
+
+    /// Local processor access. Returns `Access::Hit` if the line is usable
+    /// now; otherwise a transaction is outstanding.
+    pub fn local_access(&mut self, addr: LineAddr, write: bool, cache: &mut Cache) -> (Access, Vec<RemoteEffect>) {
+        debug_assert!(self.owns(addr));
+        let ev = if write { REvent::Write } else { REvent::Read };
+        let st = self.state_of(addr, cache);
+        let rule = self.rule(st, ev).clone();
+        let mut fx = Vec::new();
+        let mut outcome = Access::Hit;
+        self.apply(addr, &rule, None, cache, &mut fx, &mut outcome);
+        (outcome, fx)
+    }
+
+    /// The host cache wants this line gone (capacity decision made by the
+    /// host). Emits the voluntary downgrade as the rules dictate.
+    pub fn evict(&mut self, addr: LineAddr, cache: &mut Cache) -> Vec<RemoteEffect> {
+        let st = self.state_of(addr, cache);
+        if st.is_transient() {
+            // never evict a line mid-transaction (host picks another victim)
+            return vec![RemoteEffect::Stalled];
+        }
+        let rule = self.rule(st, REvent::Evict).clone();
+        let mut fx = Vec::new();
+        let mut outcome = Access::Hit;
+        self.apply(addr, &rule, None, cache, &mut fx, &mut outcome);
+        fx
+    }
+
+    /// A message arrived from the home node.
+    pub fn on_message(&mut self, msg: Message, cache: &mut Cache) -> Vec<RemoteEffect> {
+        let addr = msg.addr;
+        let mut fx = Vec::new();
+        let mut outcome = Access::Hit;
+        match msg.kind {
+            MsgKind::CohRsp { op, dirty, .. } => {
+                let known = self.outstanding.remove(&msg.id);
+                debug_assert_eq!(known, Some(addr), "response for unknown transaction");
+                let st = self.state_of(addr, cache);
+                let rule = self.rule(st, REvent::Rsp { granted: op, dirty }).clone();
+                self.apply(addr, &rule, msg.payload, cache, &mut fx, &mut outcome);
+                self.stats.inc("rsp");
+            }
+            MsgKind::CohReq { op } => {
+                // home-initiated downgrade (Fwd class)
+                debug_assert_eq!(op.initiator(), Node::Home);
+                let st = self.state_of(addr, cache);
+                let rule = self.rule(st, REvent::Fwd { op }).clone();
+                self.apply(addr, &rule, msg.payload, cache, &mut fx, &mut outcome);
+                self.stats.inc("fwd");
+            }
+            ref k => panic!("remote agent: unexpected message kind {k:?}"),
+        }
+        fx
+    }
+
+    /// Execute one rule: state update + actions, recursing for deferred
+    /// replays.
+    fn apply(
+        &mut self,
+        addr: LineAddr,
+        rule: &RRule,
+        payload: Option<Box<Line>>,
+        cache: &mut Cache,
+        fx: &mut Vec<RemoteEffect>,
+        outcome: &mut Access,
+    ) {
+        let prev = self.trans.remove(&addr);
+        match rule.next {
+            RemoteSt::Stable(_) => {}
+            t @ RemoteSt::Wait { .. } => {
+                self.trans.insert(addr, t);
+            }
+        }
+
+        let mut attach_dirty = false;
+        for act in &rule.actions {
+            match *act {
+                RAction::SendReq(op) => {
+                    let id = self.fresh_id();
+                    let msg = if attach_dirty {
+                        let data = cache
+                            .peek(addr)
+                            .map(|e| e.data.clone())
+                            .expect("dirty line must be resident");
+                        attach_dirty = false;
+                        Message::coh_req_data(id, self.node, op, addr, data)
+                    } else {
+                        Message::coh_req(id, self.node, op, addr)
+                    };
+                    if op.needs_response() {
+                        self.outstanding.insert(id, addr);
+                    }
+                    self.stats.inc("req_sent");
+                    fx.push(RemoteEffect::Send(msg));
+                }
+                RAction::AttachDirtyData => attach_dirty = true,
+                RAction::RspToFwd { op, with_data } => {
+                    let id = self.fresh_id();
+                    // do we actually surrender a copy with this response?
+                    // (false when we hold nothing: crossing with our own
+                    // voluntary downgrade, or mid-fill use-once answers —
+                    // the surrender signal then travels separately)
+                    let had_copy = cache.state_of(addr) != CacheState::I;
+                    let msg = if with_data {
+                        let data = cache
+                            .peek(addr)
+                            .map(|e| e.data.clone())
+                            .expect("responding with data for a non-resident line");
+                        Message::coh_rsp(id, self.node, op, addr, true, Some(data))
+                    } else if had_copy {
+                        Message::coh_rsp(id, self.node, op, addr, false, None)
+                    } else {
+                        Message::coh_rsp_nocopy(id, self.node, op, addr)
+                    };
+                    self.stats.inc("fwd_rsp");
+                    fx.push(RemoteEffect::Send(msg));
+                }
+                RAction::Fill(state) => {
+                    let data = payload.clone().expect("fill without payload");
+                    if let Some(v) = cache.insert(addr, state, data) {
+                        // the fill displaced another line; if it belongs to
+                        // this region, downgrade it through our own rules,
+                        // otherwise hand it to the host.
+                        if self.owns(v.addr) {
+                            let vfx = self.evict_victim(v, cache);
+                            fx.extend(vfx);
+                        } else {
+                            fx.push(RemoteEffect::ForeignVictim(v));
+                        }
+                    }
+                    self.stats.inc("fill");
+                    fx.push(RemoteEffect::Filled { addr });
+                }
+                RAction::PromoteToE => {
+                    let ok = cache.set_state(addr, CacheState::E);
+                    debug_assert!(ok, "PromoteToE on non-resident line");
+                    self.stats.inc("upgrade");
+                    fx.push(RemoteEffect::Filled { addr });
+                }
+                RAction::MarkDirty => {
+                    let ok = cache.set_state(addr, CacheState::M);
+                    debug_assert!(ok, "MarkDirty on non-resident line");
+                }
+                RAction::DowngradeToS => {
+                    let ok = cache.set_state(addr, CacheState::S);
+                    debug_assert!(ok, "DowngradeToS on non-resident line");
+                }
+                RAction::DropLine => {
+                    cache.remove(addr);
+                }
+                RAction::StallLocal => {
+                    *outcome = Access::Pending;
+                    fx.push(RemoteEffect::Stalled);
+                }
+                RAction::DropAfterFill => {
+                    // Use-once fill: the fwd-to-I was already answered
+                    // (clean); surrender the line now. An EXCLUSIVE grant
+                    // must notify the home (its directory recorded EorM
+                    // for this fresh epoch and nothing else will clear
+                    // it); a shared grant may drop silently (the home's
+                    // S-view over-estimate is benign).
+                    if let Some(v) = cache.remove(addr) {
+                        let id = self.fresh_id();
+                        match v.state {
+                            CacheState::M => {
+                                fx.push(RemoteEffect::Send(Message::coh_req_data(
+                                    id,
+                                    self.node,
+                                    CohOp::VolDowngradeI,
+                                    addr,
+                                    v.data,
+                                )));
+                                self.stats.inc("useonce_wb");
+                            }
+                            CacheState::E => {
+                                fx.push(RemoteEffect::Send(Message::coh_req(
+                                    id,
+                                    self.node,
+                                    CohOp::VolDowngradeI,
+                                    addr,
+                                )));
+                                self.stats.inc("useonce_drop");
+                            }
+                            _ => {
+                                // even a shared use-once copy signals its
+                                // surrender: the possession accounting at
+                                // the home counts every grant epoch
+                                fx.push(RemoteEffect::Send(Message::coh_req(
+                                    id,
+                                    self.node,
+                                    CohOp::VolDowngradeI,
+                                    addr,
+                                )));
+                                self.stats.inc("useonce_drop");
+                            }
+                        }
+                    }
+                }
+                RAction::DemoteAfterFill => {
+                    // Demoted fill: the fwd-to-S was already answered;
+                    // keep a shared clean copy. An exclusive grant must
+                    // tell the home about the demotion (dirty data rides
+                    // along if the grant carried ownership).
+                    if let Some(e) = cache.peek(addr) {
+                        let st0 = e.state;
+                        let data = e.data.clone();
+                        let id = self.fresh_id();
+                        match st0 {
+                            CacheState::M => {
+                                fx.push(RemoteEffect::Send(Message::coh_req_data(
+                                    id,
+                                    self.node,
+                                    CohOp::VolDowngradeS,
+                                    addr,
+                                    data,
+                                )));
+                            }
+                            CacheState::E => {
+                                fx.push(RemoteEffect::Send(Message::coh_req(
+                                    id,
+                                    self.node,
+                                    CohOp::VolDowngradeS,
+                                    addr,
+                                )));
+                            }
+                            _ => {}
+                        }
+                    }
+                    cache.set_state(addr, CacheState::S);
+                }
+            }
+        }
+        debug_assert!(!attach_dirty, "AttachDirtyData without a following SendReq");
+        // a local access that started a transaction is pending
+        let _ = prev;
+        if matches!(rule.next, RemoteSt::Wait { .. }) && self.trans.contains_key(&addr) {
+            *outcome = Access::Pending;
+        }
+    }
+
+    /// A line of this region was displaced from the host cache by an
+    /// unrelated insertion (the entry is already gone): emit the voluntary
+    /// downgrade its state requires. Public counterpart of the internal
+    /// victim handling, used by the machine when *local* fills displace
+    /// remote lines from the shared LLC.
+    pub fn downgrade_evicted(&mut self, v: Victim) -> Vec<RemoteEffect> {
+        self.evict_victim_inner(v)
+    }
+
+    /// A victim of this region evicted by a fill: run its Evict rule from
+    /// the state it was in (the cache entry is already gone, so dispatch
+    /// manually).
+    fn evict_victim(&mut self, v: Victim, _cache: &mut Cache) -> Vec<RemoteEffect> {
+        self.evict_victim_inner(v)
+    }
+
+    fn evict_victim_inner(&mut self, v: Victim) -> Vec<RemoteEffect> {
+        let mut fx = Vec::new();
+        match v.state {
+            CacheState::I => {}
+            CacheState::S | CacheState::E => {
+                let id = self.fresh_id();
+                fx.push(RemoteEffect::Send(Message::coh_req(id, self.node, CohOp::VolDowngradeI, v.addr)));
+                self.stats.inc("evict_clean");
+            }
+            CacheState::M => {
+                let id = self.fresh_id();
+                fx.push(RemoteEffect::Send(Message::coh_req_data(
+                    id,
+                    self.node,
+                    CohOp::VolDowngradeI,
+                    v.addr,
+                    v.data,
+                )));
+                self.stats.inc("evict_dirty");
+            }
+        }
+        fx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::spec::generate_remote;
+    use crate::proto::transitions::reference_transitions;
+
+    fn agent() -> (RemoteAgent, Cache) {
+        let rules = generate_remote(&reference_transitions());
+        (
+            RemoteAgent::new(Node::Remote, rules, LineAddr(0), 1 << 20),
+            Cache::new(64 * 1024, 4),
+        )
+    }
+
+    fn data(v: u8) -> Box<Line> {
+        Box::new([v; 128])
+    }
+
+    #[test]
+    fn read_miss_sends_read_shared_then_fills() {
+        let (mut a, mut c) = agent();
+        let (acc, fx) = a.local_access(LineAddr(7), false, &mut c);
+        assert_eq!(acc, Access::Pending);
+        let req = match &fx[0] {
+            RemoteEffect::Send(m) => m.clone(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(req.kind, MsgKind::CohReq { op: CohOp::ReadShared });
+        // home responds
+        let rsp = Message::coh_rsp(req.id, Node::Home, CohOp::ReadShared, LineAddr(7), false, Some(data(9)));
+        let fx = a.on_message(rsp, &mut c);
+        assert!(fx.iter().any(|e| matches!(e, RemoteEffect::Filled { addr } if *addr == LineAddr(7))));
+        assert_eq!(c.state_of(LineAddr(7)), CacheState::S);
+        assert_eq!(c.peek(LineAddr(7)).unwrap().data[0], 9);
+        // now it hits
+        let (acc, _) = a.local_access(LineAddr(7), false, &mut c);
+        assert_eq!(acc, Access::Hit);
+    }
+
+    #[test]
+    fn write_miss_fills_exclusive_then_dirties_silently() {
+        let (mut a, mut c) = agent();
+        let (acc, fx) = a.local_access(LineAddr(3), true, &mut c);
+        assert_eq!(acc, Access::Pending);
+        let req = match &fx[0] {
+            RemoteEffect::Send(m) => m.clone(),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(req.kind, MsgKind::CohReq { op: CohOp::ReadExclusive });
+        let rsp = Message::coh_rsp(req.id, Node::Home, CohOp::ReadExclusive, LineAddr(3), false, Some(data(1)));
+        a.on_message(rsp, &mut c);
+        assert_eq!(c.state_of(LineAddr(3)), CacheState::E);
+        // the write that was stalled now retries: silent E -> M
+        let (acc, fx) = a.local_access(LineAddr(3), true, &mut c);
+        assert_eq!(acc, Access::Hit);
+        assert!(fx.is_empty(), "silent upgrade must not signal: {fx:?}");
+        assert_eq!(c.state_of(LineAddr(3)), CacheState::M);
+    }
+
+    #[test]
+    fn dirty_eviction_carries_payload() {
+        let (mut a, mut c) = agent();
+        // install M line directly
+        c.insert(LineAddr(5), CacheState::M, data(0xEE));
+        let fx = a.evict(LineAddr(5), &mut c);
+        let m = match &fx[0] {
+            RemoteEffect::Send(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(m.kind, MsgKind::CohReq { op: CohOp::VolDowngradeI });
+        assert_eq!(m.payload.as_ref().unwrap()[0], 0xEE);
+        assert_eq!(c.state_of(LineAddr(5)), CacheState::I);
+    }
+
+    #[test]
+    fn fwd_invalidate_of_modified_line_returns_dirty_data() {
+        let (mut a, mut c) = agent();
+        c.insert(LineAddr(9), CacheState::M, data(0x55));
+        let fwd = Message::coh_req(ReqId(77), Node::Home, CohOp::FwdDowngradeI, LineAddr(9));
+        let fx = a.on_message(fwd, &mut c);
+        let rsp = match &fx[0] {
+            RemoteEffect::Send(m) => m,
+            other => panic!("{other:?}"),
+        };
+        match rsp.kind {
+            MsgKind::CohRsp { op: CohOp::FwdDowngradeI, dirty: true, .. } => {}
+            ref k => panic!("{k:?}"),
+        }
+        assert_eq!(rsp.payload.as_ref().unwrap()[0], 0x55);
+        assert_eq!(c.state_of(LineAddr(9)), CacheState::I);
+    }
+
+    #[test]
+    fn fwd_during_fill_is_answered_immediately_and_fill_is_use_once() {
+        let (mut a, mut c) = agent();
+        // start a read
+        let (_, fx) = a.local_access(LineAddr(11), false, &mut c);
+        let req = match &fx[0] {
+            RemoteEffect::Send(m) => m.clone(),
+            other => panic!("{other:?}"),
+        };
+        // fwd arrives before the fill (cross-VC reordering, or the home
+        // issued it while stalling our request): answered NOW, clean.
+        let fwd = Message::coh_req(ReqId(50), Node::Home, CohOp::FwdDowngradeI, LineAddr(11));
+        let fx = a.on_message(fwd, &mut c);
+        let rsp_now: Vec<&Message> = fx
+            .iter()
+            .filter_map(|e| match e {
+                RemoteEffect::Send(m) => Some(m),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rsp_now.len(), 1);
+        assert!(matches!(rsp_now[0].kind, MsgKind::CohRsp { op: CohOp::FwdDowngradeI, dirty: false, .. }));
+        // fill lands; it is use-once: the waiting core is served, the
+        // line is NOT retained, and the surrender is signalled (the
+        // home's possession accounting counts every grant epoch).
+        let rsp = Message::coh_rsp(req.id, Node::Home, CohOp::ReadShared, LineAddr(11), false, Some(data(2)));
+        let fx = a.on_message(rsp, &mut c);
+        assert!(fx.iter().any(|e| matches!(e, RemoteEffect::Filled { .. })));
+        assert!(
+            fx.iter().any(|e| matches!(e, RemoteEffect::Send(m)
+                if matches!(m.kind, MsgKind::CohReq { op: CohOp::VolDowngradeI }) && m.payload.is_none())),
+            "use-once drop must signal its surrender: {fx:?}"
+        );
+        assert_eq!(c.state_of(LineAddr(11)), CacheState::I, "line surrendered after use");
+    }
+
+    #[test]
+    fn capacity_eviction_of_same_region_emits_downgrade() {
+        let rules = generate_remote(&reference_transitions());
+        let mut a = RemoteAgent::new(Node::Remote, rules, LineAddr(0), 1 << 20);
+        // tiny cache: 2 sets x 1 way = 2 lines (256 B)
+        let mut c = Cache::new(256, 1);
+        // fill two same-set lines; the second fill evicts the first
+        for (i, addr) in [LineAddr(0), LineAddr(2)].iter().enumerate() {
+            let (_, fx) = a.local_access(*addr, false, &mut c);
+            let req = match &fx[0] {
+                RemoteEffect::Send(m) => m.clone(),
+                other => panic!("{other:?}"),
+            };
+            let rsp = Message::coh_rsp(req.id, Node::Home, CohOp::ReadShared, *addr, false, Some(data(i as u8)));
+            let fx = a.on_message(rsp, &mut c);
+            if i == 1 {
+                // eviction of line 0 must have produced a VolDowngradeI
+                let downgrades: Vec<&Message> = fx
+                    .iter()
+                    .filter_map(|e| match e {
+                        RemoteEffect::Send(m) if matches!(m.kind, MsgKind::CohReq { op: CohOp::VolDowngradeI }) => Some(m),
+                        _ => None,
+                    })
+                    .collect();
+                assert_eq!(downgrades.len(), 1);
+                assert_eq!(downgrades[0].addr, LineAddr(0));
+            }
+        }
+        assert_eq!(c.state_of(LineAddr(0)), CacheState::I);
+        assert_eq!(c.state_of(LineAddr(2)), CacheState::S);
+    }
+}

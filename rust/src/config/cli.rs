@@ -1,0 +1,110 @@
+//! The `eci` command-line launcher (hand-rolled arg parsing — `clap` is
+//! not available in the offline registry).
+//!
+//! ```text
+//! eci resources                  print Table 2 + subsetting ablation
+//! eci bench <table3|fig5|fig6|fig7|fig8|all>
+//! eci check                      validate envelope + subsets, print report
+//! eci trace-demo                 run a traffic capture through the
+//!                                dissector and the online checker
+//! ```
+//! `ECI_SCALE={ci,default,paper}` controls workload sizes.
+
+use crate::harness::{fig5, fig6, fig7, fig8, table2, table3, Scale};
+use crate::proto::subset::{validate_with_workload, Subset};
+use crate::proto::messages::CohOp;
+use crate::runtime::Runtime;
+
+pub fn main_entry() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let scale = Scale::from_env();
+    match cmd {
+        "resources" => {
+            for t in table2::render() {
+                println!("{}", t.to_markdown());
+            }
+        }
+        "bench" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            run_bench(which, scale);
+        }
+        "check" => check(),
+        "trace-demo" => crate::trace::demo::run_demo(),
+        _ => {
+            eprintln!(
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|all]|check|trace-demo>\n\
+                 env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})"
+            );
+        }
+    }
+}
+
+fn run_bench(which: &str, scale: Scale) {
+    let needs_rt = matches!(which, "fig5" | "fig6" | "fig7" | "all");
+    let mut rt = if needs_rt {
+        Some(Runtime::load_default().expect("artifacts missing — run `make artifacts`"))
+    } else {
+        None
+    };
+    if matches!(which, "table3" | "all") {
+        println!("{}", table3::render(&table3::run(scale)).to_markdown());
+    }
+    if matches!(which, "fig5" | "all") {
+        let f = fig5::run(rt.as_mut().unwrap(), scale).expect("fig5");
+        println!("{}", fig5::render(&f).to_markdown());
+    }
+    if matches!(which, "fig6" | "all") {
+        let f = fig6::run(rt.as_mut().unwrap(), scale).expect("fig6");
+        println!("{}", fig6::render(&f).to_markdown());
+    }
+    if matches!(which, "fig7" | "all") {
+        let f = fig7::run(rt.as_mut().unwrap(), scale).expect("fig7");
+        println!("{}", fig7::render(&f).to_markdown());
+    }
+    if matches!(which, "fig8" | "all") {
+        println!("{}", fig8::render(&fig8::run(scale)).to_markdown());
+    }
+}
+
+fn check() {
+    use crate::proto::envelope::{check_envelope, check_recommendations};
+    use crate::proto::transitions::reference_transitions;
+    let table = reference_transitions();
+    let v = check_envelope(&table);
+    println!("envelope: {} violations", v.len());
+    for x in &v {
+        println!("  {x}");
+    }
+    for note in check_recommendations(&table) {
+        println!("  note: {note}");
+    }
+    let full = Subset::full_symmetric();
+    for s in [
+        Subset::full_symmetric(),
+        Subset::asymmetric_accelerator(),
+        Subset::cpu_initiator_readonly(),
+        Subset::stateless_readonly(),
+    ] {
+        // the read-only subsets are only valid under the read-only
+        // workload guarantee (R5's escape hatch, §3.3); the stateless home
+        // additionally never issues fwds itself
+        let workload: &[CohOp] = match s.name {
+            "stateless-readonly" => &[CohOp::ReadShared, CohOp::VolDowngradeI],
+            "cpu-initiator-readonly" => {
+                &[CohOp::ReadShared, CohOp::VolDowngradeI, CohOp::FwdDowngradeI]
+            }
+            _ => &CohOp::ALL,
+        };
+        let v = validate_with_workload(&s, &full, workload);
+        println!(
+            "subset {:<24} home-states={} violations={}",
+            s.name,
+            s.home_state_count(),
+            v.len()
+        );
+        for x in &v {
+            println!("  {x}");
+        }
+    }
+}

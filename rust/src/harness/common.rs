@@ -1,0 +1,120 @@
+//! Harness shared bits: scale control and markdown/CSV emitters.
+
+/// Experiment scale. The paper's table has 5,120,000 rows (655 MB); the
+/// default scale divides workload sizes so the full suite runs in
+/// minutes. `ECI_SCALE=paper` (or `full`) runs paper-size workloads;
+/// `ECI_SCALE=ci` shrinks further for smoke tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Ci,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("ECI_SCALE").as_deref() {
+            Ok("paper") | Ok("full") => Scale::Paper,
+            Ok("ci") => Scale::Ci,
+            _ => Scale::Default,
+        }
+    }
+    /// Scale a paper-sized row count.
+    pub fn rows(self, paper_rows: u64) -> u64 {
+        match self {
+            Scale::Paper => paper_rows,
+            Scale::Default => paper_rows / 16,
+            Scale::Ci => paper_rows / 256,
+        }
+    }
+    /// Thread counts to sweep.
+    pub fn threads(self) -> Vec<usize> {
+        match self {
+            Scale::Ci => vec![1, 4, 16],
+            _ => vec![1, 2, 4, 8, 16, 32, 48],
+        }
+    }
+}
+
+/// A result table: header + rows, printable as markdown and CSV.
+#[derive(Clone, Debug, Default)]
+pub struct ResultTable {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl ResultTable {
+    pub fn new(title: &str, header: &[&str]) -> ResultTable {
+        ResultTable {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("\n### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.header.len())));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+pub fn fmt_rate(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}K", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_formats() {
+        let mut t = ResultTable::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn scale_rows() {
+        assert_eq!(Scale::Paper.rows(5_120_000), 5_120_000);
+        assert_eq!(Scale::Default.rows(5_120_000), 320_000);
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(fmt_rate(1.5e9), "1.50G");
+        assert_eq!(fmt_rate(2.5e6), "2.50M");
+        assert_eq!(fmt_rate(3.0e3), "3.00K");
+        assert_eq!(fmt_rate(12.0), "12.00");
+    }
+}

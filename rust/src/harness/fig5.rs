@@ -1,0 +1,176 @@
+//! Figure 5: SELECT throughput vs. selectivity and thread count, CPU and
+//! FPGA implementations (paper §5.4).
+//!
+//! Shape criteria (EXPERIMENTS.md): CPU scan rate flat in selectivity and
+//! DRAM-bandwidth-bound; FPGA scan DRAM-bound at low selectivity once
+//! enough threads keep the pipeline full, interconnect-bound at 100%;
+//! results/s *inversion* at high selectivity (CPU wins on local-DRAM
+//! bandwidth when everything is returned).
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
+use crate::memctl::{FifoServer, ScanTiming};
+use crate::operators::select::{cpu_select_scan, fpga_select_scan};
+use crate::operators::table::{build_table, select_params, TableSpec};
+use crate::proto::messages::{LineAddr, LINE_BYTES};
+use crate::runtime::Runtime;
+use crate::sim::time::Duration;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+
+pub const PAPER_ROWS: u64 = 5_120_000;
+/// Compute cycles per row for the CPU scalar predicate scan (two f32
+/// compares + branch + loop on a dual-issue in-order core).
+pub const CPU_CYCLES_PER_ROW: u64 = 10;
+/// Extra cycles to materialize a matching row into the result buffer.
+pub const CPU_MATCH_EXTRA: u64 = 32;
+/// SELECT comparator engines on the FPGA (cheap; the scan is DRAM-bound).
+pub const FPGA_ENGINES: u32 = 8;
+
+#[derive(Clone, Debug)]
+pub struct FigPoint {
+    pub selectivity: f64,
+    pub threads: usize,
+    pub scan_rows_per_s: f64,
+    pub results_per_s: f64,
+    pub dram_gbps: f64,
+}
+
+/// Precomputed per-selectivity scan state, reusable across thread counts
+/// (PERF: the functional scan through the XLA kernel is identical for
+/// every thread count; scanning once per selectivity instead of once per
+/// point cut harness wall-clock ~7x — EXPERIMENTS.md §Perf).
+pub struct PreparedScan {
+    pub rows: u64,
+    pub selectivity: f64,
+    store: MemStore,
+    matches: Vec<u64>,
+    x: f32,
+    y: f32,
+}
+
+pub fn prepare(rt: &mut Runtime, rows: u64, selectivity: f64) -> anyhow::Result<PreparedScan> {
+    let spec = TableSpec::new(rows, selectivity);
+    let mut store = MemStore::new(map::TABLE_BASE, rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    let (x, y) = select_params(selectivity);
+    // functional scan through the AOT XLA kernel, once
+    let matches = fpga_select_scan(rt, &store, map::TABLE_BASE, rows, x, y)?;
+    Ok(PreparedScan { rows, selectivity, store, matches, x, y })
+}
+
+/// One FPGA-offload run over a prepared scan.
+pub fn run_fpga_prepared(p: &PreparedScan, threads: usize) -> FigPoint {
+    let rows = p.rows;
+    let payloads: Vec<_> = p
+        .matches
+        .iter()
+        .map(|&i| Box::new(p.store.read_line(LineAddr(map::TABLE_BASE.0 + i))))
+        .collect();
+    let fifo = FifoServer::new(
+        rows,
+        p.matches.clone(),
+        payloads,
+        |_| 1, // one comparator cycle per row per engine
+        ScanTiming::enzian(FPGA_ENGINES),
+        64 << 10,
+    );
+    let total_results = fifo.total_results() as u64;
+
+    let cfg = MachineConfig::enzian_eci();
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    let mut m = Machine::new(cfg, FpgaApp::Fifo(fifo), p.store.clone(), cpu_mem);
+    m.config_block.set_select_params(p.x, p.y);
+    m.set_workload(Workload::FifoConsume { think: Duration::from_ns(5) }, threads);
+    let r = m.run();
+    assert_eq!(r.results, total_results, "every result must be delivered");
+    FigPoint {
+        selectivity: p.selectivity,
+        threads,
+        scan_rows_per_s: rows as f64 / r.sim_time.as_secs(),
+        results_per_s: r.results_per_s(),
+        dram_gbps: rows as f64 * 128.0 / r.sim_time.as_secs() / 1e9,
+    }
+}
+
+/// One FPGA-offload run (standalone).
+pub fn run_fpga(
+    rt: &mut Runtime,
+    rows: u64,
+    selectivity: f64,
+    threads: usize,
+) -> anyhow::Result<FigPoint> {
+    Ok(run_fpga_prepared(&prepare(rt, rows, selectivity)?, threads))
+}
+
+/// One CPU-only run (data in CPU DRAM).
+pub fn run_cpu(rows: u64, selectivity: f64, threads: usize) -> FigPoint {
+    let spec = TableSpec::new(rows, selectivity);
+    let mut store = MemStore::new(LineAddr(0), rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    let (x, y) = select_params(selectivity);
+    let matches = cpu_select_scan(&store, LineAddr(0), rows, x, y);
+    let mut mask = vec![false; rows as usize];
+    for &i in &matches {
+        mask[i as usize] = true;
+    }
+    let cfg = MachineConfig::enzian_eci();
+    let fpga_mem = MemStore::new(map::TABLE_BASE, 1 << 20);
+    let mut m = Machine::memory_node(cfg, fpga_mem, store);
+    m.set_workload(
+        Workload::LocalScan {
+            rows,
+            cycles_per_row: CPU_CYCLES_PER_ROW,
+            match_extra: CPU_MATCH_EXTRA,
+            matches: mask,
+        },
+        threads,
+    );
+    let r = m.run();
+    FigPoint {
+        selectivity,
+        threads,
+        scan_rows_per_s: r.rows_per_s(),
+        results_per_s: r.results as f64 / r.sim_time.as_secs(),
+        dram_gbps: r.rows_per_s() * 128.0 / 1e9,
+    }
+}
+
+pub struct Fig5 {
+    pub fpga: Vec<FigPoint>,
+    pub cpu: Vec<FigPoint>,
+}
+
+pub fn run(rt: &mut Runtime, scale: Scale) -> anyhow::Result<Fig5> {
+    let rows = scale.rows(PAPER_ROWS);
+    let mut fpga = Vec::new();
+    let mut cpu = Vec::new();
+    for &sel in &[0.01, 0.10, 1.00] {
+        let prepared = prepare(rt, rows, sel)?;
+        for &t in &scale.threads() {
+            fpga.push(run_fpga_prepared(&prepared, t));
+            cpu.push(run_cpu(rows, sel, t));
+        }
+    }
+    Ok(Fig5 { fpga, cpu })
+}
+
+pub fn render(f: &Fig5) -> ResultTable {
+    let mut t = ResultTable::new(
+        "Figure 5: SELECT throughput vs. selectivity and thread count",
+        &["impl", "selectivity", "threads", "scan rows/s", "results/s", "scan GB/s"],
+    );
+    for (name, pts) in [("FPGA", &f.fpga), ("CPU", &f.cpu)] {
+        for p in pts.iter() {
+            t.row(vec![
+                name.into(),
+                format!("{:.0}%", p.selectivity * 100.0),
+                p.threads.to_string(),
+                fmt_rate(p.scan_rows_per_s),
+                fmt_rate(p.results_per_s),
+                format!("{:.1}", p.dram_gbps),
+            ]);
+        }
+    }
+    t
+}

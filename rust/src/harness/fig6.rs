@@ -1,0 +1,149 @@
+//! Figure 6: pointer-chasing throughput on CPU and FPGA for varying chain
+//! lengths (paper §5.5) — the paper's deliberate *negative* result for
+//! the FPGA offload.
+//!
+//! Shape criteria: CPU >= FPGA at every chain length (big caches + faster
+//! random-access memory path win); the FPGA's length-1 point shows the
+//! interconnect-saturation cap; both decline ~1/chain_len.
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
+use crate::memctl::KvsService;
+use crate::operators::kvs::{fpga_hash_batch, lookup};
+use crate::operators::table::{build_kvs, KvsSpec};
+use crate::proto::messages::{LineAddr, LINE_BYTES};
+use crate::runtime::Runtime;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+
+pub const PAPER_ENTRIES: u64 = 5_120_000;
+pub const FPGA_ENGINES: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct Fig6Point {
+    pub chain_len: u64,
+    pub keys_per_s: f64,
+    pub dram_gbps: f64,
+}
+
+/// FPGA path: requests dispatched over ECI to the engine pool.
+pub fn run_fpga(
+    rt: &mut Runtime,
+    entries: u64,
+    chain_len: u64,
+    threads: usize,
+    lookups: u64,
+) -> anyhow::Result<Fig6Point> {
+    let spec = KvsSpec { entries, chain_len, seed: 11 };
+    let store_lines = 2 * entries + 1024;
+    let mut store = MemStore::new(map::TABLE_BASE, store_lines as usize * LINE_BYTES);
+    let layout = build_kvs(&spec, &mut store);
+
+    // request stream: last key of each chain (forces full-length chases),
+    // hashed through the AOT kernel (functional verification of routing)
+    let keys: Vec<i32> = (0..lookups)
+        .map(|i| layout.tail_keys[(i % layout.n_buckets) as usize])
+        .collect();
+    let _buckets = fpga_hash_batch(rt, &keys[..keys.len().min(4096)], layout.bucket_mask)?;
+
+    let requests: Vec<(u64, Box<crate::proto::messages::Line>)> = keys
+        .iter()
+        .map(|&k| {
+            let r = lookup(&store, &layout, k);
+            assert!(r.found, "tail key must resolve");
+            (r.hops, Box::new([0u8; LINE_BYTES])) // value payload content elided
+        })
+        .collect();
+
+    let cfg = MachineConfig::enzian_eci();
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    let svc = KvsService::new(FPGA_ENGINES);
+    let mut m = Machine::new(cfg, FpgaApp::Kvs { svc, requests }, store, cpu_mem);
+    m.set_workload(Workload::KvsRemote { lookups }, threads);
+    let r = m.run();
+    Ok(Fig6Point {
+        chain_len,
+        keys_per_s: r.results_per_s(),
+        dram_gbps: r.fpga_dram_bytes as f64 / r.sim_time.as_secs() / 1e9,
+    })
+}
+
+/// CPU baseline: identical lookups against local memory.
+pub fn run_cpu(entries: u64, chain_len: u64, threads: usize, lookups: u64) -> Fig6Point {
+    let spec = KvsSpec { entries, chain_len, seed: 11 };
+    let store_lines = 2 * entries + 1024;
+    let mut store = MemStore::new(LineAddr(0), store_lines as usize * LINE_BYTES);
+    let layout = build_kvs(&spec, &mut store);
+
+    // per-lookup dependent chains (bucket line + entries), precomputed
+    // functionally; the machine walks them through the cache hierarchy
+    let mut chains = Vec::with_capacity(layout.n_buckets as usize);
+    for b in 0..layout.n_buckets {
+        let key = layout.tail_keys[b as usize];
+        let mut chain = Vec::with_capacity(chain_len as usize + 1);
+        let bline = layout.base.0 + b / 16;
+        chain.push(LineAddr(bline));
+        let boff = ((b % 16) * 8) as usize;
+        let l = store.read_line(LineAddr(bline));
+        let mut ptr = u64::from_le_bytes(l[boff..boff + 8].try_into().unwrap());
+        while ptr != crate::operators::table::NULL_PTR {
+            chain.push(LineAddr(ptr));
+            let e = store.read_line(LineAddr(ptr));
+            let k = u64::from_le_bytes(e[0..8].try_into().unwrap()) as u32 as i32;
+            if k == key {
+                break;
+            }
+            ptr = u64::from_le_bytes(e[120..128].try_into().unwrap());
+        }
+        chains.push(chain);
+    }
+
+    let cfg = MachineConfig::enzian_eci();
+    let fpga_mem = MemStore::new(map::TABLE_BASE, 1 << 20);
+    let mut m = Machine::memory_node(cfg, fpga_mem, store);
+    m.set_workload(Workload::KvsLocal { chains, lookups }, threads);
+    let r = m.run();
+    Fig6Point {
+        chain_len,
+        keys_per_s: r.results_per_s(),
+        dram_gbps: r.cpu_dram_bytes as f64 / r.sim_time.as_secs() / 1e9,
+    }
+}
+
+pub struct Fig6 {
+    pub fpga: Vec<Fig6Point>,
+    pub cpu: Vec<Fig6Point>,
+}
+
+pub fn run(rt: &mut Runtime, scale: Scale) -> anyhow::Result<Fig6> {
+    let entries = scale.rows(PAPER_ENTRIES).max(16_384);
+    let lookups = scale.rows(400_000).max(4_000);
+    let threads = match scale {
+        Scale::Ci => 8,
+        _ => 32,
+    };
+    let mut fpga = Vec::new();
+    let mut cpu = Vec::new();
+    for &cl in &[1u64, 2, 4, 8, 16, 32, 64, 128] {
+        fpga.push(run_fpga(rt, entries, cl, threads, lookups)?);
+        cpu.push(run_cpu(entries, cl, threads, lookups));
+    }
+    Ok(Fig6 { fpga, cpu })
+}
+
+pub fn render(f: &Fig6) -> ResultTable {
+    let mut t = ResultTable::new(
+        "Figure 6: pointer-chasing throughput vs. chain length (negative result: CPU wins)",
+        &["chain len", "FPGA keys/s", "FPGA DRAM GB/s", "CPU keys/s", "CPU DRAM GB/s"],
+    );
+    for (pf, pc) in f.fpga.iter().zip(&f.cpu) {
+        t.row(vec![
+            pf.chain_len.to_string(),
+            fmt_rate(pf.keys_per_s),
+            format!("{:.2}", pf.dram_gbps),
+            fmt_rate(pc.keys_per_s),
+            format!("{:.2}", pc.dram_gbps),
+        ]);
+    }
+    t
+}

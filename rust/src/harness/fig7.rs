@@ -1,0 +1,171 @@
+//! Figure 7: regular-expression throughput vs. thread count and
+//! selectivity (paper §5.6).
+//!
+//! Shape criteria: the FPGA wins in *every* configuration thanks to 48
+//! pipelined 1-char/cycle engines; ~2x the 48-thread CPU even at 100%
+//! selectivity (interconnect-bound), and it does so with a fraction of
+//! the CPU threads involved.
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
+use crate::memctl::{regex_row_cycles, FifoServer, ScanTiming};
+use crate::operators::redfa::compile_regex;
+use crate::operators::regex_op::{cpu_regex_scan, fpga_regex_scan};
+use crate::operators::table::{build_table, row_str, TableSpec};
+use crate::proto::messages::{LineAddr, LINE_BYTES};
+use crate::runtime::{Runtime, DFA_STATES};
+use crate::sim::time::Duration;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+use super::fig5::FigPoint;
+
+pub const PAPER_ROWS: u64 = 5_120_000;
+pub const FPGA_ENGINES: u32 = 48;
+/// CPU cycles per row for the software matcher. The paper's CPU baseline
+/// is a byte-at-a-time software regex library (kokke tiny-regex-c-class,
+/// backtracking per start position): ~30 cycles/char over a 62-byte
+/// field.
+pub const CPU_CYCLES_PER_ROW: u64 = 30 * 62;
+pub const CPU_MATCH_EXTRA: u64 = 32;
+
+/// Precomputed per-selectivity scan (PERF: one XLA scan + one cycle pass
+/// per selectivity, reused across the thread sweep — EXPERIMENTS.md §Perf).
+pub struct PreparedRegex {
+    pub rows: u64,
+    pub selectivity: f64,
+    store: MemStore,
+    matches: Vec<u64>,
+    cycles: std::rc::Rc<Vec<u64>>,
+}
+
+pub fn prepare(rt: &mut Runtime, rows: u64, selectivity: f64) -> anyhow::Result<PreparedRegex> {
+    let mut spec = TableSpec::new(rows, selectivity);
+    spec.regex_selectivity = selectivity;
+    let mut store = MemStore::new(map::TABLE_BASE, rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    let dfa = compile_regex(&spec.needle, DFA_STATES)?;
+    let matches = fpga_regex_scan(rt, &store, map::TABLE_BASE, rows, &dfa)?;
+    // per-row engine cycles: 1 char/cycle with early termination on match
+    let cycles: Vec<u64> = (0..rows)
+        .map(|i| {
+            let l = store.read_line(LineAddr(map::TABLE_BASE.0 + i));
+            regex_row_cycles(&dfa, row_str(&l))
+        })
+        .collect();
+    Ok(PreparedRegex { rows, selectivity, store, matches, cycles: std::rc::Rc::new(cycles) })
+}
+
+pub fn run_fpga_prepared(p: &PreparedRegex, threads: usize) -> FigPoint {
+    let rows = p.rows;
+    let payloads: Vec<_> = p
+        .matches
+        .iter()
+        .map(|&i| Box::new(p.store.read_line(LineAddr(map::TABLE_BASE.0 + i))))
+        .collect();
+    let cycles = std::rc::Rc::clone(&p.cycles);
+    let fifo = FifoServer::new(
+        rows,
+        p.matches.clone(),
+        payloads,
+        move |r| cycles[r as usize],
+        ScanTiming::enzian(FPGA_ENGINES),
+        64 << 10,
+    );
+    let total_results = fifo.total_results() as u64;
+
+    let cfg = MachineConfig::enzian_eci();
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    let mut m = Machine::new(cfg, FpgaApp::Fifo(fifo), p.store.clone(), cpu_mem);
+    m.set_workload(Workload::FifoConsume { think: Duration::from_ns(5) }, threads);
+    let r = m.run();
+    assert_eq!(r.results, total_results);
+    FigPoint {
+        selectivity: p.selectivity,
+        threads,
+        scan_rows_per_s: rows as f64 / r.sim_time.as_secs(),
+        results_per_s: r.results_per_s(),
+        dram_gbps: rows as f64 * 128.0 / r.sim_time.as_secs() / 1e9,
+    }
+}
+
+/// FPGA-offload run (standalone).
+pub fn run_fpga(
+    rt: &mut Runtime,
+    rows: u64,
+    selectivity: f64,
+    threads: usize,
+) -> anyhow::Result<FigPoint> {
+    Ok(run_fpga_prepared(&prepare(rt, rows, selectivity)?, threads))
+}
+
+/// CPU-only run.
+pub fn run_cpu(rows: u64, selectivity: f64, threads: usize) -> anyhow::Result<FigPoint> {
+    let mut spec = TableSpec::new(rows, selectivity);
+    spec.regex_selectivity = selectivity;
+    let mut store = MemStore::new(LineAddr(0), rows as usize * LINE_BYTES);
+    build_table(&spec, &mut store);
+    let dfa = compile_regex(&spec.needle, DFA_STATES)?;
+    let matches = cpu_regex_scan(&store, LineAddr(0), rows, &dfa);
+    let mut mask = vec![false; rows as usize];
+    for &i in &matches {
+        mask[i as usize] = true;
+    }
+    let cfg = MachineConfig::enzian_eci();
+    let fpga_mem = MemStore::new(map::TABLE_BASE, 1 << 20);
+    let mut m = Machine::memory_node(cfg, fpga_mem, store);
+    m.set_workload(
+        Workload::LocalScan {
+            rows,
+            cycles_per_row: CPU_CYCLES_PER_ROW,
+            match_extra: CPU_MATCH_EXTRA,
+            matches: mask,
+        },
+        threads,
+    );
+    let r = m.run();
+    Ok(FigPoint {
+        selectivity,
+        threads,
+        scan_rows_per_s: r.rows_per_s(),
+        results_per_s: r.results as f64 / r.sim_time.as_secs(),
+        dram_gbps: r.rows_per_s() * 128.0 / 1e9,
+    })
+}
+
+pub struct Fig7 {
+    pub fpga: Vec<FigPoint>,
+    pub cpu: Vec<FigPoint>,
+}
+
+pub fn run(rt: &mut Runtime, scale: Scale) -> anyhow::Result<Fig7> {
+    let rows = scale.rows(PAPER_ROWS);
+    let mut fpga = Vec::new();
+    let mut cpu = Vec::new();
+    for &sel in &[0.01, 0.10, 1.00] {
+        let prepared = prepare(rt, rows, sel)?;
+        for &t in &scale.threads() {
+            fpga.push(run_fpga_prepared(&prepared, t));
+            cpu.push(run_cpu(rows, sel, t)?);
+        }
+    }
+    Ok(Fig7 { fpga, cpu })
+}
+
+pub fn render(f: &Fig7) -> ResultTable {
+    let mut t = ResultTable::new(
+        "Figure 7: regex throughput vs. thread count and selectivity",
+        &["impl", "selectivity", "threads", "scan rows/s", "results/s"],
+    );
+    for (name, pts) in [("FPGA", &f.fpga), ("CPU", &f.cpu)] {
+        for p in pts.iter() {
+            t.row(vec![
+                name.into(),
+                format!("{:.0}%", p.selectivity * 100.0),
+                p.threads.to_string(),
+                fmt_rate(p.scan_rows_per_s),
+                fmt_rate(p.results_per_s),
+            ]);
+        }
+    }
+    t
+}

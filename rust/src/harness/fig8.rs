@@ -1,0 +1,109 @@
+//! Figure 8: the effect of temporal locality with ECI (paper §5.7).
+//!
+//! The regex scan's results are delivered into the CPU's L1/L2 by the
+//! coherence protocol, invisibly to software; an application that re-uses
+//! results (re-reading N-D, N-2D, ... after reading N) gets them from
+//! cache instead of paying the FPGA's recompute cost.
+//!
+//! Shape criteria: throughput grows ~linearly with the reuse factor
+//! (window/D) until the re-read set exceeds the cache (L1 series capped
+//! by L1 capacity, L2 series by LLC); the L2 miss-rate curve mirrors it;
+//! a single core beats the full-machine no-reuse scan at reuse ≈ 8-16.
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
+use crate::memctl::ComputeRegion;
+use crate::proto::messages::{Line, LineAddr, LINE_BYTES};
+use crate::sim::time::Duration;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+
+/// Per-result recompute cost at the FPGA (regex over a 62-char field at
+/// 300 MHz ≈ 207 ns, plus dispatch).
+pub const RECOMPUTE: Duration = Duration(250_000); // 250 ns
+
+#[derive(Clone, Debug)]
+pub struct Fig8Point {
+    /// Reuse stride D as a fraction of the cache (window/D = reuse factor).
+    pub d_fraction: f64,
+    pub cache: &'static str,
+    pub reads_per_s: f64,
+    pub l2_miss_rate: f64,
+    pub reuse_factor: f64,
+}
+
+pub fn run_point(results: u64, window_lines: u64, stride: u64, cache: &'static str) -> Fig8Point {
+    let cfg = MachineConfig::enzian_eci();
+    let fpga_mem = MemStore::new(map::TABLE_BASE, 1 << 20);
+    let cpu_mem = MemStore::new(LineAddr(0), 1 << 20);
+    // result lines: distinctive content per slot
+    let lines: Vec<Box<Line>> = (0..4096u64)
+        .map(|i| {
+            let mut l = [0u8; LINE_BYTES];
+            l[0..8].copy_from_slice(&i.to_le_bytes());
+            Box::new(l)
+        })
+        .collect();
+    let region = ComputeRegion::new(4, RECOMPUTE);
+    let mut m = Machine::new(cfg, FpgaApp::Result { region, lines }, fpga_mem, cpu_mem);
+    m.set_workload(
+        Workload::ReuseScan { results, stride, window: window_lines, think: Duration::from_ns(3) },
+        1,
+    );
+    let r = m.run();
+    Fig8Point {
+        d_fraction: stride as f64 / window_lines as f64,
+        cache,
+        reads_per_s: r.results_per_s(),
+        l2_miss_rate: r.llc_miss_rate(),
+        reuse_factor: if stride == 0 { 1.0 } else { (window_lines / stride) as f64 },
+    }
+}
+
+pub struct Fig8 {
+    pub points: Vec<Fig8Point>,
+    /// Baseline: no reuse (pure scan), one thread.
+    pub baseline_reads_per_s: f64,
+}
+
+pub fn run(scale: Scale) -> Fig8 {
+    let cfg = MachineConfig::enzian_eci();
+    let results = match scale {
+        Scale::Ci => 20_000,
+        Scale::Default => 60_000,
+        Scale::Paper => 400_000,
+    };
+    // Reuse window = half the cache capacity: the re-read set plus the
+    // streaming leading edge must fit without LRU thrash (a window equal
+    // to capacity degenerates to cyclic-LRU 0% hits).
+    let l1_lines = (cfg.cpu.l1_bytes / LINE_BYTES) as u64 / 2; // 128
+    let l2_lines = (cfg.cpu.llc_bytes / LINE_BYTES) as u64 / 8; // 16384
+    let mut points = Vec::new();
+    // D swept as a fraction of the window: 1/64 .. 1/2 (reuse 64x .. 2x)
+    for &frac in &[64u64, 32, 16, 8, 4, 2] {
+        points.push(run_point(results, l1_lines, (l1_lines / frac).max(1), "L1"));
+    }
+    for &frac in &[64u64, 32, 16, 8, 4, 2] {
+        points.push(run_point(results, l2_lines, (l2_lines / frac).max(1), "L2"));
+    }
+    let base = run_point(results, l1_lines, 0, "none");
+    Fig8 { points, baseline_reads_per_s: base.reads_per_s }
+}
+
+pub fn render(f: &Fig8) -> ResultTable {
+    let mut t = ResultTable::new(
+        "Figure 8: effect of temporal locality (1 thread, recompute-on-miss)",
+        &["cache", "D (frac of window)", "reuse", "reads/s", "L2 miss rate", "vs no-reuse"],
+    );
+    for p in &f.points {
+        t.row(vec![
+            p.cache.into(),
+            format!("{:.3}", p.d_fraction),
+            format!("{:.0}x", p.reuse_factor),
+            fmt_rate(p.reads_per_s),
+            format!("{:.3}", p.l2_miss_rate),
+            format!("{:.1}x", p.reads_per_s / f.baseline_reads_per_s),
+        ]);
+    }
+    t
+}

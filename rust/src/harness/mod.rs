@@ -1,0 +1,14 @@
+//! Experiment harness: one driver per table/figure of the paper's §5
+//! (see DESIGN.md §4 for the experiment index and shape criteria).
+//! `cargo bench` wraps these; the `eci bench <id>` CLI subcommand runs
+//! them directly.
+
+pub mod common;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table2;
+pub mod table3;
+
+pub use common::{fmt_rate, ResultTable, Scale};

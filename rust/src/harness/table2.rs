@@ -1,0 +1,71 @@
+//! Table 2: ECI hardware resource consumption on the VU9P, plus the
+//! subsetting ablation the resource model enables.
+
+use crate::proto::subset::Subset;
+use crate::resource::{eci_stack, percentages, totals, StackConfig};
+
+use super::common::ResultTable;
+
+pub fn render() -> Vec<ResultTable> {
+    let mut out = Vec::new();
+
+    // the paper's table
+    let comps = eci_stack(StackConfig::reference());
+    let t = totals(&comps);
+    let (pl, pr, pb) = percentages(&t);
+    let mut t2 = ResultTable::new(
+        "Table 2: ECI resource consumption on a Xilinx VU9P (paper: 46186 / 32777 / 112.5 = 3.91% / 1.39% / 5.23%)",
+        &["", "LUTs", "REGs", "BRAM(36Kb)"],
+    );
+    t2.row(vec![
+        "ECI per link".into(),
+        t.luts.to_string(),
+        t.regs.to_string(),
+        format!("{:.1}", t.bram36),
+    ]);
+    t2.row(vec![
+        "Percentage".into(),
+        format!("{pl:.2}%"),
+        format!("{pr:.2}%"),
+        format!("{pb:.2}%"),
+    ]);
+    out.push(t2);
+
+    // per-component breakdown (our accounting)
+    let mut bd = ResultTable::new(
+        "Table 2 (breakdown): per-component estimates",
+        &["component", "LUTs", "REGs", "BRAM(36Kb)"],
+    );
+    for c in &comps {
+        bd.row(vec![
+            c.name.clone(),
+            c.luts.to_string(),
+            c.regs.to_string(),
+            format!("{:.1}", c.bram36),
+        ]);
+    }
+    out.push(bd);
+
+    // subsetting ablation (the §3.4 space argument, quantified)
+    let mut ab = ResultTable::new(
+        "Table 2 (ablation): protocol subsetting vs. area",
+        &["subset", "home states", "LUTs", "REGs", "BRAM(36Kb)"],
+    );
+    for s in [
+        Subset::full_symmetric(),
+        Subset::asymmetric_accelerator(),
+        Subset::cpu_initiator_readonly(),
+        Subset::stateless_readonly(),
+    ] {
+        let t = totals(&eci_stack(StackConfig::for_subset(&s)));
+        ab.row(vec![
+            s.name.into(),
+            s.home_state_count().to_string(),
+            t.luts.to_string(),
+            t.regs.to_string(),
+            format!("{:.1}", t.bram36),
+        ]);
+    }
+    out.push(ab);
+    out
+}

@@ -1,0 +1,79 @@
+//! Table 3: inter-socket throughput and latency, Enzian+ECI vs native
+//! 2-socket server.
+//!
+//! Paper: ECI 12.8 GiB/s / 320 ns; native 19 GiB/s / 150 ns. Shape
+//! criterion: native wins both axes by ~1.5x (throughput) and ~2.1x
+//! (latency); ECI remains the same order of magnitude ("realistic
+//! performance for cache coherence hardware").
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, Machine, MachineConfig, Workload};
+use crate::proto::messages::LINE_BYTES;
+
+use super::common::{ResultTable, Scale};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Table3Row {
+    pub throughput_gib: f64,
+    pub latency_ns: f64,
+}
+
+/// Run both microbenchmarks on one machine configuration.
+pub fn run_config(cfg: MachineConfig, scale: Scale) -> Table3Row {
+    // throughput: all threads stream the remote region
+    let lines = scale.rows(2_000_000);
+    let region_bytes = (lines as usize + 1024) * LINE_BYTES;
+    let fpga = MemStore::new(map::TABLE_BASE, region_bytes);
+    let cpu = MemStore::new(crate::proto::messages::LineAddr(0), 1 << 20);
+    let mut m = Machine::memory_node(cfg, fpga, cpu);
+    m.set_workload(Workload::StreamRemote { lines }, cfg.cpu.cores.min(48));
+    let r = m.run();
+    let throughput_gib = r.remote_gib_per_s();
+
+    // latency: single-thread dependent loads over a region 8x the LLC
+    // (~88% cold misses; we report the p50, which is a miss). The region
+    // is materialized (the home agent reads real payload bytes) but
+    // allocated zeroed, so untouched pages stay shared.
+    let chase_lines: u64 = 1 << 20; // 128 MiB
+    let fpga = MemStore::new(map::TABLE_BASE, (chase_lines as usize) * LINE_BYTES);
+    let cpu = MemStore::new(crate::proto::messages::LineAddr(0), 1 << 20);
+    let mut m = Machine::memory_node(cfg, fpga, cpu);
+    let count = match scale {
+        Scale::Ci => 2_000,
+        Scale::Default => 20_000,
+        Scale::Paper => 200_000,
+    };
+    m.set_workload(Workload::ChaseRemote { count, region_lines: chase_lines }, 1);
+    let r = m.run();
+    Table3Row { throughput_gib, latency_ns: r.load_lat.p50() as f64 / 1000.0 }
+}
+
+pub struct Table3 {
+    pub eci: Table3Row,
+    pub native: Table3Row,
+}
+
+pub fn run(scale: Scale) -> Table3 {
+    Table3 {
+        eci: run_config(MachineConfig::enzian_eci(), scale),
+        native: run_config(MachineConfig::native_2socket(), scale),
+    }
+}
+
+pub fn render(t: &Table3) -> ResultTable {
+    let mut out = ResultTable::new(
+        "Table 3: ECI performance comparison (paper: ECI 12.8 GiB/s / 320 ns, native 19 GiB/s / 150 ns)",
+        &["", "Enzian + ECI", "2-socket server (native)"],
+    );
+    out.row(vec![
+        "Throughput".into(),
+        format!("{:.1} GiB/s", t.eci.throughput_gib),
+        format!("{:.1} GiB/s", t.native.throughput_gib),
+    ]);
+    out.row(vec![
+        "Latency".into(),
+        format!("{:.0} ns", t.eci.latency_ns),
+        format!("{:.0} ns", t.native.latency_ns),
+    ]);
+    out
+}

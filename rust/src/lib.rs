@@ -1,0 +1,32 @@
+//! # ECI — a customizable cache-coherency stack for hybrid FPGA-CPU systems
+//!
+//! A full-system, execution-driven reproduction of the ECI/ACCI paper
+//! (Ramdas et al., ETH Zurich, 2022) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the protocol itself ([`proto`]), the
+//!   layered transport ([`transport`]), the coherence agents and machine
+//!   models ([`agents`], [`machine`]), the smart memory controller and its
+//!   operators ([`memctl`], [`operators`]), the trace/verification toolkit
+//!   ([`trace`]), and the experiment harness ([`harness`]).
+//! * **Layer 2/1 (build-time Python)** — the operators' compute hot paths
+//!   as JAX + Pallas kernels, AOT-lowered to HLO text and executed from
+//!   Rust through [`runtime`] (PJRT CPU client). Python is never on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the hardware-substitution argument and the
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod agents;
+pub mod config;
+pub mod harness;
+pub mod machine;
+pub mod memctl;
+pub mod operators;
+pub mod proto;
+pub mod ptest;
+pub mod resource;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod transport;

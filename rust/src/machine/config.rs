@@ -1,0 +1,151 @@
+//! Machine configurations: the Enzian + ECI testbed of §5.1 and the
+//! native 2-socket ThunderX-1 baseline of Table 3.
+//!
+//! Calibration discipline (DESIGN.md §1): these are *physical* parameters
+//! (clocks, geometries, per-hop pipeline depths, credit budgets); the
+//! paper's headline numbers are emergent, not hard-coded. The two
+//! interconnect parameter sets differ exactly where the hardware differs:
+//! the FPGA's protocol engines run at 300 MHz fabric clock (deep
+//! pipeline, higher per-hop latency) and its transaction-layer buffers
+//! are block-RAM-bounded (fewer credits), while the native socket's
+//! coherence engines run at CPU speed.
+
+use crate::agents::dram::DramConfig;
+use crate::sim::time::{Clock, Duration};
+use crate::transport::LinkConfig;
+
+/// CPU-socket parameters (Marvell ThunderX-1, §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuConfig {
+    pub cores: usize,
+    pub clock: Clock,
+    pub l1_bytes: usize,
+    pub l1_ways: usize,
+    /// L1 hit (load-to-use).
+    pub l1_hit: Duration,
+    pub llc_bytes: usize,
+    pub llc_ways: usize,
+    /// LLC hit beyond L1.
+    pub llc_hit: Duration,
+    pub dram: DramConfig,
+}
+
+impl CpuConfig {
+    pub fn thunderx1() -> CpuConfig {
+        CpuConfig {
+            cores: 48,
+            clock: Clock::from_ghz(2.0),
+            l1_bytes: 32 << 10,
+            l1_ways: 4,
+            l1_hit: Duration::from_ns(2), // 4 cycles
+            llc_bytes: 16 << 20,
+            llc_ways: 16,
+            llc_hit: Duration::from_ns(13), // ~26 cycles
+            dram: DramConfig::cpu_enzian(),
+        }
+    }
+}
+
+/// Full two-node machine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineConfig {
+    pub cpu: CpuConfig,
+    pub link: LinkConfig,
+    pub fpga_dram: DramConfig,
+    /// Per-message processing latency in the home node's protocol engine
+    /// (directory lookup + datapath dispatch).
+    pub home_proc: Duration,
+    /// Per-message processing latency in the CPU-side coherence engine.
+    pub remote_proc: Duration,
+    /// Reverse-path latency of credit returns / ack control frames.
+    pub ctrl_latency: Duration,
+    pub seed: u64,
+}
+
+impl MachineConfig {
+    /// Enzian with the ECI stack on the FPGA (§5.1).
+    pub fn enzian_eci() -> MachineConfig {
+        let mut link = LinkConfig::eci();
+        // FPGA transaction-layer buffers: BRAM-bounded; 9 credits per
+        // coherence VC (x2 parities = 18 outstanding line requests).
+        link.credits_per_vc = 9;
+        link.phys.pipeline_latency = Duration::from_ns(80);
+        MachineConfig {
+            cpu: CpuConfig::thunderx1(),
+            link,
+            fpga_dram: DramConfig::fpga_enzian(),
+            // ~12 fabric cycles at 300 MHz through the directory +
+            // dispatch pipeline
+            home_proc: Duration::from_ns(40),
+            remote_proc: Duration::from_ns(10),
+            ctrl_latency: Duration::from_ns(80),
+            seed: 0xEC1,
+        }
+    }
+
+    /// Native 2-socket ThunderX-1 server (Table 3 baseline): same CPU,
+    /// CPU-speed coherence engines on both ends, deeper credit budget.
+    pub fn native_2socket() -> MachineConfig {
+        let mut link = LinkConfig::native();
+        link.credits_per_vc = 6;
+        link.phys.pipeline_latency = Duration::from_ns(8);
+        MachineConfig {
+            cpu: CpuConfig::thunderx1(),
+            // the second socket's memory is the same CPU DRAM config
+            fpga_dram: DramConfig::cpu_enzian(),
+            link,
+            home_proc: Duration::from_ns(5),
+            remote_proc: Duration::from_ns(5),
+            ctrl_latency: Duration::from_ns(8),
+            seed: 0xEC1,
+        }
+    }
+
+    /// Small configuration for fast unit/integration tests: 4 cores,
+    /// small caches, low DRAM latency variance.
+    pub fn test_small() -> MachineConfig {
+        let mut c = MachineConfig::enzian_eci();
+        c.cpu.cores = 4;
+        c.cpu.l1_bytes = 8 << 10;
+        c.cpu.llc_bytes = 256 << 10;
+        c
+    }
+}
+
+/// Line-address windows of the simulated physical address map.
+pub mod map {
+    use crate::proto::messages::LineAddr;
+
+    /// CPU-homed DRAM starts at line 0.
+    pub const CPU_BASE: LineAddr = LineAddr(0);
+    /// FPGA-homed region base (byte 2^34).
+    pub const FPGA_BASE: LineAddr = LineAddr(1 << 27);
+    /// Table region (operator input data) within the FPGA region.
+    pub const TABLE_BASE: LineAddr = LineAddr(FPGA_BASE.0 + (1 << 10));
+    /// Result-FIFO window: any read here pops the next result.
+    pub const FIFO_BASE: LineAddr = LineAddr(FPGA_BASE.0 + (1 << 25));
+    pub const FIFO_LINES: u64 = 1 << 24;
+    /// KVS request window: line offset encodes the request index.
+    pub const KVS_WIN_BASE: LineAddr = LineAddr(FPGA_BASE.0 + (3 << 25));
+    pub const KVS_WIN_LINES: u64 = 1 << 24;
+    /// Addressable result region (§5.7): line offset = result index.
+    pub const RESULT_BASE: LineAddr = LineAddr(FPGA_BASE.0 + (5 << 25));
+    pub const RESULT_LINES: u64 = 1 << 24;
+    /// Config block (I/O space, one line window).
+    pub const CONFIG_BASE: LineAddr = LineAddr(FPGA_BASE.0 + (7 << 25));
+
+    pub fn is_fpga(addr: LineAddr) -> bool {
+        addr >= FPGA_BASE
+    }
+    pub fn fifo_slot(addr: LineAddr) -> Option<u64> {
+        (addr >= FIFO_BASE && addr.0 < FIFO_BASE.0 + FIFO_LINES).then(|| addr.0 - FIFO_BASE.0)
+    }
+    pub fn kvs_slot(addr: LineAddr) -> Option<u64> {
+        (addr >= KVS_WIN_BASE && addr.0 < KVS_WIN_BASE.0 + KVS_WIN_LINES)
+            .then(|| addr.0 - KVS_WIN_BASE.0)
+    }
+    pub fn result_slot(addr: LineAddr) -> Option<u64> {
+        (addr >= RESULT_BASE && addr.0 < RESULT_BASE.0 + RESULT_LINES)
+            .then(|| addr.0 - RESULT_BASE.0)
+    }
+}

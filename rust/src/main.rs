@@ -1,0 +1,2 @@
+// CLI entrypoint (built out in config/cli)
+fn main() { eci::config::cli::main_entry(); }

@@ -1,0 +1,92 @@
+//! The operator config module (paper §5.3.1): "Each operator is
+//! configured by read/write access (also over ECI) to a config module,
+//! e.g. to set query parameters or to load a regex. This communication is
+//! not on the critical path of the workload."
+//!
+//! Registers are 8-byte words in a 128-byte-aligned window, accessed via
+//! the ECI I/O VCs (`MsgKind::IoRead` / `IoWrite`).
+
+use std::collections::BTreeMap;
+
+/// Canonical register offsets.
+pub mod regs {
+    /// f32 bits of the SELECT X parameter.
+    pub const SELECT_X: u64 = 0x00;
+    /// f32 bits of the SELECT Y parameter.
+    pub const SELECT_Y: u64 = 0x08;
+    /// scan trigger / status: write 1 to arm, reads 1 while scanning.
+    pub const SCAN_CTL: u64 = 0x10;
+    /// results produced so far (read-only).
+    pub const RESULT_COUNT: u64 = 0x18;
+    /// regex upload window base (the DFA table is written 8 bytes at a
+    /// time; the real hardware streams it into BRAM).
+    pub const REGEX_BASE: u64 = 0x100;
+}
+
+/// A bank of 8-byte config registers.
+#[derive(Default)]
+pub struct ConfigBlock {
+    regs: BTreeMap<u64, u64>,
+    /// I/O operations served (all off the critical path).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl ConfigBlock {
+    pub fn new() -> ConfigBlock {
+        Self::default()
+    }
+
+    pub fn read(&mut self, offset: u64) -> u64 {
+        self.reads += 1;
+        self.regs.get(&(offset & !7)).copied().unwrap_or(0)
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64) {
+        self.writes += 1;
+        self.regs.insert(offset & !7, value);
+    }
+
+    pub fn select_params(&self) -> (f32, f32) {
+        (
+            f32::from_bits(self.regs.get(&regs::SELECT_X).copied().unwrap_or(0) as u32),
+            f32::from_bits(self.regs.get(&regs::SELECT_Y).copied().unwrap_or(0) as u32),
+        )
+    }
+
+    pub fn set_select_params(&mut self, x: f32, y: f32) {
+        self.write(regs::SELECT_X, x.to_bits() as u64);
+        self.write(regs::SELECT_Y, y.to_bits() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registers_round_trip() {
+        let mut c = ConfigBlock::new();
+        c.write(regs::SELECT_X, 42);
+        assert_eq!(c.read(regs::SELECT_X), 42);
+        assert_eq!(c.read(regs::SELECT_Y), 0);
+        assert_eq!(c.reads, 2);
+        assert_eq!(c.writes, 1);
+    }
+
+    #[test]
+    fn unaligned_access_hits_the_containing_word() {
+        let mut c = ConfigBlock::new();
+        c.write(0x08, 7);
+        assert_eq!(c.read(0x0C), 7);
+    }
+
+    #[test]
+    fn select_params_encode_as_f32_bits() {
+        let mut c = ConfigBlock::new();
+        c.set_select_params(0.25, -3.5);
+        let (x, y) = c.select_params();
+        assert_eq!(x, 0.25);
+        assert_eq!(y, -3.5);
+    }
+}

@@ -1,0 +1,254 @@
+//! The operator result FIFO (paper §5.3.1, Fig. 3).
+//!
+//! "The operator performs a table scan when triggered by a read from the
+//! CPU to a FIFO address, and returns matching rows in order upon
+//! receiving further reads. Multiple cores may safely read the FIFO
+//! concurrently once the scan is initiated, and will receive interleaved
+//! results. Matched rows are pushed to an output FIFO and returned on a
+//! first-come first-served basis. The operator is fully pipelined."
+//!
+//! Timing model: the scan is an open-loop pipeline; result `k` becomes
+//! available at `start + pipeline_offset[k]`, where the offset is the max
+//! of the DRAM-feed time and the engine-compute time for the row that
+//! produced it, except that a finite FIFO applies backpressure: the scan
+//! can run at most `fifo_cap` results ahead of delivery.
+
+use crate::proto::messages::Line;
+use crate::sim::time::{Duration, Time};
+
+/// Scan-rate parameters for offset precomputation.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanTiming {
+    /// Sustained FPGA DRAM feed, bytes/second (the scan streams rows).
+    pub dram_bytes_per_sec: f64,
+    /// Number of parallel compute engines.
+    pub engines: u32,
+    /// Engine clock.
+    pub engine_hz: f64,
+}
+
+impl ScanTiming {
+    /// Enzian FPGA defaults: 2ch DDR4-2400 at ~85% streaming efficiency,
+    /// engines at 300 MHz.
+    pub fn enzian(engines: u32) -> ScanTiming {
+        ScanTiming {
+            dram_bytes_per_sec: 38.4e9 * 0.85,
+            engines,
+            engine_hz: 300e6,
+        }
+    }
+}
+
+/// One operator's result FIFO.
+pub struct FifoServer {
+    /// Ready offset (ps from scan start) of each result, pipeline-only
+    /// (no backpressure).
+    pipeline_ready: Vec<u64>,
+    /// The actual result payloads (the matched rows).
+    results: Vec<Box<Line>>,
+    /// Source row index of each result (for verification).
+    pub source_rows: Vec<u64>,
+    /// FIFO capacity in results.
+    fifo_cap: usize,
+    /// Scan start time (set by the first FIFO read).
+    started: Option<Time>,
+    /// Next result to hand out.
+    next: usize,
+    /// Delivery time of each delivered result (for backpressure).
+    delivered_at: Vec<Time>,
+    /// Total DRAM bytes the scan moves (for utilization reporting).
+    pub scan_bytes: u64,
+}
+
+impl FifoServer {
+    /// Build from functional scan output.
+    ///
+    /// * `match_rows` — indices (within the scanned range) of matching
+    ///   rows, ascending (from `operators::fpga_*_scan`).
+    /// * `row_cycles` — per-row engine cost in cycles (e.g. 62 for the
+    ///   regex engines, ~1 for select comparators); indexed by row.
+    /// * `payloads` — the matched rows' data, same order as `match_rows`.
+    pub fn new(
+        total_rows: u64,
+        match_rows: Vec<u64>,
+        payloads: Vec<Box<Line>>,
+        row_cycles: impl Fn(u64) -> u64,
+        timing: ScanTiming,
+        fifo_cap: usize,
+    ) -> FifoServer {
+        assert_eq!(match_rows.len(), payloads.len());
+        // DRAM feed: row i available to engines at (i+1) * 128 / bw
+        let ps_per_row_dram = 128.0 / timing.dram_bytes_per_sec * 1e12;
+        // engines consume rows round-robin; engine e handles rows
+        // e, e+E, ...; its time is the sum of its rows' cycles.
+        let e = timing.engines as usize;
+        let ps_per_cycle = 1e12 / timing.engine_hz;
+        let mut engine_busy_ps = vec![0f64; e];
+        let mut pipeline_ready = Vec::with_capacity(match_rows.len());
+        let mut m = 0usize;
+        for row in 0..total_rows {
+            let eng = (row as usize) % e;
+            let feed = (row + 1) as f64 * ps_per_row_dram;
+            let start = engine_busy_ps[eng].max(feed);
+            let done = start + row_cycles(row) as f64 * ps_per_cycle;
+            engine_busy_ps[eng] = done;
+            if m < match_rows.len() && match_rows[m] == row {
+                pipeline_ready.push(done as u64);
+                m += 1;
+            }
+        }
+        assert_eq!(m, match_rows.len(), "match_rows out of range or unsorted");
+        FifoServer {
+            pipeline_ready,
+            results: payloads,
+            source_rows: match_rows,
+            fifo_cap,
+            started: None,
+            next: 0,
+            delivered_at: Vec::new(),
+            scan_bytes: total_rows * 128,
+        }
+    }
+
+    pub fn total_results(&self) -> usize {
+        self.results.len()
+    }
+    pub fn remaining(&self) -> usize {
+        self.results.len() - self.next
+    }
+
+    /// A FIFO read arrives at `now`. Returns `(ready_time, payload)` for
+    /// the next result, or `None` if the scan is exhausted (the operator
+    /// returns an end-marker line).
+    pub fn pop(&mut self, now: Time) -> Option<(Time, Box<Line>)> {
+        let start = *self.started.get_or_insert(now);
+        if self.next >= self.results.len() {
+            return None;
+        }
+        let k = self.next;
+        self.next += 1;
+        // pipeline readiness
+        let mut ready = start + Duration(self.pipeline_ready[k]);
+        // backpressure: result k could only have been produced once
+        // result k - fifo_cap had been delivered (its slot freed)
+        if k >= self.fifo_cap {
+            let freed = self.delivered_at[k - self.fifo_cap];
+            let stalled = freed + Duration(self.pipeline_ready[k].saturating_sub(self.pipeline_ready[k - self.fifo_cap]));
+            ready = ready.max(stalled);
+        }
+        let t = ready.max(now);
+        self.delivered_at.push(t);
+        Some((t, self.results[k].clone()))
+    }
+
+    /// End-marker line (all 0xFF): tells the CPU the scan is done.
+    pub fn end_marker() -> Box<Line> {
+        Box::new([0xFF; 128])
+    }
+}
+
+/// Per-row engine cycles for the regex operator: one char per cycle,
+/// "mismatches terminate early" (§5.6) — the engine stops when the DFA
+/// reaches the absorbing match state; a definitive non-match still walks
+/// the whole field (the NFA circuit cannot know earlier).
+pub fn regex_row_cycles(dfa: &crate::operators::redfa::Dfa, s: &[u8]) -> u64 {
+    let mut st = 0usize;
+    for (i, &ch) in s.iter().enumerate() {
+        st = dfa.table[st * 256 + ch as usize] as usize;
+        if dfa.accept[st] {
+            return (i + 1) as u64;
+        }
+    }
+    s.len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(v: u8) -> Box<Line> {
+        Box::new([v; 128])
+    }
+
+    fn mk(total: u64, matches: Vec<u64>, cap: usize) -> FifoServer {
+        let payloads = matches.iter().map(|&r| line(r as u8)).collect();
+        FifoServer::new(
+            total,
+            matches,
+            payloads,
+            |_| 1,
+            ScanTiming { dram_bytes_per_sec: 128.0 * 1e12, engines: 1, engine_hz: 1e12 },
+            cap,
+        )
+    }
+
+    #[test]
+    fn results_come_out_in_scan_order_with_monotone_ready_times() {
+        // 1 row/ps feed, 1 cycle/row at 1 THz
+        let mut f = mk(100, vec![3, 10, 50], 64);
+        let (t1, d1) = f.pop(Time(0)).unwrap();
+        let (t2, d2) = f.pop(Time(0)).unwrap();
+        let (t3, d3) = f.pop(Time(0)).unwrap();
+        assert!(t1 <= t2 && t2 <= t3);
+        assert_eq!(d1[0], 3);
+        assert_eq!(d2[0], 10);
+        assert_eq!(d3[0], 50);
+        assert!(f.pop(Time(0)).is_none(), "scan exhausted");
+    }
+
+    #[test]
+    fn dram_feed_bounds_ready_times() {
+        let mut f = mk(1000, vec![999], 64);
+        // row 999 cannot be ready before 1000 rows were fed at 1 row/ps
+        let (t, _) = f.pop(Time(0)).unwrap();
+        assert!(t.ps() >= 1000, "{t:?}");
+    }
+
+    #[test]
+    fn backpressure_stalls_scan_when_fifo_full() {
+        // tiny FIFO of 2; consumer reads late
+        let mut f = mk(100, (0..50).collect(), 2);
+        // consume the first two immediately; the third at t=1000000
+        let (_, _) = f.pop(Time(0)).unwrap();
+        let (_, _) = f.pop(Time(0)).unwrap();
+        let (t3, _) = f.pop(Time(1_000_000)).unwrap();
+        assert!(t3.ps() >= 1_000_000);
+        // result 4 was blocked on slot freed by result 2 (k - cap = 2):
+        let (t4, _) = f.pop(Time(1_000_000)).unwrap();
+        assert!(t4 >= t3);
+    }
+
+    #[test]
+    fn engine_parallelism_scales_compute_bound_scans() {
+        let matches: Vec<u64> = (0..512).collect();
+        let payloads: Vec<Box<Line>> = matches.iter().map(|&r| line(r as u8)).collect();
+        let slow = FifoServer::new(
+            512,
+            matches.clone(),
+            payloads.clone(),
+            |_| 100,
+            ScanTiming { dram_bytes_per_sec: 1e15, engines: 1, engine_hz: 1e9 },
+            1 << 20,
+        );
+        let fast = FifoServer::new(
+            512,
+            matches,
+            payloads,
+            |_| 100,
+            ScanTiming { dram_bytes_per_sec: 1e15, engines: 8, engine_hz: 1e9 },
+            1 << 20,
+        );
+        let last_slow = *slow.pipeline_ready.last().unwrap();
+        let last_fast = *fast.pipeline_ready.last().unwrap();
+        let speedup = last_slow as f64 / last_fast as f64;
+        assert!(speedup > 7.0 && speedup <= 8.01, "speedup {speedup}");
+    }
+
+    #[test]
+    fn regex_early_termination_counts_cycles() {
+        let dfa = crate::operators::redfa::compile_regex("ab", 32).unwrap();
+        assert_eq!(regex_row_cycles(&dfa, b"abxxxx"), 2); // matched at char 2
+        assert_eq!(regex_row_cycles(&dfa, b"xxxxab"), 6);
+        assert_eq!(regex_row_cycles(&dfa, b"xxxxxx"), 6); // no match: full walk
+    }
+}

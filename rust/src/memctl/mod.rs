@@ -1,0 +1,29 @@
+//! The smart memory controller (paper Fig. 3/4): the FPGA-side
+//! application that terminates ECI requests and serves operator results
+//! straight into the CPU's LLC.
+//!
+//! Functional results come from [`crate::operators`] (computed through
+//! the AOT XLA kernels — execution-driven, every byte checkable); this
+//! module supplies the *service/timing* models:
+//!
+//! * [`FifoServer`] — the SELECT/regex result FIFO: a fully-pipelined
+//!   table scan whose progress is bounded by FPGA DRAM bandwidth and
+//!   engine throughput, with finite-FIFO backpressure; multiple cores
+//!   read the FIFO concurrently and receive results first-come
+//!   first-served (§5.3.1).
+//! * [`KvsService`] — the Fig. 4 multi-engine pointer-chase pool: a
+//!   dispatcher fans requests out to N engines, each performing dependent
+//!   DRAM granule accesses (512-bit interface, §5.3.2).
+//! * [`ComputeRegion`] — the §5.7 temporal-locality server: an
+//!   addressable result region where every miss pays the full recompute
+//!   cost.
+//! * [`ConfigBlock`] — the off-critical-path config module (query
+//!   parameters, regex upload) accessed over the ECI I/O VCs.
+
+pub mod config_block;
+pub mod fifo;
+pub mod kvs_service;
+
+pub use config_block::ConfigBlock;
+pub use fifo::{regex_row_cycles, FifoServer, ScanTiming};
+pub use kvs_service::{ComputeRegion, KvsService};

@@ -1,0 +1,14 @@
+//! The three near-memory operators the paper offloads (§5.4–§5.6), their
+//! CPU baselines, the workload generators, and the runtime regex->DFA
+//! compiler. Functional datapaths live here (execution-driven, checkable
+//! results); the timing models are applied by [`crate::memctl`] and
+//! [`crate::machine`].
+
+pub mod kvs;
+pub mod redfa;
+pub mod regex_op;
+pub mod select;
+pub mod table;
+
+pub use redfa::{compile_regex, Dfa};
+pub use table::{build_kvs, build_table, select_params, KvsLayout, KvsSpec, TableSpec};

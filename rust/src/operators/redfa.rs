@@ -1,0 +1,477 @@
+//! Regex -> DFA compiler (Rust mirror of `python/compile/redfa.py`).
+//!
+//! The FPGA regex operator needs per-pattern DFA tensors at *runtime*
+//! (patterns arrive with queries; the AOT kernel takes the transition
+//! matrices as inputs precisely so one artifact serves every pattern).
+//! This compiler produces exactly the same DFAs as the Python one — same
+//! parser, same Thompson construction, same subset construction with an
+//! absorbing match sink — so build-time (Python-tested) and run-time
+//! (Rust) semantics coincide; `tests/cross_dfa.rs` pins the equivalence
+//! against the `regex` crate.
+//!
+//! Search semantics: the start state self-loops on every byte (".*"
+//! prefix) and accept states absorb (".*" suffix), so running the DFA
+//! over the whole fixed-length field answers "contains a match".
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const ALPHABET: usize = 256;
+
+// ---------------------------------------------------------------------------
+// AST + parser
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Ast {
+    Empty,
+    Class(Vec<bool>), // 256 flags
+    Cat(Vec<Ast>),
+    Alt(Vec<Ast>),
+    Star(Box<Ast>),
+    Plus(Box<Ast>),
+    Opt(Box<Ast>),
+}
+
+struct Parser<'a> {
+    p: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.p.get(self.i).copied()
+    }
+    fn take(&mut self) -> Option<u8> {
+        let c = self.peek();
+        self.i += 1;
+        c
+    }
+
+    fn parse(&mut self) -> Result<Ast> {
+        let node = self.alternation()?;
+        if self.peek().is_some() {
+            bail!("unexpected {:?} at {}", self.peek().unwrap() as char, self.i);
+        }
+        Ok(node)
+    }
+
+    fn alternation(&mut self) -> Result<Ast> {
+        let mut branches = vec![self.concat()?];
+        while self.peek() == Some(b'|') {
+            self.take();
+            branches.push(self.concat()?);
+        }
+        Ok(if branches.len() > 1 { Ast::Alt(branches) } else { branches.pop().unwrap() })
+    }
+
+    fn concat(&mut self) -> Result<Ast> {
+        let mut parts = Vec::new();
+        while !matches!(self.peek(), None | Some(b'|') | Some(b')')) {
+            parts.push(self.repeat()?);
+        }
+        Ok(match parts.len() {
+            0 => Ast::Empty,
+            1 => parts.pop().unwrap(),
+            _ => Ast::Cat(parts),
+        })
+    }
+
+    fn repeat(&mut self) -> Result<Ast> {
+        let mut node = self.atom()?;
+        while let Some(op) = self.peek() {
+            node = match op {
+                b'*' => Ast::Star(Box::new(node)),
+                b'+' => Ast::Plus(Box::new(node)),
+                b'?' => Ast::Opt(Box::new(node)),
+                _ => break,
+            };
+            self.take();
+        }
+        Ok(node)
+    }
+
+    fn atom(&mut self) -> Result<Ast> {
+        let Some(c) = self.take() else { bail!("unexpected end of pattern") };
+        match c {
+            b'(' => {
+                let node = self.alternation()?;
+                if self.take() != Some(b')') {
+                    bail!("unbalanced parenthesis");
+                }
+                Ok(node)
+            }
+            b'[' => Ok(Ast::Class(self.char_class()?)),
+            b'.' => Ok(Ast::Class(vec![true; ALPHABET])),
+            b'\\' => Ok(Ast::Class(escape_class(self.take())?)),
+            b'*' | b'+' | b'?' | b')' | b'|' => bail!("misplaced {:?}", c as char),
+            c => {
+                let mut f = vec![false; ALPHABET];
+                f[c as usize] = true;
+                Ok(Ast::Class(f))
+            }
+        }
+    }
+
+    fn char_class(&mut self) -> Result<Vec<bool>> {
+        let mut negate = false;
+        if self.peek() == Some(b'^') {
+            self.take();
+            negate = true;
+        }
+        let mut flags = vec![false; ALPHABET];
+        let mut first = true;
+        loop {
+            let Some(c) = self.take() else { bail!("unterminated character class") };
+            if c == b']' && !first {
+                break;
+            }
+            first = false;
+            if c == b'\\' {
+                for (i, f) in escape_class(self.take())?.iter().enumerate() {
+                    flags[i] |= f;
+                }
+                continue;
+            }
+            if self.peek() == Some(b'-') && !matches!(self.p.get(self.i + 1), None | Some(b']')) {
+                self.take(); // '-'
+                let hi = self.take().unwrap();
+                for x in c..=hi {
+                    flags[x as usize] = true;
+                }
+            } else {
+                flags[c as usize] = true;
+            }
+        }
+        if negate {
+            for f in flags.iter_mut() {
+                *f = !*f;
+            }
+        }
+        Ok(flags)
+    }
+}
+
+fn escape_class(c: Option<u8>) -> Result<Vec<bool>> {
+    let Some(c) = c else { bail!("dangling escape") };
+    let mut f = vec![false; ALPHABET];
+    match c {
+        b'd' => (b'0'..=b'9').for_each(|x| f[x as usize] = true),
+        b'w' => {
+            (b'a'..=b'z').for_each(|x| f[x as usize] = true);
+            (b'A'..=b'Z').for_each(|x| f[x as usize] = true);
+            (b'0'..=b'9').for_each(|x| f[x as usize] = true);
+            f[b'_' as usize] = true;
+        }
+        b's' => b" \t\r\n\x0c\x0b".iter().for_each(|&x| f[x as usize] = true),
+        c => f[c as usize] = true,
+    }
+    Ok(f)
+}
+
+// ---------------------------------------------------------------------------
+// Thompson NFA
+// ---------------------------------------------------------------------------
+
+struct Nfa {
+    eps: Vec<Vec<usize>>,
+    edges: Vec<Vec<(usize, usize)>>, // state -> [(char, next)] (sparse)
+}
+
+impl Nfa {
+    fn new_state(&mut self) -> usize {
+        self.eps.push(Vec::new());
+        self.edges.push(Vec::new());
+        self.eps.len() - 1
+    }
+
+    fn build(&mut self, node: &Ast) -> (usize, usize) {
+        match node {
+            Ast::Empty => {
+                let s = self.new_state();
+                (s, s)
+            }
+            Ast::Class(flags) => {
+                let a = self.new_state();
+                let b = self.new_state();
+                for (c, &on) in flags.iter().enumerate() {
+                    if on {
+                        self.edges[a].push((c, b));
+                    }
+                }
+                (a, b)
+            }
+            Ast::Cat(parts) => {
+                let (first_in, mut prev_out) = self.build(&parts[0]);
+                for part in &parts[1..] {
+                    let (pin, pout) = self.build(part);
+                    self.eps[prev_out].push(pin);
+                    prev_out = pout;
+                }
+                (first_in, prev_out)
+            }
+            Ast::Alt(branches) => {
+                let a = self.new_state();
+                let b = self.new_state();
+                for branch in branches {
+                    let (bin, bout) = self.build(branch);
+                    self.eps[a].push(bin);
+                    self.eps[bout].push(b);
+                }
+                (a, b)
+            }
+            Ast::Star(inner) | Ast::Plus(inner) | Ast::Opt(inner) => {
+                let (iin, iout) = self.build(inner);
+                let a = self.new_state();
+                let b = self.new_state();
+                self.eps[a].push(iin);
+                self.eps[iout].push(b);
+                if matches!(node, Ast::Star(_) | Ast::Opt(_)) {
+                    self.eps[a].push(b);
+                }
+                if matches!(node, Ast::Star(_) | Ast::Plus(_)) {
+                    self.eps[iout].push(iin);
+                }
+                (a, b)
+            }
+        }
+    }
+
+    fn eps_closure(&self, states: &mut Vec<usize>) {
+        let mut seen: Vec<bool> = vec![false; self.eps.len()];
+        for &s in states.iter() {
+            seen[s] = true;
+        }
+        let mut stack = states.clone();
+        while let Some(s) = stack.pop() {
+            for &t in &self.eps[s] {
+                if !seen[t] {
+                    seen[t] = true;
+                    states.push(t);
+                    stack.push(t);
+                }
+            }
+        }
+        states.sort_unstable();
+        states.dedup();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DFA
+// ---------------------------------------------------------------------------
+
+/// Dense search-semantics DFA; state 0 initial.
+#[derive(Clone, Debug)]
+pub struct Dfa {
+    pub pattern: String,
+    /// `[n_states * 256]` next-state table.
+    pub table: Vec<u16>,
+    /// `[n_states]` accept flags.
+    pub accept: Vec<bool>,
+}
+
+impl Dfa {
+    pub fn n_states(&self) -> usize {
+        self.accept.len()
+    }
+
+    /// Does `data` contain a match?
+    #[inline]
+    pub fn matches(&self, data: &[u8]) -> bool {
+        let mut s = 0usize;
+        for &ch in data {
+            s = self.table[s * ALPHABET + ch as usize] as usize;
+        }
+        self.accept[s]
+    }
+
+    /// One-hot transition tensor `[256 * S * S]` f32, padded to `s` states
+    /// (the AOT kernel's fixed S); padding states self-loop.
+    pub fn onehot_tmat(&self, s: usize) -> Vec<f32> {
+        assert!(s >= self.n_states(), "DFA has {} states > padded {s}", self.n_states());
+        let mut t = vec![0f32; ALPHABET * s * s];
+        for st in 0..self.n_states() {
+            for c in 0..ALPHABET {
+                let nxt = self.table[st * ALPHABET + c] as usize;
+                t[c * s * s + st * s + nxt] = 1.0;
+            }
+        }
+        for st in self.n_states()..s {
+            for c in 0..ALPHABET {
+                t[c * s * s + st * s + st] = 1.0;
+            }
+        }
+        t
+    }
+
+    /// Accept vector `[s]` f32.
+    pub fn accept_vec(&self, s: usize) -> Vec<f32> {
+        let mut v = vec![0f32; s];
+        for (i, &a) in self.accept.iter().enumerate() {
+            v[i] = a as u32 as f32;
+        }
+        v
+    }
+}
+
+/// Compile `pattern` with at most `max_states` DFA states.
+pub fn compile_regex(pattern: &str, max_states: usize) -> Result<Dfa> {
+    let ast = Parser { p: pattern.as_bytes(), i: 0 }.parse()?;
+    let mut nfa = Nfa { eps: Vec::new(), edges: Vec::new() };
+    let (entry, exit) = nfa.build(&ast);
+    // search semantics: ".*" prefix via a self-looping start
+    let start = nfa.new_state();
+    nfa.eps[start].push(entry);
+    for c in 0..ALPHABET {
+        nfa.edges[start].push((c, start));
+    }
+
+    let mut start_set = vec![start];
+    nfa.eps_closure(&mut start_set);
+
+    let mut index: HashMap<Vec<usize>, usize> = HashMap::new();
+    index.insert(start_set.clone(), 0);
+    let mut worklist = std::collections::VecDeque::from([start_set]);
+    let mut rows: Vec<[u16; ALPHABET]> = Vec::new();
+    let mut accept: Vec<bool> = Vec::new();
+    let mut matched_sink: Option<usize> = None;
+
+    while let Some(cur) = worklist.pop_front() {
+        let cur_idx = rows.len();
+        rows.push([0u16; ALPHABET]);
+        let is_accept = cur.contains(&exit);
+        accept.push(is_accept);
+        if is_accept {
+            // absorbing accept
+            rows[cur_idx] = [cur_idx as u16; ALPHABET];
+            continue;
+        }
+        for c in 0..ALPHABET {
+            let mut nxt: Vec<usize> = Vec::new();
+            for &s in &cur {
+                for &(ec, et) in &nfa.edges[s] {
+                    if ec == c {
+                        nxt.push(et);
+                    }
+                }
+            }
+            nfa.eps_closure(&mut nxt);
+            if nxt.contains(&exit) {
+                let sink = match matched_sink {
+                    Some(s) => s,
+                    None => {
+                        let sink_set = vec![exit];
+                        let s = if let Some(&s) = index.get(&sink_set) {
+                            s
+                        } else {
+                            let s = index.len();
+                            index.insert(sink_set.clone(), s);
+                            worklist.push_back(sink_set);
+                            s
+                        };
+                        matched_sink = Some(s);
+                        s
+                    }
+                };
+                rows[cur_idx][c] = sink as u16;
+                continue;
+            }
+            let next_idx = match index.get(&nxt) {
+                Some(&i) => i,
+                None => {
+                    if index.len() >= max_states {
+                        bail!("pattern {pattern:?} needs more than {max_states} DFA states");
+                    }
+                    let i = index.len();
+                    index.insert(nxt.clone(), i);
+                    worklist.push_back(nxt);
+                    i
+                }
+            };
+            rows[cur_idx][c] = next_idx as u16;
+        }
+    }
+
+    Ok(Dfa {
+        pattern: pattern.to_string(),
+        table: rows.into_iter().flatten().collect(),
+        accept,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn search(pattern: &str, data: &[u8]) -> bool {
+        compile_regex(pattern, 32).unwrap().matches(data)
+    }
+
+    #[test]
+    fn matches_regex_crate_on_cases() {
+        let patterns = [
+            "abc", "a|b", "ab*c", "a+", "(ab)+", "a?b", "[abc]", "[a-c]x", "[^a]b", "a.c",
+            "x(y|z)*w", r"\d\d", r"\w+", "a[0-9]+b", "(a|b)(c|d)",
+        ];
+        let inputs: Vec<&[u8]> = vec![
+            b"", b"a", b"b", b"ab", b"abc", b"xabcz", b"aaab", b"a0b", b"a99b", b"xyzw",
+            b"xyyzw", b"bd", b"ac", b"12", b"hello_world", b"a c", b"zb", b"cx",
+        ];
+        for p in patterns {
+            let re = regex::bytes::Regex::new(p).unwrap();
+            for &i in &inputs {
+                assert_eq!(search(p, i), re.is_match(i), "pattern {p:?} input {i:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn search_semantics_match_anywhere() {
+        assert!(search("err+or", b"xx errror yy"));
+        assert!(!search("err+or", b"eror"));
+        assert!(search("abc", b"abc"));
+        assert!(search("abc", b"zzabczz"));
+    }
+
+    #[test]
+    fn accept_absorbing_and_padding_stochastic() {
+        let dfa = compile_regex("ab", 32).unwrap();
+        for s in 0..dfa.n_states() {
+            if dfa.accept[s] {
+                for c in 0..ALPHABET {
+                    assert_eq!(dfa.table[s * ALPHABET + c] as usize, s);
+                }
+            }
+        }
+        let t = dfa.onehot_tmat(32);
+        // every (char, state) row one-hot
+        for c in 0..ALPHABET {
+            for st in 0..32 {
+                let sum: f32 = (0..32).map(|n| t[c * 32 * 32 + st * 32 + n]).sum();
+                assert_eq!(sum, 1.0, "char {c} state {st}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_budget_enforced() {
+        assert!(compile_regex("(a|b)*a(a|b)(a|b)(a|b)(a|b)(a|b)(a|b)", 32).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_patterns() {
+        for p in ["(", ")", "a)", "[", "a**b(", "*a", "a|*"] {
+            assert!(compile_regex(p, 32).is_err(), "{p:?} should fail");
+        }
+    }
+
+    #[test]
+    fn nul_bytes_behave_like_any_byte() {
+        // fields are NUL-padded; patterns over printable chars must not
+        // match into padding accidentally
+        assert!(!search("ab", b"a\0b"));
+        assert!(search("a.b", b"a\0b")); // '.' matches NUL, like Python re
+    }
+}

@@ -1,0 +1,98 @@
+//! Regex pushdown operator (paper §5.6): functional datapath.
+//!
+//! The FPGA path evaluates the query's DFA through the AOT XLA kernel
+//! (one-hot transition-matrix products — see DESIGN.md §2); the CPU
+//! baseline walks the same DFA table scalar-wise (standing in for the
+//! paper's optimized software regex library, with the `regex` crate used
+//! in tests as an independent oracle).
+
+use crate::agents::dram::MemStore;
+use crate::proto::messages::LineAddr;
+use crate::runtime::{Runtime, BATCH, DFA_STATES, STR_LEN};
+
+use super::redfa::Dfa;
+use super::table::row_str;
+
+/// Scan `[first, first+rows)` with the XLA kernel.
+pub fn fpga_regex_scan(
+    rt: &mut Runtime,
+    store: &MemStore,
+    first: LineAddr,
+    rows: u64,
+    dfa: &Dfa,
+) -> anyhow::Result<Vec<u64>> {
+    let tmat = dfa.onehot_tmat(DFA_STATES);
+    let accept = dfa.accept_vec(DFA_STATES);
+    rt.set_dfa(&tmat, &accept)?;
+    let mut matches = Vec::new();
+    let mut chars = vec![0i32; BATCH * STR_LEN];
+    let mut base = 0u64;
+    while base < rows {
+        let n = (rows - base).min(BATCH as u64) as usize;
+        for r in 0..n {
+            let line = store.read_line(LineAddr(first.0 + base + r as u64));
+            let s = row_str(&line);
+            for (j, &c) in s.iter().enumerate() {
+                chars[r * STR_LEN + j] = c as i32;
+            }
+        }
+        for r in n..BATCH {
+            // padding rows: all-NUL strings; only all-matching patterns
+            // would hit, and those are filtered below by taking only n
+            chars[r * STR_LEN..(r + 1) * STR_LEN].fill(0);
+        }
+        let (mask, _count) = rt.regex_batch(&chars)?;
+        for (r, &m) in mask.iter().enumerate().take(n) {
+            if m == 1 {
+                matches.push(base + r as u64);
+            }
+        }
+        base += n as u64;
+    }
+    Ok(matches)
+}
+
+/// CPU baseline: scalar DFA walk over each row's string field.
+pub fn cpu_regex_scan(store: &MemStore, first: LineAddr, rows: u64, dfa: &Dfa) -> Vec<u64> {
+    let mut matches = Vec::new();
+    for i in 0..rows {
+        let line = store.read_line(LineAddr(first.0 + i));
+        if dfa.matches(row_str(&line)) {
+            matches.push(i);
+        }
+    }
+    matches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::redfa::compile_regex;
+    use crate::operators::table::{build_table, TableSpec};
+    use crate::proto::messages::LINE_BYTES;
+
+    #[test]
+    fn fpga_cpu_and_regex_crate_agree() {
+        let dir = crate::runtime::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::load_default().unwrap();
+        let rows = 6_000u64;
+        let spec = TableSpec::new(rows, 0.08);
+        let mut store = MemStore::new(LineAddr(0), rows as usize * LINE_BYTES);
+        build_table(&spec, &mut store);
+        let dfa = compile_regex(&spec.needle, DFA_STATES).unwrap();
+        let fpga = fpga_regex_scan(&mut rt, &store, LineAddr(0), rows, &dfa).unwrap();
+        let cpu = cpu_regex_scan(&store, LineAddr(0), rows, &dfa);
+        assert_eq!(fpga, cpu);
+        assert_eq!(fpga.len(), (rows as f64 * 0.08).round() as usize);
+        // independent oracle
+        let re = regex::bytes::Regex::new(&spec.needle).unwrap();
+        for i in 0..rows {
+            let line = store.read_line(LineAddr(i));
+            assert_eq!(re.is_match(row_str(&line)), fpga.binary_search(&i).is_ok(), "row {i}");
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! SELECT pushdown operator (paper §5.4): functional datapath.
+//!
+//! The FPGA datapath ("data flows from FPGA DRAM through the arithmetic
+//! units into the CPU LLC") is computed by the AOT-compiled XLA kernel in
+//! batches of 4096 rows; the CPU baseline is the scalar scan. Timing is
+//! applied by the machine/memctl models — this module computes *what* the
+//! operator produces, execution-driven, so every delivered row is
+//! checkable.
+
+use crate::agents::dram::MemStore;
+use crate::proto::messages::LineAddr;
+use crate::runtime::{Runtime, BATCH, ROW_WORDS};
+
+use super::table::row_ab;
+
+/// Scan `[first, first+rows)` with the XLA kernel; returns indices of
+/// matching rows (relative to `first`).
+pub fn fpga_select_scan(
+    rt: &mut Runtime,
+    store: &MemStore,
+    first: LineAddr,
+    rows: u64,
+    x: f32,
+    y: f32,
+) -> anyhow::Result<Vec<u64>> {
+    let mut matches = Vec::new();
+    let mut buf = vec![0f32; BATCH * ROW_WORDS];
+    let mut base = 0u64;
+    while base < rows {
+        let n = (rows - base).min(BATCH as u64) as usize;
+        for r in 0..n {
+            let line = store.read_line(LineAddr(first.0 + base + r as u64));
+            for w in 0..ROW_WORDS {
+                buf[r * ROW_WORDS + w] =
+                    f32::from_le_bytes(line[w * 4..w * 4 + 4].try_into().unwrap());
+            }
+        }
+        // pad the tail so padded rows never match (a = -inf fails a > X)
+        for r in n..BATCH {
+            buf[r * ROW_WORDS] = f32::NEG_INFINITY;
+            buf[r * ROW_WORDS + 1] = f32::INFINITY;
+        }
+        let (mask, _count) = rt.select(&buf, x, y)?;
+        for (r, &m) in mask.iter().enumerate().take(n) {
+            if m == 1 {
+                matches.push(base + r as u64);
+            }
+        }
+        base += n as u64;
+    }
+    Ok(matches)
+}
+
+/// CPU baseline: scalar predicate scan (what the CPU-only curves of
+/// Fig. 5 execute).
+pub fn cpu_select_scan(
+    store: &MemStore,
+    first: LineAddr,
+    rows: u64,
+    x: f32,
+    y: f32,
+) -> Vec<u64> {
+    let mut matches = Vec::new();
+    for i in 0..rows {
+        let line = store.read_line(LineAddr(first.0 + i));
+        let (a, b) = row_ab(&line);
+        if a > x && b < y {
+            matches.push(i);
+        }
+    }
+    matches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::table::{build_table, select_params, TableSpec};
+    use crate::proto::messages::LINE_BYTES;
+
+    #[test]
+    fn fpga_and_cpu_scans_agree_exactly() {
+        let dir = crate::runtime::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::load_default().unwrap();
+        let rows = 10_000u64; // exercises batch padding (not a multiple of 4096)
+        let spec = TableSpec::new(rows, 0.13);
+        let mut store = MemStore::new(LineAddr(64), rows as usize * LINE_BYTES);
+        build_table(&spec, &mut store);
+        let (x, y) = select_params(0.13);
+        let fpga = fpga_select_scan(&mut rt, &store, LineAddr(64), rows, x, y).unwrap();
+        let cpu = cpu_select_scan(&store, LineAddr(64), rows, x, y);
+        assert_eq!(fpga, cpu);
+        let sel = fpga.len() as f64 / rows as f64;
+        assert!((sel - 0.13).abs() < 0.02, "selectivity {sel}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Workload generators: the row table (SELECT + regex, §5.4/§5.6) and the
+//! key-value store (§5.5), laid out in simulated FPGA DRAM exactly as the
+//! operators and the AOT kernels expect.
+//!
+//! ## Row ABI (shared with `python/compile/kernels/ref.py`)
+//!
+//! A row is one 128-byte cache line:
+//!
+//! ```text
+//! bytes   0..4    f32 a        (SELECT attribute)
+//! bytes   4..8    f32 b        (SELECT attribute)
+//! bytes   8..64   payload (deterministic filler)
+//! bytes  64..126  62-byte string field (regex operator)
+//! bytes 126..128  pad (zero)
+//! ```
+//!
+//! ## KVS entry ABI
+//!
+//! One 128-byte line per entry: `u64 key | 112 B value | u64 next`
+//! (`next` = line address of the chain successor, `NULL_PTR` ends the
+//! chain). Buckets are a dense array of 8-byte head pointers at the start
+//! of the region (16 per line).
+
+use crate::proto::messages::{LineAddr, LINE_BYTES};
+use crate::runtime::hash_bucket_ref;
+use crate::sim::rng::Rng;
+
+use crate::agents::dram::MemStore;
+
+/// Paper table size: 5,120,000 rows x 128 B = 655 MB (§5.4).
+pub const PAPER_ROWS: u64 = 5_120_000;
+
+pub const STR_OFFSET: usize = 64;
+pub const STR_LEN: usize = 62;
+
+/// Table generation parameters.
+#[derive(Clone, Debug)]
+pub struct TableSpec {
+    pub rows: u64,
+    /// Fraction of rows satisfying the SELECT predicate (`a > X AND b < Y`
+    /// with the canonical X=0.5, Y=0.5 — see `select_params`).
+    pub select_selectivity: f64,
+    /// Fraction of rows whose string field contains the planted regex
+    /// needle.
+    pub regex_selectivity: f64,
+    /// The needle planted for the regex experiments.
+    pub needle: String,
+    pub seed: u64,
+}
+
+impl TableSpec {
+    pub fn new(rows: u64, selectivity: f64) -> TableSpec {
+        TableSpec {
+            rows,
+            select_selectivity: selectivity,
+            regex_selectivity: selectivity,
+            needle: "erro+r".into(),
+            seed: 0xEC1,
+        }
+    }
+    /// A planted string that `needle`'s canonical pattern matches.
+    pub fn planted(&self) -> &'static [u8] {
+        b"xjq errooor kz"
+    }
+}
+
+/// Canonical SELECT parameters: with `a`, `b` uniform in [0,1), selectivity
+/// s is achieved by a > X(s), b unconstrained-ish: we use
+/// X = 1 - sqrt(s), Y = sqrt(s) so P(a>X) * P(b<Y) = s.
+pub fn select_params(selectivity: f64) -> (f32, f32) {
+    let r = selectivity.sqrt();
+    ((1.0 - r) as f32, r as f32)
+}
+
+/// Build the table in `store` starting at its base. Rows are generated so
+/// the *realized* selectivities equal the spec's (deterministic
+/// assignment, shuffled), not merely in expectation.
+pub fn build_table(spec: &TableSpec, store: &mut MemStore) {
+    assert!(store.len_lines() >= spec.rows, "store too small for table");
+    let mut rng = Rng::new(spec.seed);
+    let (x, y) = select_params(spec.select_selectivity);
+
+    // exact selectivity: first k rows match, then shuffle the flags
+    let k_sel = (spec.rows as f64 * spec.select_selectivity).round() as u64;
+    let k_re = (spec.rows as f64 * spec.regex_selectivity).round() as u64;
+    let mut sel_flags: Vec<bool> = (0..spec.rows).map(|i| i < k_sel).collect();
+    let mut re_flags: Vec<bool> = (0..spec.rows).map(|i| i < k_re).collect();
+    rng.shuffle(&mut sel_flags);
+    rng.shuffle(&mut re_flags);
+
+    let base = store.base();
+    let bytes = store.bytes_mut();
+    let alphabet = b"abcdefghijklmnopqrstuvwxyz 0123456789";
+    for i in 0..spec.rows {
+        let off = ((LineAddr(base.0 + i).0 - base.0) as usize) * LINE_BYTES;
+        let row = &mut bytes[off..off + LINE_BYTES];
+        // SELECT attributes
+        let (a, b) = if sel_flags[i as usize] {
+            // a > x, b < y
+            (
+                x + rng.f64() as f32 * (1.0 - x),
+                rng.f64() as f32 * y,
+            )
+        } else {
+            // miss: force a <= x (uniform below the threshold)
+            (rng.f64() as f32 * x, rng.f64() as f32)
+        };
+        row[0..4].copy_from_slice(&a.to_le_bytes());
+        row[4..8].copy_from_slice(&b.to_le_bytes());
+        // filler payload
+        for w in 2..16 {
+            let v = (i as u32).wrapping_mul(2654435761).wrapping_add(w as u32);
+            row[w * 4..w * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        // string field
+        let s = &mut row[STR_OFFSET..STR_OFFSET + STR_LEN];
+        for c in s.iter_mut() {
+            *c = *rng.choose(alphabet);
+        }
+        if re_flags[i as usize] {
+            let needle = b"xjq errooor kz";
+            let pos = rng.below((STR_LEN - needle.len()) as u64 + 1) as usize;
+            s[pos..pos + needle.len()].copy_from_slice(needle);
+        } else {
+            // ensure no accidental match: the needle family requires
+            // "err"; break every occurrence of "rr"
+            for j in 0..STR_LEN - 1 {
+                if s[j] == b'r' && s[j + 1] == b'r' {
+                    s[j + 1] = b'q';
+                }
+            }
+        }
+        row[126] = 0;
+        row[127] = 0;
+    }
+}
+
+/// Read row attributes (CPU-baseline scan path).
+#[inline]
+pub fn row_ab(line: &[u8; LINE_BYTES]) -> (f32, f32) {
+    (
+        f32::from_le_bytes(line[0..4].try_into().unwrap()),
+        f32::from_le_bytes(line[4..8].try_into().unwrap()),
+    )
+}
+
+#[inline]
+pub fn row_str(line: &[u8; LINE_BYTES]) -> &[u8] {
+    &line[STR_OFFSET..STR_OFFSET + STR_LEN]
+}
+
+// ---------------------------------------------------------------------------
+// KVS
+// ---------------------------------------------------------------------------
+
+pub const NULL_PTR: u64 = u64::MAX;
+
+/// KVS build parameters (paper §5.5: 5,120,000 entries, uniform buckets;
+/// chain length controlled by the bucket count).
+#[derive(Clone, Debug)]
+pub struct KvsSpec {
+    pub entries: u64,
+    /// Chain length (entries / buckets); buckets forced to a power of two.
+    pub chain_len: u64,
+    pub seed: u64,
+}
+
+/// The built KVS: layout info + the key set for lookups.
+#[derive(Clone, Debug)]
+pub struct KvsLayout {
+    pub base: LineAddr,
+    pub n_buckets: u64,
+    pub bucket_mask: i32,
+    /// first entry line
+    pub entries_base: LineAddr,
+    pub entries: u64,
+    pub chain_len: u64,
+    /// For each bucket, the key of the LAST entry in its chain (the
+    /// paper searches for the last key to force a known-length chase).
+    pub tail_keys: Vec<i32>,
+}
+
+/// Build a separate-chaining hash table. Entries are assigned to buckets
+/// by the *same* multiplicative hash the kernel computes, guaranteeing
+/// agreement between the dispatcher and the data structure. Keys are
+/// chosen per bucket (by rejection) so every bucket holds exactly
+/// `chain_len` entries — the paper's "uniformly distributed" fill with a
+/// controlled chain length.
+pub fn build_kvs(spec: &KvsSpec, store: &mut MemStore) -> KvsLayout {
+    let n_buckets = (spec.entries / spec.chain_len).next_power_of_two() / 2;
+    let n_buckets = n_buckets.max(1);
+    let bucket_mask = (n_buckets - 1) as i32;
+    let bucket_lines = n_buckets.div_ceil(16);
+    let total_entries = n_buckets * spec.chain_len;
+    assert!(
+        store.len_lines() >= bucket_lines + total_entries,
+        "store too small: need {} lines",
+        bucket_lines + total_entries
+    );
+
+    let base = store.base();
+    let entries_base = LineAddr(base.0 + bucket_lines);
+    let mut rng = Rng::new(spec.seed);
+    let mut tail_keys = vec![0i32; n_buckets as usize];
+    let mut next_entry = 0u64;
+
+    // Draw-and-place: generate random keys and drop each into its natural
+    // bucket until every bucket holds exactly `chain_len` keys (expected
+    // O(total + B log B) draws; per-bucket rejection sampling would be
+    // O(B) per key). Duplicate keys are rejected via the fill state: a
+    // duplicate lands in a full... no — dedup with a HashSet, cheap at
+    // this scale.
+    let mut bucket_keys: Vec<Vec<i32>> = vec![Vec::with_capacity(spec.chain_len as usize); n_buckets as usize];
+    let mut used_keys = std::collections::HashSet::new();
+    let mut unfilled = n_buckets;
+    while unfilled > 0 {
+        let k = rng.next_u32() as i32;
+        let b = hash_bucket_ref(k, bucket_mask) as usize;
+        if bucket_keys[b].len() >= spec.chain_len as usize || !used_keys.insert(k) {
+            continue;
+        }
+        bucket_keys[b].push(k);
+        if bucket_keys[b].len() == spec.chain_len as usize {
+            unfilled -= 1;
+        }
+    }
+
+    for bucket in 0..n_buckets {
+        let mut head = NULL_PTR;
+        for (pos, &key) in bucket_keys[bucket as usize].iter().enumerate() {
+            let line_no = entries_base.0 + next_entry;
+            next_entry += 1;
+            let mut line = [0u8; LINE_BYTES];
+            line[0..8].copy_from_slice(&(key as u32 as u64).to_le_bytes());
+            for (j, b) in line[8..120].iter_mut().enumerate() {
+                *b = (key as u32).wrapping_add(j as u32) as u8;
+            }
+            line[120..128].copy_from_slice(&head.to_le_bytes());
+            store.write_line(LineAddr(line_no), &line);
+            head = line_no;
+            // entries are prepended: the first inserted ends up at the tail
+            if pos == 0 {
+                tail_keys[bucket as usize] = key;
+            }
+        }
+        // write head pointer into the bucket array
+        let bline = base.0 + bucket / 16;
+        let boff = ((bucket % 16) * 8) as usize;
+        let mut l = store.read_line(LineAddr(bline));
+        l[boff..boff + 8].copy_from_slice(&head.to_le_bytes());
+        store.write_line(LineAddr(bline), &l);
+    }
+
+    KvsLayout {
+        base,
+        n_buckets,
+        bucket_mask,
+        entries_base,
+        entries: total_entries,
+        chain_len: spec.chain_len,
+        tail_keys,
+    }
+}
+
+/// Walk a chain for `key` (the functional lookup both the FPGA engines
+/// and the CPU baseline perform). Returns (value-line-address, hops).
+pub fn kvs_lookup(store: &MemStore, layout: &KvsLayout, key: i32) -> (Option<LineAddr>, u64) {
+    let bucket = hash_bucket_ref(key, layout.bucket_mask) as u64;
+    let bline = layout.base.0 + bucket / 16;
+    let boff = ((bucket % 16) * 8) as usize;
+    let l = store.read_line(LineAddr(bline));
+    let mut ptr = u64::from_le_bytes(l[boff..boff + 8].try_into().unwrap());
+    let mut hops = 1; // the bucket read
+    while ptr != NULL_PTR {
+        let e = store.read_line(LineAddr(ptr));
+        hops += 1;
+        let k = u64::from_le_bytes(e[0..8].try_into().unwrap()) as u32 as i32;
+        if k == key {
+            return (Some(LineAddr(ptr)), hops);
+        }
+        ptr = u64::from_le_bytes(e[120..128].try_into().unwrap());
+    }
+    (None, hops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_realizes_exact_select_selectivity() {
+        let rows = 10_000;
+        let spec = TableSpec::new(rows, 0.10);
+        let mut store = MemStore::new(LineAddr(1 << 20), (rows as usize) * LINE_BYTES);
+        build_table(&spec, &mut store);
+        let (x, y) = select_params(0.10);
+        let mut hits = 0;
+        for i in 0..rows {
+            let l = store.read_line(LineAddr((1 << 20) + i));
+            let (a, b) = row_ab(&l);
+            if a > x && b < y {
+                hits += 1;
+            }
+        }
+        let realized = hits as f64 / rows as f64;
+        assert!(
+            (realized - 0.10).abs() < 0.02,
+            "realized select selectivity {realized}"
+        );
+    }
+
+    #[test]
+    fn table_realizes_regex_selectivity_exactly() {
+        let rows = 5_000;
+        let spec = TableSpec::new(rows, 0.25);
+        let mut store = MemStore::new(LineAddr(0), (rows as usize) * LINE_BYTES);
+        build_table(&spec, &mut store);
+        let dfa = crate::operators::redfa::compile_regex(&spec.needle, 32).unwrap();
+        let mut hits = 0;
+        for i in 0..rows {
+            let l = store.read_line(LineAddr(i));
+            if dfa.matches(row_str(&l)) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, (rows as f64 * 0.25).round() as u64, "regex selectivity must be exact");
+    }
+
+    #[test]
+    fn kvs_chains_have_exact_length_and_tails_resolve() {
+        let spec = KvsSpec { entries: 4096, chain_len: 4, seed: 7 };
+        let mut store = MemStore::new(LineAddr(0), 3 * 4096 * LINE_BYTES);
+        let layout = build_kvs(&spec, &mut store);
+        assert!(layout.n_buckets.is_power_of_two());
+        // every tail key is found after exactly chain_len entry hops
+        for (bucket, &key) in layout.tail_keys.iter().enumerate().step_by(17) {
+            let (found, hops) = kvs_lookup(&store, &layout, key);
+            assert!(found.is_some(), "bucket {bucket} tail missing");
+            // hops = 1 bucket read + chain_len entries
+            assert_eq!(hops, 1 + layout.chain_len, "bucket {bucket}");
+        }
+    }
+
+    #[test]
+    fn kvs_missing_key_walks_whole_chain() {
+        let spec = KvsSpec { entries: 1024, chain_len: 2, seed: 3 };
+        let mut store = MemStore::new(LineAddr(0), 2048 * LINE_BYTES);
+        let layout = build_kvs(&spec, &mut store);
+        // find a key that's not in the table
+        let mut k = 12345i32;
+        while layout.tail_keys.contains(&k) {
+            k += 1;
+        }
+        let (found, hops) = kvs_lookup(&store, &layout, k);
+        assert!(found.is_none());
+        assert_eq!(hops, 1 + layout.chain_len);
+    }
+
+    #[test]
+    fn select_params_hit_target_in_expectation() {
+        for s in [0.01, 0.1, 1.0] {
+            let (x, y) = select_params(s);
+            let p = (1.0 - x as f64) * y as f64;
+            assert!((p - s).abs() < 1e-6, "s={s} p={p}");
+        }
+    }
+}

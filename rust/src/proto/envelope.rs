@@ -1,0 +1,371 @@
+//! The protocol *envelope*: the paper's seven requirements and two
+//! recommendations (§3.3), as executable checks over a transition table.
+//!
+//! The paper derives these rules from the distance order and uses them to
+//! argue that subsets (§3.4) remain interoperable. Here they are machine-
+//! checkable: [`check_envelope`] validates any transition table (the
+//! reference table, a subset, or a user extension) and returns every
+//! violation found. The reference table must pass with zero violations
+//! (asserted in tests); mutation tests in `rust/tests/` assert that
+//! deliberately-broken tables are caught.
+
+use std::fmt;
+
+use super::messages::CohOp;
+use super::states::{indistinguishable, DistanceOrder, Joint, Node};
+use super::transitions::{signalled_ops_at, Tag, Transition};
+
+/// A violation of one of the envelope requirements.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Requirement number (1..=7) from §3.3.
+    pub requirement: u8,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "R{}: {}", self.requirement, self.detail)
+    }
+}
+
+/// Check a transition table against requirements 1–7.
+pub fn check_envelope(table: &[Transition]) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let ord = DistanceOrder::new();
+
+    // R1: transitions only between order-related states (up or down),
+    //     except the sanctioned transition 10.
+    for tr in table {
+        for &o in &tr.outcomes {
+            if tr.from == o {
+                v.push(Violation {
+                    requirement: 1,
+                    detail: format!("self-loop at {} ({})", tr.from, tr.note),
+                });
+                continue;
+            }
+            if !ord.related(tr.from, o) && !matches!(tr.tag, Tag::Numbered(10)) {
+                v.push(Violation {
+                    requirement: 1,
+                    detail: format!(
+                        "transition {} -> {} between unrelated states ({})",
+                        tr.from, o, tr.note
+                    ),
+                });
+            }
+        }
+    }
+
+    // R2: any transition between states distinguishable to the *other*
+    //     node must be signalled; silent transitions must stay within the
+    //     partner's indistinguishability class.
+    for tr in table {
+        if tr.op.is_none() {
+            let partner = tr.by.other();
+            for &o in &tr.outcomes {
+                if !indistinguishable(partner, tr.from, o) {
+                    v.push(Violation {
+                        requirement: 2,
+                        detail: format!(
+                            "silent transition {} -> {} is visible to {:?} ({})",
+                            tr.from, o, partner, tr.note
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // R3: moving from a dirty to a clean *remote* state must signal home.
+    //     (I.e. IE -> IM is one-way silent; the only downgrade path from
+    //     remote-dirty is a signalled one.)
+    for tr in table {
+        if tr.op.is_none() && tr.by == Node::Remote {
+            for &o in &tr.outcomes {
+                if tr.from.remote.dirty() && !o.remote.dirty() {
+                    v.push(Violation {
+                        requirement: 3,
+                        detail: format!("silent remote dirty->clean {} -> {} ({})", tr.from, o, tr.note),
+                    });
+                }
+            }
+        }
+    }
+
+    // R4: where the remote holds a clean shared copy, the home's dirtiness
+    //     must be invisible: any op available in one of the remote's *S
+    //     states must yield remotely-indistinguishable outcome sets across
+    //     all *S states. Structurally: outcomes of transitions that differ
+    //     only in home state must agree on the remote component.
+    //     We check the IS/SS pair (the *S class).
+    for op in CohOp::ALL {
+        let r_is = remote_outcomes(table, op, Joint::IS);
+        let r_ss = remote_outcomes(table, op, Joint::SS);
+        if let (Some(a), Some(b)) = (&r_is, &r_ss) {
+            if a != b {
+                v.push(Violation {
+                    requirement: 4,
+                    detail: format!(
+                        "{op:?} from IS yields remote states {a:?} but from SS yields {b:?} — home state leaks"
+                    ),
+                });
+            }
+        }
+    }
+
+    // R6: any op a node may request in a state must be available in every
+    //     state indistinguishable *to that node* (silent moves of the
+    //     partner must not invalidate a node's legal requests).
+    for node in [Node::Home, Node::Remote] {
+        for a in Joint::ALL {
+            for b in Joint::ALL {
+                if a != b && indistinguishable(node, a, b) {
+                    let ops_a = signalled_ops_at(table, node, a);
+                    let ops_b = signalled_ops_at(table, node, b);
+                    for op in &ops_a {
+                        if !ops_b.contains(op) {
+                            v.push(Violation {
+                                requirement: 6,
+                                detail: format!(
+                                    "{node:?} may signal {op:?} in {a} but not in indistinguishable {b}"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // R7: a node must accept in state j any message it must accept in any
+    //     state indistinguishable to it. Receiving-side dual of R6: for
+    //     each op initiated by the partner, the set of source states with
+    //     that op must be closed under the *receiver's* indistinguishability.
+    for node in [Node::Home, Node::Remote] {
+        let receiver = node.other();
+        for op in CohOp::ALL {
+            let sources: Vec<Joint> = table
+                .iter()
+                .filter(|t| t.by == node && t.op == Some(op))
+                .map(|t| t.from)
+                .collect();
+            if sources.is_empty() {
+                continue;
+            }
+            for &s in &sources {
+                for j in Joint::ALL {
+                    if indistinguishable(receiver, s, j)
+                        && j.is_valid()
+                        && reachable_as_source_of(table, node, j)
+                        && !sources.contains(&j)
+                    {
+                        v.push(Violation {
+                            requirement: 7,
+                            detail: format!(
+                                "{receiver:?} must handle {op:?} in {j} (indistinguishable from {s}) but the table has no row"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    v
+}
+
+/// R5 operates between *implementations*: an implementation must not signal
+/// transitions its partner does not support. Given the table implemented by
+/// `us` for ops we may *send*, and the table of the `partner` for ops it
+/// can *receive*, report every op we could emit that the partner lacks.
+pub fn check_interop(
+    us: &[Transition],
+    us_node: Node,
+    partner: &[Transition],
+) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for tr in us {
+        if tr.by != us_node {
+            continue;
+        }
+        if let Some(op) = tr.op {
+            let handled = partner
+                .iter()
+                .any(|p| p.by == us_node && p.op == Some(op) && p.from == tr.from);
+            if !handled {
+                v.push(Violation {
+                    requirement: 5,
+                    detail: format!(
+                        "we may signal {op:?} from {} but the partner table cannot receive it there",
+                        tr.from
+                    ),
+                });
+            }
+        }
+    }
+    v
+}
+
+/// The set of remote-state components reachable by `op` from `from`
+/// (None if the op is not available there).
+fn remote_outcomes(table: &[Transition], op: CohOp, from: Joint) -> Option<Vec<char>> {
+    let mut out: Vec<char> = table
+        .iter()
+        .filter(|t| t.from == from && t.op == Some(op))
+        .flat_map(|t| t.outcomes.iter().map(|o| o.remote.letter()))
+        .collect();
+    if out.is_empty() {
+        return None;
+    }
+    out.sort();
+    out.dedup();
+    Some(out)
+}
+
+/// Does state `j` appear as the source of any transition by `node`, or as
+/// an outcome anywhere? (Used to ignore vacuous R7 cases for states a
+/// given table never inhabits.)
+fn reachable_as_source_of(table: &[Transition], node: Node, j: Joint) -> bool {
+    table.iter().any(|t| t.by == node && t.from == j)
+        || table.iter().any(|t| t.outcomes.contains(&j))
+        || j == Joint::II
+}
+
+/// The two performance *recommendations* of §3.3 (advisory, reported
+/// separately from violations).
+pub fn check_recommendations(table: &[Transition]) -> Vec<String> {
+    let mut notes = Vec::new();
+    // Rec 1: internal transitions should not be signalled — in particular
+    // the upgrade to a dirty state (IE -> IM) should be silent.
+    let ie_im_signalled = table.iter().any(|t| {
+        t.from == Joint::IE && t.outcomes.contains(&Joint::IM) && t.op.is_some()
+    });
+    if ie_im_signalled {
+        notes.push("rec 1: IE->IM (remote dirtying) is signalled; should be silent".into());
+    }
+    // Rec 2: the home should be able to share a dirty line without writing
+    // it back first — i.e. transition 10 with an SS outcome should exist.
+    let t10_keeps_dirty = table.iter().any(|t| {
+        matches!(t.tag, Tag::Numbered(10)) && t.outcomes.contains(&Joint::SS)
+    });
+    if !t10_keeps_dirty {
+        notes.push(
+            "rec 2: no hidden-O path (MI -ReadShared-> SS); home will write dirty lines before sharing"
+                .into(),
+        );
+    }
+    notes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::transitions::reference_transitions;
+
+    #[test]
+    fn reference_table_satisfies_all_requirements() {
+        let table = reference_transitions();
+        let violations = check_envelope(&table);
+        assert!(
+            violations.is_empty(),
+            "reference table violates the envelope:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn reference_table_satisfies_recommendations() {
+        assert!(check_recommendations(&reference_transitions()).is_empty());
+    }
+
+    #[test]
+    fn reference_table_interoperates_with_itself() {
+        let t = reference_transitions();
+        assert!(check_interop(&t, Node::Remote, &t).is_empty());
+        assert!(check_interop(&t, Node::Home, &t).is_empty());
+    }
+
+    #[test]
+    fn silent_visible_transition_is_caught_r2() {
+        let mut table = reference_transitions();
+        // Make ReadShared from II silent: II -> IS changes the remote state,
+        // which home... wait, by=Remote so partner=Home; home distinguishes
+        // IS from II, so this must violate R2.
+        for t in &mut table {
+            if t.from == Joint::II && t.op == Some(CohOp::ReadShared) {
+                t.op = None;
+            }
+        }
+        let v = check_envelope(&table);
+        assert!(v.iter().any(|x| x.requirement == 2), "expected R2 violation, got {v:?}");
+    }
+
+    #[test]
+    fn silent_dirty_to_clean_is_caught_r3() {
+        let mut table = reference_transitions();
+        table.push(Transition {
+            from: Joint::IM,
+            op: None,
+            by: Node::Remote,
+            outcomes: vec![Joint::IE],
+            tag: Tag::Local,
+            note: "illegal silent clean",
+        });
+        let v = check_envelope(&table);
+        assert!(v.iter().any(|x| x.requirement == 3), "expected R3 violation, got {v:?}");
+    }
+
+    #[test]
+    fn unrelated_transition_is_caught_r1() {
+        let mut table = reference_transitions();
+        table.push(Transition {
+            from: Joint::IE,
+            op: Some(CohOp::VolDowngradeI),
+            by: Node::Remote,
+            outcomes: vec![Joint::MI], // IE and MI are unrelated
+            tag: Tag::Local,
+            note: "illegal jump",
+        });
+        let v = check_envelope(&table);
+        assert!(v.iter().any(|x| x.requirement == 1), "expected R1 violation, got {v:?}");
+    }
+
+    #[test]
+    fn asymmetric_ops_within_class_caught_r6() {
+        let mut table = reference_transitions();
+        // Remove ReadExclusive from EI only: remote can't tell EI from II,
+        // so R6 must fire.
+        table.retain(|t| !(t.from == Joint::EI && t.op == Some(CohOp::ReadExclusive)));
+        let v = check_envelope(&table);
+        assert!(v.iter().any(|x| x.requirement == 6), "expected R6 violation, got {v:?}");
+    }
+
+    #[test]
+    fn missing_receive_row_caught_r5_interop() {
+        let full = reference_transitions();
+        let mut partner = reference_transitions();
+        partner.retain(|t| t.op != Some(CohOp::UpgradeS2E));
+        let v = check_interop(&full, Node::Remote, &partner);
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|x| x.requirement == 5));
+    }
+
+    #[test]
+    fn home_dirtiness_leak_caught_r4() {
+        let mut table = reference_transitions();
+        // Make UpgradeS2E from SS land in IS (remote stays S) instead of IE:
+        // now IS and SS yield remotely-distinguishable outcomes for the op.
+        for t in &mut table {
+            if t.from == Joint::SS && t.op == Some(CohOp::UpgradeS2E) {
+                t.outcomes = vec![Joint::IS];
+            }
+        }
+        let v = check_envelope(&table);
+        assert!(v.iter().any(|x| x.requirement == 4), "expected R4 violation, got {v:?}");
+    }
+}

@@ -1,0 +1,372 @@
+//! ECI message vocabulary (paper Table 1 plus the non-coherence traffic the
+//! protocol also carries: "Non-cacheable I/O accesses, memory barriers, and
+//! interprocessor-interrupts are all carried via this protocol" — §4.1).
+//!
+//! Messages are transport-agnostic here; the byte-accurate encoding lives
+//! in [`crate::trace::ewf`] (ECI Wire Format) and VC assignment in
+//! [`crate::transport::vc`].
+
+use std::fmt;
+
+use super::states::Node;
+
+/// Cache-line size on the ThunderX-1 / Enzian: 128 bytes.
+pub const LINE_BYTES: usize = 128;
+
+/// A cache-line payload.
+pub type Line = [u8; LINE_BYTES];
+
+/// Cache-line address: byte address >> 7. The low bit selects the odd/even
+/// VC set ("separate sets of VCs for odd and even cache lines enabling
+/// simpler load-balancing", §4.2).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LineAddr(pub u64);
+
+impl LineAddr {
+    #[inline]
+    pub fn from_byte_addr(addr: u64) -> LineAddr {
+        LineAddr(addr >> 7)
+    }
+    #[inline]
+    pub fn byte_addr(self) -> u64 {
+        self.0 << 7
+    }
+    /// Odd/even parity used for VC selection.
+    #[inline]
+    pub fn parity(self) -> u8 {
+        (self.0 & 1) as u8
+    }
+}
+
+impl fmt::Debug for LineAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "L{:#x}", self.0)
+    }
+}
+impl fmt::Display for LineAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Transaction id: correlates a request with its response. 10 bits on the
+/// wire (per-direction, per-parity), which bounds outstanding transactions
+/// at 1024 per request VC — matching the credit budget.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReqId(pub u32);
+
+impl fmt::Debug for ReqId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
+/// Transition class (paper Table 1, column 2).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Class {
+    Upgrade,
+    Downgrade,
+}
+
+/// The signalled coherence operations — exactly the rows of Table 1, plus
+/// the extension op `FwdShared` discussed in §3.3 ("downgrade remote to
+/// invalid and forward", not in the minimal protocol; gated behind
+/// [`crate::proto::subset::Feature::ForwardOnInvalidate`]).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CohOp {
+    // -- remote-initiated upgrades ------------------------------------
+    /// Remote wants a read-only copy (transition 1 / 10).
+    ReadShared,
+    /// Remote wants an exclusive copy (transition 2).
+    ReadExclusive,
+    /// Remote holds S, wants E without data transfer (transition 3).
+    UpgradeS2E,
+    // -- remote-initiated (voluntary) downgrades ----------------------
+    /// Remote drops to S; carries data iff the line was dirty (trans. 7).
+    VolDowngradeS,
+    /// Remote drops to I; carries data iff the line was dirty (4, 5, 6).
+    VolDowngradeI,
+    // -- home-initiated downgrades ------------------------------------
+    /// Home forces remote to S (transition 9).
+    FwdDowngradeS,
+    /// Home forces remote to I (transition 8).
+    FwdDowngradeI,
+    // -- envelope extension (not minimal; not on the ThunderX-1) -------
+    /// Home forces remote to I *and* asks the line forwarded even if
+    /// clean, avoiding a RAM read (the IS -> SI extension of §3.3).
+    FwdSharedInvalidate,
+}
+
+impl CohOp {
+    /// Table 1: which node initiates this operation.
+    pub fn initiator(self) -> Node {
+        match self {
+            CohOp::ReadShared
+            | CohOp::ReadExclusive
+            | CohOp::UpgradeS2E
+            | CohOp::VolDowngradeS
+            | CohOp::VolDowngradeI => Node::Remote,
+            CohOp::FwdDowngradeS | CohOp::FwdDowngradeI | CohOp::FwdSharedInvalidate => Node::Home,
+        }
+    }
+
+    /// Table 1: transition class.
+    pub fn class(self) -> Class {
+        match self {
+            CohOp::ReadShared | CohOp::ReadExclusive | CohOp::UpgradeS2E => Class::Upgrade,
+            _ => Class::Downgrade,
+        }
+    }
+
+    /// Table 1: does the *request* carry a payload?
+    /// `Conditional` = "Yes if dirty".
+    pub fn request_payload(self) -> Payload {
+        match self {
+            CohOp::VolDowngradeS | CohOp::VolDowngradeI => Payload::IfDirty,
+            _ => Payload::Never,
+        }
+    }
+
+    /// Table 1: is a response from the partner required?
+    pub fn needs_response(self) -> bool {
+        match self {
+            CohOp::ReadShared | CohOp::ReadExclusive | CohOp::UpgradeS2E => true,
+            CohOp::VolDowngradeS | CohOp::VolDowngradeI => false,
+            CohOp::FwdDowngradeS | CohOp::FwdDowngradeI | CohOp::FwdSharedInvalidate => true,
+        }
+    }
+
+    /// Table 1: does the *response* carry a payload?
+    pub fn response_payload(self) -> Payload {
+        match self {
+            CohOp::ReadShared | CohOp::ReadExclusive => Payload::Always,
+            CohOp::UpgradeS2E => Payload::Never,
+            CohOp::VolDowngradeS | CohOp::VolDowngradeI => Payload::Never, // no response at all
+            CohOp::FwdDowngradeS | CohOp::FwdDowngradeI => Payload::IfDirty,
+            CohOp::FwdSharedInvalidate => Payload::Always,
+        }
+    }
+
+    pub const ALL: [CohOp; 8] = [
+        CohOp::ReadShared,
+        CohOp::ReadExclusive,
+        CohOp::UpgradeS2E,
+        CohOp::VolDowngradeS,
+        CohOp::VolDowngradeI,
+        CohOp::FwdDowngradeS,
+        CohOp::FwdDowngradeI,
+        CohOp::FwdSharedInvalidate,
+    ];
+
+    /// The seven rows of the paper's Table 1 (the minimal envelope).
+    pub const TABLE1: [CohOp; 7] = [
+        CohOp::ReadShared,
+        CohOp::ReadExclusive,
+        CohOp::UpgradeS2E,
+        CohOp::VolDowngradeS,
+        CohOp::VolDowngradeI,
+        CohOp::FwdDowngradeS,
+        CohOp::FwdDowngradeI,
+    ];
+}
+
+/// Payload rule for a message slot.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Payload {
+    Never,
+    IfDirty,
+    Always,
+}
+
+/// Everything that travels on the link.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// A coherence request (Table 1 rows).
+    CohReq { op: CohOp },
+    /// A coherence response. `dirty` tells the requester whether the data
+    /// it receives supersedes RAM (only meaningful home-bound).
+    /// `had_copy` (home-bound fwd responses only) tells the directory
+    /// whether the responder actually surrendered a copy — intermediate-
+    /// state machinery for exact possession accounting under crossed
+    /// downgrades (§3.2 licenses such additions; always true elsewhere).
+    CohRsp { op: CohOp, dirty: bool, had_copy: bool },
+    /// Non-cacheable I/O read (config space, CSRs) — 8-byte granule.
+    IoRead { offset: u64 },
+    IoReadRsp { offset: u64, value: u64 },
+    /// Non-cacheable I/O write.
+    IoWrite { offset: u64, value: u64 },
+    IoWriteAck,
+    /// Memory barrier marker (fence completion handshake).
+    Barrier,
+    BarrierAck,
+    /// Inter-processor interrupt.
+    Ipi { vector: u8 },
+}
+
+impl MsgKind {
+    pub fn is_coherence(&self) -> bool {
+        matches!(self, MsgKind::CohReq { .. } | MsgKind::CohRsp { .. })
+    }
+    pub fn is_request(&self) -> bool {
+        matches!(
+            self,
+            MsgKind::CohReq { .. }
+                | MsgKind::IoRead { .. }
+                | MsgKind::IoWrite { .. }
+                | MsgKind::Barrier
+                | MsgKind::Ipi { .. }
+        )
+    }
+}
+
+/// A complete ECI message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Message {
+    /// Transaction id correlating request and response.
+    pub id: ReqId,
+    /// Which node sent it.
+    pub from: Node,
+    pub kind: MsgKind,
+    /// Target cache line (coherence) or register block (I/O: the line
+    /// address of the 128-byte window containing the register).
+    pub addr: LineAddr,
+    /// Optional 128-byte data payload.
+    pub payload: Option<Box<Line>>,
+}
+
+impl Message {
+    pub fn coh_req(id: ReqId, from: Node, op: CohOp, addr: LineAddr) -> Message {
+        Message { id, from, kind: MsgKind::CohReq { op }, addr, payload: None }
+    }
+
+    pub fn coh_req_data(id: ReqId, from: Node, op: CohOp, addr: LineAddr, data: Box<Line>) -> Message {
+        Message { id, from, kind: MsgKind::CohReq { op }, addr, payload: Some(data) }
+    }
+
+    pub fn coh_rsp(
+        id: ReqId,
+        from: Node,
+        op: CohOp,
+        addr: LineAddr,
+        dirty: bool,
+        data: Option<Box<Line>>,
+    ) -> Message {
+        Message { id, from, kind: MsgKind::CohRsp { op, dirty, had_copy: true }, addr, payload: data }
+    }
+
+    /// A fwd response from a node that held no copy (the downgrade
+    /// crossed with its own surrender or arrived mid-fill).
+    pub fn coh_rsp_nocopy(id: ReqId, from: Node, op: CohOp, addr: LineAddr) -> Message {
+        Message { id, from, kind: MsgKind::CohRsp { op, dirty: false, had_copy: false }, addr, payload: None }
+    }
+
+    /// Wire size in bytes: 16-byte EWF header + optional 128-byte payload
+    /// (+ payload CRC handled at the transaction layer). Kept in sync with
+    /// [`crate::trace::ewf`] by a test there.
+    pub fn wire_bytes(&self) -> u64 {
+        16 + if self.payload.is_some() { LINE_BYTES as u64 } else { 0 }
+    }
+
+    /// Check the payload against the op's payload rule.
+    pub fn payload_ok(&self) -> bool {
+        let rule = match &self.kind {
+            MsgKind::CohReq { op } => op.request_payload(),
+            MsgKind::CohRsp { op, dirty, .. } => match op.response_payload() {
+                Payload::IfDirty => {
+                    return if *dirty { self.payload.is_some() } else { self.payload.is_none() }
+                }
+                r => r,
+            },
+            MsgKind::IoRead { .. }
+            | MsgKind::IoReadRsp { .. }
+            | MsgKind::IoWrite { .. }
+            | MsgKind::IoWriteAck
+            | MsgKind::Barrier
+            | MsgKind::BarrierAck
+            | MsgKind::Ipi { .. } => Payload::Never,
+        };
+        match rule {
+            Payload::Never => self.payload.is_none(),
+            Payload::Always => self.payload.is_some(),
+            Payload::IfDirty => true, // either is legal; dirtiness checked by caller
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Table 1, row by row:
+    /// (op, initiator, class, request-payload, response?, response-payload)
+    #[test]
+    fn table1_rows_match_paper() {
+        use CohOp::*;
+        use Payload::*;
+        let rows: [(CohOp, Node, Class, Payload, bool, Payload); 7] = [
+            (ReadShared, Node::Remote, Class::Upgrade, Never, true, Always),
+            (ReadExclusive, Node::Remote, Class::Upgrade, Never, true, Always),
+            (UpgradeS2E, Node::Remote, Class::Upgrade, Never, true, Never),
+            (VolDowngradeS, Node::Remote, Class::Downgrade, IfDirty, false, Never),
+            (VolDowngradeI, Node::Remote, Class::Downgrade, IfDirty, false, Never),
+            (FwdDowngradeS, Node::Home, Class::Downgrade, Never, true, IfDirty),
+            (FwdDowngradeI, Node::Home, Class::Downgrade, Never, true, IfDirty),
+        ];
+        for (op, init, class, reqp, rsp, rspp) in rows {
+            assert_eq!(op.initiator(), init, "{op:?} initiator");
+            assert_eq!(op.class(), class, "{op:?} class");
+            assert_eq!(op.request_payload(), reqp, "{op:?} request payload");
+            assert_eq!(op.needs_response(), rsp, "{op:?} response required");
+            assert_eq!(op.response_payload(), rspp, "{op:?} response payload");
+        }
+    }
+
+    #[test]
+    fn line_addr_round_trip_and_parity() {
+        let a = LineAddr::from_byte_addr(0x1000);
+        assert_eq!(a.0, 0x20);
+        assert_eq!(a.byte_addr(), 0x1000);
+        assert_eq!(a.parity(), 0);
+        assert_eq!(LineAddr::from_byte_addr(0x1080).parity(), 1);
+        // sub-line bits are dropped
+        assert_eq!(LineAddr::from_byte_addr(0x1007).byte_addr(), 0x1000);
+    }
+
+    #[test]
+    fn payload_rules_enforced() {
+        let id = ReqId(1);
+        let a = LineAddr(2);
+        // ReadShared request: never a payload
+        let m = Message::coh_req(id, Node::Remote, CohOp::ReadShared, a);
+        assert!(m.payload_ok());
+        let m_bad = Message::coh_req_data(id, Node::Remote, CohOp::ReadShared, a, Box::new([0; 128]));
+        assert!(!m_bad.payload_ok());
+        // ReadShared response: always a payload
+        let r = Message::coh_rsp(id, Node::Home, CohOp::ReadShared, a, false, Some(Box::new([0; 128])));
+        assert!(r.payload_ok());
+        let r_bad = Message::coh_rsp(id, Node::Home, CohOp::ReadShared, a, false, None);
+        assert!(!r_bad.payload_ok());
+        // FwdDowngradeI response: payload iff dirty
+        let r = Message::coh_rsp(id, Node::Remote, CohOp::FwdDowngradeI, a, true, Some(Box::new([0; 128])));
+        assert!(r.payload_ok());
+        let r = Message::coh_rsp(id, Node::Remote, CohOp::FwdDowngradeI, a, false, None);
+        assert!(r.payload_ok());
+        let r = Message::coh_rsp(id, Node::Remote, CohOp::FwdDowngradeI, a, true, None);
+        assert!(!r.payload_ok());
+    }
+
+    #[test]
+    fn wire_size_accounts_payload() {
+        let m = Message::coh_req(ReqId(0), Node::Remote, CohOp::ReadShared, LineAddr(0));
+        assert_eq!(m.wire_bytes(), 16);
+        let m = Message::coh_rsp(
+            ReqId(0),
+            Node::Home,
+            CohOp::ReadShared,
+            LineAddr(0),
+            false,
+            Some(Box::new([0xAB; 128])),
+        );
+        assert_eq!(m.wire_bytes(), 144);
+    }
+}

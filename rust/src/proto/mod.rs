@@ -1,0 +1,12 @@
+//! The ECI protocol: states, messages, envelope rules, spec-generated
+//! state machines, and application-specific subsets (paper §3).
+
+pub mod envelope;
+pub mod messages;
+pub mod spec;
+pub mod states;
+pub mod subset;
+pub mod transitions;
+
+pub use messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId, LINE_BYTES};
+pub use states::{CacheState, DistanceOrder, Joint, Node};

@@ -1,0 +1,1025 @@
+//! Spec-generated agent state machines, **including the intermediate
+//! (transient) states that handle message reordering and races**.
+//!
+//! Paper §3.2: "the protocol envelope does not specify additional
+//! intermediate states (and associated messages) needed to handle message
+//! reordering and races. ... our reference implementation implements all
+//! intermediate states for CPU interoperability, but the user need only
+//! consider the specified stable states." And §4.2: "The directory-
+//! controller's entire state machine, including intermediate states to
+//! handle race conditions, is generated automatically from a formal
+//! specification."
+//!
+//! This module is that generator. The *formal specification* is the
+//! machine-readable transition table of [`super::transitions`] plus the
+//! race-resolution policies documented below; [`generate_remote`] and
+//! [`generate_home`] expand it into complete, explicit `(state, event) ->
+//! (state', actions)` rule maps which the agents in [`crate::agents`]
+//! interpret at runtime. Nothing in the agents hand-codes a transition;
+//! they only execute rules from these maps, so the envelope checks in
+//! [`super::envelope`] plus the closure tests below carry over to the
+//! running system.
+//!
+//! ## Race policies (the ones the ThunderX-1 VCs force us to handle)
+//!
+//! VCs have **no cross-VC ordering** (§4.2), so:
+//!
+//! * **Fwd overtakes fill / fwd meets a stalled request** — a
+//!   home-initiated downgrade can arrive while the remote is still
+//!   waiting for a fill, either because the fwd overtook the grant on a
+//!   different VC, or because the home issued it while *stalling* the
+//!   remote's own request (eviction + re-request race). Deferring the
+//!   answer until the fill lands deadlocks the second case (the fill
+//!   never comes while the home waits). Policy (the gem5 `IS_I`-style
+//!   resolution): the remote answers the fwd **immediately** from its
+//!   current possession (clean — it holds nothing yet) and marks the
+//!   transaction *use-once*: when the fill lands it satisfies the
+//!   waiting core and is immediately dropped (or demoted to S for a
+//!   fwd-to-S), with a writeback if the grant carried dirty ownership.
+//!   The value the core observes is the pre-downgrade value — coherent,
+//!   since its load was ordered before the downgrade at the home.
+//! * **Upgrade races with invalidation** — remote sends `UpgradeS2E` while
+//!   the home's `FwdDowngradeI` is in flight. The remote answers the fwd
+//!   (it must, R7), dropping to `I`, and parks in a transient; the home,
+//!   seeing `UpgradeS2E` from a requester its directory now records as
+//!   `I`, **converts** the upgrade to a full `ReadExclusive` and responds
+//!   with data (the response carries `op = ReadExclusive`, which is how
+//!   the remote learns of the conversion). This keeps Table 1 intact at
+//!   the stable level — the conversion is exactly the kind of
+//!   intermediate-state machinery §3.2 licenses.
+//! * **Request overtakes voluntary downgrade** — the remote volunteers a
+//!   downgrade (no response required) and immediately re-requests the
+//!   line; the request can overtake the downgrade. The home detects the
+//!   impossibility (a request from a node its directory believes holds
+//!   E/M) and *stalls* the request until the in-flight downgrade arrives.
+
+use rustc_hash::FxHashMap as HashMap;
+
+use super::messages::CohOp;
+use super::states::CacheState;
+use super::transitions::Transition;
+
+// ===========================================================================
+// Remote agent (caching agent; the CPU in the paper's smart-memory use case)
+// ===========================================================================
+
+/// What a pending remote transaction is waiting for.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum WaitKind {
+    /// Sent `ReadShared`, awaiting data.
+    FillS,
+    /// Sent `ReadExclusive`, awaiting data.
+    FillE,
+    /// Sent `UpgradeS2E`, awaiting ack (or converted data).
+    UpgAck,
+}
+
+/// A home-initiated downgrade answered mid-transaction: the in-flight
+/// fill becomes use-once (dropped or demoted the instant it lands).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DeferredFwd {
+    None,
+    /// demote to S when the fill lands
+    ToS,
+    /// drop (with writeback if dirty) when the fill lands
+    ToI,
+}
+
+/// Remote-agent per-line state: four stable states plus transients.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum RemoteSt {
+    Stable(CacheState),
+    Wait { kind: WaitKind, deferred: DeferredFwd },
+}
+
+impl RemoteSt {
+    pub const fn stable(s: CacheState) -> RemoteSt {
+        RemoteSt::Stable(s)
+    }
+    pub fn is_transient(self) -> bool {
+        matches!(self, RemoteSt::Wait { .. })
+    }
+    /// All reachable remote states (enumerated; used by closure tests).
+    pub fn all() -> Vec<RemoteSt> {
+        let mut v: Vec<RemoteSt> =
+            CacheState::ALL.iter().map(|&s| RemoteSt::Stable(s)).collect();
+        for kind in [WaitKind::FillS, WaitKind::FillE, WaitKind::UpgAck] {
+            for deferred in [DeferredFwd::None, DeferredFwd::ToS, DeferredFwd::ToI] {
+                v.push(RemoteSt::Wait { kind, deferred });
+            }
+        }
+        v
+    }
+}
+
+/// Events at the remote agent, per line.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum REvent {
+    /// Local processor load touching the line.
+    Read,
+    /// Local processor store touching the line.
+    Write,
+    /// Local cache wants the line gone (capacity/conflict), dropping to I.
+    Evict,
+    /// Local cache demotes to shared (keeps read-only copy).
+    Demote,
+    /// Response arrived granting `op` (with data unless `UpgradeS2E`).
+    Rsp { granted: CohOp, dirty: bool },
+    /// Home-initiated downgrade arrived.
+    Fwd { op: CohOp },
+}
+
+/// Actions the remote agent must perform, in order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RAction {
+    /// Emit a coherence request to home.
+    SendReq(CohOp),
+    /// Emit the response to a home-initiated downgrade.
+    /// `with_data`: attach the (dirty) line.
+    RspToFwd { op: CohOp, with_data: bool },
+    /// Install the received line with the given stable state.
+    Fill(CacheState),
+    /// Promote the already-resident (shared) line to E — the dataless
+    /// UpgradeS2E grant.
+    PromoteToE,
+    /// Mark the cached line dirty (silent IE -> IM upgrade).
+    MarkDirty,
+    /// Downgrade the local copy to S (keep data, clean).
+    DowngradeToS,
+    /// Drop the local copy.
+    DropLine,
+    /// The local access must wait; retry when the line settles.
+    StallLocal,
+    /// The fill was use-once (a fwd-to-I was answered mid-transaction):
+    /// drop it now, writing back first if it carried dirty ownership.
+    DropAfterFill,
+    /// The fill was demoted mid-transaction (fwd-to-S answered): keep it
+    /// as S, writing dirty ownership back via VolDowngradeS if needed.
+    DemoteAfterFill,
+    /// Voluntary downgrade message carries the dirty payload.
+    AttachDirtyData,
+}
+
+/// One rule: next state + action list.
+#[derive(Clone, Debug)]
+pub struct RRule {
+    pub next: RemoteSt,
+    pub actions: Vec<RAction>,
+}
+
+pub type RemoteRules = HashMap<(RemoteSt, REvent), RRule>;
+
+/// Generate the complete remote-agent rule map from the transition spec.
+pub fn generate_remote(spec: &[Transition]) -> RemoteRules {
+    use CacheState::*;
+    use CohOp::*;
+    use RAction as A;
+    use REvent as E;
+    use RemoteSt as R;
+
+    let mut rules: RemoteRules = HashMap::default();
+    let mut add = |st: RemoteSt, ev: REvent, next: RemoteSt, actions: Vec<RAction>| {
+        let prev = rules.insert((st, ev), RRule { next, actions });
+        assert!(prev.is_none(), "duplicate rule for {st:?} x {ev:?}");
+    };
+
+    // Helper: does the spec allow the remote to signal `op` from remote
+    // state `s`? (Consult every joint state with that remote component.)
+    let remote_may = |op: CohOp, s: CacheState| -> bool {
+        spec.iter().any(|t| {
+            t.by == super::states::Node::Remote && t.op == Some(op) && t.from.remote == s
+        })
+    };
+
+    // ---- stable states: local accesses --------------------------------
+    // I: a read misses -> ReadShared; a write misses -> ReadExclusive.
+    if remote_may(ReadShared, I) {
+        add(R::Stable(I), E::Read, R::Wait { kind: WaitKind::FillS, deferred: DeferredFwd::None }, vec![A::SendReq(ReadShared)]);
+    }
+    if remote_may(ReadExclusive, I) {
+        add(R::Stable(I), E::Write, R::Wait { kind: WaitKind::FillE, deferred: DeferredFwd::None }, vec![A::SendReq(ReadExclusive)]);
+    }
+    // I: evict/demote of an invalid line is a no-op.
+    add(R::Stable(I), E::Evict, R::Stable(I), vec![]);
+    add(R::Stable(I), E::Demote, R::Stable(I), vec![]);
+
+    // S: reads hit; writes upgrade.
+    add(R::Stable(S), E::Read, R::Stable(S), vec![]);
+    if remote_may(UpgradeS2E, S) {
+        add(R::Stable(S), E::Write, R::Wait { kind: WaitKind::UpgAck, deferred: DeferredFwd::None }, vec![A::SendReq(UpgradeS2E)]);
+    }
+    // S: voluntary drop (transition 6) — clean, no payload, no response.
+    add(R::Stable(S), E::Evict, R::Stable(I), vec![A::SendReq(VolDowngradeI), A::DropLine]);
+    add(R::Stable(S), E::Demote, R::Stable(S), vec![]);
+
+    // E: reads/writes hit; a write silently dirties (local IE -> IM).
+    add(R::Stable(E), E::Read, R::Stable(E), vec![]);
+    add(R::Stable(E), E::Write, R::Stable(M), vec![A::MarkDirty]);
+    // E: voluntary downgrades (transitions 5/7), clean so no payload.
+    add(R::Stable(E), E::Evict, R::Stable(I), vec![A::SendReq(VolDowngradeI), A::DropLine]);
+    add(R::Stable(E), E::Demote, R::Stable(S), vec![A::SendReq(VolDowngradeS), A::DowngradeToS]);
+
+    // M: reads/writes hit.
+    add(R::Stable(M), E::Read, R::Stable(M), vec![]);
+    add(R::Stable(M), E::Write, R::Stable(M), vec![]);
+    // M: voluntary downgrades carry the dirty payload (transitions 4/7).
+    add(R::Stable(M), E::Evict, R::Stable(I), vec![A::AttachDirtyData, A::SendReq(VolDowngradeI), A::DropLine]);
+    add(R::Stable(M), E::Demote, R::Stable(S), vec![A::AttachDirtyData, A::SendReq(VolDowngradeS), A::DowngradeToS]);
+
+    // ---- stable states: home-initiated downgrades ---------------------
+    // From S: home may invalidate (8). Response required, never dirty.
+    add(R::Stable(S), E::Fwd { op: FwdDowngradeI }, R::Stable(I), vec![A::RspToFwd { op: FwdDowngradeI, with_data: false }, A::DropLine]);
+    // FwdDowngradeS to an S holder is a protocol error (home only demotes
+    // E/M holders) — intentionally no rule; the checker flags it.
+    // From E: clean responses.
+    add(R::Stable(E), E::Fwd { op: FwdDowngradeI }, R::Stable(I), vec![A::RspToFwd { op: FwdDowngradeI, with_data: false }, A::DropLine]);
+    add(R::Stable(E), E::Fwd { op: FwdDowngradeS }, R::Stable(S), vec![A::RspToFwd { op: FwdDowngradeS, with_data: false }, A::DowngradeToS]);
+    // From M: dirty responses (data returns to home).
+    add(R::Stable(M), E::Fwd { op: FwdDowngradeI }, R::Stable(I), vec![A::RspToFwd { op: FwdDowngradeI, with_data: true }, A::DropLine]);
+    add(R::Stable(M), E::Fwd { op: FwdDowngradeS }, R::Stable(S), vec![A::RspToFwd { op: FwdDowngradeS, with_data: true }, A::DowngradeToS]);
+    // From I: a fwd can cross with our voluntary downgrade; the line is
+    // already gone, answer "clean, no data" so the home can proceed.
+    add(R::Stable(I), E::Fwd { op: FwdDowngradeI }, R::Stable(I), vec![A::RspToFwd { op: FwdDowngradeI, with_data: false }]);
+    add(R::Stable(I), E::Fwd { op: FwdDowngradeS }, R::Stable(I), vec![A::RspToFwd { op: FwdDowngradeS, with_data: false }]);
+
+    // Extension: FwdSharedInvalidate behaves like FwdDowngradeI at the
+    // remote but always returns the line (even clean), if the subset
+    // enables it.
+    if spec.iter().any(|t| t.op == Some(FwdSharedInvalidate)) {
+        add(R::Stable(S), E::Fwd { op: FwdSharedInvalidate }, R::Stable(I), vec![A::RspToFwd { op: FwdSharedInvalidate, with_data: true }, A::DropLine]);
+        add(R::Stable(I), E::Fwd { op: FwdSharedInvalidate }, R::Stable(I), vec![A::RspToFwd { op: FwdSharedInvalidate, with_data: false }]);
+    }
+
+    // ---- transient states ----------------------------------------------
+    for kind in [WaitKind::FillS, WaitKind::FillE, WaitKind::UpgAck] {
+        for deferred in [DeferredFwd::None, DeferredFwd::ToS, DeferredFwd::ToI] {
+            let st = R::Wait { kind, deferred };
+
+            // Local accesses stall while a transaction is outstanding
+            // (one outstanding transaction per line; the L2 MSHR blocks).
+            add(st, E::Read, st, vec![A::StallLocal]);
+            add(st, E::Write, st, vec![A::StallLocal]);
+            add(st, E::Evict, st, vec![A::StallLocal]);
+            add(st, E::Demote, st, vec![A::StallLocal]);
+
+            // A fwd arriving mid-transaction is answered IMMEDIATELY from
+            // current possession (clean — the fill hasn't landed), and
+            // the transaction becomes use-once/demoted. Deferring instead
+            // deadlocks when the home issued the fwd while stalling our
+            // own request (see the race policy in the module docs).
+            match kind {
+                WaitKind::FillS | WaitKind::FillE => {
+                    add(st, E::Fwd { op: FwdDowngradeI }, R::Wait { kind, deferred: DeferredFwd::ToI }, vec![A::RspToFwd { op: FwdDowngradeI, with_data: false }]);
+                    add(st, E::Fwd { op: FwdDowngradeS }, R::Wait { kind, deferred: DeferredFwd::ToS }, vec![A::RspToFwd { op: FwdDowngradeS, with_data: false }]);
+                }
+                WaitKind::UpgAck => {
+                    if deferred == DeferredFwd::None {
+                        // Upgrade lost the race: answer the invalidation
+                        // (we held S = clean), drop, and wait for the
+                        // converted ReadExclusive response.
+                        add(st, E::Fwd { op: FwdDowngradeI }, R::Wait { kind: WaitKind::FillE, deferred: DeferredFwd::None }, vec![A::RspToFwd { op: FwdDowngradeI, with_data: false }, A::DropLine]);
+                        // A demote-to-S can race ahead of the upgrade ack
+                        // (home acked, app read, fwd overtook the ack):
+                        // we hold clean S — answer clean; when the ack
+                        // lands, the promotion is immediately demoted.
+                        add(st, E::Fwd { op: FwdDowngradeS }, R::Wait { kind: WaitKind::UpgAck, deferred: DeferredFwd::ToS }, vec![A::RspToFwd { op: FwdDowngradeS, with_data: false }]);
+                    }
+                }
+            }
+
+            // Response arrival completes the transaction.
+            match kind {
+                WaitKind::FillS => {
+                    add(st, E::Rsp { granted: ReadShared, dirty: false }, R::Stable(S), fill_then_replay(S, deferred));
+                }
+                WaitKind::FillE => {
+                    add(st, E::Rsp { granted: ReadExclusive, dirty: false }, R::Stable(E), fill_then_replay(E, deferred));
+                    // Home may forward a dirty line on ReadExclusive
+                    // (MI -> IM): we inherit the dirty data as M.
+                    add(st, E::Rsp { granted: ReadExclusive, dirty: true }, R::Stable(M), fill_then_replay(M, deferred));
+                    // A plain UpgradeS2E ack can reach a FillE transient:
+                    // we were converted here by answering an invalidation
+                    // mid-upgrade, then the (unconverted) ack overtook or
+                    // trailed the fwd. The ack grants exclusivity over
+                    // data we already surrendered — start a fresh
+                    // transaction instead.
+                    add(st, E::Rsp { granted: UpgradeS2E, dirty: false }, R::Wait { kind: WaitKind::FillE, deferred: DeferredFwd::None }, vec![A::SendReq(ReadExclusive)]);
+                }
+                WaitKind::UpgAck => {
+                    // dataless ack: the line is already resident as S
+                    let mut acts = vec![A::PromoteToE];
+                    match deferred {
+                        DeferredFwd::None => {}
+                        DeferredFwd::ToI => acts.push(A::DropAfterFill),
+                        DeferredFwd::ToS => acts.push(A::DemoteAfterFill),
+                    }
+                    add(st, E::Rsp { granted: UpgradeS2E, dirty: false }, R::Stable(E), acts);
+                    // Conversion: the home answered our upgrade with a
+                    // full exclusive fill (we had been invalidated).
+                    add(st, E::Rsp { granted: ReadExclusive, dirty: false }, R::Stable(E), fill_then_replay(E, deferred));
+                    add(st, E::Rsp { granted: ReadExclusive, dirty: true }, R::Stable(M), fill_then_replay(M, deferred));
+                }
+            }
+        }
+    }
+
+    rules
+}
+
+/// After a fill, apply the mid-transaction downgrade (if one was
+/// answered): use-once drop for fwd-to-I, demotion to S for fwd-to-S.
+fn fill_then_replay(fill: CacheState, deferred: DeferredFwd) -> Vec<RAction> {
+    let mut v = vec![RAction::Fill(fill)];
+    match deferred {
+        DeferredFwd::None => {}
+        DeferredFwd::ToI => v.push(RAction::DropAfterFill),
+        DeferredFwd::ToS => v.push(RAction::DemoteAfterFill),
+    }
+    v
+}
+
+// ===========================================================================
+// Home agent (directory controller on the FPGA)
+// ===========================================================================
+
+/// What the home's directory believes the remote holds. `EorM` because the
+/// IE -> IM upgrade is silent (the paper: home cannot distinguish them).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum RemoteView {
+    I,
+    S,
+    EorM,
+}
+
+/// Home-agent per-line state.
+///
+/// `own` is the home's own cached state; `own_dirty` realizes the hidden
+/// **O** state: `own = S && own_dirty` means MOESI-owned (dirty + shared),
+/// which must remain invisible to the remote (requirement 4).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct HomeSt {
+    pub own: CacheState,
+    pub own_dirty: bool,
+    pub view: RemoteView,
+    /// A home-initiated downgrade is outstanding; further requests for the
+    /// line stall until its response arrives.
+    pub pending_fwd: Option<PendingFwd>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum PendingFwd {
+    ToS,
+    ToI,
+    /// Waiting for a voluntary downgrade that *must* be in flight
+    /// (request-overtakes-downgrade race): stall until it lands.
+    AwaitVolDowngrade,
+}
+
+impl HomeSt {
+    pub const fn idle() -> HomeSt {
+        HomeSt { own: CacheState::I, own_dirty: false, view: RemoteView::I, pending_fwd: None }
+    }
+    /// Is this a coherent, stable (non-pending) configuration?
+    pub fn is_stable(self) -> bool {
+        self.pending_fwd.is_none() && self.coherent()
+    }
+    pub fn coherent(self) -> bool {
+        use CacheState::*;
+        // own_dirty only meaningful on S (hidden O) or implied by M.
+        if self.own_dirty && !matches!(self.own, S | M) {
+            return false;
+        }
+        match (self.own, self.view) {
+            (I, _) => true,
+            (_, RemoteView::I) => true,
+            (S, RemoteView::S) => true,
+            _ => false,
+        }
+    }
+}
+
+/// Events at the home agent, per line.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum HEvent {
+    /// A coherence request arrived from the remote.
+    Req { op: CohOp, with_data: bool },
+    /// The response to our outstanding fwd arrived.
+    FwdRsp { dirty: bool },
+    /// The home-side application (memory controller / accelerator) reads.
+    LocalRead,
+    /// The home-side application writes.
+    LocalWrite,
+    /// Home cache evicts the line (capacity).
+    LocalEvict,
+    /// Home-side application needs the remote's copy gone (e.g. before an
+    /// in-place update of operator results).
+    RecallI,
+}
+
+/// Actions the home agent must perform, in order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum HAction {
+    /// Respond to the remote. `from_ram`: read the line from backing
+    /// store first; otherwise serve from the home cache. `dirty` marks
+    /// the forwarded data as superseding RAM (hidden-O forwarding).
+    SendRsp { op: CohOp, with_data: bool, from_ram: bool, dirty: bool },
+    /// Issue a home-initiated downgrade.
+    SendFwd { op: CohOp },
+    /// Write the (received or cached) dirty line to backing store.
+    WriteRam,
+    /// Read the line into the home cache.
+    FillOwn { state: CacheState, dirty: bool },
+    /// Drop the home's own copy.
+    DropOwn,
+    /// Update the dirty flag of the home copy.
+    SetOwnDirty(bool),
+    /// Stall this event until the pending transaction resolves.
+    Stall,
+    /// Record the incoming voluntary-downgrade payload into the home
+    /// cache/RAM path (the agent decides cache vs RAM via policy).
+    AcceptWriteback,
+}
+
+#[derive(Clone, Debug)]
+pub struct HRule {
+    pub next: HomeSt,
+    pub actions: Vec<HAction>,
+}
+
+/// Home policy knobs that select among the multi-outcome transitions of
+/// the envelope (all outcomes legal; the choice is invisible to the
+/// remote, requirement 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HomePolicy {
+    /// On transition 10 (read-shared of a home-dirty line): keep the line
+    /// dirty+shared (hidden O, MOESI concession — recommended) instead of
+    /// writing back and dropping to IS.
+    pub hidden_o: bool,
+    /// On receiving a dirty writeback / fwd response: cache it (MI) rather
+    /// than writing straight to RAM (II).
+    pub cache_writebacks: bool,
+}
+
+impl Default for HomePolicy {
+    fn default() -> Self {
+        HomePolicy { hidden_o: true, cache_writebacks: false }
+    }
+}
+
+pub type HomeRules = HashMap<(HomeSt, HEvent), HRule>;
+
+/// Enumerate the home states reachable under `policy`.
+pub fn home_states() -> Vec<HomeSt> {
+    use CacheState::*;
+    let mut v = Vec::new();
+    for own in [I, S, E, M] {
+        for own_dirty in [false, true] {
+            for view in [RemoteView::I, RemoteView::S, RemoteView::EorM] {
+                for pending in [
+                    None,
+                    Some(PendingFwd::ToS),
+                    Some(PendingFwd::ToI),
+                    Some(PendingFwd::AwaitVolDowngrade),
+                ] {
+                    // A pending fwd only exists toward a remote that holds
+                    // something: ToI targets S or E/M holders; ToS and the
+                    // await-writeback stall target E/M holders only.
+                    let plausible = match pending {
+                        None => true,
+                        Some(PendingFwd::ToI) => {
+                            matches!(view, RemoteView::S | RemoteView::EorM)
+                        }
+                        Some(PendingFwd::ToS) | Some(PendingFwd::AwaitVolDowngrade) => {
+                            view == RemoteView::EorM
+                        }
+                    };
+                    if !plausible {
+                        continue;
+                    }
+                    let st = HomeSt { own, own_dirty, view, pending_fwd: pending };
+                    if !st.coherent() {
+                        continue;
+                    }
+                    // dirty flag only on S (hidden O) or M (implied);
+                    // normalize: M is always dirty, E/I never.
+                    let normalized = match own {
+                        M => own_dirty,  // require own_dirty = true for M
+                        S => true,       // both allowed
+                        _ => !own_dirty, // require false
+                    };
+                    if !normalized {
+                        continue;
+                    }
+                    v.push(st);
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Generate the complete home-agent rule map.
+pub fn generate_home(spec: &[Transition], policy: HomePolicy) -> HomeRules {
+    use CacheState::*;
+    use CohOp::*;
+    use HAction as A;
+    use HEvent as E;
+
+    let has_ext = spec.iter().any(|t| t.op == Some(FwdSharedInvalidate));
+    let mut rules: HomeRules = HashMap::default();
+    let mut add = |st: HomeSt, ev: HEvent, next: HomeSt, actions: Vec<HAction>| {
+        assert!(st.coherent(), "incoherent source state {st:?}");
+        assert!(next.coherent(), "incoherent next state {next:?} from {st:?} on {ev:?}");
+        let prev = rules.insert((st, ev), HRule { next, actions });
+        assert!(prev.is_none(), "duplicate home rule for {st:?} x {ev:?}");
+    };
+
+    for st in home_states() {
+        let HomeSt { own, own_dirty, view, pending_fwd } = st;
+
+        // ---- pending transactions: everything else stalls --------------
+        if let Some(p) = pending_fwd {
+            for ev in [
+                E::Req { op: ReadShared, with_data: false },
+                E::Req { op: ReadExclusive, with_data: false },
+                E::Req { op: UpgradeS2E, with_data: false },
+                E::LocalRead,
+                E::LocalWrite,
+                E::LocalEvict,
+                E::RecallI,
+            ] {
+                add(st, ev, st, vec![A::Stall]);
+            }
+            // Voluntary downgrades never stall (they're the thing a
+            // pending AwaitVolDowngrade is waiting for, and they resolve
+            // fwd races by emptying the remote).
+            match p {
+                PendingFwd::AwaitVolDowngrade => {
+                    // The in-flight voluntary downgrade arrives: record it
+                    // and clear the stall; the agent replays queued events.
+                    // (view was EorM, so own = I here by coherence.)
+                    let settle = |new_view: RemoteView, with_data: bool| {
+                        if !with_data {
+                            return (HomeSt { own, own_dirty, view: new_view, pending_fwd: None }, vec![]);
+                        }
+                        if policy.cache_writebacks {
+                            let nown = if new_view == RemoteView::S { S } else { M };
+                            (
+                                HomeSt { own: nown, own_dirty: true, view: new_view, pending_fwd: None },
+                                vec![A::AcceptWriteback, A::FillOwn { state: nown, dirty: true }],
+                            )
+                        } else {
+                            (
+                                HomeSt { own, own_dirty, view: new_view, pending_fwd: None },
+                                vec![A::AcceptWriteback, A::WriteRam],
+                            )
+                        }
+                    };
+                    for (op, nv) in [(VolDowngradeI, RemoteView::I), (VolDowngradeS, RemoteView::S)] {
+                        for wd in [false, true] {
+                            let (n, acts) = settle(nv, wd);
+                            add(st, E::Req { op, with_data: wd }, n, acts);
+                        }
+                    }
+                }
+                PendingFwd::ToS | PendingFwd::ToI => {
+                    // A voluntary downgrade can cross with our fwd. Accept
+                    // the payload (it is the freshest copy) but leave the
+                    // directory view untouched until the fwd's response
+                    // arrives — the view may then *overestimate* the
+                    // remote (believing S/EorM while the remote is I),
+                    // which is benign: a later fwd to an I remote is
+                    // answered "clean, no data" and re-grants proceed
+                    // normally.
+                    for op in [VolDowngradeI, VolDowngradeS] {
+                        add(st, E::Req { op, with_data: false }, st, vec![]);
+                        add(st, E::Req { op, with_data: true }, st, vec![A::AcceptWriteback, A::WriteRam]);
+                    }
+                    // The fwd response itself:
+                    let target_view = if p == PendingFwd::ToS { RemoteView::S } else { RemoteView::I };
+                    // clean response
+                    add(st, E::FwdRsp { dirty: false }, HomeSt { own, own_dirty, view: target_view, pending_fwd: None }, vec![]);
+                    // dirty response: data returns home.
+                    let (nown, ndirty, acts) = if p == PendingFwd::ToI {
+                        if policy.cache_writebacks {
+                            (M, true, vec![A::FillOwn { state: M, dirty: true }])
+                        } else {
+                            (own, own_dirty, vec![A::WriteRam])
+                        }
+                    } else {
+                        // remote keeps S: home holds the dirty line as
+                        // hidden O (own S + dirty) or writes RAM.
+                        if policy.hidden_o {
+                            (S, true, vec![A::FillOwn { state: S, dirty: true }])
+                        } else {
+                            (own, own_dirty, vec![A::WriteRam])
+                        }
+                    };
+                    add(st, E::FwdRsp { dirty: true }, HomeSt { own: nown, own_dirty: ndirty, view: target_view, pending_fwd: None }, acts);
+                }
+            }
+            continue;
+        }
+
+        // ---- no pending transaction ------------------------------------
+
+        // Remote requests.
+        match view {
+            RemoteView::I | RemoteView::S => {
+                // ReadShared: grant S.
+                if view == RemoteView::I || view == RemoteView::S {
+                    // (a remote that already holds S re-requesting shared is
+                    //  a protocol error; with view=S only *another* core
+                    //  behind the remote node would do this — the ThunderX
+                    //  L2 aggregates, so treat as re-grant, idempotent)
+                    let (acts, next) = grant_shared(st, policy);
+                    add(st, E::Req { op: ReadShared, with_data: false }, next, acts);
+                }
+                // ReadExclusive: invalidate our copy, grant E (or M if we
+                // held it dirty — ownership transfer).
+                let (acts, next) = grant_exclusive(st);
+                add(st, E::Req { op: ReadExclusive, with_data: false }, next, acts);
+                // UpgradeS2E: ack without data if the directory agrees the
+                // remote holds S; if our directory says I the remote lost
+                // an invalidation race -> convert to a full exclusive fill.
+                if view == RemoteView::S {
+                    let mut acts = vec![];
+                    if own_dirty {
+                        // we hold it dirty+shared (hidden O): write back
+                        // before surrendering exclusivity to remain clean.
+                        acts.push(A::WriteRam);
+                    }
+                    if own != I {
+                        acts.push(A::DropOwn);
+                    }
+                    acts.push(A::SendRsp { op: UpgradeS2E, with_data: false, from_ram: false, dirty: false });
+                    add(st, E::Req { op: UpgradeS2E, with_data: false }, HomeSt { own: I, own_dirty: false, view: RemoteView::EorM, pending_fwd: None }, acts);
+                } else {
+                    let (acts, next) = grant_exclusive(st);
+                    add(st, E::Req { op: UpgradeS2E, with_data: false }, next, acts);
+                }
+                // Voluntary downgrades from a remote we believe I/S: the
+                // remote knows best (its message may have been reordered
+                // behind a grant) — accept idempotently.
+                for (op, new_view) in [(VolDowngradeI, RemoteView::I), (VolDowngradeS, RemoteView::S)] {
+                    let nv = if view == RemoteView::I { RemoteView::I } else { new_view };
+                    add(st, E::Req { op, with_data: false }, HomeSt { own, own_dirty, view: nv, pending_fwd: None }, vec![]);
+                    let (nown, ndirty, acts) = if policy.cache_writebacks {
+                        (M, true, vec![A::AcceptWriteback, A::FillOwn { state: M, dirty: true }])
+                    } else {
+                        (own, own_dirty, vec![A::AcceptWriteback, A::WriteRam])
+                    };
+                    // dirty payload arriving from a view=I/S remote means
+                    // reordering; data is still the freshest copy.
+                    let nown2 = if nv == RemoteView::S && policy.cache_writebacks { S } else { nown };
+                    let ndirty2 = if nown2 == S { true } else { ndirty };
+                    add(st, E::Req { op, with_data: true }, HomeSt { own: nown2, own_dirty: ndirty2 && nown2 != I, view: nv, pending_fwd: None }, acts);
+                }
+            }
+            RemoteView::EorM => {
+                // Any new request from a remote we believe E/M implies an
+                // in-flight voluntary downgrade (request-overtakes-
+                // downgrade race): stall until it lands.
+                for op in [ReadShared, ReadExclusive, UpgradeS2E] {
+                    add(st, E::Req { op, with_data: false }, HomeSt { pending_fwd: Some(PendingFwd::AwaitVolDowngrade), ..st }, vec![A::Stall]);
+                }
+                // Voluntary downgrades from E/M (transitions 4-7).
+                for (op, new_view) in [(VolDowngradeI, RemoteView::I), (VolDowngradeS, RemoteView::S)] {
+                    // clean (remote held E)
+                    add(st, E::Req { op, with_data: false }, HomeSt { own, own_dirty, view: new_view, pending_fwd: None }, vec![]);
+                    // dirty (remote held M) — home writes RAM or caches.
+                    let (nown, ndirty, acts) = if policy.cache_writebacks {
+                        if new_view == RemoteView::S {
+                            (S, true, vec![A::AcceptWriteback, A::FillOwn { state: S, dirty: true }])
+                        } else {
+                            (M, true, vec![A::AcceptWriteback, A::FillOwn { state: M, dirty: true }])
+                        }
+                    } else {
+                        (own, own_dirty, vec![A::AcceptWriteback, A::WriteRam])
+                    };
+                    add(st, E::Req { op, with_data: true }, HomeSt { own: nown, own_dirty: ndirty, view: new_view, pending_fwd: None }, acts);
+                }
+            }
+        }
+
+        // Local (home-side application) accesses.
+        match view {
+            RemoteView::I | RemoteView::S => {
+                // Reads: hit if cached, else fill shared-style (home local
+                // states are silent — any of the local chain is fine).
+                if own == I {
+                    add(st, E::LocalRead, HomeSt { own: if view == RemoteView::S { S } else { E }, own_dirty: false, view, pending_fwd: None }, vec![A::FillOwn { state: if view == RemoteView::S { S } else { E }, dirty: false }]);
+                } else {
+                    add(st, E::LocalRead, st, vec![]);
+                }
+                // Writes: need exclusivity; if the remote shares, recall it.
+                if view == RemoteView::S {
+                    add(st, E::LocalWrite, HomeSt { own, own_dirty, view, pending_fwd: Some(PendingFwd::ToI) }, vec![A::SendFwd { op: FwdDowngradeI }, A::Stall]);
+                } else if own.writable() {
+                    add(st, E::LocalWrite, HomeSt { own: M, own_dirty: true, view, pending_fwd: None }, vec![A::SetOwnDirty(true)]);
+                } else {
+                    // own is I or S with remote I: silent local upgrade.
+                    add(st, E::LocalWrite, HomeSt { own: M, own_dirty: true, view, pending_fwd: None }, vec![A::FillOwn { state: M, dirty: true }]);
+                }
+                // Evict own copy: write back if dirty.
+                if own == I {
+                    add(st, E::LocalEvict, st, vec![]);
+                } else {
+                    let acts = if own_dirty || own == M { vec![A::WriteRam, A::DropOwn] } else { vec![A::DropOwn] };
+                    add(st, E::LocalEvict, HomeSt { own: I, own_dirty: false, view, pending_fwd: None }, acts);
+                }
+                // Recall (application wants remote copy gone).
+                if view == RemoteView::S {
+                    add(st, E::RecallI, HomeSt { own, own_dirty, view, pending_fwd: Some(PendingFwd::ToI) }, vec![A::SendFwd { op: FwdDowngradeI }]);
+                } else {
+                    add(st, E::RecallI, st, vec![]); // nothing to recall
+                }
+            }
+            RemoteView::EorM => {
+                // Home-side access to a remotely-owned line: recall first.
+                add(st, E::LocalRead, HomeSt { own, own_dirty, view, pending_fwd: Some(PendingFwd::ToS) }, vec![A::SendFwd { op: FwdDowngradeS }, A::Stall]);
+                add(st, E::LocalWrite, HomeSt { own, own_dirty, view, pending_fwd: Some(PendingFwd::ToI) }, vec![A::SendFwd { op: FwdDowngradeI }, A::Stall]);
+                add(st, E::LocalEvict, st, vec![]); // nothing cached locally
+                add(st, E::RecallI, HomeSt { own, own_dirty, view, pending_fwd: Some(PendingFwd::ToI) }, vec![A::SendFwd { op: FwdDowngradeI }]);
+            }
+        }
+
+        let _ = has_ext; // extension is remote-side; home issues it via RecallI variants in subsets
+    }
+
+    rules
+}
+
+/// Grant a shared copy from home state `st` (transitions 1 and 10).
+fn grant_shared(st: HomeSt, policy: HomePolicy) -> (Vec<HAction>, HomeSt) {
+    use CacheState::*;
+    use HAction as A;
+    match st.own {
+        I => (
+            vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: true, dirty: false }],
+            HomeSt { own: I, own_dirty: false, view: RemoteView::S, pending_fwd: None },
+        ),
+        S | E => (
+            vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: false, dirty: false }],
+            HomeSt { own: S, own_dirty: st.own_dirty, view: RemoteView::S, pending_fwd: None },
+        ),
+        M => {
+            if policy.hidden_o {
+                // Transition 10, hidden-O outcome: forward dirty data,
+                // keep it dirty+shared at home; strictly invisible to the
+                // remote (the response is NOT marked dirty — only
+                // exclusive transfers hand over dirtiness).
+                (
+                    vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: false, dirty: false }],
+                    HomeSt { own: S, own_dirty: true, view: RemoteView::S, pending_fwd: None },
+                )
+            } else {
+                // Minimal-MESI outcome: write back, drop, serve from RAM.
+                (
+                    vec![A::WriteRam, A::DropOwn, A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: true, dirty: false }],
+                    HomeSt { own: I, own_dirty: false, view: RemoteView::S, pending_fwd: None },
+                )
+            }
+        }
+    }
+}
+
+/// Grant an exclusive copy (transition 2; from M this is the MI -> IM
+/// dirty-ownership transfer).
+fn grant_exclusive(st: HomeSt) -> (Vec<HAction>, HomeSt) {
+    use CacheState::*;
+    use HAction as A;
+    let next = HomeSt { own: I, own_dirty: false, view: RemoteView::EorM, pending_fwd: None };
+    match st.own {
+        I => (
+            vec![A::SendRsp { op: CohOp::ReadExclusive, with_data: true, from_ram: true, dirty: false }],
+            next,
+        ),
+        S | E => {
+            let mut acts = vec![];
+            if st.own_dirty {
+                // hidden O: we must not leak dirtiness; transfer it.
+                acts.push(A::DropOwn);
+                acts.push(A::SendRsp { op: CohOp::ReadExclusive, with_data: true, from_ram: false, dirty: true });
+            } else {
+                acts.push(A::DropOwn);
+                acts.push(A::SendRsp { op: CohOp::ReadExclusive, with_data: true, from_ram: false, dirty: false });
+            }
+            (acts, next)
+        }
+        M => (
+            vec![A::DropOwn, A::SendRsp { op: CohOp::ReadExclusive, with_data: true, from_ram: false, dirty: true }],
+            next,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::states::Node;
+    use crate::proto::transitions::reference_transitions;
+
+    fn remote_rules() -> RemoteRules {
+        generate_remote(&reference_transitions())
+    }
+    fn home_rules() -> HomeRules {
+        generate_home(&reference_transitions(), HomePolicy::default())
+    }
+
+    #[test]
+    fn remote_machine_is_closed_over_possible_events() {
+        // Every stable state must handle every event the home may send
+        // given some directory view (R7 at the machine level), and every
+        // local event.
+        let rules = remote_rules();
+        use CacheState::*;
+        for s in [I, S, E, M] {
+            for ev in [REvent::Read, REvent::Write, REvent::Evict, REvent::Demote] {
+                assert!(
+                    rules.contains_key(&(RemoteSt::Stable(s), ev)),
+                    "missing rule {s:?} x {ev:?}"
+                );
+            }
+            // home-initiated invalidation must be handled everywhere
+            assert!(rules.contains_key(&(RemoteSt::Stable(s), REvent::Fwd { op: CohOp::FwdDowngradeI })));
+        }
+        // demote-to-S only targets E/M holders (+ I for races)
+        for s in [I, E, M] {
+            assert!(rules.contains_key(&(RemoteSt::Stable(s), REvent::Fwd { op: CohOp::FwdDowngradeS })));
+        }
+    }
+
+    #[test]
+    fn remote_transients_answer_fwds_immediately_and_mark_use_once() {
+        let rules = remote_rules();
+        let st = RemoteSt::Wait { kind: WaitKind::FillS, deferred: DeferredFwd::None };
+        let r = &rules[&(st, REvent::Fwd { op: CohOp::FwdDowngradeI })];
+        assert_eq!(r.next, RemoteSt::Wait { kind: WaitKind::FillS, deferred: DeferredFwd::ToI });
+        // the fwd is answered NOW (clean): deferring deadlocks the
+        // eviction + re-request race where the home stalled our fill
+        assert!(
+            r.actions
+                .contains(&RAction::RspToFwd { op: CohOp::FwdDowngradeI, with_data: false }),
+            "{:?}",
+            r.actions
+        );
+        // the fill is then use-once: install + drop
+        let r2 = &rules[&(r.next, REvent::Rsp { granted: CohOp::ReadShared, dirty: false })];
+        assert_eq!(r2.next, RemoteSt::Stable(CacheState::S));
+        assert!(r2.actions.contains(&RAction::DropAfterFill), "{:?}", r2.actions);
+    }
+
+    #[test]
+    fn upgrade_race_converts_to_exclusive_fill() {
+        let rules = remote_rules();
+        let st = RemoteSt::Wait { kind: WaitKind::UpgAck, deferred: DeferredFwd::None };
+        let r = &rules[&(st, REvent::Fwd { op: CohOp::FwdDowngradeI })];
+        assert_eq!(r.next, RemoteSt::Wait { kind: WaitKind::FillE, deferred: DeferredFwd::None });
+        assert!(r.actions.contains(&RAction::RspToFwd { op: CohOp::FwdDowngradeI, with_data: false }));
+        // the converted response then fills E
+        let r2 = &rules[&(r.next, REvent::Rsp { granted: CohOp::ReadExclusive, dirty: false })];
+        assert_eq!(r2.next, RemoteSt::Stable(CacheState::E));
+    }
+
+    #[test]
+    fn dirty_eviction_attaches_data() {
+        let rules = remote_rules();
+        let r = &rules[&(RemoteSt::Stable(CacheState::M), REvent::Evict)];
+        assert!(r.actions.contains(&RAction::AttachDirtyData));
+        assert!(r.actions.contains(&RAction::SendReq(CohOp::VolDowngradeI)));
+        // clean eviction must not
+        let r = &rules[&(RemoteSt::Stable(CacheState::E), REvent::Evict)];
+        assert!(!r.actions.contains(&RAction::AttachDirtyData));
+    }
+
+    #[test]
+    fn home_machine_covers_all_requests_in_all_states() {
+        let rules = home_rules();
+        for st in home_states() {
+            for op in CohOp::TABLE1 {
+                if op.initiator() != Node::Remote {
+                    continue;
+                }
+                let with_data_variants: &[bool] = match op.request_payload() {
+                    crate::proto::messages::Payload::IfDirty => &[false, true],
+                    _ => &[false],
+                };
+                for &wd in with_data_variants {
+                    assert!(
+                        rules.contains_key(&(st, HEvent::Req { op, with_data: wd })),
+                        "home missing rule {st:?} x {op:?} data={wd}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn home_transition_10_keeps_hidden_o_and_never_marks_rsp_dirty() {
+        let rules = home_rules();
+        let st = HomeSt { own: CacheState::M, own_dirty: true, view: RemoteView::I, pending_fwd: None };
+        let r = &rules[&(st, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        // hidden O: home retains S + dirty
+        assert_eq!(r.next.own, CacheState::S);
+        assert!(r.next.own_dirty);
+        assert_eq!(r.next.view, RemoteView::S);
+        // requirement 4: the ReadShared response must not expose dirtiness
+        for a in &r.actions {
+            if let HAction::SendRsp { op, dirty, .. } = a {
+                assert_eq!(*op, CohOp::ReadShared);
+                assert!(!dirty, "hidden O leaked to remote");
+            }
+        }
+    }
+
+    #[test]
+    fn home_without_hidden_o_writes_back_first() {
+        let rules = generate_home(
+            &reference_transitions(),
+            HomePolicy { hidden_o: false, cache_writebacks: false },
+        );
+        let st = HomeSt { own: CacheState::M, own_dirty: true, view: RemoteView::I, pending_fwd: None };
+        let r = &rules[&(st, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        assert!(r.actions.contains(&HAction::WriteRam));
+        assert_eq!(r.next.own, CacheState::I);
+        assert_eq!(r.next.view, RemoteView::S);
+    }
+
+    #[test]
+    fn home_stalls_requests_from_supposed_owner() {
+        // request-overtakes-downgrade race
+        let rules = home_rules();
+        let st = HomeSt { own: CacheState::I, own_dirty: false, view: RemoteView::EorM, pending_fwd: None };
+        let r = &rules[&(st, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        assert_eq!(r.next.pending_fwd, Some(PendingFwd::AwaitVolDowngrade));
+        assert!(r.actions.contains(&HAction::Stall));
+        // and the arriving writeback releases it
+        let r2 = &rules[&(r.next, HEvent::Req { op: CohOp::VolDowngradeI, with_data: true })];
+        assert_eq!(r2.next.pending_fwd, None);
+        assert_eq!(r2.next.view, RemoteView::I);
+    }
+
+    #[test]
+    fn home_exclusive_grant_from_m_transfers_dirtiness() {
+        let rules = home_rules();
+        let st = HomeSt { own: CacheState::M, own_dirty: true, view: RemoteView::I, pending_fwd: None };
+        let r = &rules[&(st, HEvent::Req { op: CohOp::ReadExclusive, with_data: false })];
+        assert_eq!(r.next.view, RemoteView::EorM);
+        assert_eq!(r.next.own, CacheState::I);
+        let mut saw_dirty_rsp = false;
+        for a in &r.actions {
+            if let HAction::SendRsp { dirty, .. } = a {
+                saw_dirty_rsp = *dirty;
+            }
+        }
+        assert!(saw_dirty_rsp, "MI -> IM must hand dirtiness to the remote");
+    }
+
+    #[test]
+    fn stable_projection_matches_envelope_transitions() {
+        // Every remote-initiated signalled transition in the envelope must
+        // be realizable as: remote rule emits SendReq(op) from the stable
+        // source, home rule accepts it and lands in a home state whose
+        // (own-visible, view) projection matches one of the envelope
+        // outcomes.
+        let spec = reference_transitions();
+        let rrules = remote_rules();
+        let hrules = home_rules();
+        for tr in spec.iter().filter(|t| t.by == Node::Remote && t.op.is_some()) {
+            let op = tr.op.unwrap();
+            // find a remote rule emitting this op from the source's remote state
+            let src_remote = RemoteSt::Stable(tr.from.remote);
+            let emits = rrules.iter().any(|((st, _), rule)| {
+                *st == src_remote && rule.actions.iter().any(|a| *a == RAction::SendReq(op))
+            });
+            assert!(emits, "no remote rule emits {op:?} from {:?}", tr.from.remote);
+            // home must accept it in matching directory states
+            let view = match tr.from.remote {
+                CacheState::I => RemoteView::I,
+                CacheState::S => RemoteView::S,
+                _ => RemoteView::EorM,
+            };
+            let matching_home: Vec<&HomeSt> = home_states()
+                .iter()
+                .filter(|h| h.view == view && h.own == tr.from.home && h.pending_fwd.is_none())
+                .cloned()
+                .map(|h| Box::leak(Box::new(h)) as &HomeSt)
+                .collect();
+            for h in matching_home {
+                let wd_variants: &[bool] = match op.request_payload() {
+                    crate::proto::messages::Payload::IfDirty => {
+                        if tr.from.remote.dirty() { &[true] } else { &[false] }
+                    }
+                    _ => &[false],
+                };
+                for &wd in wd_variants {
+                    assert!(
+                        hrules.contains_key(&(*h, HEvent::Req { op, with_data: wd })),
+                        "home cannot receive {op:?} in {h:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! ECI protocol states and the "distance" partial order (paper Fig. 1).
+//!
+//! The paper abstracts the ThunderX-1's native MOESI into an *enhanced MESI*
+//! over **joint states**: the pair `(home, remote)` of per-node stable
+//! states for one cache line. Validity, the partial order by distance of
+//! the data from its at-rest position, and the local-transition
+//! (indistinguishability) groups are all encoded here, and everything the
+//! paper states in prose about Fig. 1 is asserted by the unit tests below.
+//!
+//! Naming convention follows the paper: `IS` means home = I, remote = S.
+//!
+//! The hidden **O** state (home holds the line dirty while the remote holds
+//! it shared — MOESI's "owned") is deliberately *not* a joint state: the
+//! paper requires it to be externally indistinguishable from `SS`
+//! (requirement 4). Agents carry a private `dirty` bit instead; see
+//! [`crate::agents::home`].
+
+use std::fmt;
+
+/// Per-node stable cache state (MESI; `O` exists only as home-internal
+/// dirtiness, see module docs).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum CacheState {
+    /// Invalid — no copy.
+    I,
+    /// Shared — read-only copy; other copies may exist.
+    S,
+    /// Exclusive — the only copy, clean.
+    E,
+    /// Modified — the only copy, dirty.
+    M,
+}
+
+impl CacheState {
+    pub const ALL: [CacheState; 4] = [CacheState::I, CacheState::S, CacheState::E, CacheState::M];
+
+    /// May the node read the line without a coherence action?
+    #[inline]
+    pub fn readable(self) -> bool {
+        self != CacheState::I
+    }
+    /// May the node write the line without a coherence action?
+    /// (A write to `E` silently upgrades to `M` — a *local* transition.)
+    #[inline]
+    pub fn writable(self) -> bool {
+        matches!(self, CacheState::E | CacheState::M)
+    }
+    #[inline]
+    pub fn dirty(self) -> bool {
+        self == CacheState::M
+    }
+    /// Single-letter name as used in the paper.
+    pub fn letter(self) -> char {
+        match self {
+            CacheState::I => 'I',
+            CacheState::S => 'S',
+            CacheState::E => 'E',
+            CacheState::M => 'M',
+        }
+    }
+}
+
+/// A joint (home, remote) state for one cache line.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Joint {
+    pub home: CacheState,
+    pub remote: CacheState,
+}
+
+#[allow(non_upper_case_globals)]
+impl Joint {
+    pub const II: Joint = Joint::new(CacheState::I, CacheState::I);
+    pub const IS: Joint = Joint::new(CacheState::I, CacheState::S);
+    pub const IE: Joint = Joint::new(CacheState::I, CacheState::E);
+    pub const IM: Joint = Joint::new(CacheState::I, CacheState::M);
+    pub const SI: Joint = Joint::new(CacheState::S, CacheState::I);
+    pub const SS: Joint = Joint::new(CacheState::S, CacheState::S);
+    pub const EI: Joint = Joint::new(CacheState::E, CacheState::I);
+    pub const MI: Joint = Joint::new(CacheState::M, CacheState::I);
+
+    pub const fn new(home: CacheState, remote: CacheState) -> Joint {
+        Joint { home, remote }
+    }
+
+    /// The eight externally-visible joint states of Fig. 1(c), in the
+    /// paper's reading order.
+    pub const ALL: [Joint; 8] = [
+        Joint::II,
+        Joint::IS,
+        Joint::IE,
+        Joint::IM,
+        Joint::SI,
+        Joint::SS,
+        Joint::EI,
+        Joint::MI,
+    ];
+
+    /// Is this pair of per-node states coherent?
+    ///
+    /// Single-writer / multiple-reader: `E`/`M` on either side excludes any
+    /// copy on the other; `S` may pair only with `I` or `S`.
+    pub fn is_valid(self) -> bool {
+        use CacheState::*;
+        match (self.home, self.remote) {
+            (I, _) | (_, I) => true,
+            (S, S) => true,
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Debug for Joint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.home.letter(), self.remote.letter())
+    }
+}
+impl fmt::Display for Joint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Covering edges of the distance partial order (Hasse diagram of
+/// Fig. 1(a)): `(lower, higher)`. "Higher" = data farther from its at-rest
+/// position (remote-ness, then dirtiness).
+///
+/// * home-local chain `II < SI < EI < MI` — the home node caching its own
+///   memory, increasingly exclusively/dirtily; all local (dotted) edges.
+/// * `II < IS`: read-shared (transition 1).
+/// * `SI < SS`, `EI < SS`: data also granted to the remote.
+/// * `SS < IS`: home drops its clean copy while remote still shares (the
+///   dotted edge inside the `*S` group of Fig. 1(b)).
+/// * `IS < IE`, `SS < IE`: upgrade shared-to-exclusive (transition 3).
+/// * `IE < IM`: the remote dirties its exclusive copy — local (dotted),
+///   and by requirement 3 traversable only upward.
+/// * `MI < IM`: read-exclusive of a home-dirty line moves the dirty data
+///   across the link.
+pub const COVERING_EDGES: [(Joint, Joint); 9] = [
+    (Joint::II, Joint::SI),
+    (Joint::SI, Joint::EI),
+    (Joint::EI, Joint::MI),
+    (Joint::II, Joint::IS),
+    (Joint::SI, Joint::SS),
+    (Joint::EI, Joint::SS),
+    (Joint::SS, Joint::IS),
+    (Joint::IS, Joint::IE),
+    (Joint::IE, Joint::IM),
+];
+
+/// Extra covering edge: `MI < IM` (read-exclusive forwards home-dirty data).
+pub const COVERING_EDGE_MI_IM: (Joint, Joint) = (Joint::MI, Joint::IM);
+
+fn idx(j: Joint) -> usize {
+    Joint::ALL.iter().position(|&k| k == j).expect("not a stable joint state")
+}
+
+/// The distance partial order as a reachability matrix (transitive closure
+/// of the covering edges). `le(a, b)` means `a` is at or below `b`.
+pub struct DistanceOrder {
+    le: [[bool; 8]; 8],
+}
+
+impl Default for DistanceOrder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DistanceOrder {
+    pub fn new() -> Self {
+        let mut le = [[false; 8]; 8];
+        for i in 0..8 {
+            le[i][i] = true;
+        }
+        let mut edges: Vec<(Joint, Joint)> = COVERING_EDGES.to_vec();
+        edges.push(COVERING_EDGE_MI_IM);
+        for (a, b) in edges {
+            le[idx(a)][idx(b)] = true;
+        }
+        // Floyd-Warshall closure.
+        for k in 0..8 {
+            for i in 0..8 {
+                if le[i][k] {
+                    for j in 0..8 {
+                        if le[k][j] {
+                            le[i][j] = true;
+                        }
+                    }
+                }
+            }
+        }
+        DistanceOrder { le }
+    }
+
+    #[inline]
+    pub fn le(&self, a: Joint, b: Joint) -> bool {
+        self.le[idx(a)][idx(b)]
+    }
+    #[inline]
+    pub fn lt(&self, a: Joint, b: Joint) -> bool {
+        a != b && self.le(a, b)
+    }
+    /// Comparable under the distance order?
+    #[inline]
+    pub fn related(&self, a: Joint, b: Joint) -> bool {
+        self.le(a, b) || self.le(b, a)
+    }
+}
+
+/// Which node observes a state/transition.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Node {
+    Home,
+    Remote,
+}
+
+impl Node {
+    pub fn other(self) -> Node {
+        match self {
+            Node::Home => Node::Remote,
+            Node::Remote => Node::Home,
+        }
+    }
+    /// The component of a joint state this node *is*.
+    pub fn own_state(self, j: Joint) -> CacheState {
+        match self {
+            Node::Home => j.home,
+            Node::Remote => j.remote,
+        }
+    }
+    /// The component of a joint state this node *sees at the partner*.
+    pub fn partner_state(self, j: Joint) -> CacheState {
+        self.other().own_state(j)
+    }
+}
+
+/// Are two joint states indistinguishable to `observer`?
+///
+/// Fig. 1(b): to the **remote**, `{II, SI, EI, MI}` collapse to `*I` and
+/// `{IS, SS}` to `*S` (the home side must keep its dirtiness invisible,
+/// requirement 4). To the **home**, `{IE, IM}` collapse (the upgrade to
+/// `IM` is silent — the paper: "The home node cannot distinguish IM and
+/// IE").
+pub fn indistinguishable(observer: Node, a: Joint, b: Joint) -> bool {
+    match observer {
+        Node::Remote => a.remote == b.remote,
+        Node::Home => {
+            a.home == b.home
+                && matches!(
+                    (a.remote, b.remote),
+                    (x, y) if x == y
+                        || matches!((x, y), (CacheState::E, CacheState::M) | (CacheState::M, CacheState::E))
+                )
+        }
+    }
+}
+
+/// The equivalence class of `j` as seen by `observer`, over stable states.
+pub fn visibility_class(observer: Node, j: Joint) -> Vec<Joint> {
+    Joint::ALL
+        .iter()
+        .copied()
+        .filter(|&k| indistinguishable(observer, j, k))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use CacheState::*;
+
+    #[test]
+    fn exactly_eight_valid_joint_states() {
+        let mut valid = Vec::new();
+        for &h in &CacheState::ALL {
+            for &r in &CacheState::ALL {
+                let j = Joint::new(h, r);
+                if j.is_valid() {
+                    valid.push(j);
+                }
+            }
+        }
+        assert_eq!(valid.len(), 8);
+        for j in Joint::ALL {
+            assert!(valid.contains(&j));
+        }
+        // and the single-writer violations are rejected
+        assert!(!Joint::new(M, M).is_valid());
+        assert!(!Joint::new(E, S).is_valid());
+        assert!(!Joint::new(S, M).is_valid());
+        assert!(!Joint::new(E, E).is_valid());
+    }
+
+    #[test]
+    fn paper_example_im_above_ii() {
+        // "the order is transitive, and thus IM ... compares higher than II"
+        let ord = DistanceOrder::new();
+        assert!(ord.lt(Joint::II, Joint::IM));
+    }
+
+    #[test]
+    fn order_is_a_partial_order() {
+        let ord = DistanceOrder::new();
+        // reflexive
+        for a in Joint::ALL {
+            assert!(ord.le(a, a));
+        }
+        // antisymmetric
+        for a in Joint::ALL {
+            for b in Joint::ALL {
+                if a != b {
+                    assert!(!(ord.le(a, b) && ord.le(b, a)), "{a} and {b} form a cycle");
+                }
+            }
+        }
+        // transitive (by construction, but verify)
+        for a in Joint::ALL {
+            for b in Joint::ALL {
+                for c in Joint::ALL {
+                    if ord.le(a, b) && ord.le(b, c) {
+                        assert!(ord.le(a, c));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mi_unrelated_to_is_and_ss_the_transition_10_exception() {
+        // Transition 10 (MI -> SS or IS on a remote read of a home-dirty
+        // line) is called out as the one exception to requirement 1, so MI
+        // must be *unrelated* to both targets.
+        let ord = DistanceOrder::new();
+        assert!(!ord.related(Joint::MI, Joint::SS));
+        assert!(!ord.related(Joint::MI, Joint::IS));
+    }
+
+    #[test]
+    fn ie_and_mi_unrelated_paper_example() {
+        // "Transitions between unrelated states e.g. (IE and MI) are
+        // forbidden" — so they must indeed be unrelated.
+        let ord = DistanceOrder::new();
+        assert!(!ord.related(Joint::IE, Joint::MI));
+    }
+
+    #[test]
+    fn ii_is_bottom_im_is_top() {
+        let ord = DistanceOrder::new();
+        for j in Joint::ALL {
+            assert!(ord.le(Joint::II, j), "II should be below {j}");
+            assert!(ord.le(j, Joint::IM), "{j} should be below IM");
+        }
+    }
+
+    #[test]
+    fn remote_visibility_groups_match_fig_1b() {
+        // *I = {II, SI, EI, MI}
+        let star_i = visibility_class(Node::Remote, Joint::II);
+        assert_eq!(star_i.len(), 4);
+        for j in [Joint::II, Joint::SI, Joint::EI, Joint::MI] {
+            assert!(star_i.contains(&j));
+        }
+        // *S = {IS, SS}
+        let star_s = visibility_class(Node::Remote, Joint::IS);
+        assert_eq!(star_s, vec![Joint::IS, Joint::SS]);
+        // IE and IM are their own classes for the remote
+        assert_eq!(visibility_class(Node::Remote, Joint::IE), vec![Joint::IE]);
+        assert_eq!(visibility_class(Node::Remote, Joint::IM), vec![Joint::IM]);
+    }
+
+    #[test]
+    fn home_cannot_distinguish_ie_from_im() {
+        assert!(indistinguishable(Node::Home, Joint::IE, Joint::IM));
+        let class = visibility_class(Node::Home, Joint::IE);
+        assert_eq!(class, vec![Joint::IE, Joint::IM]);
+        // but home distinguishes everything else
+        assert!(!indistinguishable(Node::Home, Joint::IS, Joint::SS));
+        assert!(!indistinguishable(Node::Home, Joint::II, Joint::SI));
+    }
+
+    #[test]
+    fn readable_writable_dirty() {
+        assert!(!I.readable());
+        assert!(S.readable() && !S.writable());
+        assert!(E.writable() && !E.dirty());
+        assert!(M.writable() && M.dirty());
+    }
+}

@@ -1,0 +1,433 @@
+//! Protocol specialization (paper §3.4, Fig. 2).
+//!
+//! ECI's point is that the coherence protocol can be *subset* per
+//! application. A [`Subset`] is a filtered transition table plus agent
+//! capability flags; [`validate`] proves (by the envelope rules plus a
+//! reachability argument) that a subset interoperates with a partner that
+//! speaks the full protocol — formalizing the paper's §3.4 narrative that
+//! walks from full MESI down to the stateless read-only home.
+//!
+//! The four reference instances:
+//!
+//! * [`Subset::full_symmetric`] — Fig. 2(b): CPU and FPGA as peers, the
+//!   complete envelope.
+//! * [`Subset::asymmetric_accelerator`] — Fig. 2(a): the FPGA as a caching
+//!   agent / DMA initiator; home-side logic stays on the CPU.
+//! * [`Subset::cpu_initiator_readonly`] — Fig. 2(c) with a read-only
+//!   workload: the two-state `{II, IS}` protocol (home still invalidates
+//!   to evict clean data).
+//! * [`Subset::stateless_readonly`] — the paper's headline optimization:
+//!   the FPGA home answers `ReadShared` and silently ignores voluntary
+//!   downgrades, tracking **no state at all** per line (`I*`). Used by all
+//!   three operator workloads of §5.
+
+use super::envelope::{check_envelope, check_interop, Violation};
+use super::messages::CohOp;
+use super::states::{Joint, Node};
+use super::transitions::{reference_transitions, Tag, Transition};
+
+/// Optional protocol features beyond the minimal envelope.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Feature {
+    /// Transition 10 / hidden O (MOESI concession). On the ThunderX-1.
+    HiddenO,
+    /// "Downgrade remote to invalid and forward" (IS -> SI). *Not* on the
+    /// ThunderX-1; legal under the envelope (§3.3).
+    ForwardOnInvalidate,
+}
+
+/// A protocol subset: the transitions an implementation supports, plus
+/// capability flags that the agents and the resource model consume.
+#[derive(Clone, Debug)]
+pub struct Subset {
+    pub name: &'static str,
+    pub transitions: Vec<Transition>,
+    /// Does the home node keep per-line directory state?
+    pub home_tracks_state: bool,
+    /// Does the home node cache data lines?
+    pub home_caches: bool,
+    /// Does the remote node cache data lines? (always true for the CPU)
+    pub remote_caches: bool,
+    pub features: Vec<Feature>,
+}
+
+impl Subset {
+    /// Fig. 2(b): fully-coherent symmetric two-node system.
+    pub fn full_symmetric() -> Subset {
+        let transitions = reference_transitions()
+            .into_iter()
+            .filter(|t| !matches!(t.tag, Tag::Extension))
+            .collect();
+        Subset {
+            name: "full-symmetric",
+            transitions,
+            home_tracks_state: true,
+            home_caches: true,
+            remote_caches: true,
+            features: vec![Feature::HiddenO],
+        }
+    }
+
+    /// Fig. 2(a): the accelerator as caching agent/DMA initiator. The
+    /// FPGA plays the *remote* role against the CPU's home; the subset
+    /// drops home-side local caching transitions (the accelerator homes
+    /// no memory).
+    pub fn asymmetric_accelerator() -> Subset {
+        let transitions = reference_transitions()
+            .into_iter()
+            .filter(|t| !matches!(t.tag, Tag::Extension))
+            // no home-local caching on the accelerator side
+            .filter(|t| !(t.tag == Tag::Local && t.by == Node::Home))
+            .collect();
+        Subset {
+            name: "asymmetric-accelerator",
+            transitions,
+            home_tracks_state: true,
+            home_caches: false,
+            remote_caches: true,
+            features: vec![Feature::HiddenO],
+        }
+    }
+
+    /// Fig. 2(c) + read-only workload, first simplification step of §3.4:
+    /// states {II, IS}; home-initiated invalidation retained only to evict
+    /// clean data; remote keeps ReadShared + voluntary invalidation.
+    pub fn cpu_initiator_readonly() -> Subset {
+        let keep_states = [Joint::II, Joint::IS];
+        // Keep only the rows among {II, IS} for the three surviving ops,
+        // trimming multi-outcome rows to the outcomes inside the subset
+        // (the trimmed outcomes are home policies the subset forgoes,
+        // e.g. caching a returning line — dropping them is always legal).
+        let transitions: Vec<Transition> = reference_transitions()
+            .into_iter()
+            .filter_map(|mut t| {
+                if !keep_states.contains(&t.from)
+                    || !matches!(
+                        t.op,
+                        Some(CohOp::ReadShared)
+                            | Some(CohOp::VolDowngradeI)
+                            | Some(CohOp::FwdDowngradeI)
+                    )
+                {
+                    return None;
+                }
+                t.outcomes.retain(|o| keep_states.contains(o));
+                if t.outcomes.is_empty() {
+                    None
+                } else {
+                    Some(t)
+                }
+            })
+            .collect();
+        Subset {
+            name: "cpu-initiator-readonly",
+            transitions,
+            home_tracks_state: true,
+            home_caches: false,
+            remote_caches: true,
+            features: vec![],
+        }
+    }
+
+    /// The paper's fully-degenerate endpoint: "the FPGA need track no
+    /// state at all for a cache line". Home answers `ReadShared` with
+    /// data and silently ignores voluntary downgrades; there are **no**
+    /// home-initiated transitions. Externally the line lives in the
+    /// combined state `I*`.
+    pub fn stateless_readonly() -> Subset {
+        let transitions: Vec<Transition> = reference_transitions()
+            .into_iter()
+            .filter_map(|mut t| {
+                if !matches!(t.op, Some(CohOp::ReadShared) | Some(CohOp::VolDowngradeI))
+                    || t.from.home != super::states::CacheState::I
+                {
+                    return None;
+                }
+                // the stateless home never caches: trim outcomes that
+                // would put data in the home cache
+                t.outcomes.retain(|o| o.home == super::states::CacheState::I);
+                if t.outcomes.is_empty() {
+                    None
+                } else {
+                    Some(t)
+                }
+            })
+            .collect();
+        Subset {
+            name: "stateless-readonly",
+            transitions,
+            home_tracks_state: false,
+            home_caches: false,
+            remote_caches: true,
+            features: vec![],
+        }
+    }
+
+    /// Full protocol plus the §3.3 forward extension.
+    pub fn extended() -> Subset {
+        let mut s = Subset::full_symmetric();
+        s.name = "extended-forward";
+        s.transitions = reference_transitions(); // includes the extension row
+        s.features.push(Feature::ForwardOnInvalidate);
+        s
+    }
+
+    /// Joint states reachable from `II` under this subset's transitions.
+    pub fn reachable_states(&self) -> Vec<Joint> {
+        let mut reach = vec![Joint::II];
+        let mut frontier = vec![Joint::II];
+        while let Some(j) = frontier.pop() {
+            for t in &self.transitions {
+                if t.from == j {
+                    for &o in &t.outcomes {
+                        if !reach.contains(&o) {
+                            reach.push(o);
+                            frontier.push(o);
+                        }
+                    }
+                }
+            }
+        }
+        reach.sort_by_key(|j| Joint::ALL.iter().position(|k| k == j));
+        reach
+    }
+
+    /// The ops `node` may emit within this subset (over reachable states).
+    pub fn emittable_ops(&self, node: Node) -> Vec<CohOp> {
+        let reach = self.reachable_states();
+        let mut ops: Vec<CohOp> = self
+            .transitions
+            .iter()
+            .filter(|t| t.by == node && reach.contains(&t.from))
+            .filter_map(|t| t.op)
+            .collect();
+        ops.sort_by_key(|o| *o as u8);
+        ops.dedup();
+        ops
+    }
+
+    /// Number of distinguishable states the home must track per line under
+    /// this subset (the paper's space argument: 1 for stateless-readonly).
+    pub fn home_state_count(&self) -> usize {
+        if !self.home_tracks_state {
+            return 1; // the combined I* state
+        }
+        let reach = self.reachable_states();
+        // home distinguishes states up to its own indistinguishability
+        let mut classes: Vec<Vec<Joint>> = Vec::new();
+        for &j in &reach {
+            let cls: Vec<Joint> = reach
+                .iter()
+                .copied()
+                .filter(|&k| super::states::indistinguishable(Node::Home, j, k))
+                .collect();
+            if !classes.contains(&cls) {
+                classes.push(cls);
+            }
+        }
+        classes.len()
+    }
+}
+
+/// Validate a subset against a partner implementation (requirement 5 and
+/// envelope conformance on the subset's own table), assuming the partner
+/// may emit any op in its table.
+pub fn validate(subset: &Subset, partner: &Subset) -> Vec<Violation> {
+    validate_with_workload(subset, partner, &CohOp::ALL)
+}
+
+/// Like [`validate`] but restricting the partner's emissions to
+/// `workload_ops` — the paper's R5 escape hatch: "an implementation must
+/// support all transitions the partner may signal, **unless it can be
+/// guaranteed these won't be generated (e.g. with a read-only workload)**".
+pub fn validate_with_workload(
+    subset: &Subset,
+    partner: &Subset,
+    workload_ops: &[CohOp],
+) -> Vec<Violation> {
+    let mut v = Vec::new();
+    // The subset's own table must respect the envelope on its reachable
+    // fragment. R1–R4 are structural and always apply; R6/R7 quantify over
+    // states, and a subset legitimately drops whole states, so re-run them
+    // restricted to the subset's reachable fragment.
+    let reach = subset.reachable_states();
+    for viol in check_envelope(&subset.transitions) {
+        if !matches!(viol.requirement, 6 | 7) {
+            v.push(viol);
+        }
+    }
+    // R6 over reachable states only.
+    for node in [Node::Home, Node::Remote] {
+        for &a in &reach {
+            for &b in &reach {
+                if a != b && super::states::indistinguishable(node, a, b) {
+                    let ops_a = super::transitions::signalled_ops_at(&subset.transitions, node, a);
+                    let ops_b = super::transitions::signalled_ops_at(&subset.transitions, node, b);
+                    for op in &ops_a {
+                        if !ops_b.contains(op) {
+                            v.push(Violation {
+                                requirement: 6,
+                                detail: format!(
+                                    "[{}] {node:?} may signal {op:?} in {a} but not in indistinguishable reachable {b}",
+                                    subset.name
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // R7 over reachable states only: the receiver must have a row for any
+    // op in every reachable state indistinguishable (to it) from a state
+    // where the op can occur.
+    for node in [Node::Home, Node::Remote] {
+        let receiver = node.other();
+        for op in CohOp::ALL {
+            let sources: Vec<Joint> = subset
+                .transitions
+                .iter()
+                .filter(|t| t.by == node && t.op == Some(op))
+                .map(|t| t.from)
+                .collect();
+            for &s in &sources {
+                for &j in &reach {
+                    if super::states::indistinguishable(receiver, s, j)
+                        && !sources.contains(&j)
+                        && subset.transitions.iter().any(|t| t.by == node && t.from == j)
+                    {
+                        v.push(Violation {
+                            requirement: 7,
+                            detail: format!(
+                                "[{}] {receiver:?} must handle {op:?} in reachable {j} (indistinguishable from {s})",
+                                subset.name
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // R5 both ways, restricted to the *reachable* fragment of the subset.
+    // (check_interop is table-global; filter to rows whose source state is
+    // reachable in this subset.)
+    for node in [Node::Home, Node::Remote] {
+        for viol in check_interop(&subset.transitions, node, &partner.transitions) {
+            v.push(viol);
+        }
+        // partner may emit only what we can receive — over our reachable
+        // states (e.g. a read-only home never sees ReadExclusive because
+        // IE is unreachable) and within the declared workload.
+        let partner_node = node.other();
+        for t in partner.transitions.iter().filter(|t| t.by == partner_node && t.op.is_some()) {
+            if !reach.contains(&t.from) {
+                continue; // unreachable under this subset's workload
+            }
+            if !workload_ops.contains(&t.op.unwrap()) {
+                continue; // the workload guarantees this is never emitted
+            }
+            let op = t.op.unwrap();
+            let handled = subset
+                .transitions
+                .iter()
+                .any(|s| s.by == partner_node && s.op == Some(op) && s.from == t.from);
+            if !handled {
+                v.push(Violation {
+                    requirement: 5,
+                    detail: format!(
+                        "[{}] partner may signal {op:?} from reachable {} but subset has no row",
+                        subset.name, t.from
+                    ),
+                });
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_symmetric_validates_against_itself() {
+        let s = Subset::full_symmetric();
+        let v = validate(&s, &s);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(s.reachable_states().len(), 8, "full protocol reaches all 8 joint states");
+    }
+
+    #[test]
+    fn readonly_subset_reaches_exactly_ii_and_is() {
+        // §3.4: "leaving only a two-state protocol consisting of IS and II"
+        let s = Subset::cpu_initiator_readonly();
+        assert_eq!(s.reachable_states(), vec![Joint::II, Joint::IS]);
+    }
+
+    #[test]
+    fn readonly_subset_home_sees_one_invalidate_transition() {
+        // "The only reason for this one remaining home-visible transition
+        // is to evict data known to be clean"
+        let s = Subset::cpu_initiator_readonly();
+        let home_ops = s.emittable_ops(Node::Home);
+        assert_eq!(home_ops, vec![CohOp::FwdDowngradeI]);
+    }
+
+    #[test]
+    fn stateless_readonly_tracks_one_state_and_initiates_nothing() {
+        // "the FPGA need track no state at all for a cache line"
+        let s = Subset::stateless_readonly();
+        assert_eq!(s.home_state_count(), 1);
+        assert!(s.emittable_ops(Node::Home).is_empty(), "no home-initiated transitions");
+        // remote may still read and voluntarily drop
+        let r = s.emittable_ops(Node::Remote);
+        assert_eq!(r, vec![CohOp::ReadShared, CohOp::VolDowngradeI]);
+    }
+
+    #[test]
+    fn stateless_readonly_interoperates_with_full_partner() {
+        // The CPU speaks the full protocol; under a read-only workload the
+        // stateless home must interoperate flawlessly (§5's claim). The
+        // workload guarantee is exactly R5's escape hatch.
+        let s = Subset::stateless_readonly();
+        let full = Subset::full_symmetric();
+        let v = validate_with_workload(&s, &full, &[CohOp::ReadShared, CohOp::VolDowngradeI]);
+        assert!(v.is_empty(), "stateless subset should validate: {v:?}");
+        // ...but WITHOUT the workload guarantee, validation correctly
+        // reports that a writing CPU would break it.
+        let v = validate(&s, &full);
+        assert!(
+            v.iter().any(|x| x.requirement == 5),
+            "a writing workload must be flagged: {v:?}"
+        );
+    }
+
+    #[test]
+    fn asymmetric_subset_validates() {
+        let s = Subset::asymmetric_accelerator();
+        let full = Subset::full_symmetric();
+        let v = validate(&s, &full);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn extended_subset_includes_forward() {
+        let s = Subset::extended();
+        assert!(s.transitions.iter().any(|t| t.op == Some(CohOp::FwdSharedInvalidate)));
+        assert!(s.features.contains(&Feature::ForwardOnInvalidate));
+        // still envelope-clean
+        let v = check_envelope(&s.transitions);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn state_count_shrinks_down_the_specialization_ladder() {
+        // the paper's space argument, quantified
+        let full = Subset::full_symmetric().home_state_count();
+        let ro = Subset::cpu_initiator_readonly().home_state_count();
+        let stateless = Subset::stateless_readonly().home_state_count();
+        assert!(full > ro, "full {full} vs readonly {ro}");
+        assert!(ro > stateless || (ro == 2 && stateless == 1));
+        assert_eq!(stateless, 1);
+    }
+}

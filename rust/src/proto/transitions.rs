@@ -1,0 +1,242 @@
+//! The joint-state transition graph of Fig. 1, with the paper's numbering.
+//!
+//! Each [`Transition`] names a *source* joint state, the initiating node,
+//! the signalled operation (or `None` for silent/local transitions), and
+//! the set of legal *outcome* joint states. Several transitions have more
+//! than one outcome because the home node's internal policy (cache the
+//! returned line vs. write it straight to RAM) is, by requirement 4,
+//! invisible to the remote — both results are legal, and which one occurs
+//! is an agent policy, not a protocol question.
+//!
+//! [`reference_transitions`] returns the full envelope (minimal protocol +
+//! the transition-10 MOESI concession + local transitions + the §3.3
+//! forward extension, flagged). [`crate::proto::envelope`] validates the
+//! paper's seven requirements against this table; [`crate::proto::spec`]
+//! compiles it (plus transient states) into the runtime state machines.
+
+use super::messages::CohOp;
+use super::states::{Joint, Node};
+
+/// Classification labels used for reporting and for subsetting.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tag {
+    /// Numbered transition from Fig. 1 (1..=10).
+    Numbered(u8),
+    /// Silent local transition (dotted edge).
+    Local,
+    /// Envelope extension (allowed by the rules, absent on the ThunderX-1).
+    Extension,
+}
+
+/// One row of the transition relation.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub from: Joint,
+    /// Signalled operation; `None` for silent/local transitions.
+    pub op: Option<CohOp>,
+    /// Which node initiates (for local transitions: which node moves).
+    pub by: Node,
+    /// Legal outcome joint states (non-empty).
+    pub outcomes: Vec<Joint>,
+    pub tag: Tag,
+    /// Human-readable note for the dissector/docs.
+    pub note: &'static str,
+}
+
+impl Transition {
+    fn new(
+        from: Joint,
+        op: Option<CohOp>,
+        by: Node,
+        outcomes: &[Joint],
+        tag: Tag,
+        note: &'static str,
+    ) -> Transition {
+        Transition { from, op, by, outcomes: outcomes.to_vec(), tag, note }
+    }
+    pub fn is_signalled(&self) -> bool {
+        self.op.is_some()
+    }
+}
+
+/// The reference transition relation (the full envelope of Fig. 1).
+pub fn reference_transitions() -> Vec<Transition> {
+    use CohOp::*;
+    use Joint as J;
+    use Node::*;
+    use Tag::*;
+
+    let t = Transition::new;
+    vec![
+        // ---- remote-initiated upgrades (signalled) --------------------
+        t(J::II, Some(ReadShared), Remote, &[J::IS], Numbered(1), "read-shared, home I: fill from RAM"),
+        t(J::SI, Some(ReadShared), Remote, &[J::SS], Numbered(1), "read-shared, home S: share home copy"),
+        t(J::EI, Some(ReadShared), Remote, &[J::SS], Numbered(1), "read-shared, home E: demote home to S, share"),
+        // Transition 10 — the MOESI concession: remote reads a line the
+        // home holds dirty. Home may keep a hidden-dirty copy (external
+        // SS; internal O) or silently write back and drop (external IS).
+        // Which happens must be invisible to the remote (requirement 4).
+        t(J::MI, Some(ReadShared), Remote, &[J::SS, J::IS], Numbered(10), "read-shared of home-dirty line (hidden O or silent writeback)"),
+        t(J::II, Some(ReadExclusive), Remote, &[J::IE], Numbered(2), "read-exclusive, home I"),
+        t(J::SI, Some(ReadExclusive), Remote, &[J::IE], Numbered(2), "read-exclusive, home S: home invalidates own copy"),
+        t(J::EI, Some(ReadExclusive), Remote, &[J::IE], Numbered(2), "read-exclusive, home E: home invalidates own copy"),
+        t(J::MI, Some(ReadExclusive), Remote, &[J::IM], Numbered(2), "read-exclusive of home-dirty line: dirty ownership moves across"),
+        t(J::IS, Some(UpgradeS2E), Remote, &[J::IE], Numbered(3), "upgrade shared-to-exclusive, no data"),
+        t(J::SS, Some(UpgradeS2E), Remote, &[J::IE], Numbered(3), "upgrade shared-to-exclusive: home invalidates own copy"),
+        // ---- remote-initiated voluntary downgrades (signalled, no rsp) -
+        t(J::IM, Some(VolDowngradeI), Remote, &[J::II, J::MI], Numbered(4), "writeback: home writes RAM (II) or caches dirty (MI)"),
+        t(J::IE, Some(VolDowngradeI), Remote, &[J::II, J::EI], Numbered(5), "drop exclusive clean"),
+        t(J::IS, Some(VolDowngradeI), Remote, &[J::II, J::SI], Numbered(6), "drop shared clean, home had no copy"),
+        t(J::SS, Some(VolDowngradeI), Remote, &[J::SI, J::EI], Numbered(6), "drop shared clean; home may promote its copy"),
+        t(J::IM, Some(VolDowngradeS), Remote, &[J::SS, J::IS], Numbered(7), "demote dirty to shared: home takes dirty data (hidden O) or writes RAM"),
+        t(J::IE, Some(VolDowngradeS), Remote, &[J::IS, J::SS], Numbered(7), "demote exclusive clean to shared"),
+        // ---- home-initiated downgrades (signalled, response required) --
+        t(J::IS, Some(FwdDowngradeI), Home, &[J::II], Numbered(8), "invalidate remote shared copy (home had none)"),
+        t(J::SS, Some(FwdDowngradeI), Home, &[J::EI], Numbered(8), "invalidate remote shared copy; home now sole owner"),
+        t(J::IE, Some(FwdDowngradeI), Home, &[J::II], Numbered(8), "invalidate remote exclusive (clean response)"),
+        t(J::IM, Some(FwdDowngradeI), Home, &[J::MI, J::II], Numbered(8), "invalidate remote modified: dirty data returns"),
+        t(J::IE, Some(FwdDowngradeS), Home, &[J::IS], Numbered(9), "demote remote exclusive to shared (clean response)"),
+        t(J::IM, Some(FwdDowngradeS), Home, &[J::SS, J::IS], Numbered(9), "demote remote modified to shared: dirty data returns"),
+        // ---- envelope extension (§3.3, not on the ThunderX-1) ----------
+        // R7 forces a row for SS too (the remote cannot distinguish IS
+        // from SS): there the forwarded line is redundant at home, which
+        // simply ends up sole owner.
+        t(J::IS, Some(FwdSharedInvalidate), Home, &[J::SI], Extension, "invalidate remote and forward clean line, avoiding a RAM read"),
+        t(J::SS, Some(FwdSharedInvalidate), Home, &[J::EI], Extension, "invalidate-and-forward when home already shares the line"),
+        // ---- silent local transitions (dotted edges) --------------------
+        // Remote dirties its exclusive copy. By requirement 3 this edge is
+        // one-way: IM may never silently become IE.
+        t(J::IE, None, Remote, &[J::IM], Local, "remote write to E: silent upgrade to M"),
+        // Home caching its own memory (the other node cannot tell).
+        t(J::II, None, Home, &[J::SI], Local, "home reads own line (shared)"),
+        t(J::II, None, Home, &[J::EI], Local, "home reads own line (exclusive)"),
+        t(J::SI, None, Home, &[J::EI], Local, "home promotes its sole shared copy"),
+        t(J::EI, None, Home, &[J::MI], Local, "home writes its exclusive copy"),
+        t(J::MI, None, Home, &[J::EI], Local, "home writes back locally, keeps clean copy"),
+        t(J::EI, None, Home, &[J::SI], Local, "home demotes its copy"),
+        t(J::SI, None, Home, &[J::II], Local, "home drops its clean copy"),
+        t(J::IS, None, Home, &[J::SS], Local, "home picks up a clean copy of a remote-shared line"),
+        t(J::SS, None, Home, &[J::IS], Local, "home drops its clean copy of a remote-shared line"),
+    ]
+}
+
+/// Look up the signalled transitions available to `by` at joint state
+/// `from` in a transition table.
+pub fn signalled_ops_at(table: &[Transition], by: Node, from: Joint) -> Vec<CohOp> {
+    let mut ops: Vec<CohOp> = table
+        .iter()
+        .filter(|t| t.by == by && t.from == from)
+        .filter_map(|t| t.op)
+        .collect();
+    ops.sort_by_key(|o| *o as u8);
+    ops.dedup();
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::states::DistanceOrder;
+
+    #[test]
+    fn all_endpoints_are_valid_joint_states() {
+        for tr in reference_transitions() {
+            assert!(tr.from.is_valid(), "{tr:?}");
+            assert!(!tr.outcomes.is_empty());
+            for &o in &tr.outcomes {
+                assert!(o.is_valid(), "{tr:?} -> {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn transitions_never_self_loop() {
+        for tr in reference_transitions() {
+            for &o in &tr.outcomes {
+                assert_ne!(tr.from, o, "self-loop in {tr:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn upgrades_go_up_downgrades_go_down_except_10() {
+        let ord = DistanceOrder::new();
+        for tr in reference_transitions() {
+            for &o in &tr.outcomes {
+                if matches!(tr.tag, Tag::Numbered(10)) {
+                    // the sanctioned exception: between unrelated states
+                    if !ord.related(tr.from, o) {
+                        continue;
+                    }
+                }
+                assert!(
+                    ord.related(tr.from, o),
+                    "{:?}: {} -> {} between unrelated states",
+                    tr,
+                    tr.from,
+                    o
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_counts_three_fwd_invalidate_sources_for_home_visibility() {
+        // "the three transitions labeled 8": from home's view IE and IM are
+        // one state, so sources {IS, SS, IE/IM} = 3 distinguishable cases.
+        let table = reference_transitions();
+        let sources: Vec<Joint> = table
+            .iter()
+            .filter(|t| matches!(t.tag, Tag::Numbered(8)))
+            .map(|t| t.from)
+            .collect();
+        assert_eq!(sources.len(), 4); // IS, SS, IE, IM rows
+        let mut classes = vec![];
+        for s in sources {
+            let cls = crate::proto::states::visibility_class(Node::Home, s);
+            if !classes.contains(&cls) {
+                classes.push(cls);
+            }
+        }
+        assert_eq!(classes.len(), 3, "home distinguishes exactly 3 source classes");
+    }
+
+    #[test]
+    fn transition_10_exists_and_is_read_shared_from_mi() {
+        let table = reference_transitions();
+        let t10: Vec<&Transition> =
+            table.iter().filter(|t| matches!(t.tag, Tag::Numbered(10))).collect();
+        assert_eq!(t10.len(), 1);
+        assert_eq!(t10[0].from, Joint::MI);
+        assert_eq!(t10[0].op, Some(CohOp::ReadShared));
+        assert_eq!(t10[0].outcomes, vec![Joint::SS, Joint::IS]);
+    }
+
+    #[test]
+    fn no_silent_dirty_to_clean_for_remote() {
+        // Requirement 3 structural check at the table level.
+        for tr in reference_transitions() {
+            if tr.op.is_none() && tr.by == Node::Remote {
+                for &o in &tr.outcomes {
+                    assert!(
+                        !(tr.from.remote.dirty() && !o.remote.dirty()),
+                        "silent remote dirty->clean: {tr:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signalled_ops_uniform_within_fig1b_star_i() {
+        // Remote must be able to issue the same requests in every *I state
+        // (requirement 6) — here just sanity-check ReadShared/ReadExclusive
+        // exist in all four.
+        let table = reference_transitions();
+        for j in [Joint::II, Joint::SI, Joint::EI, Joint::MI] {
+            let ops = signalled_ops_at(&table, Node::Remote, j);
+            assert!(ops.contains(&CohOp::ReadShared), "{j}");
+            assert!(ops.contains(&CohOp::ReadExclusive), "{j}");
+        }
+    }
+}

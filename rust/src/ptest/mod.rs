@@ -1,0 +1,191 @@
+//! Minimal property-testing harness (`proptest` is unavailable in the
+//! offline registry — see DESIGN.md). Provides seeded random generation,
+//! a fixed case budget, and greedy input shrinking for `Vec`-shaped
+//! inputs. Properties used across the crate live next to their modules;
+//! the coordinator-invariant suites are in `rust/tests/props.rs`.
+
+use crate::sim::rng::Rng;
+
+/// Generation context handed to value generators.
+pub struct Gen {
+    pub rng: Rng,
+    /// Current size hint (grows over the case budget).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+    /// A vector whose length scales with the size hint.
+    pub fn vec<T>(&mut self, mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.rng.below(self.size as u64 + 1) as usize;
+        (0..len).map(|_| item(self)).collect()
+    }
+}
+
+/// A property runner.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+    max_size: usize,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        // allow deterministic override for reproduction
+        let seed = std::env::var("ECI_PTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x9E37_79B9_7F4A_7C15);
+        Prop { name, cases: 100, seed, max_size: 64 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.seed = s;
+        self
+    }
+    pub fn max_size(mut self, s: usize) -> Prop {
+        self.max_size = s;
+        self
+    }
+
+    /// Check a property over generated values. Panics (with the seed and
+    /// case index) on the first failure.
+    pub fn check<T: std::fmt::Debug>(
+        self,
+        mut gen: impl FnMut(&mut Gen) -> T,
+        mut prop: impl FnMut(&T) -> bool,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let size = 1 + self.max_size * case / self.cases.max(1);
+            let mut g = Gen { rng: rng.fork(case as u64), size };
+            let value = gen(&mut g);
+            if !prop(&value) {
+                panic!(
+                    "property {:?} failed at case {case} (seed {:#x}, set ECI_PTEST_SEED to reproduce)\ninput: {value:?}",
+                    self.name, self.seed
+                );
+            }
+        }
+    }
+
+    /// Check a property over generated `Vec`s, greedily shrinking a
+    /// failing input (halving + element dropping) before reporting.
+    pub fn check_vec<T: Clone + std::fmt::Debug>(
+        self,
+        mut item: impl FnMut(&mut Gen) -> T,
+        mut prop: impl FnMut(&[T]) -> bool,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let size = 1 + self.max_size * case / self.cases.max(1);
+            let mut g = Gen { rng: rng.fork(case as u64), size };
+            let value = g.vec(&mut item);
+            if !prop(&value) {
+                let shrunk = shrink(&value, &mut prop);
+                panic!(
+                    "property {:?} failed at case {case} (seed {:#x})\nshrunk input ({} of {} elems): {shrunk:?}",
+                    self.name,
+                    self.seed,
+                    shrunk.len(),
+                    value.len()
+                );
+            }
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try halves, then single-element removals.
+fn shrink<T: Clone>(input: &[T], prop: &mut impl FnMut(&[T]) -> bool) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    loop {
+        let mut progressed = false;
+        // halves
+        if cur.len() >= 2 {
+            let half = cur.len() / 2;
+            for cand in [cur[..half].to_vec(), cur[half..].to_vec()] {
+                if !prop(&cand) {
+                    cur = cand;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        if progressed {
+            continue;
+        }
+        // single removals
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if !prop(&cand) {
+                cur = cand;
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new("reverse involutive").cases(50).check_vec(
+            |g| g.range(0, 100),
+            |xs| {
+                let mut a = xs.to_vec();
+                a.reverse();
+                a.reverse();
+                a == xs
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("no sevens").cases(300).seed(42).check_vec(
+                |g| g.range(0, 10),
+                |xs| !xs.contains(&7),
+            );
+        });
+        let msg = match r {
+            Err(e) => *e.downcast::<String>().expect("panic message"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // the shrunk counterexample is exactly [7]
+        assert!(msg.contains("[7]"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn scalar_check_reports_input() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("always small").cases(500).seed(1).check(|g| g.range(0, 1000), |&x| x < 990);
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Analytic FPGA resource model — regenerates Table 2 ("ECI hardware
+//! resource consumption, percentage over the resources available in a
+//! Xilinx VU9P") and quantifies the §3.4 claim that protocol subsetting
+//! saves real area.
+//!
+//! The paper reports one aggregate row per link; the per-component
+//! breakdown below is this repo's own design accounting, calibrated so a
+//! full-protocol link totals close to the paper's 46,186 LUTs / 32,777
+//! REGs / 112.5 BRAM36 (Table 2). Components are sized from first-order
+//! structural arguments (buffer bytes -> BRAM36, datapath width x stages
+//! -> LUT/FF), so configuration changes (credits, VC count, directory
+//! states) move the estimate the way they would move synthesis results.
+
+use crate::proto::subset::Subset;
+use crate::transport::vc::{NUM_COHERENCE_VCS, NUM_VCS};
+
+/// Xilinx XCVU9P capacity (UltraScale+ data sheet).
+pub const VU9P_LUTS: u64 = 1_182_240;
+pub const VU9P_REGS: u64 = 2_364_480;
+pub const VU9P_BRAM36: f64 = 2_160.0;
+
+/// One RTL component's estimated cost.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: String,
+    pub luts: u64,
+    pub regs: u64,
+    pub bram36: f64,
+}
+
+/// Stack configuration knobs that affect area.
+#[derive(Clone, Copy, Debug)]
+pub struct StackConfig {
+    /// Receiver buffer slots per VC (credits).
+    pub credits_per_vc: u32,
+    /// Serial lanes in the link.
+    pub lanes: u32,
+    /// Number of home-directory states the protocol subset needs
+    /// (1 for the stateless read-only home).
+    pub home_states: usize,
+    /// Does the home track per-line directory state at all?
+    pub tracks_state: bool,
+    /// Directory-cache entries (the directory is a BRAM cache backed by
+    /// DRAM, as in real home-node designs) when tracking.
+    pub dir_cache_entries: u64,
+}
+
+impl StackConfig {
+    pub fn reference() -> StackConfig {
+        StackConfig {
+            credits_per_vc: 16,
+            lanes: 24,
+            home_states: 8,
+            tracks_state: true,
+            // 128K-entry directory cache in BRAM, DRAM-backed
+            dir_cache_entries: 128 << 10,
+        }
+    }
+
+    pub fn for_subset(subset: &Subset) -> StackConfig {
+        let mut c = StackConfig::reference();
+        c.home_states = subset.home_state_count();
+        c.tracks_state = subset.home_tracks_state;
+        if !subset.home_tracks_state {
+            c.dir_cache_entries = 0;
+        }
+        c
+    }
+}
+
+/// BRAM36 blocks for `bytes` of buffering spread over `buffers` physical
+/// FIFOs (36 Kb = 4.5 KiB per block; width-constrained buffers round up
+/// to halves).
+fn brams_for(bytes: u64, buffers: u64) -> f64 {
+    let per = ((bytes as f64 / buffers as f64) / 4608.0).ceil().max(0.5);
+    per * buffers as f64
+}
+
+/// Estimate the per-link ECI stack (VC + link + transaction + phys +
+/// protocol engine) for a given configuration.
+pub fn eci_stack(cfg: StackConfig) -> Vec<Component> {
+    let mut v = Vec::new();
+
+    // --- VC layer: per-VC ingress/egress buffering + arbitration -------
+    // Each VC buffers `credits` frames of up to 160 B each direction.
+    let vc_buf_bytes = cfg.credits_per_vc as u64 * 160 * 2;
+    v.push(Component {
+        name: format!("vc layer ({NUM_VCS} VCs, {} credits)", cfg.credits_per_vc),
+        // mux/demux + rank-RR arbiter + credit counters: ~600 LUT/VC
+        luts: 600 * NUM_VCS as u64 + 1_800,
+        regs: 380 * NUM_VCS as u64,
+        bram36: brams_for(vc_buf_bytes * NUM_VCS as u64, NUM_VCS as u64),
+    });
+
+    // --- link layer: framing, packing, header build/parse ---------------
+    v.push(Component {
+        name: "link layer (framer/parser)".into(),
+        luts: 7_200,
+        regs: 5_400,
+        bram36: 4.0,
+    });
+
+    // --- transaction layer: credits, CRC, replay buffer ------------------
+    // go-back-N replay buffer: one ack window (16) x worst-case frame per
+    // coherence VC.
+    let replay_bytes = 16 * 160 * NUM_COHERENCE_VCS as u64;
+    v.push(Component {
+        name: "transaction layer (CRC + replay)".into(),
+        luts: 6_400,
+        regs: 4_800,
+        bram36: brams_for(replay_bytes, 10),
+    });
+
+    // --- physical layer: lane bonding, gearboxes, CDC fifos --------------
+    v.push(Component {
+        name: format!("physical layer ({} lanes)", cfg.lanes),
+        luts: 420 * cfg.lanes as u64,
+        regs: 300 * cfg.lanes as u64,
+        bram36: cfg.lanes as f64 * 0.5, // CDC fifo per lane
+    });
+
+    // --- protocol engine: the (generated) state machine ------------------
+    // LUT cost grows with the number of distinguishable states.
+    let states = cfg.home_states.max(1) as u64;
+    v.push(Component {
+        name: format!("protocol engine ({states} home states)"),
+        luts: 2_600 + 900 * states,
+        regs: 1_900 + 560 * states,
+        bram36: 0.0,
+    });
+
+    // --- directory cache: BRAM-resident, DRAM-backed (real home-node
+    // designs cache the directory; a flat directory for gigabytes of
+    // exported memory would not fit on-chip) ------------------------------
+    if cfg.tracks_state && cfg.dir_cache_entries > 0 {
+        let state_bits = (64 - (states - 1).leading_zeros().min(63) as u64).max(1);
+        let tag_bits = 13;
+        let bits = cfg.dir_cache_entries * (state_bits + tag_bits);
+        v.push(Component {
+            name: format!("directory cache ({} entries)", cfg.dir_cache_entries),
+            luts: 2_500,
+            regs: 3_600,
+            bram36: bits as f64 / 36_864.0,
+        });
+    }
+
+    v
+}
+
+/// Aggregate totals.
+pub fn totals(components: &[Component]) -> Component {
+    Component {
+        name: "ECI per link".into(),
+        luts: components.iter().map(|c| c.luts).sum(),
+        regs: components.iter().map(|c| c.regs).sum(),
+        bram36: components.iter().map(|c| c.bram36).sum(),
+    }
+}
+
+/// Percentages against the VU9P.
+pub fn percentages(t: &Component) -> (f64, f64, f64) {
+    (
+        t.luts as f64 / VU9P_LUTS as f64 * 100.0,
+        t.regs as f64 / VU9P_REGS as f64 * 100.0,
+        t.bram36 / VU9P_BRAM36 * 100.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_stack_lands_near_paper_table2() {
+        let t = totals(&eci_stack(StackConfig::reference()));
+        // paper: 46,186 LUTs / 32,777 REGs / 112.5 BRAM36 per link
+        let lut_err = (t.luts as f64 - 46_186.0).abs() / 46_186.0;
+        let reg_err = (t.regs as f64 - 32_777.0).abs() / 32_777.0;
+        let bram_err = (t.bram36 - 112.5).abs() / 112.5;
+        assert!(lut_err < 0.15, "LUTs {} vs 46186", t.luts);
+        assert!(reg_err < 0.15, "REGs {} vs 32777", t.regs);
+        assert!(bram_err < 0.20, "BRAM {} vs 112.5", t.bram36);
+        // and the paper's percentages
+        let (pl, pr, pb) = percentages(&t);
+        assert!((pl - 3.91).abs() < 0.6, "LUT% {pl}");
+        assert!((pr - 1.39).abs() < 0.3, "REG% {pr}");
+        assert!((pb - 5.23).abs() < 1.1, "BRAM% {pb}");
+    }
+
+    #[test]
+    fn stateless_subset_saves_directory_bram_and_engine_luts() {
+        let full = totals(&eci_stack(StackConfig::for_subset(&Subset::full_symmetric())));
+        let stateless =
+            totals(&eci_stack(StackConfig::for_subset(&Subset::stateless_readonly())));
+        assert!(stateless.bram36 < full.bram36 * 0.7, "{} vs {}", stateless.bram36, full.bram36);
+        assert!(stateless.luts < full.luts);
+    }
+
+    #[test]
+    fn credits_move_vc_buffer_brams() {
+        let mut small = StackConfig::reference();
+        small.credits_per_vc = 4;
+        let mut big = StackConfig::reference();
+        big.credits_per_vc = 64;
+        let ts = totals(&eci_stack(small));
+        let tb = totals(&eci_stack(big));
+        assert!(tb.bram36 > ts.bram36);
+    }
+}

@@ -1,0 +1,143 @@
+//! AOT artifact manifest: locates `artifacts/*.hlo.txt` and validates the
+//! shapes the Python side baked in (`python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::json::{parse, Json};
+
+/// Geometry constants mirrored from `python/compile/kernels/ref.py`.
+/// Checked against the manifest at load time.
+pub const BATCH: usize = 4096;
+pub const ROW_WORDS: usize = 32;
+pub const STR_LEN: usize = 62;
+pub const DFA_STATES: usize = 32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("missing shape")?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").and_then(Json::as_str).context("missing dtype")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OpArtifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub ops: Vec<OpArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate geometry.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let geo = j.get("geometry").context("missing geometry")?;
+        let batch = geo.get("batch").and_then(Json::as_u64).context("batch")? as usize;
+        if batch != BATCH {
+            bail!("manifest batch {batch} != compiled-in {BATCH}");
+        }
+        for (key, want) in [
+            ("row_words", ROW_WORDS),
+            ("str_len", STR_LEN),
+            ("dfa_states", DFA_STATES),
+        ] {
+            let got = geo.get(key).and_then(Json::as_u64).context(key)? as usize;
+            if got != want {
+                bail!("manifest {key} {got} != compiled-in {want}");
+            }
+        }
+
+        let mut ops = Vec::new();
+        let Json::Obj(map) = j.get("ops").context("missing ops")? else {
+            bail!("ops is not an object");
+        };
+        for (name, op) in map {
+            let file = op.get("file").and_then(Json::as_str).context("file")?;
+            let hlo_path = dir.join(file);
+            if !hlo_path.exists() {
+                bail!("artifact {} missing (run `make artifacts`)", hlo_path.display());
+            }
+            let inputs = op
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = op
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            ops.push(OpArtifact { name: name.clone(), hlo_path, inputs, outputs });
+        }
+        Ok(Manifest { dir, ops })
+    }
+
+    pub fn op(&self, name: &str) -> Option<&OpArtifact> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+
+    /// Default artifact directory: `$ECI_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("ECI_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // rust/ crate root -> repo root
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.ops.len(), 3);
+        let select = m.op("select").unwrap();
+        assert_eq!(select.inputs[0].shape, vec![BATCH, ROW_WORDS]);
+        assert_eq!(select.inputs[0].dtype, "float32");
+        assert_eq!(select.outputs.len(), 2);
+        let regex = m.op("regex").unwrap();
+        assert_eq!(regex.inputs[1].shape, vec![256, DFA_STATES, DFA_STATES]);
+        let hash = m.op("hash").unwrap();
+        assert_eq!(hash.outputs[0].shape, vec![BATCH]);
+    }
+}

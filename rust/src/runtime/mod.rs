@@ -1,0 +1,10 @@
+//! Layer-3 ⇄ Layer-2 bridge: load the AOT-compiled operator graphs
+//! (HLO text, produced once by `python/compile/aot.py`) into a PJRT CPU
+//! client and execute them from the coordinator's hot path. Python is
+//! never on the request path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Manifest, OpArtifact, TensorSpec, BATCH, DFA_STATES, ROW_WORDS, STR_LEN};
+pub use pjrt::{hash_bucket_ref, Runtime};

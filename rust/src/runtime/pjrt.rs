@@ -1,0 +1,242 @@
+//! PJRT executor: loads the AOT HLO-text artifacts and runs them from the
+//! Rust hot path. This is the only place the `xla` crate is touched; the
+//! rest of the coordinator sees typed batch calls.
+//!
+//! Python never runs here — `make artifacts` produced the HLO once at
+//! build time; this module compiles it on the PJRT CPU client at startup
+//! and executes it per batch.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{Manifest, OpArtifact, BATCH, DFA_STATES, ROW_WORDS, STR_LEN};
+
+/// Build a shaped literal in ONE copy (PERF: `vec1().reshape()` copies the
+/// buffer twice; per-batch marshalling dominated the Rust-side operator
+/// throughput — see EXPERIMENTS.md §Perf).
+fn literal_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+fn literal_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
+}
+
+/// A loaded operator executable.
+pub struct OpExe {
+    pub artifact: OpArtifact,
+    exe: PjRtLoadedExecutable,
+    /// Executions so far (perf accounting).
+    pub invocations: u64,
+}
+
+/// The runtime: one PJRT CPU client + all operator executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    select: OpExe,
+    regex: OpExe,
+    hash: OpExe,
+    /// Cached DFA tensors (PERF: the 1 MiB transition tensor is identical
+    /// across every batch of a scan; building its Literal once per *scan*
+    /// instead of once per 4096-row *batch* — see EXPERIMENTS.md §Perf).
+    dfa_cache: Option<(Literal, Literal)>,
+}
+
+fn load_op(client: &PjRtClient, m: &Manifest, name: &str) -> Result<OpExe> {
+    let artifact = m.op(name).with_context(|| format!("op {name} not in manifest"))?.clone();
+    let proto = HloModuleProto::from_text_file(
+        artifact.hlo_path.to_str().context("non-utf8 path")?,
+    )?;
+    let comp = XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    Ok(OpExe { artifact, exe, invocations: 0 })
+}
+
+impl Runtime {
+    /// Load every artifact from the default directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn load(manifest: &Manifest) -> Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        let select = load_op(&client, manifest, "select")?;
+        let regex = load_op(&client, manifest, "regex")?;
+        let hash = load_op(&client, manifest, "hash")?;
+        Ok(Runtime { client, select, regex, hash, dfa_cache: None })
+    }
+
+    /// SELECT pushdown batch: `rows` is `BATCH x ROW_WORDS` f32 (row-major).
+    /// Returns (mask, count).
+    pub fn select(&mut self, rows: &[f32], x: f32, y: f32) -> Result<(Vec<i32>, i32)> {
+        if rows.len() != BATCH * ROW_WORDS {
+            bail!("select: rows len {} != {}", rows.len(), BATCH * ROW_WORDS);
+        }
+        let rows_l = literal_f32(&[BATCH, ROW_WORDS], rows)?;
+        let x_l = Literal::vec1(&[x]);
+        let y_l = Literal::vec1(&[y]);
+        self.select.invocations += 1;
+        let out = self.select.exe.execute::<Literal>(&[rows_l, x_l, y_l])?[0][0]
+            .to_literal_sync()?;
+        let (mask, count) = out.to_tuple2()?;
+        Ok((mask.to_vec::<i32>()?, count.get_first_element::<i32>()?))
+    }
+
+    /// Install a DFA for subsequent [`Runtime::regex_batch`] calls. `tmat`
+    /// is `256 x S x S` f32 one-hot transition matrices; `accept` is `S`
+    /// f32.
+    pub fn set_dfa(&mut self, tmat: &[f32], accept: &[f32]) -> Result<()> {
+        if tmat.len() != 256 * DFA_STATES * DFA_STATES || accept.len() != DFA_STATES {
+            bail!("regex: bad dfa tensor sizes");
+        }
+        let tmat_l = literal_f32(&[256, DFA_STATES, DFA_STATES], tmat)?;
+        let accept_l = Literal::vec1(accept);
+        self.dfa_cache = Some((tmat_l, accept_l));
+        Ok(())
+    }
+
+    /// Regex pushdown batch against the installed DFA: `chars` is
+    /// `BATCH x STR_LEN` i32. Returns (mask, count).
+    pub fn regex_batch(&mut self, chars: &[i32]) -> Result<(Vec<i32>, i32)> {
+        if chars.len() != BATCH * STR_LEN {
+            bail!("regex: chars len {} != {}", chars.len(), BATCH * STR_LEN);
+        }
+        let Some((tmat_l, accept_l)) = self.dfa_cache.as_ref() else {
+            bail!("regex: no DFA installed (call set_dfa)");
+        };
+        let chars_l = literal_i32(&[BATCH, STR_LEN], chars)?;
+        self.regex.invocations += 1;
+        let out = self.regex.exe.execute::<&Literal>(&[&chars_l, tmat_l, accept_l])?[0][0]
+            .to_literal_sync()?;
+        let (mask, count) = out.to_tuple2()?;
+        Ok((mask.to_vec::<i32>()?, count.get_first_element::<i32>()?))
+    }
+
+    /// One-shot convenience: install the DFA and run a single batch.
+    pub fn regex(
+        &mut self,
+        chars: &[i32],
+        tmat: &[f32],
+        accept: &[f32],
+    ) -> Result<(Vec<i32>, i32)> {
+        self.set_dfa(tmat, accept)?;
+        self.regex_batch(chars)
+    }
+
+    /// Hash batch: `keys` is `BATCH` i32; `bucket_mask` = nbuckets-1.
+    pub fn hash(&mut self, keys: &[i32], bucket_mask: i32) -> Result<Vec<i32>> {
+        if keys.len() != BATCH {
+            bail!("hash: keys len {} != {BATCH}", keys.len());
+        }
+        let keys_l = Literal::vec1(keys);
+        let mask_l = Literal::vec1(&[bucket_mask]);
+        self.hash.invocations += 1;
+        let out = self.hash.exe.execute::<Literal>(&[keys_l, mask_l])?[0][0]
+            .to_literal_sync()?;
+        let b = out.to_tuple1()?;
+        Ok(b.to_vec::<i32>()?)
+    }
+
+    pub fn invocations(&self) -> (u64, u64, u64) {
+        (self.select.invocations, self.regex.invocations, self.hash.invocations)
+    }
+}
+
+/// Reference hash, bit-identical to the kernel (used by the KVS builder
+/// and the CPU baseline so both sides agree on bucket placement).
+#[inline]
+pub fn hash_bucket_ref(key: i32, bucket_mask: i32) -> i32 {
+    let h = key.wrapping_mul(-1640531527i32);
+    let h = h ^ ((h as u32) >> 16) as i32;
+    h & bucket_mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load_default().expect("runtime load"))
+    }
+
+    #[test]
+    fn select_matches_scalar_reference() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rows = vec![0f32; BATCH * ROW_WORDS];
+        // deterministic pseudo-data
+        let mut s = 1u32;
+        for r in 0..BATCH {
+            for w in 0..2 {
+                s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+                rows[r * ROW_WORDS + w] = (s >> 8) as f32 / (1 << 16) as f32 - 128.0;
+            }
+        }
+        let (x, y) = (-20.0f32, 35.0f32);
+        let (mask, count) = rt.select(&rows, x, y).unwrap();
+        let mut want_count = 0;
+        for r in 0..BATCH {
+            let a = rows[r * ROW_WORDS];
+            let b = rows[r * ROW_WORDS + 1];
+            let m = (a > x && b < y) as i32;
+            assert_eq!(mask[r], m, "row {r}");
+            if m == 1 {
+                want_count += 1;
+            }
+        }
+        assert_eq!(count, want_count);
+        assert!(count > 0 && count < BATCH as i32, "degenerate test data");
+    }
+
+    #[test]
+    fn hash_matches_reference_function() {
+        let Some(mut rt) = runtime() else { return };
+        let keys: Vec<i32> = (0..BATCH as i32).map(|i| i.wrapping_mul(2654435761u32 as i32) ^ 77).collect();
+        let mask = 1023;
+        let got = rt.hash(&keys, mask).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(got[i], hash_bucket_ref(k, mask), "key {k}");
+        }
+    }
+
+    #[test]
+    fn regex_finds_planted_strings() {
+        let Some(mut rt) = runtime() else { return };
+        // trivial 2-state DFA for "contains byte 'z'": built by hand here;
+        // the full compiler path is exercised in operators::regex_op tests.
+        let mut tmat = vec![0f32; 256 * DFA_STATES * DFA_STATES];
+        let mut accept = vec![0f32; DFA_STATES];
+        accept[1] = 1.0;
+        for c in 0..256 {
+            // state 0: 'z' -> 1 else stay; state 1 absorbing; pads self-loop
+            let s0_next = if c == b'z' as usize { 1 } else { 0 };
+            tmat[c * DFA_STATES * DFA_STATES + s0_next] = 1.0;
+            for s in 1..DFA_STATES {
+                tmat[c * DFA_STATES * DFA_STATES + s * DFA_STATES + s] = 1.0;
+            }
+        }
+        let mut chars = vec![0i32; BATCH * STR_LEN];
+        for r in (0..BATCH).step_by(7) {
+            chars[r * STR_LEN + (r % STR_LEN)] = b'z' as i32;
+        }
+        let (mask, count) = rt.regex(&chars, &tmat, &accept).unwrap();
+        let want = BATCH.div_ceil(7);
+        assert_eq!(count as usize, want);
+        for r in 0..BATCH {
+            assert_eq!(mask[r], (r % 7 == 0) as i32, "row {r}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Bandwidth/occupancy modelling primitives.
+//!
+//! Two recurring patterns in the machine model:
+//!
+//! * A **serial resource** (DRAM channel data bus, ECI lane, operator
+//!   pipeline issue port): requests occupy it back-to-back; the next
+//!   transfer starts no earlier than the previous one finished. Modelled by
+//!   [`SerialPort`], which returns the *completion time* of each transfer
+//!   and accounts utilization.
+//!
+//! * A **token-bucket shaper** for coarse-grained rate limits where
+//!   per-transfer serialization is not worth modelling.
+
+use super::time::{Duration, Time};
+
+/// A serially-occupied resource with a fixed per-byte cost and optional
+/// fixed per-transfer overhead.
+#[derive(Clone, Debug)]
+pub struct SerialPort {
+    /// picoseconds per byte (inverse bandwidth)
+    ps_per_byte: f64,
+    /// fixed serialization overhead per transfer
+    overhead: Duration,
+    /// the port is busy until this instant
+    free_at: Time,
+    /// total busy picoseconds (for utilization reporting)
+    busy_ps: u64,
+    /// total bytes moved
+    pub bytes: u64,
+}
+
+impl SerialPort {
+    /// `bytes_per_sec` is the raw bandwidth of the resource.
+    pub fn new(bytes_per_sec: f64, overhead: Duration) -> Self {
+        assert!(bytes_per_sec > 0.0);
+        SerialPort {
+            ps_per_byte: 1e12 / bytes_per_sec,
+            overhead,
+            free_at: Time::ZERO,
+            busy_ps: 0,
+            bytes: 0,
+        }
+    }
+
+    pub fn bytes_per_sec(&self) -> f64 {
+        1e12 / self.ps_per_byte
+    }
+
+    /// Time the port next becomes free.
+    pub fn free_at(&self) -> Time {
+        self.free_at
+    }
+
+    /// Occupy the port for a `len`-byte transfer arriving at `now`.
+    /// Returns the completion time. The transfer begins at
+    /// `max(now, free_at)` — i.e. transfers queue FIFO.
+    pub fn occupy(&mut self, now: Time, len: u64) -> Time {
+        let start = if now > self.free_at { now } else { self.free_at };
+        let ser = Duration((len as f64 * self.ps_per_byte).round() as u64) + self.overhead;
+        self.free_at = start + ser;
+        self.busy_ps += ser.ps();
+        self.bytes += len;
+        self.free_at
+    }
+
+    /// Queueing delay a transfer arriving `now` would see before starting.
+    pub fn backlog(&self, now: Time) -> Duration {
+        if self.free_at > now {
+            self.free_at.since(now)
+        } else {
+            Duration::ZERO
+        }
+    }
+
+    /// Utilization over `[0, now]`.
+    pub fn utilization(&self, now: Time) -> f64 {
+        if now.ps() == 0 {
+            0.0
+        } else {
+            (self.busy_ps as f64 / now.ps() as f64).min(1.0)
+        }
+    }
+}
+
+/// Token bucket: capacity `burst` bytes, refilled at `rate` bytes/sec.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate: f64, // bytes per picosecond
+    burst: f64,
+    tokens: f64,
+    last: Time,
+}
+
+impl TokenBucket {
+    pub fn new(bytes_per_sec: f64, burst_bytes: f64) -> Self {
+        TokenBucket {
+            rate: bytes_per_sec / 1e12,
+            burst: burst_bytes,
+            tokens: burst_bytes,
+            last: Time::ZERO,
+        }
+    }
+
+    fn refill(&mut self, now: Time) {
+        let dt = now.since(self.last).ps() as f64;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now;
+    }
+
+    /// Try to consume `n` bytes at `now`; on failure returns the earliest
+    /// time at which the tokens would be available.
+    pub fn consume(&mut self, now: Time, n: u64) -> Result<(), Time> {
+        self.refill(now);
+        let need = n as f64;
+        if self.tokens >= need {
+            self.tokens -= need;
+            Ok(())
+        } else {
+            let deficit = need - self.tokens;
+            let wait_ps = (deficit / self.rate).ceil() as u64;
+            Err(now + Duration(wait_ps))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::PS_PER_S;
+
+    #[test]
+    fn serial_port_serializes() {
+        // 1 GiB/s, no overhead; 1024 bytes take ~0.954 us
+        let mut p = SerialPort::new((1u64 << 30) as f64, Duration::ZERO);
+        let t1 = p.occupy(Time(0), 1024);
+        let t2 = p.occupy(Time(0), 1024); // queued behind t1
+        assert_eq!(t2.ps(), 2 * t1.ps());
+        // arriving after the port idles starts immediately
+        let t3 = p.occupy(Time(10 * t2.ps()), 1024);
+        assert_eq!(t3.ps() - 10 * t2.ps(), t1.ps());
+    }
+
+    #[test]
+    fn serial_port_overhead_and_utilization() {
+        let mut p = SerialPort::new(1e9, Duration::from_ns(10));
+        let done = p.occupy(Time(0), 1000); // 1 us + 10 ns
+        assert_eq!(done.ps(), 1_010_000);
+        let u = p.utilization(Time(2_020_000));
+        assert!((u - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backlog_reports_queue_delay() {
+        let mut p = SerialPort::new(1e9, Duration::ZERO);
+        p.occupy(Time(0), 2000); // busy 2 us
+        assert_eq!(p.backlog(Time(500_000)).ps(), 1_500_000);
+        assert_eq!(p.backlog(Time(3_000_000)).ps(), 0);
+    }
+
+    #[test]
+    fn token_bucket_paces() {
+        let mut tb = TokenBucket::new(1e9, 1000.0); // 1 GB/s, 1000-byte burst
+        assert!(tb.consume(Time(0), 1000).is_ok());
+        // bucket empty: 500 more bytes need 500 ns
+        match tb.consume(Time(0), 500) {
+            Err(at) => assert_eq!(at.ps(), 500 * 1000),
+            Ok(_) => panic!("should have been rate-limited"),
+        }
+        // after 1 us, enough tokens again (capped at burst)
+        assert!(tb.consume(Time(PS_PER_S / 1_000_000), 1000).is_ok());
+    }
+}

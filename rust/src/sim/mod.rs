@@ -1,0 +1,20 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates ECI on physical hardware (Enzian). Lacking that
+//! hardware, every experiment in this repo runs on the deterministic,
+//! execution-driven simulator built from these primitives: a picosecond
+//! clock ([`time`]), an event engine ([`engine`]), a seedable PRNG
+//! ([`rng`]), measurement types ([`stats`]), and bandwidth/occupancy models
+//! ([`bw`]). See DESIGN.md §1 for the substitution argument.
+
+pub mod bw;
+pub mod engine;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use bw::{SerialPort, TokenBucket};
+pub use engine::Engine;
+pub use rng::Rng;
+pub use stats::{Counters, Histogram, Meter};
+pub use time::{Clock, Duration, Time};

@@ -1,0 +1,297 @@
+//! Measurement primitives: counters, histograms, rate meters.
+//!
+//! Every experiment in the harness reports through these types so that the
+//! CSV/markdown emitters have a single source of truth. Histograms are
+//! log-linear (HdrHistogram-style, base-2 buckets with 16 sub-buckets) which
+//! keeps relative error under ~6% across the ns..s range without
+//! preallocating millions of bins.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::time::{Duration, Time};
+
+/// Monotonic named counters.
+#[derive(Default, Clone)]
+pub struct Counters {
+    map: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    #[inline]
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.map.entry(key).or_insert(0) += n;
+    }
+    #[inline]
+    pub fn inc(&mut self, key: &'static str) {
+        self.add(key, 1);
+    }
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.map.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+impl fmt::Debug for Counters {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_map().entries(self.map.iter()).finish()
+    }
+}
+
+const SUB_BUCKET_BITS: u32 = 4; // 16 sub-buckets per power of two
+const SUB_BUCKETS: u64 = 1 << SUB_BUCKET_BITS;
+
+/// Log-linear histogram of u64 samples (typically picoseconds or bytes).
+#[derive(Clone)]
+pub struct Histogram {
+    bins: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+#[inline]
+fn bin_index(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let bucket = msb - SUB_BUCKET_BITS + 1;
+    let sub = (v >> (bucket - 1)) - SUB_BUCKETS;
+    (SUB_BUCKETS as usize) + (bucket as usize - 1) * SUB_BUCKETS as usize + sub as usize
+}
+
+/// Lower edge of bin `i` (inverse of `bin_index`, up to bucket resolution).
+fn bin_floor(i: usize) -> u64 {
+    let i = i as u64;
+    if i < SUB_BUCKETS {
+        return i;
+    }
+    let rel = i - SUB_BUCKETS;
+    let bucket = rel / SUB_BUCKETS + 1;
+    let sub = rel % SUB_BUCKETS + SUB_BUCKETS;
+    sub << (bucket - 1)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            bins: Vec::new(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let idx = bin_index(v);
+        if idx >= self.bins.len() {
+            self.bins.resize(idx + 1, 0);
+        }
+        self.bins[idx] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    #[inline]
+    pub fn record_dur(&mut self, d: Duration) {
+        self.record(d.ps());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (0.0 ..= 1.0), resolved to bin lower edge.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0;
+        for (i, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bin_floor(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.bins.len() > self.bins.len() {
+            self.bins.resize(other.bins.len(), 0);
+        }
+        for (i, &c) in other.bins.iter().enumerate() {
+            self.bins[i] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Histogram(n={}, mean={:.1}, p50={}, p99={}, max={})",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max
+        )
+    }
+}
+
+/// Accumulates (bytes | items) over simulated time and reports rates.
+#[derive(Clone, Debug, Default)]
+pub struct Meter {
+    pub total: u64,
+    start: Option<Time>,
+    end: Option<Time>,
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    #[inline]
+    pub fn add(&mut self, now: Time, n: u64) {
+        if self.start.is_none() {
+            self.start = Some(now);
+        }
+        self.end = Some(now);
+        self.total += n;
+    }
+    pub fn window(&self) -> Duration {
+        match (self.start, self.end) {
+            (Some(s), Some(e)) => e.since(s),
+            _ => Duration::ZERO,
+        }
+    }
+    /// Rate in units/second over the observed window (or over `total_time`
+    /// if provided, which is correct for closed-loop experiments).
+    pub fn rate(&self, over: Option<Duration>) -> f64 {
+        let secs = over.unwrap_or_else(|| self.window()).as_secs();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.total as f64 / secs
+        }
+    }
+    /// Rate expressed in GiB/s when `total` counts bytes.
+    pub fn gib_per_s(&self, over: Option<Duration>) -> f64 {
+        self.rate(over) / (1u64 << 30) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let mut c = Counters::new();
+        c.inc("msgs");
+        c.add("msgs", 4);
+        c.inc("errs");
+        assert_eq!(c.get("msgs"), 5);
+        assert_eq!(c.get("errs"), 1);
+        assert_eq!(c.get("nothing"), 0);
+    }
+
+    #[test]
+    fn bin_index_monotone_and_invertible_enough() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 100, 1000, 1 << 20, u64::MAX >> 1] {
+            let i = bin_index(v);
+            assert!(i >= last, "index not monotone at {v}");
+            last = i;
+            let floor = bin_floor(i);
+            assert!(floor <= v, "floor {floor} > value {v}");
+            // relative error bounded by sub-bucket width
+            if v >= 16 {
+                assert!((v - floor) as f64 / v as f64 <= 1.0 / 16.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        let p50 = h.p50();
+        assert!((450..=550).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((930..=1000).contains(&p99), "p99 {p99}");
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 0..500 {
+            a.record(v);
+        }
+        for v in 500..1000 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        assert_eq!(a.max(), 999);
+    }
+
+    #[test]
+    fn meter_rates() {
+        let mut m = Meter::new();
+        m.add(Time(0), 0);
+        m.add(Time(crate::sim::time::PS_PER_S), 1 << 30); // 1 GiB over 1 s
+        assert!((m.gib_per_s(None) - 1.0).abs() < 1e-9);
+        assert!((m.rate(Some(Duration::from_ms(500))) - 2.0 * (1u64 << 30) as f64).abs() < 1.0);
+    }
+}

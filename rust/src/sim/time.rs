@@ -1,0 +1,255 @@
+//! Simulation time.
+//!
+//! Time is measured in integer **picoseconds** so that every clock domain in
+//! the modelled system has an exact integer period:
+//!
+//! * ThunderX-1 cores @ 2.0 GHz  -> 500 ps
+//! * FPGA fabric      @ 300 MHz  -> 3_333 ps (we round to 3_333; the ~0.01%
+//!   error is far below the fidelity of the model)
+//! * DDR4-2133 / DDR4-2400 IO clocks, ECI serial lanes, ... all fit.
+//!
+//! `Time` is an absolute instant, `Duration` a span. Both are thin wrappers
+//! over `u64`; arithmetic saturates on overflow in release builds would be a
+//! silent error, so we use checked/panicking ops (a simulation running past
+//! ~213 days of simulated time is a bug).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+pub const PS_PER_NS: u64 = 1_000;
+pub const PS_PER_US: u64 = 1_000_000;
+pub const PS_PER_MS: u64 = 1_000_000_000;
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+/// An absolute simulation instant, in picoseconds since t=0.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+/// A span of simulated time, in picoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Duration(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    #[inline]
+    pub fn ps(self) -> u64 {
+        self.0
+    }
+    #[inline]
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / PS_PER_NS as f64
+    }
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / PS_PER_US as f64
+    }
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+    /// Duration since an earlier instant. Panics if `earlier` is later.
+    #[inline]
+    pub fn since(self, earlier: Time) -> Duration {
+        Duration(
+            self.0
+                .checked_sub(earlier.0)
+                .expect("Time::since: earlier instant is in the future"),
+        )
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    #[inline]
+    pub const fn from_ps(ps: u64) -> Duration {
+        Duration(ps)
+    }
+    #[inline]
+    pub const fn from_ns(ns: u64) -> Duration {
+        Duration(ns * PS_PER_NS)
+    }
+    #[inline]
+    pub const fn from_us(us: u64) -> Duration {
+        Duration(us * PS_PER_US)
+    }
+    #[inline]
+    pub const fn from_ms(ms: u64) -> Duration {
+        Duration(ms * PS_PER_MS)
+    }
+    /// Duration from a (possibly fractional) nanosecond count.
+    #[inline]
+    pub fn from_ns_f64(ns: f64) -> Duration {
+        assert!(ns >= 0.0, "negative duration");
+        Duration((ns * PS_PER_NS as f64).round() as u64)
+    }
+    #[inline]
+    pub fn ps(self) -> u64 {
+        self.0
+    }
+    #[inline]
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / PS_PER_NS as f64
+    }
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+    #[inline]
+    pub fn saturating_sub(self, rhs: Duration) -> Duration {
+        Duration(self.0.saturating_sub(rhs.0))
+    }
+    /// Scale by an integer factor.
+    #[inline]
+    pub fn times(self, n: u64) -> Duration {
+        Duration(self.0.checked_mul(n).expect("Duration overflow"))
+    }
+}
+
+/// A fixed clock domain: integer period in picoseconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Clock {
+    pub period: Duration,
+}
+
+impl Clock {
+    /// Clock from a frequency in Hz (rounded to the nearest picosecond).
+    pub fn from_hz(hz: f64) -> Clock {
+        assert!(hz > 0.0);
+        Clock {
+            period: Duration((PS_PER_S as f64 / hz).round() as u64),
+        }
+    }
+    pub fn from_mhz(mhz: f64) -> Clock {
+        Clock::from_hz(mhz * 1e6)
+    }
+    pub fn from_ghz(ghz: f64) -> Clock {
+        Clock::from_hz(ghz * 1e9)
+    }
+    /// Span of `n` cycles.
+    #[inline]
+    pub fn cycles(self, n: u64) -> Duration {
+        self.period.times(n)
+    }
+    /// The next clock edge at or after `t`.
+    #[inline]
+    pub fn next_edge(self, t: Time) -> Time {
+        let p = self.period.0;
+        let rem = t.0 % p;
+        if rem == 0 {
+            t
+        } else {
+            Time(t.0 + (p - rem))
+        }
+    }
+    /// Frequency in Hz implied by the (rounded) period.
+    pub fn hz(self) -> f64 {
+        PS_PER_S as f64 / self.period.0 as f64
+    }
+}
+
+impl Add<Duration> for Time {
+    type Output = Time;
+    #[inline]
+    fn add(self, rhs: Duration) -> Time {
+        Time(self.0.checked_add(rhs.0).expect("Time overflow"))
+    }
+}
+impl AddAssign<Duration> for Time {
+    #[inline]
+    fn add_assign(&mut self, rhs: Duration) {
+        *self = *self + rhs;
+    }
+}
+impl Sub<Time> for Time {
+    type Output = Duration;
+    #[inline]
+    fn sub(self, rhs: Time) -> Duration {
+        self.since(rhs)
+    }
+}
+impl Add<Duration> for Duration {
+    type Output = Duration;
+    #[inline]
+    fn add(self, rhs: Duration) -> Duration {
+        Duration(self.0.checked_add(rhs.0).expect("Duration overflow"))
+    }
+}
+impl AddAssign<Duration> for Duration {
+    #[inline]
+    fn add_assign(&mut self, rhs: Duration) {
+        *self = *self + rhs;
+    }
+}
+impl Sub<Duration> for Duration {
+    type Output = Duration;
+    #[inline]
+    fn sub(self, rhs: Duration) -> Duration {
+        Duration(
+            self.0
+                .checked_sub(rhs.0)
+                .expect("Duration underflow"),
+        )
+    }
+}
+
+impl fmt::Debug for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}ns", self.as_ns())
+    }
+}
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ns", self.as_ns())
+    }
+}
+impl fmt::Debug for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}ns", self.as_ns())
+    }
+}
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}ns", self.as_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_periods_are_exact_for_model_domains() {
+        assert_eq!(Clock::from_ghz(2.0).period.ps(), 500);
+        assert_eq!(Clock::from_mhz(300.0).period.ps(), 3_333);
+        // DDR4-2133 IO clock 1066.5 MHz — period rounds to 938 ps; the
+        // sub-0.1% rounding error is far below model fidelity.
+        let ddr = Clock::from_mhz(1066.5);
+        assert!((ddr.hz() - 1.0665e9).abs() / 1.0665e9 < 1e-3);
+    }
+
+    #[test]
+    fn next_edge_aligns() {
+        let c = Clock { period: Duration(500) };
+        assert_eq!(c.next_edge(Time(0)), Time(0));
+        assert_eq!(c.next_edge(Time(1)), Time(500));
+        assert_eq!(c.next_edge(Time(500)), Time(500));
+        assert_eq!(c.next_edge(Time(501)), Time(1000));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = Time(1000) + Duration::from_ns(2);
+        assert_eq!(t, Time(3000));
+        assert_eq!(t - Time(1000), Duration(2000));
+        assert_eq!(Duration::from_ns(3).times(4), Duration(12_000));
+        assert_eq!(Duration::from_ns_f64(1.5), Duration(1500));
+    }
+
+    #[test]
+    #[should_panic]
+    fn since_panics_on_negative() {
+        let _ = Time(5).since(Time(10));
+    }
+}

@@ -1,0 +1,159 @@
+//! Trace capture: a bounded ring of timestamped messages with EWF and
+//! JSON dumps (the paper's block-level capture + decode pipeline, §4.1).
+
+use crate::proto::messages::Message;
+use crate::sim::time::Time;
+
+use super::ewf;
+use super::json::Json;
+use super::msgjson;
+
+/// Direction tag for captured messages.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dir {
+    CpuToFpga,
+    FpgaToCpu,
+}
+
+#[derive(Clone, Debug)]
+pub struct Captured {
+    pub time: Time,
+    pub dir: Dir,
+    pub msg: Message,
+}
+
+/// Bounded capture ring (oldest entries dropped when full).
+pub struct Capture {
+    ring: std::collections::VecDeque<Captured>,
+    cap: usize,
+    pub total_seen: u64,
+}
+
+impl Capture {
+    pub fn new(cap: usize) -> Capture {
+        Capture { ring: std::collections::VecDeque::with_capacity(cap), cap, total_seen: 0 }
+    }
+
+    pub fn record(&mut self, time: Time, dir: Dir, msg: Message) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(Captured { time, dir, msg });
+        self.total_seen += 1;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Captured> {
+        self.ring.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Dump as a JSON array (the paper's trace interchange format).
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.ring.iter().map(|c| {
+            Json::obj(vec![
+                ("t_ps", Json::num(c.time.ps() as f64)),
+                ("dir", Json::str(match c.dir {
+                    Dir::CpuToFpga => "cpu_to_fpga",
+                    Dir::FpgaToCpu => "fpga_to_cpu",
+                })),
+                ("msg", msgjson::to_json(&c.msg)),
+            ])
+        }))
+    }
+
+    /// Dump as a binary EWF stream (one record per message, with a
+    /// 12-byte `(t_ps: u64, dir: u8, pad[3])` preamble per record).
+    pub fn to_ewf(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for c in &self.ring {
+            out.extend_from_slice(&c.time.ps().to_le_bytes());
+            out.push(match c.dir {
+                Dir::CpuToFpga => 0,
+                Dir::FpgaToCpu => 1,
+            });
+            out.extend_from_slice(&[0, 0, 0]);
+            out.extend(ewf::encode(&c.msg));
+        }
+        out
+    }
+
+    /// Parse a binary EWF capture stream back.
+    pub fn from_ewf(data: &[u8]) -> Result<Vec<Captured>, String> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        while off < data.len() {
+            if data.len() - off < 12 {
+                return Err("truncated preamble".into());
+            }
+            let t = u64::from_le_bytes(data[off..off + 8].try_into().unwrap());
+            let dir = match data[off + 8] {
+                0 => Dir::CpuToFpga,
+                1 => Dir::FpgaToCpu,
+                d => return Err(format!("bad dir {d}")),
+            };
+            off += 12;
+            let (msg, used) = ewf::decode(&data[off..]).map_err(|e| e.to_string())?;
+            off += used;
+            out.push(Captured { time: Time(t), dir, msg });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::{CohOp, LineAddr, ReqId};
+    use crate::proto::states::Node;
+
+    fn msg(i: u32) -> Message {
+        Message::coh_req(ReqId(i), Node::Remote, CohOp::ReadShared, LineAddr(i as u64))
+    }
+
+    #[test]
+    fn ring_drops_oldest() {
+        let mut c = Capture::new(3);
+        for i in 0..5 {
+            c.record(Time(i as u64), Dir::CpuToFpga, msg(i));
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.total_seen, 5);
+        let ids: Vec<u32> = c.iter().map(|x| x.msg.id.0).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ewf_capture_round_trips() {
+        let mut c = Capture::new(16);
+        c.record(Time(100), Dir::CpuToFpga, msg(1));
+        c.record(
+            Time(250),
+            Dir::FpgaToCpu,
+            Message::coh_rsp(ReqId(1), Node::Home, CohOp::ReadShared, LineAddr(1), false, Some(Box::new([3; 128]))),
+        );
+        let bytes = c.to_ewf();
+        let back = Capture::from_ewf(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].time, Time(100));
+        assert_eq!(back[0].dir, Dir::CpuToFpga);
+        assert_eq!(back[1].msg.payload.as_ref().unwrap()[0], 3);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut c = Capture::new(4);
+        c.record(Time(1), Dir::CpuToFpga, msg(1));
+        let text = c.to_json().to_string();
+        let parsed = super::super::json::parse(&text).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.idx(0).unwrap().get("dir").unwrap().as_str(),
+            Some("cpu_to_fpga")
+        );
+    }
+}

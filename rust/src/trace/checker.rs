@@ -1,0 +1,414 @@
+//! Online protocol checker (paper §4.1 "Online tracing"): protocol
+//! properties are written as NFAs in a simple specification language and
+//! checked against live message streams at full rate, recording
+//! violations — the software analogue of the paper's synthesized checker
+//! circuits (which avoid hours of re-synthesis by compiling only the NFA).
+//!
+//! ## Specification language
+//!
+//! ```text
+//! # every grant is answered before the line is granted again
+//! nfa read_response {
+//!   start idle;
+//!   idle: req ReadShared -> pending;
+//!   pending: rsp ReadShared -> idle;
+//!   pending: rsp ReadExclusive -> idle;     # race conversion
+//!   pending: req ReadShared -> error "second read while pending";
+//!   default ignore;
+//! }
+//! ```
+//!
+//! * symbols are `<class> <op|*>` where class ∈ {req, fwd, wb, rsp, io}
+//!   — `req` = remote-initiated upgrade requests, `fwd` = home-initiated
+//!   downgrades, `wb` = voluntary downgrades, `rsp` = responses;
+//! * the automaton is instantiated **per cache line**;
+//! * `default ignore` skips unmatched symbols, `default error` flags them;
+//! * `-> error "text"` transitions report a violation and reset the line
+//!   to the start state.
+
+use rustc_hash::FxHashMap as HashMap;
+
+use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind};
+use crate::sim::time::Time;
+
+/// Symbol classes over the message stream.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SymClass {
+    Req,
+    Fwd,
+    Wb,
+    Rsp,
+    Io,
+}
+
+/// Classify a message into (class, op).
+pub fn classify(msg: &Message) -> (SymClass, Option<CohOp>) {
+    match &msg.kind {
+        MsgKind::CohReq { op } => match op {
+            CohOp::ReadShared | CohOp::ReadExclusive | CohOp::UpgradeS2E => (SymClass::Req, Some(*op)),
+            CohOp::VolDowngradeS | CohOp::VolDowngradeI => (SymClass::Wb, Some(*op)),
+            _ => (SymClass::Fwd, Some(*op)),
+        },
+        MsgKind::CohRsp { op, .. } => (SymClass::Rsp, Some(*op)),
+        _ => (SymClass::Io, None),
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Target {
+    State(usize),
+    Error(String),
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    from: usize,
+    class: SymClass,
+    /// None = wildcard op
+    op: Option<CohOp>,
+    to: Target,
+}
+
+/// A compiled NFA specification.
+#[derive(Clone, Debug)]
+pub struct NfaSpec {
+    pub name: String,
+    state_names: Vec<String>,
+    start: usize,
+    rules: Vec<Rule>,
+    default_error: bool,
+}
+
+fn op_of(name: &str) -> Option<CohOp> {
+    Some(match name {
+        "ReadShared" => CohOp::ReadShared,
+        "ReadExclusive" => CohOp::ReadExclusive,
+        "UpgradeS2E" => CohOp::UpgradeS2E,
+        "VolDowngradeS" => CohOp::VolDowngradeS,
+        "VolDowngradeI" => CohOp::VolDowngradeI,
+        "FwdDowngradeS" => CohOp::FwdDowngradeS,
+        "FwdDowngradeI" => CohOp::FwdDowngradeI,
+        "FwdSharedInvalidate" => CohOp::FwdSharedInvalidate,
+        _ => return None,
+    })
+}
+
+impl NfaSpec {
+    /// Parse one `nfa name { ... }` block.
+    pub fn parse(text: &str) -> Result<NfaSpec, String> {
+        let mut name = None;
+        let mut state_names: Vec<String> = Vec::new();
+        let mut start = None;
+        let mut rules = Vec::new();
+        let mut default_error = false;
+
+        let intern = |names: &mut Vec<String>, s: &str| -> usize {
+            if let Some(i) = names.iter().position(|n| n == s) {
+                i
+            } else {
+                names.push(s.to_string());
+                names.len() - 1
+            }
+        };
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() || line == "}" {
+                continue;
+            }
+            let err = |m: &str| format!("line {}: {m}: {raw:?}", lineno + 1);
+            if let Some(rest) = line.strip_prefix("nfa ") {
+                let n = rest.trim_end_matches('{').trim();
+                if n.is_empty() {
+                    return Err(err("missing nfa name"));
+                }
+                name = Some(n.to_string());
+            } else if let Some(rest) = line.strip_prefix("start ") {
+                let s = rest.trim_end_matches(';').trim();
+                start = Some(intern(&mut state_names, s));
+            } else if let Some(rest) = line.strip_prefix("default ") {
+                match rest.trim_end_matches(';').trim() {
+                    "ignore" => default_error = false,
+                    "error" => default_error = true,
+                    other => return Err(err(&format!("bad default {other:?}"))),
+                }
+            } else if let Some((state, rest)) = line.split_once(':') {
+                // "<state>: <class> <op|*> -> <target>;"
+                let from = intern(&mut state_names, state.trim());
+                let rest = rest.trim().trim_end_matches(';');
+                let (sym, target) = rest.split_once("->").ok_or_else(|| err("missing ->"))?;
+                let mut parts = sym.trim().split_whitespace();
+                let class = match parts.next() {
+                    Some("req") => SymClass::Req,
+                    Some("fwd") => SymClass::Fwd,
+                    Some("wb") => SymClass::Wb,
+                    Some("rsp") => SymClass::Rsp,
+                    Some("io") => SymClass::Io,
+                    other => return Err(err(&format!("bad class {other:?}"))),
+                };
+                let op = match parts.next() {
+                    Some("*") | None => None,
+                    Some(o) => Some(op_of(o).ok_or_else(|| err(&format!("unknown op {o:?}")))?),
+                };
+                let target = target.trim();
+                let to = if let Some(rest) = target.strip_prefix("error") {
+                    let text = rest.trim().trim_matches('"').to_string();
+                    Target::Error(if text.is_empty() { "violation".into() } else { text })
+                } else {
+                    Target::State(intern(&mut state_names, target))
+                };
+                rules.push(Rule { from, class, op, to });
+            } else {
+                return Err(err("unparseable line"));
+            }
+        }
+        Ok(NfaSpec {
+            name: name.ok_or("missing `nfa <name> {`")?,
+            start: start.ok_or("missing `start <state>;`")?,
+            state_names,
+            rules,
+            default_error,
+        })
+    }
+
+    pub fn state_count(&self) -> usize {
+        self.state_names.len()
+    }
+}
+
+/// A detected specification violation.
+#[derive(Clone, Debug)]
+pub struct CheckViolation {
+    pub spec: String,
+    pub time: Time,
+    pub addr: LineAddr,
+    pub detail: String,
+}
+
+/// The online checker: per-line NFA instances over a live stream.
+pub struct OnlineChecker {
+    spec: NfaSpec,
+    /// Active state set per line (lines at start-state-only are elided).
+    lines: HashMap<LineAddr, Vec<usize>>,
+    pub violations: Vec<CheckViolation>,
+    pub messages_checked: u64,
+}
+
+impl OnlineChecker {
+    pub fn new(spec: NfaSpec) -> OnlineChecker {
+        OnlineChecker { spec, lines: HashMap::default(), violations: Vec::new(), messages_checked: 0 }
+    }
+
+    /// Feed one message (with its timestamp) through the checker.
+    pub fn observe(&mut self, t: Time, msg: &Message) {
+        self.messages_checked += 1;
+        let (class, op) = classify(msg);
+        if class == SymClass::Io {
+            // still allow specs over io, but keyed per line as usual
+        }
+        let states = self
+            .lines
+            .entry(msg.addr)
+            .or_insert_with(|| vec![self.spec.start]);
+        let mut next: Vec<usize> = Vec::new();
+        let mut violated: Option<String> = None;
+        let mut any_match = false;
+        for &s in states.iter() {
+            let mut moved = false;
+            for r in &self.spec.rules {
+                if r.from != s || r.class != class {
+                    continue;
+                }
+                if let Some(want) = r.op {
+                    if op != Some(want) {
+                        continue;
+                    }
+                }
+                moved = true;
+                any_match = true;
+                match &r.to {
+                    Target::State(t) => {
+                        if !next.contains(t) {
+                            next.push(*t);
+                        }
+                    }
+                    Target::Error(text) => violated = Some(text.clone()),
+                }
+            }
+            if !moved {
+                // symbol unmatched in this state
+                if self.spec.default_error {
+                    violated = Some(format!(
+                        "unexpected {class:?} {op:?} in state {}",
+                        self.spec.state_names[s]
+                    ));
+                } else {
+                    // ignore: stay
+                    if !next.contains(&s) {
+                        next.push(s);
+                    }
+                }
+            }
+        }
+        let _ = any_match;
+        if let Some(detail) = violated {
+            self.violations.push(CheckViolation {
+                spec: self.spec.name.clone(),
+                time: t,
+                addr: msg.addr,
+                detail,
+            });
+            *states = vec![self.spec.start];
+            return;
+        }
+        *states = next;
+    }
+
+    pub fn tracked_lines(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+/// The built-in property specs shipped with the toolkit.
+pub mod builtin {
+    /// Every upgrade request is answered before another grant cycle
+    /// starts on the same line.
+    pub const READ_RESPONSE: &str = r#"
+nfa read_response {
+  start idle;
+  idle: req ReadShared -> pending;
+  idle: req ReadExclusive -> pending;
+  idle: req UpgradeS2E -> pending;
+  pending: rsp ReadShared -> idle;
+  pending: rsp ReadExclusive -> idle;
+  pending: rsp UpgradeS2E -> idle;
+  pending: req ReadShared -> error "request while response pending";
+  pending: req ReadExclusive -> error "request while response pending";
+  default ignore;
+}
+"#;
+
+    /// A home-initiated downgrade must be answered before the home issues
+    /// another one for the same line.
+    pub const FWD_RESPONSE: &str = r#"
+nfa fwd_response {
+  start idle;
+  idle: fwd * -> pending;
+  pending: rsp FwdDowngradeS -> idle;
+  pending: rsp FwdDowngradeI -> idle;
+  pending: rsp FwdSharedInvalidate -> idle;
+  pending: fwd * -> error "overlapping home-initiated downgrades";
+  default ignore;
+}
+"#;
+
+    /// Responses never appear without a prior request (per line).
+    pub const NO_SPURIOUS_RSP: &str = r#"
+nfa no_spurious_rsp {
+  start idle;
+  idle: req * -> pending;
+  idle: rsp ReadShared -> error "response without request";
+  idle: rsp ReadExclusive -> error "response without request";
+  idle: rsp UpgradeS2E -> error "response without request";
+  pending: rsp * -> idle;
+  pending: req * -> pending;
+  default ignore;
+}
+"#;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::{Message, ReqId};
+    use crate::proto::states::Node;
+
+    fn req(id: u32, op: CohOp, addr: u64) -> Message {
+        Message::coh_req(ReqId(id), Node::Remote, op, LineAddr(addr))
+    }
+    fn rsp(id: u32, op: CohOp, addr: u64) -> Message {
+        Message::coh_rsp(ReqId(id), Node::Home, op, LineAddr(addr), false, None)
+    }
+
+    #[test]
+    fn parses_builtin_specs() {
+        for s in [builtin::READ_RESPONSE, builtin::FWD_RESPONSE, builtin::NO_SPURIOUS_RSP] {
+            let spec = NfaSpec::parse(s).unwrap();
+            assert!(spec.state_count() >= 2);
+        }
+    }
+
+    #[test]
+    fn clean_request_response_stream_passes() {
+        let spec = NfaSpec::parse(builtin::READ_RESPONSE).unwrap();
+        let mut c = OnlineChecker::new(spec);
+        for i in 0..100u32 {
+            let addr = (i % 7) as u64;
+            c.observe(Time(i as u64 * 10), &req(i, CohOp::ReadShared, addr));
+            c.observe(Time(i as u64 * 10 + 5), &rsp(i, CohOp::ReadShared, addr));
+        }
+        assert!(c.violations.is_empty(), "{:?}", c.violations);
+        assert_eq!(c.messages_checked, 200);
+    }
+
+    #[test]
+    fn double_request_is_flagged() {
+        let spec = NfaSpec::parse(builtin::READ_RESPONSE).unwrap();
+        let mut c = OnlineChecker::new(spec);
+        c.observe(Time(0), &req(1, CohOp::ReadShared, 5));
+        c.observe(Time(1), &req(2, CohOp::ReadShared, 5)); // no response yet!
+        assert_eq!(c.violations.len(), 1);
+        assert!(c.violations[0].detail.contains("pending"));
+        assert_eq!(c.violations[0].addr, LineAddr(5));
+    }
+
+    #[test]
+    fn per_line_instances_are_independent() {
+        let spec = NfaSpec::parse(builtin::READ_RESPONSE).unwrap();
+        let mut c = OnlineChecker::new(spec);
+        c.observe(Time(0), &req(1, CohOp::ReadShared, 1));
+        c.observe(Time(1), &req(2, CohOp::ReadShared, 2)); // different line: fine
+        assert!(c.violations.is_empty());
+        assert_eq!(c.tracked_lines(), 2);
+    }
+
+    #[test]
+    fn spurious_response_is_flagged() {
+        let spec = NfaSpec::parse(builtin::NO_SPURIOUS_RSP).unwrap();
+        let mut c = OnlineChecker::new(spec);
+        c.observe(Time(0), &rsp(9, CohOp::ReadShared, 3));
+        assert_eq!(c.violations.len(), 1);
+    }
+
+    #[test]
+    fn race_conversion_is_accepted_by_read_response() {
+        // UpgradeS2E answered by a converted ReadExclusive response
+        let spec = NfaSpec::parse(builtin::READ_RESPONSE).unwrap();
+        let mut c = OnlineChecker::new(spec);
+        c.observe(Time(0), &req(1, CohOp::UpgradeS2E, 4));
+        c.observe(Time(1), &rsp(1, CohOp::ReadExclusive, 4));
+        assert!(c.violations.is_empty(), "{:?}", c.violations);
+    }
+
+    #[test]
+    fn default_error_flags_unmatched() {
+        let spec = NfaSpec::parse(
+            "nfa strict {\n start s;\n s: req ReadShared -> s;\n default error;\n}",
+        )
+        .unwrap();
+        let mut c = OnlineChecker::new(spec);
+        c.observe(Time(0), &req(1, CohOp::ReadShared, 0));
+        assert!(c.violations.is_empty());
+        c.observe(Time(1), &req(2, CohOp::ReadExclusive, 0));
+        assert_eq!(c.violations.len(), 1);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(NfaSpec::parse("nfa x {").is_err()); // no start
+        assert!(NfaSpec::parse("start s;").is_err()); // no name
+        assert!(NfaSpec::parse("nfa x {\n start s;\n s: bogus * -> s;\n}").is_err());
+        assert!(NfaSpec::parse("nfa x {\n start s;\n s: req NoOp -> s;\n}").is_err());
+        assert!(NfaSpec::parse("nfa x {\n start s;\n s: req ReadShared s;\n}").is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! ECI Wire Format (EWF) — the paper's "canonical binary format ... to
+//! allow the decoded traces to be used for a variety of purposes" (§4.1).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! byte  0      opcode
+//! byte  1      flags: bit0 = from-home, bit1 = dirty, bit2 = has-payload
+//! bytes 2..4   reserved (0)
+//! bytes 4..8   request id (u32)
+//! bytes 8..16  line address (u64)
+//! [16..32]     I/O extension (offset u64, value u64) — I/O opcodes only
+//! [..+128]     payload (when has-payload)
+//! [..+4]       CRC-32 over everything above
+//! ```
+//!
+//! A unit test pins the coherence-message sizes to
+//! [`Message::wire_bytes`] (used by the link-timing model).
+
+use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId, LINE_BYTES};
+use crate::proto::states::Node;
+
+const FLAG_FROM_HOME: u8 = 1 << 0;
+const FLAG_DIRTY: u8 = 1 << 1;
+const FLAG_PAYLOAD: u8 = 1 << 2;
+const FLAG_NO_COPY: u8 = 1 << 3;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EwfError {
+    #[error("truncated EWF record: need {need} bytes, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("unknown opcode {0:#x}")]
+    BadOpcode(u8),
+    #[error("CRC mismatch (corrupted record)")]
+    BadCrc,
+    #[error("payload flag inconsistent with opcode")]
+    BadPayload,
+}
+
+fn coh_opcode(op: CohOp) -> u8 {
+    match op {
+        CohOp::ReadShared => 0x10,
+        CohOp::ReadExclusive => 0x11,
+        CohOp::UpgradeS2E => 0x12,
+        CohOp::VolDowngradeS => 0x13,
+        CohOp::VolDowngradeI => 0x14,
+        CohOp::FwdDowngradeS => 0x15,
+        CohOp::FwdDowngradeI => 0x16,
+        CohOp::FwdSharedInvalidate => 0x17,
+    }
+}
+
+fn coh_op_of(code: u8) -> Option<CohOp> {
+    Some(match code & 0x1F {
+        0x10 => CohOp::ReadShared,
+        0x11 => CohOp::ReadExclusive,
+        0x12 => CohOp::UpgradeS2E,
+        0x13 => CohOp::VolDowngradeS,
+        0x14 => CohOp::VolDowngradeI,
+        0x15 => CohOp::FwdDowngradeS,
+        0x16 => CohOp::FwdDowngradeI,
+        0x17 => CohOp::FwdSharedInvalidate,
+        _ => return None,
+    })
+}
+
+fn opcode(kind: &MsgKind) -> u8 {
+    match kind {
+        MsgKind::CohReq { op } => coh_opcode(*op),
+        MsgKind::CohRsp { op, .. } => coh_opcode(*op) | 0x20,
+        MsgKind::IoRead { .. } => 0x40,
+        MsgKind::IoReadRsp { .. } => 0x41,
+        MsgKind::IoWrite { .. } => 0x42,
+        MsgKind::IoWriteAck => 0x43,
+        MsgKind::Barrier => 0x44,
+        MsgKind::BarrierAck => 0x45,
+        MsgKind::Ipi { .. } => 0x46,
+    }
+}
+
+/// CRC-32 (IEEE, bitwise; this is cold path — tooling, not simulation).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Encode one message as an EWF record.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::with_capacity(176);
+    out.push(opcode(&msg.kind));
+    let mut flags = 0u8;
+    if msg.from == Node::Home {
+        flags |= FLAG_FROM_HOME;
+    }
+    if let MsgKind::CohRsp { dirty: true, .. } = msg.kind {
+        flags |= FLAG_DIRTY;
+    }
+    if let MsgKind::CohRsp { had_copy: false, .. } = msg.kind {
+        flags |= FLAG_NO_COPY;
+    }
+    if msg.payload.is_some() {
+        flags |= FLAG_PAYLOAD;
+    }
+    out.push(flags);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&msg.id.0.to_le_bytes());
+    out.extend_from_slice(&msg.addr.0.to_le_bytes());
+    match &msg.kind {
+        MsgKind::IoRead { offset } => {
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&0u64.to_le_bytes());
+        }
+        MsgKind::IoReadRsp { offset, value } | MsgKind::IoWrite { offset, value } => {
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&value.to_le_bytes());
+        }
+        MsgKind::Ipi { vector } => {
+            out.extend_from_slice(&(*vector as u64).to_le_bytes());
+            out.extend_from_slice(&0u64.to_le_bytes());
+        }
+        MsgKind::IoWriteAck | MsgKind::Barrier | MsgKind::BarrierAck => {
+            out.extend_from_slice(&[0u8; 16]);
+        }
+        _ => {}
+    }
+    if let Some(p) = &msg.payload {
+        out.extend_from_slice(&p[..]);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode one EWF record; returns the message and bytes consumed.
+pub fn decode(data: &[u8]) -> Result<(Message, usize), EwfError> {
+    if data.len() < 20 {
+        return Err(EwfError::Truncated { need: 20, have: data.len() });
+    }
+    let code = data[0];
+    let flags = data[1];
+    let is_io = (0x40..=0x46).contains(&code);
+    let has_payload = flags & FLAG_PAYLOAD != 0;
+    let mut len = 16;
+    if is_io {
+        len += 16;
+    }
+    if has_payload {
+        len += LINE_BYTES;
+    }
+    let total = len + 4;
+    if data.len() < total {
+        return Err(EwfError::Truncated { need: total, have: data.len() });
+    }
+    let want_crc = u32::from_le_bytes(data[len..len + 4].try_into().unwrap());
+    if crc32(&data[..len]) != want_crc {
+        return Err(EwfError::BadCrc);
+    }
+    let id = ReqId(u32::from_le_bytes(data[4..8].try_into().unwrap()));
+    let addr = LineAddr(u64::from_le_bytes(data[8..16].try_into().unwrap()));
+    let from = if flags & FLAG_FROM_HOME != 0 { Node::Home } else { Node::Remote };
+    let dirty = flags & FLAG_DIRTY != 0;
+    let payload: Option<Box<Line>> = if has_payload {
+        let off = if is_io { 32 } else { 16 };
+        let mut line = [0u8; LINE_BYTES];
+        line.copy_from_slice(&data[off..off + LINE_BYTES]);
+        Some(Box::new(line))
+    } else {
+        None
+    };
+
+    let kind = if (0x10..0x18).contains(&code) {
+        MsgKind::CohReq { op: coh_op_of(code).ok_or(EwfError::BadOpcode(code))? }
+    } else if (0x30..0x38).contains(&code) {
+        MsgKind::CohRsp {
+            op: coh_op_of(code).ok_or(EwfError::BadOpcode(code))?,
+            dirty,
+            had_copy: flags & FLAG_NO_COPY == 0,
+        }
+    } else {
+        let io = |i: usize| u64::from_le_bytes(data[16 + i * 8..24 + i * 8].try_into().unwrap());
+        match code {
+            0x40 => MsgKind::IoRead { offset: io(0) },
+            0x41 => MsgKind::IoReadRsp { offset: io(0), value: io(1) },
+            0x42 => MsgKind::IoWrite { offset: io(0), value: io(1) },
+            0x43 => MsgKind::IoWriteAck,
+            0x44 => MsgKind::Barrier,
+            0x45 => MsgKind::BarrierAck,
+            0x46 => MsgKind::Ipi { vector: io(0) as u8 },
+            c => return Err(EwfError::BadOpcode(c)),
+        }
+    };
+    Ok((Message { id, from, kind, addr, payload }, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: Message) {
+        let bytes = encode(&msg);
+        let (back, used) = decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn coherence_round_trips() {
+        round_trip(Message::coh_req(ReqId(7), Node::Remote, CohOp::ReadShared, LineAddr(0xABCDE)));
+        round_trip(Message::coh_req_data(
+            ReqId(8),
+            Node::Remote,
+            CohOp::VolDowngradeI,
+            LineAddr(3),
+            Box::new([0x5A; 128]),
+        ));
+        round_trip(Message::coh_rsp(
+            ReqId(9),
+            Node::Home,
+            CohOp::FwdDowngradeI,
+            LineAddr(12),
+            true,
+            Some(Box::new([0xA5; 128])),
+        ));
+        round_trip(Message::coh_rsp(ReqId(10), Node::Home, CohOp::UpgradeS2E, LineAddr(13), false, None));
+    }
+
+    #[test]
+    fn io_and_misc_round_trip() {
+        for kind in [
+            MsgKind::IoRead { offset: 0x18 },
+            MsgKind::IoReadRsp { offset: 0x18, value: 42 },
+            MsgKind::IoWrite { offset: 0x08, value: 0xDEADBEEF },
+            MsgKind::IoWriteAck,
+            MsgKind::Barrier,
+            MsgKind::BarrierAck,
+            MsgKind::Ipi { vector: 5 },
+        ] {
+            round_trip(Message { id: ReqId(1), from: Node::Remote, kind, addr: LineAddr(0), payload: None });
+        }
+    }
+
+    #[test]
+    fn coherence_sizes_match_timing_model() {
+        // Message::wire_bytes = 16 + payload; EWF adds the 4-byte CRC
+        // which the link layer's frame accounting carries separately.
+        let m = Message::coh_req(ReqId(0), Node::Remote, CohOp::ReadShared, LineAddr(0));
+        assert_eq!(encode(&m).len() as u64, m.wire_bytes() + 4);
+        let m = Message::coh_rsp(ReqId(0), Node::Home, CohOp::ReadShared, LineAddr(0), false, Some(Box::new([0; 128])));
+        assert_eq!(encode(&m).len() as u64, m.wire_bytes() + 4);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let m = Message::coh_req(ReqId(7), Node::Remote, CohOp::ReadShared, LineAddr(0xABCDE));
+        let mut bytes = encode(&m);
+        bytes[9] ^= 0x40;
+        assert_eq!(decode(&bytes).unwrap_err(), EwfError::BadCrc);
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let m = Message::coh_req(ReqId(7), Node::Remote, CohOp::ReadShared, LineAddr(1));
+        let bytes = encode(&m);
+        assert!(matches!(decode(&bytes[..10]), Err(EwfError::Truncated { .. })));
+    }
+
+    #[test]
+    fn stream_of_records_decodes_sequentially() {
+        let msgs = vec![
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)),
+            Message::coh_rsp(ReqId(1), Node::Home, CohOp::ReadShared, LineAddr(2), false, Some(Box::new([1; 128]))),
+            Message::coh_req(ReqId(2), Node::Remote, CohOp::VolDowngradeI, LineAddr(2)),
+        ];
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend(encode(m));
+        }
+        let mut off = 0;
+        let mut back = Vec::new();
+        while off < stream.len() {
+            let (m, used) = decode(&stream[off..]).unwrap();
+            back.push(m);
+            off += used;
+        }
+        assert_eq!(back, msgs);
+    }
+}

@@ -1,0 +1,17 @@
+//! The ECI supporting toolkit (paper §4.1): trace capture, the EWF binary
+//! wire format, the JSON serialization of decoded messages, a
+//! Wireshark-style dissector, and the NFA-specified online protocol
+//! checker. These are the tools the paper built to reverse-engineer and
+//! then continuously validate the ThunderX-1 protocol; here they observe
+//! the simulated link (and any EWF/JSON trace file).
+
+pub mod capture;
+pub mod checker;
+pub mod demo;
+pub mod dissector;
+pub mod ewf;
+pub mod json;
+pub mod msgjson;
+
+pub use capture::{Capture, Captured, Dir};
+pub use checker::{NfaSpec, OnlineChecker};

@@ -1,0 +1,163 @@
+//! The paper's JSON-based message serialization (§4.1): every decoded ECI
+//! message as a JSON object, round-trippable with [`super::ewf`]. Used by
+//! the capture dump and (in the paper) by the ARM Fast Models cache module
+//! talking over TCP — our equivalent is the trace interchange in
+//! `examples/protocol_check.rs`.
+
+use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
+use crate::proto::states::Node;
+
+use super::json::Json;
+
+fn op_name(op: CohOp) -> &'static str {
+    match op {
+        CohOp::ReadShared => "ReadShared",
+        CohOp::ReadExclusive => "ReadExclusive",
+        CohOp::UpgradeS2E => "UpgradeS2E",
+        CohOp::VolDowngradeS => "VolDowngradeS",
+        CohOp::VolDowngradeI => "VolDowngradeI",
+        CohOp::FwdDowngradeS => "FwdDowngradeS",
+        CohOp::FwdDowngradeI => "FwdDowngradeI",
+        CohOp::FwdSharedInvalidate => "FwdSharedInvalidate",
+    }
+}
+
+fn op_of(name: &str) -> Option<CohOp> {
+    Some(match name {
+        "ReadShared" => CohOp::ReadShared,
+        "ReadExclusive" => CohOp::ReadExclusive,
+        "UpgradeS2E" => CohOp::UpgradeS2E,
+        "VolDowngradeS" => CohOp::VolDowngradeS,
+        "VolDowngradeI" => CohOp::VolDowngradeI,
+        "FwdDowngradeS" => CohOp::FwdDowngradeS,
+        "FwdDowngradeI" => CohOp::FwdDowngradeI,
+        "FwdSharedInvalidate" => CohOp::FwdSharedInvalidate,
+        _ => return None,
+    })
+}
+
+/// Serialize a message to the JSON trace format.
+pub fn to_json(msg: &Message) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("id", Json::num(msg.id.0)),
+        ("from", Json::str(if msg.from == Node::Home { "home" } else { "remote" })),
+        ("addr", Json::num(msg.addr.0 as f64)),
+    ];
+    match &msg.kind {
+        MsgKind::CohReq { op } => {
+            fields.push(("type", Json::str("req")));
+            fields.push(("op", Json::str(op_name(*op))));
+        }
+        MsgKind::CohRsp { op, dirty, had_copy } => {
+            fields.push(("type", Json::str("rsp")));
+            fields.push(("op", Json::str(op_name(*op))));
+            fields.push(("dirty", Json::Bool(*dirty)));
+            if !had_copy {
+                fields.push(("had_copy", Json::Bool(false)));
+            }
+        }
+        MsgKind::IoRead { offset } => {
+            fields.push(("type", Json::str("io_read")));
+            fields.push(("offset", Json::num(*offset as f64)));
+        }
+        MsgKind::IoReadRsp { offset, value } => {
+            fields.push(("type", Json::str("io_read_rsp")));
+            fields.push(("offset", Json::num(*offset as f64)));
+            fields.push(("value", Json::num(*value as f64)));
+        }
+        MsgKind::IoWrite { offset, value } => {
+            fields.push(("type", Json::str("io_write")));
+            fields.push(("offset", Json::num(*offset as f64)));
+            fields.push(("value", Json::num(*value as f64)));
+        }
+        MsgKind::IoWriteAck => fields.push(("type", Json::str("io_write_ack"))),
+        MsgKind::Barrier => fields.push(("type", Json::str("barrier"))),
+        MsgKind::BarrierAck => fields.push(("type", Json::str("barrier_ack"))),
+        MsgKind::Ipi { vector } => {
+            fields.push(("type", Json::str("ipi")));
+            fields.push(("vector", Json::num(*vector as u32)));
+        }
+    }
+    if let Some(p) = &msg.payload {
+        fields.push(("payload", Json::arr(p.iter().map(|&b| Json::num(b as u32)))));
+    }
+    Json::obj(fields)
+}
+
+/// Deserialize a message from the JSON trace format.
+pub fn from_json(j: &Json) -> Result<Message, String> {
+    let id = ReqId(j.get("id").and_then(Json::as_u64).ok_or("missing id")? as u32);
+    let from = match j.get("from").and_then(Json::as_str) {
+        Some("home") => Node::Home,
+        Some("remote") => Node::Remote,
+        other => return Err(format!("bad from: {other:?}")),
+    };
+    let addr = LineAddr(j.get("addr").and_then(Json::as_u64).ok_or("missing addr")?);
+    let ty = j.get("type").and_then(Json::as_str).ok_or("missing type")?;
+    let get_op = || -> Result<CohOp, String> {
+        let name = j.get("op").and_then(Json::as_str).ok_or("missing op")?;
+        op_of(name).ok_or_else(|| format!("unknown op {name}"))
+    };
+    let num = |k: &str| j.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing {k}"));
+    let kind = match ty {
+        "req" => MsgKind::CohReq { op: get_op()? },
+        "rsp" => MsgKind::CohRsp {
+            op: get_op()?,
+            dirty: j.get("dirty").and_then(Json::as_bool).unwrap_or(false),
+            had_copy: j.get("had_copy").and_then(Json::as_bool).unwrap_or(true),
+        },
+        "io_read" => MsgKind::IoRead { offset: num("offset")? },
+        "io_read_rsp" => MsgKind::IoReadRsp { offset: num("offset")?, value: num("value")? },
+        "io_write" => MsgKind::IoWrite { offset: num("offset")?, value: num("value")? },
+        "io_write_ack" => MsgKind::IoWriteAck,
+        "barrier" => MsgKind::Barrier,
+        "barrier_ack" => MsgKind::BarrierAck,
+        "ipi" => MsgKind::Ipi { vector: num("vector")? as u8 },
+        other => return Err(format!("unknown type {other}")),
+    };
+    let payload: Option<Box<Line>> = match j.get("payload") {
+        Some(Json::Arr(v)) => {
+            if v.len() != 128 {
+                return Err(format!("payload length {}", v.len()));
+            }
+            let mut line = [0u8; 128];
+            for (i, x) in v.iter().enumerate() {
+                line[i] = x.as_u64().ok_or("bad payload byte")? as u8;
+            }
+            Some(Box::new(line))
+        }
+        None => None,
+        _ => return Err("payload not an array".into()),
+    };
+    Ok(Message { id, from, kind, addr, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_all_kinds() {
+        let msgs = vec![
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(10)),
+            Message::coh_req_data(ReqId(2), Node::Remote, CohOp::VolDowngradeS, LineAddr(11), Box::new([9; 128])),
+            Message::coh_rsp(ReqId(3), Node::Home, CohOp::FwdDowngradeS, LineAddr(12), true, Some(Box::new([7; 128]))),
+            Message { id: ReqId(4), from: Node::Remote, kind: MsgKind::IoWrite { offset: 8, value: 99 }, addr: LineAddr(0), payload: None },
+            Message { id: ReqId(5), from: Node::Home, kind: MsgKind::Ipi { vector: 3 }, addr: LineAddr(0), payload: None },
+        ];
+        for m in msgs {
+            let j = to_json(&m);
+            // and through text
+            let text = j.to_string();
+            let parsed = super::super::json::parse(&text).unwrap();
+            let back = from_json(&parsed).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = super::super::json::parse(r#"{"type":"req","op":"NoSuchOp","id":1,"from":"remote","addr":2}"#).unwrap();
+        assert!(from_json(&j).is_err());
+    }
+}

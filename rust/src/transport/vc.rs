@@ -1,0 +1,381 @@
+//! Virtual-channel layer (paper §4.2).
+//!
+//! "The VC layer implements 14 different virtual channels that expose
+//! Input/Output (IO) and coherence operations to the FPGA, of which 10 are
+//! for coherence traffic, with separate sets of VCs for odd and even cache
+//! lines enabling simpler load-balancing."
+//!
+//! The 14 channels, mirroring the ThunderX-1 message classes:
+//!
+//! | VC    | class       | parity | carries                              |
+//! |-------|-------------|--------|--------------------------------------|
+//! | 0/1   | `Req`       | e/o    | coherence requests (upgrades)        |
+//! | 2/3   | `Fwd`       | e/o    | home-initiated downgrades            |
+//! | 4/5   | `RspNoData` | e/o    | dataless responses (acks)            |
+//! | 6/7   | `RspData`   | e/o    | data-carrying responses              |
+//! | 8/9   | `WbData`    | e/o    | voluntary downgrades (± data)        |
+//! | 10    | `IoReq`     | –      | non-cacheable I/O requests           |
+//! | 11    | `IoRsp`     | –      | I/O responses                        |
+//! | 12    | `Ipi`       | –      | inter-processor interrupts           |
+//! | 13    | `Barrier`   | –      | memory-barrier handshakes            |
+//!
+//! Deadlock freedom uses the standard message-class hierarchy: a message
+//! may only wait on strictly *higher*-ranked classes, and the top classes
+//! (responses) are guaranteed sinkable — receivers always eventually drain
+//! them without generating new messages. The arbiter therefore serves
+//! higher ranks first; credits make the discipline quantitative.
+
+use crate::proto::messages::{Message, MsgKind};
+use crate::proto::states::Node;
+use std::collections::VecDeque;
+
+pub const NUM_VCS: usize = 14;
+pub const NUM_COHERENCE_VCS: usize = 10;
+
+/// Virtual-channel identifier (0..14).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct VcId(pub u8);
+
+/// Message class, determining VC (with parity) and deadlock rank.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum VcClass {
+    Req,
+    Fwd,
+    RspNoData,
+    RspData,
+    WbData,
+    IoReq,
+    IoRsp,
+    Ipi,
+    Barrier,
+}
+
+impl VcClass {
+    /// Deadlock rank: a message of class X may block only on classes with
+    /// strictly greater rank. Responses and writebacks are sinks.
+    pub fn rank(self) -> u8 {
+        match self {
+            VcClass::IoReq => 0,
+            VcClass::Req => 1,
+            VcClass::Fwd => 2,
+            VcClass::WbData => 3,
+            VcClass::RspNoData => 4,
+            VcClass::RspData => 4,
+            VcClass::IoRsp => 4,
+            VcClass::Ipi => 5,
+            VcClass::Barrier => 5,
+        }
+    }
+    /// Is this class a guaranteed sink (consumable without generating new
+    /// traffic)?
+    pub fn is_sink(self) -> bool {
+        self.rank() >= 3
+    }
+}
+
+/// Classify a message.
+pub fn class_of(msg: &Message) -> VcClass {
+    use crate::proto::messages::CohOp::*;
+    match &msg.kind {
+        MsgKind::CohReq { op } => match op {
+            ReadShared | ReadExclusive | UpgradeS2E => VcClass::Req,
+            VolDowngradeS | VolDowngradeI => VcClass::WbData,
+            FwdDowngradeS | FwdDowngradeI | FwdSharedInvalidate => VcClass::Fwd,
+        },
+        MsgKind::CohRsp { .. } => {
+            if msg.payload.is_some() {
+                VcClass::RspData
+            } else {
+                VcClass::RspNoData
+            }
+        }
+        MsgKind::IoRead { .. } | MsgKind::IoWrite { .. } => VcClass::IoReq,
+        MsgKind::IoReadRsp { .. } | MsgKind::IoWriteAck => VcClass::IoRsp,
+        MsgKind::Ipi { .. } => VcClass::Ipi,
+        MsgKind::Barrier | MsgKind::BarrierAck => VcClass::Barrier,
+    }
+}
+
+/// Map a message to its VC (coherence classes split by line parity).
+pub fn vc_for(msg: &Message) -> VcId {
+    let parity = msg.addr.parity();
+    match class_of(msg) {
+        VcClass::Req => VcId(parity),
+        VcClass::Fwd => VcId(2 + parity),
+        VcClass::RspNoData => VcId(4 + parity),
+        VcClass::RspData => VcId(6 + parity),
+        VcClass::WbData => VcId(8 + parity),
+        VcClass::IoReq => VcId(10),
+        VcClass::IoRsp => VcId(11),
+        VcClass::Ipi => VcId(12),
+        VcClass::Barrier => VcId(13),
+    }
+}
+
+/// The class a VC carries.
+pub fn class_of_vc(vc: VcId) -> VcClass {
+    match vc.0 {
+        0 | 1 => VcClass::Req,
+        2 | 3 => VcClass::Fwd,
+        4 | 5 => VcClass::RspNoData,
+        6 | 7 => VcClass::RspData,
+        8 | 9 => VcClass::WbData,
+        10 => VcClass::IoReq,
+        11 => VcClass::IoRsp,
+        12 => VcClass::Ipi,
+        13 => VcClass::Barrier,
+        _ => panic!("invalid VC {vc:?}"),
+    }
+}
+
+/// Per-VC credit counters for one link direction (credits = receiver
+/// buffer slots).
+#[derive(Clone, Debug)]
+pub struct Credits {
+    avail: [u32; NUM_VCS],
+    max: [u32; NUM_VCS],
+}
+
+impl Credits {
+    pub fn new(per_vc: u32) -> Credits {
+        Credits { avail: [per_vc; NUM_VCS], max: [per_vc; NUM_VCS] }
+    }
+    pub fn with_limits(limits: [u32; NUM_VCS]) -> Credits {
+        Credits { avail: limits, max: limits }
+    }
+    #[inline]
+    pub fn available(&self, vc: VcId) -> u32 {
+        self.avail[vc.0 as usize]
+    }
+    /// Consume one credit to transmit on `vc`.
+    #[inline]
+    pub fn consume(&mut self, vc: VcId) -> bool {
+        let a = &mut self.avail[vc.0 as usize];
+        if *a == 0 {
+            false
+        } else {
+            *a -= 1;
+            true
+        }
+    }
+    /// Receiver freed a buffer slot.
+    #[inline]
+    pub fn restore(&mut self, vc: VcId) {
+        let i = vc.0 as usize;
+        assert!(self.avail[i] < self.max[i], "credit overflow on {vc:?}");
+        self.avail[i] += 1;
+    }
+    /// Credit-conservation invariant: in-flight = max - avail.
+    pub fn in_flight(&self, vc: VcId) -> u32 {
+        self.max[vc.0 as usize] - self.avail[vc.0 as usize]
+    }
+}
+
+/// Static arbitration order: VC groups by deadlock rank, highest first
+/// (PERF: building this per `arbitrate` call dominated the simulation's
+/// profile — 15% direct + most of the allocator time; see EXPERIMENTS.md
+/// §Perf).
+const RANK_GROUPS: [&[usize]; 6] = [
+    &[12, 13],          // Ipi, Barrier          (rank 5)
+    &[4, 5, 6, 7, 11],  // RspNoData/RspData/IoRsp (rank 4)
+    &[8, 9],            // WbData                (rank 3)
+    &[2, 3],            // Fwd                   (rank 2)
+    &[0, 1],            // Req                   (rank 1)
+    &[10],              // IoReq                 (rank 0)
+];
+
+/// Per-direction VC multiplexer: 14 FIFO queues plus a rank-then-
+/// round-robin arbiter.
+pub struct VcMux {
+    queues: [VecDeque<Message>; NUM_VCS],
+    /// Round-robin pointer per rank-group for fairness.
+    rr: [usize; RANK_GROUPS.len()],
+    /// Bit per VC with pending messages (skip empty groups cheaply).
+    pending_mask: u16,
+    /// Total messages enqueued (stats).
+    pub enqueued: u64,
+    /// Which end of the link this mux transmits *from*.
+    pub owner: Node,
+}
+
+impl VcMux {
+    pub fn new(owner: Node) -> VcMux {
+        VcMux {
+            queues: Default::default(),
+            rr: [0; RANK_GROUPS.len()],
+            pending_mask: 0,
+            enqueued: 0,
+            owner,
+        }
+    }
+
+    /// Queue a message on its VC.
+    pub fn enqueue(&mut self, msg: Message) {
+        debug_assert_eq!(msg.from, self.owner, "message from the wrong node");
+        let vc = vc_for(&msg);
+        self.queues[vc.0 as usize].push_back(msg);
+        self.pending_mask |= 1 << vc.0;
+        self.enqueued += 1;
+    }
+
+    /// Pick the next transmittable message: highest deadlock rank first,
+    /// round-robin within a rank, skipping VCs without credits.
+    /// Allocation-free (hot path).
+    pub fn arbitrate(&mut self, credits: &Credits) -> Option<(VcId, Message)> {
+        if self.pending_mask == 0 {
+            return None;
+        }
+        for (g, vcs) in RANK_GROUPS.iter().enumerate() {
+            let n = vcs.len();
+            let start = self.rr[g] % n;
+            for k in 0..n {
+                let vc = vcs[(start + k) % n];
+                if self.pending_mask & (1 << vc) == 0 || credits.available(VcId(vc as u8)) == 0 {
+                    continue;
+                }
+                self.rr[g] = (start + k + 1) % n;
+                let msg = self.queues[vc].pop_front().unwrap();
+                if self.queues[vc].is_empty() {
+                    self.pending_mask &= !(1 << vc);
+                }
+                return Some((VcId(vc as u8), msg));
+            }
+        }
+        None
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+    pub fn pending_on(&self, vc: VcId) -> usize {
+        self.queues[vc.0 as usize].len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::{CohOp, LineAddr, Message, ReqId};
+
+    fn req(addr: u64) -> Message {
+        Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(addr))
+    }
+    fn rsp(addr: u64) -> Message {
+        Message::coh_rsp(ReqId(1), Node::Remote, CohOp::FwdDowngradeI, LineAddr(addr), false, None)
+    }
+
+    #[test]
+    fn fourteen_vcs_ten_coherence() {
+        assert_eq!(NUM_VCS, 14);
+        assert_eq!(NUM_COHERENCE_VCS, 10);
+        for vc in 0..NUM_COHERENCE_VCS {
+            let c = class_of_vc(VcId(vc as u8));
+            assert!(
+                matches!(c, VcClass::Req | VcClass::Fwd | VcClass::RspNoData | VcClass::RspData | VcClass::WbData)
+            );
+        }
+    }
+
+    #[test]
+    fn parity_splits_coherence_vcs() {
+        assert_eq!(vc_for(&req(0)), VcId(0));
+        assert_eq!(vc_for(&req(1)), VcId(1));
+        let m_even = Message::coh_rsp(
+            ReqId(0),
+            Node::Home,
+            CohOp::ReadShared,
+            LineAddr(4),
+            false,
+            Some(Box::new([0; 128])),
+        );
+        assert_eq!(vc_for(&m_even), VcId(6));
+        let m_odd = Message::coh_rsp(
+            ReqId(0),
+            Node::Home,
+            CohOp::ReadShared,
+            LineAddr(5),
+            false,
+            Some(Box::new([0; 128])),
+        );
+        assert_eq!(vc_for(&m_odd), VcId(7));
+    }
+
+    #[test]
+    fn responses_outrank_requests() {
+        assert!(VcClass::RspData.rank() > VcClass::Req.rank());
+        assert!(VcClass::RspData.rank() > VcClass::Fwd.rank());
+        assert!(VcClass::Fwd.rank() > VcClass::Req.rank());
+        assert!(VcClass::WbData.rank() > VcClass::Fwd.rank());
+        assert!(VcClass::RspData.is_sink());
+        assert!(!VcClass::Req.is_sink());
+    }
+
+    #[test]
+    fn arbiter_prefers_higher_rank() {
+        let mut mux = VcMux::new(Node::Remote);
+        let credits = Credits::new(8);
+        mux.enqueue(req(0)); // Req, rank 1
+        mux.enqueue(rsp(0)); // RspNoData, rank 4
+        let (vc, _) = mux.arbitrate(&credits).unwrap();
+        assert_eq!(class_of_vc(vc), VcClass::RspNoData);
+        let (vc, _) = mux.arbitrate(&credits).unwrap();
+        assert_eq!(class_of_vc(vc), VcClass::Req);
+        assert!(mux.arbitrate(&credits).is_none());
+    }
+
+    #[test]
+    fn arbiter_skips_creditless_vcs() {
+        let mut mux = VcMux::new(Node::Remote);
+        let mut limits = [8u32; NUM_VCS];
+        limits[0] = 0; // no credits on even Req VC
+        let credits = Credits::with_limits(limits);
+        mux.enqueue(req(0)); // even -> VC0, blocked
+        mux.enqueue(req(1)); // odd -> VC1, ok
+        let (vc, msg) = mux.arbitrate(&credits).unwrap();
+        assert_eq!(vc, VcId(1));
+        assert_eq!(msg.addr, LineAddr(1));
+        assert!(mux.arbitrate(&credits).is_none(), "VC0 message must stay queued");
+        assert_eq!(mux.pending_on(VcId(0)), 1);
+    }
+
+    #[test]
+    fn round_robin_within_rank() {
+        let mut mux = VcMux::new(Node::Remote);
+        let credits = Credits::new(8);
+        // two even + two odd requests: arbitration should alternate VCs
+        mux.enqueue(req(0));
+        mux.enqueue(req(2));
+        mux.enqueue(req(1));
+        mux.enqueue(req(3));
+        let order: Vec<u8> = std::iter::from_fn(|| mux.arbitrate(&credits).map(|(vc, _)| vc.0)).collect();
+        assert_eq!(order.len(), 4);
+        assert_ne!(order[0], order[1], "round robin should alternate: {order:?}");
+        assert_ne!(order[1], order[2], "round robin should alternate: {order:?}");
+    }
+
+    #[test]
+    fn credit_conservation() {
+        let mut c = Credits::new(4);
+        let vc = VcId(0);
+        assert!(c.consume(vc));
+        assert!(c.consume(vc));
+        assert_eq!(c.in_flight(vc), 2);
+        c.restore(vc);
+        assert_eq!(c.in_flight(vc), 1);
+        assert!(c.consume(vc));
+        assert!(c.consume(vc));
+        assert!(c.consume(vc));
+        assert!(!c.consume(vc), "credits exhausted");
+        assert_eq!(c.in_flight(vc), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn credit_overflow_panics() {
+        let mut c = Credits::new(1);
+        c.restore(VcId(0));
+    }
+}

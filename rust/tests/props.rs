@@ -1,0 +1,295 @@
+//! Property-based coordinator invariants (using the in-crate `ptest`
+//! harness; `proptest` is unavailable offline — DESIGN.md).
+
+use eci::agents::cache::Cache;
+use eci::agents::dram::MemStore;
+use eci::agents::home::{HomeAgent, HomeEffect};
+use eci::agents::remote::{RemoteAgent, RemoteEffect};
+use eci::proto::envelope::check_envelope;
+use eci::proto::messages::{CohOp, LineAddr, Message, MsgKind, ReqId};
+use eci::proto::spec::{generate_home, generate_remote, HomePolicy};
+use eci::proto::states::{CacheState, Node};
+use eci::proto::transitions::reference_transitions;
+use eci::ptest::Prop;
+use eci::trace::ewf;
+use eci::trace::msgjson;
+use eci::transport::{Credits, VcId, NUM_VCS};
+
+// ---------------------------------------------------------------------------
+// protocol-level properties
+// ---------------------------------------------------------------------------
+
+/// Random interleavings of local accesses and evictions against a live
+/// remote agent + home agent pair, with the messages actually routed:
+/// at every step the *joint* state must remain coherent (single writer),
+/// and data written by the remote must never be lost.
+#[test]
+fn random_access_interleavings_preserve_coherence() {
+    #[derive(Clone, Debug)]
+    enum Act {
+        Read(u8),
+        Write(u8),
+        Evict(u8),
+    }
+    Prop::new("coherence under random interleavings")
+        .cases(60)
+        .max_size(120)
+        .check_vec(
+            |g| {
+                let addr = g.below(4) as u8; // few lines -> lots of conflicts
+                match g.below(3) {
+                    0 => Act::Read(addr),
+                    1 => Act::Write(addr),
+                    _ => Act::Evict(addr),
+                }
+            },
+            |acts| {
+                let spec = reference_transitions();
+                let mut remote =
+                    RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), 1 << 20);
+                let mut cache = Cache::new(16 * 1024, 4);
+                let mut home = HomeAgent::new(
+                    generate_home(&spec, HomePolicy::default()),
+                    HomePolicy::default(),
+                    None,
+                );
+                let mut ram = MemStore::new(LineAddr(0), 64 * 128);
+                let mut stamp = 1u64;
+                // deliver messages synchronously (in-order transport)
+                let mut deliver_to_home = |m: Message,
+                                            home: &mut HomeAgent,
+                                            ram: &mut MemStore|
+                 -> Vec<Message> {
+                    home.on_message(m, ram)
+                        .into_iter()
+                        .filter_map(|e| match e {
+                            HomeEffect::Respond { msg, .. } => Some(msg),
+                            HomeEffect::Fwd { msg } => Some(msg),
+                            _ => None,
+                        })
+                        .collect()
+                };
+                for act in acts {
+                    let (addr, write, evict) = match act {
+                        Act::Read(a) => (LineAddr(*a as u64), false, false),
+                        Act::Write(a) => (LineAddr(*a as u64), true, false),
+                        Act::Evict(a) => (LineAddr(*a as u64), false, true),
+                    };
+                    let fx = if evict {
+                        remote.evict(addr, &mut cache)
+                    } else {
+                        let (_, fx) = remote.local_access(addr, write, &mut cache);
+                        fx
+                    };
+                    // pump messages to quiescence
+                    let mut to_home: Vec<Message> = fx
+                        .into_iter()
+                        .filter_map(|e| match e {
+                            RemoteEffect::Send(m) => Some(m),
+                            _ => None,
+                        })
+                        .collect();
+                    while let Some(m) = to_home.pop() {
+                        for rsp in deliver_to_home(m, &mut home, &mut ram) {
+                            let fx = remote.on_message(rsp, &mut cache);
+                            for e in fx {
+                                if let RemoteEffect::Send(m2) = e {
+                                    to_home.push(m2);
+                                }
+                            }
+                        }
+                    }
+                    // after quiescence: single-writer invariant between the
+                    // remote cache state and the home directory view
+                    for line in 0..4u64 {
+                        let a = LineAddr(line);
+                        let rstate = cache.state_of(a);
+                        let hstate = home.state_of(a);
+                        use eci::proto::spec::RemoteView;
+                        let consistent = match rstate {
+                            CacheState::I => true, // view may lag (benign over-estimate)
+                            CacheState::S => hstate.view != RemoteView::I || false,
+                            CacheState::E | CacheState::M => hstate.view == RemoteView::EorM,
+                        };
+                        if !consistent {
+                            return false;
+                        }
+                        // single writer: remote E/M excludes home copy
+                        if matches!(rstate, CacheState::E | CacheState::M)
+                            && hstate.own != CacheState::I
+                        {
+                            return false;
+                        }
+                    }
+                    // data-value: a write is stamped and must be readable back
+                    if write {
+                        if let Some(e) = cache.lookup(addr) {
+                            e.data[8..16].copy_from_slice(&stamp.to_le_bytes());
+                            stamp += 1;
+                        }
+                    }
+                }
+                true
+            },
+        );
+}
+
+/// Mutated transition tables must be rejected by the envelope checker:
+/// removing rows or redirecting outcomes at random either keeps the table
+/// legal or produces at least one violation — never a panic.
+#[test]
+fn envelope_checker_total_on_random_mutations() {
+    Prop::new("envelope checker totality").cases(150).check(
+        |g| {
+            let mut table = reference_transitions();
+            // random mutation: drop rows or retarget an outcome
+            let n_mut = 1 + g.below(3);
+            for _ in 0..n_mut {
+                if table.is_empty() {
+                    break;
+                }
+                let i = g.below(table.len() as u64) as usize;
+                if g.chance(0.5) {
+                    table.remove(i);
+                } else {
+                    let all = eci::proto::states::Joint::ALL;
+                    let j = *g.choose(&all);
+                    table[i].outcomes = vec![j];
+                }
+            }
+            table
+        },
+        |table| {
+            // must not panic; result is informative either way
+            let _ = check_envelope(table);
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// transport-level properties
+// ---------------------------------------------------------------------------
+
+/// Credit conservation: under any interleaving of consume/restore the
+/// in-flight count never exceeds the budget and never goes negative.
+#[test]
+fn credit_conservation_under_random_traffic() {
+    Prop::new("credit conservation").cases(100).max_size(400).check_vec(
+        |g| (g.below(NUM_VCS as u64) as u8, g.chance(0.45)),
+        |ops| {
+            let mut credits = Credits::new(8);
+            let mut in_flight = [0u32; NUM_VCS];
+            for &(vc, restore) in ops {
+                let vc = VcId(vc);
+                if restore {
+                    if in_flight[vc.0 as usize] > 0 {
+                        credits.restore(vc);
+                        in_flight[vc.0 as usize] -= 1;
+                    }
+                } else if credits.consume(vc) {
+                    in_flight[vc.0 as usize] += 1;
+                }
+                if credits.in_flight(vc) != in_flight[vc.0 as usize] {
+                    return false;
+                }
+                if in_flight[vc.0 as usize] > 8 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// EWF encode/decode is a bijection on random well-formed messages.
+#[test]
+fn ewf_round_trip_on_random_messages() {
+    Prop::new("EWF round trip").cases(300).check(
+        |g| {
+            let id = ReqId(g.below(1 << 20) as u32);
+            let addr = LineAddr(g.below(1 << 40));
+            let from = if g.chance(0.5) { Node::Home } else { Node::Remote };
+            let ops = CohOp::ALL;
+            let op = *g.choose(&ops);
+            let payload = if g.chance(0.5) {
+                let b = g.below(256) as u8;
+                Some(Box::new([b; 128]))
+            } else {
+                None
+            };
+            match g.below(4) {
+                0 => Message::coh_req(id, from, op, addr),
+                1 => Message { id, from, kind: MsgKind::CohRsp { op, dirty: g.chance(0.5), had_copy: g.chance(0.8) }, addr, payload },
+                2 => Message { id, from, kind: MsgKind::CohReq { op }, addr, payload },
+                _ => Message {
+                    id,
+                    from,
+                    kind: MsgKind::IoWrite { offset: g.below(1 << 20), value: g.below(u64::MAX - 1) },
+                    addr,
+                    payload: None,
+                },
+            }
+        },
+        |msg| {
+            let bytes = ewf::encode(msg);
+            match ewf::decode(&bytes) {
+                Ok((back, used)) => back == *msg && used == bytes.len(),
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+/// JSON message serialization round-trips too.
+#[test]
+fn msgjson_round_trip_on_random_messages() {
+    Prop::new("msg JSON round trip").cases(200).check(
+        |g| {
+            let id = ReqId(g.below(1 << 16) as u32);
+            let addr = LineAddr(g.below(1 << 30));
+            let ops = CohOp::ALL;
+            let op = *g.choose(&ops);
+            if g.chance(0.5) {
+                Message::coh_req(id, Node::Remote, op, addr)
+            } else {
+                let payload = g.chance(0.5).then(|| Box::new([g.below(256) as u8; 128]));
+                Message { id, from: Node::Home, kind: MsgKind::CohRsp { op, dirty: g.chance(0.3), had_copy: g.chance(0.8) }, addr, payload }
+            }
+        },
+        |msg| {
+            let text = msgjson::to_json(msg).to_string();
+            let parsed = eci::trace::json::parse(&text).unwrap();
+            msgjson::from_json(&parsed).map(|b| b == *msg).unwrap_or(false)
+        },
+    );
+}
+
+/// The dissector is total over random messages (never panics, always
+/// one-line summaries).
+#[test]
+fn dissector_total_on_random_messages() {
+    Prop::new("dissector totality").cases(200).check(
+        |g| {
+            let ops = CohOp::ALL;
+            let op = *g.choose(&ops);
+            let payload = g.chance(0.3).then(|| Box::new([7u8; 128]));
+            Message {
+                id: ReqId(g.below(1 << 30) as u32),
+                from: if g.chance(0.5) { Node::Home } else { Node::Remote },
+                kind: if g.chance(0.5) {
+                    MsgKind::CohReq { op }
+                } else {
+                    MsgKind::CohRsp { op, dirty: g.chance(0.5), had_copy: g.chance(0.8) }
+                },
+                addr: LineAddr(g.below(1 << 40)),
+                payload,
+            }
+        },
+        |msg| {
+            let s = eci::trace::dissector::summary(eci::sim::time::Time(0), msg);
+            let d = eci::trace::dissector::detail(eci::sim::time::Time(0), msg);
+            !s.contains('\n') && d.lines().count() >= 6
+        },
+    );
+}

@@ -1,0 +1,245 @@
+//! Cross-VC reordering races, property-tested directly against the
+//! spec-generated agents: the ECI VCs guarantee no ordering *between*
+//! channels (§4.2), so responses can overtake home-initiated downgrades
+//! and voluntary downgrades can trail the requests that follow them.
+//! These are exactly the transient-state cases §3.2 licenses; the agents
+//! must stay coherent and every transaction must complete under any legal
+//! interleaving.
+
+use eci::agents::cache::Cache;
+use eci::agents::dram::MemStore;
+use eci::agents::home::{HomeAgent, HomeEffect};
+use eci::agents::remote::{RemoteAgent, RemoteEffect};
+use eci::proto::messages::{LineAddr, Message, MsgKind};
+use eci::proto::spec::{generate_home, generate_remote, HomePolicy};
+use eci::proto::states::{CacheState, Node};
+use eci::proto::transitions::reference_transitions;
+use eci::ptest::{Gen, Prop};
+use eci::transport::vc::{class_of, VcClass};
+
+/// A transport that preserves order *within* a VC class but may deliver
+/// across classes in any order (the legal reordering envelope).
+struct RacyLink {
+    /// queues per class, per direction (0 = to home, 1 = to remote)
+    q: [[Vec<Message>; 5]; 2],
+}
+
+fn class_idx(m: &Message) -> usize {
+    match class_of(m) {
+        VcClass::Req => 0,
+        VcClass::Fwd => 1,
+        VcClass::RspNoData => 2,
+        VcClass::RspData => 3,
+        VcClass::WbData => 4,
+        _ => 0,
+    }
+}
+
+impl RacyLink {
+    fn new() -> RacyLink {
+        RacyLink { q: Default::default() }
+    }
+    fn push(&mut self, to_home: bool, m: Message) {
+        self.q[!to_home as usize][class_idx(&m)].push(m);
+    }
+    fn pending(&self) -> bool {
+        self.q.iter().flatten().any(|v| !v.is_empty())
+    }
+    /// Pop one message from a randomly-chosen non-empty class queue
+    /// (FIFO within the class).
+    fn pop_random(&mut self, g: &mut Gen) -> Option<(bool, Message)> {
+        let mut options = Vec::new();
+        for dir in 0..2 {
+            for c in 0..5 {
+                if !self.q[dir][c].is_empty() {
+                    options.push((dir, c));
+                }
+            }
+        }
+        if options.is_empty() {
+            return None;
+        }
+        let &(dir, c) = g.choose(&options);
+        Some((dir == 0, self.q[dir][c].remove(0)))
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Act {
+    Read(u8),
+    Write(u8),
+    Evict(u8),
+    Recall(u8),
+    /// deliver one queued message (random class)
+    Pump,
+}
+
+#[test]
+fn shrunk_case_debug() {
+    use Act::*;
+    let acts = vec![Read(0), Read(1), Pump, Pump, Write(2), Pump, Pump, Recall(2), Pump, Pump, Evict(2), Write(2), Pump, Pump, Pump, Pump, Pump, Read(2)];
+    assert!(run_case(&acts), "shrunk counterexample must pass");
+}
+
+#[test]
+fn coherence_survives_cross_vc_reordering() {
+    Prop::new("cross-VC reordering races")
+        .cases(120)
+        .max_size(160)
+        .check_vec(
+            |g| match g.below(6) {
+                0 => Act::Read(g.below(3) as u8),
+                1 => Act::Write(g.below(3) as u8),
+                2 => Act::Evict(g.below(3) as u8),
+                3 => Act::Recall(g.below(3) as u8),
+                _ => Act::Pump,
+            },
+            |acts| run_case(acts),
+        );
+}
+
+fn run_case(acts: &[Act]) -> bool {
+    let spec = reference_transitions();
+    let mut remote = RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), 1 << 20);
+    let mut cache = Cache::new(16 * 1024, 4);
+    let mut home = HomeAgent::new(
+        generate_home(&spec, HomePolicy::default()),
+        HomePolicy::default(),
+        None,
+    );
+    let mut ram = MemStore::new(LineAddr(0), 64 * 128);
+    let mut link = RacyLink::new();
+    let mut g = Gen { rng: eci::sim::rng::Rng::new(0xACE), size: 4 };
+
+    let mut route_remote = |fx: Vec<RemoteEffect>, link: &mut RacyLink| {
+        for e in fx {
+            if let RemoteEffect::Send(m) = e {
+                link.push(true, m);
+            }
+        }
+    };
+    let route_home = |fx: Vec<HomeEffect>, link: &mut RacyLink| {
+        for e in fx {
+            match e {
+                HomeEffect::Respond { msg, .. } | HomeEffect::Fwd { msg } => link.push(false, msg),
+                _ => {}
+            }
+        }
+    };
+
+    let mut pump_one = |link: &mut RacyLink,
+                        g: &mut Gen,
+                        remote: &mut RemoteAgent,
+                        cache: &mut Cache,
+                        home: &mut HomeAgent,
+                        ram: &mut MemStore| {
+        if let Some((to_home, m)) = link.pop_random(g) {
+            if to_home {
+                route_home(home.on_message(m, ram), link);
+            } else {
+                let fx = remote.on_message(m, cache);
+                for e in fx {
+                    if let RemoteEffect::Send(m2) = e {
+                        link.push(true, m2);
+                    }
+                }
+            }
+        }
+    };
+
+    for act in acts {
+        match act {
+            Act::Read(a) => {
+                let (_, fx) = remote.local_access(LineAddr(*a as u64), false, &mut cache);
+                route_remote(fx, &mut link);
+            }
+            Act::Write(a) => {
+                let (_, fx) = remote.local_access(LineAddr(*a as u64), true, &mut cache);
+                route_remote(fx, &mut link);
+            }
+            Act::Evict(a) => {
+                let fx = remote.evict(LineAddr(*a as u64), &mut cache);
+                route_remote(fx, &mut link);
+            }
+            Act::Recall(a) => {
+                route_home(home.recall(LineAddr(*a as u64), &mut ram), &mut link);
+            }
+            Act::Pump => {
+                pump_one(&mut link, &mut g, &mut remote, &mut cache, &mut home, &mut ram);
+            }
+        }
+    }
+    // drain to quiescence (random order until empty)
+    let mut guard = 0;
+    while link.pending() {
+        pump_one(&mut link, &mut g, &mut remote, &mut cache, &mut home, &mut ram);
+        guard += 1;
+        if guard > 100_000 {
+            if std::env::var("ECI_RACE_DEBUG").is_ok() { eprintln!("FAIL: livelock"); }
+            return false; // livelock
+        }
+    }
+    let verbose = std::env::var("ECI_RACE_DEBUG").is_ok();
+    // all transactions completed
+    if remote.outstanding_count() != 0 {
+        if verbose {
+            eprintln!("FAIL: {} outstanding", remote.outstanding_count());
+            for line in 0..3u64 {
+                let a = LineAddr(line);
+                eprintln!("  line {a}: remote {:?} home {:?} possession {}", cache.state_of(a), home.state_of(a), home.possession_count(a));
+            }
+        }
+        return false;
+    }
+    // joint coherence at quiescence
+    for line in 0..3u64 {
+        let a = LineAddr(line);
+        let r = cache.state_of(a);
+        let h = home.state_of(a);
+        if h.pending_fwd.is_some() {
+            if verbose { eprintln!("FAIL: line {a} home pending {:?}", h.pending_fwd); }
+            return false; // must have settled
+        }
+        use eci::proto::spec::RemoteView;
+        let ok = match r {
+            CacheState::I => true, // view may over-estimate, never under
+            CacheState::S => h.view != RemoteView::I,
+            CacheState::E | CacheState::M => h.view == RemoteView::EorM && h.own == CacheState::I,
+        };
+        if !ok {
+            if verbose { eprintln!("FAIL: line {a} remote {r:?} vs home {h:?}"); }
+            return false;
+        }
+    }
+    true
+}
+
+/// Focused deterministic replays of the three named races in
+/// `proto::spec`'s documentation.
+#[test]
+fn named_races_deterministic() {
+    let spec = reference_transitions();
+    // --- fwd overtakes fill ------------------------------------------
+    let mut remote = RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), 1 << 20);
+    let mut cache = Cache::new(16 * 1024, 4);
+    let a = LineAddr(1);
+    let (_, fx) = remote.local_access(a, false, &mut cache);
+    let req = fx
+        .iter()
+        .find_map(|e| match e {
+            RemoteEffect::Send(m) => Some(m.clone()),
+            _ => None,
+        })
+        .unwrap();
+    // home's fwd arrives BEFORE the fill: answered immediately, clean
+    let fwd = Message::coh_req(eci::proto::messages::ReqId(99), Node::Home, eci::proto::messages::CohOp::FwdDowngradeI, a);
+    let fx = remote.on_message(fwd, &mut cache);
+    let responded = fx.iter().any(|e| matches!(e,
+        RemoteEffect::Send(m) if matches!(m.kind, MsgKind::CohRsp { op: eci::proto::messages::CohOp::FwdDowngradeI, dirty: false, .. })));
+    assert!(responded, "{fx:?}");
+    // fill arrives; it is use-once: core served, line not retained
+    let rsp = Message::coh_rsp(req.id, Node::Home, eci::proto::messages::CohOp::ReadShared, a, false, Some(Box::new([1; 128])));
+    let fx = remote.on_message(rsp, &mut cache);
+    assert!(fx.iter().any(|e| matches!(e, RemoteEffect::Filled { .. })));
+    assert_eq!(cache.state_of(a), CacheState::I);
+}

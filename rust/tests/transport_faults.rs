@@ -1,0 +1,66 @@
+//! Failure injection: the transaction layer's CRC + go-back-N replay must
+//! make the full machine correct (not just the transport unit tests) —
+//! every workload completes with intact data even when the physical layer
+//! corrupts frames.
+
+use eci::agents::dram::MemStore;
+use eci::machine::{map, Machine, MachineConfig, Workload};
+use eci::proto::messages::{LineAddr, LINE_BYTES};
+
+fn machine_with_errors(rate: f64) -> Machine {
+    let mut cfg = MachineConfig::test_small();
+    cfg.link.phys.frame_error_rate = rate;
+    let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
+    for i in 0..2048u64 {
+        let mut l = [0u8; LINE_BYTES];
+        l[0..8].copy_from_slice(&(i.wrapping_mul(0x9E37_79B9)).to_le_bytes());
+        fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+    }
+    let cpu = MemStore::new(LineAddr(0), 1 << 20);
+    Machine::memory_node(cfg, fpga, cpu)
+}
+
+#[test]
+fn lossy_link_still_delivers_every_line_intact() {
+    let mut m = machine_with_errors(0.02);
+    let bad = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    {
+        let bad = std::sync::Arc::clone(&bad);
+        m.verify_fill = Some(Box::new(move |addr, data| {
+            let i = addr.0 - map::TABLE_BASE.0;
+            let got = u64::from_le_bytes(data[0..8].try_into().unwrap());
+            if got != i.wrapping_mul(0x9E37_79B9) {
+                bad.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }));
+    }
+    m.set_workload(Workload::StreamRemote { lines: 2048 }, 4);
+    let r = m.run();
+    assert_eq!(bad.load(std::sync::atomic::Ordering::Relaxed), 0, "corrupted payload delivered");
+    assert_eq!(r.remote_bytes, 2048 * 128);
+}
+
+#[test]
+fn replay_costs_latency_but_not_correctness() {
+    let lat = |rate: f64| {
+        let mut m = machine_with_errors(rate);
+        m.set_workload(Workload::ChaseRemote { count: 1_500, region_lines: 2048 }, 1);
+        let r = m.run();
+        (r.load_lat.mean() / 1e3, r.load_lat.p99() as f64 / 1e3)
+    };
+    let (clean_mean, clean_p99) = lat(0.0);
+    let (lossy_mean, lossy_p99) = lat(0.05);
+    // replays show up in the tail (and usually the mean)
+    assert!(lossy_p99 > clean_p99 * 1.2, "p99 {lossy_p99} vs clean {clean_p99}");
+    assert!(lossy_mean >= clean_mean * 0.98, "mean {lossy_mean} vs clean {clean_mean}");
+}
+
+#[test]
+fn heavy_loss_converges_eventually() {
+    // 20% frame loss is absurd, but the protocol must still terminate
+    // with correct data (go-back-N + nack suppression + credit recycling).
+    let mut m = machine_with_errors(0.20);
+    m.set_workload(Workload::StreamRemote { lines: 300 }, 2);
+    let r = m.run();
+    assert_eq!(r.remote_bytes, 300 * 128);
+}
