@@ -25,7 +25,7 @@ use eci::proto::messages::{LineAddr, LINE_BYTES};
 use eci::runtime::{Runtime, DFA_STATES};
 use eci::sim::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> eci::anyhow::Result<()> {
     let scale = Scale::from_env();
     let rows = scale.rows(5_120_000).max(40_000);
     let threads = 16;

@@ -9,7 +9,7 @@
 use eci::harness::fig6;
 use eci::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> eci::anyhow::Result<()> {
     let mut rt = Runtime::load_default().expect("artifacts missing — run `make artifacts`");
     let entries = 131_072;
     let lookups = 20_000;

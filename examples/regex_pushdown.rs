@@ -8,7 +8,7 @@
 use eci::harness::{fig7, fig8, Scale};
 use eci::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> eci::anyhow::Result<()> {
     let scale = Scale::from_env();
     let mut rt = Runtime::load_default().expect("artifacts missing — run `make artifacts`");
 

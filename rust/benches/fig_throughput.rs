@@ -1,0 +1,28 @@
+//! Bench: directory-throughput scaling of the sharded directory
+//! controller (dcs) — sustained coherence ops/s and tail latency vs
+//! slice count under the closed-loop mixed workload. Custom harness
+//! (criterion is not available in the offline registry).
+
+use eci::harness::{fig_throughput, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_throughput::run(scale);
+    println!("{}", fig_throughput::render(&f).to_markdown());
+    let first = f.points.first().expect("sweep is non-empty");
+    let best = f
+        .points
+        .iter()
+        .max_by(|a, b| a.ops_per_s.total_cmp(&b.ops_per_s))
+        .expect("sweep is non-empty");
+    println!(
+        "scaling: {} slice(s) {:.1}M ops/s -> {} slices {:.1}M ops/s ({:.2}x)   (host {:?}, scale {scale:?})",
+        first.slices,
+        first.ops_per_s / 1e6,
+        best.slices,
+        best.ops_per_s / 1e6,
+        best.ops_per_s / first.ops_per_s,
+        t0.elapsed()
+    );
+}

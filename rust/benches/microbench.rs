@@ -1,5 +1,5 @@
 //! Microbenchmarks of the hot paths themselves (host-side performance —
-//! the L3 optimization targets of EXPERIMENTS.md §Perf):
+//! the L3 optimization targets of DESIGN.md §Perf):
 //!
 //! * DES event throughput (events/s of the machine's inner loop)
 //! * transport layer frame rate

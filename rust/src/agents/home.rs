@@ -11,7 +11,7 @@
 
 use std::collections::VecDeque;
 
-use rustc_hash::FxHashMap as HashMap;
+use crate::rustc_hash::FxHashMap as HashMap;
 
 use crate::proto::messages::{Line, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{HAction, HEvent, HRule, HomePolicy, HomeRules, HomeSt};
@@ -43,10 +43,19 @@ struct Pending {
     tag: u64,
 }
 
-/// The directory controller.
+/// The directory controller. Since the dcs refactor the agent is
+/// *slice-local*: it fronts the lines whose address satisfies
+/// `addr % slice_count == slice_index` and nothing else — there is no
+/// global address map anywhere in the directory. A standalone agent is
+/// simply the 1-slice special case (`slice_count == 1` owns every line),
+/// so [`HomeAgent::new`] keeps its original meaning; the sharded
+/// composition lives in [`crate::dcs`].
 pub struct HomeAgent {
     rules: HomeRules,
     policy: HomePolicy,
+    /// This agent's slice of the address-interleaved directory.
+    slice_index: u64,
+    slice_count: u64,
     /// Per-line directory state; absent = idle (I/I, no pending).
     dir: HashMap<LineAddr, HomeSt>,
     /// Grant-epoch possession counter per line: grants of a copy
@@ -64,10 +73,27 @@ pub struct HomeAgent {
 }
 
 impl HomeAgent {
+    /// A whole-directory agent: the 1-slice special case.
     pub fn new(rules: HomeRules, policy: HomePolicy, cache: Option<Cache>) -> HomeAgent {
+        HomeAgent::new_slice(rules, policy, cache, 0, 1)
+    }
+
+    /// Slice `slice_index` of a `slice_count`-way address-interleaved
+    /// directory (line-address modulo mapping; 2 slices = the paper's
+    /// even/odd split).
+    pub fn new_slice(
+        rules: HomeRules,
+        policy: HomePolicy,
+        cache: Option<Cache>,
+        slice_index: u64,
+        slice_count: u64,
+    ) -> HomeAgent {
+        assert!(slice_count > 0 && slice_index < slice_count, "bad slice {slice_index}/{slice_count}");
         HomeAgent {
             rules,
             policy,
+            slice_index,
+            slice_count,
             dir: HashMap::default(),
             possession: HashMap::default(),
             stalled: HashMap::default(),
@@ -79,6 +105,19 @@ impl HomeAgent {
 
     pub fn policy(&self) -> HomePolicy {
         self.policy
+    }
+
+    /// Does this slice front `addr`? (Always true for a 1-slice agent.)
+    #[inline]
+    pub fn owns(&self, addr: LineAddr) -> bool {
+        addr.0 % self.slice_count == self.slice_index
+    }
+
+    pub fn slice_index(&self) -> u64 {
+        self.slice_index
+    }
+    pub fn slice_count(&self) -> u64 {
+        self.slice_count
     }
 
     pub fn state_of(&self, addr: LineAddr) -> HomeSt {
@@ -177,6 +216,12 @@ impl HomeAgent {
         tag: u64,
         ram: &mut MemStore,
     ) -> Vec<HomeEffect> {
+        debug_assert!(
+            self.owns(addr),
+            "slice {}/{} dispatched foreign line {addr}",
+            self.slice_index,
+            self.slice_count
+        );
         let mut fx = Vec::new();
         let st = self.state_of(addr);
         let rule = self.rule(st, ev);

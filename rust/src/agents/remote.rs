@@ -10,7 +10,7 @@
 //! from [`generate_remote`], so the envelope checks of
 //! [`crate::proto::envelope`] apply to the running agent.
 
-use rustc_hash::FxHashMap as HashMap;
+use crate::rustc_hash::FxHashMap as HashMap;
 
 use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{DeferredFwd, RAction, REvent, RRule, RemoteRules, RemoteSt};

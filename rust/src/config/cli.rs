@@ -3,16 +3,26 @@
 //!
 //! ```text
 //! eci resources                  print Table 2 + subsetting ablation
-//! eci bench <table3|fig5|fig6|fig7|fig8|all>
+//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|all> [dcs flags]
 //! eci check                      validate envelope + subsets, print report
 //! eci trace-demo                 run a traffic capture through the
 //!                                dissector and the online checker
 //! ```
 //! `ECI_SCALE={ci,default,paper}` controls workload sizes.
+//!
+//! The `dcs` bench (directory-slice throughput sweep) takes flags so
+//! slice counts and the load-generator mix can be swept from the command
+//! line:
+//!
+//! ```text
+//! eci bench dcs [--slices 1,2,4,8] [--clients 32] [--ops 20000]
+//!               [--mix 60:20:20] [--hops 4]
+//! ```
 
-use crate::harness::{fig5, fig6, fig7, fig8, table2, table3, Scale};
-use crate::proto::subset::{validate_with_workload, Subset};
+use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
+use crate::harness::{fig5, fig6, fig7, fig8, fig_throughput, table2, table3, Scale};
 use crate::proto::messages::CohOp;
+use crate::proto::subset::{validate_with_workload, Subset};
 use crate::runtime::Runtime;
 
 pub fn main_entry() {
@@ -27,20 +37,108 @@ pub fn main_entry() {
         }
         "bench" => {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
-            run_bench(which, scale);
+            run_bench(which, scale, &args[2.min(args.len())..]);
         }
         "check" => check(),
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|all]|check|trace-demo>\n\
+                 dcs flags: --slices 1,2,4,8 --clients 32 --ops 20000 --mix 60:20:20 --hops 4\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})"
             );
         }
     }
 }
 
-fn run_bench(which: &str, scale: Scale) {
+/// Parsed `eci bench dcs` flags: slice sweep + load-generator shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DcsArgs {
+    pub slices: Vec<usize>,
+    pub cfg: LoadGenConfig,
+}
+
+impl DcsArgs {
+    pub fn defaults(scale: Scale) -> DcsArgs {
+        DcsArgs {
+            slices: fig_throughput::SLICE_SWEEP.to_vec(),
+            cfg: LoadGenConfig { ops: fig_throughput::ops_for(scale), ..Default::default() },
+        }
+    }
+
+    /// Parse `--flag value` pairs; unknown flags are errors.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<DcsArgs, String> {
+        let mut out = DcsArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            let val = it
+                .next()
+                .ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--slices" => {
+                    out.slices = val
+                        .split(',')
+                        .map(|s| {
+                            s.trim()
+                                .parse::<usize>()
+                                .map_err(|_| format!("bad slice count {s:?}"))
+                                .and_then(|n| {
+                                    if n == 0 {
+                                        Err("slice count must be >= 1".into())
+                                    } else {
+                                        Ok(n)
+                                    }
+                                })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if out.slices.is_empty() {
+                        return Err("--slices needs at least one value".into());
+                    }
+                }
+                "--clients" => {
+                    out.cfg.clients =
+                        val.parse().map_err(|_| format!("bad client count {val:?}"))?;
+                }
+                "--ops" => {
+                    out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
+                }
+                "--mix" => {
+                    // weights are ratios; cap them so the u32 weight sum
+                    // can never overflow in MixConfig::total()
+                    const MAX_WEIGHT: u32 = 1_000_000;
+                    let parts: Vec<u32> = val
+                        .split(':')
+                        .map(|p| p.trim().parse::<u32>().map_err(|_| format!("bad mix {val:?}")))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    let &[r, w, c] = parts.as_slice() else {
+                        return Err(format!("--mix wants reads:writes:chases, got {val:?}"));
+                    };
+                    if r == 0 && w == 0 && c == 0 {
+                        return Err("--mix must not be all zero".into());
+                    }
+                    if r.max(w).max(c) > MAX_WEIGHT {
+                        return Err(format!("--mix weights must be <= {MAX_WEIGHT}"));
+                    }
+                    out.cfg.mix = MixConfig { reads: r, writes: w, chases: c, ..out.cfg.mix };
+                }
+                "--hops" => {
+                    out.cfg.mix.chase_hops =
+                        val.parse().map_err(|_| format!("bad hop count {val:?}"))?;
+                }
+                other => return Err(format!("unknown dcs flag {other:?}")),
+            }
+        }
+        if out.cfg.clients == 0 {
+            return Err("--clients must be >= 1".into());
+        }
+        if out.cfg.ops == 0 {
+            return Err("--ops must be >= 1".into());
+        }
+        Ok(out)
+    }
+}
+
+fn run_bench(which: &str, scale: Scale, rest: &[String]) {
     let needs_rt = matches!(which, "fig5" | "fig6" | "fig7" | "all");
     let mut rt = if needs_rt {
         Some(Runtime::load_default().expect("artifacts missing — run `make artifacts`"))
@@ -64,6 +162,17 @@ fn run_bench(which: &str, scale: Scale) {
     }
     if matches!(which, "fig8" | "all") {
         println!("{}", fig8::render(&fig8::run(scale)).to_markdown());
+    }
+    if matches!(which, "dcs" | "all") {
+        let a = match DcsArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench dcs: {e}");
+                std::process::exit(2);
+            }
+        };
+        let f = fig_throughput::run_with(a.cfg, &a.slices);
+        println!("{}", fig_throughput::render(&f).to_markdown());
     }
 }
 
@@ -106,5 +215,59 @@ fn check() {
         for x in &v {
             println!("  {x}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_track_scale() {
+        assert_eq!(DcsArgs::defaults(Scale::Ci).cfg.ops, 4_000);
+        assert_eq!(DcsArgs::defaults(Scale::Paper).cfg.ops, 100_000);
+        assert_eq!(DcsArgs::defaults(Scale::Default).slices, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn parses_full_flag_set() {
+        let a = DcsArgs::parse(
+            Scale::Default,
+            &s(&["--slices", "1,4", "--clients", "16", "--ops", "9000", "--mix", "50:30:20", "--hops", "8"]),
+        )
+        .unwrap();
+        assert_eq!(a.slices, vec![1, 4]);
+        assert_eq!(a.cfg.clients, 16);
+        assert_eq!(a.cfg.ops, 9_000);
+        assert_eq!(
+            a.cfg.mix,
+            MixConfig { reads: 50, writes: 30, chases: 20, chase_hops: 8 }
+        );
+    }
+
+    #[test]
+    fn empty_args_give_defaults() {
+        let a = DcsArgs::parse(Scale::Ci, &[]).unwrap();
+        assert_eq!(a, DcsArgs::defaults(Scale::Ci));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--slices"])).is_err(), "missing value");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--slices", "0"])).is_err(), "zero slices");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--slices", "two"])).is_err(), "non-numeric");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--mix", "1:2"])).is_err(), "short mix");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--mix", "0:0:0"])).is_err(), "empty mix");
+        assert!(
+            DcsArgs::parse(Scale::Ci, &s(&["--mix", "4000000000:1000000000:0"])).is_err(),
+            "overflowing mix weights"
+        );
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--ops", "0"])).is_err(), "zero ops");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--wat", "1"])).is_err(), "unknown flag");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--clients", "0"])).is_err(), "zero clients");
     }
 }

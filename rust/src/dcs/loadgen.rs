@@ -1,0 +1,519 @@
+//! Closed-loop load generator for the sliced directory controller.
+//!
+//! M concurrent simulated clients sit behind one shared caching
+//! [`RemoteAgent`] (the CPU socket role) and drive a configurable mix of
+//! read / write / pointer-chase traffic at a [`Dcs`]. The loop is
+//! *closed*: each client has exactly one operation in flight and issues
+//! the next the instant the previous completes, so the reported
+//! requests/sec is the *sustained* service rate of the directory under
+//! backpressure, not an open-loop arrival rate. Latency percentiles come
+//! from the per-operation histogram (`p50`/`p99` of issue → last fill).
+//!
+//! Pointer-chase operations are execution-driven: chain pointers are real
+//! bytes in the backing [`MemStore`] (written at setup, bytes 120..128 of
+//! each line, KVS-entry layout), and each hop's next address is decoded
+//! from the payload the directory actually served. On the home side a
+//! chase lookup resolves through the [`KvsService`] engine pool — the
+//! same dispatcher/engine model the Fig. 6 machine path uses — so
+//! memctl's pointer-resolution cost rides through the dcs rather than
+//! around it.
+
+use crate::agents::cache::Cache;
+use crate::agents::dram::{Dram, DramConfig, MemStore};
+use crate::agents::home::HomeEffect;
+use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
+use crate::memctl::KvsService;
+use crate::proto::messages::{LineAddr, Message, MsgKind};
+use crate::proto::spec::generate_remote;
+use crate::proto::states::Node;
+use crate::proto::transitions::reference_transitions;
+use crate::rustc_hash::{FxHashMap as HashMap, FxHashSet as HashSet};
+use crate::sim::engine::Engine;
+use crate::sim::rng::Rng;
+use crate::sim::stats::{Counters, Histogram};
+use crate::sim::time::{Duration, Time};
+
+use super::{Dcs, DcsConfig, SliceService};
+
+/// Operation mix, in integer weights (need not sum to 100).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MixConfig {
+    pub reads: u32,
+    pub writes: u32,
+    pub chases: u32,
+    /// Dependent hops per pointer-chase operation.
+    pub chase_hops: u64,
+}
+
+impl Default for MixConfig {
+    fn default() -> MixConfig {
+        MixConfig { reads: 60, writes: 20, chases: 20, chase_hops: 4 }
+    }
+}
+
+impl MixConfig {
+    fn total(&self) -> u32 {
+        self.reads + self.writes + self.chases
+    }
+}
+
+/// Load-generator parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadGenConfig {
+    /// Concurrent clients (one outstanding operation each).
+    pub clients: usize,
+    /// Total operations across all clients.
+    pub ops: u64,
+    /// Lines in the driven region (addresses 0..region_lines).
+    pub region_lines: u64,
+    pub mix: MixConfig,
+    /// One-way client <-> directory latency (link + protocol engines).
+    pub link_latency: Duration,
+    /// Client-side processing between dependent chase hops.
+    pub hop_think: Duration,
+    /// KVS engine-pool size backing chase resolution at the home.
+    pub kvs_engines: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 32,
+            ops: 20_000,
+            region_lines: 1 << 14,
+            mix: MixConfig::default(),
+            link_latency: Duration::from_ns(120),
+            hop_think: Duration::from_ns(2),
+            kvs_engines: 8,
+            seed: 0xDC5,
+        }
+    }
+}
+
+/// Results of one closed-loop run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub sim_time: Time,
+    pub completed: u64,
+    /// Sustained operations per second.
+    pub ops_per_s: f64,
+    /// Per-operation latency (ps): issue to final fill.
+    pub lat: Histogram,
+    pub per_slice_served: Vec<u64>,
+    pub per_slice_occupancy: Vec<f64>,
+    pub counters: Counters,
+}
+
+impl LoadReport {
+    pub fn p50_ns(&self) -> f64 {
+        self.lat.p50() as f64 / 1000.0
+    }
+    pub fn p99_ns(&self) -> f64 {
+        self.lat.p99() as f64 / 1000.0
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum OpKind {
+    Read,
+    Write,
+    /// Remaining dependent hops.
+    Chase { left: u64 },
+}
+
+#[derive(Debug)]
+struct Client {
+    rng: Rng,
+    op: Option<OpKind>,
+    addr: LineAddr,
+    started: Time,
+}
+
+enum Ev {
+    /// Client issues (or retries) its current access.
+    Step(u32),
+    ArriveHome(Box<Message>),
+    ArriveCpu(Box<Message>),
+    /// Service attempt on slice `s`.
+    Poll(u32),
+}
+
+/// The generator: clients + shared remote agent on one side, the dcs +
+/// DRAM + KVS engine pool on the other, one event engine in between.
+pub struct LoadGen {
+    cfg: LoadGenConfig,
+    eng: Engine<Ev>,
+    dcs: Dcs,
+    mem: MemStore,
+    dram: Dram,
+    kvs: KvsService,
+    remote: RemoteAgent,
+    cache: Cache,
+    clients: Vec<Client>,
+    /// Clients parked per line awaiting a fill.
+    waiters: HashMap<LineAddr, Vec<u32>>,
+    /// Outstanding request ids that belong to chase hops (resolved
+    /// through the KVS engine pool at the home).
+    chase_ids: HashSet<u32>,
+    issued: u64,
+    completed: u64,
+    lat: Histogram,
+    counters: Counters,
+}
+
+impl LoadGen {
+    pub fn new(cfg: LoadGenConfig, dcs_cfg: DcsConfig) -> LoadGen {
+        assert!(cfg.clients > 0 && cfg.ops > 0 && cfg.region_lines > 1);
+        assert!(cfg.mix.total() > 0, "empty operation mix");
+        let mut master = Rng::new(cfg.seed);
+        let spec = reference_transitions();
+
+        // Backing store: real bytes, with pointer chains for the chase
+        // mix baked in (a random permutation, KVS-entry pointer slot).
+        let mut mem = MemStore::new(LineAddr(0), (cfg.region_lines as usize) * 128);
+        let mut perm: Vec<u64> = (0..cfg.region_lines).collect();
+        master.shuffle(&mut perm);
+        for i in 0..cfg.region_lines {
+            let mut line = [0u8; 128];
+            line[0..8].copy_from_slice(&i.to_le_bytes());
+            line[120..128].copy_from_slice(&perm[i as usize].to_le_bytes());
+            mem.write_line(LineAddr(i), &line);
+        }
+
+        let clients = (0..cfg.clients)
+            .map(|c| Client {
+                rng: master.fork(c as u64 + 1),
+                op: None,
+                addr: LineAddr(0),
+                started: Time::ZERO,
+            })
+            .collect();
+
+        LoadGen {
+            cfg,
+            eng: Engine::new(),
+            dcs: Dcs::with_reference_rules(dcs_cfg),
+            mem,
+            dram: Dram::new(DramConfig::fpga_enzian()),
+            kvs: KvsService::new(cfg.kvs_engines),
+            remote: RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), cfg.region_lines),
+            // an LLC-like shared cache, sized well below the region so the
+            // directory sees steady misses and writebacks
+            cache: Cache::new(512 << 10, 8),
+            clients,
+            waiters: HashMap::default(),
+            chase_ids: HashSet::default(),
+            issued: 0,
+            completed: 0,
+            lat: Histogram::new(),
+            counters: Counters::new(),
+        }
+    }
+
+    /// Run to completion and report.
+    pub fn run(mut self) -> LoadReport {
+        for c in 0..self.clients.len() as u32 {
+            self.eng.schedule(Duration::ZERO, Ev::Step(c));
+        }
+        while self.completed < self.cfg.ops {
+            let Some((_, ev)) = self.eng.pop() else {
+                panic!(
+                    "loadgen deadlock: {} of {} ops done, {} queued at dcs, waiters {:?}",
+                    self.completed,
+                    self.cfg.ops,
+                    self.dcs.pending(),
+                    self.waiters.keys().take(8).collect::<Vec<_>>()
+                );
+            };
+            match ev {
+                Ev::Step(c) => self.step(c),
+                Ev::ArriveHome(m) => self.arrive_home(*m),
+                Ev::ArriveCpu(m) => self.arrive_cpu(*m),
+                Ev::Poll(s) => self.pump_slice(s as usize),
+            }
+        }
+        self.report()
+    }
+
+    fn report(mut self) -> LoadReport {
+        let sim_time = self.eng.now();
+        let n = self.dcs.slices();
+        let per_slice_served = (0..n).map(|s| self.dcs.slice_stats(s).served).collect();
+        let per_slice_occupancy =
+            (0..n).map(|s| self.dcs.slice_stats(s).occupancy(sim_time)).collect();
+        let mut counters = self.dcs.counters();
+        for (k, v) in self.remote.stats.iter() {
+            counters.add(k, v);
+        }
+        for (k, v) in self.counters.iter() {
+            counters.add(k, v);
+        }
+        counters.add("kvs_lookups", self.kvs.served);
+        let ops_per_s = if sim_time.ps() == 0 {
+            0.0
+        } else {
+            self.completed as f64 / sim_time.as_secs()
+        };
+        LoadReport {
+            sim_time,
+            completed: self.completed,
+            ops_per_s,
+            lat: self.lat,
+            per_slice_served,
+            per_slice_occupancy,
+            counters,
+        }
+    }
+
+    // -- client side --------------------------------------------------------
+
+    /// Draw the next operation for client `c` per the configured mix.
+    fn next_op(&mut self, c: u32) {
+        let mix = self.cfg.mix;
+        let cl = &mut self.clients[c as usize];
+        let t = cl.rng.below(mix.total() as u64) as u32;
+        let kind = if t < mix.reads {
+            OpKind::Read
+        } else if t < mix.reads + mix.writes {
+            OpKind::Write
+        } else {
+            OpKind::Chase { left: mix.chase_hops.max(1) }
+        };
+        cl.addr = LineAddr(cl.rng.below(self.cfg.region_lines));
+        cl.op = Some(kind);
+        cl.started = self.eng.now();
+        self.issued += 1;
+    }
+
+    /// Issue (or retry after a fill) client `c`'s current access.
+    fn step(&mut self, c: u32) {
+        if self.clients[c as usize].op.is_none() {
+            if self.issued >= self.cfg.ops {
+                return; // this client is finished
+            }
+            self.next_op(c);
+        }
+        let (addr, write, is_chase) = {
+            let cl = &self.clients[c as usize];
+            let k = cl.op.expect("op in progress");
+            (cl.addr, matches!(k, OpKind::Write), matches!(k, OpKind::Chase { .. }))
+        };
+        let (acc, fx) = self.remote.local_access(addr, write, &mut self.cache);
+        let mut sent = false;
+        for e in fx {
+            match e {
+                RemoteEffect::Send(m) => {
+                    if is_chase {
+                        if let MsgKind::CohReq { op } = &m.kind {
+                            if op.needs_response() {
+                                self.chase_ids.insert(m.id.0);
+                            }
+                        }
+                    }
+                    self.send_to_home(m);
+                    sent = true;
+                }
+                RemoteEffect::Stalled => {}
+                RemoteEffect::Filled { .. } => {}
+                RemoteEffect::ForeignVictim(_) => self.counters.inc("foreign_victim"),
+            }
+        }
+        match acc {
+            Access::Hit => self.access_done(c),
+            Access::Pending => {
+                self.waiters.entry(addr).or_default().push(c);
+                if !sent {
+                    self.counters.inc("mshr_merged");
+                }
+            }
+        }
+    }
+
+    /// Client `c`'s access to its current address completed (cache hit or
+    /// post-fill retry): advance the operation state machine.
+    fn access_done(&mut self, c: u32) {
+        let now = self.eng.now();
+        let cl = &mut self.clients[c as usize];
+        match cl.op.expect("op in progress") {
+            OpKind::Write => {
+                // dirty the line with an observable stamp (the pointer
+                // slot at 120..128 is preserved so chase chains survive)
+                if let Some(e) = self.cache.lookup(cl.addr) {
+                    e.data[0..8].copy_from_slice(&now.ps().to_le_bytes());
+                }
+                self.op_done(c);
+            }
+            OpKind::Read => self.op_done(c),
+            OpKind::Chase { left } => {
+                if left <= 1 {
+                    self.op_done(c);
+                    return;
+                }
+                // decode the next hop from the bytes actually served
+                let data = self
+                    .cache
+                    .peek(cl.addr)
+                    .map(|e| *e.data)
+                    .unwrap_or_else(|| self.mem.read_line(cl.addr));
+                let ptr = u64::from_le_bytes(data[120..128].try_into().unwrap());
+                cl.addr = LineAddr(ptr % self.cfg.region_lines);
+                cl.op = Some(OpKind::Chase { left: left - 1 });
+                let think = self.cfg.hop_think;
+                self.eng.schedule(think, Ev::Step(c));
+            }
+        }
+    }
+
+    fn op_done(&mut self, c: u32) {
+        let now = self.eng.now();
+        let cl = &mut self.clients[c as usize];
+        self.lat.record(now.since(cl.started).ps());
+        cl.op = None;
+        self.completed += 1;
+        // closed loop: next operation immediately
+        self.eng.schedule(Duration::ZERO, Ev::Step(c));
+    }
+
+    fn send_to_home(&mut self, m: Message) {
+        self.eng.schedule(self.cfg.link_latency, Ev::ArriveHome(Box::new(m)));
+    }
+
+    // -- home side ----------------------------------------------------------
+
+    fn arrive_home(&mut self, m: Message) {
+        let now = self.eng.now();
+        let s = self.dcs.slice_of(m.addr);
+        self.dcs.enqueue(now, m);
+        self.pump_slice(s);
+    }
+
+    /// Drain slice `s` as far as its pipeline allows right now.
+    fn pump_slice(&mut self, s: usize) {
+        let now = self.eng.now();
+        loop {
+            match self.dcs.service_one(s, now, &mut self.mem) {
+                None => break,
+                Some(SliceService::Busy(t)) => {
+                    self.eng.schedule_at(t, Ev::Poll(s as u32));
+                    break;
+                }
+                Some(SliceService::Done(ready, fx)) => self.handle_effects(ready, fx),
+            }
+        }
+    }
+
+    fn handle_effects(&mut self, ready: Time, fx: Vec<HomeEffect>) {
+        let link = self.cfg.link_latency;
+        for e in fx {
+            match e {
+                HomeEffect::Respond { msg, from_ram } => {
+                    let t = if self.chase_ids.remove(&msg.id.0) {
+                        // chase hop: pointer resolution through the KVS
+                        // engine pool (dispatcher + dependent granules)
+                        self.counters.inc("chase_via_kvs");
+                        self.kvs.submit(ready, 1, &mut self.dram)
+                    } else if from_ram {
+                        self.dram.read(ready, msg.addr)
+                    } else {
+                        ready
+                    };
+                    self.eng.schedule_at(t + link, Ev::ArriveCpu(Box::new(msg)));
+                }
+                HomeEffect::Fwd { msg } => {
+                    self.eng.schedule_at(ready + link, Ev::ArriveCpu(Box::new(msg)));
+                }
+                HomeEffect::RamWrite { addr } => {
+                    self.dram.write(ready, addr);
+                }
+                HomeEffect::LocalDone { .. } => {}
+            }
+        }
+    }
+
+    // -- cpu side -----------------------------------------------------------
+
+    fn arrive_cpu(&mut self, m: Message) {
+        let fx = self.remote.on_message(m, &mut self.cache);
+        for e in fx {
+            match e {
+                RemoteEffect::Send(m2) => self.send_to_home(m2),
+                RemoteEffect::Filled { addr } => self.wake(addr),
+                RemoteEffect::Stalled => {}
+                RemoteEffect::ForeignVictim(_) => self.counters.inc("foreign_victim"),
+            }
+        }
+    }
+
+    fn wake(&mut self, addr: LineAddr) {
+        let Some(cs) = self.waiters.remove(&addr) else { return };
+        for c in cs {
+            self.eng.schedule(Duration::ZERO, Ev::Step(c));
+        }
+    }
+}
+
+/// Convenience: run the configured workload against a fresh dcs with
+/// `slices` slices.
+pub fn run(cfg: LoadGenConfig, dcs_cfg: DcsConfig) -> LoadReport {
+    LoadGen::new(cfg, dcs_cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(ops: u64, slices: usize) -> LoadReport {
+        let cfg = LoadGenConfig { ops, clients: 8, region_lines: 1 << 15, ..Default::default() };
+        run(cfg, DcsConfig::new(slices))
+    }
+
+    #[test]
+    fn completes_every_operation_and_measures() {
+        let r = small(2_000, 2);
+        assert_eq!(r.completed, 2_000);
+        assert_eq!(r.lat.count(), 2_000);
+        assert!(r.ops_per_s > 0.0);
+        assert!(r.sim_time > Time(0));
+        assert!(r.p99_ns() >= r.p50_ns());
+        assert_eq!(r.per_slice_served.len(), 2);
+        // both parities are exercised by random addresses
+        assert!(r.per_slice_served.iter().all(|&s| s > 0), "{:?}", r.per_slice_served);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = small(1_000, 2);
+        let b = small(1_000, 2);
+        assert_eq!(a.sim_time, b.sim_time);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.per_slice_served, b.per_slice_served);
+    }
+
+    #[test]
+    fn chase_hops_resolve_through_kvs_pool() {
+        let cfg = LoadGenConfig {
+            ops: 500,
+            clients: 4,
+            region_lines: 1 << 15,
+            mix: MixConfig { reads: 0, writes: 0, chases: 1, chase_hops: 4 },
+            ..Default::default()
+        };
+        let r = run(cfg, DcsConfig::new(2));
+        assert_eq!(r.completed, 500);
+        assert!(r.counters.get("chase_via_kvs") > 0, "{:?}", r.counters);
+        assert!(r.counters.get("kvs_lookups") > 0);
+        // a 4-hop dependent chase costs several directory round trips
+        assert!(r.p50_ns() > 500.0, "chase p50 {}", r.p50_ns());
+    }
+
+    #[test]
+    fn more_slices_never_slow_the_mixed_workload() {
+        let rate = |slices| small(4_000, slices).ops_per_s;
+        let r1 = rate(1);
+        let r2 = rate(2);
+        let r4 = rate(4);
+        assert!(r2 >= r1 * 0.98, "2 slices {r2} vs 1 {r1}");
+        assert!(r4 >= r2 * 0.98, "4 slices {r4} vs 2 {r2}");
+    }
+}

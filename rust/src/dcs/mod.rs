@@ -1,0 +1,428 @@
+//! dcs — Directory Controller Slices.
+//!
+//! The ECI hardware does not run one monolithic directory: coherence
+//! traffic is split over *address-interleaved slices* (the even/odd VC
+//! sets of §4.2 are the 2-slice case), so directory throughput scales
+//! with parallel protocol engines instead of being capped by one
+//! pipeline. This module is that composition for the simulated stack:
+//!
+//! * [`Dcs`] shards the directory across N slice-local
+//!   [`HomeAgent`]s (line-address modulo mapping, N configurable);
+//! * each slice has its own ingress FIFO — a [`VcMux`] from
+//!   [`crate::transport::vc`], so intra-slice arbitration is the same
+//!   rank-then-round-robin, per-VC-FIFO discipline the link itself uses
+//!   (responses and writebacks drain before new requests, which is what
+//!   keeps stalled lines from wedging a slice);
+//! * each slice is a serial server: one message occupies the slice's
+//!   directory pipeline for [`DcsConfig::slice_proc`], and per-slice
+//!   occupancy/wait/latency statistics feed [`crate::sim::stats`].
+//!
+//! Per-line semantics are *identical* for any slice count: a line maps to
+//! exactly one slice in every configuration and all directory state is
+//! line-local (see [`HomeAgent`]); the property test in
+//! `rust/tests/props.rs` pins this 1-slice ≡ N-slice equivalence on
+//! randomized traces. The closed-loop load generator that drives the
+//! slices at saturation lives in [`loadgen`]; the slice-count sweep
+//! harness is `harness::fig_throughput`.
+
+pub mod loadgen;
+
+use std::collections::VecDeque;
+
+use crate::agents::dram::MemStore;
+use crate::agents::home::{HomeAgent, HomeEffect};
+use crate::proto::messages::{LineAddr, Message};
+use crate::proto::spec::{generate_home, HomePolicy, HomeRules, HomeSt};
+use crate::proto::states::Node;
+use crate::proto::transitions::reference_transitions;
+use crate::sim::stats::{Counters, Histogram};
+use crate::sim::time::{Duration, Time};
+use crate::transport::vc::{vc_for, Credits, VcMux, NUM_VCS};
+
+/// Configuration of the sliced directory controller.
+#[derive(Clone, Copy, Debug)]
+pub struct DcsConfig {
+    /// Number of address-interleaved slices (1 = the monolithic home).
+    pub slices: usize,
+    /// Directory-pipeline occupancy per message on one slice (lookup +
+    /// datapath dispatch; `MachineConfig::home_proc` on Enzian).
+    pub slice_proc: Duration,
+}
+
+impl DcsConfig {
+    pub fn new(slices: usize) -> DcsConfig {
+        assert!(slices > 0, "need at least one slice");
+        DcsConfig { slices, slice_proc: Duration::from_ns(40) }
+    }
+
+    pub fn with_slice_proc(mut self, d: Duration) -> DcsConfig {
+        self.slice_proc = d;
+        self
+    }
+}
+
+/// Per-slice measurement block.
+#[derive(Clone, Debug)]
+pub struct SliceStats {
+    /// Messages serviced.
+    pub served: u64,
+    /// Queue wait per message (arrival -> service start), picoseconds.
+    pub wait: Histogram,
+    /// Total pipeline-busy time.
+    pub busy: Duration,
+    /// High-water mark of the ingress queue.
+    pub max_queue: usize,
+}
+
+impl SliceStats {
+    fn new() -> SliceStats {
+        SliceStats { served: 0, wait: Histogram::new(), busy: Duration::ZERO, max_queue: 0 }
+    }
+
+    /// Fraction of `total` this slice's pipeline was busy.
+    pub fn occupancy(&self, total: Time) -> f64 {
+        if total.ps() == 0 {
+            0.0
+        } else {
+            self.busy.ps() as f64 / total.ps() as f64
+        }
+    }
+}
+
+/// One directory slice: a slice-local home agent behind a VC-disciplined
+/// ingress queue and a serial service pipeline.
+struct Slice {
+    home: HomeAgent,
+    /// Ingress queue, reusing the transport VC multiplexer: per-VC FIFO,
+    /// deadlock-rank-then-round-robin arbitration.
+    mux: VcMux,
+    /// Arrival stamps, parallel to the mux's per-VC FIFOs.
+    arrivals: [VecDeque<Time>; NUM_VCS],
+    busy_until: Time,
+    stats: SliceStats,
+}
+
+/// Outcome of one service attempt on a slice.
+#[derive(Debug)]
+pub enum SliceService {
+    /// The slice pipeline is occupied until `t`; poll again then.
+    Busy(Time),
+    /// One message was serviced; its effects are ready at `t`.
+    Done(Time, Vec<HomeEffect>),
+}
+
+/// The sharded directory controller.
+pub struct Dcs {
+    pub cfg: DcsConfig,
+    slices: Vec<Slice>,
+    /// Ingress-side credit view for the mux arbiter: the dcs never
+    /// throttles its own dequeue, so every VC always has a credit.
+    always: Credits,
+}
+
+impl Dcs {
+    /// Shard the directory described by `rules` across `cfg.slices`
+    /// slice-local home agents.
+    pub fn new(cfg: DcsConfig, rules: HomeRules, policy: HomePolicy) -> Dcs {
+        assert!(cfg.slices > 0);
+        let slices = (0..cfg.slices)
+            .map(|i| Slice {
+                home: HomeAgent::new_slice(
+                    rules.clone(),
+                    policy,
+                    None,
+                    i as u64,
+                    cfg.slices as u64,
+                ),
+                mux: VcMux::new(Node::Remote),
+                arrivals: Default::default(),
+                busy_until: Time::ZERO,
+                stats: SliceStats::new(),
+            })
+            .collect();
+        Dcs { cfg, slices, always: Credits::new(1) }
+    }
+
+    /// A dcs over the reference protocol with the default home policy.
+    pub fn with_reference_rules(cfg: DcsConfig) -> Dcs {
+        let policy = HomePolicy::default();
+        Dcs::new(cfg, generate_home(&reference_transitions(), policy), policy)
+    }
+
+    pub fn slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Address-interleaved slice mapping (2 slices = even/odd lines).
+    #[inline]
+    pub fn slice_of(&self, addr: LineAddr) -> usize {
+        (addr.0 % self.slices.len() as u64) as usize
+    }
+
+    // -- timed path ---------------------------------------------------------
+
+    /// A coherence message arrived from the remote at `now`: queue it on
+    /// its slice's ingress FIFO (per-VC order preserved).
+    pub fn enqueue(&mut self, now: Time, msg: Message) {
+        let s = self.slice_of(msg.addr);
+        let slice = &mut self.slices[s];
+        let vc = vc_for(&msg);
+        slice.arrivals[vc.0 as usize].push_back(now);
+        slice.mux.enqueue(msg);
+        slice.stats.max_queue = slice.stats.max_queue.max(slice.mux.pending());
+    }
+
+    /// Attempt to service one queued message on slice `s` at `now`.
+    /// Returns `None` when the slice's queue is empty.
+    pub fn service_one(
+        &mut self,
+        s: usize,
+        now: Time,
+        ram: &mut MemStore,
+    ) -> Option<SliceService> {
+        let proc = self.cfg.slice_proc;
+        let slice = &mut self.slices[s];
+        if slice.mux.is_empty() {
+            return None;
+        }
+        if slice.busy_until > now {
+            return Some(SliceService::Busy(slice.busy_until));
+        }
+        let (vc, msg) = slice
+            .mux
+            .arbitrate(&self.always)
+            .expect("non-empty mux with free credits must arbitrate");
+        let arrived = slice.arrivals[vc.0 as usize]
+            .pop_front()
+            .expect("arrival stamp out of sync with mux queue");
+        slice.stats.wait.record(now.since(arrived).ps());
+        let done = now + proc;
+        slice.busy_until = done;
+        slice.stats.busy += proc;
+        slice.stats.served += 1;
+        let fx = slice.home.on_message(msg, ram);
+        Some(SliceService::Done(done, fx))
+    }
+
+    /// Total queued messages across slices.
+    pub fn pending(&self) -> usize {
+        self.slices.iter().map(|s| s.mux.pending()).sum()
+    }
+
+    // -- untimed (functional) path ------------------------------------------
+
+    /// Dispatch a message straight to its owning slice, bypassing the
+    /// ingress queue and pipeline timing. Per-line behaviour is identical
+    /// to the timed path (same agent, same rules); used by functional
+    /// tests and the 1-vs-N equivalence property.
+    pub fn on_message_sync(&mut self, msg: Message, ram: &mut MemStore) -> Vec<HomeEffect> {
+        let s = self.slice_of(msg.addr);
+        self.slices[s].home.on_message(msg, ram)
+    }
+
+    /// Home-side application access, routed to the owning slice
+    /// (symmetric configurations).
+    pub fn local_access_sync(
+        &mut self,
+        addr: LineAddr,
+        write: bool,
+        tag: u64,
+        ram: &mut MemStore,
+    ) -> Vec<HomeEffect> {
+        let s = self.slice_of(addr);
+        self.slices[s].home.local_access(addr, write, tag, ram)
+    }
+
+    // -- introspection ------------------------------------------------------
+
+    /// Directory state of a line (from its owning slice).
+    pub fn state_of(&self, addr: LineAddr) -> HomeSt {
+        self.slices[self.slice_of(addr)].home.state_of(addr)
+    }
+
+    /// Lines tracked across all slices (§3.4 space accounting).
+    pub fn tracked_lines(&self) -> usize {
+        self.slices.iter().map(|s| s.home.tracked_lines()).sum()
+    }
+
+    pub fn slice_stats(&self, s: usize) -> &SliceStats {
+        &self.slices[s].stats
+    }
+
+    /// Merged per-slice home-agent counters, a `slices_served` total,
+    /// and named `slice<N>_served` counts for the first 8 slices
+    /// (counter keys are `&'static str`; beyond 8, per-slice detail is
+    /// available through [`Dcs::slice_stats`] and the total stays
+    /// exact).
+    pub fn counters(&self) -> Counters {
+        let mut c = Counters::new();
+        const SLICE_KEYS: [&str; 8] = [
+            "slice0_served",
+            "slice1_served",
+            "slice2_served",
+            "slice3_served",
+            "slice4_served",
+            "slice5_served",
+            "slice6_served",
+            "slice7_served",
+        ];
+        for (i, s) in self.slices.iter().enumerate() {
+            for (k, v) in s.home.stats.iter() {
+                c.add(k, v);
+            }
+            c.add("slices_served", s.stats.served);
+            if let Some(key) = SLICE_KEYS.get(i) {
+                c.add(key, s.stats.served);
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::{CohOp, MsgKind, ReqId};
+    use crate::proto::spec::RemoteView;
+
+    fn mk(slices: usize) -> (Dcs, MemStore) {
+        let dcs = Dcs::with_reference_rules(DcsConfig::new(slices));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            let mut l = [0u8; 128];
+            l[0] = i as u8;
+            ram.write_line(LineAddr(i), &l);
+        }
+        (dcs, ram)
+    }
+
+    #[test]
+    fn slice_mapping_is_modulo_interleaved() {
+        let (dcs, _) = mk(4);
+        assert_eq!(dcs.slice_of(LineAddr(0)), 0);
+        assert_eq!(dcs.slice_of(LineAddr(1)), 1);
+        assert_eq!(dcs.slice_of(LineAddr(6)), 2);
+        assert_eq!(dcs.slice_of(LineAddr(7)), 3);
+        // 2 slices = the paper's even/odd split
+        let (dcs, _) = mk(2);
+        assert_eq!(dcs.slice_of(LineAddr(10)), 0);
+        assert_eq!(dcs.slice_of(LineAddr(11)), 1);
+    }
+
+    #[test]
+    fn timed_service_serializes_one_slice() {
+        let (mut dcs, mut ram) = mk(1);
+        let proc = dcs.cfg.slice_proc;
+        dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
+        dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(4)));
+        // first service completes at proc
+        let Some(SliceService::Done(t1, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+            panic!("expected service");
+        };
+        assert_eq!(t1, Time(0) + proc);
+        assert_eq!(fx.len(), 1);
+        // pipeline busy: second attempt reports busy-until
+        let Some(SliceService::Busy(t)) = dcs.service_one(0, Time(0), &mut ram) else {
+            panic!("expected busy");
+        };
+        assert_eq!(t, t1);
+        // at t1 the second message goes through
+        let Some(SliceService::Done(t2, _)) = dcs.service_one(0, t1, &mut ram) else {
+            panic!("expected service");
+        };
+        assert_eq!(t2, t1 + proc);
+        assert!(dcs.service_one(0, t2, &mut ram).is_none(), "queue drained");
+        assert_eq!(dcs.slice_stats(0).served, 2);
+        assert_eq!(dcs.slice_stats(0).busy, proc.times(2));
+    }
+
+    #[test]
+    fn slices_service_disjoint_lines_independently() {
+        let (mut dcs, mut ram) = mk(2);
+        // even line -> slice 0, odd line -> slice 1
+        dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
+        dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(3)));
+        let Some(SliceService::Done(t0, _)) = dcs.service_one(0, Time(0), &mut ram) else {
+            panic!()
+        };
+        let Some(SliceService::Done(t1, _)) = dcs.service_one(1, Time(0), &mut ram) else {
+            panic!()
+        };
+        // both complete after ONE service latency: true slice parallelism
+        assert_eq!(t0, Time(0) + dcs.cfg.slice_proc);
+        assert_eq!(t1, t0);
+        assert_eq!(dcs.state_of(LineAddr(2)).view, RemoteView::S);
+        assert_eq!(dcs.state_of(LineAddr(3)).view, RemoteView::S);
+        assert_eq!(dcs.tracked_lines(), 2);
+    }
+
+    #[test]
+    fn writebacks_outrank_requests_within_a_slice() {
+        let (mut dcs, mut ram) = mk(1);
+        // line 4 is held exclusive, so its writeback is protocol-legal
+        dcs.on_message_sync(
+            Message::coh_req(ReqId(4), Node::Remote, CohOp::ReadExclusive, LineAddr(4)),
+            &mut ram,
+        );
+        // a request queued BEFORE a writeback: the WbData class has the
+        // higher deadlock rank and must be arbitrated first.
+        dcs.enqueue(Time(0), Message::coh_req(ReqId(5), Node::Remote, CohOp::ReadShared, LineAddr(2)));
+        dcs.enqueue(
+            Time(0),
+            Message::coh_req_data(
+                ReqId(6),
+                Node::Remote,
+                CohOp::VolDowngradeI,
+                LineAddr(4),
+                Box::new([7u8; 128]),
+            ),
+        );
+        let Some(SliceService::Done(_, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+            panic!()
+        };
+        assert!(
+            fx.iter().any(|e| matches!(e, HomeEffect::RamWrite { addr } if *addr == LineAddr(4))),
+            "writeback must be arbitrated first: {fx:?}"
+        );
+        assert_eq!(ram.read_line(LineAddr(4))[0], 7, "writeback data must reach RAM");
+    }
+
+    #[test]
+    fn sync_path_matches_direct_home_agent() {
+        use crate::agents::home::HomeAgent;
+        use crate::proto::spec::generate_home;
+        let (mut dcs, mut ram) = mk(4);
+        let mut mono = HomeAgent::new(
+            generate_home(&reference_transitions(), HomePolicy::default()),
+            HomePolicy::default(),
+            None,
+        );
+        let mut ram2 = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            let mut l = [0u8; 128];
+            l[0] = i as u8;
+            ram2.write_line(LineAddr(i), &l);
+        }
+        for i in 0..16u64 {
+            let m = Message::coh_req(ReqId(i as u32), Node::Remote, CohOp::ReadShared, LineAddr(i));
+            let a = dcs.on_message_sync(m.clone(), &mut ram);
+            let b = mono.on_message(m, &mut ram2);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                match (x, y) {
+                    (
+                        HomeEffect::Respond { msg: mx, from_ram: fx },
+                        HomeEffect::Respond { msg: my, from_ram: fy },
+                    ) => {
+                        assert_eq!(fx, fy);
+                        assert_eq!(mx.addr, my.addr);
+                        assert_eq!(mx.payload, my.payload);
+                        assert!(matches!(mx.kind, MsgKind::CohRsp { .. }));
+                    }
+                    other => panic!("effect mismatch {other:?}"),
+                }
+            }
+            assert_eq!(dcs.state_of(LineAddr(i)), mono.state_of(LineAddr(i)));
+        }
+    }
+}

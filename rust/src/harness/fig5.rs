@@ -1,13 +1,14 @@
 //! Figure 5: SELECT throughput vs. selectivity and thread count, CPU and
 //! FPGA implementations (paper §5.4).
 //!
-//! Shape criteria (EXPERIMENTS.md): CPU scan rate flat in selectivity and
+//! Shape criteria (DESIGN.md §4): CPU scan rate flat in selectivity and
 //! DRAM-bandwidth-bound; FPGA scan DRAM-bound at low selectivity once
 //! enough threads keep the pipeline full, interconnect-bound at 100%;
 //! results/s *inversion* at high selectivity (CPU wins on local-DRAM
 //! bandwidth when everything is returned).
 
 use crate::agents::dram::MemStore;
+use crate::anyhow;
 use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
 use crate::memctl::{FifoServer, ScanTiming};
 use crate::operators::select::{cpu_select_scan, fpga_select_scan};
@@ -39,7 +40,7 @@ pub struct FigPoint {
 /// Precomputed per-selectivity scan state, reusable across thread counts
 /// (PERF: the functional scan through the XLA kernel is identical for
 /// every thread count; scanning once per selectivity instead of once per
-/// point cut harness wall-clock ~7x — EXPERIMENTS.md §Perf).
+/// point cut harness wall-clock ~7x — DESIGN.md §Perf).
 pub struct PreparedScan {
     pub rows: u64,
     pub selectivity: f64,

@@ -7,6 +7,7 @@
 //! interconnect-saturation cap; both decline ~1/chain_len.
 
 use crate::agents::dram::MemStore;
+use crate::anyhow;
 use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
 use crate::memctl::KvsService;
 use crate::operators::kvs::{fpga_hash_batch, lookup};

@@ -7,6 +7,7 @@
 //! the CPU threads involved.
 
 use crate::agents::dram::MemStore;
+use crate::anyhow;
 use crate::machine::{map, FpgaApp, Machine, MachineConfig, Workload};
 use crate::memctl::{regex_row_cycles, FifoServer, ScanTiming};
 use crate::operators::redfa::compile_regex;
@@ -29,7 +30,7 @@ pub const CPU_CYCLES_PER_ROW: u64 = 30 * 62;
 pub const CPU_MATCH_EXTRA: u64 = 32;
 
 /// Precomputed per-selectivity scan (PERF: one XLA scan + one cycle pass
-/// per selectivity, reused across the thread sweep — EXPERIMENTS.md §Perf).
+/// per selectivity, reused across the thread sweep — DESIGN.md §Perf).
 pub struct PreparedRegex {
     pub rows: u64,
     pub selectivity: f64,

@@ -1,0 +1,145 @@
+//! Directory-throughput scaling: sustained coherence operations/sec and
+//! tail latency of the sharded directory controller ([`crate::dcs`])
+//! under a closed-loop mixed workload, swept over slice counts.
+//!
+//! This is the reproduction's companion to the paper's even/odd VC-pair
+//! observation (§4.2): address-interleaved directory slices are what let
+//! coherence throughput scale with parallel protocol engines. Shape
+//! criterion: sustained ops/s is monotonically non-decreasing in the
+//! slice count, roughly doubling while the slice pipeline is the
+//! bottleneck and flattening once the offered load (clients / round-trip)
+//! or the DRAM/KVS backends bind.
+
+use crate::dcs::loadgen::{self, LoadGenConfig, MixConfig};
+use crate::dcs::DcsConfig;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+
+/// Slice counts swept by default.
+pub const SLICE_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+#[derive(Clone, Debug)]
+pub struct ThroughputPoint {
+    pub slices: usize,
+    pub ops_per_s: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Mean slice-pipeline occupancy (0..1).
+    pub occupancy: f64,
+    pub per_slice_served: Vec<u64>,
+}
+
+pub struct FigThroughput {
+    pub cfg: LoadGenConfig,
+    pub points: Vec<ThroughputPoint>,
+}
+
+/// Total operations per run at each scale (shared with the CLI defaults
+/// so `eci bench dcs` and the bench sweep drive the same workload).
+pub fn ops_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 4_000,
+        Scale::Default => 20_000,
+        Scale::Paper => 100_000,
+    }
+}
+
+/// One sweep point: the configured workload against `slices` slices,
+/// using [`DcsConfig::new`]'s slice-pipeline calibration (~12 fabric
+/// cycles at 300 MHz, the Enzian `home_proc`).
+pub fn run_point(cfg: LoadGenConfig, slices: usize) -> ThroughputPoint {
+    let r = loadgen::run(cfg, DcsConfig::new(slices));
+    let occupancy = if r.per_slice_occupancy.is_empty() {
+        0.0
+    } else {
+        r.per_slice_occupancy.iter().sum::<f64>() / r.per_slice_occupancy.len() as f64
+    };
+    ThroughputPoint {
+        slices,
+        ops_per_s: r.ops_per_s,
+        p50_ns: r.p50_ns(),
+        p99_ns: r.p99_ns(),
+        occupancy,
+        per_slice_served: r.per_slice_served,
+    }
+}
+
+/// Sweep the given slice counts with one workload configuration.
+pub fn run_with(cfg: LoadGenConfig, slices: &[usize]) -> FigThroughput {
+    let points = slices.iter().map(|&n| run_point(cfg, n)).collect();
+    FigThroughput { cfg, points }
+}
+
+/// The default figure: mixed read/write/pointer-chase workload from 32
+/// closed-loop clients, slice counts 1/2/4/8.
+pub fn run(scale: Scale) -> FigThroughput {
+    let cfg =
+        LoadGenConfig { ops: ops_for(scale), mix: MixConfig::default(), ..Default::default() };
+    run_with(cfg, &SLICE_SWEEP)
+}
+
+pub fn render(f: &FigThroughput) -> ResultTable {
+    let mix = f.cfg.mix;
+    let mut t = ResultTable::new(
+        &format!(
+            "Directory throughput vs slice count ({} clients, mix r:w:c = {}:{}:{}, {} hops)",
+            f.cfg.clients, mix.reads, mix.writes, mix.chases, mix.chase_hops
+        ),
+        &["slices", "ops/s", "p50 ns", "p99 ns", "occupancy", "per-slice served"],
+    );
+    for p in &f.points {
+        t.row(vec![
+            p.slices.to_string(),
+            fmt_rate(p.ops_per_s),
+            format!("{:.0}", p.p50_ns),
+            format!("{:.0}", p.p99_ns),
+            format!("{:.2}", p.occupancy),
+            format!("{:?}", p.per_slice_served),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape: sustained ops/s must be monotonically
+    /// non-decreasing from 1 to 4 slices under the mixed workload.
+    #[test]
+    fn throughput_monotone_in_slice_count() {
+        let f = run(Scale::Ci);
+        assert_eq!(f.points.len(), SLICE_SWEEP.len());
+        for w in f.points.windows(2).take(2) {
+            assert!(
+                w[1].ops_per_s >= w[0].ops_per_s,
+                "{} slices {} ops/s < {} slices {} ops/s",
+                w[1].slices,
+                w[1].ops_per_s,
+                w[0].slices,
+                w[0].ops_per_s
+            );
+        }
+        // and sharding must actually help while the pipeline binds
+        let p1 = &f.points[0];
+        let p4 = &f.points[2];
+        assert!(
+            p4.ops_per_s > p1.ops_per_s * 1.3,
+            "4 slices {} vs 1 slice {}",
+            p4.ops_per_s,
+            p1.ops_per_s
+        );
+        // the monolith must actually be the bottleneck for this to be a
+        // scaling experiment at all
+        assert!(p1.occupancy > 0.5, "1-slice occupancy {}", p1.occupancy);
+    }
+
+    #[test]
+    fn render_has_one_row_per_point() {
+        let cfg = LoadGenConfig { ops: 500, clients: 4, ..Default::default() };
+        let f = run_with(cfg, &[1, 2]);
+        let t = render(&f);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.to_markdown().contains("slices"));
+    }
+}

@@ -14,11 +14,14 @@
 //!   Rust through [`runtime`] (PJRT CPU client). Python is never on the
 //!   request path.
 //!
-//! See `DESIGN.md` for the hardware-substitution argument and the
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `rust/DESIGN.md` for the layer map, the hardware-substitution
+//! argument, the experiment index, and the host-side performance notes
+//! (§Perf).
 
 pub mod agents;
+pub mod anyhow;
 pub mod config;
+pub mod dcs;
 pub mod harness;
 pub mod machine;
 pub mod memctl;
@@ -27,6 +30,7 @@ pub mod proto;
 pub mod ptest;
 pub mod resource;
 pub mod runtime;
+pub mod rustc_hash;
 pub mod sim;
 pub mod trace;
 pub mod transport;

@@ -14,12 +14,13 @@
 
 pub mod config;
 
-use rustc_hash::FxHashMap as HashMap;
+use crate::rustc_hash::FxHashMap as HashMap;
 
 use crate::agents::cache::{Cache, Victim};
 use crate::agents::dram::{Dram, MemStore};
 use crate::agents::home::{HomeAgent, HomeEffect};
 use crate::agents::remote::{RemoteAgent, RemoteEffect};
+use crate::dcs::{Dcs, DcsConfig, SliceService};
 use crate::memctl::{ComputeRegion, ConfigBlock, FifoServer, KvsService};
 use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{generate_home, generate_remote, HomePolicy};
@@ -121,6 +122,10 @@ pub enum FpgaApp {
     /// Spec-generated directory controller over FPGA DRAM (full
     /// protocol; Table 3 and the symmetric configurations).
     Memory(HomeAgent),
+    /// Sharded directory controller: N address-interleaved slices, each
+    /// a serial directory pipeline behind a VC-disciplined ingress FIFO
+    /// (see [`crate::dcs`]).
+    Dcs(Dcs),
     /// Stateless read-only smart memory controller (§3.4) serving a
     /// result FIFO (SELECT / regex operators).
     Fifo(FifoServer),
@@ -144,7 +149,7 @@ enum Ev {
     /// Try to drain a link direction's send queue. 0: cpu->fpga.
     KickTx(u8),
     /// Frame arrival at the far end of direction `dir` (boxed: keeps the
-    /// heap element small — see EXPERIMENTS.md §Perf).
+    /// heap element small — see DESIGN.md §Perf).
     Arrive { dir: u8, frame: Box<Frame> },
     /// Credit return reaches the sender of direction `dir`.
     CreditRet { dir: u8, vc: VcId },
@@ -152,6 +157,8 @@ enum Ev {
     Ctl { dir: u8, ctl: Control },
     /// The FPGA finished servicing and enqueues a message toward the CPU.
     FpgaSend(Box<Message>),
+    /// Retry servicing dcs slice `s` (its pipeline was busy).
+    DcsPoll(u32),
 }
 
 // ---------------------------------------------------------------------------
@@ -321,6 +328,24 @@ impl Machine {
             None,
         );
         Machine::new(cfg, FpgaApp::Memory(home), fpga_mem, cpu_mem)
+    }
+
+    /// A machine whose FPGA runs the sharded directory controller:
+    /// `slices` address-interleaved directory pipelines, each costing
+    /// `home_proc` of occupancy per message (the monolithic
+    /// [`Machine::memory_node`] services messages with the same latency
+    /// but unbounded concurrency — the dcs is the finite-throughput
+    /// model).
+    pub fn dcs_node(
+        cfg: MachineConfig,
+        slices: usize,
+        fpga_mem: MemStore,
+        cpu_mem: MemStore,
+    ) -> Machine {
+        let dcs = Dcs::with_reference_rules(
+            DcsConfig::new(slices).with_slice_proc(cfg.home_proc),
+        );
+        Machine::new(cfg, FpgaApp::Dcs(dcs), fpga_mem, cpu_mem)
     }
 
     /// Install a workload and the number of active threads (cores).
@@ -729,6 +754,44 @@ impl Machine {
                 self.to_cpu.send(*msg);
                 self.kick(1);
             }
+            Ev::DcsPoll(s) => self.pump_dcs_slice(s as usize),
+        }
+    }
+
+    /// Drain one dcs slice as far as its pipeline allows right now,
+    /// scheduling the produced messages and a re-poll if it is busy.
+    fn pump_dcs_slice(&mut self, s: usize) {
+        let now = self.eng.now();
+        let FpgaApp::Dcs(dcs) = &mut self.app else { return };
+        loop {
+            match dcs.service_one(s, now, &mut self.fpga_mem) {
+                None => break,
+                Some(SliceService::Busy(t)) => {
+                    self.eng.schedule_at(t, Ev::DcsPoll(s as u32));
+                    break;
+                }
+                Some(SliceService::Done(ready, fx)) => {
+                    for e in fx {
+                        match e {
+                            HomeEffect::Respond { msg, from_ram } => {
+                                let at = if from_ram {
+                                    self.fpga_dram.read(ready, msg.addr)
+                                } else {
+                                    ready
+                                };
+                                self.eng.schedule_at(at, Ev::FpgaSend(Box::new(msg)));
+                            }
+                            HomeEffect::Fwd { msg } => {
+                                self.eng.schedule_at(ready, Ev::FpgaSend(Box::new(msg)));
+                            }
+                            HomeEffect::RamWrite { addr } => {
+                                self.fpga_dram.write(ready, addr);
+                            }
+                            HomeEffect::LocalDone { .. } => {}
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -866,6 +929,15 @@ impl Machine {
             _ => {}
         }
 
+        if let FpgaApp::Dcs(dcs) = &mut self.app {
+            // queue on the owning slice's VC FIFO, then drain whatever
+            // that slice's pipeline can service right now
+            let s = dcs.slice_of(msg.addr);
+            dcs.enqueue(now, msg);
+            self.pump_dcs_slice(s);
+            return;
+        }
+
         match &mut self.app {
             FpgaApp::Memory(home) => {
                 let fx = home.on_message(msg, &mut self.fpga_mem);
@@ -931,6 +1003,7 @@ impl Machine {
                 }
                 k => panic!("result-region home cannot handle {k:?}"),
             },
+            FpgaApp::Dcs(_) => unreachable!("dcs traffic handled above"),
         }
     }
 }
@@ -1037,6 +1110,54 @@ mod tests {
         // 2ch DDR4-2133 = 34 GB/s peak; blocking in-order cores with one
         // outstanding miss each land within ~2x of peak
         assert!(gbps > 14.0 && gbps < 34.2, "local scan {gbps} GB/s");
+    }
+
+    #[test]
+    fn dcs_node_delivers_correct_data_across_slices() {
+        let cfg = MachineConfig::test_small();
+        let (mut fpga, cpu) = small_mem();
+        for i in 0..1024u64 {
+            let mut l = [0u8; 128];
+            l[0..8].copy_from_slice(&(i * 13 + 1).to_le_bytes());
+            fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+        }
+        let mut m = Machine::dcs_node(cfg, 4, fpga, cpu);
+        let bad = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        {
+            let bad2 = std::sync::Arc::clone(&bad);
+            m.verify_fill = Some(Box::new(move |addr, data| {
+                let i = addr.0 - map::TABLE_BASE.0;
+                let got = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                if got != i * 13 + 1 {
+                    bad2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }));
+        }
+        m.set_workload(Workload::StreamRemote { lines: 1024 }, 4);
+        let r = m.run();
+        assert_eq!(bad.load(std::sync::atomic::Ordering::Relaxed), 0, "payload corruption");
+        assert_eq!(r.remote_bytes, 1024 * 128);
+        assert!(r.sim_time > Time(0));
+    }
+
+    #[test]
+    fn dcs_single_outstanding_latency_matches_memory_node() {
+        // one outstanding load at a time: the slice pipeline never
+        // queues, so the sharded directory must look like the monolith
+        let run = |dcs: Option<usize>| {
+            let cfg = MachineConfig::enzian_eci();
+            let (fpga, cpu) = small_mem();
+            let mut m = match dcs {
+                Some(n) => Machine::dcs_node(cfg, n, fpga, cpu),
+                None => Machine::memory_node(cfg, fpga, cpu),
+            };
+            m.set_workload(Workload::ChaseRemote { count: 1_000, region_lines: 8 << 10 }, 1);
+            m.run().mean_load_ns()
+        };
+        let mono = run(None);
+        let sliced = run(Some(2));
+        let ratio = sliced / mono;
+        assert!((0.9..1.1).contains(&ratio), "dcs {sliced} ns vs memory {mono} ns");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! the identical lookup against local memory.
 
 use crate::agents::dram::MemStore;
+use crate::anyhow;
 use crate::runtime::{Runtime, BATCH};
 
 use super::table::{kvs_lookup, KvsLayout};
@@ -55,8 +56,10 @@ mod tests {
 
     #[test]
     fn kernel_hash_routes_to_the_chain_that_holds_the_key() {
-        let dir = crate::runtime::Manifest::default_dir();
-        if !dir.join("manifest.json").exists() {
+        // the native executor needs no artifacts; the PJRT path does
+        if cfg!(feature = "xla")
+            && !crate::runtime::Manifest::default_dir().join("manifest.json").exists()
+        {
             eprintln!("skipping: artifacts not built");
             return;
         }

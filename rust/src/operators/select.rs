@@ -8,6 +8,7 @@
 //! checkable.
 
 use crate::agents::dram::MemStore;
+use crate::anyhow;
 use crate::proto::messages::LineAddr;
 use crate::runtime::{Runtime, BATCH, ROW_WORDS};
 
@@ -79,8 +80,10 @@ mod tests {
 
     #[test]
     fn fpga_and_cpu_scans_agree_exactly() {
-        let dir = crate::runtime::Manifest::default_dir();
-        if !dir.join("manifest.json").exists() {
+        // the native executor needs no artifacts; the PJRT path does
+        if cfg!(feature = "xla")
+            && !crate::runtime::Manifest::default_dir().join("manifest.json").exists()
+        {
             eprintln!("skipping: artifacts not built");
             return;
         }

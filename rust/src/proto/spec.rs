@@ -53,7 +53,7 @@
 //!   impossibility (a request from a node its directory believes holds
 //!   E/M) and *stalls* the request until the in-flight downgrade arrives.
 
-use rustc_hash::FxHashMap as HashMap;
+use crate::rustc_hash::FxHashMap as HashMap;
 
 use super::messages::CohOp;
 use super::states::CacheState;

@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{self, bail, Context, Result};
 
 use crate::trace::json::{parse, Json};
 

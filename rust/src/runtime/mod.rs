@@ -1,10 +1,35 @@
-//! Layer-3 ⇄ Layer-2 bridge: load the AOT-compiled operator graphs
-//! (HLO text, produced once by `python/compile/aot.py`) into a PJRT CPU
-//! client and execute them from the coordinator's hot path. Python is
-//! never on the request path.
+//! Layer-3 ⇄ Layer-2 bridge: the operator batch calls behind the
+//! coordinator's hot path.
+//!
+//! Two interchangeable executors provide the same [`Runtime`] API:
+//!
+//! * [`native`] (default) — a pure-Rust implementation of the kernel
+//!   semantics pinned by `python/compile/kernels/ref.py`. Used whenever
+//!   the vendored `xla` crate is unavailable (the offline registry).
+//! * [`pjrt`] (`--features xla`) — loads the AOT-compiled operator
+//!   graphs (HLO text, produced once by `python/compile/aot.py`) into a
+//!   PJRT CPU client and executes them per batch. Python is never on the
+//!   request path.
 
 pub mod artifacts;
+#[cfg(not(feature = "xla"))]
+pub mod native;
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
 pub use artifacts::{Manifest, OpArtifact, TensorSpec, BATCH, DFA_STATES, ROW_WORDS, STR_LEN};
-pub use pjrt::{hash_bucket_ref, Runtime};
+#[cfg(not(feature = "xla"))]
+pub use native::Runtime;
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
+
+/// Reference hash, bit-identical to the AOT kernel (`HASH_MULT` fold in
+/// `python/compile/kernels/ref.py`) — the single copy both executors and
+/// the KVS builder/CPU baseline share, so bucket placement can never
+/// drift between build modes.
+#[inline]
+pub fn hash_bucket_ref(key: i32, bucket_mask: i32) -> i32 {
+    let h = key.wrapping_mul(-1640531527i32);
+    let h = h ^ ((h as u32) >> 16) as i32;
+    h & bucket_mask
+}

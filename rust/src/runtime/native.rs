@@ -1,0 +1,230 @@
+//! Native operator executor: the default (offline) implementation of the
+//! Layer-2 operator batch calls. Bit-identical to the AOT XLA kernels
+//! (semantics pinned by `python/compile/kernels/ref.py`; the integer ops
+//! are exact and the f32 comparisons involve no arithmetic, so there is
+//! no float drift to worry about). The real PJRT executor lives in
+//! [`super::pjrt`] behind the `xla` feature; everything above this module
+//! sees the same [`Runtime`] API either way.
+
+use crate::anyhow::{bail, Result};
+
+use super::artifacts::{Manifest, BATCH, DFA_STATES, ROW_WORDS, STR_LEN};
+use super::hash_bucket_ref;
+
+/// Dense DFA ready for table-walk evaluation, derived from the one-hot
+/// transition tensors the kernel ABI uses.
+struct Dfa {
+    /// `next[c * DFA_STATES + s]` = successor of state `s` on byte `c`.
+    next: Vec<u16>,
+    accept: Vec<bool>,
+}
+
+/// The native runtime: mirrors the PJRT executor's API and counters.
+pub struct Runtime {
+    dfa: Option<Dfa>,
+    select_invocations: u64,
+    regex_invocations: u64,
+    hash_invocations: u64,
+}
+
+impl Runtime {
+    fn native() -> Runtime {
+        Runtime {
+            dfa: None,
+            select_invocations: 0,
+            regex_invocations: 0,
+            hash_invocations: 0,
+        }
+    }
+
+    /// Load from the default artifact directory. The native executor
+    /// needs no artifacts; when a manifest *is* present it is still
+    /// parsed and geometry-validated, so ABI drift between the Python
+    /// pipeline and this crate is caught in either mode.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir)?;
+            return Self::load(&m);
+        }
+        Ok(Runtime::native())
+    }
+
+    pub fn load(_manifest: &Manifest) -> Result<Runtime> {
+        Ok(Runtime::native())
+    }
+
+    /// SELECT pushdown batch: `rows` is `BATCH x ROW_WORDS` f32
+    /// (row-major). Returns (mask, count). Predicate: `a > x && b < y`
+    /// with `a` = word 0, `b` = word 1 (paper §5.4).
+    pub fn select(&mut self, rows: &[f32], x: f32, y: f32) -> Result<(Vec<i32>, i32)> {
+        if rows.len() != BATCH * ROW_WORDS {
+            bail!("select: rows len {} != {}", rows.len(), BATCH * ROW_WORDS);
+        }
+        self.select_invocations += 1;
+        let mut mask = vec![0i32; BATCH];
+        let mut count = 0i32;
+        for (r, m) in mask.iter_mut().enumerate() {
+            let a = rows[r * ROW_WORDS];
+            let b = rows[r * ROW_WORDS + 1];
+            if a > x && b < y {
+                *m = 1;
+                count += 1;
+            }
+        }
+        Ok((mask, count))
+    }
+
+    /// Install a DFA for subsequent [`Runtime::regex_batch`] calls.
+    /// `tmat` is `256 x S x S` f32 one-hot transition matrices; `accept`
+    /// is `S` f32. The one-hot form is collapsed to a dense next-state
+    /// table once per install (the kernel pays the matrix products per
+    /// batch instead; same function, different hardware shape).
+    pub fn set_dfa(&mut self, tmat: &[f32], accept: &[f32]) -> Result<()> {
+        if tmat.len() != 256 * DFA_STATES * DFA_STATES || accept.len() != DFA_STATES {
+            bail!("regex: bad dfa tensor sizes");
+        }
+        let mut next = vec![0u16; 256 * DFA_STATES];
+        for c in 0..256 {
+            for s in 0..DFA_STATES {
+                let row = &tmat[c * DFA_STATES * DFA_STATES + s * DFA_STATES..];
+                // one-hot row: the set column is the successor; a
+                // malformed all-zero row degrades to a self-loop.
+                let mut succ = s as u16;
+                for (t, &v) in row[..DFA_STATES].iter().enumerate() {
+                    if v > 0.5 {
+                        succ = t as u16;
+                        break;
+                    }
+                }
+                next[c * DFA_STATES + s] = succ;
+            }
+        }
+        let accept = accept.iter().map(|&v| v > 0.5).collect();
+        self.dfa = Some(Dfa { next, accept });
+        Ok(())
+    }
+
+    /// Regex pushdown batch against the installed DFA: `chars` is
+    /// `BATCH x STR_LEN` i32 character codes. Returns (mask, count).
+    pub fn regex_batch(&mut self, chars: &[i32]) -> Result<(Vec<i32>, i32)> {
+        if chars.len() != BATCH * STR_LEN {
+            bail!("regex: chars len {} != {}", chars.len(), BATCH * STR_LEN);
+        }
+        let Some(dfa) = self.dfa.as_ref() else {
+            bail!("regex: no DFA installed (call set_dfa)");
+        };
+        self.regex_invocations += 1;
+        let mut mask = vec![0i32; BATCH];
+        let mut count = 0i32;
+        for (r, m) in mask.iter_mut().enumerate() {
+            let mut state = 0usize;
+            for &c in &chars[r * STR_LEN..(r + 1) * STR_LEN] {
+                let c = (c as u32 as usize) % 256;
+                state = dfa.next[c * DFA_STATES + state] as usize;
+            }
+            if dfa.accept[state] {
+                *m = 1;
+                count += 1;
+            }
+        }
+        Ok((mask, count))
+    }
+
+    /// One-shot convenience: install the DFA and run a single batch.
+    pub fn regex(
+        &mut self,
+        chars: &[i32],
+        tmat: &[f32],
+        accept: &[f32],
+    ) -> Result<(Vec<i32>, i32)> {
+        self.set_dfa(tmat, accept)?;
+        self.regex_batch(chars)
+    }
+
+    /// Hash batch: `keys` is `BATCH` i32; `bucket_mask` = nbuckets-1.
+    pub fn hash(&mut self, keys: &[i32], bucket_mask: i32) -> Result<Vec<i32>> {
+        if keys.len() != BATCH {
+            bail!("hash: keys len {} != {BATCH}", keys.len());
+        }
+        self.hash_invocations += 1;
+        Ok(keys.iter().map(|&k| hash_bucket_ref(k, bucket_mask)).collect())
+    }
+
+    pub fn invocations(&self) -> (u64, u64, u64) {
+        (self.select_invocations, self.regex_invocations, self.hash_invocations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_matches_scalar_reference() {
+        let mut rt = Runtime::native();
+        let mut rows = vec![0f32; BATCH * ROW_WORDS];
+        let mut s = 1u32;
+        for r in 0..BATCH {
+            for w in 0..2 {
+                s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+                rows[r * ROW_WORDS + w] = (s >> 8) as f32 / (1 << 16) as f32 - 128.0;
+            }
+        }
+        let (x, y) = (-20.0f32, 35.0f32);
+        let (mask, count) = rt.select(&rows, x, y).unwrap();
+        let mut want = 0;
+        for r in 0..BATCH {
+            let m = (rows[r * ROW_WORDS] > x && rows[r * ROW_WORDS + 1] < y) as i32;
+            assert_eq!(mask[r], m, "row {r}");
+            want += m;
+        }
+        assert_eq!(count, want);
+        assert!(count > 0 && count < BATCH as i32, "degenerate test data");
+    }
+
+    #[test]
+    fn regex_finds_planted_strings() {
+        let mut rt = Runtime::native();
+        // 2-state DFA for "contains byte 'z'": state 0 -'z'-> 1, state 1
+        // absorbing; every other state self-loops.
+        let mut tmat = vec![0f32; 256 * DFA_STATES * DFA_STATES];
+        let mut accept = vec![0f32; DFA_STATES];
+        accept[1] = 1.0;
+        for c in 0..256 {
+            let s0_next = if c == b'z' as usize { 1 } else { 0 };
+            tmat[c * DFA_STATES * DFA_STATES + s0_next] = 1.0;
+            for s in 1..DFA_STATES {
+                tmat[c * DFA_STATES * DFA_STATES + s * DFA_STATES + s] = 1.0;
+            }
+        }
+        let mut chars = vec![0i32; BATCH * STR_LEN];
+        for r in (0..BATCH).step_by(7) {
+            chars[r * STR_LEN + (r % STR_LEN)] = b'z' as i32;
+        }
+        let (mask, count) = rt.regex(&chars, &tmat, &accept).unwrap();
+        assert_eq!(count as usize, BATCH.div_ceil(7));
+        for r in 0..BATCH {
+            assert_eq!(mask[r], (r % 7 == 0) as i32, "row {r}");
+        }
+    }
+
+    #[test]
+    fn hash_matches_reference_function() {
+        let mut rt = Runtime::native();
+        let keys: Vec<i32> =
+            (0..BATCH as i32).map(|i| i.wrapping_mul(2654435761u32 as i32) ^ 77).collect();
+        let got = rt.hash(&keys, 1023).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(got[i], hash_bucket_ref(k, 1023), "key {k}");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let mut rt = Runtime::native();
+        assert!(rt.select(&[0.0; 3], 0.0, 0.0).is_err());
+        assert!(rt.regex_batch(&[0; 3]).is_err());
+        assert!(rt.hash(&[0; 3], 1023).is_err());
+    }
+}

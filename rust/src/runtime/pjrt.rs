@@ -6,14 +6,16 @@
 //! build time; this module compiles it on the PJRT CPU client at startup
 //! and executes it per batch.
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifacts::{Manifest, OpArtifact, BATCH, DFA_STATES, ROW_WORDS, STR_LEN};
+#[cfg(test)]
+use super::hash_bucket_ref;
 
 /// Build a shaped literal in ONE copy (PERF: `vec1().reshape()` copies the
 /// buffer twice; per-batch marshalling dominated the Rust-side operator
-/// throughput — see EXPERIMENTS.md §Perf).
+/// throughput — see DESIGN.md §Perf).
 fn literal_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
     debug_assert_eq!(dims.iter().product::<usize>(), data.len());
     let bytes = unsafe {
@@ -47,7 +49,7 @@ pub struct Runtime {
     hash: OpExe,
     /// Cached DFA tensors (PERF: the 1 MiB transition tensor is identical
     /// across every batch of a scan; building its Literal once per *scan*
-    /// instead of once per 4096-row *batch* — see EXPERIMENTS.md §Perf).
+    /// instead of once per 4096-row *batch* — see DESIGN.md §Perf).
     dfa_cache: Option<(Literal, Literal)>,
 }
 
@@ -149,15 +151,6 @@ impl Runtime {
     pub fn invocations(&self) -> (u64, u64, u64) {
         (self.select.invocations, self.regex.invocations, self.hash.invocations)
     }
-}
-
-/// Reference hash, bit-identical to the kernel (used by the KVS builder
-/// and the CPU baseline so both sides agree on bucket placement).
-#[inline]
-pub fn hash_bucket_ref(key: i32, bucket_mask: i32) -> i32 {
-    let h = key.wrapping_mul(-1640531527i32);
-    let h = h ^ ((h as u32) >> 16) as i32;
-    h & bucket_mask
 }
 
 #[cfg(test)]

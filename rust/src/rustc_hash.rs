@@ -1,0 +1,125 @@
+//! Vendored minimal `rustc_hash` shim (the offline registry has no
+//! third-party crates — same policy as [`crate::sim::rng`] and
+//! [`crate::ptest`]). Provides the Fx multiply-rotate hasher behind the
+//! usual `FxHashMap`/`FxHashSet` aliases; the keys hashed in this crate
+//! are small fixed-size types ([`crate::proto::messages::LineAddr`],
+//! [`crate::proto::messages::ReqId`], spec state tuples), exactly the
+//! regime Fx-style hashing is built for.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// A `HashMap` using [`FxHasher`].
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// A `HashSet` using [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+/// Fast non-cryptographic hasher: per-word multiply-rotate mixing.
+/// Deterministic (no per-process seed), which also keeps simulation
+/// iteration order stable run to run for a given map population order.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            // length in the top byte so "ab" and "ab\0" differ
+            tail[7] = rem.len() as u8;
+            self.mix(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.mix(v as u64);
+    }
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.mix(v as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.mix(v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.mix(v);
+    }
+    #[inline]
+    fn write_u128(&mut self, v: u128) {
+        self.mix(v as u64);
+        self.mix((v >> 64) as u64);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.mix(v as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_discriminating() {
+        let h = |bytes: &[u8]| {
+            let mut x = FxHasher::default();
+            x.write(bytes);
+            x.finish()
+        };
+        assert_eq!(h(b"hello"), h(b"hello"));
+        assert_ne!(h(b"hello"), h(b"hellp"));
+        assert_ne!(h(b"ab"), h(b"ab\0"));
+        assert_ne!(h(b""), h(b"\0"));
+    }
+
+    #[test]
+    fn map_and_set_work_with_crate_key_types() {
+        use crate::proto::messages::LineAddr;
+        let mut m: FxHashMap<LineAddr, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(LineAddr(i), i as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&LineAddr(77)), Some(&77));
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        s.insert(42);
+        assert!(s.contains(&42));
+    }
+
+    #[test]
+    fn u64_keys_spread_over_buckets() {
+        // sanity: sequential keys must not collapse to one hash
+        let mut seen = FxHashSet::default();
+        for i in 0..256u64 {
+            let mut x = FxHasher::default();
+            x.write_u64(i);
+            seen.insert(x.finish());
+        }
+        assert_eq!(seen.len(), 256);
+    }
+}

@@ -26,7 +26,7 @@
 //! * `-> error "text"` transitions report a violation and reset the line
 //!   to the start state.
 
-use rustc_hash::FxHashMap as HashMap;
+use crate::rustc_hash::FxHashMap as HashMap;
 
 use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind};
 use crate::sim::time::Time;

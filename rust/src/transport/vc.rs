@@ -173,7 +173,7 @@ impl Credits {
 
 /// Static arbitration order: VC groups by deadlock rank, highest first
 /// (PERF: building this per `arbitrate` call dominated the simulation's
-/// profile — 15% direct + most of the allocator time; see EXPERIMENTS.md
+/// profile — 15% direct + most of the allocator time; see DESIGN.md
 /// §Perf).
 const RANK_GROUPS: [&[usize]; 6] = [
     &[12, 13],          // Ipi, Barrier          (rank 5)

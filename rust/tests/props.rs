@@ -293,3 +293,105 @@ fn dissector_total_on_random_messages() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// dcs (sharded directory) properties
+// ---------------------------------------------------------------------------
+
+/// Slice-count transparency: for any interleaving of reads, writes and
+/// evictions, routing the identical message trace through a 1-slice and a
+/// 4-slice [`eci::dcs::Dcs`] yields identical per-line home->remote
+/// message sequences and identical final directory state. (A line maps to
+/// exactly one slice and all directory state is line-local, so sharding
+/// must be invisible to protocol semantics.)
+#[test]
+fn sliced_directory_is_equivalent_to_monolith_per_line() {
+    use eci::dcs::{Dcs, DcsConfig};
+
+    const LINES: u64 = 8;
+
+    #[derive(Clone, Debug)]
+    enum Act {
+        Read(u8),
+        Write(u8),
+        Evict(u8),
+    }
+
+    /// Run one trace against an N-slice dcs; return (per-line log of
+    /// home-emitted messages, final per-line directory state). Request
+    /// ids are deliberately excluded from the log: slice-local id
+    /// allocators may number home-initiated messages differently.
+    fn run(slices: usize, acts: &[Act]) -> (Vec<Vec<String>>, Vec<eci::proto::spec::HomeSt>) {
+        let spec = reference_transitions();
+        let mut remote = RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), 1 << 20);
+        let mut cache = Cache::new(16 * 1024, 4);
+        let mut dcs = Dcs::with_reference_rules(DcsConfig::new(slices));
+        let mut ram = MemStore::new(LineAddr(0), 64 * 128);
+        let mut log: Vec<Vec<String>> = vec![Vec::new(); LINES as usize];
+        for act in acts {
+            let (addr, write, evict) = match act {
+                Act::Read(a) => (LineAddr(*a as u64), false, false),
+                Act::Write(a) => (LineAddr(*a as u64), true, false),
+                Act::Evict(a) => (LineAddr(*a as u64), false, true),
+            };
+            let fx = if evict {
+                remote.evict(addr, &mut cache)
+            } else {
+                let (_, fx) = remote.local_access(addr, write, &mut cache);
+                fx
+            };
+            let mut to_home: Vec<Message> = fx
+                .into_iter()
+                .filter_map(|e| match e {
+                    RemoteEffect::Send(m) => Some(m),
+                    _ => None,
+                })
+                .collect();
+            while let Some(m) = to_home.pop() {
+                let rsps: Vec<Message> = dcs
+                    .on_message_sync(m, &mut ram)
+                    .into_iter()
+                    .filter_map(|e| match e {
+                        HomeEffect::Respond { msg, .. } => Some(msg),
+                        HomeEffect::Fwd { msg } => Some(msg),
+                        _ => None,
+                    })
+                    .collect();
+                for rsp in rsps {
+                    let line = rsp.addr.0 as usize % LINES as usize;
+                    log[line].push(format!(
+                        "{:?} payload={:?}",
+                        rsp.kind,
+                        rsp.payload.as_ref().map(|p| p[0])
+                    ));
+                    for e in remote.on_message(rsp, &mut cache) {
+                        if let RemoteEffect::Send(m2) = e {
+                            to_home.push(m2);
+                        }
+                    }
+                }
+            }
+        }
+        let states = (0..LINES).map(|l| dcs.state_of(LineAddr(l))).collect();
+        (log, states)
+    }
+
+    Prop::new("dcs slice-count transparency")
+        .cases(50)
+        .max_size(100)
+        .check_vec(
+            |g| {
+                let addr = g.below(LINES) as u8;
+                match g.below(3) {
+                    0 => Act::Read(addr),
+                    1 => Act::Write(addr),
+                    _ => Act::Evict(addr),
+                }
+            },
+            |acts| {
+                let (log1, st1) = run(1, acts);
+                let (log4, st4) = run(4, acts);
+                log1 == log4 && st1 == st4
+            },
+        );
+}
