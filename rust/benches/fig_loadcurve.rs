@@ -1,0 +1,29 @@
+//! Bench: open-loop latency vs offered load (workload subsystem) — the
+//! saturation knee per directory slice count under the multi-tenant
+//! scenario, with credit-accurate link admission. Custom harness
+//! (criterion is not available in the offline registry).
+
+use eci::harness::{fig_loadcurve, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_loadcurve::run(scale);
+    println!("{}", fig_loadcurve::render(&f).to_markdown());
+    println!("{}", fig_loadcurve::render_knees(&f).to_markdown());
+    let first = f.curves.first().expect("sweep is non-empty");
+    let best = f
+        .curves
+        .iter()
+        .max_by(|a, b| a.knee_per_s.total_cmp(&b.knee_per_s))
+        .expect("sweep is non-empty");
+    let growth = if first.knee_per_s > 0.0 { best.knee_per_s / first.knee_per_s } else { 0.0 };
+    println!(
+        "knee: {} slice(s) {:.1}M ops/s -> {} slices {:.1}M ops/s ({growth:.2}x)   (host {:?}, scale {scale:?})",
+        first.slices,
+        first.knee_per_s / 1e6,
+        best.slices,
+        best.knee_per_s / 1e6,
+        t0.elapsed()
+    );
+}

@@ -9,6 +9,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let t = table3::run(scale);
     println!("{}", table3::render(&t).to_markdown());
+    println!("{}", table3::render_sliced(&table3::run_sliced(scale)).to_markdown());
     println!("paper:    ECI 12.8 GiB/s / 320 ns   native 19 GiB/s / 150 ns");
     println!(
         "measured: ECI {:.1} GiB/s / {:.0} ns   native {:.1} GiB/s / {:.0} ns   (host {:?}, scale {scale:?})",

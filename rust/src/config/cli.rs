@@ -3,27 +3,40 @@
 //!
 //! ```text
 //! eci resources                  print Table 2 + subsetting ablation
-//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|all> [dcs flags]
+//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|all> [flags]
 //! eci check                      validate envelope + subsets, print report
 //! eci trace-demo                 run a traffic capture through the
 //!                                dissector and the online checker
 //! ```
 //! `ECI_SCALE={ci,default,paper}` controls workload sizes.
 //!
-//! The `dcs` bench (directory-slice throughput sweep) takes flags so
-//! slice counts and the load-generator mix can be swept from the command
-//! line:
+//! The `dcs` bench (closed-loop directory-slice throughput sweep) takes
+//! flags so slice counts and the load-generator mix can be swept from
+//! the command line:
 //!
 //! ```text
 //! eci bench dcs [--slices 1,2,4,8] [--clients 32] [--ops 20000]
 //!               [--mix 60:20:20] [--hops 4]
 //! ```
+//!
+//! The `workload` bench (open-loop, scenario-driven latency-vs-load
+//! sweep with credit-accurate link admission — `harness::fig_loadcurve`):
+//!
+//! ```text
+//! eci bench workload [--scenario uniform|hot-kvs|scan|chase|tenants]
+//!                    [--slices 1,2,4,8] [--rate 2e6,8e6,...]
+//!                    [--theta 0.99] [--classes hot-kvs:2,scan:1]
+//!                    [--ops 12000] [--arrivals poisson|fixed] [--cached]
+//! ```
 
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
-use crate::harness::{fig5, fig6, fig7, fig8, fig_throughput, table2, table3, Scale};
+use crate::harness::{
+    fig5, fig6, fig7, fig8, fig_loadcurve, fig_throughput, table2, table3, Scale,
+};
 use crate::proto::messages::CohOp;
 use crate::proto::subset::{validate_with_workload, Subset};
 use crate::runtime::Runtime;
+use crate::workload::{ArrivalKind, OpenLoopConfig, Scenario, TrafficClass};
 
 pub fn main_entry() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,9 +56,13 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|all]|check|trace-demo>\n\
-                 dcs flags: --slices 1,2,4,8 --clients 32 --ops 20000 --mix 60:20:20 --hops 4\n\
-                 env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})"
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|all]|check|trace-demo>\n\
+                 dcs flags:      --slices 1,2,4,8 --clients 32 --ops 20000 --mix 60:20:20 --hops 4\n\
+                 workload flags: --scenario {scenarios} --slices 1,2,4,8 --rate 2e6,8e6\n\
+                                 --theta 0.99 --classes hot-kvs:2,scan:1 --ops 12000\n\
+                                 --arrivals poisson|fixed --cached\n\
+                 env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})",
+                scenarios = Scenario::preset_names().join("|")
             );
         }
     }
@@ -76,24 +93,7 @@ impl DcsArgs {
                 .ok_or_else(|| format!("{flag} needs a value"))?;
             match flag.as_str() {
                 "--slices" => {
-                    out.slices = val
-                        .split(',')
-                        .map(|s| {
-                            s.trim()
-                                .parse::<usize>()
-                                .map_err(|_| format!("bad slice count {s:?}"))
-                                .and_then(|n| {
-                                    if n == 0 {
-                                        Err("slice count must be >= 1".into())
-                                    } else {
-                                        Ok(n)
-                                    }
-                                })
-                        })
-                        .collect::<Result<Vec<_>, _>>()?;
-                    if out.slices.is_empty() {
-                        return Err("--slices needs at least one value".into());
-                    }
+                    out.slices = parse_usize_list(val)?;
                 }
                 "--clients" => {
                     out.cfg.clients =
@@ -138,7 +138,172 @@ impl DcsArgs {
     }
 }
 
+/// Parsed `eci bench workload` flags: scenario shape + sweep axes.
+#[derive(Clone, Debug)]
+pub struct WorkloadArgs {
+    pub slices: Vec<usize>,
+    pub scenario: String,
+    pub theta: f64,
+    /// `--classes name:weight,...` overrides the named scenario.
+    pub classes: Option<Vec<(String, u32)>>,
+    /// Explicit offered-rate grid (ops/s); default derives from the
+    /// slice-pipeline capacity.
+    pub rates: Option<Vec<f64>>,
+    pub cfg: OpenLoopConfig,
+}
+
+impl WorkloadArgs {
+    pub fn defaults(scale: Scale) -> WorkloadArgs {
+        WorkloadArgs {
+            slices: fig_loadcurve::SLICE_SWEEP.to_vec(),
+            scenario: "tenants".into(),
+            theta: 0.99,
+            classes: None,
+            rates: None,
+            cfg: OpenLoopConfig { ops: fig_loadcurve::ops_for(scale), ..Default::default() },
+        }
+    }
+
+    /// Parse `--flag value` pairs (`--cached` is a bare flag); unknown
+    /// flags are errors.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<WorkloadArgs, String> {
+        let mut out = WorkloadArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            if flag == "--cached" {
+                out.cfg.cached = true;
+                continue;
+            }
+            let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--scenario" => {
+                    if !Scenario::preset_names().contains(&val.as_str()) {
+                        return Err(format!(
+                            "unknown scenario {val:?} (have: {})",
+                            Scenario::preset_names().join(", ")
+                        ));
+                    }
+                    out.scenario = val.clone();
+                }
+                "--slices" => {
+                    out.slices = parse_usize_list(val)?;
+                }
+                "--rate" => {
+                    let rates = val
+                        .split(',')
+                        .map(|s| {
+                            s.trim()
+                                .parse::<f64>()
+                                .map_err(|_| format!("bad rate {s:?}"))
+                                .and_then(|r| {
+                                    if r > 0.0 && r.is_finite() {
+                                        Ok(r)
+                                    } else {
+                                        Err(format!("rate must be positive, got {s:?}"))
+                                    }
+                                })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if rates.is_empty() {
+                        return Err("--rate needs at least one value".into());
+                    }
+                    out.rates = Some(rates);
+                }
+                "--theta" => {
+                    let t: f64 = val.parse().map_err(|_| format!("bad theta {val:?}"))?;
+                    if !(t >= 0.0 && t.is_finite()) {
+                        return Err(format!("theta must be >= 0, got {val:?}"));
+                    }
+                    out.theta = t;
+                }
+                "--classes" => {
+                    let mut classes = Vec::new();
+                    for part in val.split(',') {
+                        let part = part.trim();
+                        let (name, w) = match part.split_once(':') {
+                            Some((n, w)) => (
+                                n.to_string(),
+                                w.parse::<u32>().map_err(|_| format!("bad class weight {part:?}"))?,
+                            ),
+                            None => (part.to_string(), 1),
+                        };
+                        if w == 0 {
+                            return Err(format!("class weight must be >= 1 in {part:?}"));
+                        }
+                        classes.push((name, w));
+                    }
+                    if classes.is_empty() {
+                        return Err("--classes needs at least one class".into());
+                    }
+                    out.classes = Some(classes);
+                }
+                "--ops" => {
+                    out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
+                }
+                "--arrivals" => {
+                    out.cfg.arrivals = ArrivalKind::parse(val)
+                        .ok_or_else(|| format!("bad arrival process {val:?}"))?;
+                }
+                other => return Err(format!("unknown workload flag {other:?}")),
+            }
+        }
+        if out.cfg.ops == 0 {
+            return Err("--ops must be >= 1".into());
+        }
+        Ok(out)
+    }
+
+    /// Materialize the scenario this invocation describes.
+    pub fn scenario(&self, scale: Scale) -> Result<Scenario, String> {
+        let base = fig_loadcurve::footprint_for(scale);
+        match &self.classes {
+            None => Scenario::preset(&self.scenario, base, self.theta)
+                .ok_or_else(|| format!("unknown scenario {:?}", self.scenario)),
+            Some(specs) => {
+                let mut classes = Vec::new();
+                for (name, w) in specs {
+                    let c = TrafficClass::by_name(name, base, self.theta)
+                        .ok_or_else(|| format!("unknown traffic class {name:?}"))?;
+                    classes.push(c.with_weight(*w));
+                }
+                Ok(Scenario::new("custom", classes))
+            }
+        }
+    }
+
+    /// The offered-rate grid to sweep.
+    pub fn rates(&self) -> Vec<f64> {
+        match &self.rates {
+            Some(r) => r.clone(),
+            None => fig_loadcurve::default_rates(self.cfg.machine.home_proc),
+        }
+    }
+}
+
+fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
+    let xs = val
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad count {s:?}"))
+                .and_then(|n| if n == 0 { Err("count must be >= 1".into()) } else { Ok(n) })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    if xs.is_empty() {
+        return Err("need at least one value".into());
+    }
+    Ok(xs)
+}
+
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
+    const KNOWN: [&str; 8] =
+        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "all"];
+    if !KNOWN.contains(&which) {
+        // a typo must fail loudly, not green-wash a CI smoke step
+        eprintln!("eci bench: unknown bench {which:?} (have: {})", KNOWN.join(", "));
+        std::process::exit(2);
+    }
     let needs_rt = matches!(which, "fig5" | "fig6" | "fig7" | "all");
     let mut rt = if needs_rt {
         Some(Runtime::load_default().expect("artifacts missing — run `make artifacts`"))
@@ -147,6 +312,7 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
     };
     if matches!(which, "table3" | "all") {
         println!("{}", table3::render(&table3::run(scale)).to_markdown());
+        println!("{}", table3::render_sliced(&table3::run_sliced(scale)).to_markdown());
     }
     if matches!(which, "fig5" | "all") {
         let f = fig5::run(rt.as_mut().unwrap(), scale).expect("fig5");
@@ -164,6 +330,7 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         println!("{}", fig8::render(&fig8::run(scale)).to_markdown());
     }
     if matches!(which, "dcs" | "all") {
+        let rest = if which == "dcs" { rest } else { &[] };
         let a = match DcsArgs::parse(scale, rest) {
             Ok(a) => a,
             Err(e) => {
@@ -173,6 +340,26 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         };
         let f = fig_throughput::run_with(a.cfg, &a.slices);
         println!("{}", fig_throughput::render(&f).to_markdown());
+    }
+    if matches!(which, "workload" | "all") {
+        let rest = if which == "workload" { rest } else { &[] };
+        let a = match WorkloadArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench workload: {e}");
+                std::process::exit(2);
+            }
+        };
+        let scenario = match a.scenario(scale) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("eci bench workload: {e}");
+                std::process::exit(2);
+            }
+        };
+        let f = fig_loadcurve::run_custom(a.cfg, &scenario, &a.slices, &a.rates());
+        println!("{}", fig_loadcurve::render(&f).to_markdown());
+        println!("{}", fig_loadcurve::render_knees(&f).to_markdown());
     }
 }
 
@@ -253,6 +440,69 @@ mod tests {
     fn empty_args_give_defaults() {
         let a = DcsArgs::parse(Scale::Ci, &[]).unwrap();
         assert_eq!(a, DcsArgs::defaults(Scale::Ci));
+    }
+
+    #[test]
+    fn workload_defaults_track_scale() {
+        let a = WorkloadArgs::defaults(Scale::Ci);
+        assert_eq!(a.cfg.ops, fig_loadcurve::ops_for(Scale::Ci));
+        assert_eq!(a.slices, vec![1, 2, 4, 8]);
+        assert_eq!(a.scenario, "tenants");
+        assert!(!a.cfg.cached);
+        assert!(!a.rates().is_empty(), "a default rate grid must exist");
+        assert!(a.scenario(Scale::Ci).is_ok());
+    }
+
+    #[test]
+    fn workload_parses_full_flag_set() {
+        let a = WorkloadArgs::parse(
+            Scale::Default,
+            &s(&[
+                "--scenario", "hot-kvs",
+                "--slices", "1,4",
+                "--rate", "2e6,8e6",
+                "--theta", "1.2",
+                "--ops", "5000",
+                "--arrivals", "fixed",
+                "--cached",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(a.scenario, "hot-kvs");
+        assert_eq!(a.slices, vec![1, 4]);
+        assert_eq!(a.rates(), vec![2e6, 8e6]);
+        assert_eq!(a.theta, 1.2);
+        assert_eq!(a.cfg.ops, 5_000);
+        assert_eq!(a.cfg.arrivals, crate::workload::ArrivalKind::Deterministic);
+        assert!(a.cfg.cached);
+    }
+
+    #[test]
+    fn workload_classes_compose_a_custom_scenario() {
+        let a = WorkloadArgs::parse(Scale::Ci, &s(&["--classes", "hot-kvs:2,scan"])).unwrap();
+        let sc = a.scenario(Scale::Ci).unwrap();
+        assert_eq!(sc.name, "custom");
+        assert_eq!(sc.classes.len(), 2);
+        assert_eq!(sc.classes[0].rate_weight, 2);
+        assert_eq!(sc.classes[1].rate_weight, 1);
+    }
+
+    #[test]
+    fn workload_rejects_malformed_input() {
+        let bad = |xs: &[&str]| WorkloadArgs::parse(Scale::Ci, &s(xs)).is_err();
+        assert!(bad(&["--scenario", "nope"]), "unknown scenario");
+        assert!(bad(&["--slices", "0"]), "zero slices");
+        assert!(bad(&["--rate", "-1"]), "negative rate");
+        assert!(bad(&["--rate", "x"]), "non-numeric rate");
+        assert!(bad(&["--theta", "-0.5"]), "negative theta");
+        assert!(bad(&["--classes", "scan:0"]), "zero weight");
+        assert!(bad(&["--ops", "0"]), "zero ops");
+        assert!(bad(&["--arrivals", "sometimes"]), "bad arrival kind");
+        assert!(bad(&["--wat", "1"]), "unknown flag");
+        assert!(bad(&["--rate"]), "missing value");
+        // an unknown class name parses but fails at scenario build time
+        let a = WorkloadArgs::parse(Scale::Ci, &s(&["--classes", "wat:1"])).unwrap();
+        assert!(a.scenario(Scale::Ci).is_err());
     }
 
     #[test]

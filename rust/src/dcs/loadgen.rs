@@ -52,8 +52,15 @@ impl Default for MixConfig {
 }
 
 impl MixConfig {
-    fn total(&self) -> u32 {
+    /// Sum of the mix weights (the denominator for drawing an op kind;
+    /// also used by the `workload` subsystem's per-class samplers).
+    pub fn total(&self) -> u32 {
         self.reads + self.writes + self.chases
+    }
+
+    /// A read-only mix (scan-style traffic).
+    pub fn read_only() -> MixConfig {
+        MixConfig { reads: 100, writes: 0, chases: 0, chase_hops: 1 }
     }
 }
 
@@ -111,6 +118,10 @@ impl LoadReport {
     }
     pub fn p99_ns(&self) -> f64 {
         self.lat.p99() as f64 / 1000.0
+    }
+    /// Deep tail — the headline number of open-loop runs.
+    pub fn p999_ns(&self) -> f64 {
+        self.lat.p999() as f64 / 1000.0
     }
 }
 
@@ -398,7 +409,7 @@ impl LoadGen {
                     self.eng.schedule_at(t, Ev::Poll(s as u32));
                     break;
                 }
-                Some(SliceService::Done(ready, fx)) => self.handle_effects(ready, fx),
+                Some(SliceService::Done(ready, _, fx)) => self.handle_effects(ready, fx),
             }
         }
     }
@@ -476,6 +487,7 @@ mod tests {
         assert!(r.ops_per_s > 0.0);
         assert!(r.sim_time > Time(0));
         assert!(r.p99_ns() >= r.p50_ns());
+        assert!(r.p999_ns() >= r.p99_ns());
         assert_eq!(r.per_slice_served.len(), 2);
         // both parities are exercised by random addresses
         assert!(r.per_slice_served.iter().all(|&s| s > 0), "{:?}", r.per_slice_served);

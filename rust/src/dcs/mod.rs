@@ -22,8 +22,12 @@
 //! line-local (see [`HomeAgent`]); the property test in
 //! `rust/tests/props.rs` pins this 1-slice ≡ N-slice equivalence on
 //! randomized traces. The closed-loop load generator that drives the
-//! slices at saturation lives in [`loadgen`]; the slice-count sweep
-//! harness is `harness::fig_throughput`.
+//! slices at saturation lives in [`loadgen`]; the open-loop,
+//! scenario-driven generator (rate-controlled arrivals, Zipf hot spots,
+//! link-framed admission via [`Dcs::enqueue_frame`]) is
+//! [`crate::workload`]. The slice-count sweep harnesses are
+//! `harness::fig_throughput` (sustained) and `harness::fig_loadcurve`
+//! (latency vs offered load).
 
 pub mod loadgen;
 
@@ -37,7 +41,8 @@ use crate::proto::states::Node;
 use crate::proto::transitions::reference_transitions;
 use crate::sim::stats::{Counters, Histogram};
 use crate::sim::time::{Duration, Time};
-use crate::transport::vc::{vc_for, Credits, VcMux, NUM_VCS};
+use crate::transport::link::Frame;
+use crate::transport::vc::{vc_for, Credits, VcId, VcMux, NUM_VCS};
 
 /// Configuration of the sliced directory controller.
 #[derive(Clone, Copy, Debug)]
@@ -66,6 +71,10 @@ impl DcsConfig {
 pub struct SliceStats {
     /// Messages serviced.
     pub served: u64,
+    /// Messages routed to this slice's ingress (hot-spot accounting:
+    /// under skewed line popularity, arrivals concentrate here before
+    /// service does).
+    pub enqueued: u64,
     /// Queue wait per message (arrival -> service start), picoseconds.
     pub wait: Histogram,
     /// Total pipeline-busy time.
@@ -76,7 +85,13 @@ pub struct SliceStats {
 
 impl SliceStats {
     fn new() -> SliceStats {
-        SliceStats { served: 0, wait: Histogram::new(), busy: Duration::ZERO, max_queue: 0 }
+        SliceStats {
+            served: 0,
+            enqueued: 0,
+            wait: Histogram::new(),
+            busy: Duration::ZERO,
+            max_queue: 0,
+        }
     }
 
     /// Fraction of `total` this slice's pipeline was busy.
@@ -107,8 +122,10 @@ struct Slice {
 pub enum SliceService {
     /// The slice pipeline is occupied until `t`; poll again then.
     Busy(Time),
-    /// One message was serviced; its effects are ready at `t`.
-    Done(Time, Vec<HomeEffect>),
+    /// One message was serviced; its effects are ready at `t`. The
+    /// serviced VC is reported so a link-framed ingress can return the
+    /// frame's credit when the slice frees the buffer slot.
+    Done(Time, VcId, Vec<HomeEffect>),
 }
 
 /// The sharded directory controller.
@@ -169,7 +186,22 @@ impl Dcs {
         let vc = vc_for(&msg);
         slice.arrivals[vc.0 as usize].push_back(now);
         slice.mux.enqueue(msg);
+        slice.stats.enqueued += 1;
         slice.stats.max_queue = slice.stats.max_queue.max(slice.mux.pending());
+    }
+
+    /// Link-framed ingress: unwrap one in-sequence [`Frame`] (as handed
+    /// back by [`crate::transport::FramedIngress::deliver`]) onto its
+    /// owning slice's VC FIFO. Returns the slice index so the host can
+    /// pump that slice — and, when the slice later reports
+    /// [`SliceService::Done`], return the frame's credit on the serviced
+    /// VC.
+    pub fn enqueue_frame(&mut self, now: Time, frame: Frame) -> usize {
+        debug_assert_eq!(frame.vc, vc_for(&frame.msg), "frame VC must match its message class");
+        debug_assert!(frame.intact, "corrupt frames are dropped by the transaction layer");
+        let s = self.slice_of(frame.msg.addr);
+        self.enqueue(now, frame.msg);
+        s
     }
 
     /// Attempt to service one queued message on slice `s` at `now`.
@@ -201,7 +233,7 @@ impl Dcs {
         slice.stats.busy += proc;
         slice.stats.served += 1;
         let fx = slice.home.on_message(msg, ram);
-        Some(SliceService::Done(done, fx))
+        Some(SliceService::Done(done, vc, fx))
     }
 
     /// Total queued messages across slices.
@@ -249,6 +281,24 @@ impl Dcs {
         &self.slices[s].stats
     }
 
+    /// Messages serviced per slice.
+    pub fn per_slice_served(&self) -> Vec<u64> {
+        self.slices.iter().map(|s| s.stats.served).collect()
+    }
+
+    /// Hot-spot skew of serviced load: max over mean of per-slice served
+    /// counts. 1.0 = perfectly balanced; a Zipf-skewed workload whose
+    /// hottest lines land on one slice pushes this well above 1.
+    pub fn served_skew(&self) -> f64 {
+        skew_of(self.slices.iter().map(|s| s.stats.served as f64))
+    }
+
+    /// Hot-spot skew of pipeline occupancy over `total` simulated time
+    /// (max slice occupancy over mean slice occupancy).
+    pub fn occupancy_skew(&self, total: Time) -> f64 {
+        skew_of(self.slices.iter().map(|s| s.stats.occupancy(total)))
+    }
+
     /// Merged per-slice home-agent counters, a `slices_served` total,
     /// and named `slice<N>_served` counts for the first 8 slices
     /// (counter keys are `&'static str`; beyond 8, per-slice detail is
@@ -277,6 +327,21 @@ impl Dcs {
         }
         c
     }
+}
+
+/// Max-over-mean of a load vector (1.0 = balanced; degenerate inputs —
+/// one slice, or no load at all — report 1.0 rather than NaN).
+fn skew_of(loads: impl Iterator<Item = f64>) -> f64 {
+    let xs: Vec<f64> = loads.collect();
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    let max = xs.iter().cloned().fold(0.0f64, f64::max);
+    max / mean
 }
 
 #[cfg(test)]
@@ -316,9 +381,10 @@ mod tests {
         dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
         dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(4)));
         // first service completes at proc
-        let Some(SliceService::Done(t1, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t1, vc1, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
             panic!("expected service");
         };
+        assert_eq!(vc1, VcId(0), "even request rides the even Req VC");
         assert_eq!(t1, Time(0) + proc);
         assert_eq!(fx.len(), 1);
         // pipeline busy: second attempt reports busy-until
@@ -327,7 +393,7 @@ mod tests {
         };
         assert_eq!(t, t1);
         // at t1 the second message goes through
-        let Some(SliceService::Done(t2, _)) = dcs.service_one(0, t1, &mut ram) else {
+        let Some(SliceService::Done(t2, _, _)) = dcs.service_one(0, t1, &mut ram) else {
             panic!("expected service");
         };
         assert_eq!(t2, t1 + proc);
@@ -342,10 +408,10 @@ mod tests {
         // even line -> slice 0, odd line -> slice 1
         dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
         dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(3)));
-        let Some(SliceService::Done(t0, _)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t0, _, _)) = dcs.service_one(0, Time(0), &mut ram) else {
             panic!()
         };
-        let Some(SliceService::Done(t1, _)) = dcs.service_one(1, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t1, _, _)) = dcs.service_one(1, Time(0), &mut ram) else {
             panic!()
         };
         // both complete after ONE service latency: true slice parallelism
@@ -377,14 +443,54 @@ mod tests {
                 Box::new([7u8; 128]),
             ),
         );
-        let Some(SliceService::Done(_, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(_, vc, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
             panic!()
         };
+        assert_eq!(vc, VcId(8), "writeback class, even parity");
         assert!(
             fx.iter().any(|e| matches!(e, HomeEffect::RamWrite { addr } if *addr == LineAddr(4))),
             "writeback must be arbitrated first: {fx:?}"
         );
         assert_eq!(ram.read_line(LineAddr(4))[0], 7, "writeback data must reach RAM");
+    }
+
+    #[test]
+    fn framed_ingress_routes_to_owning_slice_and_tracks_hotspots() {
+        let (mut dcs, mut ram) = mk(2);
+        // 3 even-line requests, 1 odd: slice 0 is the hot spot
+        for (i, addr) in [0u64, 2, 4, 1].iter().enumerate() {
+            let m = Message::coh_req(
+                ReqId(i as u32),
+                Node::Remote,
+                CohOp::ReadShared,
+                LineAddr(*addr),
+            );
+            let f = Frame::new(i as u64, m);
+            let s = dcs.enqueue_frame(Time(0), f);
+            assert_eq!(s, (*addr % 2) as usize);
+        }
+        assert_eq!(dcs.slice_stats(0).enqueued, 3);
+        assert_eq!(dcs.slice_stats(1).enqueued, 1);
+        let mut t = Time(0);
+        while let Some(sv) = dcs.service_one(0, t, &mut ram) {
+            match sv {
+                SliceService::Busy(at) => t = at,
+                SliceService::Done(..) => {}
+            }
+        }
+        assert!(dcs.service_one(1, t, &mut ram).is_some());
+        assert_eq!(dcs.per_slice_served(), vec![3, 1]);
+        // max/mean = 3/2
+        assert!((dcs.served_skew() - 1.5).abs() < 1e-9, "skew {}", dcs.served_skew());
+        assert!(dcs.occupancy_skew(t) > 1.0);
+    }
+
+    #[test]
+    fn skew_is_one_for_balanced_or_degenerate_loads() {
+        let (dcs, _) = mk(1);
+        assert_eq!(dcs.served_skew(), 1.0, "single slice is balanced by definition");
+        let (dcs, _) = mk(4);
+        assert_eq!(dcs.served_skew(), 1.0, "no load yet -> no skew");
     }
 
     #[test]

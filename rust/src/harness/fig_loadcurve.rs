@@ -1,0 +1,300 @@
+//! Latency vs offered load: the open-loop hockey stick, per slice count.
+//!
+//! The closed-loop `fig_throughput` measures *sustained* throughput —
+//! it can never overload the directory. This driver sweeps an open-loop
+//! offered rate (`workload::openloop`) across directory slice counts
+//! and reports the latency distribution (p50/p99/p999) at every point,
+//! plus the **knee**: the highest offered rate the configuration still
+//! sustains (delivered ≥ 85% of offered). Shape criterion: the knee
+//! grows with the slice count while the slice pipeline is the
+//! bottleneck, and under Zipf-skewed popularity the per-slice load skew
+//! exceeds the uniform baseline — both asserted at CI scale below.
+//!
+//! The rate grid is geometric around the one-slice service capacity of
+//! the streaming `scan` workload (one request + one release per
+//! operation, [`base_rate`]), so the same grid shows 1-slice saturation
+//! near multiplier 1.0 and leaves headroom for larger slice counts.
+
+use crate::sim::time::Duration;
+use crate::workload::openloop::{self, OpenLoopConfig};
+use crate::workload::scenario::Scenario;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+
+/// Slice counts swept by default (the same sweep as `fig_throughput`,
+/// so closed- and open-loop results line up point for point).
+pub use super::fig_throughput::SLICE_SWEEP;
+
+/// Offered-rate multipliers relative to [`base_rate`].
+pub const RATE_MULTIPLIERS: [f64; 8] = [0.08, 0.16, 0.33, 0.66, 1.0, 1.6, 2.9, 5.2];
+
+/// A point is "sustained" when delivered ≥ this fraction of offered.
+pub const SUSTAINED_FRACTION: f64 = 0.85;
+
+/// Arrivals per sweep point at each scale.
+pub fn ops_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 2_500,
+        Scale::Default => 12_000,
+        Scale::Paper => 60_000,
+    }
+}
+
+/// Scenario footprint sizing (base lines handed to [`Scenario::preset`]).
+pub fn footprint_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 1 << 12,
+        Scale::Default => 1 << 14,
+        Scale::Paper => 1 << 16,
+    }
+}
+
+/// Estimated one-slice *operation* capacity of the streaming scan
+/// workload: each op costs ~2 slice messages (request + voluntary
+/// release), so capacity ≈ 1 / (2 × slice_proc).
+pub fn base_rate(slice_proc: Duration) -> f64 {
+    0.5 / slice_proc.as_secs()
+}
+
+/// The default offered-rate grid for a machine's slice pipeline.
+pub fn default_rates(slice_proc: Duration) -> Vec<f64> {
+    let base = base_rate(slice_proc);
+    RATE_MULTIPLIERS.iter().map(|m| m * base).collect()
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadCurvePoint {
+    pub offered_per_s: f64,
+    pub delivered_per_s: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    pub credit_stalls: u64,
+    pub peak_tx_queue: usize,
+    pub served_skew: f64,
+}
+
+impl LoadCurvePoint {
+    pub fn sustained(&self) -> bool {
+        self.delivered_per_s >= SUSTAINED_FRACTION * self.offered_per_s
+    }
+}
+
+/// One latency-vs-load curve (fixed slice count, swept rate).
+#[derive(Clone, Debug)]
+pub struct LoadCurve {
+    pub slices: usize,
+    pub points: Vec<LoadCurvePoint>,
+    /// Saturation rate: the highest sustained offered rate.
+    pub knee_per_s: f64,
+}
+
+pub struct FigLoadCurve {
+    pub scenario: String,
+    pub curves: Vec<LoadCurve>,
+}
+
+/// One sweep point: `scenario` at `rate` ops/s against `slices` slices.
+pub fn run_point(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    rate: f64,
+) -> LoadCurvePoint {
+    let cfg = OpenLoopConfig { rate_per_s: rate, ..cfg };
+    let r = openloop::run(cfg, scenario, slices);
+    LoadCurvePoint {
+        offered_per_s: r.offered_per_s,
+        delivered_per_s: r.delivered_per_s,
+        p50_ns: r.p50_ns(),
+        p99_ns: r.p99_ns(),
+        p999_ns: r.p999_ns(),
+        credit_stalls: r.credit_stalls,
+        peak_tx_queue: r.peak_tx_queue,
+        served_skew: r.served_skew,
+    }
+}
+
+/// Knee of a rate-sorted curve: the highest sustained offered rate, or
+/// 0.0 when even the lowest swept rate overloads the configuration (a
+/// rate that was never sustained must not be reported as a knee).
+pub fn knee_of(points: &[LoadCurvePoint]) -> f64 {
+    let best = points
+        .iter()
+        .filter(|p| p.sustained())
+        .map(|p| p.offered_per_s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if best.is_finite() {
+        best
+    } else {
+        0.0
+    }
+}
+
+/// Sweep one slice count over the rate grid.
+pub fn run_curve(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    rates: &[f64],
+) -> LoadCurve {
+    let points: Vec<LoadCurvePoint> =
+        rates.iter().map(|&r| run_point(cfg, scenario, slices, r)).collect();
+    let knee_per_s = knee_of(&points);
+    LoadCurve { slices, points, knee_per_s }
+}
+
+/// Full figure: every slice count over the same scenario and rate grid.
+pub fn run_custom(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: &[usize],
+    rates: &[f64],
+) -> FigLoadCurve {
+    FigLoadCurve {
+        scenario: scenario.name.clone(),
+        curves: slices.iter().map(|&n| run_curve(cfg, scenario, n, rates)).collect(),
+    }
+}
+
+/// The default figure: the multi-tenant scenario (θ=0.99 hot tenant),
+/// slice counts 1/2/4/8, rate grid around 1-slice capacity.
+pub fn run(scale: Scale) -> FigLoadCurve {
+    let cfg = OpenLoopConfig { ops: ops_for(scale), ..Default::default() };
+    let scenario =
+        Scenario::preset("tenants", footprint_for(scale), 0.99).expect("tenants preset");
+    let rates = default_rates(cfg.machine.home_proc);
+    run_custom(cfg, &scenario, &SLICE_SWEEP, &rates)
+}
+
+pub fn render(f: &FigLoadCurve) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!("Latency vs offered load, scenario `{}` (open loop, framed admission)", f.scenario),
+        &[
+            "slices",
+            "offered/s",
+            "delivered/s",
+            "p50 ns",
+            "p99 ns",
+            "p999 ns",
+            "credit stalls",
+            "peak txq",
+            "skew",
+            "sustained",
+        ],
+    );
+    for c in &f.curves {
+        for p in &c.points {
+            t.row(vec![
+                c.slices.to_string(),
+                fmt_rate(p.offered_per_s),
+                fmt_rate(p.delivered_per_s),
+                format!("{:.0}", p.p50_ns),
+                format!("{:.0}", p.p99_ns),
+                format!("{:.0}", p.p999_ns),
+                p.credit_stalls.to_string(),
+                p.peak_tx_queue.to_string(),
+                format!("{:.2}", p.served_skew),
+                if p.sustained() { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Knee summary: saturation rate per slice count.
+pub fn render_knees(f: &FigLoadCurve) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!("Saturation knee vs slice count, scenario `{}`", f.scenario),
+        &["slices", "knee (sustained ops/s)"],
+    );
+    for c in &f.curves {
+        let knee = if c.knee_per_s > 0.0 {
+            fmt_rate(c.knee_per_s)
+        } else {
+            "none sustained".into()
+        };
+        t.row(vec![c.slices.to_string(), knee]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcs::loadgen::MixConfig;
+    use crate::workload::scenario::{Popularity, TrafficClass};
+
+    /// Acceptance: the saturation knee must grow with the slice count
+    /// (CI scale, streaming scan traffic — 2 directory messages/op).
+    #[test]
+    fn knee_grows_with_slice_count() {
+        let cfg = OpenLoopConfig { ops: ops_for(Scale::Ci), ..Default::default() };
+        let scenario = Scenario::preset("scan", footprint_for(Scale::Ci), 0.99).unwrap();
+        let rates = default_rates(cfg.machine.home_proc);
+        let f = run_custom(cfg, &scenario, &[1, 4], &rates);
+        let k1 = f.curves[0].knee_per_s;
+        let k4 = f.curves[1].knee_per_s;
+        // the 1-slice curve must actually saturate inside the sweep ...
+        let top = rates.last().copied().unwrap();
+        assert!(k1 < top * 0.99, "1-slice knee {k1} never saturated (top {top})");
+        // ... and 4 slices must push the knee substantially further out
+        assert!(k4 >= 1.5 * k1, "knee did not grow with slices: 1 -> {k1}, 4 -> {k4}");
+        // curve sanity: lowest rate is sustained, tails are ordered
+        for c in &f.curves {
+            assert!(c.points[0].sustained(), "lowest rate must be sustained");
+            for p in &c.points {
+                assert!(p.p999_ns >= p.p99_ns && p.p99_ns >= p.p50_ns);
+            }
+        }
+        // overload points must show credit backpressure, not silence
+        let worst = f.curves[0].points.last().unwrap();
+        assert!(!worst.sustained());
+        assert!(worst.credit_stalls > 0 && worst.peak_tx_queue > 100);
+    }
+
+    /// Acceptance: Zipf θ=0.99 popularity must load directory slices
+    /// measurably less evenly than uniform popularity (CI scale).
+    #[test]
+    fn zipf_hotspot_skew_beats_uniform() {
+        let probe = |popularity| {
+            let cls = TrafficClass {
+                name: "probe".into(),
+                rate_weight: 1,
+                mix: MixConfig::read_only(),
+                footprint_lines: 1 << 12,
+                popularity,
+            };
+            let cfg = OpenLoopConfig { rate_per_s: 3e6, ops: 4_000, ..Default::default() };
+            openloop::run(cfg, &Scenario::new("skew-probe", vec![cls]), 4)
+        };
+        let uni = probe(Popularity::Uniform);
+        let zipf = probe(Popularity::Zipf { theta: 0.99 });
+        assert!(uni.served_skew < 1.12, "uniform skew unexpectedly high: {}", uni.served_skew);
+        assert!(
+            zipf.served_skew > 1.15,
+            "zipf 0.99 skew too low to matter: {}",
+            zipf.served_skew
+        );
+        assert!(
+            zipf.served_skew > uni.served_skew * 1.1,
+            "zipf {} vs uniform {}",
+            zipf.served_skew,
+            uni.served_skew
+        );
+        // occupancy skew tells the same hot-spot story
+        assert!(zipf.occupancy_skew > uni.occupancy_skew);
+    }
+
+    #[test]
+    fn render_has_one_row_per_point_and_a_knee_per_curve() {
+        let cfg = OpenLoopConfig { ops: 400, ..Default::default() };
+        let scenario = Scenario::preset("scan", 1 << 10, 0.99).unwrap();
+        let f = run_custom(cfg, &scenario, &[1, 2], &[2e6, 8e6]);
+        let t = render(&f);
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.to_markdown().contains("p999 ns"));
+        let k = render_knees(&f);
+        assert_eq!(k.rows.len(), 2);
+    }
+}

@@ -24,6 +24,7 @@ pub struct ThroughputPoint {
     pub ops_per_s: f64,
     pub p50_ns: f64,
     pub p99_ns: f64,
+    pub p999_ns: f64,
     /// Mean slice-pipeline occupancy (0..1).
     pub occupancy: f64,
     pub per_slice_served: Vec<u64>,
@@ -59,6 +60,7 @@ pub fn run_point(cfg: LoadGenConfig, slices: usize) -> ThroughputPoint {
         ops_per_s: r.ops_per_s,
         p50_ns: r.p50_ns(),
         p99_ns: r.p99_ns(),
+        p999_ns: r.p999_ns(),
         occupancy,
         per_slice_served: r.per_slice_served,
     }
@@ -85,7 +87,7 @@ pub fn render(f: &FigThroughput) -> ResultTable {
             "Directory throughput vs slice count ({} clients, mix r:w:c = {}:{}:{}, {} hops)",
             f.cfg.clients, mix.reads, mix.writes, mix.chases, mix.chase_hops
         ),
-        &["slices", "ops/s", "p50 ns", "p99 ns", "occupancy", "per-slice served"],
+        &["slices", "ops/s", "p50 ns", "p99 ns", "p999 ns", "occupancy", "per-slice served"],
     );
     for p in &f.points {
         t.row(vec![
@@ -93,6 +95,7 @@ pub fn render(f: &FigThroughput) -> ResultTable {
             fmt_rate(p.ops_per_s),
             format!("{:.0}", p.p50_ns),
             format!("{:.0}", p.p99_ns),
+            format!("{:.0}", p.p999_ns),
             format!("{:.2}", p.occupancy),
             format!("{:?}", p.per_slice_served),
         ]);

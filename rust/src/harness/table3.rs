@@ -5,6 +5,13 @@
 //! criterion: native wins both axes by ~1.5x (throughput) and ~2.1x
 //! (latency); ECI remains the same order of magnitude ("realistic
 //! performance for cache coherence hardware").
+//!
+//! The *sliced* variant ([`run_sliced`]) re-runs the same two
+//! microbenchmarks against [`Machine::dcs_node`] — the
+//! finite-throughput sharded directory instead of the
+//! unbounded-concurrency home — swept over slice counts. It answers the
+//! question Table 3 cannot: how many directory pipelines does the FPGA
+//! need before the *link*, not the directory, is the bottleneck again.
 
 use crate::agents::dram::MemStore;
 use crate::machine::{map, Machine, MachineConfig, Workload};
@@ -18,14 +25,18 @@ pub struct Table3Row {
     pub latency_ns: f64,
 }
 
-/// Run both microbenchmarks on one machine configuration.
-pub fn run_config(cfg: MachineConfig, scale: Scale) -> Table3Row {
+/// Run both microbenchmarks on one machine built by `mk`.
+fn run_machine(
+    mk: impl Fn(MachineConfig, MemStore, MemStore) -> Machine,
+    cfg: MachineConfig,
+    scale: Scale,
+) -> Table3Row {
     // throughput: all threads stream the remote region
     let lines = scale.rows(2_000_000);
     let region_bytes = (lines as usize + 1024) * LINE_BYTES;
     let fpga = MemStore::new(map::TABLE_BASE, region_bytes);
     let cpu = MemStore::new(crate::proto::messages::LineAddr(0), 1 << 20);
-    let mut m = Machine::memory_node(cfg, fpga, cpu);
+    let mut m = mk(cfg, fpga, cpu);
     m.set_workload(Workload::StreamRemote { lines }, cfg.cpu.cores.min(48));
     let r = m.run();
     let throughput_gib = r.remote_gib_per_s();
@@ -37,7 +48,7 @@ pub fn run_config(cfg: MachineConfig, scale: Scale) -> Table3Row {
     let chase_lines: u64 = 1 << 20; // 128 MiB
     let fpga = MemStore::new(map::TABLE_BASE, (chase_lines as usize) * LINE_BYTES);
     let cpu = MemStore::new(crate::proto::messages::LineAddr(0), 1 << 20);
-    let mut m = Machine::memory_node(cfg, fpga, cpu);
+    let mut m = mk(cfg, fpga, cpu);
     let count = match scale {
         Scale::Ci => 2_000,
         Scale::Default => 20_000,
@@ -46,6 +57,18 @@ pub fn run_config(cfg: MachineConfig, scale: Scale) -> Table3Row {
     m.set_workload(Workload::ChaseRemote { count, region_lines: chase_lines }, 1);
     let r = m.run();
     Table3Row { throughput_gib, latency_ns: r.load_lat.p50() as f64 / 1000.0 }
+}
+
+/// Run both microbenchmarks on one machine configuration (monolithic
+/// home node, the paper's configuration).
+pub fn run_config(cfg: MachineConfig, scale: Scale) -> Table3Row {
+    run_machine(Machine::memory_node, cfg, scale)
+}
+
+/// The sliced row: same microbenchmarks, FPGA running the sharded
+/// directory controller with `slices` slices.
+pub fn run_dcs_point(cfg: MachineConfig, slices: usize, scale: Scale) -> Table3Row {
+    run_machine(|c, f, m| Machine::dcs_node(c, slices, f, m), cfg, scale)
 }
 
 pub struct Table3 {
@@ -57,6 +80,25 @@ pub fn run(scale: Scale) -> Table3 {
     Table3 {
         eci: run_config(MachineConfig::enzian_eci(), scale),
         native: run_config(MachineConfig::native_2socket(), scale),
+    }
+}
+
+/// Slice counts swept in the sliced Table-3 row.
+pub const DCS_SLICE_SWEEP: [usize; 3] = [1, 2, 4];
+
+pub struct Table3Sliced {
+    pub rows: Vec<(usize, Table3Row)>,
+}
+
+/// Sweep `Machine::dcs_node` over [`DCS_SLICE_SWEEP`] on the Enzian+ECI
+/// configuration.
+pub fn run_sliced(scale: Scale) -> Table3Sliced {
+    run_sliced_with(MachineConfig::enzian_eci(), &DCS_SLICE_SWEEP, scale)
+}
+
+pub fn run_sliced_with(cfg: MachineConfig, slices: &[usize], scale: Scale) -> Table3Sliced {
+    Table3Sliced {
+        rows: slices.iter().map(|&n| (n, run_dcs_point(cfg, n, scale))).collect(),
     }
 }
 
@@ -76,4 +118,50 @@ pub fn render(t: &Table3) -> ResultTable {
         format!("{:.0} ns", t.native.latency_ns),
     ]);
     out
+}
+
+pub fn render_sliced(t: &Table3Sliced) -> ResultTable {
+    let mut out = ResultTable::new(
+        "Table 3 (sliced): Enzian + ECI with the sharded directory controller",
+        &["slices", "Throughput", "Latency"],
+    );
+    for (n, row) in &t.rows {
+        out.row(vec![
+            n.to_string(),
+            format!("{:.1} GiB/s", row.throughput_gib),
+            format!("{:.0} ns", row.latency_ns),
+        ]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The sliced row must run end to end and slicing must never *hurt*
+    /// the single-outstanding-load latency (a line still maps to exactly
+    /// one slice; contention only falls with more slices).
+    #[test]
+    fn sliced_row_completes_and_stays_sane() {
+        let t = run_sliced_with(MachineConfig::enzian_eci(), &[1, 2], Scale::Ci);
+        assert_eq!(t.rows.len(), 2);
+        for (n, row) in &t.rows {
+            assert!(*n >= 1);
+            assert!(row.throughput_gib > 0.0, "no throughput at {n} slices");
+            assert!(row.latency_ns > 0.0, "no latency at {n} slices");
+        }
+        let (_, one) = t.rows[0];
+        let (_, two) = t.rows[1];
+        // more slices must not slow the stream (equal is fine once the
+        // link, not the directory, binds)
+        assert!(
+            two.throughput_gib >= one.throughput_gib * 0.95,
+            "2 slices {} GiB/s < 1 slice {} GiB/s",
+            two.throughput_gib,
+            one.throughput_gib
+        );
+        let md = render_sliced(&t).to_markdown();
+        assert!(md.contains("slices"));
+    }
 }

@@ -6,9 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the protocol itself ([`proto`]), the
 //!   layered transport ([`transport`]), the coherence agents and machine
-//!   models ([`agents`], [`machine`]), the smart memory controller and its
-//!   operators ([`memctl`], [`operators`]), the trace/verification toolkit
-//!   ([`trace`]), and the experiment harness ([`harness`]).
+//!   models ([`agents`], [`machine`]), the sharded directory and its
+//!   traffic generators ([`dcs`], [`workload`]), the smart memory
+//!   controller and its operators ([`memctl`], [`operators`]), the
+//!   trace/verification toolkit ([`trace`]), and the experiment harness
+//!   ([`harness`]).
 //! * **Layer 2/1 (build-time Python)** — the operators' compute hot paths
 //!   as JAX + Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust through [`runtime`] (PJRT CPU client). Python is never on the
@@ -34,3 +36,4 @@ pub mod rustc_hash;
 pub mod sim;
 pub mod trace;
 pub mod transport;
+pub mod workload;

@@ -11,6 +11,7 @@
 //! coherence engines run at CPU speed.
 
 use crate::agents::dram::DramConfig;
+use crate::dcs::DcsConfig;
 use crate::sim::time::{Clock, Duration};
 use crate::transport::LinkConfig;
 
@@ -109,6 +110,16 @@ impl MachineConfig {
         c.cpu.l1_bytes = 8 << 10;
         c.cpu.llc_bytes = 256 << 10;
         c
+    }
+
+    /// The sliced-directory shape this machine implies: `slices`
+    /// address-interleaved pipelines, each costing `home_proc` of
+    /// occupancy per message. Single source of truth for
+    /// [`crate::machine::Machine::dcs_node`] and for the `workload`
+    /// subsystem's scenario nodes, so a scenario run and a machine run
+    /// against the same configuration exercise the same directory.
+    pub fn dcs_config(&self, slices: usize) -> DcsConfig {
+        DcsConfig::new(slices).with_slice_proc(self.home_proc)
     }
 }
 

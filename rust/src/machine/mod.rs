@@ -20,7 +20,7 @@ use crate::agents::cache::{Cache, Victim};
 use crate::agents::dram::{Dram, MemStore};
 use crate::agents::home::{HomeAgent, HomeEffect};
 use crate::agents::remote::{RemoteAgent, RemoteEffect};
-use crate::dcs::{Dcs, DcsConfig, SliceService};
+use crate::dcs::{Dcs, SliceService};
 use crate::memctl::{ComputeRegion, ConfigBlock, FifoServer, KvsService};
 use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{generate_home, generate_remote, HomePolicy};
@@ -342,9 +342,7 @@ impl Machine {
         fpga_mem: MemStore,
         cpu_mem: MemStore,
     ) -> Machine {
-        let dcs = Dcs::with_reference_rules(
-            DcsConfig::new(slices).with_slice_proc(cfg.home_proc),
-        );
+        let dcs = Dcs::with_reference_rules(cfg.dcs_config(slices));
         Machine::new(cfg, FpgaApp::Dcs(dcs), fpga_mem, cpu_mem)
     }
 
@@ -770,7 +768,7 @@ impl Machine {
                     self.eng.schedule_at(t, Ev::DcsPoll(s as u32));
                     break;
                 }
-                Some(SliceService::Done(ready, fx)) => {
+                Some(SliceService::Done(ready, _, fx)) => {
                     for e in fx {
                         match e {
                             HomeEffect::Respond { msg, from_ram } => {

@@ -153,6 +153,11 @@ impl Histogram {
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
+    /// Deep-tail quantile: open-loop experiments report p999 because the
+    /// far tail is where queueing delay first becomes visible.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
 
     pub fn merge(&mut self, other: &Histogram) {
         if other.bins.len() > self.bins.len() {
@@ -268,6 +273,9 @@ mod tests {
         assert!((450..=550).contains(&p50), "p50 {p50}");
         let p99 = h.p99();
         assert!((930..=1000).contains(&p99), "p99 {p99}");
+        let p999 = h.p999();
+        assert!((930..=1000).contains(&p999), "p999 {p999}");
+        assert!(p999 >= p99, "p999 {p999} < p99 {p99}");
         assert!((h.mean() - 500.5).abs() < 1.0);
     }
 

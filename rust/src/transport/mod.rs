@@ -1,12 +1,14 @@
 //! The layered ECI transport (paper §4.2): virtual channels ([`vc`]),
 //! link framing ([`link`]), reliable delivery with credits and replay
-//! ([`transaction`]), and the serial-lane physical model ([`phys`]).
+//! ([`transaction`]), the serial-lane physical model ([`phys`]), and the
+//! framed admission adapter for generator traffic ([`ingress`]).
 //!
 //! [`LinkDir`] composes the four layers for one direction of the link;
 //! the full-duplex link is two `LinkDir`s cross-wired by the machine
 //! model ([`crate::machine`]), which also carries credit returns and
 //! ack/nack control frames on the reverse direction.
 
+pub mod ingress;
 pub mod link;
 pub mod phys;
 pub mod transaction;
@@ -17,6 +19,7 @@ use crate::proto::states::Node;
 use crate::sim::rng::Rng;
 use crate::sim::time::Time;
 
+pub use ingress::FramedIngress;
 pub use link::{Control, Frame, CONTROL_BYTES};
 pub use phys::{PhysConfig, PhysDir};
 pub use transaction::{RxResult, RxState, TxState};

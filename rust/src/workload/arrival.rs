@@ -1,0 +1,105 @@
+//! Open-loop arrival processes.
+//!
+//! The closed-loop generator (`dcs::loadgen`) can never overload the
+//! directory: each client waits for its previous operation, so offered
+//! load self-throttles to the service rate. Open-loop arrivals decouple
+//! the two — operations arrive on a clock of their own, and when the
+//! offered rate exceeds capacity the backlog (and therefore latency)
+//! grows without bound. That is the regime the latency-vs-load knee of
+//! `harness::fig_loadcurve` characterizes.
+//!
+//! Two processes, both driven by the deterministic [`Rng`]:
+//! [`ArrivalKind::Deterministic`] spaces arrivals exactly `1/rate`
+//! apart (isolates queueing caused by *service* variability), while
+//! [`ArrivalKind::Poisson`] draws exponential gaps (memoryless traffic,
+//! the standard open-system model and the harsher of the two on tails).
+
+use crate::sim::rng::Rng;
+use crate::sim::time::Duration;
+
+/// Shape of the inter-arrival distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Fixed gaps of exactly `1/rate`.
+    Deterministic,
+    /// Exponential gaps with mean `1/rate` (Poisson arrivals).
+    Poisson,
+}
+
+impl ArrivalKind {
+    /// CLI spelling -> kind (`fixed`/`deterministic`, `poisson`/`exp`).
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s {
+            "fixed" | "deterministic" => Some(ArrivalKind::Deterministic),
+            "poisson" | "exp" | "exponential" => Some(ArrivalKind::Poisson),
+            _ => None,
+        }
+    }
+}
+
+/// An arrival clock at a configured offered rate.
+pub struct Arrivals {
+    kind: ArrivalKind,
+    mean_gap_ps: f64,
+    rng: Rng,
+}
+
+impl Arrivals {
+    pub fn new(kind: ArrivalKind, rate_per_s: f64, rng: Rng) -> Arrivals {
+        assert!(rate_per_s > 0.0 && rate_per_s.is_finite(), "bad offered rate {rate_per_s}");
+        Arrivals { kind, mean_gap_ps: 1e12 / rate_per_s, rng }
+    }
+
+    pub fn rate_per_s(&self) -> f64 {
+        1e12 / self.mean_gap_ps
+    }
+
+    /// Gap to the next arrival (at least 1 ps, so time always advances).
+    pub fn next_gap(&mut self) -> Duration {
+        let ps = match self.kind {
+            ArrivalKind::Deterministic => self.mean_gap_ps,
+            ArrivalKind::Poisson => self.rng.exp(self.mean_gap_ps),
+        };
+        Duration::from_ps((ps.round() as u64).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_gaps_are_exact() {
+        let mut a = Arrivals::new(ArrivalKind::Deterministic, 1e9, Rng::new(1));
+        for _ in 0..10 {
+            assert_eq!(a.next_gap(), Duration::from_ns(1));
+        }
+        assert!((a.rate_per_s() - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn poisson_gaps_have_the_right_mean() {
+        let mut a = Arrivals::new(ArrivalKind::Poisson, 1e9, Rng::new(7));
+        let n = 100_000;
+        let sum: u64 = (0..n).map(|_| a.next_gap().ps()).sum();
+        let mean = sum as f64 / n as f64;
+        // mean gap 1000 ps, ±2%
+        assert!((mean - 1000.0).abs() < 20.0, "mean gap {mean} ps");
+    }
+
+    #[test]
+    fn gaps_never_collapse_to_zero() {
+        let mut a = Arrivals::new(ArrivalKind::Poisson, 1e12, Rng::new(11));
+        for _ in 0..10_000 {
+            assert!(a.next_gap().ps() >= 1);
+        }
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(ArrivalKind::parse("fixed"), Some(ArrivalKind::Deterministic));
+        assert_eq!(ArrivalKind::parse("poisson"), Some(ArrivalKind::Poisson));
+        assert_eq!(ArrivalKind::parse("exp"), Some(ArrivalKind::Poisson));
+        assert_eq!(ArrivalKind::parse("bogus"), None);
+    }
+}

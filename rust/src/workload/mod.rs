@@ -1,0 +1,38 @@
+//! workload — open-loop, scenario-driven traffic generation.
+//!
+//! The dcs gave the reproduction a *finite-throughput* directory; this
+//! subsystem gives it *offered load*. Three pieces compose (DESIGN.md
+//! §"The workload subsystem"):
+//!
+//! * **Arrival processes** ([`arrival`]) — operations arrive on their
+//!   own deterministic or Poisson clock at a configured rate, instead
+//!   of being issued one-per-client-completion. Only an open loop can
+//!   drive the directory *past* saturation, which is where the
+//!   latency-vs-load hockey stick of `harness::fig_loadcurve` lives.
+//! * **Scenarios** ([`scenario`], [`zipf`]) — traffic is described as a
+//!   composition of tenant-like classes (per-class op mix, footprint,
+//!   rate share, and line popularity — uniform or Zipf(θ) with a seeded
+//!   rank scatter), so hot-spot skew across directory slices becomes a
+//!   first-class experimental knob rather than a property baked into
+//!   one generator loop.
+//! * **Credit-accurate admission** ([`openloop`]) — generated traffic
+//!   enters through the real transport stack
+//!   ([`crate::transport::FramedIngress`]: VC arbitration, per-VC
+//!   credits, frame sequencing, serial-lane occupancy) and the
+//!   request-direction credit is held until the owning directory slice
+//!   consumes the message, so overload manifests as credit exhaustion
+//!   and transmit-queue growth — not as an unbounded pile of in-flight
+//!   messages the model silently absorbs.
+//!
+//! The sweep harness is `harness::fig_loadcurve` (knee detection per
+//! slice count); the CLI entry is `eci bench workload`.
+
+pub mod arrival;
+pub mod openloop;
+pub mod scenario;
+pub mod zipf;
+
+pub use arrival::{ArrivalKind, Arrivals};
+pub use openloop::{run, OpenLoop, OpenLoopConfig, OpenLoopReport};
+pub use scenario::{Popularity, Scenario, TrafficClass};
+pub use zipf::Zipf;

@@ -1,0 +1,203 @@
+//! Traffic classes and named scenarios.
+//!
+//! A *scenario* replaces the single fixed client loop with a composition
+//! of tenant-like traffic classes, each with its own operation mix,
+//! footprint, line-popularity model, and share of the offered arrival
+//! rate. The open-loop engine ([`super::openloop`]) draws every arrival
+//! by (class, op kind, line) from this description, so "what traffic
+//! hits the directory" becomes data, not code.
+//!
+//! Presets mirror the workloads coherent-accelerator evaluations sweep:
+//!
+//! | name      | mix (r:w:c)  | popularity | footprint  | stresses        |
+//! |-----------|--------------|------------|------------|-----------------|
+//! | `uniform` | 60:20:20     | uniform    | 1×         | baseline mix    |
+//! | `hot-kvs` | 70:10:20     | Zipf(θ)    | 1/4×       | one hot slice   |
+//! | `scan`    | 100:0:0      | uniform    | 1×         | ingress bandwidth |
+//! | `chase`   | 0:0:100 (4h) | uniform    | 1/2×       | KVS engine pool |
+//! | `tenants` | all three    | mixed      | 1.75×      | multi-tenant interference |
+
+use crate::dcs::loadgen::MixConfig;
+
+/// Line-popularity model of one class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Popularity {
+    /// Every line in the footprint equally likely.
+    Uniform,
+    /// Zipf-distributed rank popularity; ranks are scattered over the
+    /// footprint by a seeded permutation so the hot set lands on
+    /// arbitrary slices (hot-spot stress, not an artifact of rank 0
+    /// mapping to slice 0).
+    Zipf { theta: f64 },
+}
+
+/// One tenant-like traffic class.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    pub name: String,
+    /// Relative share of the offered arrival rate (weights need not sum
+    /// to anything in particular).
+    pub rate_weight: u32,
+    pub mix: MixConfig,
+    /// Lines this class touches; classes occupy disjoint address
+    /// windows laid out back to back.
+    pub footprint_lines: u64,
+    pub popularity: Popularity,
+}
+
+impl TrafficClass {
+    /// Skewed, read-mostly key-value traffic with short chases.
+    pub fn hot_kvs(footprint_lines: u64, theta: f64) -> TrafficClass {
+        TrafficClass {
+            name: "hot-kvs".into(),
+            rate_weight: 1,
+            mix: MixConfig { reads: 70, writes: 10, chases: 20, chase_hops: 2 },
+            footprint_lines,
+            popularity: Popularity::Zipf { theta },
+        }
+    }
+
+    /// Read-only streaming over a large region.
+    pub fn scan(footprint_lines: u64) -> TrafficClass {
+        TrafficClass {
+            name: "scan".into(),
+            rate_weight: 1,
+            mix: MixConfig::read_only(),
+            footprint_lines,
+            popularity: Popularity::Uniform,
+        }
+    }
+
+    /// Pure dependent pointer chases (Fig. 6-style traffic).
+    pub fn chase(footprint_lines: u64) -> TrafficClass {
+        TrafficClass {
+            name: "chase".into(),
+            rate_weight: 1,
+            mix: MixConfig { reads: 0, writes: 0, chases: 100, chase_hops: 4 },
+            footprint_lines,
+            popularity: Popularity::Uniform,
+        }
+    }
+
+    /// The closed-loop generator's default mix, uniform popularity.
+    pub fn uniform(footprint_lines: u64) -> TrafficClass {
+        TrafficClass {
+            name: "uniform".into(),
+            rate_weight: 1,
+            mix: MixConfig::default(),
+            footprint_lines,
+            popularity: Popularity::Uniform,
+        }
+    }
+
+    /// Look up a class preset by CLI name. `base_lines` scales the
+    /// footprint; `theta` parameterizes the skewed presets.
+    pub fn by_name(name: &str, base_lines: u64, theta: f64) -> Option<TrafficClass> {
+        match name {
+            "hot-kvs" => Some(TrafficClass::hot_kvs((base_lines / 4).max(2), theta)),
+            "scan" => Some(TrafficClass::scan(base_lines.max(2))),
+            "chase" => Some(TrafficClass::chase((base_lines / 2).max(2))),
+            "uniform" => Some(TrafficClass::uniform(base_lines.max(2))),
+            _ => None,
+        }
+    }
+
+    pub fn with_weight(mut self, w: u32) -> TrafficClass {
+        self.rate_weight = w;
+        self
+    }
+}
+
+/// A named composition of traffic classes.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub classes: Vec<TrafficClass>,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, classes: Vec<TrafficClass>) -> Scenario {
+        assert!(!classes.is_empty(), "a scenario needs at least one class");
+        for c in &classes {
+            assert!(c.rate_weight > 0, "class {} has zero rate weight", c.name);
+            assert!(c.footprint_lines >= 2, "class {} footprint too small", c.name);
+            assert!(c.mix.total() > 0, "class {} has an empty mix", c.name);
+        }
+        Scenario { name: name.into(), classes }
+    }
+
+    /// Total region footprint (classes are laid out back to back).
+    pub fn total_lines(&self) -> u64 {
+        self.classes.iter().map(|c| c.footprint_lines).sum()
+    }
+
+    /// Sum of class rate weights.
+    pub fn total_weight(&self) -> u64 {
+        self.classes.iter().map(|c| c.rate_weight as u64).sum()
+    }
+
+    /// Named scenario presets; `base_lines` sizes footprints (see
+    /// `harness::fig_loadcurve::footprint_for` for the scale mapping).
+    pub fn preset(name: &str, base_lines: u64, theta: f64) -> Option<Scenario> {
+        let s = match name {
+            "uniform" | "hot-kvs" | "scan" | "chase" => Scenario::new(
+                name,
+                vec![TrafficClass::by_name(name, base_lines, theta).expect("preset class")],
+            ),
+            // the multi-tenant composition: a hot KVS tenant takes half
+            // the offered rate, a scanner and a chaser share the rest
+            "tenants" => Scenario::new(
+                "tenants",
+                vec![
+                    TrafficClass::hot_kvs((base_lines / 4).max(2), theta).with_weight(2),
+                    TrafficClass::scan(base_lines.max(2)),
+                    TrafficClass::chase((base_lines / 2).max(2)),
+                ],
+            ),
+            _ => return None,
+        };
+        Some(s)
+    }
+
+    /// The preset names, for CLI usage text.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["uniform", "hot-kvs", "scan", "chase", "tenants"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_compose() {
+        for name in Scenario::preset_names() {
+            let s = Scenario::preset(name, 1 << 12, 0.99).unwrap();
+            assert_eq!(&s.name, name);
+            assert!(s.total_lines() >= 2);
+            assert!(s.total_weight() >= 1);
+        }
+        assert!(Scenario::preset("nope", 1 << 12, 0.99).is_none());
+    }
+
+    #[test]
+    fn tenants_is_multi_class_with_skewed_kvs() {
+        let s = Scenario::preset("tenants", 1 << 12, 0.99).unwrap();
+        assert_eq!(s.classes.len(), 3);
+        assert!(matches!(s.classes[0].popularity, Popularity::Zipf { theta } if theta == 0.99));
+        assert_eq!(s.classes[0].rate_weight, 2);
+        assert_eq!(s.total_lines(), (1 << 10) + (1 << 12) + (1 << 11));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_scenario_is_rejected() {
+        let _ = Scenario::new("empty", vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_class_is_rejected() {
+        let _ = Scenario::new("w0", vec![TrafficClass::scan(64).with_weight(0)]);
+    }
+}

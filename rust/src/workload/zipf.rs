@@ -1,0 +1,139 @@
+//! Zipf(θ) line-popularity sampler.
+//!
+//! Skewed popularity is what turns "N directory slices" into a
+//! load-balancing question: under a uniform draw every slice sees
+//! `1/N` of the traffic, but real key-value and object workloads follow
+//! a power law (YCSB's default is Zipf θ≈0.99), so a handful of hot
+//! lines — wherever the address interleave happens to place them —
+//! dominate one slice's ingress while its siblings idle.
+//!
+//! The sampler is exact inversion over a precomputed CDF table:
+//! `P(rank = k) ∝ 1/(k+1)^θ`, one `f64` per rank, binary-searched per
+//! draw. Footprints in this repo top out around 2^16–2^20 lines, where
+//! the table is small, construction is a one-time O(n) pass, and —
+//! unlike rejection samplers — the empirical distribution matches the
+//! analytic CDF by construction (pinned, with determinism, by property
+//! tests in `rust/tests/props.rs`). θ = 0 degenerates to uniform.
+
+use crate::sim::rng::Rng;
+
+/// Exact Zipf(θ) sampler over ranks `0..n` (rank 0 is the hottest).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    /// `cdf[k]` = P(rank <= k); monotone, `cdf[n-1]` == 1.0.
+    cdf: Vec<f64>,
+    theta: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Zipf {
+        assert!(n > 0, "Zipf needs a non-empty support");
+        assert!(theta >= 0.0 && theta.is_finite(), "bad Zipf theta {theta}");
+        let n = usize::try_from(n).expect("Zipf support too large for a CDF table");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(theta);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // guard against the last entry rounding below 1.0
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0;
+        }
+        Zipf { cdf, theta }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.cdf.len() as u64
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Analytic CDF: P(rank <= k).
+    pub fn cdf(&self, k: u64) -> f64 {
+        self.cdf[k as usize]
+    }
+
+    /// Probability mass of one rank.
+    pub fn pmf(&self, k: u64) -> f64 {
+        let k = k as usize;
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    /// Draw one rank by CDF inversion.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        // smallest k with cdf[k] > u (u < 1.0, cdf[n-1] == 1.0)
+        let k = self.cdf.partition_point(|&c| c <= u);
+        k.min(self.cdf.len() - 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_is_monotone_and_normalized() {
+        let z = Zipf::new(1000, 0.99);
+        let mut prev = 0.0;
+        for k in 0..1000 {
+            let c = z.cdf(k);
+            assert!(c >= prev, "CDF not monotone at {k}");
+            prev = c;
+        }
+        assert_eq!(z.cdf(999), 1.0);
+        assert!((0..1000).map(|k| z.pmf(k)).sum::<f64>() > 0.999_999);
+    }
+
+    #[test]
+    fn rank_zero_dominates_under_skew() {
+        let z = Zipf::new(4096, 0.99);
+        // H_4096(0.99) ≈ 9.3, so the hottest line holds ~11% of the mass
+        assert!(z.pmf(0) > 0.08 && z.pmf(0) < 0.15, "pmf(0) = {}", z.pmf(0));
+        assert!(z.pmf(0) > 100.0 * z.pmf(4095));
+    }
+
+    #[test]
+    fn theta_zero_is_uniform() {
+        let z = Zipf::new(64, 0.0);
+        for k in 0..64 {
+            assert!((z.pmf(k) - 1.0 / 64.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn samples_stay_in_range_and_skew_low() {
+        let z = Zipf::new(128, 1.2);
+        let mut rng = Rng::new(0x21BF);
+        let mut hits0 = 0u32;
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!(k < 128);
+            if k == 0 {
+                hits0 += 1;
+            }
+        }
+        // pmf(0) ≈ 0.28 at θ=1.2, n=128; 10k draws cannot miss by much
+        assert!(hits0 > 1_500, "rank 0 drawn only {hits0} times");
+    }
+
+    #[test]
+    fn single_rank_support() {
+        let z = Zipf::new(1, 0.99);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}
