@@ -38,7 +38,7 @@ fn main() {
     // home repeatedly dirties a set of lines; remote repeatedly reads them
     // (transition 10 either forwards dirty (hidden O) or writes back first)
     for hidden_o in [true, false] {
-        let policy = HomePolicy { hidden_o, cache_writebacks: true };
+        let policy = HomePolicy { hidden_o, cache_writebacks: true, ..HomePolicy::default() };
         let mut home = HomeAgent::new(
             generate_home(&reference_transitions(), policy),
             policy,

@@ -23,6 +23,12 @@ pub struct Entry {
 pub struct Cache {
     sets: usize,
     ways: usize,
+    /// Line-address stride between consecutive sets. 1 for a normal
+    /// cache; N for a cache fronting one slice of an N-way
+    /// address-interleaved directory (the slice only ever sees lines with
+    /// `addr % N == i`, so indexing by `addr / N` keeps every set
+    /// reachable instead of wasting all but every N-th).
+    interleave: u64,
     entries: Vec<Option<Entry>>, // sets x ways
     tick: u64,
     /// Stats.
@@ -43,6 +49,15 @@ impl Cache {
     /// `capacity_bytes` / 128-byte lines / `ways` associativity. Sets must
     /// come out a power of two.
     pub fn new(capacity_bytes: usize, ways: usize) -> Cache {
+        Cache::interleaved(capacity_bytes, ways, 1)
+    }
+
+    /// A cache indexing by `addr / interleave`: the shape used for the
+    /// per-slice home caches of [`crate::dcs`] (interleave = slice
+    /// count), where plain modulo indexing would leave most sets
+    /// unreachable.
+    pub fn interleaved(capacity_bytes: usize, ways: usize, interleave: u64) -> Cache {
+        assert!(interleave >= 1, "interleave must be >= 1");
         let lines = capacity_bytes / crate::proto::messages::LINE_BYTES;
         assert!(lines >= ways && lines % ways == 0);
         let sets = lines / ways;
@@ -50,6 +65,7 @@ impl Cache {
         Cache {
             sets,
             ways,
+            interleave,
             entries: vec![None; sets * ways],
             tick: 0,
             hits: 0,
@@ -70,7 +86,8 @@ impl Cache {
 
     #[inline]
     fn set_of(&self, addr: LineAddr) -> usize {
-        (addr.0 as usize) & (self.sets - 1)
+        let index = if self.interleave == 1 { addr.0 } else { addr.0 / self.interleave };
+        (index as usize) & (self.sets - 1)
     }
     #[inline]
     fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
@@ -257,6 +274,28 @@ mod tests {
         assert_eq!(v.data[0], 7);
         assert_eq!(c.state_of(LineAddr(3)), CacheState::I);
         assert!(c.remove(LineAddr(3)).is_none());
+    }
+
+    #[test]
+    fn interleaved_indexing_uses_every_set() {
+        // a 4-way-sliced directory's slice-0 cache sees only addresses
+        // ≡ 0 (mod 4); with interleave = 4 those must spread over ALL
+        // sets, not pile onto every fourth one.
+        let mut c = Cache::interleaved(4096, 2, 4); // 32 lines, 16 sets
+        for i in 0..16u64 {
+            c.insert(LineAddr(i * 4), CacheState::S, line(i as u8));
+        }
+        assert_eq!(c.resident_lines(), 16, "16 slice-local lines must not conflict");
+        assert_eq!(c.evictions, 0);
+        for i in 0..16u64 {
+            assert!(c.peek(LineAddr(i * 4)).is_some());
+        }
+        // plain indexing of the same stream collides 4:1 on 2 ways
+        let mut p = Cache::new(4096, 2);
+        for i in 0..16u64 {
+            p.insert(LineAddr(i * 4), CacheState::S, line(i as u8));
+        }
+        assert!(p.evictions > 0, "the control must actually conflict");
     }
 
     #[test]

@@ -89,6 +89,10 @@ impl HomeAgent {
         slice_count: u64,
     ) -> HomeAgent {
         assert!(slice_count > 0 && slice_index < slice_count, "bad slice {slice_index}/{slice_count}");
+        assert!(
+            !(policy.cache_fills || policy.cache_writebacks) || cache.is_some(),
+            "cache-filling home policies need an actual home cache"
+        );
         HomeAgent {
             rules,
             policy,
@@ -284,8 +288,13 @@ impl HomeAgent {
                         let line = if from_ram {
                             ram.read_line(addr)
                         } else {
-                            self.cached_line(addr)
-                                .unwrap_or_else(|| ram.read_line(addr))
+                            match self.cached_line(addr) {
+                                Some(l) => {
+                                    self.stats.inc("home_cache_hit");
+                                    l
+                                }
+                                None => ram.read_line(addr),
+                            }
                         };
                         Some(Box::new(line))
                     } else {
@@ -320,14 +329,17 @@ impl HomeAgent {
                         .copied()
                         .unwrap_or_else(|| ram.read_line(addr));
                     if let Some(c) = self.cache.as_mut() {
-                        // home-cache victims write back if dirty
+                        self.stats.inc("home_cache_fill");
                         if let Some(v) = c.insert(addr, state, Box::new(line)) {
-                            if v.state == CacheState::M {
+                            // home-cache victims write back if they carry
+                            // the freshest copy: cached M, or hidden-O
+                            // (own = S with the directory dirty bit set)
+                            let mut vst = self.state_of(v.addr);
+                            if v.state == CacheState::M || vst.own_dirty {
                                 ram.write_line(v.addr, &v.data);
                                 fx.push(HomeEffect::RamWrite { addr: v.addr });
                             }
                             // directory entry for the victim's own state
-                            let mut vst = self.state_of(v.addr);
                             vst.own = CacheState::I;
                             vst.own_dirty = false;
                             self.set_state(v.addr, vst);
@@ -495,6 +507,65 @@ mod tests {
             "{fx:?}"
         );
         assert_eq!(a.state_of(LineAddr(4)).view, RemoteView::I);
+    }
+
+    #[test]
+    fn cache_fills_serves_repeat_reads_slice_locally() {
+        let policy = HomePolicy { cache_fills: true, ..HomePolicy::default() };
+        let rules = generate_home(&reference_transitions(), policy);
+        let mut a = HomeAgent::new(rules, policy, Some(Cache::new(64 * 1024, 4)));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        let mut l = [0u8; 128];
+        l[0] = 0x5A;
+        ram.write_line(LineAddr(6), &l);
+        // first read: from RAM, and the home keeps a clean S copy
+        let fx = a.on_message(
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(6)),
+            &mut ram,
+        );
+        let HomeEffect::Respond { from_ram, msg } = &fx[0] else { panic!("{fx:?}") };
+        assert!(*from_ram);
+        assert_eq!(msg.payload.as_ref().unwrap()[0], 0x5A);
+        assert_eq!(a.state_of(LineAddr(6)).own, CacheState::S);
+        assert_eq!(a.stats.get("home_cache_fill"), 1);
+        // remote releases, then re-reads: served from the home cache
+        a.on_message(
+            Message::coh_req(ReqId(2), Node::Remote, CohOp::VolDowngradeI, LineAddr(6)),
+            &mut ram,
+        );
+        let fx = a.on_message(
+            Message::coh_req(ReqId(3), Node::Remote, CohOp::ReadShared, LineAddr(6)),
+            &mut ram,
+        );
+        let HomeEffect::Respond { from_ram, msg } = &fx[0] else { panic!("{fx:?}") };
+        assert!(!*from_ram, "repeat read must be slice-local");
+        assert_eq!(msg.payload.as_ref().unwrap()[0], 0x5A);
+        assert_eq!(a.stats.get("home_cache_hit"), 1);
+        // an exclusive writer drops the home copy, and its dirty
+        // writeback lands in RAM (cache_writebacks stays off), so the
+        // next read refills from the fresh bytes.
+        a.on_message(
+            Message::coh_req(ReqId(9), Node::Remote, CohOp::VolDowngradeI, LineAddr(6)),
+            &mut ram,
+        );
+        a.on_message(
+            Message::coh_req(ReqId(4), Node::Remote, CohOp::ReadExclusive, LineAddr(6)),
+            &mut ram,
+        );
+        assert_eq!(a.state_of(LineAddr(6)).own, CacheState::I);
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0x77;
+        a.on_message(
+            Message::coh_req_data(ReqId(5), Node::Remote, CohOp::VolDowngradeI, LineAddr(6), Box::new(dirty)),
+            &mut ram,
+        );
+        assert_eq!(ram.read_line(LineAddr(6))[0], 0x77);
+        let fx = a.on_message(
+            Message::coh_req(ReqId(6), Node::Remote, CohOp::ReadShared, LineAddr(6)),
+            &mut ram,
+        );
+        let HomeEffect::Respond { msg, .. } = &fx[0] else { panic!("{fx:?}") };
+        assert_eq!(msg.payload.as_ref().unwrap()[0], 0x77, "stale home copy served");
     }
 
     #[test]

@@ -15,19 +15,29 @@
 //! the command line:
 //!
 //! ```text
-//! eci bench dcs [--slices 1,2,4,8] [--clients 32] [--ops 20000]
-//!               [--mix 60:20:20] [--hops 4]
+//! eci bench dcs [--slices 1,2,4,8] [--cached-slices 2,4] [--batch 4]
+//!               [--clients 32] [--ops 20000] [--mix 60:20:20]
+//!               [--hops 4] [--theta 0.99]
 //! ```
+//!
+//! `--cached-slices` adds *cached* sweep points (slice-local home
+//! caches, the symmetric configuration); `--batch` sets the
+//! framed-ingress batch size; `--theta` skews the line popularity.
 //!
 //! The `workload` bench (open-loop, scenario-driven latency-vs-load
 //! sweep with credit-accurate link admission — `harness::fig_loadcurve`):
 //!
 //! ```text
 //! eci bench workload [--scenario uniform|hot-kvs|scan|chase|tenants]
-//!                    [--slices 1,2,4,8] [--rate 2e6,8e6,...]
-//!                    [--theta 0.99] [--classes hot-kvs:2,scan:1]
-//!                    [--ops 12000] [--arrivals poisson|fixed] [--cached]
+//!                    [--slices 1,2,4,8] [--cached-slices 2,4]
+//!                    [--batch 4] [--rate 2e6,8e6,...] [--theta 0.99]
+//!                    [--classes hot-kvs:2,scan:1] [--ops 12000]
+//!                    [--arrivals poisson|fixed] [--cached]
 //! ```
+//!
+//! Flags are only accepted by the bench they belong to; every other
+//! bench id rejects stray arguments loudly (a typo must not green-wash
+//! a CI smoke step).
 
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
 use crate::harness::{
@@ -57,10 +67,11 @@ pub fn main_entry() {
         _ => {
             eprintln!(
                 "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|all]|check|trace-demo>\n\
-                 dcs flags:      --slices 1,2,4,8 --clients 32 --ops 20000 --mix 60:20:20 --hops 4\n\
-                 workload flags: --scenario {scenarios} --slices 1,2,4,8 --rate 2e6,8e6\n\
-                                 --theta 0.99 --classes hot-kvs:2,scan:1 --ops 12000\n\
-                                 --arrivals poisson|fixed --cached\n\
+                 dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
+                                 --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99\n\
+                 workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
+                                 --batch 4 --rate 2e6,8e6 --theta 0.99 --classes hot-kvs:2,scan:1\n\
+                                 --ops 12000 --arrivals poisson|fixed --cached\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})",
                 scenarios = Scenario::preset_names().join("|")
             );
@@ -72,6 +83,11 @@ pub fn main_entry() {
 #[derive(Clone, Debug, PartialEq)]
 pub struct DcsArgs {
     pub slices: Vec<usize>,
+    /// Slice counts to additionally run with slice-local home caches
+    /// (the symmetric configuration).
+    pub cached_slices: Vec<usize>,
+    /// Framed-ingress batch size (1 = batching off).
+    pub batch: usize,
     pub cfg: LoadGenConfig,
 }
 
@@ -79,6 +95,8 @@ impl DcsArgs {
     pub fn defaults(scale: Scale) -> DcsArgs {
         DcsArgs {
             slices: fig_throughput::SLICE_SWEEP.to_vec(),
+            cached_slices: Vec::new(),
+            batch: 1,
             cfg: LoadGenConfig { ops: fig_throughput::ops_for(scale), ..Default::default() },
         }
     }
@@ -94,6 +112,23 @@ impl DcsArgs {
             match flag.as_str() {
                 "--slices" => {
                     out.slices = parse_usize_list(val)?;
+                }
+                "--cached-slices" => {
+                    out.cached_slices = parse_usize_list(val)?;
+                }
+                "--batch" => {
+                    let b: usize = val.parse().map_err(|_| format!("bad batch size {val:?}"))?;
+                    if b == 0 {
+                        return Err("--batch must be >= 1".into());
+                    }
+                    out.batch = b;
+                }
+                "--theta" => {
+                    let t: f64 = val.parse().map_err(|_| format!("bad theta {val:?}"))?;
+                    if !(t >= 0.0 && t.is_finite()) {
+                        return Err(format!("theta must be >= 0, got {val:?}"));
+                    }
+                    out.cfg.theta = t;
                 }
                 "--clients" => {
                     out.cfg.clients =
@@ -134,14 +169,38 @@ impl DcsArgs {
         if out.cfg.ops == 0 {
             return Err("--ops must be >= 1".into());
         }
+        check_cached_slices(
+            &out.cached_slices,
+            crate::dcs::DEFAULT_HOME_CACHE_BYTES,
+            crate::dcs::DEFAULT_HOME_CACHE_WAYS,
+        )?;
         Ok(out)
     }
+}
+
+/// Reject `--cached-slices` counts the home-cache budget cannot be split
+/// across (each slice partition needs at least one full set of ways) —
+/// an oversized count must fail like every other malformed flag, not
+/// panic mid-sweep.
+fn check_cached_slices(cached: &[usize], budget_bytes: usize, ways: usize) -> Result<(), String> {
+    let max = crate::dcs::DcsConfig::max_cached_slices(budget_bytes, ways);
+    for &n in cached {
+        if n > max {
+            return Err(format!(
+                "--cached-slices {n} cannot split the {budget_bytes}-byte home-cache \
+                 budget ({ways}-way): at most {max} slices"
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Parsed `eci bench workload` flags: scenario shape + sweep axes.
 #[derive(Clone, Debug)]
 pub struct WorkloadArgs {
     pub slices: Vec<usize>,
+    /// Slice counts to additionally sweep with slice-local home caches.
+    pub cached_slices: Vec<usize>,
     pub scenario: String,
     pub theta: f64,
     /// `--classes name:weight,...` overrides the named scenario.
@@ -156,6 +215,7 @@ impl WorkloadArgs {
     pub fn defaults(scale: Scale) -> WorkloadArgs {
         WorkloadArgs {
             slices: fig_loadcurve::SLICE_SWEEP.to_vec(),
+            cached_slices: Vec::new(),
             scenario: "tenants".into(),
             theta: 0.99,
             classes: None,
@@ -187,6 +247,16 @@ impl WorkloadArgs {
                 }
                 "--slices" => {
                     out.slices = parse_usize_list(val)?;
+                }
+                "--cached-slices" => {
+                    out.cached_slices = parse_usize_list(val)?;
+                }
+                "--batch" => {
+                    let b: usize = val.parse().map_err(|_| format!("bad batch size {val:?}"))?;
+                    if b == 0 {
+                        return Err("--batch must be >= 1".into());
+                    }
+                    out.cfg.machine.ingress_batch = b;
                 }
                 "--rate" => {
                     let rates = val
@@ -250,6 +320,11 @@ impl WorkloadArgs {
         if out.cfg.ops == 0 {
             return Err("--ops must be >= 1".into());
         }
+        check_cached_slices(
+            &out.cached_slices,
+            out.cfg.machine.home_cache_bytes,
+            out.cfg.machine.home_cache_ways,
+        )?;
         Ok(out)
     }
 
@@ -296,12 +371,31 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
     Ok(xs)
 }
 
+/// Which benches consume command-line flags. Everything else must see
+/// an empty flag list: stray flags used to be ignored silently (e.g.
+/// `eci bench table3 --mix 60:20:20`, or `eci bench all --batch 4`,
+/// quietly running the defaults), which green-washes misconfigured CI
+/// smoke steps exactly like an unknown bench id would.
+fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
+    if matches!(which, "dcs" | "workload") || rest.is_empty() {
+        return Ok(());
+    }
+    Err(format!(
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs` or `workload`)",
+        rest.join(" ")
+    ))
+}
+
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
     const KNOWN: [&str; 8] =
         ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "all"];
     if !KNOWN.contains(&which) {
         // a typo must fail loudly, not green-wash a CI smoke step
         eprintln!("eci bench: unknown bench {which:?} (have: {})", KNOWN.join(", "));
+        std::process::exit(2);
+    }
+    if let Err(e) = bench_rejects_flags(which, rest) {
+        eprintln!("eci bench: {e}");
         std::process::exit(2);
     }
     let needs_rt = matches!(which, "fig5" | "fig6" | "fig7" | "all");
@@ -338,7 +432,7 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
                 std::process::exit(2);
             }
         };
-        let f = fig_throughput::run_with(a.cfg, &a.slices);
+        let f = fig_throughput::run_with_variants(a.cfg, &a.slices, &a.cached_slices, a.batch);
         println!("{}", fig_throughput::render(&f).to_markdown());
     }
     if matches!(which, "workload" | "all") {
@@ -357,7 +451,13 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
                 std::process::exit(2);
             }
         };
-        let f = fig_loadcurve::run_custom(a.cfg, &scenario, &a.slices, &a.rates());
+        let f = fig_loadcurve::run_custom_with(
+            a.cfg,
+            &scenario,
+            &a.slices,
+            &a.cached_slices,
+            &a.rates(),
+        );
         println!("{}", fig_loadcurve::render(&f).to_markdown());
         println!("{}", fig_loadcurve::render_knees(&f).to_markdown());
     }
@@ -424,16 +524,49 @@ mod tests {
     fn parses_full_flag_set() {
         let a = DcsArgs::parse(
             Scale::Default,
-            &s(&["--slices", "1,4", "--clients", "16", "--ops", "9000", "--mix", "50:30:20", "--hops", "8"]),
+            &s(&[
+                "--slices", "1,4",
+                "--cached-slices", "2,4",
+                "--batch", "4",
+                "--theta", "0.99",
+                "--clients", "16",
+                "--ops", "9000",
+                "--mix", "50:30:20",
+                "--hops", "8",
+            ]),
         )
         .unwrap();
         assert_eq!(a.slices, vec![1, 4]);
+        assert_eq!(a.cached_slices, vec![2, 4]);
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.cfg.theta, 0.99);
         assert_eq!(a.cfg.clients, 16);
         assert_eq!(a.cfg.ops, 9_000);
         assert_eq!(
             a.cfg.mix,
             MixConfig { reads: 50, writes: 30, chases: 20, chase_hops: 8 }
         );
+    }
+
+    #[test]
+    fn dcs_defaults_are_plain_and_unbatched() {
+        let a = DcsArgs::defaults(Scale::Ci);
+        assert!(a.cached_slices.is_empty());
+        assert_eq!(a.batch, 1);
+        assert_eq!(a.cfg.theta, 0.0);
+    }
+
+    #[test]
+    fn flagless_benches_reject_stray_flags() {
+        // the old behavior silently dropped these, green-washing typos
+        assert!(bench_rejects_flags("table3", &s(&["--mix", "60:20:20"])).is_err());
+        assert!(bench_rejects_flags("all", &s(&["--batch", "4"])).is_err());
+        assert!(bench_rejects_flags("fig5", &s(&["--wat"])).is_err());
+        // the flag-taking benches and flag-free invocations still pass
+        assert!(bench_rejects_flags("dcs", &s(&["--mix", "60:20:20"])).is_ok());
+        assert!(bench_rejects_flags("workload", &s(&["--cached-slices", "2"])).is_ok());
+        assert!(bench_rejects_flags("table3", &[]).is_ok());
+        assert!(bench_rejects_flags("all", &[]).is_ok());
     }
 
     #[test]
@@ -460,6 +593,8 @@ mod tests {
             &s(&[
                 "--scenario", "hot-kvs",
                 "--slices", "1,4",
+                "--cached-slices", "4",
+                "--batch", "8",
                 "--rate", "2e6,8e6",
                 "--theta", "1.2",
                 "--ops", "5000",
@@ -470,11 +605,14 @@ mod tests {
         .unwrap();
         assert_eq!(a.scenario, "hot-kvs");
         assert_eq!(a.slices, vec![1, 4]);
+        assert_eq!(a.cached_slices, vec![4]);
+        assert_eq!(a.cfg.machine.ingress_batch, 8);
         assert_eq!(a.rates(), vec![2e6, 8e6]);
         assert_eq!(a.theta, 1.2);
         assert_eq!(a.cfg.ops, 5_000);
         assert_eq!(a.cfg.arrivals, crate::workload::ArrivalKind::Deterministic);
         assert!(a.cfg.cached);
+        assert!(!a.cfg.home_cached, "--cached-slices selects curves, not the base cfg");
     }
 
     #[test]
@@ -519,5 +657,22 @@ mod tests {
         assert!(DcsArgs::parse(Scale::Ci, &s(&["--ops", "0"])).is_err(), "zero ops");
         assert!(DcsArgs::parse(Scale::Ci, &s(&["--wat", "1"])).is_err(), "unknown flag");
         assert!(DcsArgs::parse(Scale::Ci, &s(&["--clients", "0"])).is_err(), "zero clients");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--batch", "0"])).is_err(), "zero batch");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--batch", "x"])).is_err(), "non-numeric batch");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--cached-slices", "0"])).is_err(), "zero cached slices");
+        assert!(
+            DcsArgs::parse(Scale::Ci, &s(&["--cached-slices", "2000"])).is_err(),
+            "cached slices beyond the home-cache budget"
+        );
+        assert!(
+            WorkloadArgs::parse(Scale::Ci, &s(&["--cached-slices", "2000"])).is_err(),
+            "wl cached slices beyond the home-cache budget"
+        );
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--theta", "-1"])).is_err(), "negative theta");
+        assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--batch", "0"])).is_err(), "zero wl batch");
+        assert!(
+            WorkloadArgs::parse(Scale::Ci, &s(&["--cached-slices", "nope"])).is_err(),
+            "non-numeric cached slices"
+        );
     }
 }

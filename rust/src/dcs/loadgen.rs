@@ -32,6 +32,8 @@ use crate::sim::engine::Engine;
 use crate::sim::rng::Rng;
 use crate::sim::stats::{Counters, Histogram};
 use crate::sim::time::{Duration, Time};
+use crate::transport::Frame;
+use crate::workload::zipf::Zipf;
 
 use super::{Dcs, DcsConfig, SliceService};
 
@@ -80,6 +82,11 @@ pub struct LoadGenConfig {
     pub hop_think: Duration,
     /// KVS engine-pool size backing chase resolution at the home.
     pub kvs_engines: usize,
+    /// Zipf skew of the line-popularity draw (0 = uniform). Ranks are
+    /// scattered over the region by a seeded permutation, exactly like
+    /// the open-loop scenario classes, so hot lines land on arbitrary
+    /// slices.
+    pub theta: f64,
     pub seed: u64,
 }
 
@@ -93,6 +100,7 @@ impl Default for LoadGenConfig {
             link_latency: Duration::from_ns(120),
             hop_think: Duration::from_ns(2),
             kvs_engines: 8,
+            theta: 0.0,
             seed: 0xDC5,
         }
     }
@@ -167,6 +175,11 @@ pub struct LoadGen {
     /// Outstanding request ids that belong to chase hops (resolved
     /// through the KVS engine pool at the home).
     chase_ids: HashSet<u32>,
+    /// Zipf line-popularity sampler (`theta > 0`) and its rank scatter.
+    zipf: Option<Zipf>,
+    scatter: Vec<u32>,
+    /// Link-frame sequence counter for the framed dcs ingress.
+    seq: u64,
     issued: u64,
     completed: u64,
     lat: Histogram,
@@ -201,6 +214,14 @@ impl LoadGen {
             })
             .collect();
 
+        let (zipf, scatter) = if cfg.theta > 0.0 {
+            let mut r = master.fork(1 << 16);
+            let (z, p) = Zipf::scattered(cfg.region_lines, cfg.theta, &mut r);
+            (Some(z), p)
+        } else {
+            (None, Vec::new())
+        };
+
         LoadGen {
             cfg,
             eng: Engine::new(),
@@ -215,6 +236,9 @@ impl LoadGen {
             clients,
             waiters: HashMap::default(),
             chase_ids: HashSet::default(),
+            zipf,
+            scatter,
+            seq: 0,
             issued: 0,
             completed: 0,
             lat: Histogram::new(),
@@ -282,6 +306,7 @@ impl LoadGen {
     /// Draw the next operation for client `c` per the configured mix.
     fn next_op(&mut self, c: u32) {
         let mix = self.cfg.mix;
+        let region = self.cfg.region_lines;
         let cl = &mut self.clients[c as usize];
         let t = cl.rng.below(mix.total() as u64) as u32;
         let kind = if t < mix.reads {
@@ -291,7 +316,11 @@ impl LoadGen {
         } else {
             OpKind::Chase { left: mix.chase_hops.max(1) }
         };
-        cl.addr = LineAddr(cl.rng.below(self.cfg.region_lines));
+        let off = match &self.zipf {
+            Some(z) => self.scatter[z.sample(&mut cl.rng) as usize] as u64,
+            None => cl.rng.below(region),
+        };
+        cl.addr = LineAddr(off);
         cl.op = Some(kind);
         cl.started = self.eng.now();
         self.issued += 1;
@@ -394,8 +423,12 @@ impl LoadGen {
 
     fn arrive_home(&mut self, m: Message) {
         let now = self.eng.now();
-        let s = self.dcs.slice_of(m.addr);
-        self.dcs.enqueue(now, m);
+        // frame the arrival so the dcs ingress (and its cross-slice
+        // batching, `DcsConfig::batch`) sees the same delivery interface
+        // the link-framed open-loop path uses
+        let f = Frame::new(self.seq, m);
+        self.seq += 1;
+        let s = self.dcs.enqueue_frame(now, f);
         self.pump_slice(s);
     }
 
@@ -517,6 +550,91 @@ mod tests {
         assert!(r.counters.get("kvs_lookups") > 0);
         // a 4-hop dependent chase costs several directory round trips
         assert!(r.p50_ns() > 500.0, "chase p50 {}", r.p50_ns());
+    }
+
+    #[test]
+    fn zipf_theta_concentrates_the_closed_loop_working_set() {
+        // In the CLOSED loop the shared client cache sits in front of the
+        // directory, so the signature of Zipf skew is absorption: hot
+        // draws hit the client cache and far fewer operations reach the
+        // slices than under a uniform draw over the same (cache-busting)
+        // region. (The open-loop streaming engine, which releases every
+        // line, is where skew shows as per-slice load imbalance — see
+        // `harness::fig_loadcurve` tests.)
+        let probe = |theta: f64| {
+            let cfg = LoadGenConfig {
+                ops: 4_000,
+                clients: 8,
+                region_lines: 1 << 14, // 4x the 4096-line client cache
+                mix: MixConfig::read_only(),
+                theta,
+                ..Default::default()
+            };
+            run(cfg, DcsConfig::new(4))
+        };
+        let uni = probe(0.0);
+        let hot = probe(1.2);
+        assert_eq!(uni.completed, 4_000);
+        assert_eq!(hot.completed, 4_000);
+        let served = |r: &LoadReport| r.per_slice_served.iter().sum::<u64>();
+        assert!(
+            (served(&hot) as f64) < 0.8 * served(&uni) as f64,
+            "zipf 1.2 must be absorbed by the client cache: {} vs uniform {}",
+            served(&hot),
+            served(&uni)
+        );
+        // and the same seed gives the same draw stream
+        let again = probe(1.2);
+        assert_eq!(again.per_slice_served, hot.per_slice_served);
+    }
+
+    #[test]
+    fn ingress_batching_completes_the_same_workload() {
+        let mk = |batch: usize| {
+            let cfg = LoadGenConfig { ops: 2_000, clients: 8, region_lines: 1 << 15, ..Default::default() };
+            run(cfg, DcsConfig::new(2).with_batch(batch))
+        };
+        let plain = mk(1);
+        let batched = mk(4);
+        assert_eq!(plain.completed, 2_000);
+        assert_eq!(batched.completed, 2_000);
+        // the batched run actually exercised multi-frame deliveries
+        assert!(batched.counters.get("ingress_deliveries") > 0);
+        assert!(
+            batched.counters.get("ingress_batched_frames")
+                >= batched.counters.get("ingress_deliveries"),
+            "{:?}",
+            batched.counters
+        );
+        assert_eq!(plain.counters.get("ingress_deliveries"), 0, "batch=1 bypasses staging");
+    }
+
+    #[test]
+    fn cached_slices_raise_hot_read_throughput() {
+        // hot-kvs-shaped closed loop at a latency-bound operating point
+        // (few clients, enough slices): removing the backing-store round
+        // trip from repeat reads must show up as sustained throughput
+        let mk = |dcs: DcsConfig| {
+            let cfg = LoadGenConfig {
+                ops: 4_000,
+                clients: 8,
+                region_lines: 1 << 13,
+                mix: MixConfig { reads: 70, writes: 10, chases: 20, chase_hops: 2 },
+                theta: 0.99,
+                ..Default::default()
+            };
+            run(cfg, dcs)
+        };
+        let plain = mk(DcsConfig::new(4));
+        let cached = mk(DcsConfig::cached(4));
+        assert!(cached.counters.get("home_cache_hit") > 0, "{:?}", cached.counters);
+        assert_eq!(plain.counters.get("home_cache_hit"), 0);
+        assert!(
+            cached.ops_per_s > plain.ops_per_s,
+            "cached slices {} ops/s must beat cache-less {} ops/s",
+            cached.ops_per_s,
+            plain.ops_per_s
+        );
     }
 
     #[test]

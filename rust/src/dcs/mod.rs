@@ -17,6 +17,22 @@
 //!   directory pipeline for [`DcsConfig::slice_proc`], and per-slice
 //!   occupancy/wait/latency statistics feed [`crate::sim::stats`].
 //!
+//! Two orthogonal knobs extend the baseline cache-less slices:
+//!
+//! * **Slice-local home caches** ([`DcsConfig::with_home_cache`]): the
+//!   *symmetric* configuration of the paper — the FPGA side owns home
+//!   state and caches lines itself. A total capacity is split evenly
+//!   across slices; each partition indexes by `addr / slices` (so the
+//!   modulo-interleaved address stream reaches every set) and runs the
+//!   `cache_fills` home policy: shared grants fill the slice-local
+//!   cache, repeat reads skip the backing-store round trip, and victims
+//!   write back through the owning slice.
+//! * **Cross-slice ingress batching** ([`DcsConfig::with_batch`]):
+//!   frames delivered by the link stage per slice in an
+//!   [`IngressBatcher`] and reach the slice FIFOs as one VC-disciplined
+//!   batch per delivery — released when the batch fills or the slice
+//!   runs dry, with credits held until slice service either way.
+//!
 //! Per-line semantics are *identical* for any slice count: a line maps to
 //! exactly one slice in every configuration and all directory state is
 //! line-local (see [`HomeAgent`]); the property test in
@@ -33,16 +49,24 @@ pub mod loadgen;
 
 use std::collections::VecDeque;
 
+use crate::agents::cache::Cache;
 use crate::agents::dram::MemStore;
 use crate::agents::home::{HomeAgent, HomeEffect};
-use crate::proto::messages::{LineAddr, Message};
+use crate::proto::messages::{LineAddr, Message, LINE_BYTES};
 use crate::proto::spec::{generate_home, HomePolicy, HomeRules, HomeSt};
 use crate::proto::states::Node;
 use crate::proto::transitions::reference_transitions;
 use crate::sim::stats::{Counters, Histogram};
 use crate::sim::time::{Duration, Time};
+use crate::transport::ingress::IngressBatcher;
 use crate::transport::link::Frame;
 use crate::transport::vc::{vc_for, Credits, VcId, VcMux, NUM_VCS};
+
+/// Default total home-cache capacity of the symmetric sliced
+/// configuration (split across slices; BRAM-bounded on the FPGA).
+pub const DEFAULT_HOME_CACHE_BYTES: usize = 1 << 20;
+/// Default home-cache associativity.
+pub const DEFAULT_HOME_CACHE_WAYS: usize = 8;
 
 /// Configuration of the sliced directory controller.
 #[derive(Clone, Copy, Debug)]
@@ -52,17 +76,95 @@ pub struct DcsConfig {
     /// Directory-pipeline occupancy per message on one slice (lookup +
     /// datapath dispatch; `MachineConfig::home_proc` on Enzian).
     pub slice_proc: Duration,
+    /// Total home-cache capacity, split evenly across slices (0 =
+    /// cache-less slices, the asymmetric configuration). With a cache,
+    /// each slice runs the symmetric `cache_fills` home policy: shared
+    /// grants fill the slice-local cache and repeat reads skip the
+    /// backing-store round trip; victims write back through the owning
+    /// slice.
+    pub cache_bytes: usize,
+    /// Home-cache associativity.
+    pub cache_ways: usize,
+    /// Framed-ingress batch size: how many same-slice frames one
+    /// delivery may coalesce into a single VC-disciplined hand-off
+    /// (1 = batching off). See [`IngressBatcher`].
+    pub batch: usize,
 }
 
 impl DcsConfig {
     pub fn new(slices: usize) -> DcsConfig {
         assert!(slices > 0, "need at least one slice");
-        DcsConfig { slices, slice_proc: Duration::from_ns(40) }
+        DcsConfig {
+            slices,
+            slice_proc: Duration::from_ns(40),
+            cache_bytes: 0,
+            cache_ways: DEFAULT_HOME_CACHE_WAYS,
+            batch: 1,
+        }
+    }
+
+    /// The symmetric configuration: `slices` slices sharing the default
+    /// home-cache budget.
+    pub fn cached(slices: usize) -> DcsConfig {
+        DcsConfig::new(slices).with_home_cache(DEFAULT_HOME_CACHE_BYTES, DEFAULT_HOME_CACHE_WAYS)
     }
 
     pub fn with_slice_proc(mut self, d: Duration) -> DcsConfig {
         self.slice_proc = d;
         self
+    }
+
+    /// Give every slice a partition of a `total_bytes` home cache.
+    pub fn with_home_cache(mut self, total_bytes: usize, ways: usize) -> DcsConfig {
+        assert!(ways >= 1, "home cache needs at least one way");
+        self.cache_bytes = total_bytes;
+        self.cache_ways = ways;
+        self
+    }
+
+    /// Coalesce up to `batch` same-slice frames per framed-ingress
+    /// delivery.
+    pub fn with_batch(mut self, batch: usize) -> DcsConfig {
+        assert!(batch >= 1, "batch size must be >= 1");
+        self.batch = batch;
+        self
+    }
+
+    /// Does this configuration carry slice-local home caches?
+    pub fn home_cached(&self) -> bool {
+        self.cache_bytes > 0
+    }
+
+    /// Largest slice count a `total_bytes` home cache of `ways`-way sets
+    /// can be split across (every partition needs at least one full set
+    /// of ways). Lets callers reject an oversized `--cached-slices`
+    /// cleanly instead of tripping the `slice_cache` assert mid-sweep.
+    pub fn max_cached_slices(total_bytes: usize, ways: usize) -> usize {
+        total_bytes / LINE_BYTES / ways.max(1)
+    }
+
+    /// Build one slice's cache partition: `cache_bytes / slices`,
+    /// rounded down to a valid power-of-two set count, indexed by
+    /// `addr / slices` so the slice's modulo-interleaved address stream
+    /// reaches every set.
+    fn slice_cache(&self) -> Option<Cache> {
+        if self.cache_bytes == 0 {
+            return None;
+        }
+        let lines = self.cache_bytes / LINE_BYTES / self.slices;
+        let lpw = lines / self.cache_ways;
+        assert!(
+            lpw >= 1,
+            "home cache too small: {} bytes over {} slices x {} ways",
+            self.cache_bytes,
+            self.slices,
+            self.cache_ways
+        );
+        let mut sets = lpw.next_power_of_two();
+        if sets > lpw {
+            sets /= 2;
+        }
+        Some(Cache::interleaved(sets * self.cache_ways * LINE_BYTES, self.cache_ways, self.slices as u64))
     }
 }
 
@@ -132,6 +234,10 @@ pub enum SliceService {
 pub struct Dcs {
     pub cfg: DcsConfig,
     slices: Vec<Slice>,
+    /// Cross-slice ingress batching for the framed path
+    /// ([`Dcs::enqueue_frame`]): sequenced frames stage per slice and
+    /// are handed over as one VC-disciplined batch per delivery.
+    batcher: IngressBatcher,
     /// Ingress-side credit view for the mux arbiter: the dcs never
     /// throttles its own dequeue, so every VC always has a credit.
     always: Credits,
@@ -139,7 +245,8 @@ pub struct Dcs {
 
 impl Dcs {
     /// Shard the directory described by `rules` across `cfg.slices`
-    /// slice-local home agents.
+    /// slice-local home agents (each with a cache partition when the
+    /// configuration is cached).
     pub fn new(cfg: DcsConfig, rules: HomeRules, policy: HomePolicy) -> Dcs {
         assert!(cfg.slices > 0);
         let slices = (0..cfg.slices)
@@ -147,7 +254,7 @@ impl Dcs {
                 home: HomeAgent::new_slice(
                     rules.clone(),
                     policy,
-                    None,
+                    cfg.slice_cache(),
                     i as u64,
                     cfg.slices as u64,
                 ),
@@ -157,17 +264,34 @@ impl Dcs {
                 stats: SliceStats::new(),
             })
             .collect();
-        Dcs { cfg, slices, always: Credits::new(1) }
+        Dcs {
+            slices,
+            batcher: IngressBatcher::new(cfg.batch, cfg.slices),
+            always: Credits::new(1),
+            cfg,
+        }
     }
 
-    /// A dcs over the reference protocol with the default home policy.
+    /// A dcs over the reference protocol. Cache-less configurations run
+    /// the default home policy; cached ones enable `cache_fills` so
+    /// shared grants populate the slice-local caches.
     pub fn with_reference_rules(cfg: DcsConfig) -> Dcs {
-        let policy = HomePolicy::default();
+        let policy = HomePolicy { cache_fills: cfg.home_cached(), ..HomePolicy::default() };
         Dcs::new(cfg, generate_home(&reference_transitions(), policy), policy)
     }
 
     pub fn slices(&self) -> usize {
         self.slices.len()
+    }
+
+    /// Does this dcs run slice-local home caches?
+    pub fn home_cached(&self) -> bool {
+        self.cfg.home_cached()
+    }
+
+    /// Ingress-batching state (stats; staging is internal).
+    pub fn batcher(&self) -> &IngressBatcher {
+        &self.batcher
     }
 
     /// Address-interleaved slice mapping (2 slices = even/odd lines).
@@ -196,12 +320,32 @@ impl Dcs {
     /// pump that slice — and, when the slice later reports
     /// [`SliceService::Done`], return the frame's credit on the serviced
     /// VC.
+    ///
+    /// With `DcsConfig::batch > 1` the frame is *staged*: same-slice
+    /// frames coalesce into one VC-disciplined batch that reaches the
+    /// slice's FIFOs either when it fills or when the slice runs dry
+    /// (inside [`Dcs::service_one`]), whichever comes first. Staged
+    /// frames still hold their link credit — it returns at slice
+    /// service, exactly as for unbatched frames.
     pub fn enqueue_frame(&mut self, now: Time, frame: Frame) -> usize {
         debug_assert_eq!(frame.vc, vc_for(&frame.msg), "frame VC must match its message class");
         debug_assert!(frame.intact, "corrupt frames are dropped by the transaction layer");
         let s = self.slice_of(frame.msg.addr);
-        self.enqueue(now, frame.msg);
+        if self.batcher.batch_size() <= 1 {
+            self.enqueue(now, frame.msg);
+        } else if self.batcher.stage(s, now, frame) {
+            self.flush_slice(s);
+        }
         s
+    }
+
+    /// Move slice `s`'s staged ingress batch onto its VC FIFOs as one
+    /// delivery (arrival order preserved; the mux applies the usual
+    /// rank-then-round-robin discipline across the whole batch).
+    fn flush_slice(&mut self, s: usize) {
+        for (at, f) in self.batcher.take(s) {
+            self.enqueue(at, f.msg);
+        }
     }
 
     /// Attempt to service one queued message on slice `s` at `now`.
@@ -212,6 +356,16 @@ impl Dcs {
         now: Time,
         ram: &mut MemStore,
     ) -> Option<SliceService> {
+        // A drained slice pulls in its staged ingress batch (short
+        // batches flush here, so no frame is ever held past the slice
+        // running dry). While the pipeline is still busy the stage keeps
+        // accumulating — that is where batches actually form.
+        if self.slices[s].mux.is_empty() && self.batcher.pending(s) > 0 {
+            if self.slices[s].busy_until > now {
+                return Some(SliceService::Busy(self.slices[s].busy_until));
+            }
+            self.flush_slice(s);
+        }
         let proc = self.cfg.slice_proc;
         let slice = &mut self.slices[s];
         if slice.mux.is_empty() {
@@ -236,9 +390,10 @@ impl Dcs {
         Some(SliceService::Done(done, vc, fx))
     }
 
-    /// Total queued messages across slices.
+    /// Total queued messages across slices (staged ingress frames
+    /// included — they occupy receiver buffer slots like queued ones).
     pub fn pending(&self) -> usize {
-        self.slices.iter().map(|s| s.mux.pending()).sum()
+        self.slices.iter().map(|s| s.mux.pending()).sum::<usize>() + self.batcher.total_pending()
     }
 
     // -- untimed (functional) path ------------------------------------------
@@ -325,6 +480,8 @@ impl Dcs {
                 c.add(key, s.stats.served);
             }
         }
+        c.add("ingress_deliveries", self.batcher.deliveries);
+        c.add("ingress_batched_frames", self.batcher.frames);
         c
     }
 }
@@ -491,6 +648,79 @@ mod tests {
         assert_eq!(dcs.served_skew(), 1.0, "single slice is balanced by definition");
         let (dcs, _) = mk(4);
         assert_eq!(dcs.served_skew(), 1.0, "no load yet -> no skew");
+    }
+
+    #[test]
+    fn cached_slices_hit_after_first_grant_and_serve_identical_bytes() {
+        let (mut plain, mut ram_p) = mk(2);
+        let mut cached = Dcs::with_reference_rules(DcsConfig::cached(2));
+        assert!(cached.home_cached() && !plain.home_cached());
+        let mut ram_c = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            let mut l = [0u8; 128];
+            l[0] = i as u8;
+            ram_c.write_line(LineAddr(i), &l);
+        }
+        // read, release, re-read a handful of lines on both parities
+        let mut id = 0u32;
+        for round in 0..2 {
+            for addr in 0..8u64 {
+                for op in [CohOp::ReadShared, CohOp::VolDowngradeI] {
+                    let m = Message::coh_req(ReqId(id), Node::Remote, op, LineAddr(addr));
+                    id += 1;
+                    let a = plain.on_message_sync(m.clone(), &mut ram_p);
+                    let b = cached.on_message_sync(m, &mut ram_c);
+                    assert_eq!(a.len(), b.len(), "round {round} addr {addr}");
+                    for (x, y) in a.iter().zip(&b) {
+                        let (HomeEffect::Respond { msg: mx, .. }, HomeEffect::Respond { msg: my, .. }) = (x, y)
+                        else {
+                            panic!("unexpected effects {x:?} / {y:?}")
+                        };
+                        assert_eq!(mx.payload, my.payload, "cached slices must serve identical bytes");
+                    }
+                }
+            }
+        }
+        // the second round was served slice-locally
+        let c = cached.counters();
+        assert_eq!(c.get("home_cache_fill"), 8, "one fill per line");
+        assert_eq!(c.get("home_cache_hit"), 8, "round two hits the home cache");
+        assert_eq!(plain.counters().get("home_cache_hit"), 0);
+    }
+
+    #[test]
+    fn framed_batches_flush_on_full_and_on_drain() {
+        let mut dcs = Dcs::with_reference_rules(DcsConfig::new(2).with_batch(3));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            ram.write_line(LineAddr(i), &[i as u8; 128]);
+        }
+        // four even-line frames: three fill a batch (flushed at once),
+        // the fourth stays staged until the slice runs dry
+        for i in 0..4u64 {
+            let m = Message::coh_req(ReqId(i as u32), Node::Remote, CohOp::ReadShared, LineAddr(2 * i));
+            let s = dcs.enqueue_frame(Time(0), Frame::new(i, m));
+            assert_eq!(s, 0);
+        }
+        assert_eq!(dcs.pending(), 4, "staged frames still count as pending");
+        assert_eq!(dcs.slice_stats(0).enqueued, 3, "full batch reaches the FIFO at once");
+        assert_eq!(dcs.batcher().pending(0), 1);
+        // service everything: the mux drains first, then the short
+        // remainder batch is pulled in
+        let mut t = Time(0);
+        let mut done = 0;
+        loop {
+            match dcs.service_one(0, t, &mut ram) {
+                None => break,
+                Some(SliceService::Busy(at)) => t = at,
+                Some(SliceService::Done(..)) => done += 1,
+            }
+        }
+        assert_eq!(done, 4);
+        assert_eq!(dcs.pending(), 0);
+        assert_eq!(dcs.batcher().deliveries, 2);
+        assert_eq!(dcs.batcher().max_batch, 3);
+        assert_eq!(dcs.slice_stats(0).served, 4);
     }
 
     #[test]

@@ -84,6 +84,8 @@ impl LoadCurvePoint {
 #[derive(Clone, Debug)]
 pub struct LoadCurve {
     pub slices: usize,
+    /// Slice-local home caches present (`OpenLoopConfig::home_cached`)?
+    pub home_cached: bool,
     pub points: Vec<LoadCurvePoint>,
     /// Saturation rate: the highest sustained offered rate.
     pub knee_per_s: f64,
@@ -141,7 +143,7 @@ pub fn run_curve(
     let points: Vec<LoadCurvePoint> =
         rates.iter().map(|&r| run_point(cfg, scenario, slices, r)).collect();
     let knee_per_s = knee_of(&points);
-    LoadCurve { slices, points, knee_per_s }
+    LoadCurve { slices, home_cached: cfg.home_cached, points, knee_per_s }
 }
 
 /// Full figure: every slice count over the same scenario and rate grid.
@@ -151,10 +153,24 @@ pub fn run_custom(
     slices: &[usize],
     rates: &[f64],
 ) -> FigLoadCurve {
-    FigLoadCurve {
-        scenario: scenario.name.clone(),
-        curves: slices.iter().map(|&n| run_curve(cfg, scenario, n, rates)).collect(),
-    }
+    run_custom_with(cfg, scenario, slices, &[], rates)
+}
+
+/// Full figure with cached configurations: `slices` runs as configured,
+/// `cached_slices` additionally runs with slice-local home caches
+/// (`home_cached`) — the `eci bench workload --cached-slices` surface.
+pub fn run_custom_with(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: &[usize],
+    cached_slices: &[usize],
+    rates: &[f64],
+) -> FigLoadCurve {
+    let mut curves: Vec<LoadCurve> =
+        slices.iter().map(|&n| run_curve(cfg, scenario, n, rates)).collect();
+    let cached_cfg = OpenLoopConfig { home_cached: true, ..cfg };
+    curves.extend(cached_slices.iter().map(|&n| run_curve(cached_cfg, scenario, n, rates)));
+    FigLoadCurve { scenario: scenario.name.clone(), curves }
 }
 
 /// The default figure: the multi-tenant scenario (θ=0.99 hot tenant),
@@ -172,6 +188,7 @@ pub fn render(f: &FigLoadCurve) -> ResultTable {
         &format!("Latency vs offered load, scenario `{}` (open loop, framed admission)", f.scenario),
         &[
             "slices",
+            "config",
             "offered/s",
             "delivered/s",
             "p50 ns",
@@ -187,6 +204,7 @@ pub fn render(f: &FigLoadCurve) -> ResultTable {
         for p in &c.points {
             t.row(vec![
                 c.slices.to_string(),
+                if c.home_cached { "cached".into() } else { "plain".into() },
                 fmt_rate(p.offered_per_s),
                 fmt_rate(p.delivered_per_s),
                 format!("{:.0}", p.p50_ns),
@@ -206,7 +224,7 @@ pub fn render(f: &FigLoadCurve) -> ResultTable {
 pub fn render_knees(f: &FigLoadCurve) -> ResultTable {
     let mut t = ResultTable::new(
         &format!("Saturation knee vs slice count, scenario `{}`", f.scenario),
-        &["slices", "knee (sustained ops/s)"],
+        &["slices", "config", "knee (sustained ops/s)"],
     );
     for c in &f.curves {
         let knee = if c.knee_per_s > 0.0 {
@@ -214,7 +232,11 @@ pub fn render_knees(f: &FigLoadCurve) -> ResultTable {
         } else {
             "none sustained".into()
         };
-        t.row(vec![c.slices.to_string(), knee]);
+        t.row(vec![
+            c.slices.to_string(),
+            if c.home_cached { "cached".into() } else { "plain".into() },
+            knee,
+        ]);
     }
     t
 }
@@ -296,5 +318,31 @@ mod tests {
         assert!(t.to_markdown().contains("p999 ns"));
         let k = render_knees(&f);
         assert_eq!(k.rows.len(), 2);
+    }
+
+    /// Cached curves ride the same sweep: on hot-kvs traffic the cached
+    /// configuration's sub-knee latency beats cache-less slices at equal
+    /// slice count (the knee itself is pipeline-bound, so it is latency
+    /// where the home cache shows in the open loop).
+    #[test]
+    fn cached_slices_cut_subknee_latency_on_hot_kvs() {
+        let cfg = OpenLoopConfig { ops: 1_500, ..Default::default() };
+        let scenario = Scenario::preset("hot-kvs", 1 << 12, 0.99).unwrap();
+        // one comfortably sub-knee rate for 2 slices
+        let rate = 0.3 * base_rate(cfg.machine.home_proc);
+        let f = run_custom_with(cfg, &scenario, &[2], &[2], &[rate]);
+        assert_eq!(f.curves.len(), 2);
+        let plain = f.curves.iter().find(|c| !c.home_cached).unwrap();
+        let cached = f.curves.iter().find(|c| c.home_cached).unwrap();
+        assert_eq!(plain.slices, cached.slices);
+        assert!(plain.points[0].sustained() && cached.points[0].sustained());
+        assert!(
+            cached.points[0].p50_ns < plain.points[0].p50_ns,
+            "cached p50 {} must beat plain {}",
+            cached.points[0].p50_ns,
+            plain.points[0].p50_ns
+        );
+        let md = render_knees(&f).to_markdown();
+        assert!(md.contains("cached") && md.contains("plain"));
     }
 }

@@ -9,6 +9,14 @@
 //! slice count, roughly doubling while the slice pipeline is the
 //! bottleneck and flattening once the offered load (clients / round-trip)
 //! or the DRAM/KVS backends bind.
+//!
+//! The sweep can additionally carry *cached* configurations
+//! ([`DcsConfig::cached`] / `eci bench dcs --cached-slices`): the
+//! symmetric sliced directory, where each slice fronts a partition of
+//! the home-cache budget and repeat reads skip the backing-store round
+//! trip. On the hot-kvs-shaped closed loop ([`hot_kvs_cfg`],
+//! Zipf-skewed, read-mostly) the cached configuration beats cache-less
+//! slices at equal slice count — pinned by a test below.
 
 use crate::dcs::loadgen::{self, LoadGenConfig, MixConfig};
 use crate::dcs::DcsConfig;
@@ -21,6 +29,8 @@ pub const SLICE_SWEEP: [usize; 4] = [1, 2, 4, 8];
 #[derive(Clone, Debug)]
 pub struct ThroughputPoint {
     pub slices: usize,
+    /// Slice-local home caches present?
+    pub cached: bool,
     pub ops_per_s: f64,
     pub p50_ns: f64,
     pub p99_ns: f64,
@@ -28,6 +38,8 @@ pub struct ThroughputPoint {
     /// Mean slice-pipeline occupancy (0..1).
     pub occupancy: f64,
     pub per_slice_served: Vec<u64>,
+    /// Reads served from the slice-local home caches.
+    pub home_hits: u64,
 }
 
 pub struct FigThroughput {
@@ -45,11 +57,12 @@ pub fn ops_for(scale: Scale) -> u64 {
     }
 }
 
-/// One sweep point: the configured workload against `slices` slices,
-/// using [`DcsConfig::new`]'s slice-pipeline calibration (~12 fabric
-/// cycles at 300 MHz, the Enzian `home_proc`).
-pub fn run_point(cfg: LoadGenConfig, slices: usize) -> ThroughputPoint {
-    let r = loadgen::run(cfg, DcsConfig::new(slices));
+/// One sweep point against an explicit dcs shape (slice count, home
+/// cache, ingress batch).
+pub fn run_point_dcs(cfg: LoadGenConfig, dcs: DcsConfig) -> ThroughputPoint {
+    let slices = dcs.slices;
+    let cached = dcs.home_cached();
+    let r = loadgen::run(cfg, dcs);
     let occupancy = if r.per_slice_occupancy.is_empty() {
         0.0
     } else {
@@ -57,19 +70,71 @@ pub fn run_point(cfg: LoadGenConfig, slices: usize) -> ThroughputPoint {
     };
     ThroughputPoint {
         slices,
+        cached,
         ops_per_s: r.ops_per_s,
         p50_ns: r.p50_ns(),
         p99_ns: r.p99_ns(),
         p999_ns: r.p999_ns(),
         occupancy,
+        home_hits: r.counters.get("home_cache_hit"),
         per_slice_served: r.per_slice_served,
     }
 }
 
+/// One sweep point: the configured workload against `slices` cache-less
+/// slices, using [`DcsConfig::new`]'s slice-pipeline calibration (~12
+/// fabric cycles at 300 MHz, the Enzian `home_proc`).
+pub fn run_point(cfg: LoadGenConfig, slices: usize) -> ThroughputPoint {
+    run_point_dcs(cfg, DcsConfig::new(slices))
+}
+
 /// Sweep the given slice counts with one workload configuration.
 pub fn run_with(cfg: LoadGenConfig, slices: &[usize]) -> FigThroughput {
-    let points = slices.iter().map(|&n| run_point(cfg, n)).collect();
+    run_with_variants(cfg, slices, &[], 1)
+}
+
+/// Full sweep: cache-less points for `slices`, cached points
+/// ([`DcsConfig::cached`]) for `cached_slices`, all with ingress batch
+/// size `batch` — the `eci bench dcs --slices/--cached-slices/--batch`
+/// surface.
+pub fn run_with_variants(
+    cfg: LoadGenConfig,
+    slices: &[usize],
+    cached_slices: &[usize],
+    batch: usize,
+) -> FigThroughput {
+    let mut points: Vec<ThroughputPoint> = slices
+        .iter()
+        .map(|&n| run_point_dcs(cfg, DcsConfig::new(n).with_batch(batch)))
+        .collect();
+    points.extend(
+        cached_slices
+            .iter()
+            .map(|&n| run_point_dcs(cfg, DcsConfig::cached(n).with_batch(batch))),
+    );
     FigThroughput { cfg, points }
+}
+
+/// The hot-kvs-shaped closed-loop workload: Zipf(0.99) popularity,
+/// read-mostly with short chases, few enough clients to stay
+/// latency-bound — the operating point where slice-local home caching
+/// shows up in sustained throughput.
+pub fn hot_kvs_cfg(scale: Scale) -> LoadGenConfig {
+    LoadGenConfig {
+        ops: ops_for(scale),
+        clients: 8,
+        region_lines: 1 << 13,
+        theta: 0.99,
+        mix: MixConfig { reads: 70, writes: 10, chases: 20, chase_hops: 2 },
+        ..Default::default()
+    }
+}
+
+/// Cached-vs-plain comparison on the hot-kvs workload: one cache-less
+/// and one cached point per slice count.
+pub fn run_cached_comparison(scale: Scale, slices: &[usize], batch: usize) -> FigThroughput {
+    let cfg = hot_kvs_cfg(scale);
+    run_with_variants(cfg, slices, slices, batch)
 }
 
 /// The default figure: mixed read/write/pointer-chase workload from 32
@@ -84,19 +149,26 @@ pub fn render(f: &FigThroughput) -> ResultTable {
     let mix = f.cfg.mix;
     let mut t = ResultTable::new(
         &format!(
-            "Directory throughput vs slice count ({} clients, mix r:w:c = {}:{}:{}, {} hops)",
-            f.cfg.clients, mix.reads, mix.writes, mix.chases, mix.chase_hops
+            "Directory throughput vs slice count ({} clients, mix r:w:c = {}:{}:{}, {} hops{})",
+            f.cfg.clients,
+            mix.reads,
+            mix.writes,
+            mix.chases,
+            mix.chase_hops,
+            if f.cfg.theta > 0.0 { format!(", Zipf {}", f.cfg.theta) } else { String::new() },
         ),
-        &["slices", "ops/s", "p50 ns", "p99 ns", "p999 ns", "occupancy", "per-slice served"],
+        &["slices", "config", "ops/s", "p50 ns", "p99 ns", "p999 ns", "occupancy", "home hits", "per-slice served"],
     );
     for p in &f.points {
         t.row(vec![
             p.slices.to_string(),
+            if p.cached { "cached".into() } else { "plain".into() },
             fmt_rate(p.ops_per_s),
             format!("{:.0}", p.p50_ns),
             format!("{:.0}", p.p99_ns),
             format!("{:.0}", p.p999_ns),
             format!("{:.2}", p.occupancy),
+            p.home_hits.to_string(),
             format!("{:?}", p.per_slice_served),
         ]);
     }
@@ -137,12 +209,36 @@ mod tests {
         assert!(p1.occupancy > 0.5, "1-slice occupancy {}", p1.occupancy);
     }
 
+    /// The tentpole acceptance shape: on the hot-kvs workload, the
+    /// cached sliced configuration must beat cache-less slices at equal
+    /// slice count.
+    #[test]
+    fn cached_slices_beat_plain_on_hot_kvs() {
+        let f = run_cached_comparison(Scale::Ci, &[4], 1);
+        assert_eq!(f.points.len(), 2);
+        let plain = f.points.iter().find(|p| !p.cached).unwrap();
+        let cached = f.points.iter().find(|p| p.cached).unwrap();
+        assert_eq!(plain.slices, cached.slices);
+        assert_eq!(plain.home_hits, 0);
+        assert!(cached.home_hits > 0, "hot reads must hit the home cache");
+        assert!(
+            cached.ops_per_s > plain.ops_per_s,
+            "cached {} ops/s must beat plain {} ops/s at {} slices",
+            cached.ops_per_s,
+            plain.ops_per_s,
+            plain.slices
+        );
+    }
+
     #[test]
     fn render_has_one_row_per_point() {
         let cfg = LoadGenConfig { ops: 500, clients: 4, ..Default::default() };
-        let f = run_with(cfg, &[1, 2]);
+        let f = run_with_variants(cfg, &[1, 2], &[2], 2);
         let t = render(&f);
-        assert_eq!(t.rows.len(), 2);
-        assert!(t.to_markdown().contains("slices"));
+        assert_eq!(t.rows.len(), 3);
+        let md = t.to_markdown();
+        assert!(md.contains("slices"));
+        assert!(md.contains("cached"));
+        assert!(md.contains("plain"));
     }
 }

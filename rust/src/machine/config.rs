@@ -60,6 +60,16 @@ pub struct MachineConfig {
     pub remote_proc: Duration,
     /// Reverse-path latency of credit returns / ack control frames.
     pub ctrl_latency: Duration,
+    /// Total home-cache capacity of the symmetric sliced configuration
+    /// (split across slices by [`MachineConfig::dcs_cached_config`];
+    /// BRAM-bounded on the FPGA).
+    pub home_cache_bytes: usize,
+    /// Home-cache associativity.
+    pub home_cache_ways: usize,
+    /// Framed-ingress batch size at the dcs (1 = batching off): how many
+    /// same-slice frames one delivery may coalesce into a single
+    /// VC-disciplined hand-off.
+    pub ingress_batch: usize,
     pub seed: u64,
 }
 
@@ -80,6 +90,9 @@ impl MachineConfig {
             home_proc: Duration::from_ns(40),
             remote_proc: Duration::from_ns(10),
             ctrl_latency: Duration::from_ns(80),
+            home_cache_bytes: crate::dcs::DEFAULT_HOME_CACHE_BYTES,
+            home_cache_ways: crate::dcs::DEFAULT_HOME_CACHE_WAYS,
+            ingress_batch: 1,
             seed: 0xEC1,
         }
     }
@@ -98,6 +111,9 @@ impl MachineConfig {
             home_proc: Duration::from_ns(5),
             remote_proc: Duration::from_ns(5),
             ctrl_latency: Duration::from_ns(8),
+            home_cache_bytes: crate::dcs::DEFAULT_HOME_CACHE_BYTES,
+            home_cache_ways: crate::dcs::DEFAULT_HOME_CACHE_WAYS,
+            ingress_batch: 1,
             seed: 0xEC1,
         }
     }
@@ -119,7 +135,16 @@ impl MachineConfig {
     /// subsystem's scenario nodes, so a scenario run and a machine run
     /// against the same configuration exercise the same directory.
     pub fn dcs_config(&self, slices: usize) -> DcsConfig {
-        DcsConfig::new(slices).with_slice_proc(self.home_proc)
+        DcsConfig::new(slices).with_slice_proc(self.home_proc).with_batch(self.ingress_batch)
+    }
+
+    /// The *cached* sliced-directory shape: same pipelines, plus a
+    /// slice-local partition of the machine's home-cache budget per
+    /// slice — the symmetric configuration, sharded. Used by
+    /// [`crate::machine::Machine::dcs_cached_node`] and the workload
+    /// subsystem's `home_cached` runs.
+    pub fn dcs_cached_config(&self, slices: usize) -> DcsConfig {
+        self.dcs_config(slices).with_home_cache(self.home_cache_bytes, self.home_cache_ways)
     }
 }
 

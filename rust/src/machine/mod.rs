@@ -254,6 +254,12 @@ pub struct Machine {
     pub config_block: ConfigBlock,
     fpga_dram: Dram,
     pub fpga_mem: MemStore,
+    /// Link-frame sequence counter for the framed dcs ingress.
+    dcs_seq: u64,
+    /// High-water mark of messages held at the dcs ingress (queued +
+    /// staged). With credits held until slice service this is bounded
+    /// by the credit budget of the VCs in use; see `tests/machine_credits.rs`.
+    dcs_ingress_peak: usize,
 
     // workload
     workload: Workload,
@@ -307,6 +313,8 @@ impl Machine {
             config_block: ConfigBlock::new(),
             fpga_dram: Dram::new(cfg.fpga_dram),
             fpga_mem,
+            dcs_seq: 0,
+            dcs_ingress_peak: 0,
             workload: Workload::Idle,
             shared_cursor: 0,
             shared_limit: 0,
@@ -343,6 +351,23 @@ impl Machine {
         cpu_mem: MemStore,
     ) -> Machine {
         let dcs = Dcs::with_reference_rules(cfg.dcs_config(slices));
+        Machine::new(cfg, FpgaApp::Dcs(dcs), fpga_mem, cpu_mem)
+    }
+
+    /// The *cached* sliced machine: the sharded directory controller
+    /// with a slice-local partition of the machine's home-cache budget
+    /// on every slice (`MachineConfig::dcs_cached_config`) — the
+    /// symmetric configuration as a first-class machine. Protocol
+    /// outcomes are identical to [`Machine::memory_node`] (pinned by the
+    /// litmus suite in `rust/tests/litmus.rs`); repeat shared reads are
+    /// served slice-locally instead of from FPGA DRAM.
+    pub fn dcs_cached_node(
+        cfg: MachineConfig,
+        slices: usize,
+        fpga_mem: MemStore,
+        cpu_mem: MemStore,
+    ) -> Machine {
+        let dcs = Dcs::with_reference_rules(cfg.dcs_cached_config(slices));
         Machine::new(cfg, FpgaApp::Dcs(dcs), fpga_mem, cpu_mem)
     }
 
@@ -408,13 +433,20 @@ impl Machine {
     }
 
     pub fn report(&self) -> Report {
+        let mut counters = self.counters.clone();
+        counters.add("dcs_ingress_peak", self.dcs_ingress_peak as u64);
+        if let FpgaApp::Dcs(dcs) = &self.app {
+            for (k, v) in dcs.counters().iter() {
+                counters.add(k, v);
+            }
+        }
         Report {
             sim_time: self.eng.now(),
             load_lat: self.load_lat.clone(),
             remote_bytes: self.remote_meter.total,
             results: self.results,
             rows_scanned: self.rows_scanned,
-            counters: self.counters.clone(),
+            counters,
             events: self.eng.dispatched,
             llc_hits: self.llc.hits,
             llc_misses: self.llc.misses,
@@ -768,7 +800,15 @@ impl Machine {
                     self.eng.schedule_at(t, Ev::DcsPoll(s as u32));
                     break;
                 }
-                Some(SliceService::Done(ready, _, fx)) => {
+                Some(SliceService::Done(ready, vc, fx)) => {
+                    // the slice consumed the message: only now does its
+                    // link-buffer slot free up (credits are held until
+                    // slice service, not frame arrival — the same
+                    // semantics as the workload engine's framed ingress)
+                    self.eng.schedule_at(
+                        ready + self.cfg.ctrl_latency,
+                        Ev::CreditRet { dir: 0, vc },
+                    );
                     for e in fx {
                         match e {
                             HomeEffect::Respond { msg, from_ram } => {
@@ -815,8 +855,17 @@ impl Machine {
         if let Some(tap) = self.tap.as_mut() {
             tap(now, dir == 0, &msg);
         }
-        // receiver consumed the frame: its buffer slot flows back
-        self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::CreditRet { dir, vc });
+        // Receiver consumed the frame: its buffer slot flows back — with
+        // one exception. A coherence message bound for the sliced
+        // directory occupies its slot until the owning slice *services*
+        // it; `pump_dcs_slice` returns that credit at `SliceService::Done`.
+        // (I/O messages sink at the config block and free up here.)
+        let defer_credit = dir == 0
+            && matches!(self.app, FpgaApp::Dcs(_))
+            && matches!(msg.kind, MsgKind::CohReq { .. } | MsgKind::CohRsp { .. });
+        if !defer_credit {
+            self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::CreditRet { dir, vc });
+        }
         if dir == 0 {
             self.fpga_receive(msg);
         } else {
@@ -928,10 +977,13 @@ impl Machine {
         }
 
         if let FpgaApp::Dcs(dcs) = &mut self.app {
-            // queue on the owning slice's VC FIFO, then drain whatever
-            // that slice's pipeline can service right now
-            let s = dcs.slice_of(msg.addr);
-            dcs.enqueue(now, msg);
+            // hand the message to the framed dcs ingress (staging it
+            // into a cross-slice batch when `ingress_batch > 1`), then
+            // drain whatever that slice's pipeline can service right now
+            let f = Frame::new(self.dcs_seq, msg);
+            self.dcs_seq += 1;
+            let s = dcs.enqueue_frame(now, f);
+            self.dcs_ingress_peak = self.dcs_ingress_peak.max(dcs.pending());
             self.pump_dcs_slice(s);
             return;
         }
@@ -1136,6 +1188,66 @@ mod tests {
         assert_eq!(bad.load(std::sync::atomic::Ordering::Relaxed), 0, "payload corruption");
         assert_eq!(r.remote_bytes, 1024 * 128);
         assert!(r.sim_time > Time(0));
+    }
+
+    #[test]
+    fn dcs_cached_node_serves_repeat_reads_from_home_cache() {
+        let cfg = MachineConfig::test_small();
+        let (mut fpga, cpu) = small_mem();
+        for i in 0..512u64 {
+            let mut l = [0u8; 128];
+            l[0..8].copy_from_slice(&(i * 3 + 5).to_le_bytes());
+            fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+        }
+        let mut m = Machine::dcs_cached_node(cfg, 2, fpga, cpu);
+        let bad = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        {
+            let bad2 = std::sync::Arc::clone(&bad);
+            m.verify_fill = Some(Box::new(move |addr, data| {
+                let i = addr.0 - map::TABLE_BASE.0;
+                let got = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                if got != i * 3 + 5 {
+                    bad2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }));
+        }
+        m.set_workload(Workload::StreamRemote { lines: 512 }, 4);
+        let r = m.run();
+        assert_eq!(bad.load(std::sync::atomic::Ordering::Relaxed), 0, "payload corruption");
+        assert_eq!(r.remote_bytes, 512 * 128);
+        // every line was granted once and filled the home cache
+        assert_eq!(r.counters.get("home_cache_fill"), 512, "{:?}", r.counters);
+    }
+
+    #[test]
+    fn dcs_cached_node_cuts_dependent_read_latency() {
+        // dependent random reads over a region several times the (small)
+        // LLC: re-reads keep falling out of the LLC and go back to the
+        // directory, where the cached node serves them slice-locally
+        // instead of paying the FPGA-DRAM round trip
+        let run = |cached: bool| {
+            let cfg = MachineConfig::test_small(); // 256 KiB LLC
+            let (fpga, cpu) = small_mem();
+            let mut m = if cached {
+                Machine::dcs_cached_node(cfg, 2, fpga, cpu)
+            } else {
+                Machine::dcs_node(cfg, 2, fpga, cpu)
+            };
+            // 8192 lines = 1 MiB: heavily over-subscribes the LLC (so
+            // re-reads keep going back to the directory) while fitting
+            // the 1 MiB home-cache budget entirely
+            m.set_workload(Workload::ChaseRemote { count: 10_000, region_lines: 8 << 10 }, 1);
+            let r = m.run();
+            (r.mean_load_ns(), r.counters.get("home_cache_hit"))
+        };
+        let (plain_ns, plain_hits) = run(false);
+        let (cached_ns, cached_hits) = run(true);
+        assert_eq!(plain_hits, 0);
+        assert!(cached_hits > 0, "random re-touches must hit the home cache");
+        assert!(
+            cached_ns < plain_ns,
+            "cached {cached_ns} ns must beat cache-less {plain_ns} ns"
+        );
     }
 
     #[test]

@@ -458,11 +458,19 @@ pub struct HomePolicy {
     /// On receiving a dirty writeback / fwd response: cache it (MI) rather
     /// than writing straight to RAM (II).
     pub cache_writebacks: bool,
+    /// On granting a shared copy from an idle home (`own = I`): also fill
+    /// the home's own cache with a clean S copy, so repeat reads of the
+    /// line are served slice-locally instead of paying a backing-store
+    /// round trip. This is the symmetric-configuration fill path for the
+    /// sliced home caches (`crate::dcs`); it is invisible to the remote
+    /// (requirement 4 — home local states are silent) and must only be
+    /// enabled on agents that actually carry a [`crate::agents::cache::Cache`].
+    pub cache_fills: bool,
 }
 
 impl Default for HomePolicy {
     fn default() -> Self {
-        HomePolicy { hidden_o: true, cache_writebacks: false }
+        HomePolicy { hidden_o: true, cache_writebacks: false, cache_fills: false }
     }
 }
 
@@ -755,10 +763,25 @@ fn grant_shared(st: HomeSt, policy: HomePolicy) -> (Vec<HAction>, HomeSt) {
     use CacheState::*;
     use HAction as A;
     match st.own {
-        I => (
-            vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: true, dirty: false }],
-            HomeSt { own: I, own_dirty: false, view: RemoteView::S, pending_fwd: None },
-        ),
+        I => {
+            if policy.cache_fills {
+                // symmetric sliced-home configuration: the grant's RAM
+                // read also fills the home cache (clean S), so repeat
+                // reads are served slice-locally (from_ram = false).
+                (
+                    vec![
+                        A::FillOwn { state: S, dirty: false },
+                        A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: true, dirty: false },
+                    ],
+                    HomeSt { own: S, own_dirty: false, view: RemoteView::S, pending_fwd: None },
+                )
+            } else {
+                (
+                    vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: true, dirty: false }],
+                    HomeSt { own: I, own_dirty: false, view: RemoteView::S, pending_fwd: None },
+                )
+            }
+        }
         S | E => (
             vec![A::SendRsp { op: CohOp::ReadShared, with_data: true, from_ram: false, dirty: false }],
             HomeSt { own: S, own_dirty: st.own_dirty, view: RemoteView::S, pending_fwd: None },
@@ -937,13 +960,43 @@ mod tests {
     fn home_without_hidden_o_writes_back_first() {
         let rules = generate_home(
             &reference_transitions(),
-            HomePolicy { hidden_o: false, cache_writebacks: false },
+            HomePolicy { hidden_o: false, ..HomePolicy::default() },
         );
         let st = HomeSt { own: CacheState::M, own_dirty: true, view: RemoteView::I, pending_fwd: None };
         let r = &rules[&(st, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
         assert!(r.actions.contains(&HAction::WriteRam));
         assert_eq!(r.next.own, CacheState::I);
         assert_eq!(r.next.view, RemoteView::S);
+    }
+
+    #[test]
+    fn cache_fills_policy_fills_home_cache_on_shared_grant() {
+        let rules = generate_home(
+            &reference_transitions(),
+            HomePolicy { cache_fills: true, ..HomePolicy::default() },
+        );
+        let st = HomeSt::idle();
+        let r = &rules[&(st, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        // the first grant reads RAM and installs a clean home copy ...
+        assert!(r
+            .actions
+            .contains(&HAction::FillOwn { state: CacheState::S, dirty: false }));
+        assert_eq!(r.next.own, CacheState::S);
+        assert_eq!(r.next.view, RemoteView::S);
+        // ... so the NEXT shared grant is served from the home cache.
+        let r2 = &rules[&(r.next, HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        let from_ram = r2.actions.iter().any(
+            |a| matches!(a, HAction::SendRsp { from_ram, .. } if *from_ram),
+        );
+        assert!(!from_ram, "repeat grant must be slice-local: {:?}", r2.actions);
+        // an exclusive grant must surrender the home copy (single writer)
+        let r3 = &rules[&(r.next, HEvent::Req { op: CohOp::ReadExclusive, with_data: false })];
+        assert_eq!(r3.next.own, CacheState::I);
+        assert!(r3.actions.contains(&HAction::DropOwn));
+        // default policy tables are unchanged by the new knob
+        let plain = generate_home(&reference_transitions(), HomePolicy::default());
+        let p = &plain[&(HomeSt::idle(), HEvent::Req { op: CohOp::ReadShared, with_data: false })];
+        assert_eq!(p.next.own, CacheState::I);
     }
 
     #[test]

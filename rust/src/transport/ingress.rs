@@ -30,6 +30,92 @@ use super::transaction::RxResult;
 use super::vc::{VcId, NUM_VCS};
 use super::{LinkConfig, LinkDir};
 
+/// Cross-slice ingress batching: groups frames delivered by the link
+/// (already sequenced by the transaction layer) into per-consumer
+/// batches, so a sliced directory hands each slice ONE VC-disciplined
+/// delivery instead of one per frame.
+///
+/// Staging is strictly *post-sequencing, pre-slice-FIFO*: frames enter
+/// in wire order and leave toward each consumer in that same order, so
+/// per-VC FIFO order is preserved — the only reordering a batch
+/// introduces is the rank-then-round-robin arbitration the slice's own
+/// [`super::vc::VcMux`] applies to everything it holds anyway. A batch
+/// is released when it reaches `batch` frames; the consumer flushes the
+/// remainder whenever it runs dry (see `Dcs::service_one`), so no frame
+/// is ever held indefinitely. Credits stay with the frames: a staged
+/// frame has NOT been consumed, so its credit is returned only when the
+/// slice services it — staging can therefore never leak buffer slots
+/// past the credit budget.
+pub struct IngressBatcher {
+    batch: usize,
+    staged: Vec<Vec<(Time, Frame)>>,
+    /// Batches handed to consumers.
+    pub deliveries: u64,
+    /// Frames that passed through the batcher.
+    pub frames: u64,
+    /// Largest batch delivered.
+    pub max_batch: usize,
+}
+
+impl IngressBatcher {
+    /// `batch` frames per delivery (1 = batching off), one staging lane
+    /// per consumer (directory slice).
+    pub fn new(batch: usize, consumers: usize) -> IngressBatcher {
+        assert!(batch >= 1, "batch size must be >= 1");
+        assert!(consumers >= 1, "need at least one consumer");
+        IngressBatcher {
+            batch,
+            staged: (0..consumers).map(|_| Vec::new()).collect(),
+            deliveries: 0,
+            frames: 0,
+            max_batch: 0,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Stage one sequenced frame for consumer `c`; returns `true` when
+    /// the lane reached the batch size and must be flushed now.
+    pub fn stage(&mut self, c: usize, at: Time, frame: Frame) -> bool {
+        let lane = &mut self.staged[c];
+        lane.push((at, frame));
+        lane.len() >= self.batch
+    }
+
+    /// Frames currently staged for consumer `c`.
+    pub fn pending(&self, c: usize) -> usize {
+        self.staged[c].len()
+    }
+
+    /// Frames staged across all consumers.
+    pub fn total_pending(&self) -> usize {
+        self.staged.iter().map(|l| l.len()).sum()
+    }
+
+    /// Hand consumer `c` its batch (possibly short, if the consumer ran
+    /// dry before the lane filled). Frames come out in arrival order.
+    pub fn take(&mut self, c: usize) -> Vec<(Time, Frame)> {
+        let out = std::mem::take(&mut self.staged[c]);
+        if !out.is_empty() {
+            self.deliveries += 1;
+            self.frames += out.len() as u64;
+            self.max_batch = self.max_batch.max(out.len());
+        }
+        out
+    }
+
+    /// Mean frames per delivery so far (1.0 when batching is off).
+    pub fn mean_batch(&self) -> f64 {
+        if self.deliveries == 0 {
+            0.0
+        } else {
+            self.frames as f64 / self.deliveries as f64
+        }
+    }
+}
+
 /// One direction of framed generator admission: a [`LinkDir`] plus
 /// offered-load accounting.
 pub struct FramedIngress {
@@ -159,6 +245,31 @@ mod tests {
         let mut out3 = Vec::new();
         ing.pump(Time(0), &mut out3);
         assert_eq!(out3.len(), 1);
+    }
+
+    #[test]
+    fn batcher_releases_on_full_and_flushes_short_batches() {
+        let mut b = IngressBatcher::new(3, 2);
+        let f = |i: u32, addr: u64| Frame::new(i as u64, req(i, addr));
+        assert!(!b.stage(0, Time(0), f(0, 0)));
+        assert!(!b.stage(0, Time(1), f(1, 2)));
+        assert!(!b.stage(1, Time(1), f(2, 1)), "lanes fill independently");
+        assert!(b.stage(0, Time(2), f(3, 4)), "third frame fills lane 0");
+        let full = b.take(0);
+        assert_eq!(full.len(), 3);
+        // arrival order preserved within the batch
+        assert_eq!(full.iter().map(|(_, f)| f.seq).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(b.pending(0), 0);
+        assert_eq!(b.pending(1), 1);
+        // a short flush (consumer ran dry) still counts as one delivery
+        let short = b.take(1);
+        assert_eq!(short.len(), 1);
+        assert!(b.take(1).is_empty(), "empty take is free");
+        assert_eq!(b.deliveries, 2);
+        assert_eq!(b.frames, 4);
+        assert_eq!(b.max_batch, 3);
+        assert!((b.mean_batch() - 2.0).abs() < 1e-9);
+        assert_eq!(b.total_pending(), 0);
     }
 
     #[test]

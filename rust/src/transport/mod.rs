@@ -19,7 +19,7 @@ use crate::proto::states::Node;
 use crate::sim::rng::Rng;
 use crate::sim::time::Time;
 
-pub use ingress::FramedIngress;
+pub use ingress::{FramedIngress, IngressBatcher};
 pub use link::{Control, Frame, CONTROL_BYTES};
 pub use phys::{PhysConfig, PhysDir};
 pub use transaction::{RxResult, RxState, TxState};

@@ -67,6 +67,13 @@ pub struct OpenLoopConfig {
     /// `false` (default): streaming client — every line is voluntarily
     /// released after use, so every operation reaches the directory.
     pub cached: bool,
+    /// `true`: the directory runs *cached* slices — each slice carries a
+    /// partition of the machine's home-cache budget
+    /// (`MachineConfig::dcs_cached_config`), so repeat shared reads are
+    /// served slice-locally instead of from FPGA DRAM. Independent of
+    /// `cached` (client side); the interesting streaming configurations
+    /// are exactly the ones where only the home side caches.
+    pub home_cached: bool,
     /// Client-side processing between dependent chase hops.
     pub hop_think: Duration,
     /// KVS engine-pool size backing chase resolution at the home.
@@ -84,6 +91,7 @@ impl Default for OpenLoopConfig {
             arrivals: ArrivalKind::Poisson,
             ops: 20_000,
             cached: false,
+            home_cached: false,
             hop_think: Duration::from_ns(2),
             kvs_engines: 8,
             seed: 0x0C3A,
@@ -116,6 +124,10 @@ pub struct OpenLoopReport {
     pub credit_stalls: u64,
     /// High-water mark of the request-direction transmit queue.
     pub peak_tx_queue: usize,
+    /// High-water mark of launched-but-unserviced request frames across
+    /// all VCs. Credits are held until slice service (batched or not),
+    /// so this never exceeds the per-VC budget times the VCs in use.
+    pub peak_in_flight: u32,
     pub counters: Counters,
 }
 
@@ -219,6 +231,8 @@ pub struct OpenLoop {
     /// deep overload every frame arrival would otherwise schedule its
     /// own redundant poll chain — quadratic event count).
     poll_at: Vec<Time>,
+    /// High-water mark of request-direction in-flight frames.
+    peak_in_flight: u32,
     /// Reused launch buffer for the link pumps (they run on every
     /// send/credit/control event; a fresh Vec each time is pure churn).
     scratch: Vec<(Time, Frame)>,
@@ -256,14 +270,9 @@ impl OpenLoop {
             let (zipf, perm) = match c.popularity {
                 Popularity::Uniform => (None, Vec::new()),
                 Popularity::Zipf { theta } => {
-                    assert!(
-                        c.footprint_lines <= u32::MAX as u64,
-                        "Zipf footprint too large to scatter"
-                    );
-                    let mut p: Vec<u32> = (0..c.footprint_lines as u32).collect();
                     let mut r = master.fork(100 + i as u64);
-                    r.shuffle(&mut p);
-                    (Some(Zipf::new(c.footprint_lines, theta)), p)
+                    let (z, p) = Zipf::scattered(c.footprint_lines, theta, &mut r);
+                    (Some(z), p)
                 }
             };
             classes.push(ClassRt {
@@ -278,10 +287,16 @@ impl OpenLoop {
             base += c.footprint_lines;
         }
 
+        let dcs_cfg = if cfg.home_cached {
+            cfg.machine.dcs_cached_config(slices)
+        } else {
+            cfg.machine.dcs_config(slices)
+        };
+
         OpenLoop {
             scenario_name: scenario.name.clone(),
             eng: Engine::new(),
-            dcs: Dcs::with_reference_rules(cfg.machine.dcs_config(slices)),
+            dcs: Dcs::with_reference_rules(dcs_cfg),
             mem,
             dram: Dram::new(cfg.machine.fpga_dram),
             kvs: KvsService::new(cfg.kvs_engines),
@@ -310,6 +325,7 @@ impl OpenLoop {
             issued: 0,
             completed: 0,
             poll_at: vec![Time::ZERO; slices],
+            peak_in_flight: 0,
             scratch: Vec::new(),
             lat: Histogram::new(),
             counters: Counters::new(),
@@ -402,6 +418,7 @@ impl OpenLoop {
             occupancy_skew,
             credit_stalls: self.to_home.credit_stalls,
             peak_tx_queue: self.to_home.peak_queue,
+            peak_in_flight: self.peak_in_flight,
             counters,
         }
     }
@@ -602,6 +619,7 @@ impl OpenLoop {
             self.eng.schedule_at(at, Ev::LandHome(Box::new(f)));
         }
         self.scratch = out;
+        self.peak_in_flight = self.peak_in_flight.max(self.to_home.in_flight_total());
     }
 
     fn pump_cpu(&mut self) {
@@ -809,6 +827,70 @@ mod tests {
             served(&streaming)
         );
         assert_eq!(cached.counters.get("released"), 0);
+    }
+
+    #[test]
+    fn home_cached_slices_cut_latency_on_hot_kvs() {
+        // streaming clients release every line, so every repeat read
+        // reaches the directory — exactly where a slice-local home cache
+        // replaces the FPGA-DRAM round trip
+        let sc = Scenario::preset("hot-kvs", 1 << 12, 0.99).expect("preset");
+        let mk = |home_cached| {
+            let cfg = OpenLoopConfig {
+                rate_per_s: 3e6,
+                ops: 2_000,
+                home_cached,
+                ..Default::default()
+            };
+            run(cfg, &sc, 2)
+        };
+        let plain = mk(false);
+        let cached = mk(true);
+        assert_eq!(plain.completed, 2_000);
+        assert_eq!(cached.completed, 2_000);
+        assert_eq!(plain.counters.get("home_cache_hit"), 0);
+        assert!(cached.counters.get("home_cache_hit") > 0, "{:?}", cached.counters);
+        assert!(
+            cached.p50_ns() < plain.p50_ns(),
+            "cached slices p50 {} must beat cache-less {}",
+            cached.p50_ns(),
+            plain.p50_ns()
+        );
+    }
+
+    #[test]
+    fn ingress_batching_is_credit_bounded_and_drains() {
+        // overload with batching on: staged frames keep their credits,
+        // so in-flight never exceeds the budget, and the open loop still
+        // completes every arrival
+        let mk = |batch: usize| {
+            let mut cfg = OpenLoopConfig { rate_per_s: 60e6, ops: 1_500, ..Default::default() };
+            cfg.machine.ingress_batch = batch;
+            let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+            run(cfg, &sc, 1)
+        };
+        let plain = mk(1);
+        let batched = mk(4);
+        assert_eq!(plain.completed, 1_500);
+        assert_eq!(batched.completed, 1_500, "batched overload must still drain");
+        let budget =
+            OpenLoopConfig::default().machine.link.credits_per_vc * crate::transport::NUM_VCS as u32;
+        assert!(batched.peak_in_flight > 0);
+        assert!(
+            batched.peak_in_flight <= budget,
+            "batched in-flight {} exceeds credit budget {budget}",
+            batched.peak_in_flight
+        );
+        assert!(plain.peak_in_flight <= budget);
+        // batching actually formed multi-frame deliveries under overload
+        assert!(batched.counters.get("ingress_deliveries") > 0);
+        assert!(
+            batched.counters.get("ingress_batched_frames")
+                > batched.counters.get("ingress_deliveries"),
+            "overload must produce batches larger than one: {:?}",
+            batched.counters
+        );
+        assert_eq!(plain.counters.get("ingress_deliveries"), 0);
     }
 
     #[test]

@@ -77,6 +77,18 @@ impl Zipf {
         let k = self.cdf.partition_point(|&c| c <= u);
         k.min(self.cdf.len() - 1) as u64
     }
+
+    /// A sampler plus its rank scatter: a seeded permutation mapping
+    /// rank -> line offset, so the hot set lands on arbitrary directory
+    /// slices instead of rank 0 always hitting slice 0. Shared by the
+    /// closed-loop (`dcs::loadgen`) and open-loop (`workload::openloop`)
+    /// generators so both place hot lines the same way.
+    pub fn scattered(n: u64, theta: f64, rng: &mut Rng) -> (Zipf, Vec<u32>) {
+        assert!(n <= u32::MAX as u64, "Zipf support too large to scatter");
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        (Zipf::new(n, theta), perm)
+    }
 }
 
 #[cfg(test)]

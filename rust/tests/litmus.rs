@@ -2,13 +2,32 @@
 //! the complete stack (caches + agents + transport + home node), checking
 //! the invariants the protocol exists to provide — data-value coherence,
 //! store visibility through writebacks, recall correctness.
+//!
+//! Every scenario runs against FOUR home-side configurations: the
+//! monolithic `Machine::memory_node` (the paper's symmetric baseline)
+//! and the sliced cached `Machine::dcs_cached_node` at 1, 2 and 4
+//! slices. Sharding the directory and giving each slice a home-cache
+//! partition must be invisible to protocol outcomes — every observable
+//! (writeback bytes in FPGA memory, fill payloads seen by cores, I/O
+//! round trips) is asserted identical across all configurations.
 
 use eci::agents::dram::MemStore;
 use eci::machine::{map, Machine, MachineConfig, Op, Workload};
 use eci::proto::messages::{LineAddr, LINE_BYTES};
 use eci::sim::time::Duration;
 
-fn machine() -> Machine {
+/// Home-side configurations under test: `None` = monolithic memory
+/// node, `Some(n)` = sliced cached directory with `n` slices.
+const CONFIGS: [Option<usize>; 4] = [None, Some(1), Some(2), Some(4)];
+
+fn config_name(c: Option<usize>) -> String {
+    match c {
+        None => "memory_node".into(),
+        Some(n) => format!("dcs_cached_node x{n}"),
+    }
+}
+
+fn machine_with(config: Option<usize>) -> Machine {
     let cfg = MachineConfig::test_small();
     let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
     for i in 0..1024u64 {
@@ -17,7 +36,10 @@ fn machine() -> Machine {
         fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
     }
     let cpu = MemStore::new(LineAddr(0), 1 << 20);
-    Machine::memory_node(cfg, fpga, cpu)
+    match config {
+        None => Machine::memory_node(cfg, fpga, cpu),
+        Some(n) => Machine::dcs_cached_node(cfg, n, fpga, cpu),
+    }
 }
 
 fn a(i: u64) -> LineAddr {
@@ -27,25 +49,30 @@ fn a(i: u64) -> LineAddr {
 #[test]
 fn store_then_evict_reaches_fpga_memory() {
     // Core 0 dirties a remote line, then touches enough conflicting lines
-    // to evict it; the dirty writeback must land in FPGA memory.
-    let mut m = machine();
-    let target = a(0);
-    let mut prog = vec![Op::Store(target, 0xDEAD_BEEF)];
-    // the test LLC is 256 KiB 16-way = 128 sets; lines at stride 128
-    // (set 0) conflict; 20 fills overflow the 16 ways
-    for k in 1..=20u64 {
-        prog.push(Op::Load(a(k * 128)));
+    // to evict it; the dirty writeback must land in FPGA memory — also
+    // through a cached slice (`cache_writebacks` stays off: the backing
+    // store remains authoritative for dirty data).
+    for config in CONFIGS {
+        let name = config_name(config);
+        let mut m = machine_with(config);
+        let target = a(0);
+        let mut prog = vec![Op::Store(target, 0xDEAD_BEEF)];
+        // the test LLC is 256 KiB 16-way = 128 sets; lines at stride 128
+        // (set 0) conflict; 20 fills overflow the 16 ways
+        for k in 1..=20u64 {
+            prog.push(Op::Load(a(k * 128)));
+        }
+        prog.push(Op::Think(Duration::from_us(2)));
+        m.set_workload(Workload::Script { programs: vec![prog] }, 1);
+        let r = m.run();
+        assert!(r.counters.get("end_marker_seen") == 0, "{name}");
+        let line = m.fpga_mem.read_line(target);
+        assert_eq!(
+            u64::from_le_bytes(line[0..8].try_into().unwrap()),
+            0xDEAD_BEEF,
+            "{name}: dirty writeback must reach the home's backing store"
+        );
     }
-    prog.push(Op::Think(Duration::from_us(2)));
-    m.set_workload(Workload::Script { programs: vec![prog] }, 1);
-    let r = m.run();
-    assert!(r.counters.get("end_marker_seen") == 0);
-    let line = m.fpga_mem.read_line(target);
-    assert_eq!(
-        u64::from_le_bytes(line[0..8].try_into().unwrap()),
-        0xDEAD_BEEF,
-        "dirty writeback must reach the home's backing store"
-    );
 }
 
 #[test]
@@ -53,62 +80,62 @@ fn store_visibility_across_cores_through_shared_llc() {
     // Core 0 stores; core 1 loads the same line later (think delay).
     // Both share the LLC, so the load must see the store (single socket,
     // but the line is REMOTE — exercising the E/M fill path).
-    let mut m = machine();
-    let target = a(7);
-    let p0 = vec![Op::Store(target, 42)];
-    let p1 = vec![Op::Think(Duration::from_us(10)), Op::Load(target)];
-    m.set_workload(Workload::Script { programs: vec![p0, p1] }, 2);
-    m.run();
-    // the LLC copy must be M with the stored value
-    // (end state visible via a third read through fpga memory writeback:
-    //  force writeback by dropping the machine's LLC — instead assert via
-    //  a follow-up machine run: simpler: check it did NOT write back and
-    //  the line is dirty in cache semantics by reading fpga mem: must
-    //  still hold the ORIGINAL value)
-    let line = m.fpga_mem.read_line(target);
-    assert_eq!(
-        u64::from_le_bytes(line[0..8].try_into().unwrap()),
-        1007,
-        "no writeback happened; home copy is stale by design (single-writer)"
-    );
+    for config in CONFIGS {
+        let name = config_name(config);
+        let mut m = machine_with(config);
+        let target = a(7);
+        let p0 = vec![Op::Store(target, 42)];
+        let p1 = vec![Op::Think(Duration::from_us(10)), Op::Load(target)];
+        m.set_workload(Workload::Script { programs: vec![p0, p1] }, 2);
+        m.run();
+        // no writeback happened; the home copy is stale by design
+        // (single-writer) — in EVERY configuration
+        let line = m.fpga_mem.read_line(target);
+        assert_eq!(
+            u64::from_le_bytes(line[0..8].try_into().unwrap()),
+            1007,
+            "{name}: home copy must be untouched while the remote owns the line"
+        );
+    }
 }
 
 #[test]
 fn read_after_remote_write_round_trip() {
     // Store to remote line, evict (writeback), then read it back:
-    // the read must observe the stored value after the full round trip.
-    let mut m = machine();
-    let target = a(3);
-    let mut prog = vec![Op::Store(target, 0xC0FFEE)];
-    for k in 1..=20u64 {
-        prog.push(Op::Load(a(k * 128 + 3))); // same set as target (stride 128)
-    }
-    prog.push(Op::Load(target));
-    m.set_workload(Workload::Script { programs: vec![prog] }, 1);
-    let seen_value = std::rc::Rc::new(std::cell::RefCell::new(None::<u64>));
-    {
-        let seen = std::rc::Rc::clone(&seen_value);
-        m.verify_fill = Some(Box::new(move |addr, data| {
-            if addr == LineAddr(map::TABLE_BASE.0 + 3) {
-                *seen.borrow_mut() = Some(u64::from_le_bytes(data[0..8].try_into().unwrap()));
+    // the read must observe the stored value after the full round trip —
+    // in the cached configurations the re-read refills the home cache
+    // from the POST-writeback bytes, so a stale-cache bug shows here.
+    for config in CONFIGS {
+        let name = config_name(config);
+        let mut m = machine_with(config);
+        let target = a(3);
+        let mut prog = vec![Op::Store(target, 0xC0FFEE)];
+        for k in 1..=20u64 {
+            prog.push(Op::Load(a(k * 128 + 3))); // same set as target (stride 128)
+        }
+        prog.push(Op::Load(target));
+        m.set_workload(Workload::Script { programs: vec![prog] }, 1);
+        let seen_value = std::rc::Rc::new(std::cell::RefCell::new(None::<u64>));
+        {
+            let seen = std::rc::Rc::clone(&seen_value);
+            m.verify_fill = Some(Box::new(move |addr, data| {
+                if addr == LineAddr(map::TABLE_BASE.0 + 3) {
+                    *seen.borrow_mut() =
+                        Some(u64::from_le_bytes(data[0..8].try_into().unwrap()));
+                }
+            }));
+        }
+        m.run();
+        let got = *seen_value.borrow();
+        let line_mem = m.fpga_mem.read_line(target);
+        let mem_val = u64::from_le_bytes(line_mem[0..8].try_into().unwrap());
+        match got {
+            Some(v) => {
+                assert_eq!(v, 0xC0FFEE, "{name}: re-read must observe the written value");
+                assert_eq!(mem_val, 0xC0FFEE, "{name}");
             }
-        }));
-    }
-    m.run();
-    let got = *seen_value.borrow();
-    // either the final fill carried the written value, or the line never
-    // left the cache (no eviction) — in both cases fpga_mem or cache must
-    // hold 0xC0FFEE; check the authoritative copy:
-    let line_mem = m.fpga_mem.read_line(target);
-    let mem_val = u64::from_le_bytes(line_mem[0..8].try_into().unwrap());
-    if let Some(v) = got {
-        assert_eq!(v, 0xC0FFEE, "re-read must observe the written value");
-        assert_eq!(mem_val, 0xC0FFEE);
-    } else {
-        // never evicted: memory may be stale but the LLC holds M data.
-        // Force the invariant check through memory: eviction must have
-        // happened given 21 same-set fills vs 16 ways:
-        panic!("expected the target line to be evicted and re-fetched");
+            None => panic!("{name}: expected the target line to be evicted and re-fetched"),
+        }
     }
 }
 
@@ -116,60 +143,103 @@ fn read_after_remote_write_round_trip() {
 fn many_cores_hammering_one_line_stay_coherent() {
     // 4 cores interleave loads of one line; MSHR merging must produce one
     // remote transaction wave, and everyone sees the same data.
-    let mut m = machine();
-    let target = a(11);
-    let progs: Vec<Vec<Op>> = (0..4)
-        .map(|_| (0..16).map(|_| Op::Load(target)).collect())
-        .collect();
-    m.set_workload(Workload::Script { programs: progs }, 4);
-    let bad = std::rc::Rc::new(std::cell::RefCell::new(0u32));
-    {
-        let bad2 = std::rc::Rc::clone(&bad);
-        m.verify_fill = Some(Box::new(move |_addr, data| {
-            let v = u64::from_le_bytes(data[0..8].try_into().unwrap());
-            if v != 1011 {
-                *bad2.borrow_mut() += 1;
-            }
-        }));
+    for config in CONFIGS {
+        let name = config_name(config);
+        let mut m = machine_with(config);
+        let target = a(11);
+        let progs: Vec<Vec<Op>> = (0..4)
+            .map(|_| (0..16).map(|_| Op::Load(target)).collect())
+            .collect();
+        m.set_workload(Workload::Script { programs: progs }, 4);
+        let bad = std::rc::Rc::new(std::cell::RefCell::new(0u32));
+        {
+            let bad2 = std::rc::Rc::clone(&bad);
+            m.verify_fill = Some(Box::new(move |_addr, data| {
+                let v = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                if v != 1011 {
+                    *bad2.borrow_mut() += 1;
+                }
+            }));
+        }
+        let r = m.run();
+        assert_eq!(*bad.borrow(), 0, "{name}");
+        assert!(
+            r.counters.get("fifo_reads") == 0,
+            "{name}: home-node configs should not touch the fifo path"
+        );
     }
-    let r = m.run();
-    assert_eq!(*bad.borrow(), 0);
-    // one ReadShared should have been enough (MSHR merge): the counter is
-    // on the remote agent; check via requests observed at the home
-    assert!(
-        r.counters.get("fifo_reads") == 0,
-        "memory-node config should not touch the fifo path"
-    );
 }
 
 #[test]
 fn io_config_round_trip_over_protocol() {
     // Write the SELECT parameters through ECI I/O messages, read back.
-    let mut m = machine();
-    let x = 0.25f32.to_bits() as u64;
-    let y = 0.75f32.to_bits() as u64;
-    use eci::memctl::config_block::regs;
-    let prog = vec![
-        Op::IoWrite(regs::SELECT_X, x),
-        Op::IoWrite(regs::SELECT_Y, y),
-        Op::IoRead(regs::SELECT_X),
-        Op::IoRead(regs::SELECT_Y),
-    ];
-    m.set_workload(Workload::Script { programs: vec![prog] }, 1);
-    m.run();
-    let (gx, gy) = m.config_block.select_params();
-    assert_eq!((gx, gy), (0.25, 0.75));
-    assert_eq!(m.config_block.writes, 2);
-    assert!(m.config_block.reads >= 2);
+    // I/O rides its own VCs and must bypass the sliced directory (and
+    // its deferred credit return) in every configuration.
+    for config in CONFIGS {
+        let name = config_name(config);
+        let mut m = machine_with(config);
+        let x = 0.25f32.to_bits() as u64;
+        let y = 0.75f32.to_bits() as u64;
+        use eci::memctl::config_block::regs;
+        let prog = vec![
+            Op::IoWrite(regs::SELECT_X, x),
+            Op::IoWrite(regs::SELECT_Y, y),
+            Op::IoRead(regs::SELECT_X),
+            Op::IoRead(regs::SELECT_Y),
+        ];
+        m.set_workload(Workload::Script { programs: vec![prog] }, 1);
+        m.run();
+        let (gx, gy) = m.config_block.select_params();
+        assert_eq!((gx, gy), (0.25, 0.75), "{name}");
+        assert_eq!(m.config_block.writes, 2, "{name}");
+        assert!(m.config_block.reads >= 2, "{name}");
+    }
 }
 
 #[test]
 fn deterministic_replay_same_seed_same_timeline() {
-    let run = || {
-        let mut m = machine();
-        m.set_workload(Workload::StreamRemote { lines: 500 }, 3);
+    for config in CONFIGS {
+        let name = config_name(config);
+        let run = || {
+            let mut m = machine_with(config);
+            m.set_workload(Workload::StreamRemote { lines: 500 }, 3);
+            let r = m.run();
+            (r.sim_time, r.events, r.remote_bytes)
+        };
+        assert_eq!(run(), run(), "{name}: simulation must be bit-reproducible");
+    }
+}
+
+#[test]
+fn stream_fill_payloads_identical_across_configurations() {
+    // The same streamed region must deliver byte-identical fill payloads
+    // on every configuration — the end-to-end "sharded + cached home is
+    // protocol-invisible" check, including the home-cache hit path
+    // (lines evicted from the LLC and re-read under capacity pressure).
+    let run = |config: Option<usize>| {
+        let mut m = machine_with(config);
+        let sums = std::rc::Rc::new(std::cell::RefCell::new(std::collections::BTreeMap::new()));
+        {
+            let sums2 = std::rc::Rc::clone(&sums);
+            m.verify_fill = Some(Box::new(move |addr, data| {
+                let v = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                *sums2.borrow_mut().entry(addr.0).or_insert(0u64) += v;
+            }));
+        }
+        m.set_workload(Workload::StreamRemote { lines: 1024 }, 4);
         let r = m.run();
-        (r.sim_time, r.events, r.remote_bytes)
+        assert_eq!(r.remote_bytes, 1024 * 128);
+        let out = sums.borrow().clone();
+        out
     };
-    assert_eq!(run(), run(), "simulation must be bit-reproducible");
+    let baseline = run(None);
+    for config in [Some(1), Some(2), Some(4)] {
+        let got = run(config);
+        assert_eq!(
+            got,
+            baseline,
+            "{}: fill payloads diverge from memory_node",
+            config_name(config)
+        );
+    }
 }

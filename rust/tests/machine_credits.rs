@@ -1,0 +1,120 @@
+//! Regression tests for the machine-path dcs ingress credit semantics.
+//!
+//! PR 2 made the *workload engine* hold request credits until the owning
+//! directory slice services a message. The machine model, however, kept
+//! returning credits at frame ARRIVAL, so under overload the dcs ingress
+//! queues could grow far past the link's credit budget — backpressure
+//! the real transaction layer would exert simply vanished. These tests
+//! pin the fix (credits now flow back at `SliceService::Done`) and would
+//! fail under the old hold-until-arrival behavior, where the ingress
+//! high-water mark tracks the number of requesting cores instead of the
+//! credit budget.
+
+use eci::agents::dram::MemStore;
+use eci::machine::{map, Machine, MachineConfig, Op, Workload};
+use eci::proto::messages::LineAddr;
+use eci::sim::time::Duration;
+
+fn mems() -> (MemStore, MemStore) {
+    let mut fpga = MemStore::new(map::TABLE_BASE, 4 << 20);
+    for i in 0..4096u64 {
+        let mut l = [0u8; 128];
+        l[0..8].copy_from_slice(&i.to_le_bytes());
+        fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+    }
+    let cpu = MemStore::new(LineAddr(0), 1 << 20);
+    (fpga, cpu)
+}
+
+fn a(i: u64) -> LineAddr {
+    LineAddr(map::TABLE_BASE.0 + i)
+}
+
+/// Mirror of the workload-path credit property: a single slow slice
+/// flooded by many streaming cores. In-flight (= ingress-held) frames
+/// ride two request VCs (even/odd lines), so the ingress high-water mark
+/// is bounded by twice the per-VC credit budget — NOT by the 48 cores
+/// that are all trying to issue at once.
+#[test]
+fn overloaded_dcs_ingress_is_bounded_by_request_credits() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.cpu.cores = 48;
+    // freeze the directory relative to the link: every arrival piles up
+    cfg.home_proc = Duration::from_us(2);
+    let (fpga, cpu) = mems();
+    let mut m = Machine::dcs_node(cfg, 1, fpga, cpu);
+    // 2000 lines fit the 2048-line LLC: pure read traffic, no writebacks
+    m.set_workload(Workload::StreamRemote { lines: 2000 }, 48);
+    let r = m.run();
+    let peak = r.counters.get("dcs_ingress_peak");
+    let per_vc = cfg.link.credits_per_vc as u64;
+    assert!(
+        peak >= per_vc,
+        "overload never pressed the ingress (peak {peak}, credits/VC {per_vc})"
+    );
+    assert!(
+        peak <= 2 * per_vc,
+        "ingress peak {peak} exceeds the 2-request-VC credit budget {} — \
+         credits are being returned before slice service",
+        2 * per_vc
+    );
+}
+
+/// The old hold-until-arrival behavior is gone: with every request on
+/// ONE VC (even lines only) and the slice pipeline frozen, at most
+/// `credits_per_vc` messages can ever sit at the dcs ingress. Under the
+/// old semantics the queue grew to one entry per requesting core (24
+/// here), because arrival recycled the credit immediately.
+#[test]
+fn single_vc_ingress_peak_stops_at_the_credit_budget() {
+    let mut cfg = MachineConfig::test_small();
+    cfg.cpu.cores = 24;
+    cfg.home_proc = Duration::from_us(2);
+    let (fpga, cpu) = mems();
+    let mut m = Machine::dcs_node(cfg, 1, fpga, cpu);
+    // one load per core, all even lines -> all on the even request VC
+    let programs: Vec<Vec<Op>> = (0..24u64).map(|c| vec![Op::Load(a(2 * c))]).collect();
+    m.set_workload(Workload::Script { programs }, 24);
+    let r = m.run();
+    let peak = r.counters.get("dcs_ingress_peak");
+    let per_vc = cfg.link.credits_per_vc as u64;
+    assert!(peak >= per_vc.saturating_sub(2), "expected credit-limit pressure, peak {peak}");
+    assert!(
+        peak <= per_vc,
+        "ingress peak {peak} exceeds the single-VC budget {per_vc}: \
+         the old return-at-arrival behavior is back"
+    );
+    // every core still completed its load (backpressure, not starvation)
+    assert_eq!(r.load_lat.count(), 24);
+}
+
+/// Credit deferral must not change what the machine computes: the same
+/// stream delivers the same bytes, and a cached sliced node at default
+/// timing still completes with bounded ingress occupancy.
+#[test]
+fn bounded_ingress_still_delivers_correct_data() {
+    let cfg = MachineConfig::test_small();
+    let (fpga, cpu) = mems();
+    let mut m = Machine::dcs_cached_node(cfg, 2, fpga, cpu);
+    let bad = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    {
+        let bad2 = std::sync::Arc::clone(&bad);
+        m.verify_fill = Some(Box::new(move |addr, data| {
+            let i = addr.0 - map::TABLE_BASE.0;
+            let got = u64::from_le_bytes(data[0..8].try_into().unwrap());
+            if got != i {
+                bad2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }));
+    }
+    m.set_workload(Workload::StreamRemote { lines: 1500 }, 4);
+    let r = m.run();
+    assert_eq!(bad.load(std::sync::atomic::Ordering::Relaxed), 0, "payload corruption");
+    assert_eq!(r.remote_bytes, 1500 * 128);
+    let peak = r.counters.get("dcs_ingress_peak");
+    assert!(peak >= 1);
+    // 4 closed-loop cores can never hold more than 4 reads + their
+    // release traffic; far below the budget, but still bounded by it
+    let budget = (cfg.link.credits_per_vc as u64) * eci::transport::NUM_VCS as u64;
+    assert!(peak <= budget, "peak {peak} vs budget {budget}");
+}

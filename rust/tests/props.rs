@@ -396,6 +396,227 @@ fn sliced_directory_is_equivalent_to_monolith_per_line() {
         );
 }
 
+/// Ingress batching is semantically transparent: routing the identical
+/// message trace through a batched (batch = 4) and an unbatched sliced
+/// directory yields identical per-line home->remote message sequences
+/// and identical final directory state. Batching only regroups
+/// *deliveries*; per-VC FIFO order is preserved and the mux applies the
+/// same rank discipline either way.
+#[test]
+fn ingress_batching_is_transparent_to_protocol_outcomes() {
+    use eci::dcs::{Dcs, DcsConfig, SliceService};
+    use eci::sim::time::{Duration, Time};
+    use eci::transport::Frame;
+
+    const LINES: u64 = 8;
+
+    #[derive(Clone, Debug)]
+    enum Act {
+        Read(u8),
+        Write(u8),
+        Evict(u8),
+    }
+
+    /// Deliver `burst` through the framed (batched) ingress and pump the
+    /// slices to quiescence, feeding responses back through the remote
+    /// (whose follow-up messages form the next burst round).
+    #[allow(clippy::too_many_arguments)]
+    fn pump_all(
+        burst: &mut Vec<Message>,
+        dcs: &mut Dcs,
+        remote: &mut RemoteAgent,
+        cache: &mut Cache,
+        ram: &mut MemStore,
+        seq: &mut u64,
+        log: &mut [Vec<String>],
+    ) {
+        while !burst.is_empty() {
+            for m in burst.drain(..) {
+                dcs.enqueue_frame(Time(0), Frame::new(*seq, m));
+                *seq += 1;
+            }
+            for s in 0..dcs.slices() {
+                while let Some(sv) = dcs.service_one(s, Time(0), ram) {
+                    let SliceService::Done(_, _, fx) = sv else {
+                        panic!("zero-occupancy slice reported busy")
+                    };
+                    for e in fx {
+                        let rsp = match e {
+                            HomeEffect::Respond { msg, .. } => msg,
+                            HomeEffect::Fwd { msg } => msg,
+                            _ => continue,
+                        };
+                        let line = rsp.addr.0 as usize % LINES as usize;
+                        log[line].push(format!(
+                            "{:?} payload={:?}",
+                            rsp.kind,
+                            rsp.payload.as_ref().map(|p| p[0])
+                        ));
+                        for e2 in remote.on_message(rsp, cache) {
+                            if let RemoteEffect::Send(m2) = e2 {
+                                burst.push(m2);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one trace through the framed ingress of a 4-slice dcs with
+    /// the given batch size (slice pipelines at zero occupancy so the
+    /// pump services to quiescence); return (per-line log of
+    /// home-emitted messages, final per-line directory state). Acts are
+    /// delivered in chunks of 5, so the staged batches genuinely carry
+    /// multiple frames; an access landing while its line is still
+    /// mid-transaction stalls locally and is dropped — deterministically
+    /// identical in both runs, since stalling depends only on per-line
+    /// history.
+    fn run(batch: usize, acts: &[Act]) -> (Vec<Vec<String>>, Vec<eci::proto::spec::HomeSt>) {
+        let spec = reference_transitions();
+        let mut remote =
+            RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), 1 << 20);
+        let mut cache = Cache::new(16 * 1024, 4);
+        let mut dcs = Dcs::with_reference_rules(
+            DcsConfig::new(4).with_slice_proc(Duration::ZERO).with_batch(batch),
+        );
+        let mut ram = MemStore::new(LineAddr(0), 64 * 128);
+        let mut log: Vec<Vec<String>> = vec![Vec::new(); LINES as usize];
+        let mut seq = 0u64;
+        let mut burst: Vec<Message> = Vec::new();
+        for (k, act) in acts.iter().enumerate() {
+            let (addr, write, evict) = match act {
+                Act::Read(a) => (LineAddr(*a as u64), false, false),
+                Act::Write(a) => (LineAddr(*a as u64), true, false),
+                Act::Evict(a) => (LineAddr(*a as u64), false, true),
+            };
+            let fx = if evict {
+                remote.evict(addr, &mut cache)
+            } else {
+                let (_, fx) = remote.local_access(addr, write, &mut cache);
+                fx
+            };
+            burst.extend(fx.into_iter().filter_map(|e| match e {
+                RemoteEffect::Send(m) => Some(m),
+                _ => None,
+            }));
+            if (k + 1) % 5 == 0 {
+                pump_all(&mut burst, &mut dcs, &mut remote, &mut cache, &mut ram, &mut seq, &mut log);
+                assert_eq!(dcs.pending(), 0, "trace must quiesce between chunks");
+            }
+        }
+        pump_all(&mut burst, &mut dcs, &mut remote, &mut cache, &mut ram, &mut seq, &mut log);
+        assert_eq!(dcs.pending(), 0, "trace must quiesce");
+        let states = (0..LINES).map(|l| dcs.state_of(LineAddr(l))).collect();
+        (log, states)
+    }
+
+    Prop::new("ingress batching transparency")
+        .cases(40)
+        .max_size(100)
+        .check_vec(
+            |g| {
+                let addr = g.below(LINES) as u8;
+                match g.below(3) {
+                    0 => Act::Read(addr),
+                    1 => Act::Write(addr),
+                    _ => Act::Evict(addr),
+                }
+            },
+            |acts| {
+                let (log1, st1) = run(1, acts);
+                let (log4, st4) = run(4, acts);
+                log1 == log4 && st1 == st4
+            },
+        );
+}
+
+/// Batched delivery never exceeds the credit budget: frames staged in
+/// the ingress batcher still occupy their receiver buffer slot, so
+/// launched-but-unserviced frames (queued, staged OR in a slice FIFO)
+/// exactly account for the held credits, and the budget bounds them at
+/// every step. Credits flow back only at `SliceService::Done`.
+#[test]
+fn batched_ingress_holds_credits_until_slice_service() {
+    use eci::dcs::{Dcs, DcsConfig, SliceService};
+    use eci::sim::rng::Rng;
+    use eci::sim::time::{Duration, Time};
+    use eci::transport::{FramedIngress, LinkConfig};
+
+    Prop::new("batched ingress credit accounting").cases(25).check(
+        |g| {
+            let credits = 1 + g.below(5) as u32;
+            let msgs = 30 + g.below(120);
+            let batch = 2 + g.below(4) as usize;
+            let seed = g.below(1 << 32);
+            (credits, msgs, batch, seed)
+        },
+        |&(credits, msgs, batch, seed)| {
+            let mut cfg = LinkConfig::eci();
+            cfg.credits_per_vc = credits;
+            let mut ing = FramedIngress::new(cfg, Node::Remote, Rng::new(seed));
+            let mut dcs = Dcs::with_reference_rules(
+                DcsConfig::new(2).with_slice_proc(Duration::ZERO).with_batch(batch),
+            );
+            let mut ram = MemStore::new(LineAddr(0), 64 * 128);
+            let mut rng = Rng::new(seed ^ 0xBA7C);
+            for i in 0..msgs {
+                let addr = LineAddr(rng.below(64));
+                ing.offer(Message::coh_req(
+                    ReqId(i as u32),
+                    Node::Remote,
+                    CohOp::ReadShared,
+                    addr,
+                ));
+            }
+            let budget = credits * NUM_VCS as u32;
+            let mut now = Time(0);
+            let mut serviced = 0u64;
+            while serviced < msgs {
+                let mut out = Vec::new();
+                ing.pump(now, &mut out);
+                for (at, f) in out {
+                    if at > now {
+                        now = at;
+                    }
+                    let (fr, ctl) = ing.deliver(f);
+                    if let Some(c) = ctl {
+                        ing.on_control(c);
+                    }
+                    dcs.enqueue_frame(now, fr.expect("in-sequence frame must deliver"));
+                }
+                // every launched-but-unserviced frame — including the
+                // ones STAGED in the batcher — still holds its credit
+                assert_eq!(
+                    ing.in_flight_total() as usize,
+                    dcs.pending(),
+                    "staged frames must hold their buffer slots"
+                );
+                assert!(
+                    ing.in_flight_total() <= budget,
+                    "in-flight {} exceeds budget {budget}",
+                    ing.in_flight_total()
+                );
+                for s in 0..dcs.slices() {
+                    while let Some(sv) = dcs.service_one(s, now, &mut ram) {
+                        let SliceService::Done(_, vc, _) = sv else {
+                            panic!("zero-occupancy slice reported busy")
+                        };
+                        ing.credit_return(vc);
+                        serviced += 1;
+                    }
+                }
+                now = now + Duration::from_ns(50);
+            }
+            assert_eq!(serviced, msgs);
+            assert_eq!(ing.queued(), 0);
+            assert_eq!(ing.in_flight_total(), 0);
+            assert_eq!(dcs.pending(), 0);
+            true
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // workload-subsystem properties
 // ---------------------------------------------------------------------------
