@@ -1,0 +1,32 @@
+//! Bench: goodput and tail latency vs bit-error rate on the reliable
+//! lossy link (per-VC go-back-N replay beneath the sliced directory).
+//! Custom harness (criterion is not available in the offline registry).
+
+use eci::harness::{fig_goodput, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_goodput::run(scale);
+    println!("{}", fig_goodput::render(&f).to_markdown());
+    let clean = f
+        .points
+        .iter()
+        .find(|p| p.ber == 0.0)
+        .expect("sweep carries the clean baseline");
+    let worst = f
+        .points
+        .iter()
+        .filter(|p| p.slices == clean.slices && !p.home_cached)
+        .max_by(|a, b| a.ber.total_cmp(&b.ber))
+        .expect("sweep is non-empty");
+    println!(
+        "goodput: ber 0 {:.2}M ops/s -> ber {:.0e} {:.2}M ops/s (frame goodput {:.3}, {} retx)   (host {:?}, scale {scale:?})",
+        clean.delivered_per_s / 1e6,
+        worst.ber,
+        worst.delivered_per_s / 1e6,
+        worst.frame_goodput,
+        worst.retransmitted,
+        t0.elapsed()
+    );
+}

@@ -32,14 +32,30 @@
 //!                    [--slices 1,2,4,8] [--cached-slices 2,4]
 //!                    [--batch 4] [--rate 2e6,8e6,...] [--theta 0.99]
 //!                    [--classes hot-kvs:2,scan:1] [--ops 12000]
-//!                    [--arrivals poisson|fixed] [--cached]
+//!                    [--arrivals poisson|fixed] [--cached] [--seed N]
 //! ```
+//!
+//! The `faults` bench (goodput and tail latency vs bit-error rate over
+//! the reliable lossy link — `harness::fig_goodput`):
+//!
+//! ```text
+//! eci bench faults [--ber 1e-6,1e-4,1e-3] [--drop 0.02] [--reorder 0.02]
+//!                  [--burst 8] [--seed 7] [--slices 1,4]
+//!                  [--cached-slices 2] [--rate 2e6] [--ops 1200]
+//!                  [--scenario scan]
+//! ```
+//!
+//! Every stochastic bench takes a global `--seed` (Poisson arrivals,
+//! Zipf draws, fault injection all derive from it, so any run is
+//! reproducible from the command line). Defaults: `dcs` 0xDC5,
+//! `workload`/`faults` 0x0C3A.
 //!
 //! Flags are only accepted by the bench they belong to; every other
 //! bench id rejects stray arguments loudly (a typo must not green-wash
 //! a CI smoke step).
 
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
+use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
     fig5, fig6, fig7, fig8, fig_loadcurve, fig_throughput, table2, table3, Scale,
 };
@@ -66,12 +82,16 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|all]|check|trace-demo>\n\
                  dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
-                                 --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99\n\
+                                 --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N\n\
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
                                  --batch 4 --rate 2e6,8e6 --theta 0.99 --classes hot-kvs:2,scan:1\n\
-                                 --ops 12000 --arrivals poisson|fixed --cached\n\
+                                 --ops 12000 --arrivals poisson|fixed --cached --seed N\n\
+                 faults flags:   --ber 1e-6,1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8\n\
+                                 --seed 7 --slices 1,4 --cached-slices 2 --rate 2e6\n\
+                                 --ops 1200 --scenario {scenarios}\n\
+                 seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults 0x0C3A)\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})",
                 scenarios = Scenario::preset_names().join("|")
             );
@@ -159,6 +179,9 @@ impl DcsArgs {
                 "--hops" => {
                     out.cfg.mix.chase_hops =
                         val.parse().map_err(|_| format!("bad hop count {val:?}"))?;
+                }
+                "--seed" => {
+                    out.cfg.seed = parse_seed(val)?;
                 }
                 other => return Err(format!("unknown dcs flag {other:?}")),
             }
@@ -314,6 +337,9 @@ impl WorkloadArgs {
                     out.cfg.arrivals = ArrivalKind::parse(val)
                         .ok_or_else(|| format!("bad arrival process {val:?}"))?;
                 }
+                "--seed" => {
+                    out.cfg.seed = parse_seed(val)?;
+                }
                 other => return Err(format!("unknown workload flag {other:?}")),
             }
         }
@@ -355,6 +381,146 @@ impl WorkloadArgs {
     }
 }
 
+/// Parsed `eci bench faults` flags: fault knobs + sweep axes for the
+/// reliable-lossy-link goodput figure (`harness::fig_goodput`).
+#[derive(Clone, Debug)]
+pub struct FaultsArgs {
+    pub slices: Vec<usize>,
+    /// Slice counts to additionally sweep with slice-local home caches.
+    pub cached_slices: Vec<usize>,
+    pub scenario: String,
+    /// Bit-error-rate grid (0 = clean baseline through the rel layer).
+    pub bers: Vec<f64>,
+    pub knobs: FaultKnobs,
+    /// Fixed offered rate; default derives from the slice pipeline.
+    pub rate: Option<f64>,
+    pub cfg: OpenLoopConfig,
+}
+
+impl FaultsArgs {
+    pub fn defaults(scale: Scale) -> FaultsArgs {
+        FaultsArgs {
+            slices: fig_goodput::SLICE_SWEEP.to_vec(),
+            cached_slices: Vec::new(),
+            scenario: "scan".into(),
+            bers: fig_goodput::BER_SWEEP.to_vec(),
+            knobs: FaultKnobs::default(),
+            rate: None,
+            cfg: OpenLoopConfig { ops: fig_goodput::ops_for(scale), ..Default::default() },
+        }
+    }
+
+    /// Parse `--flag value` pairs; unknown flags are errors.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<FaultsArgs, String> {
+        let mut out = FaultsArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--ber" => {
+                    let bers = val
+                        .split(',')
+                        .map(|s| {
+                            s.trim()
+                                .parse::<f64>()
+                                .map_err(|_| format!("bad ber {s:?}"))
+                                .and_then(|b| {
+                                    if (0.0..0.1).contains(&b) {
+                                        Ok(b)
+                                    } else {
+                                        Err(format!("ber must be in [0, 0.1), got {s:?}"))
+                                    }
+                                })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if bers.is_empty() {
+                        return Err("--ber needs at least one value".into());
+                    }
+                    out.bers = bers;
+                }
+                "--drop" => {
+                    out.knobs.drop = parse_prob(val, "--drop")?;
+                }
+                "--reorder" => {
+                    out.knobs.reorder = parse_prob(val, "--reorder")?;
+                }
+                "--burst" => {
+                    let b: f64 = val.parse().map_err(|_| format!("bad burst length {val:?}"))?;
+                    if !(b >= 1.0 && b.is_finite()) {
+                        return Err(format!("--burst must be >= 1, got {val:?}"));
+                    }
+                    out.knobs.burst_len = b;
+                }
+                "--seed" => {
+                    let s = parse_seed(val)?;
+                    // one seed reproduces the whole run: traffic draws
+                    // and fault injection both derive from it
+                    out.knobs.seed = s;
+                    out.cfg.seed = s;
+                }
+                "--slices" => {
+                    out.slices = parse_usize_list(val)?;
+                }
+                "--cached-slices" => {
+                    out.cached_slices = parse_usize_list(val)?;
+                }
+                "--rate" => {
+                    let r: f64 = val.parse().map_err(|_| format!("bad rate {val:?}"))?;
+                    if !(r > 0.0 && r.is_finite()) {
+                        return Err(format!("rate must be positive, got {val:?}"));
+                    }
+                    out.rate = Some(r);
+                }
+                "--ops" => {
+                    out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
+                }
+                "--scenario" => {
+                    if !Scenario::preset_names().contains(&val.as_str()) {
+                        return Err(format!(
+                            "unknown scenario {val:?} (have: {})",
+                            Scenario::preset_names().join(", ")
+                        ));
+                    }
+                    out.scenario = val.clone();
+                }
+                other => return Err(format!("unknown faults flag {other:?}")),
+            }
+        }
+        if out.cfg.ops == 0 {
+            return Err("--ops must be >= 1".into());
+        }
+        check_cached_slices(
+            &out.cached_slices,
+            out.cfg.machine.home_cache_bytes,
+            out.cfg.machine.home_cache_ways,
+        )?;
+        Ok(out)
+    }
+
+    /// The offered rate of the sweep.
+    pub fn rate(&self) -> f64 {
+        self.rate.unwrap_or_else(|| fig_goodput::default_rate(self.cfg.machine.home_proc))
+    }
+}
+
+/// `--seed` accepts decimal or 0x-prefixed hex.
+fn parse_seed(val: &str) -> Result<u64, String> {
+    let parsed = match val.strip_prefix("0x").or_else(|| val.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => val.parse(),
+    };
+    parsed.map_err(|_| format!("bad seed {val:?}"))
+}
+
+fn parse_prob(val: &str, flag: &str) -> Result<f64, String> {
+    let p: f64 = val.parse().map_err(|_| format!("bad probability {val:?}"))?;
+    if (0.0..1.0).contains(&p) {
+        Ok(p)
+    } else {
+        Err(format!("{flag} must be in [0, 1), got {val:?}"))
+    }
+}
+
 fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
     let xs = val
         .split(',')
@@ -377,18 +543,18 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
 /// quietly running the defaults), which green-washes misconfigured CI
 /// smoke steps exactly like an unknown bench id would.
 fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
-    if matches!(which, "dcs" | "workload") || rest.is_empty() {
+    if matches!(which, "dcs" | "workload" | "faults") || rest.is_empty() {
         return Ok(());
     }
     Err(format!(
-        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs` or `workload`)",
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload` or `faults`)",
         rest.join(" ")
     ))
 }
 
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
-    const KNOWN: [&str; 8] =
-        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "all"];
+    const KNOWN: [&str; 9] =
+        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "all"];
     if !KNOWN.contains(&which) {
         // a typo must fail loudly, not green-wash a CI smoke step
         eprintln!("eci bench: unknown bench {which:?} (have: {})", KNOWN.join(", "));
@@ -459,7 +625,30 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
             &a.rates(),
         );
         println!("{}", fig_loadcurve::render(&f).to_markdown());
+        println!("{}", fig_loadcurve::render_classes(&f).to_markdown());
         println!("{}", fig_loadcurve::render_knees(&f).to_markdown());
+    }
+    if matches!(which, "faults" | "all") {
+        let rest = if which == "faults" { rest } else { &[] };
+        let a = match FaultsArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench faults: {e}");
+                std::process::exit(2);
+            }
+        };
+        let base = fig_loadcurve::footprint_for(scale);
+        let scenario = Scenario::preset(&a.scenario, base, 0.99).expect("validated at parse");
+        let f = fig_goodput::run_custom_with(
+            a.cfg,
+            &scenario,
+            &a.slices,
+            &a.cached_slices,
+            &a.bers,
+            a.knobs,
+            a.rate(),
+        );
+        println!("{}", fig_goodput::render(&f).to_markdown());
     }
 }
 
@@ -565,8 +754,76 @@ mod tests {
         // the flag-taking benches and flag-free invocations still pass
         assert!(bench_rejects_flags("dcs", &s(&["--mix", "60:20:20"])).is_ok());
         assert!(bench_rejects_flags("workload", &s(&["--cached-slices", "2"])).is_ok());
+        assert!(bench_rejects_flags("faults", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("table3", &[]).is_ok());
         assert!(bench_rejects_flags("all", &[]).is_ok());
+    }
+
+    #[test]
+    fn seed_flag_reseeds_every_stochastic_bench() {
+        let d = DcsArgs::parse(Scale::Ci, &s(&["--seed", "42"])).unwrap();
+        assert_eq!(d.cfg.seed, 42);
+        assert_eq!(DcsArgs::defaults(Scale::Ci).cfg.seed, 0xDC5, "documented default");
+        let w = WorkloadArgs::parse(Scale::Ci, &s(&["--seed", "0xBEEF"])).unwrap();
+        assert_eq!(w.cfg.seed, 0xBEEF, "hex seeds accepted");
+        assert_eq!(WorkloadArgs::defaults(Scale::Ci).cfg.seed, 0x0C3A, "documented default");
+        let f = FaultsArgs::parse(Scale::Ci, &s(&["--seed", "7"])).unwrap();
+        assert_eq!(f.knobs.seed, 7, "--seed drives fault injection");
+        assert_eq!(f.cfg.seed, 7, "--seed drives the traffic draws too");
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--seed", "nope"])).is_err());
+    }
+
+    #[test]
+    fn faults_defaults_and_full_flag_set() {
+        let a = FaultsArgs::defaults(Scale::Ci);
+        assert_eq!(a.cfg.ops, fig_goodput::ops_for(Scale::Ci));
+        assert_eq!(a.slices, fig_goodput::SLICE_SWEEP.to_vec());
+        assert_eq!(a.bers, fig_goodput::BER_SWEEP.to_vec());
+        assert_eq!(a.scenario, "scan");
+        assert!(a.rate() > 0.0, "a default rate must exist");
+        let a = FaultsArgs::parse(
+            Scale::Ci,
+            &s(&[
+                "--ber", "1e-6,1e-3",
+                "--drop", "0.02",
+                "--reorder", "0.01",
+                "--burst", "8",
+                "--seed", "7",
+                "--slices", "1,4",
+                "--cached-slices", "2",
+                "--rate", "2e6",
+                "--ops", "900",
+                "--scenario", "chase",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(a.bers, vec![1e-6, 1e-3]);
+        assert_eq!(a.knobs.drop, 0.02);
+        assert_eq!(a.knobs.reorder, 0.01);
+        assert_eq!(a.knobs.burst_len, 8.0);
+        assert_eq!(a.knobs.seed, 7);
+        assert_eq!(a.slices, vec![1, 4]);
+        assert_eq!(a.cached_slices, vec![2]);
+        assert_eq!(a.rate(), 2e6);
+        assert_eq!(a.cfg.ops, 900);
+        assert_eq!(a.scenario, "chase");
+    }
+
+    #[test]
+    fn faults_rejects_malformed_input() {
+        let bad = |xs: &[&str]| FaultsArgs::parse(Scale::Ci, &s(xs)).is_err();
+        assert!(bad(&["--ber", "0.5"]), "ber out of range");
+        assert!(bad(&["--ber", "x"]), "non-numeric ber");
+        assert!(bad(&["--drop", "1.5"]), "drop out of range");
+        assert!(bad(&["--reorder", "-0.1"]), "negative reorder");
+        assert!(bad(&["--burst", "0.5"]), "burst below 1");
+        assert!(bad(&["--rate", "-1"]), "negative rate");
+        assert!(bad(&["--ops", "0"]), "zero ops");
+        assert!(bad(&["--scenario", "nope"]), "unknown scenario");
+        assert!(bad(&["--slices", "0"]), "zero slices");
+        assert!(bad(&["--cached-slices", "2000"]), "cached slices beyond the budget");
+        assert!(bad(&["--wat", "1"]), "unknown flag");
+        assert!(bad(&["--ber"]), "missing value");
     }
 
     #[test]

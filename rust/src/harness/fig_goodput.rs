@@ -1,0 +1,297 @@
+//! Goodput and tail latency vs bit-error rate, per slice count — the
+//! reliability subsystem's headline figure (`eci bench faults`).
+//!
+//! A fixed, comfortably sub-knee offered rate is swept over a grid of
+//! bit-error rates (optionally with whole-frame drops, reordering, and
+//! burst errors) on the lossy-link stack ([`crate::transport::rel`]):
+//! per-VC go-back-N replay beneath the sliced directory. Two shape
+//! criteria, both asserted at CI scale below:
+//!
+//! * **graceful degradation** — delivered goodput sinks *smoothly* as
+//!   replays burn link bandwidth, still clearing a healthy fraction of
+//!   the clean-link rate at BER 1e-3 on 4 slices (no collapse), while
+//!   p99 latency climbs — loss is a tail event first;
+//! * **loss transparency** — the settled end state (per-line directory
+//!   states + backing-store bytes) is bit-identical with faults on vs
+//!   off: loss changes timing, never semantics.
+
+use crate::sim::time::Duration;
+use crate::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+use crate::workload::openloop::{self, OpenLoopConfig};
+use crate::workload::scenario::Scenario;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+use super::fig_loadcurve::base_rate;
+
+/// Bit-error rates swept by default (0 = the clean baseline, through
+/// the rel layer so the comparison is apples to apples).
+pub const BER_SWEEP: [f64; 5] = [0.0, 1e-6, 1e-5, 1e-4, 1e-3];
+
+/// Slice counts swept by default (the acceptance point is 4 slices).
+pub const SLICE_SWEEP: [usize; 2] = [1, 4];
+
+/// Arrivals per sweep point at each scale.
+pub fn ops_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 1_200,
+        Scale::Default => 8_000,
+        Scale::Paper => 40_000,
+    }
+}
+
+/// The fixed offered rate of the sweep: ~1/4 of the one-slice streaming
+/// capacity, so every configuration is sub-knee on a clean link and any
+/// degradation is attributable to the injected faults.
+pub fn default_rate(slice_proc: Duration) -> f64 {
+    0.25 * base_rate(slice_proc)
+}
+
+/// Non-BER fault knobs shared by every point of a sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultKnobs {
+    /// Per-frame whole-loss probability.
+    pub drop: f64,
+    /// Per-frame reorder (late-delivery) probability.
+    pub reorder: f64,
+    /// Mean error-burst length in frames (1 = independent errors).
+    pub burst_len: f64,
+    /// Injector seed (`--seed`; also reseeds the traffic draws).
+    pub seed: u64,
+}
+
+impl Default for FaultKnobs {
+    fn default() -> FaultKnobs {
+        FaultKnobs { drop: 0.0, reorder: 0.0, burst_len: 1.0, seed: OpenLoopConfig::default().seed }
+    }
+}
+
+impl FaultKnobs {
+    /// The rel-layer configuration of one sweep point.
+    pub fn rel_config(&self, ber: f64) -> RelConfig {
+        let spec = FaultSpec { ber, drop: self.drop, reorder: self.reorder, burst_len: self.burst_len };
+        RelConfig::new(FaultConfig::new(spec, self.seed))
+    }
+}
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct GoodputPoint {
+    pub slices: usize,
+    /// Slice-local home caches present?
+    pub home_cached: bool,
+    pub ber: f64,
+    pub offered_per_s: f64,
+    /// Completed operations per second — the figure's goodput.
+    pub delivered_per_s: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Fraction of transmitted link frames that were useful.
+    pub frame_goodput: f64,
+    pub retransmitted: u64,
+    pub timeouts: u64,
+    /// High-water mark of the replay-buffer occupancy (frames).
+    pub peak_replay: u64,
+}
+
+pub struct FigGoodput {
+    pub scenario: String,
+    pub points: Vec<GoodputPoint>,
+}
+
+/// One sweep point: `scenario` at `rate` against `slices` slices with
+/// the given BER + knobs (always through the rel layer, clean or not).
+pub fn run_point(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    ber: f64,
+    knobs: FaultKnobs,
+    rate: f64,
+) -> GoodputPoint {
+    let mut cfg = OpenLoopConfig { rate_per_s: rate, seed: knobs.seed, ..cfg };
+    cfg.machine.rel = Some(knobs.rel_config(ber));
+    let r = openloop::run(cfg, scenario, slices);
+    GoodputPoint {
+        slices,
+        home_cached: cfg.home_cached,
+        ber,
+        offered_per_s: r.offered_per_s,
+        delivered_per_s: r.delivered_per_s,
+        p50_ns: r.p50_ns(),
+        p99_ns: r.p99_ns(),
+        frame_goodput: r.frame_goodput,
+        retransmitted: r.counters.get("rel_retransmitted"),
+        timeouts: r.counters.get("rel_timeouts"),
+        peak_replay: r.counters.get("rel_peak_replay"),
+    }
+}
+
+/// Full figure: every slice count (plain, then `cached_slices` with
+/// slice-local home caches) over the same BER grid at one offered rate
+/// — the `eci bench faults --slices/--cached-slices/--ber` surface.
+pub fn run_custom_with(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: &[usize],
+    cached_slices: &[usize],
+    bers: &[f64],
+    knobs: FaultKnobs,
+    rate: f64,
+) -> FigGoodput {
+    let mut points = Vec::new();
+    for &n in slices {
+        for &ber in bers {
+            points.push(run_point(cfg, scenario, n, ber, knobs, rate));
+        }
+    }
+    let cached_cfg = OpenLoopConfig { home_cached: true, ..cfg };
+    for &n in cached_slices {
+        for &ber in bers {
+            points.push(run_point(cached_cfg, scenario, n, ber, knobs, rate));
+        }
+    }
+    FigGoodput { scenario: scenario.name.clone(), points }
+}
+
+/// The default figure: streaming `scan` traffic (write-free, so the
+/// loss-transparency digest is meaningful), slice counts 1/4, the
+/// default BER grid.
+pub fn run(scale: Scale) -> FigGoodput {
+    let cfg = OpenLoopConfig { ops: ops_for(scale), ..Default::default() };
+    let scenario = Scenario::preset("scan", super::fig_loadcurve::footprint_for(scale), 0.99)
+        .expect("scan preset");
+    let rate = default_rate(cfg.machine.home_proc);
+    run_custom_with(cfg, &scenario, &SLICE_SWEEP, &[], &BER_SWEEP, FaultKnobs::default(), rate)
+}
+
+pub fn render(f: &FigGoodput) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!("Goodput vs bit-error rate, scenario `{}` (lossy link, go-back-N replay)", f.scenario),
+        &[
+            "slices",
+            "config",
+            "ber",
+            "offered/s",
+            "goodput/s",
+            "p50 ns",
+            "p99 ns",
+            "frame goodput",
+            "retx",
+            "timeouts",
+            "peak replay",
+        ],
+    );
+    for p in &f.points {
+        t.row(vec![
+            p.slices.to_string(),
+            if p.home_cached { "cached".into() } else { "plain".into() },
+            format!("{:.0e}", p.ber),
+            fmt_rate(p.offered_per_s),
+            fmt_rate(p.delivered_per_s),
+            format!("{:.0}", p.p50_ns),
+            format!("{:.0}", p.p99_ns),
+            format!("{:.3}", p.frame_goodput),
+            p.retransmitted.to_string(),
+            p.timeouts.to_string(),
+            p.peak_replay.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance: goodput degrades gracefully (not a collapse) up to
+    /// BER 1e-3 at 4 slices, and loss is a tail event — p99 climbs
+    /// while the link stays functional (CI scale).
+    #[test]
+    fn goodput_degrades_gracefully_to_ber_1e3_at_4_slices() {
+        let cfg = OpenLoopConfig { ops: ops_for(Scale::Ci), ..Default::default() };
+        let scenario = Scenario::preset("scan", 1 << 12, 0.99).unwrap();
+        let rate = default_rate(cfg.machine.home_proc);
+        let f = run_custom_with(
+            cfg,
+            &scenario,
+            &[4],
+            &[],
+            &[0.0, 1e-4, 1e-3],
+            FaultKnobs::default(),
+            rate,
+        );
+        assert_eq!(f.points.len(), 3);
+        let clean = &f.points[0];
+        let mid = &f.points[1];
+        let worst = &f.points[2];
+        assert!(clean.frame_goodput > 0.999, "clean link must waste nothing");
+        assert_eq!(clean.retransmitted, 0);
+        // every point completes its offered work (delivered > 0) and the
+        // lossy points actually exercised replay
+        assert!(worst.retransmitted > mid.retransmitted);
+        assert!(mid.retransmitted > 0);
+        // frame goodput sinks monotonically with BER
+        assert!(mid.frame_goodput < clean.frame_goodput);
+        assert!(worst.frame_goodput < mid.frame_goodput);
+        // graceful: at BER 1e-3 the stack still clears >= 25% of the
+        // clean goodput (collapse would be orders of magnitude)
+        assert!(
+            worst.delivered_per_s >= 0.25 * clean.delivered_per_s,
+            "goodput collapsed: {} vs clean {}",
+            worst.delivered_per_s,
+            clean.delivered_per_s
+        );
+        // and loss shows up in the tail first
+        assert!(
+            worst.p99_ns > clean.p99_ns,
+            "replays must cost tail latency: {} vs {}",
+            worst.p99_ns,
+            clean.p99_ns
+        );
+        assert!(worst.peak_replay > 0);
+    }
+
+    /// Acceptance: loss changes timing, never semantics — the settled
+    /// end state (per-line directory states + backing-store bytes) is
+    /// bit-identical with fault injection on vs off, and vs the plain
+    /// (rel-less) stack. Scan is write-free, so the digest is exact.
+    #[test]
+    fn loss_is_transparent_to_the_settled_end_state() {
+        let scenario = Scenario::preset("scan", 1 << 10, 0.99).unwrap();
+        let run_with = |rel: Option<RelConfig>| {
+            let mut cfg = OpenLoopConfig { rate_per_s: 2e6, ops: 600, ..Default::default() };
+            cfg.machine.rel = rel;
+            openloop::OpenLoop::new(cfg, &scenario, 2).run_settled()
+        };
+        let knobs = FaultKnobs { drop: 0.02, reorder: 0.02, ..FaultKnobs::default() };
+        let (r_plain, d_plain) = run_with(None);
+        let (r_clean, d_clean) = run_with(Some(knobs.rel_config(0.0)));
+        let (r_lossy, d_lossy) = run_with(Some(knobs.rel_config(1e-3)));
+        assert_eq!(r_plain.completed, 600);
+        assert_eq!(r_clean.completed, 600);
+        assert_eq!(r_lossy.completed, 600);
+        assert!(r_lossy.counters.get("rel_retransmitted") > 0, "faults must have fired");
+        assert_eq!(d_clean, d_plain, "the clean rel layer must be invisible");
+        assert_eq!(d_lossy, d_plain, "loss must be invisible to the end state");
+    }
+
+    #[test]
+    fn render_has_one_row_per_point() {
+        let cfg = OpenLoopConfig { ops: 300, ..Default::default() };
+        let scenario = Scenario::preset("scan", 1 << 10, 0.99).unwrap();
+        let rate = default_rate(cfg.machine.home_proc);
+        let f = run_custom_with(
+            cfg,
+            &scenario,
+            &[1],
+            &[1],
+            &[0.0, 1e-4],
+            FaultKnobs::default(),
+            rate,
+        );
+        assert_eq!(f.points.len(), 4);
+        let md = render(&f).to_markdown();
+        assert!(md.contains("frame goodput"));
+        assert!(md.contains("cached") && md.contains("plain"));
+    }
+}

@@ -16,7 +16,7 @@
 //! near multiplier 1.0 and leaves headroom for larger slice counts.
 
 use crate::sim::time::Duration;
-use crate::workload::openloop::{self, OpenLoopConfig};
+use crate::workload::openloop::{self, ClassLatency, OpenLoopConfig};
 use crate::workload::scenario::Scenario;
 
 use super::common::{fmt_rate, ResultTable, Scale};
@@ -72,6 +72,9 @@ pub struct LoadCurvePoint {
     pub credit_stalls: u64,
     pub peak_tx_queue: usize,
     pub served_skew: f64,
+    /// Per-traffic-class latency breakdown at this point (one entry per
+    /// scenario class; see [`render_classes`]).
+    pub per_class: Vec<ClassLatency>,
 }
 
 impl LoadCurvePoint {
@@ -114,6 +117,7 @@ pub fn run_point(
         credit_stalls: r.credit_stalls,
         peak_tx_queue: r.peak_tx_queue,
         served_skew: r.served_skew,
+        per_class: r.per_class,
     }
 }
 
@@ -220,6 +224,43 @@ pub fn render(f: &FigLoadCurve) -> ResultTable {
     t
 }
 
+/// Per-class latency breakdown: p50/p99/p999 for every traffic class at
+/// every sweep point (printed by `eci bench workload` — under
+/// multi-tenant scenarios this is where one tenant's overload shows up
+/// in another tenant's tail).
+pub fn render_classes(f: &FigLoadCurve) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!("Per-class latency breakdown, scenario `{}`", f.scenario),
+        &[
+            "slices",
+            "config",
+            "offered/s",
+            "class",
+            "completed",
+            "p50 ns",
+            "p99 ns",
+            "p999 ns",
+        ],
+    );
+    for c in &f.curves {
+        for p in &c.points {
+            for cl in &p.per_class {
+                t.row(vec![
+                    c.slices.to_string(),
+                    if c.home_cached { "cached".into() } else { "plain".into() },
+                    fmt_rate(p.offered_per_s),
+                    cl.class.clone(),
+                    cl.completed.to_string(),
+                    format!("{:.0}", cl.p50_ns()),
+                    format!("{:.0}", cl.p99_ns()),
+                    format!("{:.0}", cl.p999_ns()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Knee summary: saturation rate per slice count.
 pub fn render_knees(f: &FigLoadCurve) -> ResultTable {
     let mut t = ResultTable::new(
@@ -318,6 +359,10 @@ mod tests {
         assert!(t.to_markdown().contains("p999 ns"));
         let k = render_knees(&f);
         assert_eq!(k.rows.len(), 2);
+        // scan is single-class: one breakdown row per sweep point
+        let cls = render_classes(&f);
+        assert_eq!(cls.rows.len(), 4);
+        assert!(cls.to_markdown().contains("scan"));
     }
 
     /// Cached curves ride the same sweep: on hot-kvs traffic the cached

@@ -8,6 +8,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_goodput;
 pub mod fig_loadcurve;
 pub mod fig_throughput;
 pub mod table2;

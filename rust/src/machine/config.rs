@@ -13,7 +13,7 @@
 use crate::agents::dram::DramConfig;
 use crate::dcs::DcsConfig;
 use crate::sim::time::{Clock, Duration};
-use crate::transport::LinkConfig;
+use crate::transport::{LinkConfig, RelConfig};
 
 /// CPU-socket parameters (Marvell ThunderX-1, §5.1).
 #[derive(Clone, Copy, Debug)]
@@ -70,6 +70,12 @@ pub struct MachineConfig {
     /// same-slice frames one delivery may coalesce into a single
     /// VC-disciplined hand-off.
     pub ingress_batch: usize,
+    /// Reliable-lossy link extension ([`crate::transport::rel`]):
+    /// `Some` runs both link directions with per-VC sequencing/replay
+    /// and the configured deterministic fault injector (the reverse
+    /// direction derives its injector seed from the forward one).
+    /// `None` (default) = the seed's perfect wire.
+    pub rel: Option<RelConfig>,
     pub seed: u64,
 }
 
@@ -93,6 +99,7 @@ impl MachineConfig {
             home_cache_bytes: crate::dcs::DEFAULT_HOME_CACHE_BYTES,
             home_cache_ways: crate::dcs::DEFAULT_HOME_CACHE_WAYS,
             ingress_batch: 1,
+            rel: None,
             seed: 0xEC1,
         }
     }
@@ -114,6 +121,7 @@ impl MachineConfig {
             home_cache_bytes: crate::dcs::DEFAULT_HOME_CACHE_BYTES,
             home_cache_ways: crate::dcs::DEFAULT_HOME_CACHE_WAYS,
             ingress_batch: 1,
+            rel: None,
             seed: 0xEC1,
         }
     }

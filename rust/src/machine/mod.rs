@@ -159,6 +159,14 @@ enum Ev {
     FpgaSend(Box<Message>),
     /// Retry servicing dcs slice `s` (its pipeline was busy).
     DcsPoll(u32),
+    /// Retransmit-timeout check on direction `dir` (rel links only):
+    /// with frames unacked and no ack progress since arming, the sender
+    /// rewinds its replay buffers (tail-loss recovery).
+    RelRetx(u8),
+    /// Delayed-ack flush on direction `dir`'s receiver (rel links
+    /// only): ack debt that found no reverse frame to piggyback on goes
+    /// out as explicit controls.
+    RelAckFlush(u8),
 }
 
 // ---------------------------------------------------------------------------
@@ -248,6 +256,12 @@ pub struct Machine {
     // link: dir 0 = cpu->fpga, dir 1 = fpga->cpu
     to_fpga: LinkDir,
     to_cpu: LinkDir,
+    /// A `RelRetx` event is already scheduled per direction (dedup).
+    retx_pending: [bool; 2],
+    /// Ack progress seen when the pending retx was armed.
+    retx_seen_acked: [u64; 2],
+    /// A `RelAckFlush` event is already scheduled per direction.
+    ack_flush_pending: [bool; 2],
 
     // FPGA socket
     pub app: FpgaApp,
@@ -307,8 +321,21 @@ impl Machine {
             local_pending: HashMap::default(),
             io_pending: HashMap::default(),
             next_io_id: 1 << 20,
-            to_fpga: LinkDir::new(cfg.link, Node::Remote, seed_rng.fork(2)),
-            to_cpu: LinkDir::new(cfg.link, Node::Home, seed_rng.fork(3)),
+            to_fpga: match cfg.rel {
+                Some(rc) => LinkDir::new_rel(cfg.link, Node::Remote, seed_rng.fork(2), rc),
+                None => LinkDir::new(cfg.link, Node::Remote, seed_rng.fork(2)),
+            },
+            to_cpu: match cfg.rel {
+                // the reverse direction draws an independent fault stream
+                Some(mut rc) => {
+                    rc.faults.seed = rc.faults.seed.wrapping_add(1);
+                    LinkDir::new_rel(cfg.link, Node::Home, seed_rng.fork(3), rc)
+                }
+                None => LinkDir::new(cfg.link, Node::Home, seed_rng.fork(3)),
+            },
+            retx_pending: [false; 2],
+            retx_seen_acked: [0; 2],
+            ack_flush_pending: [false; 2],
             app,
             config_block: ConfigBlock::new(),
             fpga_dram: Dram::new(cfg.fpga_dram),
@@ -432,6 +459,23 @@ impl Machine {
         self.eng.now()
     }
 
+    /// Settle the machine after [`Machine::run`]: process every event
+    /// still queued (in-flight writebacks, replay retransmissions, ack
+    /// and credit returns) so the protocol state is final. Used by
+    /// tests that compare end states — e.g. the loss-transparency gate,
+    /// where FPGA memory must be bit-identical with fault injection on
+    /// vs off. Terminates because retransmit timers re-arm only while
+    /// frames stay unacked, and stale duplicates re-ack.
+    pub fn drain(&mut self) {
+        while let Some((_, ev)) = self.eng.pop() {
+            match ev {
+                // cores are done; their wakeups are no-ops
+                Ev::CoreNext(_) => {}
+                other => self.dispatch(other),
+            }
+        }
+    }
+
     pub fn report(&self) -> Report {
         let mut counters = self.counters.clone();
         counters.add("dcs_ingress_peak", self.dcs_ingress_peak as u64);
@@ -439,6 +483,13 @@ impl Machine {
             for (k, v) in dcs.counters().iter() {
                 counters.add(k, v);
             }
+        }
+        if let Some(rel) = self.to_fpga.rel.as_ref() {
+            let mut s = rel.stats();
+            if let Some(r2) = self.to_cpu.rel.as_ref() {
+                s.merge(&r2.stats());
+            }
+            s.add_to(&mut counters);
         }
         Report {
             sim_time: self.eng.now(),
@@ -785,6 +836,28 @@ impl Machine {
                 self.kick(1);
             }
             Ev::DcsPoll(s) => self.pump_dcs_slice(s as usize),
+            Ev::RelRetx(dir) => {
+                self.retx_pending[dir as usize] = false;
+                let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
+                if link.rel_unacked() > 0 {
+                    if link.rel_acked() == self.retx_seen_acked[dir as usize] {
+                        // no ack progress for a full RTO: rewind and replay
+                        link.rel_force_replay();
+                    }
+                    // pump the resends; kick re-arms the timer while
+                    // anything stays unacked
+                    self.kick(dir);
+                }
+            }
+            Ev::RelAckFlush(dir) => {
+                self.ack_flush_pending[dir as usize] = false;
+                let ctrl = self.cfg.ctrl_latency;
+                loop {
+                    let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
+                    let Some((vc, seq)) = link.rel_take_piggy_ack() else { break };
+                    self.eng.schedule(ctrl, Ev::Ctl { dir, ctl: Control::VcAck(vc, seq) });
+                }
+            }
         }
     }
 
@@ -833,24 +906,78 @@ impl Machine {
         }
     }
 
-    /// Drain a direction's transmit queue onto the wire.
+    /// Drain a direction's transmit queue onto the wire. On rel links
+    /// the launched frames may be swallowed by the fault injector (no
+    /// arrival is scheduled — replay recovers them), outgoing frames
+    /// piggyback the opposite direction's cumulative acks, and a
+    /// retransmit timer is armed while frames stay unacked.
     fn kick(&mut self, dir: u8) {
         let now = self.eng.now();
-        let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
+        let (link, other) = if dir == 0 {
+            (&mut self.to_fpga, &mut self.to_cpu)
+        } else {
+            (&mut self.to_cpu, &mut self.to_fpga)
+        };
+        // This sender and the opposite direction's receiver share a
+        // node: its ack debt rides our frames' ack envelope. Steal debt
+        // only when a frame will actually launch — otherwise leave it
+        // for the delayed-ack flush.
+        if link.rel.is_some() && link.can_launch() {
+            if let Some(a) = other.rel_take_piggy_ack() {
+                link.stage_piggy_ack(a);
+            }
+        }
         while let Some((arrival, frame)) = link.try_launch(now) {
+            if frame.lost {
+                continue;
+            }
             self.eng.schedule_at(arrival, Ev::Arrive { dir, frame: Box::new(frame) });
         }
+        self.arm_retx(dir);
+    }
+
+    /// Arm the retransmit timer for `dir` if frames are unacked and no
+    /// check is pending.
+    fn arm_retx(&mut self, dir: u8) {
+        let link = if dir == 0 { &self.to_fpga } else { &self.to_cpu };
+        let Some(rto) = link.rel_rto() else { return };
+        if link.rel_unacked() == 0 || self.retx_pending[dir as usize] {
+            return;
+        }
+        self.retx_seen_acked[dir as usize] = link.rel_acked();
+        self.retx_pending[dir as usize] = true;
+        self.eng.schedule(rto, Ev::RelRetx(dir));
+    }
+
+    /// Arm the delayed-ack flush for `dir`'s receiver when it carries
+    /// unflushed cumulative-ack debt.
+    fn arm_ack_flush(&mut self, dir: u8) {
+        let link = if dir == 0 { &self.to_fpga } else { &self.to_cpu };
+        if self.ack_flush_pending[dir as usize] || !link.rel_has_ack_debt() {
+            return;
+        }
+        self.ack_flush_pending[dir as usize] = true;
+        self.eng.schedule(crate::transport::rel::ACK_FLUSH_DELAY, Ev::RelAckFlush(dir));
     }
 
     /// Frame arrival at the receiving end of `dir`.
     fn arrive(&mut self, dir: u8, frame: Box<Frame>) {
         let vc = frame.vc;
+        // A piggybacked cumulative ack belongs to the *opposite*
+        // direction's sender, which lives at this receiving node.
+        if let Some((avc, seq)) = frame.ack {
+            let other = if dir == 0 { &mut self.to_cpu } else { &mut self.to_fpga };
+            other.on_control(Control::VcAck(avc, seq));
+        }
         let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
         let (msg, ctl) = link.receive(*frame);
         let now = self.eng.now();
         if let Some(c) = ctl {
             self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::Ctl { dir, ctl: c });
         }
+        // ack debt accrued by this delivery is piggybacked by the next
+        // reverse-direction launch or flushed explicitly after a delay
+        self.arm_ack_flush(dir);
         let Some(msg) = msg else { return };
         if let Some(tap) = self.tap.as_mut() {
             tap(now, dir == 0, &msg);

@@ -25,7 +25,8 @@ use crate::proto::states::Node;
 use crate::sim::rng::Rng;
 use crate::sim::time::Time;
 
-use super::link::{Control, Frame};
+use super::link::{Control, Frame, Seq};
+use super::rel::{RelConfig, RelStats};
 use super::transaction::RxResult;
 use super::vc::{VcId, NUM_VCS};
 use super::{LinkConfig, LinkDir};
@@ -145,6 +146,19 @@ impl FramedIngress {
         }
     }
 
+    /// A framed ingress over a reliable *lossy* link
+    /// ([`crate::transport::rel`]): launched frames pass the direction's
+    /// fault injector, and sequencing/ack/replay run per VC.
+    pub fn with_rel(cfg: LinkConfig, owner: Node, rng: Rng, rel: RelConfig) -> FramedIngress {
+        FramedIngress {
+            link: LinkDir::new_rel(cfg, owner, rng, rel),
+            offered: 0,
+            delivered: 0,
+            peak_queue: 0,
+            credit_stalls: 0,
+        }
+    }
+
     /// Accept a message into the transmit queue. Never refuses — the
     /// generator is open-loop; admission to the *wire* is what credits
     /// and framing control.
@@ -157,9 +171,14 @@ impl FramedIngress {
     /// Launch every frame the credits and the serial lanes allow at
     /// `now`, appending `(arrival_time, frame)` pairs for the host to
     /// schedule. Counts a credit stall when traffic remains queued but
-    /// nothing could launch.
+    /// nothing could launch. Frames the fault injector swallowed are
+    /// NOT appended — they burned wire time and hold their credit, but
+    /// no arrival ever happens; recovery is the rel layer's job.
     pub fn pump(&mut self, now: Time, out: &mut Vec<(Time, Frame)>) {
         while let Some((at, frame)) = self.link.try_launch(now) {
+            if frame.lost {
+                continue;
+            }
             out.push((at, frame));
         }
         if self.link.mux.pending() > 0 && !self.link.can_launch() {
@@ -175,6 +194,16 @@ impl FramedIngress {
     /// credit via [`FramedIngress::credit_return`] once the receiver
     /// frees the buffer slot.
     pub fn deliver(&mut self, frame: Frame) -> (Option<Frame>, Option<Control>) {
+        debug_assert!(!frame.lost, "lost frames are discarded at the pump, not delivered");
+        if let Some(rel) = self.link.rel.as_mut() {
+            return match rel.rx.on_frame(&frame) {
+                RxResult::Deliver(ctl) => {
+                    self.delivered += 1;
+                    (Some(frame), ctl)
+                }
+                RxResult::Drop(ctl) => (None, ctl),
+            };
+        }
         match self.link.rx.on_frame(&frame) {
             RxResult::Deliver(ctl) => {
                 self.delivered += 1;
@@ -192,6 +221,48 @@ impl FramedIngress {
     /// The receiver freed the buffer slot of a frame on `vc`.
     pub fn credit_return(&mut self, vc: VcId) {
         self.link.credit_return(vc);
+    }
+
+    // -- rel-layer host hooks ------------------------------------------------
+
+    /// Reliability counters of this direction, when it runs the rel
+    /// layer.
+    pub fn rel_stats(&self) -> Option<RelStats> {
+        self.link.rel.as_ref().map(|r| r.stats())
+    }
+
+    /// Pull one piggyback-able cumulative ack from this direction's
+    /// receiver (stage it on the opposite direction's sender).
+    pub fn take_piggy_ack(&mut self) -> Option<(VcId, Seq)> {
+        self.link.rel_take_piggy_ack()
+    }
+
+    /// Stage an ack from the opposite direction onto this sender's next
+    /// frame.
+    pub fn stage_piggy_ack(&mut self, ack: (VcId, Seq)) {
+        self.link.stage_piggy_ack(ack);
+    }
+
+    /// Launched-but-unacked frames (rel links; drives the host's
+    /// retransmit timer).
+    pub fn rel_unacked(&self) -> usize {
+        self.link.rel_unacked()
+    }
+
+    /// Ack progress signal for the retransmit timer.
+    pub fn rel_acked(&self) -> u64 {
+        self.link.rel_acked()
+    }
+
+    /// Retransmit-timeout expiry: rewind unacked frames for replay.
+    pub fn rel_force_replay(&mut self) -> bool {
+        self.link.rel_force_replay()
+    }
+
+    /// Unflushed cumulative-ack debt at this receiver (delayed-ack
+    /// flush trigger).
+    pub fn rel_has_ack_debt(&self) -> bool {
+        self.link.rel_has_ack_debt()
     }
 
     /// Frames queued at the transmitter right now.

@@ -5,8 +5,14 @@
 //! A frame carries one ECI message plus link-level metadata:
 //!
 //! ```text
-//! | 8B link header (seq:48, vc:4, len:12) | EWF message (16B or 144B) | 4B CRC | pad to 8B |
+//! | 8B link header (seq:48, vc:4, len:11, ack:1) | [8B piggy ack] | EWF message (16B or 144B) | 4B CRC | pad to 8B |
 //! ```
+//!
+//! The header's **ack envelope bit** marks a piggybacked cumulative ack
+//! for the *reverse* direction (the rel layer's per-VC sequencing,
+//! [`crate::transport::rel`]): when set, an 8-byte `(vc, seq)` ack word
+//! follows the header, and return traffic acknowledges forward traffic
+//! without spending a 16-byte control frame.
 //!
 //! The CRC here is modelled (a boolean validity flag flipped by the error
 //! injector) — the *byte-accurate* message encoding, including a real
@@ -25,26 +31,49 @@ pub type Seq = u64;
 /// Frame overheads, bytes.
 pub const LINK_HEADER_BYTES: u64 = 8;
 pub const CRC_BYTES: u64 = 4;
+/// The piggybacked cumulative-ack word (present iff the header's ack
+/// envelope bit is set).
+pub const PIGGY_ACK_BYTES: u64 = 8;
 
 /// A framed message in flight.
 #[derive(Clone, Debug)]
 pub struct Frame {
+    /// Sequence number: link-global under the transaction layer,
+    /// per-`vc` under the rel layer ([`crate::transport::rel`]).
     pub seq: Seq,
     pub vc: VcId,
     pub msg: Message,
     /// Cleared by the error injector; checked by the receiver.
     pub intact: bool,
+    /// Set by the fault injector: the frame never reaches the peer's
+    /// framer (hosts discard it instead of scheduling an arrival).
+    pub lost: bool,
+    /// Piggybacked cumulative ack for the reverse direction (the ack
+    /// envelope bit + ack word): everything `<= seq` on `vc` of the
+    /// *opposite* link direction arrived intact and in sequence. The
+    /// header (and so the ack word) carries its own CRC, so hosts apply
+    /// it even when the body CRC fails; a *lost* frame takes its ack
+    /// down with it (recovered by the stale-duplicate re-ack resync).
+    pub ack: Option<(VcId, Seq)>,
 }
 
 impl Frame {
     pub fn new(seq: Seq, msg: Message) -> Frame {
         let vc = vc_for(&msg);
-        Frame { seq, vc, msg, intact: true }
+        Frame::new_on(seq, vc, msg)
     }
 
-    /// Bytes on the wire: header + EWF body + CRC, padded to 8 bytes.
+    /// Frame with an explicit VC (the rel layer stamps per-VC
+    /// sequences, so the VC is chosen before the sequence number).
+    pub fn new_on(seq: Seq, vc: VcId, msg: Message) -> Frame {
+        Frame { seq, vc, msg, intact: true, lost: false, ack: None }
+    }
+
+    /// Bytes on the wire: header + optional piggy-ack word + EWF body +
+    /// CRC, padded to 8 bytes.
     pub fn wire_bytes(&self) -> u64 {
-        let raw = LINK_HEADER_BYTES + self.msg.wire_bytes() + CRC_BYTES;
+        let piggy = if self.ack.is_some() { PIGGY_ACK_BYTES } else { 0 };
+        let raw = LINK_HEADER_BYTES + piggy + self.msg.wire_bytes() + CRC_BYTES;
         raw.div_ceil(8) * 8
     }
 }
@@ -56,6 +85,11 @@ pub enum Control {
     Ack(Seq),
     /// Go-back-N request: retransmit starting from seq.
     Nack(Seq),
+    /// Per-VC cumulative ack (rel layer): everything <= seq on the VC
+    /// received intact and in sequence.
+    VcAck(VcId, Seq),
+    /// Per-VC go-back-N request (rel layer): retransmit the VC from seq.
+    VcNack(VcId, Seq),
 }
 
 pub const CONTROL_BYTES: u64 = 16;
@@ -77,6 +111,16 @@ mod tests {
         );
         // 8 + 144 + 4 = 156 -> padded 160
         assert_eq!(with_data.wire_bytes(), 160);
+    }
+
+    #[test]
+    fn piggy_ack_costs_one_word_on_the_wire() {
+        let mut f = Frame::new(0, Message::coh_req(ReqId(0), Node::Remote, CohOp::ReadShared, LineAddr(0)));
+        assert_eq!(f.wire_bytes(), 32);
+        f.ack = Some((VcId(6), 41));
+        // 8 + 8 + 16 + 4 = 36 -> padded 40; half a control frame's cost
+        assert_eq!(f.wire_bytes(), 40);
+        assert!(f.wire_bytes() - 32 < CONTROL_BYTES);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 pub mod ingress;
 pub mod link;
 pub mod phys;
+pub mod rel;
 pub mod transaction;
 pub mod vc;
 
@@ -22,6 +23,7 @@ use crate::sim::time::Time;
 pub use ingress::{FramedIngress, IngressBatcher};
 pub use link::{Control, Frame, CONTROL_BYTES};
 pub use phys::{PhysConfig, PhysDir};
+pub use rel::{FaultConfig, FaultSpec, RelConfig, RelState, RelStats};
 pub use transaction::{RxResult, RxState, TxState};
 pub use vc::{class_of_vc, vc_for, Credits, VcClass, VcId, VcMux, NUM_COHERENCE_VCS, NUM_VCS};
 
@@ -57,6 +59,14 @@ pub struct LinkDir {
     pub tx: TxState,
     pub rx: RxState,
     pub phys: PhysDir,
+    /// Reliable-lossy extension ([`rel`]): per-VC sequencing/replay plus
+    /// a deterministic fault injector. `None` = the link-global
+    /// transaction layer above does the sequencing and the wire only
+    /// corrupts (never drops or reorders) frames.
+    pub rel: Option<RelState>,
+    /// A cumulative ack staged by the host for piggybacking on the next
+    /// launched frame (rel links only; see [`LinkDir::stage_piggy_ack`]).
+    staged_ack: Option<(VcId, link::Seq)>,
 }
 
 impl LinkDir {
@@ -68,7 +78,18 @@ impl LinkDir {
             tx: TxState::new(),
             rx: RxState::new(),
             phys: PhysDir::new(cfg.phys, rng),
+            rel: None,
+            staged_ack: None,
         }
+    }
+
+    /// A link direction with the reliable-lossy extension: frames are
+    /// subject to `rel.faults` at launch, and sequencing/ack/replay run
+    /// per VC ([`rel::seqrep`]) instead of link-globally.
+    pub fn new_rel(cfg: LinkConfig, owner: Node, rng: Rng, rel: RelConfig) -> LinkDir {
+        let mut d = LinkDir::new(cfg, owner, rng);
+        d.rel = Some(RelState::new(rel));
+        d
     }
 
     /// Queue a message for transmission.
@@ -76,11 +97,24 @@ impl LinkDir {
         self.mux.enqueue(msg);
     }
 
+    /// Stage a cumulative ack (for the *opposite* direction's traffic)
+    /// to ride the next launched frame's ack envelope. Cumulative, so a
+    /// newer ack simply replaces a staged older one.
+    pub fn stage_piggy_ack(&mut self, ack: (VcId, link::Seq)) {
+        debug_assert!(self.rel.is_some(), "piggy acks need the rel layer");
+        self.staged_ack = Some(ack);
+    }
+
     /// Attempt to put the next frame on the wire at `now`. Returns the
     /// frame and its arrival time at the peer. Retransmissions have
     /// priority and do not consume credits (their credit is still held —
-    /// the receiver never freed the original slot).
+    /// the receiver never freed the original slot). On rel links the
+    /// returned frame may be marked `lost` (the caller must discard it
+    /// instead of scheduling an arrival) or arrive late (reordered).
     pub fn try_launch(&mut self, now: Time) -> Option<(Time, Frame)> {
+        if self.rel.is_some() {
+            return self.try_launch_rel(now);
+        }
         if self.tx.has_resend() {
             let f = self.tx.next_frame(None).expect("resend queued");
             let (arrival, intact) = self.phys.transmit(now, f.wire_bytes());
@@ -98,9 +132,47 @@ impl LinkDir {
         Some((arrival, f))
     }
 
+    fn try_launch_rel(&mut self, now: Time) -> Option<(Time, Frame)> {
+        let rel = self.rel.as_mut().expect("rel launch on a plain link");
+        let mut f = match rel.tx.next_resend() {
+            Some(f) => f,
+            None => {
+                let (vc, msg) = self.mux.arbitrate(&self.credits)?;
+                let consumed = self.credits.consume(vc);
+                debug_assert!(consumed, "arbiter returned a creditless VC");
+                rel.tx.frame(vc, msg)
+            }
+        };
+        // attach a staged cumulative ack (the ack envelope bit) — also
+        // to retransmissions; acks are cumulative, duplicates are free
+        if let Some(a) = self.staged_ack.take() {
+            f.ack = Some(a);
+            rel.piggybacked_acks += 1;
+        }
+        let (arrival, phys_intact) = self.phys.transmit(now, f.wire_bytes());
+        if !phys_intact {
+            f.intact = false;
+        }
+        match rel.faults.apply(f.vc, f.wire_bytes()) {
+            rel::FaultAction::Deliver => Some((arrival, f)),
+            rel::FaultAction::Corrupt => {
+                f.intact = false;
+                Some((arrival, f))
+            }
+            rel::FaultAction::Drop => {
+                f.lost = true;
+                Some((arrival, f))
+            }
+            rel::FaultAction::Reorder(extra) => Some((arrival + extra, f)),
+        }
+    }
+
     /// Anything transmittable right now?
     pub fn can_launch(&self) -> bool {
-        if self.tx.has_resend() {
+        if match &self.rel {
+            Some(r) => r.tx.has_resend(),
+            None => self.tx.has_resend(),
+        } {
             return true;
         }
         (0..NUM_VCS as u8).any(|vc| {
@@ -109,7 +181,19 @@ impl LinkDir {
     }
 
     /// Process an arriving frame (receiver side of this direction).
+    /// Piggybacked acks are NOT handled here — they belong to the
+    /// opposite direction, which only the host can reach.
     pub fn receive(&mut self, frame: Frame) -> (Option<Message>, Option<Control>) {
+        if let Some(rel) = self.rel.as_mut() {
+            if frame.lost {
+                // never reached the framer: no CRC check, no nack
+                return (None, None);
+            }
+            return match rel.rx.on_frame(&frame) {
+                RxResult::Deliver(ctl) => (Some(frame.msg), ctl),
+                RxResult::Drop(ctl) => (None, ctl),
+            };
+        }
         match self.rx.on_frame(&frame) {
             RxResult::Deliver(ctl) => (Some(frame.msg), ctl),
             RxResult::Drop(ctl) => (None, ctl),
@@ -118,12 +202,52 @@ impl LinkDir {
 
     /// Control frame came back from the peer.
     pub fn on_control(&mut self, c: Control) {
-        self.tx.on_control(c);
+        match self.rel.as_mut() {
+            Some(rel) => rel.tx.on_control(c),
+            None => self.tx.on_control(c),
+        }
     }
 
     /// Peer consumed a message from `vc`: its buffer slot is free again.
     pub fn credit_return(&mut self, vc: VcId) {
         self.credits.restore(vc);
+    }
+
+    // -- rel-layer host hooks ------------------------------------------------
+
+    /// Frames launched but not yet cumulatively acked (rel links; 0 on
+    /// plain links — the transaction layer tracks its own unacked set).
+    pub fn rel_unacked(&self) -> usize {
+        self.rel.as_ref().map_or(0, |r| r.tx.unacked_total())
+    }
+
+    /// Cumulative acked-frame count — the retransmit timer's progress
+    /// signal: if it has not moved for a full RTO, the link rewinds.
+    pub fn rel_acked(&self) -> u64 {
+        self.rel.as_ref().map_or(0, |r| r.tx.acked)
+    }
+
+    /// The configured retransmit timeout, when this is a rel link.
+    pub fn rel_rto(&self) -> Option<crate::sim::time::Duration> {
+        self.rel.as_ref().map(|r| r.rto)
+    }
+
+    /// Retransmit-timeout expiry: rewind every VC with unacked frames.
+    /// Returns true when a replay was queued (the caller should pump).
+    pub fn rel_force_replay(&mut self) -> bool {
+        self.rel.as_mut().is_some_and(|r| r.tx.force_replay_all())
+    }
+
+    /// Pull one piggyback-able cumulative ack from this direction's
+    /// receiver (to stage on the opposite direction's sender).
+    pub fn rel_take_piggy_ack(&mut self) -> Option<(VcId, link::Seq)> {
+        self.rel.as_mut().and_then(|r| r.rx.piggy_ack())
+    }
+
+    /// Unflushed cumulative-ack debt at this direction's receiver
+    /// (drives the host's delayed-ack flush, [`rel::ACK_FLUSH_DELAY`]).
+    pub fn rel_has_ack_debt(&self) -> bool {
+        self.rel.as_ref().is_some_and(|r| r.rx.has_debt())
     }
 }
 
@@ -210,5 +334,76 @@ mod tests {
         assert_eq!(got, (0..total).collect::<Vec<_>>());
         assert!(dir.phys.injected_errors > 0, "the test should have exercised replay");
         assert!(dir.tx.retransmitted as u64 >= dir.phys.injected_errors);
+    }
+
+    #[test]
+    fn rel_link_delivers_everything_under_drop_corrupt_reorder() {
+        let mut cfg = LinkConfig::eci();
+        cfg.credits_per_vc = 8;
+        let spec = rel::FaultSpec { ber: 1e-4, drop: 0.05, reorder: 0.05, burst_len: 1.0 };
+        let relcfg = RelConfig::new(rel::FaultConfig::new(spec, 5));
+        let mut d = LinkDir::new_rel(cfg, Node::Remote, Rng::new(3), relcfg);
+        let total = 400u32;
+        for i in 0..total {
+            d.send(Message::coh_req(ReqId(i), Node::Remote, CohOp::ReadShared, LineAddr(i as u64)));
+        }
+        let mut now = Time(0);
+        let mut got = 0u32;
+        let mut stall = 0;
+        loop {
+            // launch everything the credits allow; lost frames vanish
+            let mut inflight: Vec<(Time, Frame)> = Vec::new();
+            while let Some((at, f)) = d.try_launch(now) {
+                if !f.lost {
+                    inflight.push((at, f));
+                }
+            }
+            if inflight.is_empty() {
+                if got >= total && d.rel_unacked() == 0 {
+                    break;
+                }
+                // tail loss / unflushed acks: the retransmit timeout
+                stall += 1;
+                assert!(stall < 300, "rel link deadlocked at {got}/{total}");
+                d.rel_force_replay();
+                now = now + Duration::from_ns(2_000);
+                continue;
+            }
+            stall = 0;
+            // reordered frames carry late arrival stamps: deliver in
+            // arrival order, exactly as an event queue would
+            inflight.sort_by_key(|(t, _)| *t);
+            for (at, f) in inflight {
+                now = Time(now.0.max(at.0));
+                let vc = f.vc;
+                let (msg, ctl) = d.receive(f);
+                if msg.is_some() {
+                    got += 1;
+                    d.credit_return(vc);
+                }
+                if let Some(c) = ctl {
+                    d.on_control(c);
+                }
+            }
+        }
+        assert_eq!(got, total);
+        let stats = d.rel.as_ref().unwrap().stats();
+        assert!(stats.injected_drops > 0, "drops must have been injected: {stats:?}");
+        assert!(stats.retransmitted > 0, "replay must have run: {stats:?}");
+        assert_eq!(stats.accepted, total as u64);
+    }
+
+    #[test]
+    fn staged_piggy_ack_rides_the_next_frame_once() {
+        let relcfg = RelConfig::from_ber(0.0, 1);
+        let mut d = LinkDir::new_rel(LinkConfig::eci(), Node::Remote, Rng::new(4), relcfg);
+        d.send(Message::coh_req(ReqId(0), Node::Remote, CohOp::ReadShared, LineAddr(0)));
+        d.send(Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
+        d.stage_piggy_ack((VcId(6), 17));
+        let (_, f0) = d.try_launch(Time(0)).unwrap();
+        assert_eq!(f0.ack, Some((VcId(6), 17)), "first launch carries the staged ack");
+        let (_, f1) = d.try_launch(Time(0)).unwrap();
+        assert_eq!(f1.ack, None, "the envelope is consumed");
+        assert_eq!(d.rel.as_ref().unwrap().piggybacked_acks, 1);
     }
 }

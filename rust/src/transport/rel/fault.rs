@@ -1,0 +1,307 @@
+//! Deterministic link-fault injection for the reliable-transport layer.
+//!
+//! The existing physical-layer injector ([`crate::transport::phys`])
+//! flips a single per-frame corruption coin; real lossy serial links
+//! misbehave in richer ways: bit errors whose per-frame probability
+//! grows with frame size, whole-frame losses (a lane glitch eats the
+//! alignment word), out-of-order arrivals (skew between lane groups),
+//! and *bursts* — errors that cluster while a lane re-trains instead of
+//! arriving independently. [`FaultInjector`] models all four, per VC,
+//! from one seed, so every lossy run is bit-reproducible and a sweep
+//! can vary exactly one knob at a time.
+//!
+//! The injector sits on the framed path: [`crate::transport::LinkDir`]
+//! consults it once per launched frame (retransmissions included — a
+//! replay is just as exposed to the wire as a first transmission).
+
+use crate::sim::rng::Rng;
+use crate::sim::time::Duration;
+
+use super::super::vc::{VcId, NUM_VCS};
+
+/// Fault rates of one VC's share of the lanes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Bit-error rate. The per-frame corruption probability follows the
+    /// frame size — `1 - (1-ber)^bits` — so 160-byte data frames corrupt
+    /// ~5x as often as 32-byte requests, exactly as on a real link.
+    pub ber: f64,
+    /// Per-frame whole-loss probability (the frame never reaches the
+    /// peer's framer; no CRC check, no nack — only the sequence gap or a
+    /// timeout reveals it).
+    pub drop: f64,
+    /// Per-frame probability of late delivery: the frame stays in
+    /// flight long enough for later-launched frames to overtake it.
+    pub reorder: f64,
+    /// Mean error-burst length in frames. 1.0 = independent errors;
+    /// above 1 the injector runs a two-state (Gilbert–Elliott style)
+    /// chain per VC: faults only fire in the bad state, which is entered
+    /// rarely and persists for `burst_len` frames on average, keeping
+    /// the *marginal* drop+corrupt rate at the configured value while
+    /// clustering the hits.
+    pub burst_len: f64,
+}
+
+impl FaultSpec {
+    pub const CLEAN: FaultSpec = FaultSpec { ber: 0.0, drop: 0.0, reorder: 0.0, burst_len: 1.0 };
+
+    pub fn is_clean(&self) -> bool {
+        self.ber <= 0.0 && self.drop <= 0.0 && self.reorder <= 0.0
+    }
+
+    /// Per-frame corruption probability for a frame of `wire_bytes`,
+    /// capped so that even absurd BERs leave replay a way forward.
+    pub fn corrupt_p(&self, wire_bytes: u64) -> f64 {
+        if self.ber <= 0.0 {
+            return 0.0;
+        }
+        let bits = (wire_bytes * 8) as f64;
+        (1.0 - (1.0 - self.ber).powf(bits)).min(0.9)
+    }
+}
+
+/// Full injector configuration: a default spec plus per-VC overrides
+/// (e.g. pound the data-response VCs while leaving I/O clean).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    pub default: FaultSpec,
+    pub per_vc: [Option<FaultSpec>; NUM_VCS],
+    /// Injector PRNG seed (independent of the traffic seed, so the same
+    /// workload can be replayed under different fault streams and vice
+    /// versa).
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    pub fn new(default: FaultSpec, seed: u64) -> FaultConfig {
+        FaultConfig { default, per_vc: [None; NUM_VCS], seed }
+    }
+
+    /// Uniform bit-error rate on every VC.
+    pub fn from_ber(ber: f64, seed: u64) -> FaultConfig {
+        FaultConfig::new(FaultSpec { ber, ..FaultSpec::CLEAN }, seed)
+    }
+
+    pub fn with_vc(mut self, vc: VcId, spec: FaultSpec) -> FaultConfig {
+        self.per_vc[vc.0 as usize] = Some(spec);
+        self
+    }
+
+    pub fn spec_for(&self, vc: VcId) -> &FaultSpec {
+        self.per_vc[vc.0 as usize].as_ref().unwrap_or(&self.default)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.default.is_clean() && self.per_vc.iter().flatten().all(|s| s.is_clean())
+    }
+}
+
+/// What the wire did to one launched frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Arrived intact, in launch order.
+    Deliver,
+    /// Arrived with a failing CRC (the receiver nacks).
+    Corrupt,
+    /// Never arrived (recovered via sequence gap or timeout).
+    Drop,
+    /// Arrives late by the given extra flight time — long enough for
+    /// later frames to overtake it.
+    Reorder(Duration),
+}
+
+/// Injected-fault counts (per injector; one injector per direction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    pub frames: u64,
+    pub corrupted: u64,
+    pub dropped: u64,
+    pub reordered: u64,
+    /// Frames launched while a VC's burst chain was in the bad state.
+    pub burst_frames: u64,
+}
+
+/// Seeded, per-VC fault injector (one per link direction).
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    rng: Rng,
+    /// Gilbert–Elliott chain state per VC (true = bad / bursting).
+    burst_bad: [bool; NUM_VCS],
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig) -> FaultInjector {
+        FaultInjector {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            burst_bad: [false; NUM_VCS],
+            stats: FaultStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Roll the dice for one launched frame of `wire_bytes` on `vc`.
+    /// Exactly one action is returned; drop dominates corruption (a lost
+    /// frame has no CRC to fail), and reorder applies only to frames
+    /// that survive intact.
+    pub fn apply(&mut self, vc: VcId, wire_bytes: u64) -> FaultAction {
+        self.stats.frames += 1;
+        let spec = *self.cfg.spec_for(vc);
+        if spec.is_clean() {
+            return FaultAction::Deliver;
+        }
+        let corrupt_p = spec.corrupt_p(wire_bytes);
+        let err_p = (spec.drop + corrupt_p).min(0.95);
+        let errored = if spec.burst_len > 1.0 {
+            // Two-state chain: enter the bad state with probability
+            // err_p / burst_len, stay for burst_len frames on average,
+            // and fault on every frame while bad. The stationary bad
+            // fraction is ~err_p, so the marginal rate matches the
+            // independent model while the hits cluster.
+            let i = vc.0 as usize;
+            if self.burst_bad[i] {
+                if self.rng.chance(1.0 / spec.burst_len) {
+                    self.burst_bad[i] = false;
+                }
+            } else if self.rng.chance((err_p / spec.burst_len).min(1.0)) {
+                self.burst_bad[i] = true;
+            }
+            if self.burst_bad[i] {
+                self.stats.burst_frames += 1;
+            }
+            self.burst_bad[i]
+        } else {
+            self.rng.chance(err_p)
+        };
+        if errored && err_p > 0.0 {
+            // split the error between drop and corruption by their rates
+            if self.rng.chance(spec.drop / err_p) {
+                self.stats.dropped += 1;
+                return FaultAction::Drop;
+            }
+            self.stats.corrupted += 1;
+            return FaultAction::Corrupt;
+        }
+        if spec.reorder > 0.0 && self.rng.chance(spec.reorder) {
+            self.stats.reordered += 1;
+            // a few hundred ns of extra flight: several frame times plus
+            // the pipeline latency, so successors genuinely overtake
+            return FaultAction::Reorder(Duration::from_ns(self.rng.range(150, 900)));
+        }
+        FaultAction::Deliver
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count(cfg: FaultConfig, vc: VcId, bytes: u64, n: u64) -> FaultStats {
+        let mut inj = FaultInjector::new(cfg);
+        for _ in 0..n {
+            inj.apply(vc, bytes);
+        }
+        inj.stats
+    }
+
+    #[test]
+    fn clean_config_never_faults() {
+        let s = count(FaultConfig::from_ber(0.0, 1), VcId(0), 160, 10_000);
+        assert_eq!((s.corrupted, s.dropped, s.reordered), (0, 0, 0));
+        assert_eq!(s.frames, 10_000);
+    }
+
+    #[test]
+    fn corruption_rate_tracks_ber_and_frame_size() {
+        let cfg = FaultConfig::from_ber(1e-4, 42);
+        let small = count(cfg, VcId(0), 32, 50_000); // p ~ 2.5%
+        let large = count(cfg, VcId(6), 160, 50_000); // p ~ 12%
+        let ps = small.corrupted as f64 / 50_000.0;
+        let pl = large.corrupted as f64 / 50_000.0;
+        assert!((0.02..0.032).contains(&ps), "small-frame rate {ps}");
+        assert!((0.10..0.14).contains(&pl), "large-frame rate {pl}");
+        assert!(pl > 3.0 * ps, "corruption must grow with frame size");
+    }
+
+    #[test]
+    fn drop_and_reorder_rates_are_roughly_configured() {
+        let spec = FaultSpec { drop: 0.05, reorder: 0.10, ..FaultSpec::CLEAN };
+        let s = count(FaultConfig::new(spec, 7), VcId(1), 32, 50_000);
+        let pd = s.dropped as f64 / 50_000.0;
+        let pr = s.reordered as f64 / 50_000.0;
+        assert!((0.04..0.06).contains(&pd), "drop rate {pd}");
+        // reorder applies to the intact remainder (~0.95 of frames)
+        assert!((0.08..0.11).contains(&pr), "reorder rate {pr}");
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_divergent_across_seeds() {
+        let spec = FaultSpec { ber: 1e-4, drop: 0.02, reorder: 0.02, burst_len: 1.0 };
+        let mut a = FaultInjector::new(FaultConfig::new(spec, 9));
+        let mut b = FaultInjector::new(FaultConfig::new(spec, 9));
+        let mut c = FaultInjector::new(FaultConfig::new(spec, 10));
+        let mut diverged = false;
+        for i in 0..5_000u64 {
+            let vc = VcId((i % 10) as u8);
+            let x = a.apply(vc, 32 + (i % 2) * 128);
+            assert_eq!(x, b.apply(vc, 32 + (i % 2) * 128), "same seed must replay");
+            diverged |= x != c.apply(vc, 32 + (i % 2) * 128);
+        }
+        assert!(diverged, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn per_vc_override_shields_other_vcs() {
+        let cfg = FaultConfig::new(FaultSpec::CLEAN, 3)
+            .with_vc(VcId(6), FaultSpec { drop: 0.5, ..FaultSpec::CLEAN });
+        let mut inj = FaultInjector::new(cfg);
+        let mut vc0_faults = 0;
+        let mut vc6_drops = 0;
+        for _ in 0..5_000 {
+            if inj.apply(VcId(0), 32) != FaultAction::Deliver {
+                vc0_faults += 1;
+            }
+            if inj.apply(VcId(6), 160) == FaultAction::Drop {
+                vc6_drops += 1;
+            }
+        }
+        assert_eq!(vc0_faults, 0, "clean VC must stay clean");
+        assert!((2_000..3_000).contains(&vc6_drops), "overridden VC drops {vc6_drops}");
+    }
+
+    #[test]
+    fn bursts_cluster_errors_without_inflating_the_marginal_rate() {
+        let n = 200_000u64;
+        let run = |burst_len: f64| {
+            let spec = FaultSpec { drop: 0.02, burst_len, ..FaultSpec::CLEAN };
+            let mut inj = FaultInjector::new(FaultConfig::new(spec, 11));
+            let mut runs = 0u64; // maximal runs of consecutive drops
+            let mut prev_dropped = false;
+            let mut drops = 0u64;
+            for _ in 0..n {
+                let dropped = inj.apply(VcId(0), 32) == FaultAction::Drop;
+                if dropped {
+                    drops += 1;
+                    if !prev_dropped {
+                        runs += 1;
+                    }
+                }
+                prev_dropped = dropped;
+            }
+            (drops, drops as f64 / runs.max(1) as f64)
+        };
+        let (ind_drops, ind_len) = run(1.0);
+        let (bur_drops, bur_len) = run(8.0);
+        // marginal rates agree within a factor
+        let (ri, rb) = (ind_drops as f64 / n as f64, bur_drops as f64 / n as f64);
+        assert!((0.015..0.025).contains(&ri), "independent rate {ri}");
+        assert!((0.012..0.028).contains(&rb), "burst marginal rate {rb}");
+        // but the burst chain clusters: mean error-run length ~burst_len
+        assert!(ind_len < 1.3, "independent mean run {ind_len}");
+        assert!(bur_len > 4.0, "burst mean run {bur_len}");
+    }
+}

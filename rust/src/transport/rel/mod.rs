@@ -1,0 +1,103 @@
+//! rel — reliable transport over a lossy link.
+//!
+//! The seed stack delivered frames perfectly (the phys layer could flip
+//! a corruption bit, but nothing was ever *lost* or *reordered*, and the
+//! only replay machinery ran one sequence space for the whole link).
+//! This subsystem makes loss a first-class, measurable condition:
+//!
+//! * [`fault`] — a seeded, deterministic fault injector, configurable
+//!   per VC with drop / bit-error / reorder probabilities and a
+//!   Gilbert–Elliott burst mode, interposed on the framed path (both
+//!   the workload engine's [`crate::transport::FramedIngress`] and the
+//!   machine's link directions consult it at launch time);
+//! * [`seqrep`] — per-VC go-back-N sequencing/ack/replay: each VC keeps
+//!   its own sequence numbers and replay buffer, cumulative acks ride
+//!   piggybacked on reverse-direction frames (the link header's ack
+//!   envelope bit) or as explicit controls, retransmission is triggered
+//!   by sequence gaps, corruption nacks, or the host's retransmit
+//!   timeout — and link credits are held across replays: a replayed
+//!   frame neither re-consumes nor leaks a credit;
+//! * [`stats`] — retransmission / goodput / replay-buffer-occupancy
+//!   counters, surfaced through the machine report, the
+//!   `workload::OpenLoopReport`, and `harness::fig_goodput`.
+//!
+//! The invariant everything here defends: **loss changes timing, never
+//! semantics.** Litmus scenarios and final directory state are
+//! bit-identical with fault injection on vs off (pinned in
+//! `rust/tests/rel_faults.rs` and, via `ECI_LITMUS_FAULTS`, by the full
+//! litmus suite in CI).
+
+pub mod fault;
+pub mod seqrep;
+pub mod stats;
+
+pub use fault::{FaultAction, FaultConfig, FaultInjector, FaultSpec, FaultStats};
+pub use seqrep::{RelRx, RelTx};
+pub use stats::RelStats;
+
+use crate::sim::time::Duration;
+
+/// Reliability configuration of one (or both) link directions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RelConfig {
+    pub faults: FaultConfig,
+    /// Retransmit timeout: with frames unacked and no ack progress for
+    /// this long, the sender rewinds every VC's replay buffer. The
+    /// default comfortably exceeds the ECI round trip (~0.5 µs) — tail
+    /// losses cost a timeout, everything else recovers via gap nacks.
+    pub rto: Duration,
+}
+
+/// Default retransmit timeout (see [`RelConfig::rto`]).
+pub const DEFAULT_RTO: Duration = Duration::from_us(2);
+
+/// Delayed-ack flush window: cumulative-ack debt that finds no
+/// reverse-direction frame to piggyback on within this delay is sent as
+/// an explicit control frame. Well below [`DEFAULT_RTO`], so on a clean
+/// link the sender always sees ack progress before its retransmit timer
+/// can mistake ack delay for loss (timeout replays then mean *actual*
+/// tail loss).
+pub const ACK_FLUSH_DELAY: Duration = Duration::from_ns(400);
+
+impl RelConfig {
+    pub fn new(faults: FaultConfig) -> RelConfig {
+        RelConfig { faults, rto: DEFAULT_RTO }
+    }
+
+    /// Uniform bit-error rate on every VC (the `--ber` CLI knob).
+    pub fn from_ber(ber: f64, seed: u64) -> RelConfig {
+        RelConfig::new(FaultConfig::from_ber(ber, seed))
+    }
+
+    pub fn with_rto(mut self, rto: Duration) -> RelConfig {
+        self.rto = rto;
+        self
+    }
+}
+
+/// Per-direction reliability state, carried by a
+/// [`crate::transport::LinkDir`] when the link is configured lossy.
+pub struct RelState {
+    pub tx: RelTx,
+    pub rx: RelRx,
+    pub faults: FaultInjector,
+    pub rto: Duration,
+    /// Acks that rode a reverse-direction frame (stats).
+    pub piggybacked_acks: u64,
+}
+
+impl RelState {
+    pub fn new(cfg: RelConfig) -> RelState {
+        RelState {
+            tx: RelTx::new(),
+            rx: RelRx::new(),
+            faults: FaultInjector::new(cfg.faults),
+            rto: cfg.rto,
+            piggybacked_acks: 0,
+        }
+    }
+
+    pub fn stats(&self) -> RelStats {
+        RelStats::of(self)
+    }
+}

@@ -1,0 +1,91 @@
+//! Reliability observables of one link direction, snapshot-able into the
+//! harness counter namespace (`rel_*` keys) and the goodput figure.
+
+use crate::sim::stats::Counters;
+
+use super::RelState;
+
+/// Snapshot of one direction's reliability counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RelStats {
+    /// Frames put on the wire (fresh + retransmissions).
+    pub sent: u64,
+    pub retransmitted: u64,
+    /// Timeout-driven full rewinds.
+    pub timeouts: u64,
+    /// Frames accepted in sequence by the receiver.
+    pub accepted: u64,
+    pub dropped_corrupt: u64,
+    pub dropped_out_of_order: u64,
+    /// High-water mark of the replay-buffer occupancy (frames parked
+    /// awaiting cumulative ack, across all VCs).
+    pub peak_replay: usize,
+    /// Faults the wire injected on this direction.
+    pub injected_drops: u64,
+    pub injected_corrupts: u64,
+    pub injected_reorders: u64,
+    /// Cumulative acks that rode the reverse direction's frames instead
+    /// of costing an explicit control frame.
+    pub piggybacked_acks: u64,
+}
+
+impl RelStats {
+    pub fn of(rel: &RelState) -> RelStats {
+        RelStats {
+            sent: rel.tx.sent,
+            retransmitted: rel.tx.retransmitted,
+            timeouts: rel.tx.timeouts,
+            accepted: rel.rx.accepted,
+            dropped_corrupt: rel.rx.dropped_corrupt,
+            dropped_out_of_order: rel.rx.dropped_out_of_order,
+            peak_replay: rel.tx.peak_replay,
+            injected_drops: rel.faults.stats.dropped,
+            injected_corrupts: rel.faults.stats.corrupted,
+            injected_reorders: rel.faults.stats.reordered,
+            piggybacked_acks: rel.piggybacked_acks,
+        }
+    }
+
+    /// Merge another direction's counters (both link directions report
+    /// as one stack in the harness).
+    pub fn merge(&mut self, o: &RelStats) {
+        self.sent += o.sent;
+        self.retransmitted += o.retransmitted;
+        self.timeouts += o.timeouts;
+        self.accepted += o.accepted;
+        self.dropped_corrupt += o.dropped_corrupt;
+        self.dropped_out_of_order += o.dropped_out_of_order;
+        self.peak_replay = self.peak_replay.max(o.peak_replay);
+        self.injected_drops += o.injected_drops;
+        self.injected_corrupts += o.injected_corrupts;
+        self.injected_reorders += o.injected_reorders;
+        self.piggybacked_acks += o.piggybacked_acks;
+    }
+
+    /// Fraction of transmitted frames that were useful (accepted in
+    /// sequence): 1.0 on a clean link, sinking as replays burn
+    /// bandwidth. This is the *link* goodput; the figure-level goodput
+    /// (completed operations/s) is reported by the open-loop engine.
+    pub fn frame_goodput(&self) -> f64 {
+        if self.sent == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.sent as f64
+        }
+    }
+
+    /// Add the snapshot into a harness counter block under `rel_*` keys.
+    pub fn add_to(&self, c: &mut Counters) {
+        c.add("rel_sent", self.sent);
+        c.add("rel_retransmitted", self.retransmitted);
+        c.add("rel_timeouts", self.timeouts);
+        c.add("rel_accepted", self.accepted);
+        c.add("rel_dropped_corrupt", self.dropped_corrupt);
+        c.add("rel_dropped_out_of_order", self.dropped_out_of_order);
+        c.add("rel_peak_replay", self.peak_replay as u64);
+        c.add("rel_injected_drops", self.injected_drops);
+        c.add("rel_injected_corrupts", self.injected_corrupts);
+        c.add("rel_injected_reorders", self.injected_reorders);
+        c.add("rel_piggybacked_acks", self.piggybacked_acks);
+    }
+}

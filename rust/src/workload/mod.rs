@@ -33,6 +33,6 @@ pub mod scenario;
 pub mod zipf;
 
 pub use arrival::{ArrivalKind, Arrivals};
-pub use openloop::{run, OpenLoop, OpenLoopConfig, OpenLoopReport};
+pub use openloop::{run, ClassLatency, OpenLoop, OpenLoopConfig, OpenLoopReport};
 pub use scenario::{Popularity, Scenario, TrafficClass};
 pub use zipf::Zipf;

@@ -100,6 +100,26 @@ impl Default for OpenLoopConfig {
     }
 }
 
+/// Per-traffic-class latency breakdown (arrival to completion, ps).
+#[derive(Clone, Debug)]
+pub struct ClassLatency {
+    pub class: String,
+    pub completed: u64,
+    pub lat: Histogram,
+}
+
+impl ClassLatency {
+    pub fn p50_ns(&self) -> f64 {
+        self.lat.p50() as f64 / 1000.0
+    }
+    pub fn p99_ns(&self) -> f64 {
+        self.lat.p99() as f64 / 1000.0
+    }
+    pub fn p999_ns(&self) -> f64 {
+        self.lat.p999() as f64 / 1000.0
+    }
+}
+
 /// Results of one open-loop run.
 #[derive(Debug)]
 pub struct OpenLoopReport {
@@ -114,6 +134,13 @@ pub struct OpenLoopReport {
     /// Per-operation latency, arrival (admission) to completion, ps —
     /// transmit-queue wait included, which is the open-loop point.
     pub lat: Histogram,
+    /// The same latency, broken down per traffic class (one entry per
+    /// scenario class, in scenario order).
+    pub per_class: Vec<ClassLatency>,
+    /// Fraction of transmitted link frames that were useful (accepted
+    /// in sequence), both directions merged: 1.0 on a clean link,
+    /// sinking as replays burn bandwidth under fault injection.
+    pub frame_goodput: f64,
     pub per_slice_served: Vec<u64>,
     pub per_slice_occupancy: Vec<f64>,
     /// Hot-spot skew (max/mean) of per-slice served load.
@@ -159,10 +186,13 @@ struct OpCtx {
     addr: LineAddr,
     started: Time,
     active: bool,
+    /// Index of the traffic class that drew this operation.
+    class: u16,
 }
 
 /// Per-class runtime: address window, samplers, weight CDF entry.
 struct ClassRt {
+    name: String,
     /// First line of this class's window.
     base: u64,
     lines: u64,
@@ -193,6 +223,17 @@ enum Ev {
     CreditCpu(VcId),
     /// Service attempt on a dcs slice.
     Poll(u32),
+    /// Retransmit-timeout check on a direction (rel links only): with
+    /// frames unacked and no ack progress since arming, the sender
+    /// rewinds its replay buffers (tail-loss recovery).
+    RetxHome,
+    RetxCpu,
+    /// Delayed-ack flush on a direction's receiver (rel links only):
+    /// ack debt that found no reverse frame to piggyback on goes out as
+    /// explicit controls, so a quiet link never mistakes ack delay for
+    /// loss.
+    AckFlushHome,
+    AckFlushCpu,
 }
 
 /// The open-loop engine: arrival clock + scenario samplers on one side,
@@ -233,10 +274,19 @@ pub struct OpenLoop {
     poll_at: Vec<Time>,
     /// High-water mark of request-direction in-flight frames.
     peak_in_flight: u32,
+    /// A retransmit check is already scheduled per direction (0 = home,
+    /// 1 = cpu).
+    retx_pending: [bool; 2],
+    /// Ack progress seen when the pending check was armed.
+    retx_seen_acked: [u64; 2],
+    /// A delayed-ack flush is already scheduled per direction.
+    ack_flush_pending: [bool; 2],
     /// Reused launch buffer for the link pumps (they run on every
     /// send/credit/control event; a fresh Vec each time is pure churn).
     scratch: Vec<(Time, Frame)>,
     lat: Histogram,
+    /// Per-class latency, parallel to `classes`.
+    class_lat: Vec<Histogram>,
     counters: Counters,
 }
 
@@ -276,6 +326,7 @@ impl OpenLoop {
                 }
             };
             classes.push(ClassRt {
+                name: c.name.clone(),
                 base,
                 lines: c.footprint_lines,
                 mix: c.mix,
@@ -286,6 +337,7 @@ impl OpenLoop {
             });
             base += c.footprint_lines;
         }
+        let n_classes = classes.len();
 
         let dcs_cfg = if cfg.home_cached {
             cfg.machine.dcs_cached_config(slices)
@@ -311,8 +363,20 @@ impl OpenLoop {
             // streaming mode lines are released right after use and the
             // cache stays nearly empty regardless of size
             cache: Cache::new(cfg.machine.cpu.llc_bytes, cfg.machine.cpu.llc_ways),
-            to_home: FramedIngress::new(cfg.machine.link, Node::Remote, master.fork(2)),
-            to_cpu: FramedIngress::new(cfg.machine.link, Node::Home, master.fork(3)),
+            to_home: match cfg.machine.rel {
+                Some(rc) => {
+                    FramedIngress::with_rel(cfg.machine.link, Node::Remote, master.fork(2), rc)
+                }
+                None => FramedIngress::new(cfg.machine.link, Node::Remote, master.fork(2)),
+            },
+            to_cpu: match cfg.machine.rel {
+                // the response direction draws an independent fault stream
+                Some(mut rc) => {
+                    rc.faults.seed = rc.faults.seed.wrapping_add(1);
+                    FramedIngress::with_rel(cfg.machine.link, Node::Home, master.fork(3), rc)
+                }
+                None => FramedIngress::new(cfg.machine.link, Node::Home, master.fork(3)),
+            },
             arrivals: Arrivals::new(cfg.arrivals, cfg.rate_per_s, master.fork(4)),
             traffic_rng: master.fork(5),
             classes,
@@ -326,8 +390,12 @@ impl OpenLoop {
             completed: 0,
             poll_at: vec![Time::ZERO; slices],
             peak_in_flight: 0,
+            retx_pending: [false; 2],
+            retx_seen_acked: [0; 2],
+            ack_flush_pending: [false; 2],
             scratch: Vec::new(),
             lat: Histogram::new(),
+            class_lat: vec![Histogram::new(); n_classes],
             counters: Counters::new(),
             cfg,
         }
@@ -335,6 +403,27 @@ impl OpenLoop {
 
     /// Run until every arrival has completed, then report.
     pub fn run(mut self) -> OpenLoopReport {
+        self.run_to_completion();
+        self.report()
+    }
+
+    /// Run to completion, then *settle*: process every event still
+    /// queued (trailing releases, replays, ack and credit returns) so
+    /// the directory state is final, and return the report plus a
+    /// digest of that state (per-line directory states + backing-store
+    /// bytes). Two runs with matching digests ended in bit-identical
+    /// protocol state — the loss-transparency observable: fault
+    /// injection may change *when*, never *what*.
+    pub fn run_settled(mut self) -> (OpenLoopReport, u64) {
+        self.run_to_completion();
+        while let Some((_, ev)) = self.eng.pop() {
+            self.dispatch(ev);
+        }
+        let digest = self.state_digest();
+        (self.report(), digest)
+    }
+
+    fn run_to_completion(&mut self) {
         self.eng.schedule(Duration::ZERO, Ev::Arrive);
         while self.completed < self.cfg.ops {
             let Some((_, ev)) = self.eng.pop() else {
@@ -348,7 +437,28 @@ impl OpenLoop {
             };
             self.dispatch(ev);
         }
-        self.report()
+    }
+
+    /// FNV-1a over every line's directory state and backing-store
+    /// bytes (see [`OpenLoop::run_settled`]).
+    fn state_digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |h: &mut u64, b: u8| {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(FNV_PRIME);
+        };
+        for i in 0..self.region_lines {
+            let addr = LineAddr(i);
+            for b in format!("{:?}", self.dcs.state_of(addr)).bytes() {
+                eat(&mut h, b);
+            }
+            for &b in self.mem.read_line(addr).iter() {
+                eat(&mut h, b);
+            }
+        }
+        h
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -378,7 +488,71 @@ impl OpenLoop {
                 self.pump_cpu();
             }
             Ev::Poll(s) => self.pump_slice(s as usize),
+            Ev::RetxHome => self.on_retx(0),
+            Ev::RetxCpu => self.on_retx(1),
+            Ev::AckFlushHome => self.on_ack_flush(0),
+            Ev::AckFlushCpu => self.on_ack_flush(1),
         }
+    }
+
+    /// Delayed-ack flush: debt the piggyback path did not consume in
+    /// time goes out as explicit cumulative-ack controls.
+    fn on_ack_flush(&mut self, dir: usize) {
+        self.ack_flush_pending[dir] = false;
+        let ctrl = self.cfg.machine.ctrl_latency;
+        loop {
+            let ing = if dir == 0 { &mut self.to_home } else { &mut self.to_cpu };
+            let Some((vc, seq)) = ing.take_piggy_ack() else { break };
+            let ctl = Control::VcAck(vc, seq);
+            self.eng.schedule(ctrl, if dir == 0 { Ev::CtlHome(ctl) } else { Ev::CtlCpu(ctl) });
+        }
+    }
+
+    /// Arm the delayed-ack flush for a direction's receiver when it
+    /// carries unflushed debt.
+    fn arm_ack_flush(&mut self, dir: usize) {
+        let ing = if dir == 0 { &self.to_home } else { &self.to_cpu };
+        if self.ack_flush_pending[dir] || !ing.rel_has_ack_debt() {
+            return;
+        }
+        self.ack_flush_pending[dir] = true;
+        self.eng.schedule(
+            crate::transport::rel::ACK_FLUSH_DELAY,
+            if dir == 0 { Ev::AckFlushHome } else { Ev::AckFlushCpu },
+        );
+    }
+
+    /// Retransmit-timeout check on direction `dir` (0 = requests toward
+    /// the home, 1 = responses toward the cpu).
+    fn on_retx(&mut self, dir: usize) {
+        self.retx_pending[dir] = false;
+        let ing = if dir == 0 { &mut self.to_home } else { &mut self.to_cpu };
+        if ing.rel_unacked() == 0 {
+            return;
+        }
+        if ing.rel_acked() == self.retx_seen_acked[dir] {
+            // no ack progress for a full RTO: rewind and replay
+            ing.rel_force_replay();
+        }
+        // pump the resends; the pump re-arms while anything is unacked
+        if dir == 0 {
+            self.pump_home();
+        } else {
+            self.pump_cpu();
+        }
+    }
+
+    /// Arm the retransmit timer for a direction when frames are unacked
+    /// and no check is pending.
+    fn arm_retx(&mut self, dir: usize) {
+        let ing = if dir == 0 { &self.to_home } else { &self.to_cpu };
+        let Some(rto) = ing.link.rel_rto() else { return };
+        if ing.rel_unacked() == 0 || self.retx_pending[dir] {
+            return;
+        }
+        self.retx_seen_acked[dir] = ing.rel_acked();
+        self.retx_pending[dir] = true;
+        self.eng.schedule(rto, if dir == 0 { Ev::RetxHome } else { Ev::RetxCpu });
     }
 
     fn report(self) -> OpenLoopReport {
@@ -397,9 +571,33 @@ impl OpenLoop {
             counters.add(k, v);
         }
         counters.add("kvs_lookups", self.kvs.served);
-        counters.add("frames_to_home", self.to_home.link.tx.sent);
-        counters.add("frames_to_cpu", self.to_cpu.link.tx.sent);
+        let frames_sent = |ing: &FramedIngress| match ing.link.rel.as_ref() {
+            Some(r) => r.tx.sent,
+            None => ing.link.tx.sent,
+        };
+        counters.add("frames_to_home", frames_sent(&self.to_home));
+        counters.add("frames_to_cpu", frames_sent(&self.to_cpu));
         counters.add("home_credit_stalls", self.to_home.credit_stalls);
+        let frame_goodput = match self.to_home.rel_stats() {
+            Some(mut s) => {
+                if let Some(s2) = self.to_cpu.rel_stats() {
+                    s.merge(&s2);
+                }
+                s.add_to(&mut counters);
+                s.frame_goodput()
+            }
+            None => 1.0,
+        };
+        let per_class = self
+            .classes
+            .iter()
+            .zip(&self.class_lat)
+            .map(|(c, lat)| ClassLatency {
+                class: c.name.clone(),
+                completed: lat.count(),
+                lat: lat.clone(),
+            })
+            .collect();
         let delivered_per_s = if sim_time.ps() == 0 {
             0.0
         } else {
@@ -412,6 +610,8 @@ impl OpenLoop {
             completed: self.completed,
             sim_time,
             lat: self.lat,
+            per_class,
+            frame_goodput,
             per_slice_served,
             per_slice_occupancy,
             served_skew,
@@ -467,6 +667,7 @@ impl OpenLoop {
             addr: LineAddr(self.classes[ci].base + off),
             started: now,
             active: true,
+            class: ci as u16,
         };
         let slot = match self.free.pop() {
             Some(s) => {
@@ -570,7 +771,9 @@ impl OpenLoop {
     fn finish(&mut self, slot: u32, addr: LineAddr) {
         let now = self.eng.now();
         let started = self.ops[slot as usize].started;
-        self.lat.record(now.since(started).ps());
+        let d = now.since(started).ps();
+        self.lat.record(d);
+        self.class_lat[self.ops[slot as usize].class as usize].record(d);
         self.ops[slot as usize].active = false;
         self.completed += 1;
         self.free.push(slot);
@@ -613,6 +816,14 @@ impl OpenLoop {
 
     fn pump_home(&mut self) {
         let now = self.eng.now();
+        // requests piggyback the cumulative acks this node (the cpu)
+        // owes for the responses it received — stolen only when a frame
+        // will actually launch (else the delayed flush handles it)
+        if self.to_home.link.can_launch() {
+            if let Some(a) = self.to_cpu.take_piggy_ack() {
+                self.to_home.stage_piggy_ack(a);
+            }
+        }
         let mut out = std::mem::take(&mut self.scratch);
         self.to_home.pump(now, &mut out);
         for (at, f) in out.drain(..) {
@@ -620,26 +831,41 @@ impl OpenLoop {
         }
         self.scratch = out;
         self.peak_in_flight = self.peak_in_flight.max(self.to_home.in_flight_total());
+        self.arm_retx(0);
     }
 
     fn pump_cpu(&mut self) {
         let now = self.eng.now();
+        // responses piggyback the acks the home owes for received
+        // requests — stolen only when a frame will actually launch
+        if self.to_cpu.link.can_launch() {
+            if let Some(a) = self.to_home.take_piggy_ack() {
+                self.to_cpu.stage_piggy_ack(a);
+            }
+        }
         let mut out = std::mem::take(&mut self.scratch);
         self.to_cpu.pump(now, &mut out);
         for (at, f) in out.drain(..) {
             self.eng.schedule_at(at, Ev::LandCpu(Box::new(f)));
         }
         self.scratch = out;
+        self.arm_retx(1);
     }
 
     // -- home side ----------------------------------------------------------
 
     fn land_home(&mut self, frame: Box<Frame>) {
         let ctrl = self.cfg.machine.ctrl_latency;
+        // a piggybacked ack acknowledges response frames this node (the
+        // home) sent toward the cpu
+        if let Some((vc, seq)) = frame.ack {
+            self.to_cpu.on_control(Control::VcAck(vc, seq));
+        }
         let (frame, ctl) = self.to_home.deliver(*frame);
         if let Some(c) = ctl {
             self.eng.schedule(ctrl, Ev::CtlHome(c));
         }
+        self.arm_ack_flush(0);
         let Some(frame) = frame else { return };
         let now = self.eng.now();
         let s = self.dcs.enqueue_frame(now, frame);
@@ -703,10 +929,16 @@ impl OpenLoop {
     fn land_cpu(&mut self, frame: Box<Frame>) {
         let ctrl = self.cfg.machine.ctrl_latency;
         let vc = frame.vc;
+        // a piggybacked ack acknowledges request frames this node (the
+        // cpu) sent toward the home
+        if let Some((avc, seq)) = frame.ack {
+            self.to_home.on_control(Control::VcAck(avc, seq));
+        }
         let (frame, ctl) = self.to_cpu.deliver(*frame);
         if let Some(c) = ctl {
             self.eng.schedule(ctrl, Ev::CtlCpu(c));
         }
+        self.arm_ack_flush(1);
         let Some(frame) = frame else { return };
         // the cpu sinks responses at arrival: slot freed immediately
         self.eng.schedule(ctrl, Ev::CreditCpu(vc));
@@ -891,6 +1123,49 @@ mod tests {
             batched.counters
         );
         assert_eq!(plain.counters.get("ingress_deliveries"), 0);
+    }
+
+    #[test]
+    fn per_class_latency_breakdown_covers_every_completion() {
+        let cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 1_200, ..Default::default() };
+        let sc = Scenario::preset("tenants", 1 << 12, 0.99).expect("preset");
+        let r = run(cfg, &sc, 2);
+        assert_eq!(r.per_class.len(), 3, "one breakdown entry per tenant class");
+        assert_eq!(r.per_class.iter().map(|c| c.completed).sum::<u64>(), 1_200);
+        for c in &r.per_class {
+            assert!(c.completed > 0, "every class must complete ops: {:?}", r.per_class);
+            assert!(c.p999_ns() >= c.p99_ns() && c.p99_ns() >= c.p50_ns(), "{}", c.class);
+        }
+        assert_eq!(r.per_class[0].class, "hot-kvs");
+        // dependent 4-hop chases must sit far above single-access reads
+        let chase = r.per_class.iter().find(|c| c.class == "chase").unwrap();
+        let scan = r.per_class.iter().find(|c| c.class == "scan").unwrap();
+        assert!(
+            chase.p50_ns() > 2.0 * scan.p50_ns(),
+            "chase p50 {} should dwarf scan p50 {}",
+            chase.p50_ns(),
+            scan.p50_ns()
+        );
+        assert_eq!(r.frame_goodput, 1.0, "a clean link wastes no frames");
+    }
+
+    #[test]
+    fn lossy_link_completes_everything_and_reports_replay() {
+        use crate::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let mut cfg = OpenLoopConfig { rate_per_s: 2e6, ops: 800, ..Default::default() };
+        let spec = FaultSpec { ber: 1e-4, drop: 0.02, reorder: 0.02, burst_len: 1.0 };
+        cfg.machine.rel = Some(RelConfig::new(FaultConfig::new(spec, 7)));
+        let r = run(cfg, &sc, 2);
+        assert_eq!(r.completed, 800, "loss must never lose an operation");
+        assert!(r.frame_goodput < 1.0, "replays must cost frames: {}", r.frame_goodput);
+        assert!(r.frame_goodput > 0.5, "goodput collapsed: {}", r.frame_goodput);
+        assert!(r.counters.get("rel_retransmitted") > 0, "{:?}", r.counters);
+        assert!(
+            r.counters.get("rel_injected_drops") > 0,
+            "drops must have been injected: {:?}",
+            r.counters
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@ use eci::agents::dram::MemStore;
 use eci::machine::{map, Machine, MachineConfig, Op, Workload};
 use eci::proto::messages::{LineAddr, LINE_BYTES};
 use eci::sim::time::Duration;
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig};
 
 /// Home-side configurations under test: `None` = monolithic memory
 /// node, `Some(n)` = sliced cached directory with `n` slices.
@@ -28,7 +29,22 @@ fn config_name(c: Option<usize>) -> String {
 }
 
 fn machine_with(config: Option<usize>) -> Machine {
-    let cfg = MachineConfig::test_small();
+    let mut cfg = MachineConfig::test_small();
+    // Loss-transparency gate: `ECI_LITMUS_FAULTS=<ber>` reruns the whole
+    // suite over the reliable lossy link (`transport::rel`; drops and
+    // reordering derive from the one knob) — every assertion must hold
+    // unchanged, because loss changes timing, never semantics. CI runs
+    // the suite once clean and once with faults injected.
+    if let Ok(v) = std::env::var("ECI_LITMUS_FAULTS") {
+        let ber: f64 = v.parse().expect("ECI_LITMUS_FAULTS must be a bit-error rate");
+        let spec = FaultSpec {
+            ber,
+            drop: (ber * 20.0).min(0.05),
+            reorder: (ber * 20.0).min(0.05),
+            burst_len: 1.0,
+        };
+        cfg.rel = Some(RelConfig::new(FaultConfig::new(spec, 7)));
+    }
     let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
     for i in 0..1024u64 {
         let mut l = [0u8; LINE_BYTES];
@@ -65,6 +81,9 @@ fn store_then_evict_reaches_fpga_memory() {
         prog.push(Op::Think(Duration::from_us(2)));
         m.set_workload(Workload::Script { programs: vec![prog] }, 1);
         let r = m.run();
+        // settle in-flight writebacks (under fault injection the final
+        // replay can outlive the cores)
+        m.drain();
         assert!(r.counters.get("end_marker_seen") == 0, "{name}");
         let line = m.fpga_mem.read_line(target);
         assert_eq!(
@@ -126,6 +145,7 @@ fn read_after_remote_write_round_trip() {
             }));
         }
         m.run();
+        m.drain();
         let got = *seen_value.borrow();
         let line_mem = m.fpga_mem.read_line(target);
         let mem_val = u64::from_le_bytes(line_mem[0..8].try_into().unwrap());

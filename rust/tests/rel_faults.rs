@@ -1,0 +1,198 @@
+//! Loss-transparency gates for the reliable lossy-link transport
+//! (`transport::rel`): sequenced per-VC replay beneath the full machine
+//! must make drops, bit errors, and reordering invisible to every
+//! protocol observable — fill payloads, writeback bytes, final backing
+//! store — on the monolithic memory node AND the sliced cached
+//! directory. Loss changes timing, never semantics.
+
+use eci::agents::dram::MemStore;
+use eci::machine::{map, Machine, MachineConfig, Op, Workload};
+use eci::proto::messages::{Line, LineAddr, LINE_BYTES};
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+use eci::transport::NUM_VCS;
+use eci::workload::{self, OpenLoopConfig, Scenario};
+
+/// The standard lossy wire of this suite: bit errors sized to corrupt a
+/// noticeable fraction of data frames, plus whole-frame drops and
+/// reordering.
+fn faulty_rel(seed: u64) -> RelConfig {
+    let spec = FaultSpec { ber: 1e-3, drop: 0.02, reorder: 0.02, burst_len: 1.0 };
+    RelConfig::new(FaultConfig::new(spec, seed))
+}
+
+fn machine_with(config: Option<usize>, rel: Option<RelConfig>) -> Machine {
+    let mut cfg = MachineConfig::test_small();
+    cfg.rel = rel;
+    let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
+    for i in 0..2048u64 {
+        let mut l = [0u8; LINE_BYTES];
+        l[0..8].copy_from_slice(&(i.wrapping_mul(0x9E37_79B9)).to_le_bytes());
+        fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+    }
+    let cpu = MemStore::new(LineAddr(0), 1 << 20);
+    match config {
+        None => Machine::memory_node(cfg, fpga, cpu),
+        Some(n) => Machine::dcs_cached_node(cfg, n, fpga, cpu),
+    }
+}
+
+fn a(i: u64) -> LineAddr {
+    LineAddr(map::TABLE_BASE.0 + i)
+}
+
+fn fpga_mem_snapshot(m: &Machine, lines: u64) -> Vec<Line> {
+    (0..lines).map(|i| m.fpga_mem.read_line(a(i))).collect()
+}
+
+/// Stream a region with fault injection on vs off, on the memory node
+/// and the sliced cached directory: the fill payloads delivered to
+/// cores and the settled FPGA memory must be bit-identical.
+#[test]
+fn stream_observables_identical_with_faults_on_and_off() {
+    for config in [None, Some(1), Some(2), Some(4)] {
+        let run = |rel: Option<RelConfig>| {
+            let mut m = machine_with(config, rel);
+            let sums = std::rc::Rc::new(std::cell::RefCell::new(
+                std::collections::BTreeMap::<u64, u64>::new(),
+            ));
+            {
+                let sums2 = std::rc::Rc::clone(&sums);
+                m.verify_fill = Some(Box::new(move |addr, data| {
+                    let v = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                    *sums2.borrow_mut().entry(addr.0).or_insert(0) += v;
+                }));
+            }
+            m.set_workload(Workload::StreamRemote { lines: 600 }, 4);
+            let r = m.run();
+            assert_eq!(r.remote_bytes, 600 * 128, "every line must stream intact");
+            m.drain();
+            let retx = m.report().counters.get("rel_retransmitted");
+            let fills = sums.borrow().clone();
+            (fills, fpga_mem_snapshot(&m, 2048), retx)
+        };
+        let (fills_clean, mem_clean, _) = run(None);
+        let (fills_lossy, mem_lossy, retx) = run(Some(faulty_rel(7)));
+        assert!(retx > 0, "config {config:?}: the lossy run must have exercised replay");
+        assert_eq!(
+            fills_lossy, fills_clean,
+            "config {config:?}: fill payloads must be loss-invariant"
+        );
+        assert_eq!(
+            mem_lossy, mem_clean,
+            "config {config:?}: settled FPGA memory must be loss-invariant"
+        );
+    }
+}
+
+/// A dirty writeback crossing a lossy wire (store, conflict-evict,
+/// settle) must land its exact bytes in the home's backing store.
+#[test]
+fn dirty_writeback_survives_loss() {
+    for config in [None, Some(2)] {
+        let mut m = machine_with(config, Some(faulty_rel(11)));
+        let target = a(0);
+        // the test LLC is 256 KiB 16-way = 128 sets; stride-128 lines
+        // conflict and 20 fills overflow the 16 ways
+        let mut prog = vec![Op::Store(target, 0xFEED_F00D)];
+        for k in 1..=20u64 {
+            prog.push(Op::Load(a(k * 128)));
+        }
+        m.set_workload(Workload::Script { programs: vec![prog] }, 1);
+        m.run();
+        m.drain();
+        let line = m.fpga_mem.read_line(target);
+        assert_eq!(
+            u64::from_le_bytes(line[0..8].try_into().unwrap()),
+            0xFEED_F00D,
+            "config {config:?}: the writeback must survive the lossy wire"
+        );
+    }
+}
+
+/// Replay costs latency, never correctness: dependent chases on the
+/// lossy wire complete with the right data, and the loss shows up in
+/// the latency tail.
+#[test]
+fn rel_replay_costs_latency_not_correctness() {
+    let lat = |rel: Option<RelConfig>| {
+        let mut m = machine_with(None, rel);
+        m.set_workload(Workload::ChaseRemote { count: 1_200, region_lines: 2048 }, 1);
+        let r = m.run();
+        (r.load_lat.mean() / 1e3, r.load_lat.p99() as f64 / 1e3)
+    };
+    let (clean_mean, clean_p99) = lat(None);
+    let (lossy_mean, lossy_p99) = lat(Some(faulty_rel(3)));
+    assert!(
+        lossy_p99 > clean_p99 * 1.2,
+        "replays must show in the tail: p99 {lossy_p99} vs clean {clean_p99}"
+    );
+    assert!(lossy_mean >= clean_mean * 0.98, "mean {lossy_mean} vs clean {clean_mean}");
+}
+
+/// The lossy machine is bit-reproducible: one seed drives the traffic,
+/// the wire, and the fault stream.
+#[test]
+fn lossy_machine_is_deterministic_for_seed() {
+    let run = || {
+        let mut m = machine_with(Some(2), Some(faulty_rel(23)));
+        m.set_workload(Workload::StreamRemote { lines: 400 }, 3);
+        let r = m.run();
+        m.drain();
+        let rep = m.report();
+        (
+            r.sim_time,
+            r.events,
+            r.remote_bytes,
+            rep.counters.get("rel_retransmitted"),
+            rep.counters.get("rel_injected_drops"),
+        )
+    };
+    assert_eq!(run(), run(), "lossy runs must replay bit-identically");
+}
+
+/// Open-loop overload on a faulted link: in-flight frames stay inside
+/// the credit budget (a replay must not double-consume), every arrival
+/// completes, and the settled end state matches the clean link's.
+#[test]
+fn faulted_openloop_overload_stays_credit_bounded() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    let mk = |rel: Option<RelConfig>| {
+        let mut cfg = OpenLoopConfig { rate_per_s: 40e6, ops: 1_000, ..Default::default() };
+        cfg.machine.rel = rel;
+        workload::run(cfg, &sc, 1)
+    };
+    let clean = mk(None);
+    let lossy = mk(Some(faulty_rel(13)));
+    assert_eq!(clean.completed, 1_000);
+    assert_eq!(lossy.completed, 1_000, "faulted overload must still drain");
+    let budget =
+        OpenLoopConfig::default().machine.link.credits_per_vc * NUM_VCS as u32;
+    assert!(lossy.peak_in_flight > 0);
+    assert!(
+        lossy.peak_in_flight <= budget,
+        "faulted in-flight {} exceeds credit budget {budget}",
+        lossy.peak_in_flight
+    );
+    assert!(lossy.counters.get("rel_retransmitted") > 0, "{:?}", lossy.counters);
+    // replays burn bandwidth, so the faulted link saturates no higher
+    assert!(lossy.delivered_per_s <= clean.delivered_per_s * 1.02);
+}
+
+/// Burst errors (clustered losses) are just as transparent as
+/// independent ones — the settled open-loop digest is identical.
+#[test]
+fn burst_errors_are_transparent_to_the_settled_state() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    let run = |rel: Option<RelConfig>| {
+        let mut cfg = OpenLoopConfig { rate_per_s: 2e6, ops: 500, ..Default::default() };
+        cfg.machine.rel = rel;
+        eci::workload::OpenLoop::new(cfg, &sc, 2).run_settled()
+    };
+    let (r_clean, d_clean) = run(None);
+    let spec = FaultSpec { ber: 5e-4, drop: 0.02, reorder: 0.0, burst_len: 8.0 };
+    let (r_burst, d_burst) = run(Some(RelConfig::new(FaultConfig::new(spec, 29))));
+    assert_eq!(r_clean.completed, 500);
+    assert_eq!(r_burst.completed, 500);
+    assert!(r_burst.counters.get("rel_retransmitted") > 0, "{:?}", r_burst.counters);
+    assert_eq!(d_burst, d_clean, "burst loss must be invisible to the end state");
+}
