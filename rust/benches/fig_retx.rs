@@ -1,0 +1,27 @@
+//! Bench: replay bandwidth vs retransmission discipline (go-back-N vs
+//! selective repeat vs selective repeat + adaptive RTO) on the reliable
+//! lossy link. Custom harness (criterion is not available in the
+//! offline registry).
+
+use eci::harness::{fig_retx, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_retx::run(scale);
+    println!("{}", fig_retx::render(&f).to_markdown());
+    let worst_ber = f.points.iter().map(|p| p.ber).fold(0.0f64, f64::max);
+    let cell = |v| f.point(v, fig_retx::SLICE_SWEEP[0], worst_ber).expect("cell swept");
+    let gbn = cell(fig_retx::VARIANTS[0]);
+    let sr = cell(fig_retx::VARIANTS[1]);
+    let arto = cell(fig_retx::VARIANTS[2]);
+    println!(
+        "replay B/B at ber {:.0e}: gbn {:.4} -> sr {:.4} -> sr+adaptive-rto {:.4} (rto {} ns)   (host {:?}, scale {scale:?})",
+        worst_ber,
+        gbn.replay_overhead,
+        sr.replay_overhead,
+        arto.replay_overhead,
+        arto.rto_ns,
+        t0.elapsed()
+    );
+}

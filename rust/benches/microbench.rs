@@ -51,16 +51,18 @@ fn main() {
         let n = 50_000u32;
         let mut delivered = 0u64;
         let mut now = eci::sim::time::Time(0);
+        let mut del = Vec::new();
+        let mut ctls = Vec::new();
         for i in 0..n {
             dir.send(Message::coh_req(ReqId(i), Node::Remote, CohOp::ReadShared, LineAddr(i as u64)));
             if let Some((arr, frame)) = dir.try_launch(now) {
                 now = arr;
-                let vc = frame.vc;
-                let (msg, _) = dir.receive(frame);
-                if msg.is_some() {
+                dir.receive(frame, &mut del, &mut ctls);
+                for f in del.drain(..) {
                     delivered += 1;
-                    dir.credit_return(vc);
+                    dir.credit_return(f.vc);
                 }
+                ctls.clear();
             }
         }
         delivered

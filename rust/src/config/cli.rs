@@ -42,13 +42,24 @@
 //! eci bench faults [--ber 1e-6,1e-4,1e-3] [--drop 0.02] [--reorder 0.02]
 //!                  [--burst 8] [--seed 7] [--slices 1,4]
 //!                  [--cached-slices 2] [--rate 2e6] [--ops 1200]
-//!                  [--scenario scan]
+//!                  [--scenario scan] [--mode gbn|sr] [--adaptive-rto]
+//! ```
+//!
+//! The `retx` bench (replay bandwidth vs retransmission discipline:
+//! go-back-N vs selective repeat vs selective repeat + adaptive RTO —
+//! `harness::fig_retx`; the discipline grid is the sweep, so `--mode`
+//! belongs to `faults`, not here):
+//!
+//! ```text
+//! eci bench retx [--ber 1e-4,1e-3] [--drop 0.02] [--reorder 0.02]
+//!                [--burst 8] [--seed 7] [--slices 4] [--rate 2e6]
+//!                [--ops 1200] [--scenario scan]
 //! ```
 //!
 //! Every stochastic bench takes a global `--seed` (Poisson arrivals,
 //! Zipf draws, fault injection all derive from it, so any run is
 //! reproducible from the command line). Defaults: `dcs` 0xDC5,
-//! `workload`/`faults` 0x0C3A.
+//! `workload`/`faults`/`retx` 0x0C3A.
 //!
 //! Flags are only accepted by the bench they belong to; every other
 //! bench id rejects stray arguments loudly (a typo must not green-wash
@@ -57,8 +68,9 @@
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
 use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
-    fig5, fig6, fig7, fig8, fig_loadcurve, fig_throughput, table2, table3, Scale,
+    fig5, fig6, fig7, fig8, fig_loadcurve, fig_retx, fig_throughput, table2, table3, Scale,
 };
+use crate::transport::RelMode;
 use crate::proto::messages::CohOp;
 use crate::proto::subset::{validate_with_workload, Subset};
 use crate::runtime::Runtime;
@@ -82,7 +94,7 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|all]|check|trace-demo>\n\
                  dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
                                  --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N\n\
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
@@ -90,8 +102,10 @@ pub fn main_entry() {
                                  --ops 12000 --arrivals poisson|fixed --cached --seed N\n\
                  faults flags:   --ber 1e-6,1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8\n\
                                  --seed 7 --slices 1,4 --cached-slices 2 --rate 2e6\n\
-                                 --ops 1200 --scenario {scenarios}\n\
-                 seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults 0x0C3A)\n\
+                                 --ops 1200 --scenario {scenarios} --mode gbn|sr --adaptive-rto\n\
+                 retx flags:     --ber 1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8 --seed 7\n\
+                                 --slices 4 --rate 2e6 --ops 1200 --scenario {scenarios}\n\
+                 seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx 0x0C3A)\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})",
                 scenarios = Scenario::preset_names().join("|")
             );
@@ -260,13 +274,7 @@ impl WorkloadArgs {
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
             match flag.as_str() {
                 "--scenario" => {
-                    if !Scenario::preset_names().contains(&val.as_str()) {
-                        return Err(format!(
-                            "unknown scenario {val:?} (have: {})",
-                            Scenario::preset_names().join(", ")
-                        ));
-                    }
-                    out.scenario = val.clone();
+                    out.scenario = check_scenario(val)?;
                 }
                 "--slices" => {
                     out.slices = parse_usize_list(val)?;
@@ -410,33 +418,24 @@ impl FaultsArgs {
         }
     }
 
-    /// Parse `--flag value` pairs; unknown flags are errors.
+    /// Parse `--flag value` pairs (`--adaptive-rto` is a bare flag);
+    /// unknown flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<FaultsArgs, String> {
         let mut out = FaultsArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
+            if flag == "--adaptive-rto" {
+                out.knobs.adaptive_rto = true;
+                continue;
+            }
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
             match flag.as_str() {
+                "--mode" => {
+                    out.knobs.mode = RelMode::parse(val)
+                        .ok_or_else(|| format!("bad rel mode {val:?} (have: gbn, sr)"))?;
+                }
                 "--ber" => {
-                    let bers = val
-                        .split(',')
-                        .map(|s| {
-                            s.trim()
-                                .parse::<f64>()
-                                .map_err(|_| format!("bad ber {s:?}"))
-                                .and_then(|b| {
-                                    if (0.0..0.1).contains(&b) {
-                                        Ok(b)
-                                    } else {
-                                        Err(format!("ber must be in [0, 0.1), got {s:?}"))
-                                    }
-                                })
-                        })
-                        .collect::<Result<Vec<_>, _>>()?;
-                    if bers.is_empty() {
-                        return Err("--ber needs at least one value".into());
-                    }
-                    out.bers = bers;
+                    out.bers = parse_ber_list(val)?;
                 }
                 "--drop" => {
                     out.knobs.drop = parse_prob(val, "--drop")?;
@@ -445,11 +444,7 @@ impl FaultsArgs {
                     out.knobs.reorder = parse_prob(val, "--reorder")?;
                 }
                 "--burst" => {
-                    let b: f64 = val.parse().map_err(|_| format!("bad burst length {val:?}"))?;
-                    if !(b >= 1.0 && b.is_finite()) {
-                        return Err(format!("--burst must be >= 1, got {val:?}"));
-                    }
-                    out.knobs.burst_len = b;
+                    out.knobs.burst_len = parse_burst(val)?;
                 }
                 "--seed" => {
                     let s = parse_seed(val)?;
@@ -465,23 +460,13 @@ impl FaultsArgs {
                     out.cached_slices = parse_usize_list(val)?;
                 }
                 "--rate" => {
-                    let r: f64 = val.parse().map_err(|_| format!("bad rate {val:?}"))?;
-                    if !(r > 0.0 && r.is_finite()) {
-                        return Err(format!("rate must be positive, got {val:?}"));
-                    }
-                    out.rate = Some(r);
+                    out.rate = Some(parse_rate_scalar(val)?);
                 }
                 "--ops" => {
                     out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
                 }
                 "--scenario" => {
-                    if !Scenario::preset_names().contains(&val.as_str()) {
-                        return Err(format!(
-                            "unknown scenario {val:?} (have: {})",
-                            Scenario::preset_names().join(", ")
-                        ));
-                    }
-                    out.scenario = val.clone();
+                    out.scenario = check_scenario(val)?;
                 }
                 other => return Err(format!("unknown faults flag {other:?}")),
             }
@@ -500,6 +485,146 @@ impl FaultsArgs {
     /// The offered rate of the sweep.
     pub fn rate(&self) -> f64 {
         self.rate.unwrap_or_else(|| fig_goodput::default_rate(self.cfg.machine.home_proc))
+    }
+}
+
+/// Parsed `eci bench retx` flags: fault knobs + sweep axes for the
+/// retransmission-discipline ablation (`harness::fig_retx`). The
+/// discipline grid (gbn, sr, sr+adaptive-rto) IS the figure, so there
+/// is no `--mode` here — passing one fails loudly like any stray flag.
+#[derive(Clone, Debug)]
+pub struct RetxArgs {
+    pub slices: Vec<usize>,
+    pub scenario: String,
+    /// Bit-error-rate grid (the disciplines only separate under loss,
+    /// so unlike `faults` the default grid carries no clean point).
+    pub bers: Vec<f64>,
+    pub knobs: FaultKnobs,
+    /// Fixed offered rate; default derives from the slice pipeline.
+    pub rate: Option<f64>,
+    pub cfg: OpenLoopConfig,
+}
+
+impl RetxArgs {
+    pub fn defaults(scale: Scale) -> RetxArgs {
+        RetxArgs {
+            slices: fig_retx::SLICE_SWEEP.to_vec(),
+            scenario: "scan".into(),
+            bers: fig_retx::BER_SWEEP.to_vec(),
+            knobs: FaultKnobs::default(),
+            rate: None,
+            cfg: OpenLoopConfig { ops: fig_retx::ops_for(scale), ..Default::default() },
+        }
+    }
+
+    /// Parse `--flag value` pairs; unknown flags are errors.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<RetxArgs, String> {
+        let mut out = RetxArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--ber" => {
+                    out.bers = parse_ber_list(val)?;
+                }
+                "--drop" => {
+                    out.knobs.drop = parse_prob(val, "--drop")?;
+                }
+                "--reorder" => {
+                    out.knobs.reorder = parse_prob(val, "--reorder")?;
+                }
+                "--burst" => {
+                    out.knobs.burst_len = parse_burst(val)?;
+                }
+                "--seed" => {
+                    let s = parse_seed(val)?;
+                    // one seed reproduces the whole run: traffic draws
+                    // and fault injection both derive from it
+                    out.knobs.seed = s;
+                    out.cfg.seed = s;
+                }
+                "--slices" => {
+                    out.slices = parse_usize_list(val)?;
+                }
+                "--rate" => {
+                    out.rate = Some(parse_rate_scalar(val)?);
+                }
+                "--ops" => {
+                    out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
+                }
+                "--scenario" => {
+                    out.scenario = check_scenario(val)?;
+                }
+                other => return Err(format!("unknown retx flag {other:?}")),
+            }
+        }
+        if out.cfg.ops == 0 {
+            return Err("--ops must be >= 1".into());
+        }
+        Ok(out)
+    }
+
+    /// The offered rate of the sweep.
+    pub fn rate(&self) -> f64 {
+        self.rate.unwrap_or_else(|| fig_goodput::default_rate(self.cfg.machine.home_proc))
+    }
+}
+
+/// `--ber` accepts a comma-separated grid of bit-error rates, each in
+/// [0, 0.1) (shared by `faults` and `retx`, so the two benches can
+/// never diverge on what a legal BER is).
+fn parse_ber_list(val: &str) -> Result<Vec<f64>, String> {
+    let bers = val
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad ber {s:?}"))
+                .and_then(|b| {
+                    if (0.0..0.1).contains(&b) {
+                        Ok(b)
+                    } else {
+                        Err(format!("ber must be in [0, 0.1), got {s:?}"))
+                    }
+                })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    if bers.is_empty() {
+        return Err("--ber needs at least one value".into());
+    }
+    Ok(bers)
+}
+
+/// `--burst`: a mean error-burst length in frames, >= 1 (shared by
+/// `faults` and `retx`).
+fn parse_burst(val: &str) -> Result<f64, String> {
+    let b: f64 = val.parse().map_err(|_| format!("bad burst length {val:?}"))?;
+    if b >= 1.0 && b.is_finite() {
+        Ok(b)
+    } else {
+        Err(format!("--burst must be >= 1, got {val:?}"))
+    }
+}
+
+/// A single positive, finite offered rate (ops/s).
+fn parse_rate_scalar(val: &str) -> Result<f64, String> {
+    let r: f64 = val.parse().map_err(|_| format!("bad rate {val:?}"))?;
+    if r > 0.0 && r.is_finite() {
+        Ok(r)
+    } else {
+        Err(format!("rate must be positive, got {val:?}"))
+    }
+}
+
+/// A scenario preset name (shared by `workload`, `faults` and `retx`).
+fn check_scenario(val: &str) -> Result<String, String> {
+    if Scenario::preset_names().contains(&val) {
+        Ok(val.to_string())
+    } else {
+        Err(format!(
+            "unknown scenario {val:?} (have: {})",
+            Scenario::preset_names().join(", ")
+        ))
     }
 }
 
@@ -543,18 +668,18 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
 /// quietly running the defaults), which green-washes misconfigured CI
 /// smoke steps exactly like an unknown bench id would.
 fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
-    if matches!(which, "dcs" | "workload" | "faults") || rest.is_empty() {
+    if matches!(which, "dcs" | "workload" | "faults" | "retx") || rest.is_empty() {
         return Ok(());
     }
     Err(format!(
-        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload` or `faults`)",
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults` or `retx`)",
         rest.join(" ")
     ))
 }
 
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
-    const KNOWN: [&str; 9] =
-        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "all"];
+    const KNOWN: [&str; 10] =
+        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx", "all"];
     if !KNOWN.contains(&which) {
         // a typo must fail loudly, not green-wash a CI smoke step
         eprintln!("eci bench: unknown bench {which:?} (have: {})", KNOWN.join(", "));
@@ -649,6 +774,20 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
             a.rate(),
         );
         println!("{}", fig_goodput::render(&f).to_markdown());
+    }
+    if matches!(which, "retx" | "all") {
+        let rest = if which == "retx" { rest } else { &[] };
+        let a = match RetxArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench retx: {e}");
+                std::process::exit(2);
+            }
+        };
+        let base = fig_loadcurve::footprint_for(scale);
+        let scenario = Scenario::preset(&a.scenario, base, 0.99).expect("validated at parse");
+        let f = fig_retx::run_custom_with(a.cfg, &scenario, &a.slices, &a.bers, a.knobs, a.rate());
+        println!("{}", fig_retx::render(&f).to_markdown());
     }
 }
 
@@ -755,8 +894,74 @@ mod tests {
         assert!(bench_rejects_flags("dcs", &s(&["--mix", "60:20:20"])).is_ok());
         assert!(bench_rejects_flags("workload", &s(&["--cached-slices", "2"])).is_ok());
         assert!(bench_rejects_flags("faults", &s(&["--ber", "1e-3"])).is_ok());
+        assert!(bench_rejects_flags("retx", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("table3", &[]).is_ok());
         assert!(bench_rejects_flags("all", &[]).is_ok());
+    }
+
+    #[test]
+    fn faults_parses_rel_mode_and_adaptive_rto() {
+        let a = FaultsArgs::parse(Scale::Ci, &[]).unwrap();
+        assert_eq!(a.knobs.mode, RelMode::GoBackN, "default stays the PR 4 baseline");
+        assert!(!a.knobs.adaptive_rto);
+        let a = FaultsArgs::parse(Scale::Ci, &s(&["--mode", "sr", "--adaptive-rto"])).unwrap();
+        assert_eq!(a.knobs.mode, RelMode::SelectiveRepeat);
+        assert!(a.knobs.adaptive_rto);
+        assert!(FaultsArgs::parse(Scale::Ci, &s(&["--mode", "nope"])).is_err());
+        assert!(FaultsArgs::parse(Scale::Ci, &s(&["--mode"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn retx_defaults_and_full_flag_set() {
+        let a = RetxArgs::defaults(Scale::Ci);
+        assert_eq!(a.cfg.ops, fig_retx::ops_for(Scale::Ci));
+        assert_eq!(a.slices, fig_retx::SLICE_SWEEP.to_vec());
+        assert_eq!(a.bers, fig_retx::BER_SWEEP.to_vec());
+        assert_eq!(a.scenario, "scan");
+        assert!(a.rate() > 0.0, "a default rate must exist");
+        let a = RetxArgs::parse(
+            Scale::Ci,
+            &s(&[
+                "--ber", "1e-3",
+                "--drop", "0.02",
+                "--reorder", "0.01",
+                "--burst", "8",
+                "--seed", "7",
+                "--slices", "2,4",
+                "--rate", "2e6",
+                "--ops", "900",
+                "--scenario", "chase",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(a.bers, vec![1e-3]);
+        assert_eq!(a.knobs.drop, 0.02);
+        assert_eq!(a.knobs.reorder, 0.01);
+        assert_eq!(a.knobs.burst_len, 8.0);
+        assert_eq!(a.knobs.seed, 7);
+        assert_eq!(a.cfg.seed, 7, "--seed drives the traffic draws too");
+        assert_eq!(a.slices, vec![2, 4]);
+        assert_eq!(a.rate(), 2e6);
+        assert_eq!(a.cfg.ops, 900);
+        assert_eq!(a.scenario, "chase");
+    }
+
+    #[test]
+    fn retx_rejects_malformed_input() {
+        let bad = |xs: &[&str]| RetxArgs::parse(Scale::Ci, &s(xs)).is_err();
+        assert!(bad(&["--ber", "0.5"]), "ber out of range");
+        assert!(bad(&["--drop", "1.5"]), "drop out of range");
+        assert!(bad(&["--burst", "0.5"]), "burst below 1");
+        assert!(bad(&["--rate", "-1"]), "negative rate");
+        assert!(bad(&["--ops", "0"]), "zero ops");
+        assert!(bad(&["--scenario", "nope"]), "unknown scenario");
+        assert!(bad(&["--slices", "0"]), "zero slices");
+        assert!(bad(&["--wat", "1"]), "unknown flag");
+        assert!(bad(&["--ber"]), "missing value");
+        // the discipline grid IS the figure: mode knobs are stray here
+        assert!(bad(&["--mode", "sr"]), "mode belongs to `faults`");
+        assert!(bad(&["--adaptive-rto", "1"]), "adaptive-rto belongs to `faults`");
+        assert!(bad(&["--cached-slices", "2"]), "no cached sweep on retx");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   off: loss changes timing, never semantics.
 
 use crate::sim::time::Duration;
-use crate::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+use crate::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
 use crate::workload::openloop::{self, OpenLoopConfig};
 use crate::workload::scenario::Scenario;
 
@@ -57,12 +57,31 @@ pub struct FaultKnobs {
     pub burst_len: f64,
     /// Injector seed (`--seed`; also reseeds the traffic draws).
     pub seed: u64,
+    /// Retransmission discipline (`--mode gbn|sr`).
+    pub mode: RelMode,
+    /// RTT-adaptive retransmit timeout (`--adaptive-rto`).
+    pub adaptive_rto: bool,
 }
 
 impl Default for FaultKnobs {
     fn default() -> FaultKnobs {
-        FaultKnobs { drop: 0.0, reorder: 0.0, burst_len: 1.0, seed: OpenLoopConfig::default().seed }
+        FaultKnobs {
+            drop: 0.0,
+            reorder: 0.0,
+            burst_len: 1.0,
+            seed: OpenLoopConfig::default().seed,
+            mode: RelMode::GoBackN,
+            adaptive_rto: false,
+        }
     }
+}
+
+/// The one canonical spelling of a retransmission-discipline label
+/// (`gbn`, `sr`, `sr+adaptive-rto`) — figure headers and rows must
+/// agree on it, so both the faults and retx figures format through
+/// here.
+pub fn rel_label(mode: RelMode, adaptive_rto: bool) -> String {
+    format!("{}{}", mode.name(), if adaptive_rto { "+adaptive-rto" } else { "" })
 }
 
 impl FaultKnobs {
@@ -70,6 +89,14 @@ impl FaultKnobs {
     pub fn rel_config(&self, ber: f64) -> RelConfig {
         let spec = FaultSpec { ber, drop: self.drop, reorder: self.reorder, burst_len: self.burst_len };
         RelConfig::new(FaultConfig::new(spec, self.seed))
+            .with_mode(self.mode)
+            .with_adaptive_rto(self.adaptive_rto)
+    }
+
+    /// Human-readable description of the retransmission discipline
+    /// (figure headers: a run must be self-describing).
+    pub fn rel_label(&self) -> String {
+        rel_label(self.mode, self.adaptive_rto)
     }
 }
 
@@ -91,10 +118,18 @@ pub struct GoodputPoint {
     pub timeouts: u64,
     /// High-water mark of the replay-buffer occupancy (frames).
     pub peak_replay: u64,
+    /// The retransmit timeout in force at the end of the run, ns (the
+    /// fixed value, or the clamped adaptive estimate).
+    pub rto_ns: u64,
 }
 
 pub struct FigGoodput {
     pub scenario: String,
+    /// Retransmission-discipline label (`gbn`, `sr`, `sr+adaptive-rto`)
+    /// — the figure header must make a run self-describing.
+    pub rel: String,
+    /// The seed the whole run derives from (traffic + fault streams).
+    pub seed: u64,
     pub points: Vec<GoodputPoint>,
 }
 
@@ -123,6 +158,7 @@ pub fn run_point(
         retransmitted: r.counters.get("rel_retransmitted"),
         timeouts: r.counters.get("rel_timeouts"),
         peak_replay: r.counters.get("rel_peak_replay"),
+        rto_ns: r.counters.get("rel_rto_ns"),
     }
 }
 
@@ -150,7 +186,12 @@ pub fn run_custom_with(
             points.push(run_point(cached_cfg, scenario, n, ber, knobs, rate));
         }
     }
-    FigGoodput { scenario: scenario.name.clone(), points }
+    FigGoodput {
+        scenario: scenario.name.clone(),
+        rel: knobs.rel_label(),
+        seed: knobs.seed,
+        points,
+    }
 }
 
 /// The default figure: streaming `scan` traffic (write-free, so the
@@ -166,7 +207,10 @@ pub fn run(scale: Scale) -> FigGoodput {
 
 pub fn render(f: &FigGoodput) -> ResultTable {
     let mut t = ResultTable::new(
-        &format!("Goodput vs bit-error rate, scenario `{}` (lossy link, go-back-N replay)", f.scenario),
+        &format!(
+            "Goodput vs bit-error rate, scenario `{}` (lossy link, rel mode `{}`, seed {:#x})",
+            f.scenario, f.rel, f.seed
+        ),
         &[
             "slices",
             "config",
@@ -179,6 +223,7 @@ pub fn render(f: &FigGoodput) -> ResultTable {
             "retx",
             "timeouts",
             "peak replay",
+            "rto ns",
         ],
     );
     for p in &f.points {
@@ -194,6 +239,7 @@ pub fn render(f: &FigGoodput) -> ResultTable {
             p.retransmitted.to_string(),
             p.timeouts.to_string(),
             p.peak_replay.to_string(),
+            p.rto_ns.to_string(),
         ]);
     }
     t

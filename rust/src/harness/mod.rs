@@ -10,6 +10,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig_goodput;
 pub mod fig_loadcurve;
+pub mod fig_retx;
 pub mod fig_throughput;
 pub mod table2;
 pub mod table3;

@@ -262,6 +262,11 @@ pub struct Machine {
     retx_seen_acked: [u64; 2],
     /// A `RelAckFlush` event is already scheduled per direction.
     ack_flush_pending: [bool; 2],
+    /// Reused receive buffers for `arrive` (a selective-repeat delivery
+    /// can release several frames at once; a fresh Vec per arrival is
+    /// pure churn — see DESIGN.md §Perf).
+    rx_frames: Vec<Frame>,
+    rx_ctls: Vec<Control>,
 
     // FPGA socket
     pub app: FpgaApp,
@@ -336,6 +341,8 @@ impl Machine {
             retx_pending: [false; 2],
             retx_seen_acked: [0; 2],
             ack_flush_pending: [false; 2],
+            rx_frames: Vec::new(),
+            rx_ctls: Vec::new(),
             app,
             config_block: ConfigBlock::new(),
             fpga_dram: Dram::new(cfg.fpga_dram),
@@ -827,8 +834,9 @@ impl Machine {
                 self.kick(dir);
             }
             Ev::Ctl { dir, ctl } => {
+                let now = self.eng.now();
                 let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
-                link.on_control(ctl);
+                link.on_control(now, ctl);
                 self.kick(dir);
             }
             Ev::FpgaSend(msg) => {
@@ -962,42 +970,52 @@ impl Machine {
 
     /// Frame arrival at the receiving end of `dir`.
     fn arrive(&mut self, dir: u8, frame: Box<Frame>) {
-        let vc = frame.vc;
+        let now = self.eng.now();
         // A piggybacked cumulative ack belongs to the *opposite*
         // direction's sender, which lives at this receiving node.
         if let Some((avc, seq)) = frame.ack {
             let other = if dir == 0 { &mut self.to_cpu } else { &mut self.to_fpga };
-            other.on_control(Control::VcAck(avc, seq));
+            other.on_control(now, Control::VcAck(avc, seq));
         }
+        // A selective-repeat link may release several frames at once (a
+        // hole-filling retransmission frees its buffered successors);
+        // go-back-N and plain links deliver at most one.
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
         let link = if dir == 0 { &mut self.to_fpga } else { &mut self.to_cpu };
-        let (msg, ctl) = link.receive(*frame);
-        let now = self.eng.now();
-        if let Some(c) = ctl {
+        link.receive(*frame, &mut delivered, &mut ctls);
+        for c in ctls.drain(..) {
             self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::Ctl { dir, ctl: c });
         }
+        self.rx_ctls = ctls;
         // ack debt accrued by this delivery is piggybacked by the next
         // reverse-direction launch or flushed explicitly after a delay
         self.arm_ack_flush(dir);
-        let Some(msg) = msg else { return };
-        if let Some(tap) = self.tap.as_mut() {
-            tap(now, dir == 0, &msg);
+        for f in delivered.drain(..) {
+            let vc = f.vc;
+            let msg = f.msg;
+            if let Some(tap) = self.tap.as_mut() {
+                tap(now, dir == 0, &msg);
+            }
+            // Receiver consumed the frame: its buffer slot flows back —
+            // with one exception. A coherence message bound for the
+            // sliced directory occupies its slot until the owning slice
+            // *services* it; `pump_dcs_slice` returns that credit at
+            // `SliceService::Done`. (I/O messages sink at the config
+            // block and free up here.)
+            let defer_credit = dir == 0
+                && matches!(self.app, FpgaApp::Dcs(_))
+                && matches!(msg.kind, MsgKind::CohReq { .. } | MsgKind::CohRsp { .. });
+            if !defer_credit {
+                self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::CreditRet { dir, vc });
+            }
+            if dir == 0 {
+                self.fpga_receive(msg);
+            } else {
+                self.cpu_receive(msg);
+            }
         }
-        // Receiver consumed the frame: its buffer slot flows back — with
-        // one exception. A coherence message bound for the sliced
-        // directory occupies its slot until the owning slice *services*
-        // it; `pump_dcs_slice` returns that credit at `SliceService::Done`.
-        // (I/O messages sink at the config block and free up here.)
-        let defer_credit = dir == 0
-            && matches!(self.app, FpgaApp::Dcs(_))
-            && matches!(msg.kind, MsgKind::CohReq { .. } | MsgKind::CohRsp { .. });
-        if !defer_credit {
-            self.eng.schedule_at(now + self.cfg.ctrl_latency, Ev::CreditRet { dir, vc });
-        }
-        if dir == 0 {
-            self.fpga_receive(msg);
-        } else {
-            self.cpu_receive(msg);
-        }
+        self.rx_frames = delivered;
     }
 
     /// CPU socket receives a message from the FPGA.

@@ -186,36 +186,43 @@ impl FramedIngress {
         }
     }
 
-    /// Receiver side: process one arriving frame. Returns the frame if
-    /// it was accepted in sequence (ready to hand to the consumer — e.g.
-    /// [`crate::dcs::Dcs::enqueue_frame`]) plus any control frame for
-    /// the reverse direction. The caller must route the control frame
-    /// back via [`FramedIngress::on_control`] and return the frame's
-    /// credit via [`FramedIngress::credit_return`] once the receiver
-    /// frees the buffer slot.
-    pub fn deliver(&mut self, frame: Frame) -> (Option<Frame>, Option<Control>) {
+    /// Receiver side: process one arriving frame. Frames accepted in
+    /// sequence (ready to hand to the consumer — e.g.
+    /// [`crate::dcs::Dcs::enqueue_frame`]) are appended to `out` —
+    /// possibly several on a selective-repeat link, where a hole-filling
+    /// retransmission releases its buffered successors — and controls
+    /// for the reverse direction to `ctls`. The caller must route the
+    /// control frames back via [`FramedIngress::on_control`] and return
+    /// each delivered frame's credit via
+    /// [`FramedIngress::credit_return`] once the receiver frees the
+    /// buffer slot.
+    pub fn deliver(&mut self, frame: Frame, out: &mut Vec<Frame>, ctls: &mut Vec<Control>) {
         debug_assert!(!frame.lost, "lost frames are discarded at the pump, not delivered");
+        let before = out.len();
         if let Some(rel) = self.link.rel.as_mut() {
-            return match rel.rx.on_frame(&frame) {
+            rel.rx.on_frame(frame, out, ctls);
+        } else {
+            match self.link.rx.on_frame(&frame) {
                 RxResult::Deliver(ctl) => {
-                    self.delivered += 1;
-                    (Some(frame), ctl)
+                    out.push(frame);
+                    if let Some(c) = ctl {
+                        ctls.push(c);
+                    }
                 }
-                RxResult::Drop(ctl) => (None, ctl),
-            };
-        }
-        match self.link.rx.on_frame(&frame) {
-            RxResult::Deliver(ctl) => {
-                self.delivered += 1;
-                (Some(frame), ctl)
+                RxResult::Drop(ctl) => {
+                    if let Some(c) = ctl {
+                        ctls.push(c);
+                    }
+                }
             }
-            RxResult::Drop(ctl) => (None, ctl),
         }
+        self.delivered += (out.len() - before) as u64;
     }
 
-    /// Apply an ack/nack control frame to the transmit state.
-    pub fn on_control(&mut self, c: Control) {
-        self.link.on_control(c);
+    /// Apply an ack/sack/nack control frame to the transmit state at
+    /// `now` (the timestamp feeds the rel layer's RTT estimators).
+    pub fn on_control(&mut self, now: Time, c: Control) {
+        self.link.on_control(now, c);
     }
 
     /// The receiver freed the buffer slot of a frame on `vc`.
@@ -355,12 +362,13 @@ mod tests {
         let mut acks = 0;
         for (_, f) in out {
             let vc = f.vc;
-            let (fr, ctl) = ing.deliver(f);
-            let fr = fr.expect("in-sequence frame must deliver");
-            assert!(fr.intact);
-            if let Some(c) = ctl {
+            let (mut del, mut ctls) = (Vec::new(), Vec::new());
+            ing.deliver(f, &mut del, &mut ctls);
+            assert_eq!(del.len(), 1, "in-sequence frame must deliver");
+            assert!(del[0].intact);
+            for c in ctls {
                 acks += 1;
-                ing.on_control(c);
+                ing.on_control(Time(0), c);
             }
             ing.credit_return(vc);
         }

@@ -76,6 +76,16 @@ impl Frame {
         let raw = LINK_HEADER_BYTES + piggy + self.msg.wire_bytes() + CRC_BYTES;
         raw.div_ceil(8) * 8
     }
+
+    /// Bytes on the wire excluding the optional piggybacked ack word —
+    /// the frame's *own* cost. The rel layer's byte accounting
+    /// (sent/retransmitted/accepted bytes) uses this on both ends so
+    /// the replay-overhead ratio is not skewed by which copies happened
+    /// to carry an opportunistic ack envelope.
+    pub fn own_wire_bytes(&self) -> u64 {
+        let raw = LINK_HEADER_BYTES + self.msg.wire_bytes() + CRC_BYTES;
+        raw.div_ceil(8) * 8
+    }
 }
 
 /// A control frame (ack/nack) on the reverse direction. Fixed 16 bytes.
@@ -88,8 +98,15 @@ pub enum Control {
     /// Per-VC cumulative ack (rel layer): everything <= seq on the VC
     /// received intact and in sequence.
     VcAck(VcId, Seq),
-    /// Per-VC go-back-N request (rel layer): retransmit the VC from seq.
+    /// Per-VC retransmit request (rel layer). Go-back-N reads it as
+    /// "rewind the VC from seq"; selective repeat as "retransmit exactly
+    /// seq" (one nack per missing frame, the out-of-order receive buffer
+    /// keeps everything after the hole).
     VcNack(VcId, Seq),
+    /// Per-VC selective ack (rel layer, selective repeat only): exactly
+    /// seq arrived intact and is buffered out of order — do not replay
+    /// it on nack or timeout. Cumulative trimming still rides `VcAck`.
+    VcSack(VcId, Seq),
 }
 
 pub const CONTROL_BYTES: u64 = 16;
@@ -121,6 +138,10 @@ mod tests {
         // 8 + 8 + 16 + 4 = 36 -> padded 40; half a control frame's cost
         assert_eq!(f.wire_bytes(), 40);
         assert!(f.wire_bytes() - 32 < CONTROL_BYTES);
+        // the frame's own cost ignores the envelope either way
+        assert_eq!(f.own_wire_bytes(), 32);
+        f.ack = None;
+        assert_eq!(f.own_wire_bytes(), f.wire_bytes());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::sim::time::Time;
 pub use ingress::{FramedIngress, IngressBatcher};
 pub use link::{Control, Frame, CONTROL_BYTES};
 pub use phys::{PhysConfig, PhysDir};
-pub use rel::{FaultConfig, FaultSpec, RelConfig, RelState, RelStats};
+pub use rel::{FaultConfig, FaultSpec, RelConfig, RelMode, RelState, RelStats};
 pub use transaction::{RxResult, RxState, TxState};
 pub use vc::{class_of_vc, vc_for, Credits, VcClass, VcId, VcMux, NUM_COHERENCE_VCS, NUM_VCS};
 
@@ -88,7 +88,9 @@ impl LinkDir {
     /// per VC ([`rel::seqrep`]) instead of link-globally.
     pub fn new_rel(cfg: LinkConfig, owner: Node, rng: Rng, rel: RelConfig) -> LinkDir {
         let mut d = LinkDir::new(cfg, owner, rng);
-        d.rel = Some(RelState::new(rel));
+        // the selective-repeat receive buffer is bounded by the replay
+        // window: every buffered frame still holds its per-VC credit
+        d.rel = Some(RelState::new(rel, cfg.credits_per_vc as u64));
         d
     }
 
@@ -140,7 +142,7 @@ impl LinkDir {
                 let (vc, msg) = self.mux.arbitrate(&self.credits)?;
                 let consumed = self.credits.consume(vc);
                 debug_assert!(consumed, "arbiter returned a creditless VC");
-                rel.tx.frame(vc, msg)
+                rel.tx.frame(now, vc, msg)
             }
         };
         // attach a staged cumulative ack (the ack envelope bit) — also
@@ -181,29 +183,41 @@ impl LinkDir {
     }
 
     /// Process an arriving frame (receiver side of this direction).
-    /// Piggybacked acks are NOT handled here — they belong to the
-    /// opposite direction, which only the host can reach.
-    pub fn receive(&mut self, frame: Frame) -> (Option<Message>, Option<Control>) {
+    /// Frames accepted for the consumer are appended to `delivered` —
+    /// possibly several on selective-repeat links, where a hole-filling
+    /// retransmission releases its buffered successors — exactly once
+    /// and in per-VC order; ack/nack/sack controls for the reverse path
+    /// go to `ctls`. Piggybacked acks are NOT handled here — they
+    /// belong to the opposite direction, which only the host can reach.
+    pub fn receive(&mut self, frame: Frame, delivered: &mut Vec<Frame>, ctls: &mut Vec<Control>) {
         if let Some(rel) = self.rel.as_mut() {
             if frame.lost {
                 // never reached the framer: no CRC check, no nack
-                return (None, None);
+                return;
             }
-            return match rel.rx.on_frame(&frame) {
-                RxResult::Deliver(ctl) => (Some(frame.msg), ctl),
-                RxResult::Drop(ctl) => (None, ctl),
-            };
+            rel.rx.on_frame(frame, delivered, ctls);
+            return;
         }
         match self.rx.on_frame(&frame) {
-            RxResult::Deliver(ctl) => (Some(frame.msg), ctl),
-            RxResult::Drop(ctl) => (None, ctl),
+            RxResult::Deliver(ctl) => {
+                delivered.push(frame);
+                if let Some(c) = ctl {
+                    ctls.push(c);
+                }
+            }
+            RxResult::Drop(ctl) => {
+                if let Some(c) = ctl {
+                    ctls.push(c);
+                }
+            }
         }
     }
 
-    /// Control frame came back from the peer.
-    pub fn on_control(&mut self, c: Control) {
+    /// Control frame came back from the peer at `now` (the timestamp
+    /// feeds the rel layer's RTT estimators).
+    pub fn on_control(&mut self, now: Time, c: Control) {
         match self.rel.as_mut() {
-            Some(rel) => rel.tx.on_control(c),
+            Some(rel) => rel.tx.on_control(now, c),
             None => self.tx.on_control(c),
         }
     }
@@ -227,9 +241,12 @@ impl LinkDir {
         self.rel.as_ref().map_or(0, |r| r.tx.acked)
     }
 
-    /// The configured retransmit timeout, when this is a rel link.
+    /// The retransmit timeout in force, when this is a rel link: the
+    /// configured fixed value, or the clamped adaptive estimate
+    /// ([`RelState::effective_rto`]) — re-read at every arming, so the
+    /// timer tracks the measured RTT as samples land.
     pub fn rel_rto(&self) -> Option<crate::sim::time::Duration> {
-        self.rel.as_ref().map(|r| r.rto)
+        self.rel.as_ref().map(|r| r.effective_rto())
     }
 
     /// Retransmit-timeout expiry: rewind every VC with unacked frames.
@@ -261,6 +278,14 @@ mod tests {
         LinkDir::new(LinkConfig::eci(), owner, Rng::new(3))
     }
 
+    /// Feed one frame, returning (delivered, controls).
+    fn recv(d: &mut LinkDir, f: Frame) -> (Vec<Frame>, Vec<Control>) {
+        let mut del = Vec::new();
+        let mut ctls = Vec::new();
+        d.receive(f, &mut del, &mut ctls);
+        (del, ctls)
+    }
+
     #[test]
     fn single_message_latency_is_pipeline_plus_serialization() {
         let mut d = mk(Node::Remote);
@@ -269,8 +294,8 @@ mod tests {
         assert!(frame.intact);
         // 32B at ~29 GB/s ~ 1.1ns + 120ns pipeline
         assert!(arrival.as_ns() > 120.0 && arrival.as_ns() < 122.0, "{arrival}");
-        let (msg, _) = d.receive(frame);
-        assert!(msg.is_some());
+        let (del, _) = recv(&mut d, frame);
+        assert_eq!(del.len(), 1);
     }
 
     #[test]
@@ -310,14 +335,13 @@ mod tests {
             match dir.try_launch(now) {
                 Some((arrival, frame)) => {
                     now = arrival;
-                    let vc = frame.vc;
-                    let (msg, ctl) = dir.receive(frame);
-                    if let Some(m) = msg {
-                        got.push(m.id.0);
-                        dir.credit_return(vc);
+                    let (del, ctls) = recv(&mut dir, frame);
+                    for f in del {
+                        got.push(f.msg.id.0);
+                        dir.credit_return(f.vc);
                     }
-                    if let Some(c) = ctl {
-                        dir.on_control(c);
+                    for c in ctls {
+                        dir.on_control(now, c);
                     }
                     stall = 0;
                 }
@@ -326,7 +350,7 @@ mod tests {
                     stall += 1;
                     assert!(stall < 3, "link deadlocked");
                     let exp = dir.rx.expected_seq();
-                    dir.on_control(Control::Nack(exp));
+                    dir.on_control(now, Control::Nack(exp));
                     now = now + Duration::from_ns(100);
                 }
             }
@@ -338,10 +362,16 @@ mod tests {
 
     #[test]
     fn rel_link_delivers_everything_under_drop_corrupt_reorder() {
+        for mode in [RelMode::GoBackN, RelMode::SelectiveRepeat] {
+            rel_link_delivers_everything(mode);
+        }
+    }
+
+    fn rel_link_delivers_everything(mode: RelMode) {
         let mut cfg = LinkConfig::eci();
         cfg.credits_per_vc = 8;
         let spec = rel::FaultSpec { ber: 1e-4, drop: 0.05, reorder: 0.05, burst_len: 1.0 };
-        let relcfg = RelConfig::new(rel::FaultConfig::new(spec, 5));
+        let relcfg = RelConfig::new(rel::FaultConfig::new(spec, 5)).with_mode(mode);
         let mut d = LinkDir::new_rel(cfg, Node::Remote, Rng::new(3), relcfg);
         let total = 400u32;
         for i in 0..total {
@@ -375,14 +405,13 @@ mod tests {
             inflight.sort_by_key(|(t, _)| *t);
             for (at, f) in inflight {
                 now = Time(now.0.max(at.0));
-                let vc = f.vc;
-                let (msg, ctl) = d.receive(f);
-                if msg.is_some() {
+                let (del, ctls) = recv(&mut d, f);
+                for g in del {
                     got += 1;
-                    d.credit_return(vc);
+                    d.credit_return(g.vc);
                 }
-                if let Some(c) = ctl {
-                    d.on_control(c);
+                for c in ctls {
+                    d.on_control(now, c);
                 }
             }
         }

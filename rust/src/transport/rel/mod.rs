@@ -10,58 +10,119 @@
 //!   Gilbert–Elliott burst mode, interposed on the framed path (both
 //!   the workload engine's [`crate::transport::FramedIngress`] and the
 //!   machine's link directions consult it at launch time);
-//! * [`seqrep`] — per-VC go-back-N sequencing/ack/replay: each VC keeps
-//!   its own sequence numbers and replay buffer, cumulative acks ride
-//!   piggybacked on reverse-direction frames (the link header's ack
-//!   envelope bit) or as explicit controls, retransmission is triggered
-//!   by sequence gaps, corruption nacks, or the host's retransmit
-//!   timeout — and link credits are held across replays: a replayed
-//!   frame neither re-consumes nor leaks a credit;
-//! * [`stats`] — retransmission / goodput / replay-buffer-occupancy
-//!   counters, surfaced through the machine report, the
-//!   `workload::OpenLoopReport`, and `harness::fig_goodput`.
+//! * [`seqrep`] — per-VC sequencing/ack/replay in one of two
+//!   retransmission disciplines ([`RelMode`]): **go-back-N** (strictly
+//!   in-order receive, a hole rewinds the whole VC tail) or **selective
+//!   repeat** (out-of-order receive buffer bounded by the replay
+//!   window, per-seq sack/nack, exactly-once in-order delivery, one
+//!   replayed frame per hole). Cumulative acks ride piggybacked on
+//!   reverse-direction frames (the link header's ack envelope bit) or
+//!   as explicit controls; link credits are held across replays either
+//!   way: a replayed frame neither re-consumes nor leaks a credit;
+//! * [`rto`] — adaptive retransmit timeout: per-VC srtt/rttvar EWMAs
+//!   over launch→ack RTT samples (Karn-filtered), clamped to
+//!   [`RTO_FLOOR`], [`RTO_CEIL`] — tail loss recovers at the measured
+//!   round trip instead of the worst-case fixed timer;
+//! * [`stats`] — retransmission / goodput / replay-bandwidth counters,
+//!   surfaced through the machine report, the
+//!   `workload::OpenLoopReport`, `harness::fig_goodput`, and the
+//!   GBN-vs-SR ablation figure `harness::fig_retx`.
 //!
 //! The invariant everything here defends: **loss changes timing, never
 //! semantics.** Litmus scenarios and final directory state are
-//! bit-identical with fault injection on vs off (pinned in
-//! `rust/tests/rel_faults.rs` and, via `ECI_LITMUS_FAULTS`, by the full
-//! litmus suite in CI).
+//! bit-identical with fault injection on vs off and across both
+//! retransmission modes (pinned in `rust/tests/rel_faults.rs` and, via
+//! `ECI_LITMUS_FAULTS` × `ECI_LITMUS_REL_MODE`, by the full litmus
+//! suite in CI).
 
 pub mod fault;
+pub mod rto;
 pub mod seqrep;
 pub mod stats;
 
 pub use fault::{FaultAction, FaultConfig, FaultInjector, FaultSpec, FaultStats};
+pub use rto::RttEstimator;
 pub use seqrep::{RelRx, RelTx};
 pub use stats::RelStats;
 
 use crate::sim::time::Duration;
 
+/// Retransmission discipline of one link direction (both ends of a
+/// direction must agree, which the machine/workload wiring guarantees).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RelMode {
+    /// Strictly in-order receive; a hole rewinds and replays the whole
+    /// VC tail. Buffer-free, replay-hungry.
+    GoBackN,
+    /// Out-of-order receive buffer (bounded by the replay window) with
+    /// per-seq sack/nack; exactly one frame replays per hole. Delivery
+    /// to the consumer stays exactly-once, in per-VC order.
+    SelectiveRepeat,
+}
+
+impl RelMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            RelMode::GoBackN => "gbn",
+            RelMode::SelectiveRepeat => "sr",
+        }
+    }
+
+    /// Parse a CLI/env spelling (`gbn` | `sr`, with a few aliases).
+    pub fn parse(s: &str) -> Option<RelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "gbn" | "go-back-n" | "goback" => Some(RelMode::GoBackN),
+            "sr" | "selective-repeat" | "selective" => Some(RelMode::SelectiveRepeat),
+            _ => None,
+        }
+    }
+}
+
 /// Reliability configuration of one (or both) link directions.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RelConfig {
     pub faults: FaultConfig,
-    /// Retransmit timeout: with frames unacked and no ack progress for
-    /// this long, the sender rewinds every VC's replay buffer. The
-    /// default comfortably exceeds the ECI round trip (~0.5 µs) — tail
-    /// losses cost a timeout, everything else recovers via gap nacks.
+    /// Retransmission discipline (default go-back-N, the PR 4 behavior).
+    pub mode: RelMode,
+    /// Base retransmit timeout: with frames unacked and no ack progress
+    /// for this long, the sender replays (go-back-N rewinds every VC;
+    /// selective repeat re-sends the un-sacked frames only). The default
+    /// comfortably exceeds the ECI round trip (~0.5 µs) — tail losses
+    /// cost a timeout, everything else recovers via gap nacks. With
+    /// [`RelConfig::adaptive_rto`] set this is only the *initial* value,
+    /// used until RTT samples land.
     pub rto: Duration,
+    /// Derive the effective RTO from measured per-VC RTT EWMAs
+    /// (srtt + 4·rttvar, Karn-filtered samples, clamped to
+    /// [`RTO_FLOOR`], [`RTO_CEIL`]) instead of the fixed timer.
+    pub adaptive_rto: bool,
 }
 
 /// Default retransmit timeout (see [`RelConfig::rto`]).
 pub const DEFAULT_RTO: Duration = Duration::from_us(2);
 
+/// Floor of the adaptive RTO: above the worst clean-link ack delay
+/// (delayed-ack flush + control latency + flight), so an adaptive timer
+/// can never fire on a link that is merely quiet. Pinned by
+/// `adaptive_rto_never_fires_below_the_floor_on_a_clean_link` in
+/// `rust/tests/rel_faults.rs`.
+pub const RTO_FLOOR: Duration = Duration::from_ns(1_000);
+
+/// Ceiling of the adaptive RTO: bounds tail-loss recovery latency under
+/// pathological RTT estimates.
+pub const RTO_CEIL: Duration = Duration::from_us(32);
+
 /// Delayed-ack flush window: cumulative-ack debt that finds no
 /// reverse-direction frame to piggyback on within this delay is sent as
-/// an explicit control frame. Well below [`DEFAULT_RTO`], so on a clean
-/// link the sender always sees ack progress before its retransmit timer
-/// can mistake ack delay for loss (timeout replays then mean *actual*
-/// tail loss).
+/// an explicit control frame. Well below [`RTO_FLOOR`] (and
+/// [`DEFAULT_RTO`]), so on a clean link the sender always sees ack
+/// progress before its retransmit timer can mistake ack delay for loss
+/// (timeout replays then mean *actual* tail loss).
 pub const ACK_FLUSH_DELAY: Duration = Duration::from_ns(400);
 
 impl RelConfig {
     pub fn new(faults: FaultConfig) -> RelConfig {
-        RelConfig { faults, rto: DEFAULT_RTO }
+        RelConfig { faults, mode: RelMode::GoBackN, rto: DEFAULT_RTO, adaptive_rto: false }
     }
 
     /// Uniform bit-error rate on every VC (the `--ber` CLI knob).
@@ -73,6 +134,16 @@ impl RelConfig {
         self.rto = rto;
         self
     }
+
+    pub fn with_mode(mut self, mode: RelMode) -> RelConfig {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_adaptive_rto(mut self, adaptive: bool) -> RelConfig {
+        self.adaptive_rto = adaptive;
+        self
+    }
 }
 
 /// Per-direction reliability state, carried by a
@@ -81,23 +152,130 @@ pub struct RelState {
     pub tx: RelTx,
     pub rx: RelRx,
     pub faults: FaultInjector,
+    pub mode: RelMode,
+    /// Configured base/initial RTO (see [`RelConfig::rto`]).
     pub rto: Duration,
+    pub adaptive_rto: bool,
     /// Acks that rode a reverse-direction frame (stats).
     pub piggybacked_acks: u64,
 }
 
 impl RelState {
-    pub fn new(cfg: RelConfig) -> RelState {
+    /// `window`: the selective-repeat receive-buffer bound, in frames
+    /// per VC — sized to the replay window (the per-VC credit budget:
+    /// every buffered frame still holds its credit, so a correct peer
+    /// can never exceed it).
+    pub fn new(cfg: RelConfig, window: u64) -> RelState {
         RelState {
-            tx: RelTx::new(),
-            rx: RelRx::new(),
+            tx: RelTx::new(cfg.mode),
+            rx: RelRx::new(cfg.mode, window),
             faults: FaultInjector::new(cfg.faults),
+            mode: cfg.mode,
             rto: cfg.rto,
+            adaptive_rto: cfg.adaptive_rto,
             piggybacked_acks: 0,
+        }
+    }
+
+    /// The retransmit timeout in force right now: the configured fixed
+    /// value, or — when adaptive — the widest per-VC `srtt + 4·rttvar`
+    /// clamped to [[`RTO_FLOOR`], [`RTO_CEIL`]] (the initial value
+    /// until the first sample lands).
+    pub fn effective_rto(&self) -> Duration {
+        if !self.adaptive_rto {
+            return self.rto;
+        }
+        match self.tx.measured_rto() {
+            Some(m) => m.clamp(RTO_FLOOR, RTO_CEIL),
+            None => self.rto,
         }
     }
 
     pub fn stats(&self) -> RelStats {
         RelStats::of(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Time;
+    use crate::transport::vc::VcId;
+
+    #[test]
+    fn mode_parses_and_names() {
+        assert_eq!(RelMode::parse("gbn"), Some(RelMode::GoBackN));
+        assert_eq!(RelMode::parse("SR"), Some(RelMode::SelectiveRepeat));
+        assert_eq!(RelMode::parse("selective-repeat"), Some(RelMode::SelectiveRepeat));
+        assert_eq!(RelMode::parse("wat"), None);
+        assert_eq!(RelMode::GoBackN.name(), "gbn");
+        assert_eq!(RelMode::SelectiveRepeat.name(), "sr");
+    }
+
+    #[test]
+    fn default_config_is_gbn_fixed_rto() {
+        let c = RelConfig::from_ber(1e-4, 1);
+        assert_eq!(c.mode, RelMode::GoBackN);
+        assert_eq!(c.rto, DEFAULT_RTO);
+        assert!(!c.adaptive_rto);
+    }
+
+    #[test]
+    fn effective_rto_is_fixed_until_adaptive_with_samples() {
+        let cfg = RelConfig::from_ber(0.0, 1).with_adaptive_rto(true);
+        let mut st = RelState::new(cfg, 40);
+        assert_eq!(st.effective_rto(), DEFAULT_RTO, "no samples yet: initial value");
+        // one 500 ns sample: rto = 500 + 4·250 = 1500 ns (above the floor)
+        st.tx.frame(
+            Time(0),
+            VcId(0),
+            crate::proto::messages::Message::coh_req(
+                crate::proto::messages::ReqId(0),
+                crate::proto::states::Node::Remote,
+                crate::proto::messages::CohOp::ReadShared,
+                crate::proto::messages::LineAddr(0),
+            ),
+        );
+        st.tx.on_control(Time(500_000), crate::transport::Control::VcAck(VcId(0), 0));
+        assert_eq!(st.effective_rto(), Duration::from_ns(1_500));
+        // a fixed-timer config ignores the samples entirely
+        let mut fixed = RelState::new(RelConfig::from_ber(0.0, 1), 40);
+        fixed.tx.frame(
+            Time(0),
+            VcId(0),
+            crate::proto::messages::Message::coh_req(
+                crate::proto::messages::ReqId(1),
+                crate::proto::states::Node::Remote,
+                crate::proto::messages::CohOp::ReadShared,
+                crate::proto::messages::LineAddr(2),
+            ),
+        );
+        fixed.tx.on_control(Time(500_000), crate::transport::Control::VcAck(VcId(0), 0));
+        assert_eq!(fixed.effective_rto(), DEFAULT_RTO);
+    }
+
+    #[test]
+    fn effective_rto_clamps_to_floor_and_ceiling() {
+        let cfg = RelConfig::from_ber(0.0, 1).with_adaptive_rto(true);
+        let mut st = RelState::new(cfg, 40);
+        let msg = |i: u32, a: u64| {
+            crate::proto::messages::Message::coh_req(
+                crate::proto::messages::ReqId(i),
+                crate::proto::states::Node::Remote,
+                crate::proto::messages::CohOp::ReadShared,
+                crate::proto::messages::LineAddr(a),
+            )
+        };
+        // converge the EWMA on a 50 ns RTT: unclamped rto sinks toward
+        // 50 ns, far below the floor
+        for i in 0..200u32 {
+            st.tx.frame(Time(i as u64 * 1_000_000), VcId(0), msg(i, 2 * i as u64));
+            st.tx.on_control(
+                Time(i as u64 * 1_000_000 + 50_000),
+                crate::transport::Control::VcAck(VcId(0), i as u64),
+            );
+        }
+        assert!(st.tx.measured_rto().unwrap() < RTO_FLOOR);
+        assert_eq!(st.effective_rto(), RTO_FLOOR, "the floor must hold");
     }
 }

@@ -1,0 +1,130 @@
+//! Adaptive retransmit-timeout estimation from measured round-trip
+//! times (RFC 6298-style, scaled to the ECI link's nanosecond RTTs).
+//!
+//! The fixed 2 µs retransmit timer ([`super::DEFAULT_RTO`]) is tuned for
+//! the worst case: it must comfortably exceed the ack path (flight +
+//! delayed-ack flush + control latency) or a quiet link replays
+//! spuriously. But a fixed worst-case timer recovers *tail loss* — the
+//! one loss class only the timer can see — a full 2 µs after the frames
+//! stopped making progress, even when the measured round trip says an
+//! ack should have landed in a quarter of that. The estimator here
+//! closes the gap: each VC tracks a smoothed RTT (`srtt`) and its mean
+//! deviation (`rttvar`) over samples measured from frame launch to
+//! cumulative/selective ack, and the effective RTO becomes
+//!
+//! ```text
+//! rto = clamp(srtt + 4·rttvar, RTO_FLOOR, RTO_CEIL)
+//! ```
+//!
+//! with the standard EWMA gains (α = 1/8 for `srtt`, β = 1/4 for
+//! `rttvar`). Two guards keep the estimate honest:
+//!
+//! * **Karn's rule**: frames that were retransmitted never contribute a
+//!   sample — an ack for such a frame is ambiguous (it may acknowledge
+//!   either copy), and feeding the ambiguity into the EWMA collapses
+//!   the timer under sustained loss;
+//! * **floor/ceiling clamps** ([`super::RTO_FLOOR`],
+//!   [`super::RTO_CEIL`]): the floor sits above the worst clean-link
+//!   ack delay (delayed-ack flush + control-path latency), so the
+//!   adaptive timer can never fire on a link that is merely quiet; the
+//!   ceiling bounds recovery latency under pathological estimates.
+
+use crate::sim::time::Duration;
+
+/// EWMA gain for `srtt`: α = 1/8 (as a right-shift).
+const SRTT_SHIFT: u32 = 3;
+/// EWMA gain for `rttvar`: β = 1/4 (as a right-shift).
+const RTTVAR_SHIFT: u32 = 2;
+
+/// One VC's RTT estimator: srtt/rttvar EWMA over ack-measured samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RttEstimator {
+    srtt_ps: u64,
+    rttvar_ps: u64,
+    /// Samples absorbed (0 = no estimate yet).
+    pub samples: u64,
+}
+
+impl RttEstimator {
+    pub fn new() -> RttEstimator {
+        RttEstimator::default()
+    }
+
+    /// Absorb one RTT sample (launch → ack). The caller enforces Karn's
+    /// rule: samples from retransmitted frames must not reach here.
+    pub fn observe(&mut self, rtt: Duration) {
+        let r = rtt.ps();
+        if self.samples == 0 {
+            // RFC 6298 §2.2: srtt = R, rttvar = R/2
+            self.srtt_ps = r;
+            self.rttvar_ps = r / 2;
+        } else {
+            // rttvar = (1-β)·rttvar + β·|srtt - R|; srtt = (1-α)·srtt + α·R
+            let dev = self.srtt_ps.abs_diff(r);
+            self.rttvar_ps =
+                self.rttvar_ps - (self.rttvar_ps >> RTTVAR_SHIFT) + (dev >> RTTVAR_SHIFT);
+            self.srtt_ps = self.srtt_ps - (self.srtt_ps >> SRTT_SHIFT) + (r >> SRTT_SHIFT);
+        }
+        self.samples += 1;
+    }
+
+    /// Smoothed RTT, once at least one sample has landed.
+    pub fn srtt(&self) -> Option<Duration> {
+        (self.samples > 0).then(|| Duration(self.srtt_ps))
+    }
+
+    /// Unclamped RTO estimate `srtt + 4·rttvar` (the caller applies the
+    /// floor/ceiling clamps), once at least one sample has landed.
+    pub fn rto(&self) -> Option<Duration> {
+        (self.samples > 0).then(|| Duration(self.srtt_ps + 4 * self.rttvar_ps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_samples_means_no_estimate() {
+        let e = RttEstimator::new();
+        assert_eq!(e.rto(), None);
+        assert_eq!(e.srtt(), None);
+    }
+
+    #[test]
+    fn first_sample_seeds_srtt_and_var() {
+        let mut e = RttEstimator::new();
+        e.observe(Duration::from_ns(400));
+        assert_eq!(e.srtt().unwrap(), Duration::from_ns(400));
+        // rto = 400 + 4·200 = 1200 ns
+        assert_eq!(e.rto().unwrap(), Duration::from_ns(1200));
+    }
+
+    #[test]
+    fn steady_samples_converge_and_tighten() {
+        let mut e = RttEstimator::new();
+        for _ in 0..200 {
+            e.observe(Duration::from_ns(500));
+        }
+        let srtt = e.srtt().unwrap().as_ns();
+        assert!((srtt - 500.0).abs() < 5.0, "srtt {srtt} should converge to 500");
+        // constant samples drive rttvar toward zero: rto → srtt
+        assert!(e.rto().unwrap().as_ns() < 550.0, "{:?}", e.rto());
+    }
+
+    #[test]
+    fn jitter_widens_the_estimate() {
+        let mut steady = RttEstimator::new();
+        let mut jittery = RttEstimator::new();
+        for i in 0..200u64 {
+            steady.observe(Duration::from_ns(500));
+            jittery.observe(Duration::from_ns(if i % 2 == 0 { 200 } else { 800 }));
+        }
+        assert!(
+            jittery.rto().unwrap() > steady.rto().unwrap(),
+            "variance must widen the RTO: {:?} vs {:?}",
+            jittery.rto(),
+            steady.rto()
+        );
+    }
+}

@@ -1,4 +1,5 @@
-//! Per-VC sequencing, acknowledgment, and go-back-N replay.
+//! Per-VC sequencing, acknowledgment, and replay — go-back-N or
+//! selective repeat ([`RelMode`]).
 //!
 //! The link-global transaction layer ([`crate::transport::transaction`])
 //! runs ONE sequence space across all 14 VCs: a single corrupted frame
@@ -9,107 +10,228 @@
 //! buffer, cumulative acks, and nack state — so a loss on one channel
 //! replays only that channel.
 //!
-//! Protocol: the receiver accepts each VC strictly in sequence;
-//! corrupted frames renew a `VcNack(vc, expected)`, gaps nack once per
-//! expected sequence (duplicate suppression), stale duplicates re-ack
-//! (`VcAck`) so a timeout-driven replay always resynchronizes the
-//! sender, and intact in-sequence frames deliver and accrue *ack debt*:
-//! paid either piggybacked on a reverse-direction frame
-//! ([`RelRx::piggy_ack`], the link header's ack envelope bit) or as an
-//! explicit cumulative-ack control every [`ACK_INTERVAL`] frames.
+//! Two retransmission disciplines share the sender/receiver pair, keyed
+//! by [`RelMode`]:
+//!
+//! * **Go-back-N** (`RelMode::GoBackN`): the receiver accepts each VC
+//!   strictly in sequence and drops everything after a hole; a nack (or
+//!   the retransmit timeout) rewinds the sender to the hole and replays
+//!   the whole tail — simple, buffer-free, and wasteful exactly when
+//!   loss is frequent.
+//! * **Selective repeat** (`RelMode::SelectiveRepeat`): the receiver
+//!   buffers out-of-order frames (bounded by the replay window), sacks
+//!   each buffered frame (`Control::VcSack`) so the sender will not
+//!   replay it, and nacks each missing sequence exactly once; delivery
+//!   to the consumer stays exactly-once and in per-VC order — buffered
+//!   frames release only when the hole fills. Replay bandwidth is one
+//!   frame per hole instead of the whole tail.
+//!
+//! In both modes: corrupted frames renew their nack (a corrupted
+//! retransmission must not be absorbed by duplicate suppression, or both
+//! ends deadlock), stale duplicates re-ack (`VcAck`) so a timeout-driven
+//! replay always resynchronizes the sender, and intact accepted frames
+//! accrue *ack debt*: paid either piggybacked on a reverse-direction
+//! frame ([`RelRx::piggy_ack`], the link header's ack envelope bit) or
+//! as an explicit cumulative-ack control every [`ACK_INTERVAL`] frames.
 //! Credits never travel here: a retransmission re-sends a frame whose
 //! credit is still held (the receiver never freed the slot), so replay
 //! can neither double-consume nor leak a credit — property-tested in
-//! `rust/tests/props.rs` (`rel_replay_holds_credits_without_leak`),
-//! with the machine-level overload bound in `rust/tests/rel_faults.rs`.
+//! `rust/tests/props.rs` (`rel_replay_holds_credits_without_leak`, both
+//! modes), with the machine-level overload bound in
+//! `rust/tests/rel_faults.rs`.
+//!
+//! The sender also feeds the adaptive retransmit timer ([`super::rto`]):
+//! every ack of a never-retransmitted frame (Karn's rule) contributes a
+//! launch→ack RTT sample to that VC's [`RttEstimator`].
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::proto::messages::Message;
+use crate::sim::time::{Duration, Time};
 
 use super::super::link::{Control, Frame, Seq};
-use super::super::transaction::{RxResult, ACK_INTERVAL};
+use super::super::transaction::ACK_INTERVAL;
 use super::super::vc::{VcId, NUM_VCS};
+use super::rto::RttEstimator;
+use super::RelMode;
+
+/// One sent-but-unacked frame parked in a VC's replay buffer.
+struct Slot {
+    /// Pristine copy: intact, no piggyback.
+    frame: Frame,
+    /// First-launch time (RTT sampling).
+    launched_at: Time,
+    /// Ever retransmitted? Karn's rule: acks of such frames are
+    /// ambiguous and never contribute RTT samples.
+    retransmitted: bool,
+    /// Selectively acked (SR): skip on nack rewind and timeout replay;
+    /// removed when the cumulative ack sweeps past.
+    sacked: bool,
+    /// Sitting in the resend FIFO already (dedup).
+    queued: bool,
+}
 
 /// Sender half: per-VC sequence numbering + replay buffers, shared
-/// retransmission FIFO.
+/// retransmission FIFO, per-VC RTT estimators.
 pub struct RelTx {
+    mode: RelMode,
     next_seq: [Seq; NUM_VCS],
-    /// Sent-but-unacked frames per VC, oldest first (pristine copies:
-    /// intact, no piggyback).
-    replay: [VecDeque<Frame>; NUM_VCS],
-    /// Pending retransmissions (rewound from the replay buffers).
-    resend: VecDeque<Frame>,
+    /// Sent-but-unacked slots per VC, seq-ascending.
+    replay: [VecDeque<Slot>; NUM_VCS],
+    /// Pending retransmissions by reference; entries whose slot was
+    /// acked in the meantime are skipped lazily.
+    resend: VecDeque<(VcId, Seq)>,
+    /// Slots with `queued == true` (= live, replayable resend entries).
+    /// [`RelTx::has_resend`] sits on the per-event pump path, so it must
+    /// be O(1); this counter tracks every queued-flag transition and
+    /// every trim of a still-queued slot.
+    queued_live: usize,
+    /// Per-VC RTT estimators (adaptive RTO).
+    rtt: [RttEstimator; NUM_VCS],
     // stats
     pub sent: u64,
+    pub sent_bytes: u64,
     pub retransmitted: u64,
-    /// Frames cumulatively acked (progress signal for the timeout).
+    /// Wire bytes burned on retransmissions (the replay-bandwidth
+    /// figure's numerator).
+    pub retransmitted_bytes: u64,
+    /// Frames acked (cumulative trims + selective acks) — the progress
+    /// signal for the retransmit timeout.
     pub acked: u64,
-    /// Timeout-driven full rewinds.
+    /// Selective acks applied (SR).
+    pub sacked: u64,
+    /// Timeout-driven rewinds.
     pub timeouts: u64,
+    /// RTT samples fed to the estimators (Karn-filtered).
+    pub rtt_samples: u64,
     /// High-water mark of frames parked across all replay buffers.
     pub peak_replay: usize,
 }
 
 impl Default for RelTx {
     fn default() -> Self {
-        Self::new()
+        Self::new(RelMode::GoBackN)
     }
 }
 
 impl RelTx {
-    pub fn new() -> RelTx {
+    pub fn new(mode: RelMode) -> RelTx {
         RelTx {
+            mode,
             next_seq: [0; NUM_VCS],
-            replay: Default::default(),
+            replay: std::array::from_fn(|_| VecDeque::new()),
             resend: VecDeque::new(),
+            queued_live: 0,
+            rtt: [RttEstimator::new(); NUM_VCS],
             sent: 0,
+            sent_bytes: 0,
             retransmitted: 0,
+            retransmitted_bytes: 0,
             acked: 0,
+            sacked: 0,
             timeouts: 0,
+            rtt_samples: 0,
             peak_replay: 0,
         }
     }
 
-    /// Frame a fresh message on `vc`, parking a pristine copy in the
-    /// VC's replay buffer until it is cumulatively acked.
-    pub fn frame(&mut self, vc: VcId, msg: Message) -> Frame {
+    pub fn mode(&self) -> RelMode {
+        self.mode
+    }
+
+    /// Frame a fresh message on `vc` at `now`, parking a pristine copy
+    /// in the VC's replay buffer until it is cumulatively acked.
+    pub fn frame(&mut self, now: Time, vc: VcId, msg: Message) -> Frame {
         let i = vc.0 as usize;
         let f = Frame::new_on(self.next_seq[i], vc, msg);
         self.next_seq[i] += 1;
-        self.replay[i].push_back(f.clone());
+        self.sent_bytes += f.own_wire_bytes();
+        self.replay[i].push_back(Slot {
+            frame: f.clone(),
+            launched_at: now,
+            retransmitted: false,
+            sacked: false,
+            queued: false,
+        });
         self.peak_replay = self.peak_replay.max(self.unacked_total());
         self.sent += 1;
         f
     }
 
+    fn slot_mut(&mut self, vc: VcId, seq: Seq) -> Option<&mut Slot> {
+        let q = &mut self.replay[vc.0 as usize];
+        let at = q.binary_search_by_key(&seq, |s| s.frame.seq).ok()?;
+        q.get_mut(at)
+    }
+
     /// Pull the next queued retransmission, if any (retransmissions have
     /// launch priority and never consume credits — the original
-    /// transmission's credit is still held).
+    /// transmission's credit is still held). Entries acked since they
+    /// were queued are skipped.
     pub fn next_resend(&mut self) -> Option<Frame> {
-        let f = self.resend.pop_front()?;
-        self.retransmitted += 1;
-        self.sent += 1;
-        Some(f)
-    }
-
-    pub fn has_resend(&self) -> bool {
-        !self.resend.is_empty()
-    }
-
-    /// Apply a VC-scoped ack/nack control frame.
-    pub fn on_control(&mut self, c: Control) {
-        match c {
-            Control::VcAck(vc, upto) => self.trim(vc, upto + 1),
-            Control::VcNack(vc, from) => {
-                self.trim(vc, from);
-                // rewind this VC only: requeue pristine copies of
-                // everything still unacked, replacing any stale resends
-                self.resend.retain(|f| f.vc != vc);
-                for f in self.replay[vc.0 as usize].iter() {
-                    self.resend.push_back(f.clone());
-                }
+        while let Some((vc, seq)) = self.resend.pop_front() {
+            // a stale entry — slot trimmed, or un-queued by a sack —
+            // was already removed from `queued_live` at that transition
+            let Some(slot) = self.slot_mut(vc, seq) else { continue };
+            if !slot.queued {
+                continue;
             }
+            slot.queued = false;
+            slot.retransmitted = true;
+            let f = slot.frame.clone();
+            self.queued_live -= 1;
+            self.retransmitted += 1;
+            self.retransmitted_bytes += f.own_wire_bytes();
+            self.sent += 1;
+            self.sent_bytes += f.own_wire_bytes();
+            return Some(f);
+        }
+        None
+    }
+
+    /// Anything replayable queued? O(1) — called from every host pump.
+    pub fn has_resend(&self) -> bool {
+        self.queued_live > 0
+    }
+
+    /// Apply a VC-scoped ack/sack/nack control frame at `now` (the
+    /// timestamp feeds RTT sampling).
+    pub fn on_control(&mut self, now: Time, c: Control) {
+        match c {
+            Control::VcAck(vc, upto) => self.trim(now, vc, upto + 1),
+            Control::VcSack(vc, seq) => self.on_sack(now, vc, seq),
+            Control::VcNack(vc, from) => match self.mode {
+                RelMode::GoBackN => {
+                    self.trim(now, vc, from);
+                    // rewind this VC only: requeue everything still
+                    // unacked, replacing any stale resends (already-
+                    // queued slots keep their live count — exactly one
+                    // entry per queued slot survives the swap)
+                    self.resend.retain(|&(v, _)| v != vc);
+                    for s in self.replay[vc.0 as usize].iter_mut() {
+                        if !s.queued {
+                            s.queued = true;
+                            self.queued_live += 1;
+                        }
+                        self.resend.push_back((vc, s.frame.seq));
+                    }
+                }
+                RelMode::SelectiveRepeat => {
+                    // retransmit exactly `from` — a nack names one hole,
+                    // and says nothing about delivery below it
+                    let queue = match self.slot_mut(vc, from) {
+                        Some(s) if !s.sacked && !s.queued => {
+                            s.queued = true;
+                            true
+                        }
+                        _ => false,
+                    };
+                    if queue {
+                        self.queued_live += 1;
+                        self.resend.push_back((vc, from));
+                    }
+                }
+            },
             // link-global controls belong to the transaction layer
             Control::Ack(_) | Control::Nack(_) => {
                 debug_assert!(false, "global control routed to the rel layer: {c:?}");
@@ -117,25 +239,85 @@ impl RelTx {
         }
     }
 
-    /// Cumulatively ack `vc` below `below`.
-    fn trim(&mut self, vc: VcId, below: Seq) {
-        let q = &mut self.replay[vc.0 as usize];
-        while q.front().is_some_and(|f| f.seq < below) {
-            q.pop_front();
-            self.acked += 1;
+    /// Selective ack: exactly `seq` arrived and is buffered at the
+    /// receiver — never replay it again.
+    fn on_sack(&mut self, now: Time, vc: VcId, seq: Seq) {
+        debug_assert!(
+            self.mode == RelMode::SelectiveRepeat,
+            "sack reached a go-back-N sender"
+        );
+        let i = vc.0 as usize;
+        let Some(s) = self.slot_mut(vc, seq) else { return };
+        if s.sacked {
+            return;
+        }
+        s.sacked = true;
+        // a queued resend of this slot is now pointless: un-queue it
+        // (its FIFO entry goes stale and is skipped on pop)
+        let was_queued = s.queued;
+        s.queued = false;
+        let sample = (!s.retransmitted && now >= s.launched_at).then(|| now.since(s.launched_at));
+        if was_queued {
+            self.queued_live -= 1;
+        }
+        self.sacked += 1;
+        self.acked += 1;
+        if let Some(rtt) = sample {
+            self.rtt[i].observe(rtt);
+            self.rtt_samples += 1;
         }
     }
 
-    /// Timeout expiry with no ack progress: rewind every VC with
-    /// unacked frames (go-back-N from each VC's oldest unacked).
-    /// Returns true when anything was queued for retransmission.
-    pub fn force_replay_all(&mut self) -> bool {
-        self.resend.clear();
-        for q in &self.replay {
-            for f in q {
-                self.resend.push_back(f.clone());
+    /// Cumulatively ack `vc` below `below`.
+    fn trim(&mut self, now: Time, vc: VcId, below: Seq) {
+        let i = vc.0 as usize;
+        let mut sample: Option<Duration> = None;
+        let mut acked = 0u64;
+        let mut unqueued = 0usize;
+        let q = &mut self.replay[i];
+        while q.front().is_some_and(|s| s.frame.seq < below) {
+            let s = q.pop_front().expect("front checked");
+            if !s.sacked {
+                // sacked slots already counted toward ack progress
+                acked += 1;
+            }
+            if s.queued {
+                // its resend entry just went stale
+                unqueued += 1;
+            }
+            // Karn: the newest never-retransmitted frame in the trim
+            // provides the freshest unambiguous RTT sample
+            if !s.retransmitted && now >= s.launched_at {
+                sample = Some(now.since(s.launched_at));
             }
         }
+        self.acked += acked;
+        self.queued_live -= unqueued;
+        if let Some(rtt) = sample {
+            self.rtt[i].observe(rtt);
+            self.rtt_samples += 1;
+        }
+    }
+
+    /// Timeout expiry with no ack progress: queue every replayable
+    /// unacked frame (go-back-N: all of them; selective repeat: the
+    /// un-sacked ones only). Returns true when anything was queued.
+    pub fn force_replay_all(&mut self) -> bool {
+        self.resend.clear();
+        let sr = self.mode == RelMode::SelectiveRepeat;
+        let mut live = 0usize;
+        for (i, q) in self.replay.iter_mut().enumerate() {
+            for s in q.iter_mut() {
+                if sr && s.sacked {
+                    s.queued = false;
+                    continue;
+                }
+                s.queued = true;
+                live += 1;
+                self.resend.push_back((VcId(i as u8), s.frame.seq));
+            }
+        }
+        self.queued_live = live;
         let any = !self.resend.is_empty();
         if any {
             self.timeouts += 1;
@@ -150,15 +332,38 @@ impl RelTx {
     pub fn unacked_total(&self) -> usize {
         self.replay.iter().map(|q| q.len()).sum()
     }
+
+    /// Widest per-VC RTO estimate `srtt + 4·rttvar` (unclamped), if any
+    /// VC has absorbed a sample. The per-direction retransmit timer
+    /// takes the maximum so the slowest channel sets the pace — a
+    /// premature rewind costs replay bandwidth on every VC.
+    pub fn measured_rto(&self) -> Option<Duration> {
+        self.rtt.iter().filter_map(|e| e.rto()).max()
+    }
+
+    /// Widest per-VC smoothed RTT (reporting).
+    pub fn srtt(&self) -> Option<Duration> {
+        self.rtt.iter().filter_map(|e| e.srtt()).max()
+    }
 }
 
-/// Receiver half: per-VC in-order acceptance + ack/nack generation with
-/// piggyback-able ack debt.
+/// Receiver half: per-VC in-order acceptance (go-back-N) or windowed
+/// out-of-order buffering (selective repeat), plus ack/nack/sack
+/// generation with piggyback-able cumulative-ack debt.
 pub struct RelRx {
+    mode: RelMode,
+    /// Out-of-order buffering window (SR), in frames past `expected`.
+    /// Sized to the replay window: each buffered frame still holds its
+    /// link credit, so the sender can never legally exceed it.
+    window: u64,
     expected: [Seq; NUM_VCS],
-    /// A nack for this seq was already issued on the VC; suppress
+    /// GBN: a nack for this seq was already issued on the VC; suppress
     /// duplicates until progress resumes.
     nacked: [Option<Seq>; NUM_VCS],
+    /// SR: per-VC set of outstanding nacked holes (dedup per seq).
+    nacked_sr: [BTreeSet<Seq>; NUM_VCS],
+    /// SR: per-VC out-of-order receive buffer.
+    ooo: [BTreeMap<Seq, Frame>; NUM_VCS],
     since_ack: [u64; NUM_VCS],
     /// Cumulative-ack debt per VC, available for piggybacking.
     debt: [bool; NUM_VCS],
@@ -166,34 +371,60 @@ pub struct RelRx {
     rr: usize,
     // stats
     pub accepted: u64,
+    /// Wire bytes of frames delivered to the consumer (the
+    /// replay-bandwidth figure's denominator).
+    pub accepted_bytes: u64,
     pub dropped_corrupt: u64,
     pub dropped_out_of_order: u64,
-    /// Stale duplicates re-acked (timeout resync).
+    /// Frames parked out of order awaiting a hole fill (SR).
+    pub buffered_out_of_order: u64,
+    /// High-water mark of the out-of-order buffer (SR, all VCs).
+    pub peak_buffered: usize,
+    /// Stale duplicates re-acked / re-sacked (timeout resync).
     pub reacked: u64,
 }
 
 impl Default for RelRx {
     fn default() -> Self {
-        Self::new()
+        Self::new(RelMode::GoBackN, 64)
     }
 }
 
 impl RelRx {
-    pub fn new() -> RelRx {
+    pub fn new(mode: RelMode, window: u64) -> RelRx {
         RelRx {
+            mode,
+            window: window.max(1),
             expected: [0; NUM_VCS],
             nacked: [None; NUM_VCS],
+            nacked_sr: std::array::from_fn(|_| BTreeSet::new()),
+            ooo: std::array::from_fn(|_| BTreeMap::new()),
             since_ack: [0; NUM_VCS],
             debt: [false; NUM_VCS],
             rr: 0,
             accepted: 0,
+            accepted_bytes: 0,
             dropped_corrupt: 0,
             dropped_out_of_order: 0,
+            buffered_out_of_order: 0,
+            peak_buffered: 0,
             reacked: 0,
         }
     }
 
-    pub fn on_frame(&mut self, f: &Frame) -> RxResult {
+    /// Process one arriving frame. Frames delivered to the consumer —
+    /// possibly several: a hole-filling retransmission releases its
+    /// buffered successors — are appended to `delivered`, exactly once
+    /// and in per-VC sequence order; controls for the reverse path go
+    /// to `ctls`.
+    pub fn on_frame(&mut self, f: Frame, delivered: &mut Vec<Frame>, ctls: &mut Vec<Control>) {
+        match self.mode {
+            RelMode::GoBackN => self.on_frame_gbn(f, delivered, ctls),
+            RelMode::SelectiveRepeat => self.on_frame_sr(f, delivered, ctls),
+        }
+    }
+
+    fn on_frame_gbn(&mut self, f: Frame, delivered: &mut Vec<Frame>, ctls: &mut Vec<Control>) {
         let vc = f.vc;
         let i = vc.0 as usize;
         if !f.intact {
@@ -202,13 +433,17 @@ impl RelRx {
             // retransmission must not be absorbed by duplicate
             // suppression, or both ends deadlock
             self.nacked[i] = Some(self.expected[i]);
-            return RxResult::Drop(Some(Control::VcNack(vc, self.expected[i])));
+            ctls.push(Control::VcNack(vc, self.expected[i]));
+            return;
         }
         if f.seq != self.expected[i] {
             self.dropped_out_of_order += 1;
             if f.seq > self.expected[i] {
                 // gap: an earlier frame was lost/corrupted in flight
-                return RxResult::Drop(self.nack(vc));
+                if let Some(c) = self.nack_gbn(vc) {
+                    ctls.push(c);
+                }
+                return;
             }
             // stale duplicate (already delivered): re-ack so a
             // timeout-driven replay of acked-but-untrimmed frames always
@@ -216,24 +451,124 @@ impl RelRx {
             self.reacked += 1;
             self.since_ack[i] = 0;
             self.debt[i] = false;
-            return RxResult::Drop(Some(Control::VcAck(vc, self.expected[i] - 1)));
+            ctls.push(Control::VcAck(vc, self.expected[i] - 1));
+            return;
         }
         self.expected[i] += 1;
         self.nacked[i] = None;
+        self.accept(&f);
+        delivered.push(f);
+        if let Some(c) = self.ack_cadence(vc, 1) {
+            ctls.push(c);
+        }
+    }
+
+    fn on_frame_sr(&mut self, f: Frame, delivered: &mut Vec<Frame>, ctls: &mut Vec<Control>) {
+        let vc = f.vc;
+        let i = vc.0 as usize;
+        if !f.intact {
+            self.dropped_corrupt += 1;
+            if f.seq < self.expected[i] {
+                // stale duplicate arriving corrupted: re-ack resync
+                self.reacked += 1;
+                self.since_ack[i] = 0;
+                self.debt[i] = false;
+                ctls.push(Control::VcAck(vc, self.expected[i] - 1));
+            } else if self.ooo[i].contains_key(&f.seq) {
+                // an intact copy is already buffered: the sack was lost
+                // on the sender side of the story — repeat it
+                self.reacked += 1;
+                ctls.push(Control::VcSack(vc, f.seq));
+            } else {
+                // renewed per-seq nack (never suppressed: a corrupted
+                // retransmission must re-request itself)
+                self.nacked_sr[i].insert(f.seq);
+                ctls.push(Control::VcNack(vc, f.seq));
+            }
+            return;
+        }
+        if f.seq < self.expected[i] {
+            // stale duplicate (already delivered): re-ack resync
+            self.dropped_out_of_order += 1;
+            self.reacked += 1;
+            self.since_ack[i] = 0;
+            self.debt[i] = false;
+            ctls.push(Control::VcAck(vc, self.expected[i] - 1));
+            return;
+        }
+        if f.seq == self.expected[i] {
+            self.expected[i] += 1;
+            self.accept(&f);
+            delivered.push(f);
+            // the hole filled: release every consecutive buffered
+            // successor, still exactly-once and in sequence
+            let mut n = 1u64;
+            while let Some(g) = self.ooo[i].remove(&self.expected[i]) {
+                self.expected[i] += 1;
+                self.accept(&g);
+                delivered.push(g);
+                n += 1;
+            }
+            // nacks for holes now behind us are satisfied
+            let live = self.nacked_sr[i].split_off(&self.expected[i]);
+            self.nacked_sr[i] = live;
+            if let Some(c) = self.ack_cadence(vc, n) {
+                ctls.push(c);
+            }
+            return;
+        }
+        // out of order, ahead of the hole
+        if f.seq >= self.expected[i] + self.window {
+            // beyond the buffering window (cannot happen under credit
+            // flow control; guard against a misconfigured peer)
+            self.dropped_out_of_order += 1;
+            return;
+        }
+        if self.ooo[i].contains_key(&f.seq) {
+            // duplicate of a buffered frame: the sender missed the sack
+            self.reacked += 1;
+            ctls.push(Control::VcSack(vc, f.seq));
+            return;
+        }
+        let seq = f.seq;
+        self.nacked_sr[i].remove(&seq);
+        self.ooo[i].insert(seq, f);
+        self.buffered_out_of_order += 1;
+        let held: usize = self.ooo.iter().map(|m| m.len()).sum();
+        self.peak_buffered = self.peak_buffered.max(held);
+        ctls.push(Control::VcSack(vc, seq));
+        // nack every unrequested hole below the newcomer, once each
+        let newest = self.ooo[i].keys().next_back().copied().expect("just inserted");
+        for s in self.expected[i]..newest {
+            if !self.ooo[i].contains_key(&s) && self.nacked_sr[i].insert(s) {
+                ctls.push(Control::VcNack(vc, s));
+            }
+        }
+    }
+
+    fn accept(&mut self, f: &Frame) {
         self.accepted += 1;
-        self.since_ack[i] += 1;
+        // exclude any piggybacked ack word: sender-side byte counters
+        // are taken from the pristine copy, and the replay-overhead
+        // ratio must compare like with like
+        self.accepted_bytes += f.own_wire_bytes();
+    }
+
+    /// Account `n` deliveries on `vc` against the explicit-ack cadence.
+    fn ack_cadence(&mut self, vc: VcId, n: u64) -> Option<Control> {
+        let i = vc.0 as usize;
+        self.since_ack[i] += n;
         self.debt[i] = true;
-        let ctl = if self.since_ack[i] >= ACK_INTERVAL {
+        if self.since_ack[i] >= ACK_INTERVAL {
             self.since_ack[i] = 0;
             self.debt[i] = false;
             Some(Control::VcAck(vc, self.expected[i] - 1))
         } else {
             None
-        };
-        RxResult::Deliver(ctl)
+        }
     }
 
-    fn nack(&mut self, vc: VcId) -> Option<Control> {
+    fn nack_gbn(&mut self, vc: VcId) -> Option<Control> {
         let i = vc.0 as usize;
         if self.nacked[i] == Some(self.expected[i]) {
             None // this replay was already requested
@@ -270,6 +605,11 @@ impl RelRx {
     pub fn expected_seq(&self, vc: VcId) -> Seq {
         self.expected[vc.0 as usize]
     }
+
+    /// Frames currently parked out of order (SR).
+    pub fn buffered(&self) -> usize {
+        self.ooo.iter().map(|m| m.len()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -282,12 +622,22 @@ mod tests {
         Message::coh_req(ReqId(i as u32), Node::Remote, CohOp::ReadShared, LineAddr(addr))
     }
 
+    const T0: Time = Time(0);
+
+    /// Feed one frame, returning (delivered, controls).
+    fn rx1(rx: &mut RelRx, f: Frame) -> (Vec<Frame>, Vec<Control>) {
+        let mut d = Vec::new();
+        let mut c = Vec::new();
+        rx.on_frame(f, &mut d, &mut c);
+        (d, c)
+    }
+
     #[test]
     fn per_vc_sequences_are_independent() {
-        let mut tx = RelTx::new();
-        let f0 = tx.frame(VcId(0), req(0, 0));
-        let f1 = tx.frame(VcId(1), req(1, 1));
-        let f2 = tx.frame(VcId(0), req(2, 2));
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let f0 = tx.frame(T0, VcId(0), req(0, 0));
+        let f1 = tx.frame(T0, VcId(1), req(1, 1));
+        let f2 = tx.frame(T0, VcId(0), req(2, 2));
         assert_eq!((f0.seq, f1.seq, f2.seq), (0, 0, 1), "each VC counts from 0");
         assert_eq!(tx.unacked(VcId(0)), 2);
         assert_eq!(tx.unacked(VcId(1)), 1);
@@ -295,12 +645,12 @@ mod tests {
 
     #[test]
     fn nack_rewinds_only_its_vc() {
-        let mut tx = RelTx::new();
+        let mut tx = RelTx::new(RelMode::GoBackN);
         for i in 0..4u64 {
-            tx.frame(VcId(0), req(i, 2 * i));
-            tx.frame(VcId(1), req(10 + i, 2 * i + 1));
+            tx.frame(T0, VcId(0), req(i, 2 * i));
+            tx.frame(T0, VcId(1), req(10 + i, 2 * i + 1));
         }
-        tx.on_control(Control::VcNack(VcId(0), 1));
+        tx.on_control(T0, Control::VcNack(VcId(0), 1));
         // seq 0 on VC0 is implicitly acked; 1..3 rewound; VC1 untouched
         assert_eq!(tx.unacked(VcId(0)), 3);
         assert_eq!(tx.unacked(VcId(1)), 4);
@@ -310,16 +660,17 @@ mod tests {
         }
         assert_eq!(resent, vec![(VcId(0), 1), (VcId(0), 2), (VcId(0), 3)]);
         assert_eq!(tx.retransmitted, 3);
+        assert!(tx.retransmitted_bytes > 0);
         assert_eq!(tx.acked, 1);
     }
 
     #[test]
     fn cumulative_ack_trims_and_counts() {
-        let mut tx = RelTx::new();
+        let mut tx = RelTx::new(RelMode::GoBackN);
         for i in 0..6u64 {
-            tx.frame(VcId(6), req(i, 2 * i));
+            tx.frame(T0, VcId(6), req(i, 2 * i));
         }
-        tx.on_control(Control::VcAck(VcId(6), 3));
+        tx.on_control(T0, Control::VcAck(VcId(6), 3));
         assert_eq!(tx.unacked(VcId(6)), 2);
         assert_eq!(tx.acked, 4);
         assert_eq!(tx.peak_replay, 6);
@@ -327,46 +678,45 @@ mod tests {
 
     #[test]
     fn receiver_is_in_order_per_vc_with_gap_nacks() {
-        let mut tx = RelTx::new();
-        let mut rx = RelRx::new();
-        let a = tx.frame(VcId(0), req(0, 0));
-        let b = tx.frame(VcId(0), req(1, 2));
-        let c = tx.frame(VcId(1), req(2, 1));
-        assert!(matches!(rx.on_frame(&a), RxResult::Deliver(None)));
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let mut rx = RelRx::new(RelMode::GoBackN, 64);
+        let a = tx.frame(T0, VcId(0), req(0, 0));
+        let b = tx.frame(T0, VcId(0), req(1, 2));
+        let c = tx.frame(T0, VcId(1), req(2, 1));
+        assert_eq!(rx1(&mut rx, a).0.len(), 1);
         // b lost in flight; c (a different VC) is NOT disturbed
-        assert!(matches!(rx.on_frame(&c), RxResult::Deliver(None)));
+        assert_eq!(rx1(&mut rx, c).0.len(), 1);
         // next VC0 frame reveals the gap -> nack(1), once
-        let d = tx.frame(VcId(0), req(3, 4));
-        match rx.on_frame(&d) {
-            RxResult::Drop(Some(Control::VcNack(VcId(0), 1))) => {}
-            r => panic!("unexpected {r:?}"),
-        }
-        assert!(matches!(rx.on_frame(&d), RxResult::Drop(None)), "dup nack suppressed");
+        let d = tx.frame(T0, VcId(0), req(3, 4));
+        let (del, ctl) = rx1(&mut rx, d.clone());
+        assert!(del.is_empty());
+        assert_eq!(ctl, vec![Control::VcNack(VcId(0), 1)]);
+        let (del, ctl) = rx1(&mut rx, d);
+        assert!(del.is_empty() && ctl.is_empty(), "dup nack suppressed");
         // replay from 1 delivers b then d
-        tx.on_control(Control::VcNack(VcId(0), 1));
+        tx.on_control(T0, Control::VcNack(VcId(0), 1));
         let rb = tx.next_resend().unwrap();
         assert_eq!((rb.vc, rb.seq), (b.vc, b.seq));
-        assert!(matches!(rx.on_frame(&rb), RxResult::Deliver(_)));
+        assert_eq!(rx1(&mut rx, rb).0.len(), 1);
         let rd = tx.next_resend().unwrap();
-        assert!(matches!(rx.on_frame(&rd), RxResult::Deliver(_)));
+        assert_eq!(rx1(&mut rx, rd).0.len(), 1);
         assert_eq!(rx.accepted, 4);
     }
 
     #[test]
     fn stale_duplicate_reacks_for_timeout_resync() {
-        let mut tx = RelTx::new();
-        let mut rx = RelRx::new();
-        let a = tx.frame(VcId(4), req(0, 0));
-        assert!(matches!(rx.on_frame(&a), RxResult::Deliver(_)));
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let mut rx = RelRx::new(RelMode::GoBackN, 64);
+        let a = tx.frame(T0, VcId(4), req(0, 0));
+        assert_eq!(rx1(&mut rx, a).0.len(), 1);
         // ack lost conceptually; sender times out and replays
         assert!(tx.force_replay_all());
         assert_eq!(tx.timeouts, 1);
         let ra = tx.next_resend().unwrap();
-        match rx.on_frame(&ra) {
-            RxResult::Drop(Some(Control::VcAck(VcId(4), 0))) => {}
-            r => panic!("expected a re-ack, got {r:?}"),
-        }
-        tx.on_control(Control::VcAck(VcId(4), 0));
+        let (del, ctl) = rx1(&mut rx, ra);
+        assert!(del.is_empty());
+        assert_eq!(ctl, vec![Control::VcAck(VcId(4), 0)], "expected a re-ack");
+        tx.on_control(T0, Control::VcAck(VcId(4), 0));
         assert_eq!(tx.unacked_total(), 0, "resync must drain the replay buffer");
         assert!(!tx.force_replay_all(), "nothing left to replay");
         assert_eq!(tx.timeouts, 1, "an empty rewind is not a timeout");
@@ -374,30 +724,26 @@ mod tests {
 
     #[test]
     fn corruption_renews_the_nack() {
-        let mut tx = RelTx::new();
-        let mut rx = RelRx::new();
-        let mut a = tx.frame(VcId(8), req(0, 0));
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let mut rx = RelRx::new(RelMode::GoBackN, 64);
+        let mut a = tx.frame(T0, VcId(8), req(0, 0));
         a.intact = false;
-        assert!(matches!(
-            rx.on_frame(&a),
-            RxResult::Drop(Some(Control::VcNack(VcId(8), 0)))
-        ));
+        let (_, ctl) = rx1(&mut rx, a.clone());
+        assert_eq!(ctl, vec![Control::VcNack(VcId(8), 0)]);
         // the corrupted RETRANSMISSION must nack again (no suppression)
-        assert!(matches!(
-            rx.on_frame(&a),
-            RxResult::Drop(Some(Control::VcNack(VcId(8), 0)))
-        ));
+        let (_, ctl) = rx1(&mut rx, a);
+        assert_eq!(ctl, vec![Control::VcNack(VcId(8), 0)]);
         assert_eq!(rx.dropped_corrupt, 2);
     }
 
     #[test]
     fn explicit_acks_flow_every_interval_and_piggyback_clears_debt() {
-        let mut tx = RelTx::new();
-        let mut rx = RelRx::new();
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let mut rx = RelRx::new(RelMode::GoBackN, 64);
         let mut explicit = 0;
         for i in 0..(ACK_INTERVAL - 1) {
-            let f = tx.frame(VcId(0), req(i, 2 * i));
-            if let RxResult::Deliver(Some(_)) = rx.on_frame(&f) {
+            let f = tx.frame(T0, VcId(0), req(i, 2 * i));
+            if !rx1(&mut rx, f).1.is_empty() {
                 explicit += 1;
             }
         }
@@ -406,12 +752,13 @@ mod tests {
         let (vc, upto) = rx.piggy_ack().expect("ack debt pending");
         assert_eq!((vc, upto), (VcId(0), ACK_INTERVAL - 2));
         assert!(rx.piggy_ack().is_none(), "debt cleared");
-        tx.on_control(Control::VcAck(vc, upto));
+        tx.on_control(T0, Control::VcAck(vc, upto));
         assert_eq!(tx.unacked_total(), 0, "all acked");
         // after piggyback the explicit cadence restarts from zero
         for i in 0..ACK_INTERVAL {
-            let f = tx.frame(VcId(0), req(100 + i, 2 * i));
-            if let RxResult::Deliver(Some(Control::VcAck(..))) = rx.on_frame(&f) {
+            let f = tx.frame(T0, VcId(0), req(100 + i, 2 * i));
+            let (_, ctl) = rx1(&mut rx, f);
+            if ctl.iter().any(|c| matches!(c, Control::VcAck(..))) {
                 explicit += 1;
             }
         }
@@ -419,65 +766,252 @@ mod tests {
     }
 
     #[test]
-    fn random_per_vc_loss_delivers_everything_in_order() {
-        use crate::sim::rng::Rng;
-        let mut rng = Rng::new(77);
-        let mut tx = RelTx::new();
-        let mut rx = RelRx::new();
-        let total = 3_000u64;
-        let mut next = 0u64;
-        let mut delivered: Vec<Vec<u64>> = vec![Vec::new(); NUM_VCS];
-        let mut idle = 0;
-        while delivered.iter().map(|v| v.len() as u64).sum::<u64>() < total {
-            let f = if let Some(f) = tx.next_resend() {
-                f
-            } else if next < total {
-                let addr = rng.below(1 << 20);
-                let m = req(next, addr);
-                next += 1;
-                let vc = super::super::super::vc::vc_for(&m);
-                tx.frame(vc, m)
-            } else {
-                // tail loss: model the timeout
-                idle += 1;
-                assert!(idle < 50, "seqrep deadlocked");
-                tx.force_replay_all();
-                continue;
-            };
-            idle = 0;
-            if rng.chance(0.10) {
-                continue; // dropped on the wire
-            }
-            let mut f = f;
-            if rng.chance(0.05) {
-                f.intact = false;
-            }
-            match rx.on_frame(&f) {
-                RxResult::Deliver(ctl) => {
-                    delivered[f.vc.0 as usize].push(f.msg.addr.0);
-                    if let Some(c) = ctl {
-                        tx.on_control(c);
-                    }
-                }
-                RxResult::Drop(ctl) => {
-                    if let Some(c) = ctl {
-                        tx.on_control(c);
-                    }
-                }
-            }
-        }
-        // drain remaining acks so the replay buffers empty
-        for vc in 0..NUM_VCS {
-            if rx.expected_seq(VcId(vc as u8)) > 0 {
-                tx.on_control(Control::VcAck(VcId(vc as u8), rx.expected_seq(VcId(vc as u8)) - 1));
-            }
-        }
+    fn sr_buffers_out_of_order_and_releases_in_sequence() {
+        let mut tx = RelTx::new(RelMode::SelectiveRepeat);
+        let mut rx = RelRx::new(RelMode::SelectiveRepeat, 64);
+        let a = tx.frame(T0, VcId(0), req(0, 0));
+        let _b = tx.frame(T0, VcId(0), req(1, 2));
+        let c = tx.frame(T0, VcId(0), req(2, 4));
+        assert_eq!(rx1(&mut rx, a).0.len(), 1);
+        // b lost; c arrives out of order: buffered + sacked + nack(1)
+        let (del, ctl) = rx1(&mut rx, c);
+        assert!(del.is_empty(), "out-of-order frames are held, not delivered");
+        assert_eq!(
+            ctl,
+            vec![Control::VcSack(VcId(0), 2), Control::VcNack(VcId(0), 1)]
+        );
+        assert_eq!(rx.buffered(), 1);
+        // sender learns: sack parks seq 2, nack queues exactly seq 1
+        tx.on_control(T0, Control::VcSack(VcId(0), 2));
+        tx.on_control(T0, Control::VcNack(VcId(0), 1));
+        let rb = tx.next_resend().unwrap();
+        assert_eq!((rb.vc, rb.seq), (VcId(0), 1));
+        assert!(tx.next_resend().is_none(), "only the hole is replayed");
+        assert_eq!(tx.retransmitted, 1);
+        // the hole fills: b AND the buffered c release, in order
+        let (del, _) = rx1(&mut rx, rb);
+        assert_eq!(del.iter().map(|f| f.seq).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(rx.buffered(), 0);
+        assert_eq!(rx.accepted, 3);
+        // cumulative ack trims everything, sacked slot included
+        tx.on_control(T0, Control::VcAck(VcId(0), 2));
         assert_eq!(tx.unacked_total(), 0);
-        assert!(tx.retransmitted > 0, "the test should have exercised replay");
-        // per-VC delivery must be exactly-once, in per-VC send order —
-        // which for this traffic is ascending ReqId order per VC; verify
-        // via the expected counts
-        let n: u64 = delivered.iter().map(|v| v.len() as u64).sum();
-        assert_eq!(n, total);
+        assert_eq!(tx.acked, 3, "sacked frames count ack progress once");
+    }
+
+    #[test]
+    fn sr_timeout_replays_only_unsacked_frames() {
+        let mut tx = RelTx::new(RelMode::SelectiveRepeat);
+        for i in 0..4u64 {
+            tx.frame(T0, VcId(3), req(i, 2 * i));
+        }
+        tx.on_control(T0, Control::VcSack(VcId(3), 1));
+        tx.on_control(T0, Control::VcSack(VcId(3), 3));
+        assert!(tx.force_replay_all());
+        let mut resent = Vec::new();
+        while let Some(f) = tx.next_resend() {
+            resent.push(f.seq);
+        }
+        assert_eq!(resent, vec![0, 2], "sacked frames must not replay");
+        assert_eq!(tx.timeouts, 1);
+    }
+
+    #[test]
+    fn sr_nack_dedups_but_corruption_renews() {
+        let mut tx = RelTx::new(RelMode::SelectiveRepeat);
+        let mut rx = RelRx::new(RelMode::SelectiveRepeat, 64);
+        let _a = tx.frame(T0, VcId(0), req(0, 0));
+        let b = tx.frame(T0, VcId(0), req(1, 2));
+        let c = tx.frame(T0, VcId(0), req(2, 4));
+        // a lost; b arrives: sack(1) + nack(0)
+        let (_, ctl) = rx1(&mut rx, b);
+        assert_eq!(
+            ctl,
+            vec![Control::VcSack(VcId(0), 1), Control::VcNack(VcId(0), 0)]
+        );
+        // c arrives: sack(2) only — the hole at 0 was already nacked
+        let (_, ctl) = rx1(&mut rx, c);
+        assert_eq!(ctl, vec![Control::VcSack(VcId(0), 2)]);
+        // a corrupted replay of 0 renews the nack (never suppressed)
+        let mut ra = Frame::new_on(0, VcId(0), req(0, 0));
+        ra.intact = false;
+        let (_, ctl) = rx1(&mut rx, ra);
+        assert_eq!(ctl, vec![Control::VcNack(VcId(0), 0)]);
+    }
+
+    #[test]
+    fn sr_duplicate_of_buffered_frame_resacks() {
+        let mut rx = RelRx::new(RelMode::SelectiveRepeat, 64);
+        let f = Frame::new_on(2, VcId(0), req(2, 4));
+        let (_, ctl) = rx1(&mut rx, f.clone());
+        assert!(ctl.contains(&Control::VcSack(VcId(0), 2)));
+        let (del, ctl) = rx1(&mut rx, f);
+        assert!(del.is_empty());
+        assert_eq!(ctl, vec![Control::VcSack(VcId(0), 2)], "dup re-sacks");
+        assert_eq!(rx.buffered(), 1, "no double buffering");
+    }
+
+    #[test]
+    fn sr_stale_duplicate_reacks_for_resync() {
+        let mut tx = RelTx::new(RelMode::SelectiveRepeat);
+        let mut rx = RelRx::new(RelMode::SelectiveRepeat, 64);
+        let a = tx.frame(T0, VcId(4), req(0, 0));
+        assert_eq!(rx1(&mut rx, a).0.len(), 1);
+        assert!(tx.force_replay_all());
+        let ra = tx.next_resend().unwrap();
+        let (del, ctl) = rx1(&mut rx, ra);
+        assert!(del.is_empty());
+        assert_eq!(ctl, vec![Control::VcAck(VcId(4), 0)]);
+        tx.on_control(T0, Control::VcAck(VcId(4), 0));
+        assert_eq!(tx.unacked_total(), 0);
+    }
+
+    #[test]
+    fn sr_window_bounds_the_receive_buffer() {
+        let mut rx = RelRx::new(RelMode::SelectiveRepeat, 4);
+        // seq 0 missing; 1..=3 buffer (within expected+4), 7 is out
+        for s in 1..=3u64 {
+            let (_, ctl) = rx1(&mut rx, Frame::new_on(s, VcId(0), req(s, 2 * s)));
+            assert!(ctl.contains(&Control::VcSack(VcId(0), s)));
+        }
+        let (del, ctl) = rx1(&mut rx, Frame::new_on(7, VcId(0), req(7, 14)));
+        assert!(del.is_empty() && ctl.is_empty(), "out-of-window frame dropped");
+        assert_eq!(rx.buffered(), 3);
+        assert_eq!(rx.dropped_out_of_order, 1);
+    }
+
+    #[test]
+    fn rtt_samples_feed_the_estimator_and_karn_excludes_replays() {
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        tx.frame(Time(0), VcId(0), req(0, 0));
+        tx.on_control(Time(500_000), Control::VcAck(VcId(0), 0));
+        assert_eq!(tx.rtt_samples, 1);
+        assert_eq!(tx.srtt().unwrap(), Duration::from_ns(500));
+        // a retransmitted frame must not sample (Karn)
+        tx.frame(Time(1_000_000), VcId(0), req(1, 2));
+        tx.on_control(Time(1_000_000), Control::VcNack(VcId(0), 1));
+        let _ = tx.next_resend().unwrap();
+        tx.on_control(Time(9_000_000), Control::VcAck(VcId(0), 1));
+        assert_eq!(tx.rtt_samples, 1, "ambiguous sample excluded");
+        assert_eq!(tx.srtt().unwrap(), Duration::from_ns(500));
+        assert!(tx.measured_rto().is_some());
+    }
+
+    #[test]
+    fn random_per_vc_loss_delivers_everything_in_order_both_modes() {
+        use crate::sim::rng::Rng;
+        for mode in [RelMode::GoBackN, RelMode::SelectiveRepeat] {
+            let mut rng = Rng::new(77);
+            let mut tx = RelTx::new(mode);
+            let mut rx = RelRx::new(mode, 64);
+            let total = 3_000u64;
+            let mut next = 0u64;
+            let mut delivered: Vec<Vec<u64>> = vec![Vec::new(); NUM_VCS];
+            let mut idle = 0;
+            while delivered.iter().map(|v| v.len() as u64).sum::<u64>() < total {
+                let f = if let Some(f) = tx.next_resend() {
+                    f
+                } else if next < total {
+                    let addr = rng.below(1 << 20);
+                    let m = req(next, addr);
+                    next += 1;
+                    let vc = super::super::super::vc::vc_for(&m);
+                    tx.frame(T0, vc, m)
+                } else {
+                    // tail loss: model the timeout
+                    idle += 1;
+                    assert!(idle < 50, "{mode:?} seqrep deadlocked");
+                    tx.force_replay_all();
+                    continue;
+                };
+                idle = 0;
+                if rng.chance(0.10) {
+                    continue; // dropped on the wire
+                }
+                let mut f = f;
+                if rng.chance(0.05) {
+                    f.intact = false;
+                }
+                let (del, ctls) = rx1(&mut rx, f);
+                for g in del {
+                    delivered[g.vc.0 as usize].push(g.msg.addr.0);
+                }
+                for c in ctls {
+                    tx.on_control(T0, c);
+                }
+            }
+            // drain remaining acks so the replay buffers empty
+            for vc in 0..NUM_VCS {
+                if rx.expected_seq(VcId(vc as u8)) > 0 {
+                    tx.on_control(
+                        T0,
+                        Control::VcAck(VcId(vc as u8), rx.expected_seq(VcId(vc as u8)) - 1),
+                    );
+                }
+            }
+            assert_eq!(tx.unacked_total(), 0, "{mode:?}");
+            assert!(tx.retransmitted > 0, "{mode:?} should have exercised replay");
+            let n: u64 = delivered.iter().map(|v| v.len() as u64).sum();
+            assert_eq!(n, total, "{mode:?}: exactly-once delivery");
+            // per-VC delivery must be exactly-once in per-VC send order;
+            // this traffic's addresses are drawn fresh per message, so
+            // equality of counts plus in-order release (asserted by the
+            // SR unit tests) pins it — additionally check SR released
+            // nothing out of buffered order
+            if mode == RelMode::SelectiveRepeat {
+                assert!(rx.buffered_out_of_order > 0, "SR must have buffered");
+                assert_eq!(rx.buffered(), 0, "no stragglers in the OOO buffer");
+            }
+        }
+    }
+
+    /// The headline economics: under the same loss pattern, selective
+    /// repeat replays strictly fewer bytes than go-back-N.
+    #[test]
+    fn sr_replays_fewer_bytes_than_gbn_under_identical_loss() {
+        use std::collections::HashSet;
+        let run = |mode: RelMode| {
+            let mut tx = RelTx::new(mode);
+            let mut rx = RelRx::new(mode, 64);
+            let total = 2_000u64;
+            let mut next = 0u64;
+            let mut got = 0u64;
+            let mut idle = 0;
+            // the loss pattern is a pure function of the frame identity
+            // (first copy of every hash-selected seq is dropped, replays
+            // get through), so both modes see identical wires
+            let mut dropped_once: HashSet<Seq> = HashSet::new();
+            while got < total {
+                let f = if let Some(f) = tx.next_resend() {
+                    f
+                } else if next < total {
+                    let m = req(next, 2 * next);
+                    next += 1;
+                    tx.frame(T0, VcId(0), m)
+                } else {
+                    idle += 1;
+                    assert!(idle < 50, "{mode:?} deadlocked");
+                    tx.force_replay_all();
+                    continue;
+                };
+                idle = 0;
+                if (f.seq.wrapping_mul(2_654_435_761)) % 100 < 8 && dropped_once.insert(f.seq) {
+                    continue; // dropped on the wire
+                }
+                let (del, ctls) = rx1(&mut rx, f);
+                got += del.len() as u64;
+                for c in ctls {
+                    tx.on_control(T0, c);
+                }
+            }
+            assert!(tx.retransmitted > 0, "{mode:?} must have replayed");
+            tx.retransmitted_bytes
+        };
+        let gbn = run(RelMode::GoBackN);
+        let sr = run(RelMode::SelectiveRepeat);
+        assert!(
+            sr < gbn,
+            "selective repeat must replay strictly fewer bytes: sr {sr} vs gbn {gbn}"
+        );
     }
 }

@@ -1,5 +1,6 @@
 //! Reliability observables of one link direction, snapshot-able into the
-//! harness counter namespace (`rel_*` keys) and the goodput figure.
+//! harness counter namespace (`rel_*` keys), the goodput figure, and the
+//! replay-bandwidth (retransmission-ablation) figure.
 
 use crate::sim::stats::Counters;
 
@@ -10,13 +11,30 @@ use super::RelState;
 pub struct RelStats {
     /// Frames put on the wire (fresh + retransmissions).
     pub sent: u64,
+    /// Wire bytes put on the wire (fresh + retransmissions).
+    pub sent_bytes: u64,
     pub retransmitted: u64,
-    /// Timeout-driven full rewinds.
+    /// Wire bytes burned on retransmissions — the replay-bandwidth
+    /// figure's numerator.
+    pub retransmitted_bytes: u64,
+    /// Timeout-driven rewinds.
     pub timeouts: u64,
-    /// Frames accepted in sequence by the receiver.
+    /// Frames accepted and delivered in sequence by the receiver.
     pub accepted: u64,
+    /// Wire bytes delivered to the consumer — the replay-bandwidth
+    /// figure's denominator.
+    pub accepted_bytes: u64,
     pub dropped_corrupt: u64,
     pub dropped_out_of_order: u64,
+    /// Frames parked out of order awaiting a hole fill (selective
+    /// repeat only).
+    pub buffered_out_of_order: u64,
+    /// High-water mark of the out-of-order receive buffer (frames held
+    /// across all VCs; bounded by the replay window — sizes the SR
+    /// buffering a hardware port would need).
+    pub peak_buffered: usize,
+    /// Selective acks applied at the sender (selective repeat only).
+    pub sacks: u64,
     /// High-water mark of the replay-buffer occupancy (frames parked
     /// awaiting cumulative ack, across all VCs).
     pub peak_replay: usize,
@@ -27,22 +45,38 @@ pub struct RelStats {
     /// Cumulative acks that rode the reverse direction's frames instead
     /// of costing an explicit control frame.
     pub piggybacked_acks: u64,
+    /// Karn-filtered RTT samples absorbed by the estimators.
+    pub rtt_samples: u64,
+    /// Widest per-VC smoothed RTT, ns (0 until a sample lands).
+    pub srtt_ns: f64,
+    /// The retransmit timeout in force at snapshot time, ns (fixed
+    /// value, or the clamped adaptive estimate).
+    pub rto_ns: f64,
 }
 
 impl RelStats {
     pub fn of(rel: &RelState) -> RelStats {
         RelStats {
             sent: rel.tx.sent,
+            sent_bytes: rel.tx.sent_bytes,
             retransmitted: rel.tx.retransmitted,
+            retransmitted_bytes: rel.tx.retransmitted_bytes,
             timeouts: rel.tx.timeouts,
             accepted: rel.rx.accepted,
+            accepted_bytes: rel.rx.accepted_bytes,
             dropped_corrupt: rel.rx.dropped_corrupt,
             dropped_out_of_order: rel.rx.dropped_out_of_order,
+            buffered_out_of_order: rel.rx.buffered_out_of_order,
+            peak_buffered: rel.rx.peak_buffered,
+            sacks: rel.tx.sacked,
             peak_replay: rel.tx.peak_replay,
             injected_drops: rel.faults.stats.dropped,
             injected_corrupts: rel.faults.stats.corrupted,
             injected_reorders: rel.faults.stats.reordered,
             piggybacked_acks: rel.piggybacked_acks,
+            rtt_samples: rel.tx.rtt_samples,
+            srtt_ns: rel.tx.srtt().map_or(0.0, |d| d.as_ns()),
+            rto_ns: rel.effective_rto().as_ns(),
         }
     }
 
@@ -50,19 +84,28 @@ impl RelStats {
     /// as one stack in the harness).
     pub fn merge(&mut self, o: &RelStats) {
         self.sent += o.sent;
+        self.sent_bytes += o.sent_bytes;
         self.retransmitted += o.retransmitted;
+        self.retransmitted_bytes += o.retransmitted_bytes;
         self.timeouts += o.timeouts;
         self.accepted += o.accepted;
+        self.accepted_bytes += o.accepted_bytes;
         self.dropped_corrupt += o.dropped_corrupt;
         self.dropped_out_of_order += o.dropped_out_of_order;
+        self.buffered_out_of_order += o.buffered_out_of_order;
+        self.peak_buffered = self.peak_buffered.max(o.peak_buffered);
+        self.sacks += o.sacks;
         self.peak_replay = self.peak_replay.max(o.peak_replay);
         self.injected_drops += o.injected_drops;
         self.injected_corrupts += o.injected_corrupts;
         self.injected_reorders += o.injected_reorders;
         self.piggybacked_acks += o.piggybacked_acks;
+        self.rtt_samples += o.rtt_samples;
+        self.srtt_ns = self.srtt_ns.max(o.srtt_ns);
+        self.rto_ns = self.rto_ns.max(o.rto_ns);
     }
 
-    /// Fraction of transmitted frames that were useful (accepted in
+    /// Fraction of transmitted link frames that were useful (accepted in
     /// sequence): 1.0 on a clean link, sinking as replays burn
     /// bandwidth. This is the *link* goodput; the figure-level goodput
     /// (completed operations/s) is reported by the open-loop engine.
@@ -74,18 +117,39 @@ impl RelStats {
         }
     }
 
+    /// Replay bytes per delivered byte — the retransmission-ablation
+    /// figure's headline metric: how much wire bandwidth the discipline
+    /// burns re-sending per byte it actually delivers. 0 on a clean
+    /// link; go-back-N amplifies it at exactly the BERs where goodput
+    /// matters, selective repeat pays one frame per hole.
+    pub fn replay_overhead(&self) -> f64 {
+        if self.accepted_bytes == 0 {
+            0.0
+        } else {
+            self.retransmitted_bytes as f64 / self.accepted_bytes as f64
+        }
+    }
+
     /// Add the snapshot into a harness counter block under `rel_*` keys.
     pub fn add_to(&self, c: &mut Counters) {
         c.add("rel_sent", self.sent);
+        c.add("rel_sent_bytes", self.sent_bytes);
         c.add("rel_retransmitted", self.retransmitted);
+        c.add("rel_retransmitted_bytes", self.retransmitted_bytes);
         c.add("rel_timeouts", self.timeouts);
         c.add("rel_accepted", self.accepted);
+        c.add("rel_accepted_bytes", self.accepted_bytes);
         c.add("rel_dropped_corrupt", self.dropped_corrupt);
         c.add("rel_dropped_out_of_order", self.dropped_out_of_order);
+        c.add("rel_buffered_out_of_order", self.buffered_out_of_order);
+        c.add("rel_peak_buffered", self.peak_buffered as u64);
+        c.add("rel_sacks", self.sacks);
         c.add("rel_peak_replay", self.peak_replay as u64);
         c.add("rel_injected_drops", self.injected_drops);
         c.add("rel_injected_corrupts", self.injected_corrupts);
         c.add("rel_injected_reorders", self.injected_reorders);
         c.add("rel_piggybacked_acks", self.piggybacked_acks);
+        c.add("rel_rtt_samples", self.rtt_samples);
+        c.add("rel_rto_ns", self.rto_ns as u64);
     }
 }

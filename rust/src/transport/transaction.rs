@@ -81,6 +81,10 @@ impl TxState {
     /// Handle a control frame from the receiver.
     pub fn on_control(&mut self, c: Control) {
         match c {
+            // per-VC controls belong to the rel layer's sequencing
+            Control::VcAck(..) | Control::VcNack(..) | Control::VcSack(..) => {
+                debug_assert!(false, "rel-layer control routed to the transaction layer: {c:?}");
+            }
             Control::Ack(upto) => {
                 while let Some(f) = self.replay.front() {
                     if f.seq <= upto {

@@ -284,6 +284,10 @@ pub struct OpenLoop {
     /// Reused launch buffer for the link pumps (they run on every
     /// send/credit/control event; a fresh Vec each time is pure churn).
     scratch: Vec<(Time, Frame)>,
+    /// Reused receive buffers for frame deliveries (a selective-repeat
+    /// arrival can release several buffered frames at once).
+    rx_frames: Vec<Frame>,
+    rx_ctls: Vec<Control>,
     lat: Histogram,
     /// Per-class latency, parallel to `classes`.
     class_lat: Vec<Histogram>,
@@ -394,6 +398,8 @@ impl OpenLoop {
             retx_seen_acked: [0; 2],
             ack_flush_pending: [false; 2],
             scratch: Vec::new(),
+            rx_frames: Vec::new(),
+            rx_ctls: Vec::new(),
             lat: Histogram::new(),
             class_lat: vec![Histogram::new(); n_classes],
             counters: Counters::new(),
@@ -472,11 +478,13 @@ impl OpenLoop {
                 self.pump_cpu();
             }
             Ev::CtlHome(c) => {
-                self.to_home.on_control(c);
+                let now = self.eng.now();
+                self.to_home.on_control(now, c);
                 self.pump_home();
             }
             Ev::CtlCpu(c) => {
-                self.to_cpu.on_control(c);
+                let now = self.eng.now();
+                self.to_cpu.on_control(now, c);
                 self.pump_cpu();
             }
             Ev::CreditHome(vc) => {
@@ -855,21 +863,28 @@ impl OpenLoop {
     // -- home side ----------------------------------------------------------
 
     fn land_home(&mut self, frame: Box<Frame>) {
+        let now = self.eng.now();
         let ctrl = self.cfg.machine.ctrl_latency;
         // a piggybacked ack acknowledges response frames this node (the
         // home) sent toward the cpu
         if let Some((vc, seq)) = frame.ack {
-            self.to_cpu.on_control(Control::VcAck(vc, seq));
+            self.to_cpu.on_control(now, Control::VcAck(vc, seq));
         }
-        let (frame, ctl) = self.to_home.deliver(*frame);
-        if let Some(c) = ctl {
+        // a selective-repeat delivery can release several frames (a
+        // hole fill frees its buffered successors), all in per-VC order
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        self.to_home.deliver(*frame, &mut delivered, &mut ctls);
+        for c in ctls.drain(..) {
             self.eng.schedule(ctrl, Ev::CtlHome(c));
         }
+        self.rx_ctls = ctls;
         self.arm_ack_flush(0);
-        let Some(frame) = frame else { return };
-        let now = self.eng.now();
-        let s = self.dcs.enqueue_frame(now, frame);
-        self.pump_slice(s);
+        for f in delivered.drain(..) {
+            let s = self.dcs.enqueue_frame(now, f);
+            self.pump_slice(s);
+        }
+        self.rx_frames = delivered;
     }
 
     /// Drain slice `s` as far as its pipeline allows right now. Credits
@@ -927,35 +942,40 @@ impl OpenLoop {
     // -- cpu side -----------------------------------------------------------
 
     fn land_cpu(&mut self, frame: Box<Frame>) {
+        let now = self.eng.now();
         let ctrl = self.cfg.machine.ctrl_latency;
-        let vc = frame.vc;
         // a piggybacked ack acknowledges request frames this node (the
         // cpu) sent toward the home
         if let Some((avc, seq)) = frame.ack {
-            self.to_home.on_control(Control::VcAck(avc, seq));
+            self.to_home.on_control(now, Control::VcAck(avc, seq));
         }
-        let (frame, ctl) = self.to_cpu.deliver(*frame);
-        if let Some(c) = ctl {
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        self.to_cpu.deliver(*frame, &mut delivered, &mut ctls);
+        for c in ctls.drain(..) {
             self.eng.schedule(ctrl, Ev::CtlCpu(c));
         }
+        self.rx_ctls = ctls;
         self.arm_ack_flush(1);
-        let Some(frame) = frame else { return };
-        // the cpu sinks responses at arrival: slot freed immediately
-        self.eng.schedule(ctrl, Ev::CreditCpu(vc));
-        let fx = self.remote.on_message(frame.msg, &mut self.cache);
         let mut sent = false;
         let mut fills: Vec<LineAddr> = Vec::new();
-        for e in fx {
-            match e {
-                RemoteEffect::Send(m) => {
-                    self.to_home.offer(m);
-                    sent = true;
+        for f in delivered.drain(..) {
+            // the cpu sinks responses at arrival: slot freed immediately
+            self.eng.schedule(ctrl, Ev::CreditCpu(f.vc));
+            let fx = self.remote.on_message(f.msg, &mut self.cache);
+            for e in fx {
+                match e {
+                    RemoteEffect::Send(m) => {
+                        self.to_home.offer(m);
+                        sent = true;
+                    }
+                    RemoteEffect::Filled { addr } => fills.push(addr),
+                    RemoteEffect::Stalled => {}
+                    RemoteEffect::ForeignVictim(_) => self.counters.inc("foreign_victim"),
                 }
-                RemoteEffect::Filled { addr } => fills.push(addr),
-                RemoteEffect::Stalled => {}
-                RemoteEffect::ForeignVictim(_) => self.counters.inc("foreign_victim"),
             }
         }
+        self.rx_frames = delivered;
         if sent {
             self.pump_home();
         }

@@ -15,7 +15,7 @@ use eci::agents::dram::MemStore;
 use eci::machine::{map, Machine, MachineConfig, Op, Workload};
 use eci::proto::messages::{LineAddr, LINE_BYTES};
 use eci::sim::time::Duration;
-use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
 
 /// Home-side configurations under test: `None` = monolithic memory
 /// node, `Some(n)` = sliced cached directory with `n` slices.
@@ -28,22 +28,47 @@ fn config_name(c: Option<usize>) -> String {
     }
 }
 
+/// The lossy-link configuration the environment asks for, if any (see
+/// `machine_with`).
+fn rel_from_env() -> Option<RelConfig> {
+    let v = std::env::var("ECI_LITMUS_FAULTS").ok()?;
+    if v.is_empty() || v == "off" {
+        return None;
+    }
+    let ber: f64 = v.parse().expect("ECI_LITMUS_FAULTS must be a bit-error rate (or `off`)");
+    let spec = FaultSpec {
+        ber,
+        drop: (ber * 20.0).min(0.05),
+        reorder: (ber * 20.0).min(0.05),
+        burst_len: 1.0,
+    };
+    let mut rel = RelConfig::new(FaultConfig::new(spec, 7));
+    match std::env::var("ECI_LITMUS_REL_MODE").ok().filter(|m| !m.is_empty()) {
+        None => {}
+        Some(m) => match RelMode::parse(&m) {
+            Some(RelMode::GoBackN) => {}
+            Some(RelMode::SelectiveRepeat) => {
+                rel = rel.with_mode(RelMode::SelectiveRepeat).with_adaptive_rto(true);
+            }
+            None => panic!("ECI_LITMUS_REL_MODE must be gbn or sr, got {m:?}"),
+        },
+    }
+    Some(rel)
+}
+
 fn machine_with(config: Option<usize>) -> Machine {
     let mut cfg = MachineConfig::test_small();
     // Loss-transparency gate: `ECI_LITMUS_FAULTS=<ber>` reruns the whole
     // suite over the reliable lossy link (`transport::rel`; drops and
     // reordering derive from the one knob) — every assertion must hold
-    // unchanged, because loss changes timing, never semantics. CI runs
-    // the suite once clean and once with faults injected.
-    if let Ok(v) = std::env::var("ECI_LITMUS_FAULTS") {
-        let ber: f64 = v.parse().expect("ECI_LITMUS_FAULTS must be a bit-error rate");
-        let spec = FaultSpec {
-            ber,
-            drop: (ber * 20.0).min(0.05),
-            reorder: (ber * 20.0).min(0.05),
-            burst_len: 1.0,
-        };
-        cfg.rel = Some(RelConfig::new(FaultConfig::new(spec, 7)));
+    // unchanged, because loss changes timing, never semantics. The
+    // retransmission discipline is part of the gate:
+    // `ECI_LITMUS_REL_MODE=sr` runs selective repeat (with the adaptive
+    // RTO, gating both new knobs at once); the default is go-back-N.
+    // CI runs the suite clean, then faulted under BOTH modes. Empty /
+    // "off" values mean unset, so a CI matrix can pass them literally.
+    if let Some(rel) = rel_from_env() {
+        cfg.rel = Some(rel);
     }
     let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
     for i in 0..1024u64 {

@@ -579,11 +579,15 @@ fn batched_ingress_holds_credits_until_slice_service() {
                     if at > now {
                         now = at;
                     }
-                    let (fr, ctl) = ing.deliver(f);
-                    if let Some(c) = ctl {
-                        ing.on_control(c);
+                    let (mut del, mut ctls) = (Vec::new(), Vec::new());
+                    ing.deliver(f, &mut del, &mut ctls);
+                    for c in ctls {
+                        ing.on_control(now, c);
                     }
-                    dcs.enqueue_frame(now, fr.expect("in-sequence frame must deliver"));
+                    assert_eq!(del.len(), 1, "in-sequence frame must deliver");
+                    for fr in del {
+                        dcs.enqueue_frame(now, fr);
+                    }
                 }
                 // every launched-but-unserviced frame — including the
                 // ones STAGED in the batcher — still holds its credit
@@ -744,10 +748,11 @@ fn framed_ingress_credits_bound_in_flight_under_overload() {
                     for _ in 0..k.min(in_flight.len()) {
                         let f = in_flight.pop_front().unwrap();
                         let vc = f.vc;
-                        let (fr, ctl) = ing.deliver(f);
-                        assert!(fr.is_some(), "in-sequence frame must deliver");
-                        if let Some(c) = ctl {
-                            ing.on_control(c);
+                        let (mut del, mut ctls) = (Vec::new(), Vec::new());
+                        ing.deliver(f, &mut del, &mut ctls);
+                        assert_eq!(del.len(), 1, "in-sequence frame must deliver");
+                        for c in ctls {
+                            ing.on_control(now, c);
                         }
                         outstanding[vc.0 as usize] -= 1;
                         ing.credit_return(vc);
@@ -770,14 +775,15 @@ fn framed_ingress_credits_bound_in_flight_under_overload() {
 /// Credit accounting under replay: on a lossy rel link (drops, bit
 /// errors, reordering), launched-but-unreturned frames never exceed the
 /// credit budget at any step — a retransmission must not re-consume a
-/// credit — and once everything is serviced and acked, every credit is
-/// home again — a loss must not leak one.
+/// credit, in EITHER retransmission mode — and once everything is
+/// serviced and acked, every credit is home again — a loss must not
+/// leak one (and a selective-repeat receive buffer must not strand one).
 #[test]
 fn rel_replay_holds_credits_without_leak() {
     use eci::dcs::{Dcs, DcsConfig, SliceService};
     use eci::sim::rng::Rng;
     use eci::sim::time::{Duration, Time};
-    use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+    use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
     use eci::transport::{FramedIngress, LinkConfig};
 
     Prop::new("rel replay credit conservation").cases(20).check(
@@ -787,14 +793,19 @@ fn rel_replay_holds_credits_without_leak() {
             let drop = g.below(8) as f64 / 100.0; // 0..0.07
             let ber = if g.chance(0.5) { 1e-3 } else { 0.0 };
             let reorder = g.below(5) as f64 / 100.0;
+            let sr = g.chance(0.5);
+            let adaptive = g.chance(0.5);
             let seed = g.below(1 << 32);
-            (credits, msgs, drop, ber, reorder, seed)
+            (credits, msgs, drop, ber, reorder, sr, adaptive, seed)
         },
-        |&(credits, msgs, drop, ber, reorder, seed)| {
+        |&(credits, msgs, drop, ber, reorder, sr, adaptive, seed)| {
             let mut cfg = LinkConfig::eci();
             cfg.credits_per_vc = credits;
             let spec = FaultSpec { ber, drop, reorder, burst_len: 1.0 };
-            let rel = RelConfig::new(FaultConfig::new(spec, seed ^ 0xFA17));
+            let mode = if sr { RelMode::SelectiveRepeat } else { RelMode::GoBackN };
+            let rel = RelConfig::new(FaultConfig::new(spec, seed ^ 0xFA17))
+                .with_mode(mode)
+                .with_adaptive_rto(adaptive);
             let mut ing = FramedIngress::with_rel(cfg, Node::Remote, Rng::new(seed), rel);
             let mut dcs = Dcs::with_reference_rules(
                 DcsConfig::new(2).with_slice_proc(Duration::ZERO),
@@ -832,11 +843,12 @@ fn rel_replay_holds_credits_without_leak() {
                         "in-flight {} exceeds budget {budget}",
                         ing.in_flight_total()
                     );
-                    let (fr, ctl) = ing.deliver(f);
-                    if let Some(c) = ctl {
-                        ing.on_control(c);
+                    let (mut del, mut ctls) = (Vec::new(), Vec::new());
+                    ing.deliver(f, &mut del, &mut ctls);
+                    for c in ctls {
+                        ing.on_control(now, c);
                     }
-                    if let Some(fr) = fr {
+                    for fr in del {
                         dcs.enqueue_frame(now, fr);
                     }
                 }
@@ -880,6 +892,96 @@ fn rel_replay_holds_credits_without_leak() {
                 "a replayed loss must not leak a credit"
             );
             assert_eq!(dcs.pending(), 0);
+            true
+        },
+    );
+}
+
+/// Selective repeat delivers every frame exactly once and in per-VC
+/// send order, under ARBITRARY interleavings of drops, corruption, and
+/// wire reordering (the in-flight pool is shuffled before every
+/// delivery round, so frames overtake each other freely).
+#[test]
+fn sr_delivery_is_exactly_once_in_order_under_arbitrary_interleavings() {
+    use eci::sim::rng::Rng;
+    use eci::sim::time::Time;
+    use eci::transport::rel::{RelMode, RelRx, RelTx};
+    use eci::transport::{vc_for, Frame};
+
+    Prop::new("selective-repeat exactly-once in-order delivery").cases(25).check(
+        |g| {
+            let msgs = 200 + g.below(600);
+            let drop = g.below(15) as f64 / 100.0; // 0..0.14
+            let corrupt = g.below(10) as f64 / 100.0;
+            let seed = g.below(1 << 32);
+            (msgs, drop, corrupt, seed)
+        },
+        |&(msgs, drop, corrupt, seed)| {
+            let mut rng = Rng::new(seed ^ 0x5E1E);
+            let mut tx = RelTx::new(RelMode::SelectiveRepeat);
+            let mut rx = RelRx::new(RelMode::SelectiveRepeat, 64);
+            let mut inflight: Vec<Frame> = Vec::new();
+            let mut sent_order: Vec<Vec<u32>> = vec![Vec::new(); NUM_VCS];
+            let mut got_order: Vec<Vec<u32>> = vec![Vec::new(); NUM_VCS];
+            let mut next = 0u64;
+            let mut idle = 0u32;
+            let now = Time(0);
+            while got_order.iter().map(Vec::len).sum::<usize>() < msgs as usize {
+                // launch a burst: resends first, then fresh traffic
+                for _ in 0..(1 + rng.below(8)) {
+                    let f = if let Some(f) = tx.next_resend() {
+                        f
+                    } else if next < msgs {
+                        let m = Message::coh_req(
+                            ReqId(next as u32),
+                            Node::Remote,
+                            CohOp::ReadShared,
+                            LineAddr(rng.below(1 << 16)),
+                        );
+                        next += 1;
+                        let vc = vc_for(&m);
+                        sent_order[vc.0 as usize].push(m.id.0);
+                        tx.frame(now, vc, m)
+                    } else {
+                        break;
+                    };
+                    if rng.chance(drop) {
+                        continue; // swallowed by the wire
+                    }
+                    let mut f = f;
+                    if rng.chance(corrupt) {
+                        f.intact = false;
+                    }
+                    inflight.push(f);
+                }
+                // deliver a random subset in arbitrary order
+                rng.shuffle(&mut inflight);
+                let k = rng.below(1 + inflight.len() as u64) as usize;
+                let mut progressed = false;
+                for f in inflight.drain(..k) {
+                    let (mut del, mut ctls) = (Vec::new(), Vec::new());
+                    rx.on_frame(f, &mut del, &mut ctls);
+                    for g in del {
+                        got_order[g.vc.0 as usize].push(g.msg.id.0);
+                        progressed = true;
+                    }
+                    for c in ctls {
+                        tx.on_control(now, c);
+                    }
+                }
+                if progressed || next < msgs {
+                    idle = 0;
+                } else {
+                    // tail loss: the retransmit timeout
+                    idle += 1;
+                    assert!(idle < 400, "selective repeat wedged");
+                    tx.force_replay_all();
+                }
+            }
+            assert_eq!(
+                got_order, sent_order,
+                "delivery must be exactly-once, in per-VC send order"
+            );
             true
         },
     );

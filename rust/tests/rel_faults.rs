@@ -8,7 +8,7 @@
 use eci::agents::dram::MemStore;
 use eci::machine::{map, Machine, MachineConfig, Op, Workload};
 use eci::proto::messages::{Line, LineAddr, LINE_BYTES};
-use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode, RTO_FLOOR};
 use eci::transport::NUM_VCS;
 use eci::workload::{self, OpenLoopConfig, Scenario};
 
@@ -176,6 +176,119 @@ fn faulted_openloop_overload_stays_credit_bounded() {
     assert!(lossy.counters.get("rel_retransmitted") > 0, "{:?}", lossy.counters);
     // replays burn bandwidth, so the faulted link saturates no higher
     assert!(lossy.delivered_per_s <= clean.delivered_per_s * 1.02);
+}
+
+/// The retransmission discipline is an ablation, not a semantic knob:
+/// go-back-N, selective repeat, and selective repeat with the adaptive
+/// RTO all settle the open loop into the exact state of the clean
+/// (rel-less) stack — while SR demonstrably replays less.
+#[test]
+fn gbn_and_sr_reach_identical_settled_state() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    let run = |rel: Option<RelConfig>| {
+        let mut cfg = OpenLoopConfig { rate_per_s: 2e6, ops: 600, ..Default::default() };
+        cfg.machine.rel = rel;
+        eci::workload::OpenLoop::new(cfg, &sc, 2).run_settled()
+    };
+    let lossy = faulty_rel(7);
+    let (r_plain, d_plain) = run(None);
+    let (r_gbn, d_gbn) = run(Some(lossy));
+    let (r_sr, d_sr) = run(Some(lossy.with_mode(RelMode::SelectiveRepeat)));
+    let (r_arto, d_arto) =
+        run(Some(lossy.with_mode(RelMode::SelectiveRepeat).with_adaptive_rto(true)));
+    for r in [&r_plain, &r_gbn, &r_sr, &r_arto] {
+        assert_eq!(r.completed, 600, "every discipline must drain the open loop");
+    }
+    assert!(r_gbn.counters.get("rel_retransmitted") > 0, "{:?}", r_gbn.counters);
+    assert!(r_sr.counters.get("rel_sacks") > 0, "SR must have sacked: {:?}", r_sr.counters);
+    assert_eq!(d_gbn, d_plain, "go-back-N must be invisible to the end state");
+    assert_eq!(d_sr, d_plain, "selective repeat must be invisible to the end state");
+    assert_eq!(d_arto, d_plain, "the adaptive RTO must be invisible to the end state");
+    // the ablation's point, visible even at this scale: same wire, same
+    // traffic, fewer replayed bytes
+    assert!(
+        r_sr.counters.get("rel_retransmitted_bytes")
+            < r_gbn.counters.get("rel_retransmitted_bytes"),
+        "sr {} vs gbn {} replayed bytes",
+        r_sr.counters.get("rel_retransmitted_bytes"),
+        r_gbn.counters.get("rel_retransmitted_bytes")
+    );
+}
+
+/// Machine-path equivalence: streaming observables (fill payloads and
+/// settled FPGA memory) are identical across retransmission modes on
+/// the sliced cached directory under loss.
+#[test]
+fn stream_observables_identical_across_retransmission_modes() {
+    let run = |rel: Option<RelConfig>| {
+        let mut m = machine_with(Some(2), rel);
+        let sums = std::rc::Rc::new(std::cell::RefCell::new(
+            std::collections::BTreeMap::<u64, u64>::new(),
+        ));
+        {
+            let sums2 = std::rc::Rc::clone(&sums);
+            m.verify_fill = Some(Box::new(move |addr, data| {
+                let v = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                *sums2.borrow_mut().entry(addr.0).or_insert(0) += v;
+            }));
+        }
+        m.set_workload(Workload::StreamRemote { lines: 600 }, 4);
+        let r = m.run();
+        assert_eq!(r.remote_bytes, 600 * 128, "every line must stream intact");
+        m.drain();
+        let retx = m.report().counters.get("rel_retransmitted");
+        (sums.borrow().clone(), fpga_mem_snapshot(&m, 2048), retx)
+    };
+    let (fills_clean, mem_clean, _) = run(None);
+    let lossy = faulty_rel(7);
+    for rel in [
+        lossy,
+        lossy.with_mode(RelMode::SelectiveRepeat),
+        lossy.with_mode(RelMode::SelectiveRepeat).with_adaptive_rto(true),
+    ] {
+        let label = format!("{:?} adaptive={}", rel.mode, rel.adaptive_rto);
+        let (fills, mem, retx) = run(Some(rel));
+        assert!(retx > 0, "{label}: the lossy run must have exercised replay");
+        assert_eq!(fills, fills_clean, "{label}: fill payloads must be mode-invariant");
+        assert_eq!(mem, mem_clean, "{label}: settled FPGA memory must be mode-invariant");
+    }
+}
+
+/// The adaptive RTO's safety property: on a clean link the timer never
+/// fires — the effective RTO converges but is clamped at the floor,
+/// which sits above the worst clean-link ack delay.
+#[test]
+fn adaptive_rto_never_fires_below_the_floor_on_a_clean_link() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    for mode in [RelMode::GoBackN, RelMode::SelectiveRepeat] {
+        let mut cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 2_000, ..Default::default() };
+        cfg.machine.rel =
+            Some(RelConfig::from_ber(0.0, 7).with_mode(mode).with_adaptive_rto(true));
+        let r = workload::run(cfg, &sc, 2);
+        assert_eq!(r.completed, 2_000);
+        assert!(
+            r.counters.get("rel_rtt_samples") > 0,
+            "{mode:?}: the estimator must have sampled: {:?}",
+            r.counters
+        );
+        assert_eq!(
+            r.counters.get("rel_timeouts"),
+            0,
+            "{mode:?}: a clean link must never time out: {:?}",
+            r.counters
+        );
+        assert_eq!(r.counters.get("rel_retransmitted"), 0, "{mode:?}");
+        let rto_ns = r.counters.get("rel_rto_ns");
+        assert!(
+            rto_ns as f64 >= RTO_FLOOR.as_ns(),
+            "{mode:?}: effective RTO {rto_ns} ns must respect the {} ns floor",
+            RTO_FLOOR.as_ns()
+        );
+        assert!(
+            (rto_ns as f64) < 2_000.0,
+            "{mode:?}: the measured RTO should undercut the fixed 2 µs timer, got {rto_ns} ns"
+        );
+    }
 }
 
 /// Burst errors (clustered losses) are just as transparent as
