@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! eci resources                  print Table 2 + subsetting ablation
-//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|all> [flags]
+//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|selfperf|all> [flags]
 //! eci check                      validate envelope + subsets, print report
 //! eci trace-demo                 run a traffic capture through the
 //!                                dissector and the online checker
@@ -56,6 +56,22 @@
 //!                [--ops 1200] [--scenario scan]
 //! ```
 //!
+//! The `selfperf` bench (the simulator's own host throughput on pinned
+//! configurations — `harness::selfperf`; `BENCH_6.json` is the
+//! committed baseline, `--check` gates CI on it):
+//!
+//! ```text
+//! eci bench selfperf [--check BENCH_6.json] [--record BENCH_6.json]
+//!                    [--tolerance 0.25] [--json]
+//! ```
+//!
+//! Observability (`rust/DESIGN.md` §obs): `dcs`, `workload`, `faults`
+//! and `retx` all take a bare `--json` flag that emits each result
+//! table as JSON alongside the markdown. `workload` additionally takes
+//! `--spans` (print the per-stage latency waterfall from one observed
+//! run per slice count) and `--obs-out <path>` (write telemetry
+//! JSON-lines from the observed run).
+//!
 //! Every stochastic bench takes a global `--seed` (Poisson arrivals,
 //! Zipf draws, fault injection all derive from it, so any run is
 //! reproducible from the command line). Defaults: `dcs` 0xDC5,
@@ -68,7 +84,8 @@
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
 use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
-    fig5, fig6, fig7, fig8, fig_loadcurve, fig_retx, fig_throughput, table2, table3, Scale,
+    fig5, fig6, fig7, fig8, fig_loadcurve, fig_retx, fig_throughput, selfperf, table2, table3,
+    Scale,
 };
 use crate::transport::RelMode;
 use crate::proto::messages::CohOp;
@@ -94,19 +111,21 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|selfperf|all]|check|trace-demo>\n\
                  dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
-                                 --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N\n\
+                                 --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N --json\n\
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
                                  --batch 4 --rate 2e6,8e6 --theta 0.99 --classes hot-kvs:2,scan:1\n\
-                                 --ops 12000 --arrivals poisson|fixed --cached --seed N\n\
+                                 --ops 12000 --arrivals poisson|fixed --cached --seed N --json\n\
+                                 --spans --obs-out run.jsonl\n\
                  faults flags:   --ber 1e-6,1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8\n\
                                  --seed 7 --slices 1,4 --cached-slices 2 --rate 2e6\n\
-                                 --ops 1200 --scenario {scenarios} --mode gbn|sr --adaptive-rto\n\
+                                 --ops 1200 --scenario {scenarios} --mode gbn|sr --adaptive-rto --json\n\
                  retx flags:     --ber 1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8 --seed 7\n\
-                                 --slices 4 --rate 2e6 --ops 1200 --scenario {scenarios}\n\
+                                 --slices 4 --rate 2e6 --ops 1200 --scenario {scenarios} --json\n\
+                 selfperf flags: --check BENCH_6.json --record BENCH_6.json --tolerance 0.25 --json\n\
                  seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx 0x0C3A)\n\
-                 env: ECI_SCALE={{ci,default,paper}} (current: {scale:?})",
+                 env: ECI_SCALE={{ci,default,paper}} (current: {scale:?}; selfperf ignores it)",
                 scenarios = Scenario::preset_names().join("|")
             );
         }
@@ -122,6 +141,8 @@ pub struct DcsArgs {
     pub cached_slices: Vec<usize>,
     /// Framed-ingress batch size (1 = batching off).
     pub batch: usize,
+    /// `--json`: emit the table as JSON alongside the markdown.
+    pub json: bool,
     pub cfg: LoadGenConfig,
 }
 
@@ -131,15 +152,21 @@ impl DcsArgs {
             slices: fig_throughput::SLICE_SWEEP.to_vec(),
             cached_slices: Vec::new(),
             batch: 1,
+            json: false,
             cfg: LoadGenConfig { ops: fig_throughput::ops_for(scale), ..Default::default() },
         }
     }
 
-    /// Parse `--flag value` pairs; unknown flags are errors.
+    /// Parse `--flag value` pairs (`--json` is a bare flag); unknown
+    /// flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<DcsArgs, String> {
         let mut out = DcsArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
+            if flag == "--json" {
+                out.json = true;
+                continue;
+            }
             let val = it
                 .next()
                 .ok_or_else(|| format!("{flag} needs a value"))?;
@@ -245,6 +272,14 @@ pub struct WorkloadArgs {
     /// Explicit offered-rate grid (ops/s); default derives from the
     /// slice-pipeline capacity.
     pub rates: Option<Vec<f64>>,
+    /// `--spans`: run one *observed* point per slice count (at the
+    /// first rate of the grid) and print the latency waterfall instead
+    /// of sweeping the whole grid.
+    pub spans: bool,
+    /// `--obs-out <path>`: write telemetry JSONL (first slice count).
+    pub obs_out: Option<String>,
+    /// `--json`: emit tables as JSON alongside the markdown.
+    pub json: bool,
     pub cfg: OpenLoopConfig,
 }
 
@@ -257,18 +292,29 @@ impl WorkloadArgs {
             theta: 0.99,
             classes: None,
             rates: None,
+            spans: false,
+            obs_out: None,
+            json: false,
             cfg: OpenLoopConfig { ops: fig_loadcurve::ops_for(scale), ..Default::default() },
         }
     }
 
-    /// Parse `--flag value` pairs (`--cached` is a bare flag); unknown
-    /// flags are errors.
+    /// Parse `--flag value` pairs (`--cached`, `--spans` and `--json`
+    /// are bare flags); unknown flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<WorkloadArgs, String> {
         let mut out = WorkloadArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
             if flag == "--cached" {
                 out.cfg.cached = true;
+                continue;
+            }
+            if flag == "--spans" {
+                out.spans = true;
+                continue;
+            }
+            if flag == "--json" {
+                out.json = true;
                 continue;
             }
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
@@ -345,6 +391,12 @@ impl WorkloadArgs {
                     out.cfg.arrivals = ArrivalKind::parse(val)
                         .ok_or_else(|| format!("bad arrival process {val:?}"))?;
                 }
+                "--obs-out" => {
+                    if val.is_empty() {
+                        return Err("--obs-out needs a file path".into());
+                    }
+                    out.obs_out = Some(val.clone());
+                }
                 "--seed" => {
                     out.cfg.seed = parse_seed(val)?;
                 }
@@ -402,6 +454,8 @@ pub struct FaultsArgs {
     pub knobs: FaultKnobs,
     /// Fixed offered rate; default derives from the slice pipeline.
     pub rate: Option<f64>,
+    /// `--json`: emit the table as JSON alongside the markdown.
+    pub json: bool,
     pub cfg: OpenLoopConfig,
 }
 
@@ -414,18 +468,23 @@ impl FaultsArgs {
             bers: fig_goodput::BER_SWEEP.to_vec(),
             knobs: FaultKnobs::default(),
             rate: None,
+            json: false,
             cfg: OpenLoopConfig { ops: fig_goodput::ops_for(scale), ..Default::default() },
         }
     }
 
-    /// Parse `--flag value` pairs (`--adaptive-rto` is a bare flag);
-    /// unknown flags are errors.
+    /// Parse `--flag value` pairs (`--adaptive-rto` and `--json` are
+    /// bare flags); unknown flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<FaultsArgs, String> {
         let mut out = FaultsArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
             if flag == "--adaptive-rto" {
                 out.knobs.adaptive_rto = true;
+                continue;
+            }
+            if flag == "--json" {
+                out.json = true;
                 continue;
             }
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
@@ -502,6 +561,8 @@ pub struct RetxArgs {
     pub knobs: FaultKnobs,
     /// Fixed offered rate; default derives from the slice pipeline.
     pub rate: Option<f64>,
+    /// `--json`: emit the table as JSON alongside the markdown.
+    pub json: bool,
     pub cfg: OpenLoopConfig,
 }
 
@@ -513,15 +574,21 @@ impl RetxArgs {
             bers: fig_retx::BER_SWEEP.to_vec(),
             knobs: FaultKnobs::default(),
             rate: None,
+            json: false,
             cfg: OpenLoopConfig { ops: fig_retx::ops_for(scale), ..Default::default() },
         }
     }
 
-    /// Parse `--flag value` pairs; unknown flags are errors.
+    /// Parse `--flag value` pairs (`--json` is a bare flag); unknown
+    /// flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<RetxArgs, String> {
         let mut out = RetxArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
+            if flag == "--json" {
+                out.json = true;
+                continue;
+            }
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
             match flag.as_str() {
                 "--ber" => {
@@ -567,6 +634,67 @@ impl RetxArgs {
     /// The offered rate of the sweep.
     pub fn rate(&self) -> f64 {
         self.rate.unwrap_or_else(|| fig_goodput::default_rate(self.cfg.machine.home_proc))
+    }
+}
+
+/// Parsed `eci bench selfperf` flags: the simulator's own host-side
+/// performance trajectory (`harness::selfperf`). Always runs the full
+/// pinned workload sizes — `ECI_SCALE` deliberately has no effect, so
+/// every measurement is comparable with the committed baseline.
+///
+/// ```text
+/// eci bench selfperf [--check BENCH_6.json] [--record BENCH_6.json]
+///                    [--tolerance 0.25] [--json]
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SelfperfArgs {
+    /// Compare against this baseline file; exit non-zero on a
+    /// regression beyond tolerance (calibrated baselines only).
+    pub check: Option<String>,
+    /// Write the measurement as a calibrated baseline to this path.
+    pub record: Option<String>,
+    /// Relative tolerance override for `--check`.
+    pub tolerance: Option<f64>,
+    /// `--json`: emit the measurement as JSON alongside the markdown.
+    pub json: bool,
+}
+
+impl SelfperfArgs {
+    /// Parse `--flag value` pairs (`--json` is a bare flag); unknown
+    /// flags are errors.
+    pub fn parse(args: &[String]) -> Result<SelfperfArgs, String> {
+        let mut out = SelfperfArgs::default();
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            if flag == "--json" {
+                out.json = true;
+                continue;
+            }
+            let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--check" => {
+                    if val.is_empty() {
+                        return Err("--check needs a baseline path".into());
+                    }
+                    out.check = Some(val.clone());
+                }
+                "--record" => {
+                    if val.is_empty() {
+                        return Err("--record needs a baseline path".into());
+                    }
+                    out.record = Some(val.clone());
+                }
+                "--tolerance" => {
+                    let t: f64 = val.parse().map_err(|_| format!("bad tolerance {val:?}"))?;
+                    if !(t > 0.0 && t < 1.0) {
+                        return Err(format!("--tolerance must be in (0, 1), got {val:?}"));
+                    }
+                    out.tolerance = Some(t);
+                }
+                other => return Err(format!("unknown selfperf flag {other:?}")),
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -668,18 +796,20 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
 /// quietly running the defaults), which green-washes misconfigured CI
 /// smoke steps exactly like an unknown bench id would.
 fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
-    if matches!(which, "dcs" | "workload" | "faults" | "retx") || rest.is_empty() {
+    if matches!(which, "dcs" | "workload" | "faults" | "retx" | "selfperf") || rest.is_empty() {
         return Ok(());
     }
     Err(format!(
-        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults` or `retx`)",
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults`, `retx` or `selfperf`)",
         rest.join(" ")
     ))
 }
 
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
-    const KNOWN: [&str; 10] =
-        ["table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx", "all"];
+    const KNOWN: [&str; 11] = [
+        "table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx",
+        "selfperf", "all",
+    ];
     if !KNOWN.contains(&which) {
         // a typo must fail loudly, not green-wash a CI smoke step
         eprintln!("eci bench: unknown bench {which:?} (have: {})", KNOWN.join(", "));
@@ -724,7 +854,11 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
             }
         };
         let f = fig_throughput::run_with_variants(a.cfg, &a.slices, &a.cached_slices, a.batch);
-        println!("{}", fig_throughput::render(&f).to_markdown());
+        let t = fig_throughput::render(&f);
+        println!("{}", t.to_markdown());
+        if a.json {
+            println!("{}", t.to_json().pretty());
+        }
     }
     if matches!(which, "workload" | "all") {
         let rest = if which == "workload" { rest } else { &[] };
@@ -742,16 +876,29 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
                 std::process::exit(2);
             }
         };
-        let f = fig_loadcurve::run_custom_with(
-            a.cfg,
-            &scenario,
-            &a.slices,
-            &a.cached_slices,
-            &a.rates(),
-        );
-        println!("{}", fig_loadcurve::render(&f).to_markdown());
-        println!("{}", fig_loadcurve::render_classes(&f).to_markdown());
-        println!("{}", fig_loadcurve::render_knees(&f).to_markdown());
+        if a.spans || a.obs_out.is_some() {
+            // observed mode: one point per slice count at the first
+            // rate of the grid, with span tracing / telemetry attached
+            run_workload_observed(&a, &scenario);
+        } else {
+            let f = fig_loadcurve::run_custom_with(
+                a.cfg,
+                &scenario,
+                &a.slices,
+                &a.cached_slices,
+                &a.rates(),
+            );
+            for t in [
+                fig_loadcurve::render(&f),
+                fig_loadcurve::render_classes(&f),
+                fig_loadcurve::render_knees(&f),
+            ] {
+                println!("{}", t.to_markdown());
+                if a.json {
+                    println!("{}", t.to_json().pretty());
+                }
+            }
+        }
     }
     if matches!(which, "faults" | "all") {
         let rest = if which == "faults" { rest } else { &[] };
@@ -773,7 +920,11 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
             a.knobs,
             a.rate(),
         );
-        println!("{}", fig_goodput::render(&f).to_markdown());
+        let t = fig_goodput::render(&f);
+        println!("{}", t.to_markdown());
+        if a.json {
+            println!("{}", t.to_json().pretty());
+        }
     }
     if matches!(which, "retx" | "all") {
         let rest = if which == "retx" { rest } else { &[] };
@@ -787,7 +938,105 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         let base = fig_loadcurve::footprint_for(scale);
         let scenario = Scenario::preset(&a.scenario, base, 0.99).expect("validated at parse");
         let f = fig_retx::run_custom_with(a.cfg, &scenario, &a.slices, &a.bers, a.knobs, a.rate());
-        println!("{}", fig_retx::render(&f).to_markdown());
+        let t = fig_retx::render(&f);
+        println!("{}", t.to_markdown());
+        if a.json {
+            println!("{}", t.to_json().pretty());
+        }
+    }
+    // deliberately NOT part of `all`: selfperf measures the host, not
+    // the modeled system, and its wall-clock numbers would add noise to
+    // a figure run
+    if which == "selfperf" {
+        let a = match SelfperfArgs::parse(rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench selfperf: {e}");
+                std::process::exit(2);
+            }
+        };
+        let points = selfperf::run();
+        println!("{}", selfperf::render(&points).to_markdown());
+        if a.json {
+            println!("{}", selfperf::to_json(&points, false).pretty());
+        }
+        if let Some(path) = &a.record {
+            let body = selfperf::to_json(&points, true).pretty() + "\n";
+            if let Err(e) = std::fs::write(path, body) {
+                eprintln!("eci bench selfperf: cannot write {path:?}: {e}");
+                std::process::exit(2);
+            }
+            println!("selfperf: recorded calibrated baseline -> {path}");
+        }
+        if let Some(path) = &a.check {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("eci bench selfperf: cannot read {path:?}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let base = match crate::obs::Json::parse(&text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("eci bench selfperf: bad baseline {path:?}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let r = selfperf::check(&points, &base, a.tolerance);
+            for l in &r.lines {
+                println!("selfperf: {l}");
+            }
+            if !r.pass {
+                eprintln!("eci bench selfperf: performance regression beyond tolerance");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `eci bench workload --spans [--obs-out <path>]`: one observed
+/// open-loop point per slice count at the first rate of the grid. The
+/// waterfall table decomposes the end-to-end latency into the six span
+/// stages; its `sum(stages)` row matches the `end_to_end` mean by
+/// construction (stages telescope). Telemetry JSONL (when requested)
+/// is written from the first slice count's run.
+fn run_workload_observed(a: &WorkloadArgs, scenario: &Scenario) {
+    use crate::harness::waterfall;
+    use crate::obs::ObsConfig;
+    let rate = a.rates()[0];
+    let ocfg = ObsConfig {
+        spans: a.spans,
+        span_sample_every: 8,
+        tick: a.obs_out.as_ref().map(|_| waterfall::DEFAULT_TICK),
+    };
+    let mut wrote_obs = false;
+    for &n in &a.slices {
+        let cfg = OpenLoopConfig { rate_per_s: rate, ..a.cfg };
+        let (r, obs) = waterfall::run_observed(cfg, scenario, n, &ocfg);
+        println!(
+            "workload observed: {} slice(s), rate {:.3e}/s, {} completed, e2e p50 {:.0} ns p99 {:.0} ns",
+            n,
+            rate,
+            r.completed,
+            r.p50_ns(),
+            r.p99_ns()
+        );
+        if let Some(w) = &obs.waterfall {
+            let t = waterfall::render(n, w);
+            println!("{}", t.to_markdown());
+            if a.json {
+                println!("{}", w.to_json().pretty());
+            }
+        }
+        if let (Some(path), false) = (&a.obs_out, wrote_obs) {
+            if let Err(e) = obs.write_jsonl(path) {
+                eprintln!("eci bench workload: cannot write {path:?}: {e}");
+                std::process::exit(2);
+            }
+            println!("workload observed: telemetry ({} records) -> {path}", obs.jsonl.len());
+            wrote_obs = true;
+        }
     }
 }
 
@@ -895,8 +1144,60 @@ mod tests {
         assert!(bench_rejects_flags("workload", &s(&["--cached-slices", "2"])).is_ok());
         assert!(bench_rejects_flags("faults", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("retx", &s(&["--ber", "1e-3"])).is_ok());
+        assert!(bench_rejects_flags("selfperf", &s(&["--check", "b.json"])).is_ok());
         assert!(bench_rejects_flags("table3", &[]).is_ok());
         assert!(bench_rejects_flags("all", &[]).is_ok());
+    }
+
+    #[test]
+    fn json_flag_parses_on_every_table_bench() {
+        assert!(DcsArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
+        assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
+        assert!(FaultsArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
+        assert!(RetxArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
+        assert!(!DcsArgs::defaults(Scale::Ci).json, "json is opt-in");
+        // bare flag composes with valued flags on either side
+        let a = DcsArgs::parse(Scale::Ci, &s(&["--slices", "2", "--json", "--ops", "100"])).unwrap();
+        assert!(a.json);
+        assert_eq!(a.slices, vec![2]);
+        assert_eq!(a.cfg.ops, 100);
+    }
+
+    #[test]
+    fn workload_observability_flags() {
+        let a = WorkloadArgs::parse(
+            Scale::Ci,
+            &s(&["--spans", "--obs-out", "run.jsonl", "--slices", "2"]),
+        )
+        .unwrap();
+        assert!(a.spans);
+        assert_eq!(a.obs_out.as_deref(), Some("run.jsonl"));
+        assert_eq!(a.slices, vec![2]);
+        let d = WorkloadArgs::defaults(Scale::Ci);
+        assert!(!d.spans && d.obs_out.is_none(), "observed mode is opt-in");
+        assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--obs-out"])).is_err(), "missing path");
+        assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--obs-out", ""])).is_err(), "empty path");
+    }
+
+    #[test]
+    fn selfperf_parses_and_rejects() {
+        let a = SelfperfArgs::parse(&s(&[
+            "--check", "BENCH_6.json",
+            "--tolerance", "0.3",
+            "--json",
+        ]))
+        .unwrap();
+        assert_eq!(a.check.as_deref(), Some("BENCH_6.json"));
+        assert_eq!(a.tolerance, Some(0.3));
+        assert!(a.json && a.record.is_none());
+        let a = SelfperfArgs::parse(&s(&["--record", "b.json"])).unwrap();
+        assert_eq!(a.record.as_deref(), Some("b.json"));
+        assert_eq!(SelfperfArgs::parse(&[]).unwrap(), SelfperfArgs::default());
+        assert!(SelfperfArgs::parse(&s(&["--tolerance", "0"])).is_err(), "zero tolerance");
+        assert!(SelfperfArgs::parse(&s(&["--tolerance", "1.5"])).is_err(), "tolerance >= 1");
+        assert!(SelfperfArgs::parse(&s(&["--check"])).is_err(), "missing value");
+        assert!(SelfperfArgs::parse(&s(&["--check", ""])).is_err(), "empty path");
+        assert!(SelfperfArgs::parse(&s(&["--wat", "1"])).is_err(), "unknown flag");
     }
 
     #[test]

@@ -484,6 +484,19 @@ impl Dcs {
         c.add("ingress_batched_frames", self.batcher.frames);
         c
     }
+
+    /// Publish instantaneous queue-depth gauges into an obs registry:
+    /// total pending plus per-slice FIFO depth and staged-batch backlog
+    /// (the telemetry ticker's view of directory congestion).
+    pub fn observe_gauges(&self, ns: &str, reg: &mut crate::obs::Registry) {
+        reg.gauge(&format!("{ns}.pending"), self.pending() as f64);
+        for (i, s) in self.slices.iter().enumerate() {
+            reg.gauge(&format!("{ns}.slice{i}.depth"), s.mux.pending() as f64);
+            if self.batcher.batch_size() > 1 {
+                reg.gauge(&format!("{ns}.slice{i}.staged"), self.batcher.pending(i) as f64);
+            }
+        }
+    }
 }
 
 /// Max-over-mean of a load vector (1.0 = balanced; degenerate inputs —

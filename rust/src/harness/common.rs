@@ -76,6 +76,36 @@ impl ResultTable {
         }
         s
     }
+
+    /// Machine-readable form (`eci bench <id> --json`): rows become
+    /// objects keyed by the header; numeric-looking cells become
+    /// numbers.
+    pub fn to_json(&self) -> crate::obs::Json {
+        use crate::obs::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.header
+                        .iter()
+                        .zip(r)
+                        .map(|(h, cell)| {
+                            let v = match cell.parse::<f64>() {
+                                Ok(n) if n.is_finite() => Json::Num(n),
+                                _ => Json::s(cell),
+                            };
+                            (h.clone(), v)
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::Obj(vec![
+            ("title".to_string(), Json::s(&self.title)),
+            ("rows".to_string(), Json::Arr(rows)),
+        ])
+    }
 }
 
 pub fn fmt_rate(v: f64) -> String {
@@ -102,6 +132,11 @@ mod tests {
         assert!(md.contains("| a | b |"));
         assert!(md.contains("| 1 | 2 |"));
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+        let j = t.to_json();
+        assert_eq!(j.get("title").and_then(|v| v.as_str()), Some("demo"));
+        let rows = j.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("a").and_then(|v| v.as_f64()), Some(1.0));
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod fig_goodput;
 pub mod fig_loadcurve;
 pub mod fig_retx;
 pub mod fig_throughput;
+pub mod selfperf;
 pub mod table2;
 pub mod table3;
+pub mod waterfall;
 
 pub use common::{fmt_rate, ResultTable, Scale};

@@ -1,0 +1,283 @@
+//! Selfperf: the simulator's *own* performance trajectory.
+//!
+//! Every other harness measures the modeled system; this one measures
+//! the host — wall-clock simulated-operations/sec and events/sec on
+//! four pinned configurations (fixed seeds, fixed op counts, fixed
+//! machine shapes), so optimization work on the simulator has a
+//! recorded baseline to regress against (`BENCH_6.json`).
+//!
+//! The baseline file carries a `calibrated` flag. A freshly seeded (or
+//! placeholder) baseline has `calibrated: false`: `--check` then only
+//! *warns*, because wall-clock numbers are machine-specific and a
+//! baseline recorded on one host is noise on another. `--record` on the
+//! reference machine writes `calibrated: true`, after which `--check`
+//! fails hard on any config whose events/sec drops more than the
+//! tolerance below baseline (and warns on improvements beyond it, a
+//! hint to re-record).
+
+use std::time::Instant;
+
+use crate::agents::dram::MemStore;
+use crate::machine::{map, Machine, MachineConfig, Workload};
+use crate::obs::Json;
+use crate::proto::messages::{LineAddr, LINE_BYTES};
+use crate::transport::{FaultConfig, FaultSpec, RelConfig, RelMode};
+use crate::workload::openloop::{self, OpenLoopConfig};
+use crate::workload::scenario::Scenario;
+
+use super::common::{fmt_rate, ResultTable};
+
+/// Baseline schema version (bump on incompatible changes).
+pub const VERSION: u64 = 1;
+/// Default relative tolerance of the regression gate.
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Pinned workload sizes (full scale; tests shrink via [`run_with`]).
+const STREAM_LINES: u64 = 100_000;
+const STREAM_THREADS: usize = 8;
+const OPENLOOP_OPS: u64 = 30_000;
+const OPENLOOP_SLICES: usize = 2;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct SelfperfPoint {
+    pub name: String,
+    /// Simulated operations completed (deterministic given the seed).
+    pub sim_ops: u64,
+    /// Simulator events dispatched (deterministic given the seed).
+    pub events: u64,
+    /// Host wall-clock seconds for the measured run.
+    pub wall_s: f64,
+    pub ops_per_s: f64,
+    pub events_per_s: f64,
+}
+
+fn measure(name: &str, mut run: impl FnMut() -> (u64, u64)) -> SelfperfPoint {
+    let t0 = Instant::now();
+    let (sim_ops, events) = run();
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    SelfperfPoint {
+        name: name.to_string(),
+        sim_ops,
+        events,
+        wall_s,
+        ops_per_s: sim_ops as f64 / wall_s,
+        events_per_s: events as f64 / wall_s,
+    }
+}
+
+fn stream_machine(mk: impl Fn(MachineConfig, MemStore, MemStore) -> Machine, lines: u64) -> (u64, u64) {
+    let cfg = MachineConfig::enzian_eci();
+    let region_bytes = (lines as usize + 1024) * LINE_BYTES;
+    let fpga = MemStore::new(map::TABLE_BASE, region_bytes);
+    let cpu = MemStore::new(LineAddr(0), 1 << 20);
+    let mut m = mk(cfg, fpga, cpu);
+    m.set_workload(Workload::StreamRemote { lines }, STREAM_THREADS);
+    let r = m.run();
+    (lines, r.events)
+}
+
+/// The faulted selective-repeat transport configuration (the same
+/// fault profile as the loss-transparency tests: BER 1e-4, 2% drops,
+/// 2% reorders, seed 7).
+fn faulted_sr_config(ops: u64) -> OpenLoopConfig {
+    let spec = FaultSpec { ber: 1e-4, drop: 0.02, reorder: 0.02, burst_len: 1.0 };
+    let mut rel = RelConfig::new(FaultConfig::new(spec, 7));
+    rel.mode = RelMode::SelectiveRepeat;
+    rel.adaptive_rto = true;
+    let mut machine = MachineConfig::enzian_eci();
+    machine.rel = Some(rel);
+    OpenLoopConfig { ops, machine, ..Default::default() }
+}
+
+fn openloop_faulted(ops: u64) -> (u64, u64) {
+    let cfg = faulted_sr_config(ops);
+    let scenario = Scenario::preset("scan", 1 << 12, 0.99).expect("scan preset");
+    let r = openloop::run(cfg, &scenario, OPENLOOP_SLICES);
+    (r.completed, r.events)
+}
+
+/// Run the four pinned configurations at `scale` (1.0 = full; tests use
+/// a small fraction). Workload sizes scale; seeds and shapes do not.
+pub fn run_with(scale: f64) -> Vec<SelfperfPoint> {
+    let lines = ((STREAM_LINES as f64 * scale) as u64).max(256);
+    let ops = ((OPENLOOP_OPS as f64 * scale) as u64).max(256);
+    vec![
+        measure("memory_node", || stream_machine(Machine::memory_node, lines)),
+        measure("dcs", || {
+            stream_machine(|c, f, m| Machine::dcs_node(c, OPENLOOP_SLICES, f, m), lines)
+        }),
+        measure("dcs_cached", || {
+            stream_machine(|c, f, m| Machine::dcs_cached_node(c, OPENLOOP_SLICES, f, m), lines)
+        }),
+        measure("faulted_sr", || openloop_faulted(ops)),
+    ]
+}
+
+/// The full-scale trajectory measurement (`eci bench selfperf`).
+pub fn run() -> Vec<SelfperfPoint> {
+    run_with(1.0)
+}
+
+pub fn render(points: &[SelfperfPoint]) -> ResultTable {
+    let mut t = ResultTable::new(
+        "Selfperf: simulator host throughput (pinned configs, fixed seeds)",
+        &["config", "sim ops", "events", "wall s", "ops/s", "events/s"],
+    );
+    for p in points {
+        t.row(vec![
+            p.name.clone(),
+            p.sim_ops.to_string(),
+            p.events.to_string(),
+            format!("{:.3}", p.wall_s),
+            fmt_rate(p.ops_per_s),
+            fmt_rate(p.events_per_s),
+        ]);
+    }
+    t
+}
+
+/// Serialize a measurement as a baseline file body.
+pub fn to_json(points: &[SelfperfPoint], calibrated: bool) -> Json {
+    let configs = points
+        .iter()
+        .map(|p| {
+            Json::Obj(vec![
+                ("name".into(), Json::s(&p.name)),
+                ("sim_ops".into(), Json::u(p.sim_ops)),
+                ("events".into(), Json::u(p.events)),
+                ("ops_per_s".into(), Json::f(p.ops_per_s)),
+                ("events_per_s".into(), Json::f(p.events_per_s)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("version".into(), Json::u(VERSION)),
+        ("calibrated".into(), Json::Bool(calibrated)),
+        ("tolerance".into(), Json::f(DEFAULT_TOLERANCE)),
+        ("configs".into(), Json::Arr(configs)),
+    ])
+}
+
+/// Outcome of a `--check` run.
+#[derive(Debug)]
+pub struct CheckReport {
+    pub pass: bool,
+    pub lines: Vec<String>,
+}
+
+/// Compare a measurement against a baseline. Regressions (events/sec
+/// below `1 - tolerance` of baseline) fail only when the baseline is
+/// calibrated; improvements beyond `1 + tolerance` and uncalibrated
+/// baselines produce warnings.
+pub fn check(points: &[SelfperfPoint], baseline: &Json, tolerance: Option<f64>) -> CheckReport {
+    let calibrated = baseline.get("calibrated").and_then(|v| v.as_bool()).unwrap_or(false);
+    let tol = tolerance
+        .or_else(|| baseline.get("tolerance").and_then(|v| v.as_f64()))
+        .unwrap_or(DEFAULT_TOLERANCE);
+    let empty = Vec::new();
+    let configs = baseline.get("configs").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let mut lines = Vec::new();
+    let mut pass = true;
+    if !calibrated {
+        lines.push(
+            "baseline is uncalibrated (placeholder): reporting only — record with \
+             `eci bench selfperf --record <path>` on the reference machine"
+                .to_string(),
+        );
+    }
+    for p in points {
+        let base = configs
+            .iter()
+            .find(|c| c.get("name").and_then(|v| v.as_str()) == Some(p.name.as_str()));
+        let Some(base) = base else {
+            lines.push(format!("{}: no baseline entry (new config?)", p.name));
+            continue;
+        };
+        let base_eps = base.get("events_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if base_eps <= 0.0 {
+            lines.push(format!("{}: baseline has no rate recorded", p.name));
+            continue;
+        }
+        let ratio = p.events_per_s / base_eps;
+        if ratio < 1.0 - tol {
+            if calibrated {
+                pass = false;
+                lines.push(format!(
+                    "{}: REGRESSION {:.2}x baseline events/s ({} vs {})",
+                    p.name,
+                    ratio,
+                    fmt_rate(p.events_per_s),
+                    fmt_rate(base_eps)
+                ));
+            } else {
+                lines.push(format!(
+                    "{}: {:.2}x baseline events/s (uncalibrated — not failing)",
+                    p.name, ratio
+                ));
+            }
+        } else if ratio > 1.0 + tol {
+            lines.push(format!(
+                "{}: improvement {:.2}x baseline events/s — consider re-recording",
+                p.name, ratio
+            ));
+        } else {
+            lines.push(format!("{}: ok ({:.2}x baseline events/s)", p.name, ratio));
+        }
+    }
+    CheckReport { pass, lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_pinned_configs_measure_and_serialize() {
+        let points = run_with(0.01);
+        assert_eq!(points.len(), 4);
+        let names: Vec<&str> = points.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["memory_node", "dcs", "dcs_cached", "faulted_sr"]);
+        for p in &points {
+            assert!(p.sim_ops > 0, "{}: no ops", p.name);
+            assert!(p.events > 0, "{}: no events", p.name);
+            assert!(p.ops_per_s > 0.0 && p.events_per_s > 0.0, "{}: no rate", p.name);
+        }
+        let j = to_json(&points, false);
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("version").and_then(|v| v.as_u64()), Some(VERSION));
+        assert_eq!(back.get("calibrated").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(back.get("configs").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+        let md = render(&points).to_markdown();
+        assert!(md.contains("events/s") && md.contains("faulted_sr"));
+    }
+
+    #[test]
+    fn check_gates_on_calibration_and_tolerance() {
+        let points = run_with(0.01);
+        // self-recorded calibrated baseline: everything within band
+        let base = to_json(&points, true);
+        let r = check(&points, &base, Some(0.25));
+        assert!(r.pass, "self-check must pass: {:?}", r.lines);
+        // a calibrated baseline 10x faster than us: hard failure
+        let mut fast = points.clone();
+        for p in &mut fast {
+            p.events_per_s *= 10.0;
+        }
+        let r = check(&points, &to_json(&fast, true), Some(0.25));
+        assert!(!r.pass, "10x regression must fail");
+        assert!(r.lines.iter().any(|l| l.contains("REGRESSION")));
+        // the same gap against an *uncalibrated* baseline: warn, pass
+        let r = check(&points, &to_json(&fast, false), Some(0.25));
+        assert!(r.pass, "uncalibrated baseline must not fail: {:?}", r.lines);
+        assert!(r.lines.iter().any(|l| l.contains("uncalibrated")));
+        // an improvement beyond band: warn, pass
+        let mut slow = points.clone();
+        for p in &mut slow {
+            p.events_per_s /= 10.0;
+        }
+        let r = check(&points, &to_json(&slow, true), Some(0.25));
+        assert!(r.pass);
+        assert!(r.lines.iter().any(|l| l.contains("re-recording")));
+    }
+}

@@ -1,0 +1,97 @@
+//! Latency waterfall: where a request's time goes, stage by stage.
+//!
+//! `eci bench workload --spans` runs one observed open-loop point per
+//! slice count and decomposes the end-to-end latency of sampled
+//! transactions into the six lifecycle intervals tracked by
+//! [`crate::obs::span`] — ingress wait, wire transit, slice queueing,
+//! home service, memory backend, reply delivery. The stages telescope:
+//! per-span they sum exactly to the end-to-end time, so the rendered
+//! table carries a `sum(stages)` row that must (and does) match the
+//! `end_to_end` row's mean to float precision — the acceptance check
+//! for the span plumbing itself.
+
+use crate::obs::{ObsConfig, ObsReport, Waterfall};
+use crate::sim::time::Duration;
+use crate::workload::openloop::{OpenLoop, OpenLoopConfig, OpenLoopReport};
+use crate::workload::scenario::Scenario;
+
+use super::common::ResultTable;
+
+/// Default telemetry snapshot interval for `--obs-out`.
+pub const DEFAULT_TICK: Duration = Duration::from_us(10);
+
+/// One observed open-loop run at a fixed slice count.
+pub fn run_observed(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    ocfg: &ObsConfig,
+) -> (OpenLoopReport, ObsReport) {
+    OpenLoop::new(cfg, scenario, slices).with_obs(ocfg).run_observed()
+}
+
+/// Render one configuration's waterfall as a table: one row per stage,
+/// then the stage sum, then the end-to-end distribution it must match.
+pub fn render(slices: usize, w: &Waterfall) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!(
+            "Latency waterfall, {slices} slice(s) — {} sampled / {} completed spans \
+             ({} retransmit episodes, {} incomplete)",
+            w.sampled, w.completed, w.retx_episodes, w.incomplete
+        ),
+        &["stage", "count", "mean ns", "p50 ns", "p99 ns"],
+    );
+    for r in &w.rows {
+        t.row(vec![
+            r.stage.to_string(),
+            r.count.to_string(),
+            format!("{:.1}", r.mean_ns),
+            format!("{:.1}", r.p50_ns),
+            format!("{:.1}", r.p99_ns),
+        ]);
+    }
+    t.row(vec![
+        "sum(stages)".into(),
+        w.completed.to_string(),
+        format!("{:.1}", w.stage_mean_sum_ns()),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "end_to_end".into(),
+        w.e2e.count.to_string(),
+        format!("{:.1}", w.e2e.mean_ns),
+        format!("{:.1}", w.e2e.p50_ns),
+        format!("{:.1}", w.e2e.p99_ns),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observed_point_renders_a_consistent_waterfall() {
+        let cfg = OpenLoopConfig { ops: 600, ..Default::default() };
+        let scenario = Scenario::preset("scan", 1 << 10, 0.99).unwrap();
+        let ocfg = ObsConfig::with_spans();
+        let (r, obs) = run_observed(cfg, &scenario, 2, &ocfg);
+        assert_eq!(r.completed, 600);
+        let w = obs.waterfall.expect("spans were on");
+        assert!(w.completed > 0);
+        assert_eq!(w.rows.len(), crate::obs::STAGE_NAMES.len());
+        let t = render(2, &w);
+        // stage rows + sum row + end-to-end row
+        assert_eq!(t.rows.len(), w.rows.len() + 2);
+        let md = t.to_markdown();
+        assert!(md.contains("home_service") && md.contains("end_to_end"));
+        // the telescoping invariant, as rendered
+        let sum = w.stage_mean_sum_ns();
+        assert!(
+            (sum - w.e2e.mean_ns).abs() <= 1e-6 * w.e2e.mean_ns.max(1.0),
+            "stage means {sum} do not telescope to e2e {}",
+            w.e2e.mean_ns
+        );
+    }
+}

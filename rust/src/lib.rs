@@ -9,8 +9,9 @@
 //!   models ([`agents`], [`machine`]), the sharded directory and its
 //!   traffic generators ([`dcs`], [`workload`]), the smart memory
 //!   controller and its operators ([`memctl`], [`operators`]), the
-//!   trace/verification toolkit ([`trace`]), and the experiment harness
-//!   ([`harness`]).
+//!   trace/verification toolkit ([`trace`]), the runtime observability
+//!   layer ([`obs`] — span tracing, telemetry, JSON export), and the
+//!   experiment harness ([`harness`]).
 //! * **Layer 2/1 (build-time Python)** — the operators' compute hot paths
 //!   as JAX + Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust through [`runtime`] (PJRT CPU client). Python is never on the
@@ -27,6 +28,7 @@ pub mod dcs;
 pub mod harness;
 pub mod machine;
 pub mod memctl;
+pub mod obs;
 pub mod operators;
 pub mod proto;
 pub mod ptest;

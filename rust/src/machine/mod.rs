@@ -21,6 +21,8 @@ use crate::agents::dram::{Dram, MemStore};
 use crate::agents::home::{HomeAgent, HomeEffect};
 use crate::agents::remote::{RemoteAgent, RemoteEffect};
 use crate::dcs::{Dcs, SliceService};
+use crate::obs::{Obs, ObsConfig, ObsReport, Registry};
+use crate::trace::checker::OnlineChecker;
 use crate::memctl::{ComputeRegion, ConfigBlock, FifoServer, KvsService};
 use crate::proto::messages::{CohOp, Line, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{generate_home, generate_remote, HomePolicy};
@@ -297,6 +299,14 @@ pub struct Machine {
     /// Message tap for the trace toolkit: called for every delivered
     /// message with (time, to_fpga, message).
     pub tap: Option<Box<dyn FnMut(Time, bool, &Message)>>,
+    /// Online protocol checker ([`crate::trace::checker`]): observes
+    /// every delivered message; its accept/violation counts surface in
+    /// [`Machine::report`] and the telemetry registry.
+    pub checker: Option<OnlineChecker>,
+    /// Runtime observability (telemetry ticker + metric registry);
+    /// passive — never schedules events. Attach with
+    /// [`Machine::attach_obs`], collect with [`Machine::finish_obs`].
+    obs: Option<Obs>,
 }
 
 impl Machine {
@@ -359,7 +369,21 @@ impl Machine {
             rows_scanned: 0,
             verify_fill: None,
             tap: None,
+            checker: None,
+            obs: None,
         }
+    }
+
+    /// Attach runtime observability. On the machine only the ticker and
+    /// registry are meaningful (span tracing lives in the workload
+    /// engine, where the request lifecycle is visible end to end).
+    pub fn attach_obs(&mut self, ocfg: &ObsConfig) {
+        self.obs = ocfg.enabled().then(|| Obs::new(ocfg));
+    }
+
+    /// Install the online protocol checker on the delivery tap point.
+    pub fn attach_checker(&mut self, checker: OnlineChecker) {
+        self.checker = Some(checker);
     }
 
     /// A machine whose FPGA is a plain (full-protocol) home memory node.
@@ -458,6 +482,7 @@ impl Machine {
                 }
                 other => self.dispatch(other),
             }
+            self.obs_tick();
         }
         self.report()
     }
@@ -480,7 +505,62 @@ impl Machine {
                 Ev::CoreNext(_) => {}
                 other => self.dispatch(other),
             }
+            self.obs_tick();
         }
+    }
+
+    /// Emit a telemetry record if one is due (piggybacks on the event
+    /// loop — obs never schedules events of its own, so runs with the
+    /// ticker on and off are event-for-event identical).
+    fn obs_tick(&mut self) {
+        let now = self.eng.now();
+        if !self.obs.as_ref().is_some_and(|o| o.tick_due(now)) {
+            return;
+        }
+        let mut obs = self.obs.take().expect("checked above");
+        self.refresh_registry(&mut obs.registry);
+        obs.tick(now);
+        self.obs = Some(obs);
+    }
+
+    /// Snapshot every counter surface and live queue depth into the
+    /// unified registry (dotted names; see DESIGN.md §obs).
+    fn refresh_registry(&self, reg: &mut Registry) {
+        reg.absorb("machine", &self.counters);
+        reg.set("machine.results", self.results);
+        reg.set("machine.rows_scanned", self.rows_scanned);
+        reg.set("machine.events", self.eng.dispatched);
+        reg.set("machine.llc_hits", self.llc.hits);
+        reg.set("machine.llc_misses", self.llc.misses);
+        if let FpgaApp::Dcs(dcs) = &self.app {
+            reg.absorb("dcs", &dcs.counters());
+            dcs.observe_gauges("dcs", reg);
+            reg.gauge("dcs.ingress_peak", self.dcs_ingress_peak as f64);
+        }
+        reg.gauge("link.to_fpga.queued", self.to_fpga.mux.pending() as f64);
+        reg.gauge("link.to_cpu.queued", self.to_cpu.mux.pending() as f64);
+        reg.gauge("link.to_fpga.unacked", self.to_fpga.rel_unacked() as f64);
+        reg.gauge("link.to_cpu.unacked", self.to_cpu.rel_unacked() as f64);
+        if let Some(rel) = self.to_fpga.rel.as_ref() {
+            let mut s = rel.stats();
+            if let Some(r2) = self.to_cpu.rel.as_ref() {
+                s.merge(&r2.stats());
+            }
+            reg.absorb_rel("rel", &s);
+        }
+        if let Some(ck) = self.checker.as_ref() {
+            reg.set("checker.messages_checked", ck.messages_checked);
+            reg.set("checker.violations", ck.violations.len() as u64);
+        }
+    }
+
+    /// Take the observability report (final registry refresh + closing
+    /// telemetry record). Panics if no obs was attached.
+    pub fn finish_obs(&mut self) -> ObsReport {
+        let mut obs = self.obs.take().expect("attach obs with attach_obs first");
+        self.refresh_registry(&mut obs.registry);
+        obs.tick(self.eng.now());
+        obs.finish()
     }
 
     pub fn report(&self) -> Report {
@@ -497,6 +577,10 @@ impl Machine {
                 s.merge(&r2.stats());
             }
             s.add_to(&mut counters);
+        }
+        if let Some(ck) = self.checker.as_ref() {
+            counters.add("checker_messages", ck.messages_checked);
+            counters.add("checker_violations", ck.violations.len() as u64);
         }
         Report {
             sim_time: self.eng.now(),
@@ -996,6 +1080,9 @@ impl Machine {
             let msg = f.msg;
             if let Some(tap) = self.tap.as_mut() {
                 tap(now, dir == 0, &msg);
+            }
+            if let Some(ck) = self.checker.as_mut() {
+                ck.observe(now, &msg);
             }
             // Receiver consumed the frame: its buffer slot flows back —
             // with one exception. A coherence message bound for the

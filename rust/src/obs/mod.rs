@@ -1,0 +1,185 @@
+//! End-to-end observability: span tracing, time-series telemetry, and
+//! machine-readable export.
+//!
+//! The paper's §4.1 toolkit (trace capture, dissector, online checker)
+//! makes the *protocol* observable; this module does the same for the
+//! *simulator's own runtime*. Three parts:
+//!
+//! - [`span`]: sampled per-transaction lifecycle tracking feeding
+//!   per-stage histograms — the latency waterfall
+//!   (`eci bench workload --spans`).
+//! - [`ticker`] + [`registry`]: a simulated-time ticker snapshotting
+//!   counter deltas and gauges into JSON-lines (`--obs-out run.jsonl`)
+//!   via a unified metric registry with stable dotted names.
+//! - [`json`]: the dependency-free serializer/parser behind every
+//!   machine-readable artifact (JSONL, `--json` tables, selfperf
+//!   baselines).
+//!
+//! The cardinal rule, enforced by `tests/obs_transparency.rs`: obs is
+//! *passive*. It owns no RNG, schedules no events, and only reads
+//! simulation state — runs with observability on and off produce
+//! identical settled digests and identical observables.
+
+pub mod json;
+pub mod registry;
+pub mod span;
+pub mod ticker;
+
+pub use json::Json;
+pub use registry::Registry;
+pub use span::{SpanTracer, Stage, Waterfall, WaterfallRow, STAGE_NAMES};
+pub use ticker::Ticker;
+
+use crate::sim::time::{Duration, Time};
+
+/// What to observe. Deliberately *not* part of the simulation configs
+/// (which are `Copy` and digest-relevant); hosts carry an `Option<Obs>`
+/// alongside their state instead.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// Enable sampled span tracing.
+    pub spans: bool,
+    /// Trace every N-th issued transaction (0/1 = all).
+    pub span_sample_every: u32,
+    /// Telemetry snapshot interval in simulated time (`None` = off).
+    pub tick: Option<Duration>,
+}
+
+impl ObsConfig {
+    /// Span tracing at the default 1-in-8 sampling rate.
+    pub fn with_spans() -> ObsConfig {
+        ObsConfig { spans: true, span_sample_every: 8, ..ObsConfig::default() }
+    }
+
+    /// Telemetry ticker at the given simulated-time interval.
+    pub fn with_tick(every: Duration) -> ObsConfig {
+        ObsConfig { tick: Some(every), ..ObsConfig::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.spans || self.tick.is_some()
+    }
+}
+
+/// Live observability state a host carries while running.
+pub struct Obs {
+    pub registry: Registry,
+    pub spans: Option<SpanTracer>,
+    pub ticker: Option<Ticker>,
+}
+
+impl Obs {
+    pub fn new(cfg: &ObsConfig) -> Obs {
+        Obs {
+            registry: Registry::new(),
+            spans: cfg.spans.then(|| SpanTracer::new(cfg.span_sample_every.max(1))),
+            ticker: cfg.tick.map(Ticker::new),
+        }
+    }
+
+    /// Fast-path check: should the host refresh the registry and tick
+    /// now? Keeps the per-event overhead to one comparison when no
+    /// snapshot is due.
+    #[inline]
+    pub fn tick_due(&self, now: Time) -> bool {
+        self.ticker.as_ref().is_some_and(|t| t.due(now))
+    }
+
+    /// Emit a telemetry record (the host refreshes the registry first).
+    pub fn tick(&mut self, now: Time) {
+        if let Some(t) = &mut self.ticker {
+            t.tick(now, &mut self.registry);
+        }
+    }
+
+    /// Seal in-flight spans and produce the final report.
+    pub fn finish(mut self) -> ObsReport {
+        if let Some(sp) = &mut self.spans {
+            sp.seal();
+        }
+        ObsReport {
+            waterfall: self.spans.as_ref().map(|s| s.waterfall()),
+            jsonl: self.ticker.map(Ticker::into_lines).unwrap_or_default(),
+            registry: self.registry,
+        }
+    }
+}
+
+/// Everything observability collected over one run.
+pub struct ObsReport {
+    /// Latency waterfall (present when span tracing was on).
+    pub waterfall: Option<Waterfall>,
+    /// Telemetry JSONL records (present when the ticker was on).
+    pub jsonl: Vec<String>,
+    /// Final registry snapshot.
+    pub registry: Registry,
+}
+
+impl ObsReport {
+    /// Write the telemetry records to a JSONL file.
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::new();
+        for line in &self.jsonl {
+            out.push_str(line);
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+    }
+
+    /// Machine-readable summary: registry dump plus waterfall.
+    pub fn to_json(&self) -> Json {
+        let mut members = vec![("registry".to_string(), self.registry.to_json())];
+        if let Some(w) = &self.waterfall {
+            members.push(("waterfall".to_string(), w.to_json()));
+        }
+        members.push(("telemetry_records".to_string(), Json::u(self.jsonl.len() as u64)));
+        Json::Obj(members)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_gates_components() {
+        let off = Obs::new(&ObsConfig::default());
+        assert!(off.spans.is_none() && off.ticker.is_none());
+        assert!(!ObsConfig::default().enabled());
+
+        let spans = Obs::new(&ObsConfig::with_spans());
+        assert!(spans.spans.is_some() && spans.ticker.is_none());
+
+        let tick = Obs::new(&ObsConfig::with_tick(Duration::from_ns(500)));
+        assert!(tick.spans.is_none() && tick.ticker.is_some());
+        assert!(ObsConfig::with_tick(Duration::from_ns(500)).enabled());
+    }
+
+    #[test]
+    fn finish_seals_spans_and_reports() {
+        let mut obs = Obs::new(&ObsConfig { spans: true, span_sample_every: 1, tick: None });
+        let sp = obs.spans.as_mut().unwrap();
+        sp.on_issue(Time(0), 1);
+        sp.mark(Time(1_000), 1, Stage::Launch);
+        // never completed -> sealed as incomplete
+        let report = obs.finish();
+        let w = report.waterfall.unwrap();
+        assert_eq!(w.sampled, 1);
+        assert_eq!(w.completed, 0);
+        assert_eq!(w.incomplete, 1);
+        assert!(report.jsonl.is_empty());
+    }
+
+    #[test]
+    fn tick_due_fast_path() {
+        let mut obs = Obs::new(&ObsConfig::with_tick(Duration::from_ns(100)));
+        assert!(obs.tick_due(Time(0)));
+        obs.registry.set("m.x", 1);
+        obs.tick(Time(0));
+        assert!(!obs.tick_due(Time(50_000)));
+        assert!(obs.tick_due(Time(100_000)));
+        let report = obs.finish();
+        assert_eq!(report.jsonl.len(), 1);
+        assert_eq!(report.to_json().get("telemetry_records").and_then(|v| v.as_u64()), Some(1));
+    }
+}

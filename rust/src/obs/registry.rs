@@ -1,0 +1,215 @@
+//! Unified metric registry with stable, namespaced names.
+//!
+//! Before this module the simulator had three ad-hoc counter surfaces —
+//! [`crate::sim::stats::Counters`] blocks on the machine/workload,
+//! [`crate::transport::rel::RelStats`] snapshots per link direction, and
+//! per-slice dcs stats — each with its own key scheme. The registry
+//! absorbs all of them under dotted names (`machine.*`, `workload.*`,
+//! `dcs.*`, `rel.*`, `checker.*`, `ingress.*`) so the telemetry ticker,
+//! the `--json` emitters, and future QoS triggers read one surface.
+//!
+//! Absorption is *snapshot-style*: sources keep owning their counters and
+//! the host re-absorbs current values whenever a consumer needs them
+//! (`set` overwrites). Counters are monotone u64s; gauges are
+//! instantaneous f64s (queue depths, credit occupancy, effective RTO).
+//! The registry is purely passive — it never touches simulation state,
+//! holds no RNG, and schedules no events, which is what the obs
+//! transparency gate relies on.
+
+use std::collections::BTreeMap;
+
+use crate::sim::stats::Counters;
+use crate::transport::RelStats;
+
+use super::json::Json;
+
+#[derive(Default, Clone)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    /// Counter values at the last `deltas()` call (ticker baselines).
+    last: BTreeMap<String, u64>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Set a counter to its current absolute value.
+    pub fn set(&mut self, name: &str, v: u64) {
+        match self.counters.get_mut(name) {
+            Some(slot) => *slot = v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Set an instantaneous gauge.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(slot) => *slot = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn get_gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+
+    /// Absorb a [`Counters`] block under `ns.`-prefixed names.
+    pub fn absorb(&mut self, ns: &str, c: &Counters) {
+        for (k, v) in c.iter() {
+            self.set(&format!("{ns}.{k}"), v);
+        }
+    }
+
+    /// Absorb a reliability snapshot: monotone fields become counters,
+    /// instantaneous estimates (srtt/rto) and high-water marks become
+    /// gauges under the same namespace.
+    pub fn absorb_rel(&mut self, ns: &str, s: &RelStats) {
+        self.set(&format!("{ns}.sent"), s.sent);
+        self.set(&format!("{ns}.sent_bytes"), s.sent_bytes);
+        self.set(&format!("{ns}.retransmitted"), s.retransmitted);
+        self.set(&format!("{ns}.retransmitted_bytes"), s.retransmitted_bytes);
+        self.set(&format!("{ns}.timeouts"), s.timeouts);
+        self.set(&format!("{ns}.accepted"), s.accepted);
+        self.set(&format!("{ns}.accepted_bytes"), s.accepted_bytes);
+        self.set(&format!("{ns}.dropped_corrupt"), s.dropped_corrupt);
+        self.set(&format!("{ns}.dropped_out_of_order"), s.dropped_out_of_order);
+        self.set(&format!("{ns}.buffered_out_of_order"), s.buffered_out_of_order);
+        self.set(&format!("{ns}.sacks"), s.sacks);
+        self.set(&format!("{ns}.injected_drops"), s.injected_drops);
+        self.set(&format!("{ns}.injected_corrupts"), s.injected_corrupts);
+        self.set(&format!("{ns}.injected_reorders"), s.injected_reorders);
+        self.set(&format!("{ns}.piggybacked_acks"), s.piggybacked_acks);
+        self.set(&format!("{ns}.rtt_samples"), s.rtt_samples);
+        self.gauge(&format!("{ns}.peak_buffered"), s.peak_buffered as f64);
+        self.gauge(&format!("{ns}.peak_replay"), s.peak_replay as f64);
+        self.gauge(&format!("{ns}.srtt_ns"), s.srtt_ns);
+        self.gauge(&format!("{ns}.rto_ns"), s.rto_ns);
+    }
+
+    /// Counter deltas since the previous call (zero-delta metrics are
+    /// skipped so JSONL lines stay small), then advance the baseline.
+    pub fn deltas(&mut self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        for (k, &v) in &self.counters {
+            let prev = self.last.get(k).copied().unwrap_or(0);
+            if v != prev {
+                out.push((k.clone(), v.saturating_sub(prev)));
+            }
+        }
+        for (k, _) in &out {
+            let cur = self.counters[k];
+            self.last.insert(k.clone(), cur);
+        }
+        out
+    }
+
+    /// Full dump: `{"counters": {...}, "gauges": {...}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.iter().map(|(k, &v)| (k.clone(), Json::u(v))).collect();
+        let gauges = self.gauges.iter().map(|(k, &v)| (k.clone(), Json::f(v))).collect();
+        Json::Obj(vec![
+            ("counters".into(), Json::Obj(counters)),
+            ("gauges".into(), Json::Obj(gauges)),
+        ])
+    }
+
+    /// Iterate current counter values (name-sorted, stable).
+    pub fn iter_counters(&self) -> impl Iterator<Item = (&str, u64)> + '_ {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Iterate current gauge values (name-sorted, stable).
+    pub fn iter_gauges(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_namespaces_counters() {
+        let mut c = Counters::new();
+        c.add("ops", 7);
+        c.add("bytes", 128);
+        let mut r = Registry::new();
+        r.absorb("workload", &c);
+        assert_eq!(r.get("workload.ops"), 7);
+        assert_eq!(r.get("workload.bytes"), 128);
+        assert_eq!(r.get("workload.missing"), 0);
+    }
+
+    #[test]
+    fn set_overwrites_snapshot_style() {
+        let mut r = Registry::new();
+        r.set("a.x", 3);
+        r.set("a.x", 10);
+        assert_eq!(r.get("a.x"), 10);
+        r.gauge("a.depth", 4.0);
+        r.gauge("a.depth", 2.0);
+        assert!((r.get_gauge("a.depth") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deltas_advance_baseline_and_skip_quiet_metrics() {
+        let mut r = Registry::new();
+        r.set("a.x", 5);
+        r.set("a.y", 0);
+        let d1 = r.deltas();
+        assert_eq!(d1, vec![("a.x".to_string(), 5)]);
+        // no movement -> empty
+        assert!(r.deltas().is_empty());
+        r.set("a.x", 8);
+        r.set("a.y", 2);
+        let mut d2 = r.deltas();
+        d2.sort();
+        assert_eq!(d2, vec![("a.x".to_string(), 3), ("a.y".to_string(), 2)]);
+    }
+
+    #[test]
+    fn rel_snapshot_splits_counters_and_gauges() {
+        let s = RelStats {
+            sent: 10,
+            retransmitted: 2,
+            peak_buffered: 6,
+            rto_ns: 2000.0,
+            ..RelStats::default()
+        };
+        let mut r = Registry::new();
+        r.absorb_rel("rel", &s);
+        assert_eq!(r.get("rel.sent"), 10);
+        assert_eq!(r.get("rel.retransmitted"), 2);
+        assert!((r.get_gauge("rel.peak_buffered") - 6.0).abs() < 1e-12);
+        assert!((r.get_gauge("rel.rto_ns") - 2000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_dump_has_both_sections() {
+        let mut r = Registry::new();
+        r.set("m.ops", 3);
+        r.gauge("m.q", 1.5);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").and_then(|c| c.get("m.ops")).and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(j.get("gauges").and_then(|g| g.get("m.q")).and_then(|v| v.as_f64()), Some(1.5));
+    }
+}

@@ -1,0 +1,343 @@
+//! Sampled per-transaction span tracing.
+//!
+//! A *span* follows one response-needing coherence request from the
+//! moment the client issues it until its response lands back, keyed by
+//! the transaction id ([`crate::proto::messages::ReqId`]) which the
+//! stack carries intact from request to response. Each span records a
+//! timestamp at every lifecycle stage; on completion the deltas between
+//! consecutive stages feed per-stage [`Histogram`]s, so an end-to-end
+//! p99 decomposes into queueing vs wire/replay vs service vs memory
+//! time — the latency waterfall.
+//!
+//! Stages telescope: `issue → launch → deliver → svc_start → svc_done →
+//! reply → complete`, so the per-span stage intervals sum *exactly* to
+//! the span's end-to-end latency, and stage means sum to the e2e mean
+//! (quantiles agree within histogram binning error only, since
+//! quantiles don't add).
+//!
+//! Sampling is deterministic — every `sample_every`-th issued
+//! transaction, no RNG — and the tracer is passive: it never schedules
+//! events or perturbs simulation state, which the obs transparency gate
+//! checks.
+
+use crate::rustc_hash::FxHashMap as HashMap;
+use crate::sim::stats::Histogram;
+use crate::sim::time::Time;
+
+use super::json::Json;
+
+/// Lifecycle checkpoints of a traced transaction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Client handed the request to the home-bound framed ingress.
+    Issue = 0,
+    /// Request frame left the ingress mux onto the wire (first launch;
+    /// later launches of the same id are retransmit episodes).
+    Launch = 1,
+    /// Request frame delivered at the home side and enqueued on its
+    /// directory slice FIFO.
+    Deliver = 2,
+    /// Home agent began servicing the request (slice grant).
+    SvcStart = 3,
+    /// Directory/home produced the response message.
+    SvcDone = 4,
+    /// Response ready to send after the memory/KVS backend.
+    Reply = 5,
+    /// Response landed back at the client.
+    Complete = 6,
+}
+
+const NUM_STAGES: usize = 7;
+const UNSET: u64 = u64::MAX;
+
+/// Names of the six telescoping intervals between consecutive stages,
+/// in order. These are the waterfall rows and the JSONL/JSON keys.
+pub const STAGE_NAMES: [&str; NUM_STAGES - 1] = [
+    "ingress_wait",   // issue   -> launch : VC/credit + mux queueing
+    "wire_transit",   // launch  -> deliver: flight time incl. replay episodes
+    "slice_queue",    // deliver -> svc_start: directory slice FIFO wait
+    "home_service",   // svc_start -> svc_done: home-agent occupancy
+    "memory_backend", // svc_done -> reply : DRAM / KVS backend
+    "reply_delivery", // reply   -> complete: response wire + client ingress
+];
+
+struct Span {
+    t: [u64; NUM_STAGES], // ps; UNSET until the stage is marked
+    launches: u32,
+}
+
+/// Tracks sampled in-flight spans and accumulates per-stage histograms.
+pub struct SpanTracer {
+    every: u64,
+    seen: u64,
+    live: HashMap<u32, Span>,
+    /// One histogram per entry of [`STAGE_NAMES`] (picoseconds).
+    pub stages: Vec<Histogram>,
+    /// End-to-end latency of completed sampled spans (picoseconds).
+    pub e2e: Histogram,
+    /// Spans selected for tracing.
+    pub sampled: u64,
+    /// Sampled spans that completed with a full, monotone stage record.
+    pub completed: u64,
+    /// Extra launches of an already-launched traced request — each one
+    /// is a retransmission episode the span sat through.
+    pub retx_episodes: u64,
+    /// Sampled spans that finished with a missing or non-monotone stage
+    /// (or never finished — see [`SpanTracer::seal`]). Excluded from the
+    /// histograms so stage sums stay consistent with e2e.
+    pub incomplete: u64,
+}
+
+impl SpanTracer {
+    /// `sample_every` = N traces every N-th issued transaction (1 = all).
+    pub fn new(sample_every: u32) -> SpanTracer {
+        SpanTracer {
+            every: sample_every.max(1) as u64,
+            seen: 0,
+            live: HashMap::default(),
+            stages: (0..NUM_STAGES - 1).map(|_| Histogram::new()).collect(),
+            e2e: Histogram::new(),
+            sampled: 0,
+            completed: 0,
+            retx_episodes: 0,
+            incomplete: 0,
+        }
+    }
+
+    /// Offer an issued transaction for sampling. Call exactly once per
+    /// response-needing request, at issue time.
+    pub fn on_issue(&mut self, now: Time, id: u32) {
+        let pick = self.seen % self.every == 0;
+        self.seen += 1;
+        if !pick {
+            return;
+        }
+        self.sampled += 1;
+        let mut t = [UNSET; NUM_STAGES];
+        t[Stage::Issue as usize] = now.ps();
+        self.live.insert(id, Span { t, launches: 0 });
+    }
+
+    /// Record a lifecycle checkpoint for `id` (no-op unless sampled).
+    /// The first `Launch` stamps the span; every further `Launch` of the
+    /// same id counts as a retransmission episode.
+    pub fn mark(&mut self, now: Time, id: u32, stage: Stage) {
+        let Some(sp) = self.live.get_mut(&id) else {
+            return;
+        };
+        if stage == Stage::Launch {
+            sp.launches += 1;
+            if sp.launches > 1 {
+                self.retx_episodes += 1;
+                return; // keep the first launch time: transit absorbs replay
+            }
+        }
+        let slot = &mut sp.t[stage as usize];
+        if *slot == UNSET {
+            *slot = now.ps();
+        }
+    }
+
+    /// Complete the span for `id`: stamp `Complete`, fold its intervals
+    /// into the histograms, and retire it.
+    pub fn complete(&mut self, now: Time, id: u32) {
+        let Some(mut sp) = self.live.remove(&id) else {
+            return;
+        };
+        if sp.t[Stage::Complete as usize] == UNSET {
+            sp.t[Stage::Complete as usize] = now.ps();
+        }
+        let full_and_monotone =
+            sp.t.iter().all(|&t| t != UNSET) && sp.t.windows(2).all(|w| w[0] <= w[1]);
+        if !full_and_monotone {
+            self.incomplete += 1;
+            return;
+        }
+        for (i, h) in self.stages.iter_mut().enumerate() {
+            h.record(sp.t[i + 1] - sp.t[i]);
+        }
+        self.e2e.record(sp.t[Stage::Complete as usize] - sp.t[Stage::Issue as usize]);
+        self.completed += 1;
+    }
+
+    /// End of run: every span still live (issued but never completed —
+    /// e.g. the run drained before its reply) counts as incomplete.
+    pub fn seal(&mut self) {
+        self.incomplete += self.live.len() as u64;
+        self.live.clear();
+    }
+
+    /// Spans currently in flight (a telemetry gauge).
+    pub fn live_spans(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Summarize into waterfall rows (ns).
+    pub fn waterfall(&self) -> Waterfall {
+        let row = |name: &'static str, h: &Histogram| WaterfallRow {
+            stage: name,
+            count: h.count(),
+            mean_ns: h.mean() / 1e3,
+            p50_ns: h.p50() as f64 / 1e3,
+            p99_ns: h.p99() as f64 / 1e3,
+        };
+        Waterfall {
+            rows: STAGE_NAMES
+                .iter()
+                .zip(self.stages.iter())
+                .map(|(name, h)| row(name, h))
+                .collect(),
+            e2e: row("end_to_end", &self.e2e),
+            sampled: self.sampled,
+            completed: self.completed,
+            retx_episodes: self.retx_episodes,
+            incomplete: self.incomplete,
+        }
+    }
+}
+
+/// One waterfall line: a stage interval's distribution in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct WaterfallRow {
+    pub stage: &'static str,
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// The latency waterfall: per-stage rows plus the end-to-end line they
+/// telescope into. Stage `mean_ns` values sum to `e2e.mean_ns` exactly
+/// (modulo ps→ns float division); p50/p99 columns are per-stage
+/// distributions and do not add.
+#[derive(Clone, Debug)]
+pub struct Waterfall {
+    pub rows: Vec<WaterfallRow>,
+    pub e2e: WaterfallRow,
+    pub sampled: u64,
+    pub completed: u64,
+    pub retx_episodes: u64,
+    pub incomplete: u64,
+}
+
+impl Waterfall {
+    /// Sum of per-stage means — equals `e2e.mean_ns` for full spans.
+    pub fn stage_mean_sum_ns(&self) -> f64 {
+        self.rows.iter().map(|r| r.mean_ns).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let row_json = |r: &WaterfallRow| {
+            Json::Obj(vec![
+                ("stage".into(), Json::s(r.stage)),
+                ("count".into(), Json::u(r.count)),
+                ("mean_ns".into(), Json::f(r.mean_ns)),
+                ("p50_ns".into(), Json::f(r.p50_ns)),
+                ("p99_ns".into(), Json::f(r.p99_ns)),
+            ])
+        };
+        Json::Obj(vec![
+            ("stages".into(), Json::Arr(self.rows.iter().map(row_json).collect())),
+            ("end_to_end".into(), row_json(&self.e2e)),
+            ("stage_mean_sum_ns".into(), Json::f(self.stage_mean_sum_ns())),
+            ("sampled".into(), Json::u(self.sampled)),
+            ("completed".into(), Json::u(self.completed)),
+            ("retx_episodes".into(), Json::u(self.retx_episodes)),
+            ("incomplete".into(), Json::u(self.incomplete)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ns: u64) -> Time {
+        Time(ns * 1000)
+    }
+
+    fn drive_span(tr: &mut SpanTracer, id: u32, base_ns: u64) {
+        tr.on_issue(t(base_ns), id);
+        tr.mark(t(base_ns + 10), id, Stage::Launch);
+        tr.mark(t(base_ns + 30), id, Stage::Deliver);
+        tr.mark(t(base_ns + 35), id, Stage::SvcStart);
+        tr.mark(t(base_ns + 75), id, Stage::SvcDone);
+        tr.mark(t(base_ns + 95), id, Stage::Reply);
+        tr.complete(t(base_ns + 120), id);
+    }
+
+    #[test]
+    fn stage_intervals_telescope_to_e2e() {
+        let mut tr = SpanTracer::new(1);
+        for i in 0..50u32 {
+            drive_span(&mut tr, i, 1000 + 7 * i as u64);
+        }
+        assert_eq!(tr.sampled, 50);
+        assert_eq!(tr.completed, 50);
+        assert_eq!(tr.incomplete, 0);
+        let w = tr.waterfall();
+        // identical spans: every stage mean is exact, sum == e2e mean
+        assert!((w.stage_mean_sum_ns() - w.e2e.mean_ns).abs() < 1e-6);
+        assert!((w.e2e.mean_ns - 120.0).abs() < 1e-6);
+        assert_eq!(w.rows[0].stage, "ingress_wait");
+        assert!((w.rows[0].mean_ns - 10.0).abs() < 1e-6);
+        assert!((w.rows[3].mean_ns - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_every_nth() {
+        let mut tr = SpanTracer::new(4);
+        for i in 0..40u32 {
+            tr.on_issue(t(i as u64), i);
+        }
+        assert_eq!(tr.sampled, 10);
+        // ids 0, 4, 8, ... are the tracked ones
+        assert_eq!(tr.live_spans(), 10);
+        tr.mark(t(100), 4, Stage::Launch);
+        tr.mark(t(100), 5, Stage::Launch); // not sampled: ignored
+        tr.complete(t(200), 4);
+        assert_eq!(tr.incomplete, 1); // id 4 lacked middle stages
+    }
+
+    #[test]
+    fn relaunches_count_retx_episodes_and_keep_first_time() {
+        let mut tr = SpanTracer::new(1);
+        tr.on_issue(t(0), 9);
+        tr.mark(t(10), 9, Stage::Launch);
+        tr.mark(t(50), 9, Stage::Launch); // replay
+        tr.mark(t(60), 9, Stage::Launch); // replay again
+        tr.mark(t(80), 9, Stage::Deliver);
+        tr.mark(t(80), 9, Stage::SvcStart);
+        tr.mark(t(90), 9, Stage::SvcDone);
+        tr.mark(t(90), 9, Stage::Reply);
+        tr.complete(t(100), 9);
+        assert_eq!(tr.retx_episodes, 2);
+        assert_eq!(tr.completed, 1);
+        // wire_transit = deliver - first launch = 70ns (replay included)
+        let w = tr.waterfall();
+        assert!((w.rows[1].mean_ns - 70.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn seal_retires_unfinished_spans() {
+        let mut tr = SpanTracer::new(1);
+        tr.on_issue(t(0), 1);
+        tr.on_issue(t(1), 2);
+        tr.complete(t(50), 1); // incomplete: middle stages missing
+        tr.seal();
+        assert_eq!(tr.incomplete, 2);
+        assert_eq!(tr.live_spans(), 0);
+        assert_eq!(tr.completed, 0);
+    }
+
+    #[test]
+    fn waterfall_json_is_well_formed() {
+        let mut tr = SpanTracer::new(1);
+        drive_span(&mut tr, 1, 0);
+        let j = tr.waterfall().to_json();
+        let text = j.compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("completed").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(back.get("stages").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+    }
+}

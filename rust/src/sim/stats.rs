@@ -131,7 +131,12 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (0.0 ..= 1.0), resolved to bin lower edge.
+    /// Approximate quantile (0.0 ..= 1.0), resolved to the *midpoint* of
+    /// the winning bin (clamped to the observed min/max). The midpoint
+    /// halves the worst-case bias of reporting the bin floor: samples
+    /// land anywhere in `[floor(i), floor(i+1))`, so the floor
+    /// systematically under-reports by up to one sub-bucket width while
+    /// the midpoint is off by at most half of one.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -141,10 +146,24 @@ impl Histogram {
         for (i, &c) in self.bins.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return bin_floor(i).max(self.min).min(self.max);
+                let lo = bin_floor(i);
+                let hi = bin_floor(i + 1);
+                let mid = lo + (hi - lo) / 2;
+                return mid.max(self.min).min(self.max);
             }
         }
         self.max
+    }
+
+    /// Occupied bins as `(lower_edge, upper_edge, count)` triples —
+    /// the JSON export surface for full-distribution dumps.
+    pub fn bins(&self) -> Vec<(u64, u64, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bin_floor(i), bin_floor(i + 1), c))
+            .collect()
     }
 
     pub fn p50(&self) -> u64 {
@@ -277,6 +296,52 @@ mod tests {
         assert!((930..=1000).contains(&p999), "p999 {p999}");
         assert!(p999 >= p99, "p999 {p999} < p99 {p99}");
         assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp_land_within_sub_bucket_tolerance() {
+        // A uniform ramp has known exact quantiles; midpoint resolution
+        // must land within one sub-bucket width (1/16 relative) of the
+        // true value — the bin-floor behavior this replaces was biased
+        // low by up to a full sub-bucket.
+        let n = 100_000u64;
+        let mut h = Histogram::new();
+        for v in 1..=n {
+            h.record(v);
+        }
+        for q in [0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999] {
+            let exact = (q * n as f64).max(1.0);
+            let got = h.quantile(q) as f64;
+            let tol = exact / 16.0 + 1.0;
+            assert!(
+                (got - exact).abs() <= tol,
+                "q={q}: got {got}, exact {exact}, tol {tol}"
+            );
+        }
+        // quantiles stay within the observed range and monotone in q
+        assert!(h.quantile(0.0) >= h.min());
+        assert!(h.quantile(1.0) <= h.max());
+        assert!(h.p50() <= h.p99() && h.p99() <= h.p999());
+    }
+
+    #[test]
+    fn bins_export_covers_every_sample() {
+        let mut h = Histogram::new();
+        for v in [1u64, 1, 2, 100, 5000] {
+            h.record(v);
+        }
+        let bins = h.bins();
+        let total: u64 = bins.iter().map(|&(_, _, c)| c).sum();
+        assert_eq!(total, h.count());
+        for &(lo, hi, c) in &bins {
+            assert!(lo < hi);
+            assert!(c > 0);
+        }
+        // edges are sorted and disjoint
+        for w in bins.windows(2) {
+            assert!(w[0].1 <= w[1].0);
+        }
+        assert!(Histogram::new().bins().is_empty());
     }
 
     #[test]

@@ -286,6 +286,19 @@ impl FramedIngress {
     pub fn in_flight_total(&self) -> u32 {
         (0..NUM_VCS as u8).map(|vc| self.link.credits.in_flight(VcId(vc))).sum()
     }
+
+    /// Publish this direction's admission counters and instantaneous
+    /// link gauges (transmit-queue depth, credit occupancy) into an obs
+    /// registry under `ns.*` names — the telemetry ticker's view of
+    /// link-level backpressure.
+    pub fn observe(&self, ns: &str, reg: &mut crate::obs::Registry) {
+        reg.set(&format!("{ns}.offered"), self.offered);
+        reg.set(&format!("{ns}.delivered"), self.delivered);
+        reg.set(&format!("{ns}.credit_stalls"), self.credit_stalls);
+        reg.gauge(&format!("{ns}.queued"), self.queued() as f64);
+        reg.gauge(&format!("{ns}.in_flight"), self.in_flight_total() as f64);
+        reg.gauge(&format!("{ns}.peak_queue"), self.peak_queue as f64);
+    }
 }
 
 #[cfg(test)]

@@ -36,6 +36,7 @@ use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
 use crate::dcs::{Dcs, SliceService};
 use crate::machine::MachineConfig;
 use crate::memctl::KvsService;
+use crate::obs::{Obs, ObsConfig, ObsReport, Registry, Stage};
 use crate::proto::messages::{LineAddr, Message, MsgKind};
 use crate::proto::spec::generate_remote;
 use crate::proto::states::Node;
@@ -155,6 +156,8 @@ pub struct OpenLoopReport {
     /// all VCs. Credits are held until slice service (batched or not),
     /// so this never exceeds the per-VC budget times the VCs in use.
     pub peak_in_flight: u32,
+    /// Simulator events dispatched (host-side cost; the selfperf metric).
+    pub events: u64,
     pub counters: Counters,
 }
 
@@ -292,6 +295,10 @@ pub struct OpenLoop {
     /// Per-class latency, parallel to `classes`.
     class_lat: Vec<Histogram>,
     counters: Counters,
+    /// Passive observability (span tracing, telemetry ticker). Lives
+    /// outside [`OpenLoopConfig`] — the config stays `Copy` and
+    /// digest-relevant; obs never perturbs the simulation.
+    obs: Option<Obs>,
 }
 
 impl OpenLoop {
@@ -403,8 +410,19 @@ impl OpenLoop {
             lat: Histogram::new(),
             class_lat: vec![Histogram::new(); n_classes],
             counters: Counters::new(),
+            obs: None,
             cfg,
         }
+    }
+
+    /// Attach passive observability (span tracing and/or the telemetry
+    /// ticker) before running; collect results through
+    /// [`OpenLoop::run_observed`] or [`OpenLoop::run_settled_observed`].
+    pub fn with_obs(mut self, ocfg: &ObsConfig) -> OpenLoop {
+        if ocfg.enabled() {
+            self.obs = Some(Obs::new(ocfg));
+        }
+        self
     }
 
     /// Run until every arrival has completed, then report.
@@ -421,12 +439,35 @@ impl OpenLoop {
     /// protocol state — the loss-transparency observable: fault
     /// injection may change *when*, never *what*.
     pub fn run_settled(mut self) -> (OpenLoopReport, u64) {
+        let digest = self.settle();
+        (self.report(), digest)
+    }
+
+    /// [`OpenLoop::run`] with observability attached: the report plus
+    /// everything obs collected (waterfall, telemetry, registry).
+    pub fn run_observed(mut self) -> (OpenLoopReport, ObsReport) {
+        self.run_to_completion();
+        let obs = self.finish_obs();
+        (self.report(), obs)
+    }
+
+    /// [`OpenLoop::run_settled`] with observability attached: report,
+    /// settled-state digest, and the obs report. The digest is computed
+    /// exactly as in the unobserved path — the obs transparency tests
+    /// compare the two directly.
+    pub fn run_settled_observed(mut self) -> (OpenLoopReport, u64, ObsReport) {
+        let digest = self.settle();
+        let obs = self.finish_obs();
+        (self.report(), digest, obs)
+    }
+
+    fn settle(&mut self) -> u64 {
         self.run_to_completion();
         while let Some((_, ev)) = self.eng.pop() {
             self.dispatch(ev);
+            self.obs_tick();
         }
-        let digest = self.state_digest();
-        (self.report(), digest)
+        self.state_digest()
     }
 
     fn run_to_completion(&mut self) {
@@ -442,7 +483,54 @@ impl OpenLoop {
                 );
             };
             self.dispatch(ev);
+            self.obs_tick();
         }
+    }
+
+    /// Opportunistic telemetry tick, called after every dispatched
+    /// event: one cheap check when telemetry is off or not due; on a due
+    /// tick the registry is refreshed from the live counter surfaces
+    /// first. Purely observational — reads state, schedules nothing.
+    fn obs_tick(&mut self) {
+        let now = self.eng.now();
+        if !self.obs.as_ref().is_some_and(|o| o.tick_due(now)) {
+            return;
+        }
+        let mut obs = self.obs.take().expect("checked above");
+        self.refresh_registry(&mut obs.registry);
+        if let Some(sp) = &obs.spans {
+            obs.registry.gauge("obs.live_spans", sp.live_spans() as f64);
+        }
+        obs.tick(now);
+        self.obs = Some(obs);
+    }
+
+    /// Absorb every live counter surface into the unified registry and
+    /// refresh the instantaneous gauges (queue depths, credit occupancy,
+    /// OOO-buffer depth, effective RTO).
+    fn refresh_registry(&self, reg: &mut Registry) {
+        reg.absorb("workload", &self.counters);
+        reg.set("workload.issued", self.issued);
+        reg.set("workload.completed", self.completed);
+        reg.set("workload.kvs_lookups", self.kvs.served);
+        reg.absorb("dcs", &self.dcs.counters());
+        self.dcs.observe_gauges("dcs", reg);
+        self.to_home.observe("ingress.to_home", reg);
+        self.to_cpu.observe("ingress.to_cpu", reg);
+        if let Some(mut s) = self.to_home.rel_stats() {
+            if let Some(s2) = self.to_cpu.rel_stats() {
+                s.merge(&s2);
+            }
+            reg.absorb_rel("rel", &s);
+        }
+    }
+
+    /// Final registry refresh, span seal, and report extraction.
+    fn finish_obs(&mut self) -> ObsReport {
+        let mut obs = self.obs.take().expect("attach obs with with_obs first");
+        self.refresh_registry(&mut obs.registry);
+        obs.tick(self.eng.now());
+        obs.finish()
     }
 
     /// FNV-1a over every line's directory state and backing-store
@@ -627,6 +715,7 @@ impl OpenLoop {
             credit_stalls: self.to_home.credit_stalls,
             peak_tx_queue: self.to_home.peak_queue,
             peak_in_flight: self.peak_in_flight,
+            events: self.eng.dispatched,
             counters,
         }
     }
@@ -693,6 +782,20 @@ impl OpenLoop {
 
     // -- client side --------------------------------------------------------
 
+    /// Offer a client message to the home-bound ingress. The single
+    /// admission point for client traffic: the span tracer samples
+    /// response-needing coherence requests here (stage `Issue`).
+    fn offer_home(&mut self, m: Message) {
+        if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+            if let MsgKind::CohReq { op } = &m.kind {
+                if op.needs_response() {
+                    sp.on_issue(self.eng.now(), m.id.0);
+                }
+            }
+        }
+        self.to_home.offer(m);
+    }
+
     /// Issue (or retry after a fill) the access of the op in `slot`.
     fn step(&mut self, slot: u32) {
         let (addr, write, is_chase) = {
@@ -712,7 +815,7 @@ impl OpenLoop {
                             }
                         }
                     }
-                    self.to_home.offer(m);
+                    self.offer_home(m);
                     sent = true;
                 }
                 RemoteEffect::Stalled => {}
@@ -798,7 +901,7 @@ impl OpenLoop {
         for e in fx {
             match e {
                 RemoteEffect::Send(m) => {
-                    self.to_home.offer(m);
+                    self.offer_home(m);
                     sent = true;
                 }
                 // mid-transaction (another op owns the line): keep it
@@ -835,6 +938,10 @@ impl OpenLoop {
         let mut out = std::mem::take(&mut self.scratch);
         self.to_home.pump(now, &mut out);
         for (at, f) in out.drain(..) {
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                // repeat launches of a tracked id are retransmit episodes
+                sp.mark(now, f.msg.id.0, Stage::Launch);
+            }
             self.eng.schedule_at(at, Ev::LandHome(Box::new(f)));
         }
         self.scratch = out;
@@ -881,6 +988,9 @@ impl OpenLoop {
         self.rx_ctls = ctls;
         self.arm_ack_flush(0);
         for f in delivered.drain(..) {
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                sp.mark(now, f.msg.id.0, Stage::Deliver);
+            }
             let s = self.dcs.enqueue_frame(now, f);
             self.pump_slice(s);
         }
@@ -926,6 +1036,17 @@ impl OpenLoop {
                     } else {
                         ready
                     };
+                    if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                        // the slice occupied the pipeline for slice_proc
+                        // ending at `ready`; the backend (home cache,
+                        // FPGA DRAM, or KVS pool) holds the reply until
+                        // `t`
+                        let proc = self.dcs.cfg.slice_proc.ps();
+                        let start = Time(ready.ps().saturating_sub(proc));
+                        sp.mark(start, msg.id.0, Stage::SvcStart);
+                        sp.mark(ready, msg.id.0, Stage::SvcDone);
+                        sp.mark(t, msg.id.0, Stage::Reply);
+                    }
                     self.eng.schedule_at(t, Ev::HomeSend(Box::new(msg)));
                 }
                 HomeEffect::Fwd { msg } => {
@@ -962,11 +1083,16 @@ impl OpenLoop {
         for f in delivered.drain(..) {
             // the cpu sinks responses at arrival: slot freed immediately
             self.eng.schedule(ctrl, Ev::CreditCpu(f.vc));
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                if matches!(f.msg.kind, MsgKind::CohRsp { .. }) {
+                    sp.complete(now, f.msg.id.0);
+                }
+            }
             let fx = self.remote.on_message(f.msg, &mut self.cache);
             for e in fx {
                 match e {
                     RemoteEffect::Send(m) => {
-                        self.to_home.offer(m);
+                        self.offer_home(m);
                         sent = true;
                     }
                     RemoteEffect::Filled { addr } => fills.push(addr),
@@ -1186,6 +1312,41 @@ mod tests {
             "drops must have been injected: {:?}",
             r.counters
         );
+    }
+
+    #[test]
+    fn observed_run_produces_waterfall_and_telemetry() {
+        let cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 1_000, ..Default::default() };
+        let sc = Scenario::preset("uniform", 1 << 12, 0.99).expect("preset");
+        let ocfg =
+            ObsConfig { spans: true, span_sample_every: 4, tick: Some(Duration::from_us(5)) };
+        let (r, obs) = OpenLoop::new(cfg, &sc, 2).with_obs(&ocfg).run_observed();
+        assert_eq!(r.completed, 1_000);
+        let w = obs.waterfall.expect("spans were on");
+        assert!(w.sampled > 0);
+        assert!(w.completed > 0, "sampled spans must complete: {w:?}");
+        assert_eq!(w.rows.len(), 6);
+        assert!(w.rows.iter().all(|row| row.count == w.completed));
+        // stage means telescope to the span end-to-end mean
+        let sum = w.stage_mean_sum_ns();
+        assert!(
+            (sum - w.e2e.mean_ns).abs() <= 1e-6 * w.e2e.mean_ns.max(1.0),
+            "stage sum {sum} vs e2e {}",
+            w.e2e.mean_ns
+        );
+        // home service is pinned at slice_proc by construction
+        let svc = &w.rows[3];
+        let proc_ns = OpenLoopConfig::default().machine.home_proc.as_ns();
+        assert!(
+            (svc.mean_ns - proc_ns).abs() < 1e-6,
+            "home_service mean {} vs slice_proc {proc_ns}",
+            svc.mean_ns
+        );
+        // telemetry ran and the registry absorbed all three surfaces
+        assert!(!obs.jsonl.is_empty());
+        assert_eq!(obs.registry.get("workload.completed"), 1_000);
+        assert!(obs.registry.get("dcs.slices_served") > 0);
+        assert!(obs.registry.get("ingress.to_home.offered") > 0);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Transparency gates for the observability layer (`eci::obs`): span
+//! tracing and the telemetry ticker are *passive* — they own no RNG,
+//! schedule no events, and only read simulation state. Runs with
+//! observability on and off must therefore produce bit-identical
+//! settled digests and identical observables, on the monolithic memory
+//! node, the sliced cached directory (1/2/4 slices), and the faulted
+//! selective-repeat transport. Observability changes nothing but what
+//! you can see.
+
+use eci::agents::dram::MemStore;
+use eci::machine::{map, Machine, MachineConfig, Workload};
+use eci::obs::{ObsConfig, STAGE_NAMES};
+use eci::proto::messages::{Line, LineAddr, LINE_BYTES};
+use eci::sim::time::Duration;
+use eci::trace::checker::{builtin, NfaSpec, OnlineChecker};
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
+use eci::workload::{OpenLoop, OpenLoopConfig, Scenario};
+
+/// The faulted selective-repeat wire of this suite (same profile as the
+/// loss-transparency tests).
+fn faulted_sr(seed: u64) -> RelConfig {
+    let spec = FaultSpec { ber: 1e-3, drop: 0.02, reorder: 0.02, burst_len: 1.0 };
+    RelConfig::new(FaultConfig::new(spec, seed))
+        .with_mode(RelMode::SelectiveRepeat)
+        .with_adaptive_rto(true)
+}
+
+fn machine_with(config: Option<usize>, rel: Option<RelConfig>) -> Machine {
+    let mut cfg = MachineConfig::test_small();
+    cfg.rel = rel;
+    let mut fpga = MemStore::new(map::TABLE_BASE, 1 << 20);
+    for i in 0..2048u64 {
+        let mut l = [0u8; LINE_BYTES];
+        l[0..8].copy_from_slice(&(i.wrapping_mul(0x9E37_79B9)).to_le_bytes());
+        fpga.write_line(LineAddr(map::TABLE_BASE.0 + i), &l);
+    }
+    let cpu = MemStore::new(LineAddr(0), 1 << 20);
+    match config {
+        None => Machine::memory_node(cfg, fpga, cpu),
+        Some(n) => Machine::dcs_cached_node(cfg, n, fpga, cpu),
+    }
+}
+
+fn fpga_mem_snapshot(m: &Machine, lines: u64) -> Vec<Line> {
+    (0..lines).map(|i| m.fpga_mem.read_line(LineAddr(map::TABLE_BASE.0 + i))).collect()
+}
+
+/// Everything a machine run exposes, flattened for equality.
+type MachineObservables = (u64, u64, u64, String, Vec<(String, u64)>, Vec<Line>);
+
+fn machine_observables(config: Option<usize>, rel: Option<RelConfig>, obs: bool) -> MachineObservables {
+    let mut m = machine_with(config, rel);
+    if obs {
+        let mut ocfg = ObsConfig::with_tick(Duration::from_us(1));
+        ocfg.spans = true; // ignored by the machine host, must stay harmless
+        m.attach_obs(&ocfg);
+    }
+    m.set_workload(Workload::StreamRemote { lines: 600 }, 4);
+    let r = m.run();
+    m.drain();
+    if obs {
+        let report = m.finish_obs();
+        assert!(!report.jsonl.is_empty(), "the ticker must have snapshotted");
+    }
+    let rep = m.report();
+    let lat = format!(
+        "{:.6}/{}/{}",
+        r.load_lat.mean(),
+        r.load_lat.p50(),
+        r.load_lat.p99()
+    );
+    let counters: Vec<(String, u64)> =
+        rep.counters.iter().map(|(k, v)| (k.to_string(), v)).collect();
+    (r.sim_time.0, r.events, r.remote_bytes, lat, counters, fpga_mem_snapshot(&m, 2048))
+}
+
+/// The machine-host gate: the telemetry ticker is invisible to every
+/// observable — simulated time, event count, streamed bytes, latency
+/// distribution, counters, settled memory — on the memory node, the
+/// cached directory at 1/2/4 slices, and the faulted-SR transport.
+#[test]
+fn machine_ticker_is_transparent() {
+    let shapes: [(Option<usize>, Option<RelConfig>); 6] = [
+        (None, None),
+        (Some(1), None),
+        (Some(2), None),
+        (Some(4), None),
+        (None, Some(faulted_sr(7))),
+        (Some(2), Some(faulted_sr(7))),
+    ];
+    for (config, rel) in shapes {
+        let off = machine_observables(config, rel, false);
+        let on = machine_observables(config, rel, true);
+        assert_eq!(on, off, "config {config:?} rel {}: obs must be passive", rel.is_some());
+    }
+}
+
+/// Open-loop observables, flattened for equality. `events` is the
+/// strictest check: a single extra scheduled event would show here.
+type OpenLoopObservables = (u64, u64, u64, u64, String, u32, Vec<(String, u64)>);
+
+fn openloop_observables(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    obs: bool,
+) -> (OpenLoopObservables, u64) {
+    let (r, digest) = if obs {
+        let ocfg = ObsConfig {
+            spans: true,
+            span_sample_every: 2,
+            tick: Some(Duration::from_us(5)),
+        };
+        let (r, digest, report) =
+            OpenLoop::new(cfg, scenario, slices).with_obs(&ocfg).run_settled_observed();
+        let w = report.waterfall.expect("spans were on");
+        assert_eq!(w.rows.len(), STAGE_NAMES.len());
+        assert!(w.completed > 0, "sampled spans must have completed");
+        assert!(!report.jsonl.is_empty(), "the ticker must have snapshotted");
+        (r, digest)
+    } else {
+        let (r, digest) = OpenLoop::new(cfg, scenario, slices).run_settled();
+        (r, digest)
+    };
+    let lat = format!("{:.6}/{}/{}", r.lat.mean(), r.lat.p50(), r.lat.p99());
+    let counters: Vec<(String, u64)> =
+        r.counters.iter().map(|(k, v)| (k.to_string(), v)).collect();
+    ((r.completed, r.sim_time.0, r.events, r.credit_stalls, lat, r.peak_in_flight, counters), digest)
+}
+
+/// The workload-host gate: spans + ticker on vs off settle the open
+/// loop into the identical digest with identical observables, on the
+/// cached directory across 1/2/4 slices.
+#[test]
+fn openloop_spans_and_ticker_are_transparent_on_cached_slices() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    for slices in [1, 2, 4] {
+        let cfg = || OpenLoopConfig { ops: 600, home_cached: true, ..Default::default() };
+        let (obs_off, d_off) = openloop_observables(cfg(), &sc, slices, false);
+        let (obs_on, d_on) = openloop_observables(cfg(), &sc, slices, true);
+        assert_eq!(d_on, d_off, "{slices} slices: settled digests must match");
+        assert_eq!(obs_on, obs_off, "{slices} slices: observables must match");
+    }
+}
+
+/// Same gate on the faulted selective-repeat transport: observability
+/// must not perturb the fault stream, the replay schedule, or anything
+/// they feed.
+#[test]
+fn openloop_obs_is_transparent_under_faulted_sr() {
+    let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+    let cfg = || {
+        let mut c = OpenLoopConfig { rate_per_s: 2e6, ops: 600, ..Default::default() };
+        c.machine.rel = Some(faulted_sr(7));
+        c
+    };
+    let (obs_off, d_off) = openloop_observables(cfg(), &sc, 2, false);
+    let (obs_on, d_on) = openloop_observables(cfg(), &sc, 2, true);
+    assert!(
+        obs_off.6.iter().any(|(k, v)| k == "rel_retransmitted" && *v > 0),
+        "the faulted run must have exercised replay: {:?}",
+        obs_off.6
+    );
+    assert_eq!(d_on, d_off, "faulted-SR settled digests must match");
+    assert_eq!(obs_on, obs_off, "faulted-SR observables must match");
+}
+
+/// Satellite gate: the online protocol checker wired into the machine
+/// surfaces its accept/violation counts through `Machine::report` —
+/// and a healthy stream checks many messages with zero violations.
+#[test]
+fn machine_checker_counts_surface_in_report() {
+    let mut m = machine_with(Some(2), None);
+    m.attach_checker(OnlineChecker::new(NfaSpec::parse(builtin::READ_RESPONSE).unwrap()));
+    m.set_workload(Workload::StreamRemote { lines: 400 }, 4);
+    m.run();
+    m.drain();
+    let rep = m.report();
+    assert!(
+        rep.counters.get("checker_messages") > 0,
+        "the checker must have observed traffic: {:?}",
+        rep.counters.iter().collect::<Vec<_>>()
+    );
+    assert_eq!(
+        rep.counters.get("checker_violations"),
+        0,
+        "a healthy stream must not violate the read-response property"
+    );
+    // and attaching it must not perturb the run itself
+    let mut m2 = machine_with(Some(2), None);
+    m2.set_workload(Workload::StreamRemote { lines: 400 }, 4);
+    let r2 = m2.run();
+    m2.drain();
+    let mut m3 = machine_with(Some(2), None);
+    m3.attach_checker(OnlineChecker::new(NfaSpec::parse(builtin::READ_RESPONSE).unwrap()));
+    m3.set_workload(Workload::StreamRemote { lines: 400 }, 4);
+    let r3 = m3.run();
+    m3.drain();
+    assert_eq!(r3.sim_time, r2.sim_time);
+    assert_eq!(r3.events, r2.events);
+    assert_eq!(fpga_mem_snapshot(&m3, 2048), fpga_mem_snapshot(&m2, 2048));
+}
