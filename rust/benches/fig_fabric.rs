@@ -1,0 +1,36 @@
+//! Bench: fabric scale-out — aggregate goodput and tail latency vs
+//! node count with home migration on/off (fabric subsystem). Custom
+//! harness (criterion is not available in the offline registry).
+
+use eci::harness::{fig_fabric, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_fabric::run(scale);
+    println!("{}", fig_fabric::render(&f).to_markdown());
+    let pick = |nodes: usize, migrate: bool| {
+        f.points.iter().find(|p| p.nodes == nodes && p.migrate == migrate)
+    };
+    let one = pick(1, false).expect("1-node row");
+    let best = f
+        .points
+        .iter()
+        .filter(|p| !p.migrate)
+        .max_by(|a, b| a.delivered_per_s.total_cmp(&b.delivered_per_s))
+        .expect("sweep is non-empty");
+    let scaling = if one.delivered_per_s > 0.0 {
+        best.delivered_per_s / one.delivered_per_s
+    } else {
+        0.0
+    };
+    let migrated: u64 = f.points.iter().filter(|p| p.migrate).map(|p| p.migrations).sum();
+    println!(
+        "goodput: 1 node {:.1}M ops/s -> {} nodes {:.1}M ops/s ({scaling:.2}x); \
+         {migrated} migrations across migrate-on rows   (host {:?}, scale {scale:?})",
+        one.delivered_per_s / 1e6,
+        best.nodes,
+        best.delivered_per_s / 1e6,
+        t0.elapsed()
+    );
+}

@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 use crate::rustc_hash::FxHashMap as HashMap;
 
 use crate::proto::messages::{Line, LineAddr, Message, MsgKind, ReqId};
-use crate::proto::spec::{HAction, HEvent, HRule, HomePolicy, HomeRules, HomeSt};
+use crate::proto::spec::{HAction, HEvent, HRule, HomePolicy, HomeRules, HomeSt, RemoteView};
 use crate::proto::states::{CacheState, Node};
 use crate::sim::stats::Counters;
 
@@ -202,6 +202,34 @@ impl HomeAgent {
     /// in-place result update).
     pub fn recall(&mut self, addr: LineAddr, ram: &mut MemStore) -> Vec<HomeEffect> {
         self.dispatch(addr, HEvent::RecallI, None, None, 0, ram)
+    }
+
+    /// Hand the line off entirely: flush any cached copy to `ram` and drop
+    /// the directory entry, so a *different* home agent can adopt the line
+    /// cold from the backing store (the handoff step of a fabric home
+    /// migration). Only legal while the line is quiescent — no remote
+    /// possession, no pending forward, no stalled events. Returns `false`
+    /// (and changes nothing) otherwise.
+    pub fn surrender_copy(&mut self, addr: LineAddr, ram: &mut MemStore) -> bool {
+        let st = self.state_of(addr);
+        if st.view != RemoteView::I
+            || st.pending_fwd.is_some()
+            || self.stalled.contains_key(&addr)
+        {
+            return false;
+        }
+        if let Some(c) = self.cache.as_mut() {
+            if let Some(v) = c.remove(addr) {
+                if v.state == CacheState::M || st.own_dirty {
+                    ram.write_line(addr, &v.data);
+                    self.stats.inc("ram_write");
+                }
+            }
+        }
+        self.possession.remove(&addr);
+        self.set_state(addr, HomeSt::idle());
+        self.stats.inc("surrendered");
+        true
     }
 
     fn rule(&self, st: HomeSt, ev: HEvent) -> HRule {
@@ -566,6 +594,37 @@ mod tests {
         );
         let HomeEffect::Respond { msg, .. } = &fx[0] else { panic!("{fx:?}") };
         assert_eq!(msg.payload.as_ref().unwrap()[0], 0x77, "stale home copy served");
+    }
+
+    #[test]
+    fn surrender_copy_refuses_active_lines_then_flushes_dirty_copy() {
+        let policy = HomePolicy { cache_writebacks: true, ..HomePolicy::default() };
+        let rules = generate_home(&reference_transitions(), policy);
+        let mut a = HomeAgent::new(rules, policy, Some(Cache::new(64 * 1024, 4)));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        // remote takes the line exclusive: surrender must refuse mid-flight
+        a.on_message(
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadExclusive, LineAddr(11)),
+            &mut ram,
+        );
+        assert!(!a.surrender_copy(LineAddr(11), &mut ram), "line is remotely owned");
+        // the dirty writeback lands in the home cache (cache_writebacks),
+        // deliberately NOT in RAM — the handoff must not lose those bytes
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0xCD;
+        a.on_message(
+            Message::coh_req_data(ReqId(2), Node::Remote, CohOp::VolDowngradeI, LineAddr(11), Box::new(dirty)),
+            &mut ram,
+        );
+        assert_ne!(ram.read_line(LineAddr(11))[0], 0xCD, "writeback was cached, not stored");
+        // quiescent now: surrender flushes the dirty copy and drops tracking
+        assert!(a.surrender_copy(LineAddr(11), &mut ram));
+        assert_eq!(a.state_of(LineAddr(11)), HomeSt::idle());
+        assert_eq!(a.tracked_lines(), 0, "surrendered line must be untracked");
+        assert_eq!(ram.read_line(LineAddr(11))[0], 0xCD, "dirty bytes must survive the handoff");
+        assert_eq!(a.stats.get("surrendered"), 1);
+        // an untouched line surrenders trivially (nothing to flush)
+        assert!(a.surrender_copy(LineAddr(12), &mut ram));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! eci resources                  print Table 2 + subsetting ablation
-//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|selfperf|all> [flags]
+//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|selfperf|all> [flags]
 //! eci check                      validate envelope + subsets, print report
 //! eci trace-demo                 run a traffic capture through the
 //!                                dissector and the online checker
@@ -56,6 +56,17 @@
 //!                [--ops 1200] [--scenario scan]
 //! ```
 //!
+//! The `fabric` bench (multi-node scale-out: aggregate goodput and
+//! tail latency vs node count with home migration on/off —
+//! `harness::fig_fabric`; `--rate` is *per node*, `--ops` fabric-wide):
+//!
+//! ```text
+//! eci bench fabric [--nodes 1,2,4] [--migrate on|off|both]
+//!                  [--threshold 8] [--slices 2] [--rate 2e6]
+//!                  [--ops 1600] [--scenario hot-kvs] [--theta 0.99]
+//!                  [--seed 7] [--json]
+//! ```
+//!
 //! The `selfperf` bench (the simulator's own host throughput on pinned
 //! configurations — `harness::selfperf`; `BENCH_6.json` is the
 //! committed baseline, `--check` gates CI on it):
@@ -75,17 +86,18 @@
 //! Every stochastic bench takes a global `--seed` (Poisson arrivals,
 //! Zipf draws, fault injection all derive from it, so any run is
 //! reproducible from the command line). Defaults: `dcs` 0xDC5,
-//! `workload`/`faults`/`retx` 0x0C3A.
+//! `workload`/`faults`/`retx`/`fabric` 0x0C3A.
 //!
 //! Flags are only accepted by the bench they belong to; every other
 //! bench id rejects stray arguments loudly (a typo must not green-wash
 //! a CI smoke step).
 
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
+use crate::fabric::FabricConfig;
 use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
-    fig5, fig6, fig7, fig8, fig_loadcurve, fig_retx, fig_throughput, selfperf, table2, table3,
-    Scale,
+    fig5, fig6, fig7, fig8, fig_fabric, fig_loadcurve, fig_retx, fig_throughput, selfperf, table2,
+    table3, Scale,
 };
 use crate::transport::RelMode;
 use crate::proto::messages::CohOp;
@@ -111,7 +123,7 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|selfperf|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|selfperf|all]|check|trace-demo>\n\
                  dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
                                  --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N --json\n\
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
@@ -123,8 +135,10 @@ pub fn main_entry() {
                                  --ops 1200 --scenario {scenarios} --mode gbn|sr --adaptive-rto --json\n\
                  retx flags:     --ber 1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8 --seed 7\n\
                                  --slices 4 --rate 2e6 --ops 1200 --scenario {scenarios} --json\n\
+                 fabric flags:   --nodes 1,2,4 --migrate on|off|both --threshold 8 --slices 2\n\
+                                 --rate 2e6 --ops 1600 --scenario {scenarios} --theta 0.99 --seed 7 --json\n\
                  selfperf flags: --check BENCH_6.json --record BENCH_6.json --tolerance 0.25 --json\n\
-                 seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx 0x0C3A)\n\
+                 seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx/fabric 0x0C3A)\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?}; selfperf ignores it)",
                 scenarios = Scenario::preset_names().join("|")
             );
@@ -637,6 +651,138 @@ impl RetxArgs {
     }
 }
 
+/// Parsed `eci bench fabric` flags: multi-node scale-out sweep
+/// (`harness::fig_fabric`). `--rate` is the *per-node* offered rate
+/// (default: node-saturating); `--ops` is the fabric-wide total.
+#[derive(Clone, Debug)]
+pub struct FabricArgs {
+    /// Node counts to sweep.
+    pub nodes: Vec<u8>,
+    /// Migration settings to run each node count at.
+    pub modes: Vec<bool>,
+    /// Remote-access threshold before a line migrates.
+    pub threshold: u32,
+    /// Directory slices per node.
+    pub slices: usize,
+    pub scenario: String,
+    pub theta: f64,
+    /// Fixed per-node offered rate; default saturates one node.
+    pub rate: Option<f64>,
+    /// `--json`: emit the table as JSON alongside the markdown.
+    pub json: bool,
+    pub cfg: OpenLoopConfig,
+}
+
+impl FabricArgs {
+    pub fn defaults(scale: Scale) -> FabricArgs {
+        let base = FabricConfig::default();
+        FabricArgs {
+            nodes: fig_fabric::node_sweep(scale),
+            modes: vec![false, true],
+            threshold: base.threshold,
+            slices: base.slices,
+            scenario: "hot-kvs".into(),
+            theta: 0.99,
+            rate: None,
+            json: false,
+            cfg: OpenLoopConfig { ops: fig_fabric::ops_for(scale), ..Default::default() },
+        }
+    }
+
+    /// Parse `--flag value` pairs (`--json` is a bare flag); unknown
+    /// flags are errors.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<FabricArgs, String> {
+        let mut out = FabricArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            if flag == "--json" {
+                out.json = true;
+                continue;
+            }
+            let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+            match flag.as_str() {
+                "--nodes" => {
+                    let xs = val
+                        .split(',')
+                        .map(|s| {
+                            s.trim()
+                                .parse::<u8>()
+                                .map_err(|_| format!("bad node count {s:?}"))
+                                .and_then(|n| {
+                                    if (1..=16).contains(&n) {
+                                        Ok(n)
+                                    } else {
+                                        Err(format!("--nodes must be in 1..=16, got {s:?}"))
+                                    }
+                                })
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if xs.is_empty() {
+                        return Err("--nodes needs at least one value".into());
+                    }
+                    out.nodes = xs;
+                }
+                "--migrate" => {
+                    out.modes = match val.as_str() {
+                        "on" => vec![true],
+                        "off" => vec![false],
+                        "both" => vec![false, true],
+                        _ => {
+                            return Err(format!(
+                                "bad --migrate {val:?} (have: on, off, both)"
+                            ))
+                        }
+                    };
+                }
+                "--threshold" => {
+                    let t: u32 = val.parse().map_err(|_| format!("bad threshold {val:?}"))?;
+                    if t == 0 {
+                        return Err("--threshold must be >= 1".into());
+                    }
+                    out.threshold = t;
+                }
+                "--slices" => {
+                    let s: usize =
+                        val.parse().map_err(|_| format!("bad slice count {val:?}"))?;
+                    if s == 0 {
+                        return Err("--slices must be >= 1".into());
+                    }
+                    out.slices = s;
+                }
+                "--rate" => {
+                    out.rate = Some(parse_rate_scalar(val)?);
+                }
+                "--ops" => {
+                    out.cfg.ops = val.parse().map_err(|_| format!("bad op count {val:?}"))?;
+                }
+                "--scenario" => {
+                    out.scenario = check_scenario(val)?;
+                }
+                "--theta" => {
+                    let t: f64 = val.parse().map_err(|_| format!("bad theta {val:?}"))?;
+                    if !(t >= 0.0 && t.is_finite()) {
+                        return Err(format!("theta must be >= 0, got {val:?}"));
+                    }
+                    out.theta = t;
+                }
+                "--seed" => {
+                    out.cfg.seed = parse_seed(val)?;
+                }
+                other => return Err(format!("unknown fabric flag {other:?}")),
+            }
+        }
+        if out.cfg.ops == 0 {
+            return Err("--ops must be >= 1".into());
+        }
+        Ok(out)
+    }
+
+    /// The per-node offered rate of the sweep.
+    pub fn rate(&self) -> f64 {
+        self.rate.unwrap_or_else(|| fig_fabric::saturating_rate(&self.cfg))
+    }
+}
+
 /// Parsed `eci bench selfperf` flags: the simulator's own host-side
 /// performance trajectory (`harness::selfperf`). Always runs the full
 /// pinned workload sizes — `ECI_SCALE` deliberately has no effect, so
@@ -796,18 +942,20 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
 /// quietly running the defaults), which green-washes misconfigured CI
 /// smoke steps exactly like an unknown bench id would.
 fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
-    if matches!(which, "dcs" | "workload" | "faults" | "retx" | "selfperf") || rest.is_empty() {
+    if matches!(which, "dcs" | "workload" | "faults" | "retx" | "fabric" | "selfperf")
+        || rest.is_empty()
+    {
         return Ok(());
     }
     Err(format!(
-        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults`, `retx` or `selfperf`)",
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults`, `retx`, `fabric` or `selfperf`)",
         rest.join(" ")
     ))
 }
 
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
-    const KNOWN: [&str; 11] = [
-        "table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx",
+    const KNOWN: [&str; 12] = [
+        "table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx", "fabric",
         "selfperf", "all",
     ];
     if !KNOWN.contains(&which) {
@@ -939,6 +1087,27 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         let scenario = Scenario::preset(&a.scenario, base, 0.99).expect("validated at parse");
         let f = fig_retx::run_custom_with(a.cfg, &scenario, &a.slices, &a.bers, a.knobs, a.rate());
         let t = fig_retx::render(&f);
+        println!("{}", t.to_markdown());
+        if a.json {
+            println!("{}", t.to_json().pretty());
+        }
+    }
+    if matches!(which, "fabric" | "all") {
+        let rest = if which == "fabric" { rest } else { &[] };
+        let a = match FabricArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench fabric: {e}");
+                std::process::exit(2);
+            }
+        };
+        let scenario = Scenario::preset(&a.scenario, fig_fabric::footprint_for(scale), a.theta)
+            .expect("validated at parse");
+        let ol = OpenLoopConfig { rate_per_s: a.rate(), ..a.cfg };
+        let base =
+            FabricConfig { threshold: a.threshold, slices: a.slices, ol, ..Default::default() };
+        let f = fig_fabric::run_custom(base, &scenario, &a.nodes, &a.modes);
+        let t = fig_fabric::render(&f);
         println!("{}", t.to_markdown());
         if a.json {
             println!("{}", t.to_json().pretty());
@@ -1144,6 +1313,7 @@ mod tests {
         assert!(bench_rejects_flags("workload", &s(&["--cached-slices", "2"])).is_ok());
         assert!(bench_rejects_flags("faults", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("retx", &s(&["--ber", "1e-3"])).is_ok());
+        assert!(bench_rejects_flags("fabric", &s(&["--nodes", "2"])).is_ok());
         assert!(bench_rejects_flags("selfperf", &s(&["--check", "b.json"])).is_ok());
         assert!(bench_rejects_flags("table3", &[]).is_ok());
         assert!(bench_rejects_flags("all", &[]).is_ok());
@@ -1155,6 +1325,7 @@ mod tests {
         assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
         assert!(FaultsArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
         assert!(RetxArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
+        assert!(FabricArgs::parse(Scale::Ci, &s(&["--json"])).unwrap().json);
         assert!(!DcsArgs::defaults(Scale::Ci).json, "json is opt-in");
         // bare flag composes with valued flags on either side
         let a = DcsArgs::parse(Scale::Ci, &s(&["--slices", "2", "--json", "--ops", "100"])).unwrap();
@@ -1276,7 +1447,71 @@ mod tests {
         let f = FaultsArgs::parse(Scale::Ci, &s(&["--seed", "7"])).unwrap();
         assert_eq!(f.knobs.seed, 7, "--seed drives fault injection");
         assert_eq!(f.cfg.seed, 7, "--seed drives the traffic draws too");
+        let fb = FabricArgs::parse(Scale::Ci, &s(&["--seed", "0x7AB"])).unwrap();
+        assert_eq!(fb.cfg.seed, 0x7AB, "fabric takes the global seed too");
+        assert_eq!(FabricArgs::defaults(Scale::Ci).cfg.seed, 0x0C3A, "documented default");
         assert!(DcsArgs::parse(Scale::Ci, &s(&["--seed", "nope"])).is_err());
+    }
+
+    #[test]
+    fn fabric_defaults_and_full_flag_set() {
+        let a = FabricArgs::defaults(Scale::Ci);
+        assert_eq!(a.cfg.ops, fig_fabric::ops_for(Scale::Ci));
+        assert_eq!(a.nodes, fig_fabric::node_sweep(Scale::Ci));
+        assert_eq!(a.modes, vec![false, true], "both migration settings by default");
+        assert_eq!(a.scenario, "hot-kvs");
+        assert_eq!(a.threshold, FabricConfig::default().threshold);
+        assert_eq!(a.slices, FabricConfig::default().slices);
+        assert!(a.rate() > 0.0, "a default per-node rate must exist");
+        let a = FabricArgs::parse(
+            Scale::Ci,
+            &s(&[
+                "--nodes", "1,2,4",
+                "--migrate", "on",
+                "--threshold", "4",
+                "--slices", "1",
+                "--rate", "2e6",
+                "--ops", "900",
+                "--scenario", "uniform",
+                "--theta", "1.1",
+                "--seed", "7",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(a.nodes, vec![1, 2, 4]);
+        assert_eq!(a.modes, vec![true]);
+        assert_eq!(a.threshold, 4);
+        assert_eq!(a.slices, 1);
+        assert_eq!(a.rate(), 2e6);
+        assert_eq!(a.cfg.ops, 900);
+        assert_eq!(a.scenario, "uniform");
+        assert_eq!(a.theta, 1.1);
+        assert_eq!(a.cfg.seed, 7);
+        let a = FabricArgs::parse(Scale::Ci, &s(&["--migrate", "off"])).unwrap();
+        assert_eq!(a.modes, vec![false]);
+        let a = FabricArgs::parse(Scale::Ci, &s(&["--migrate", "both"])).unwrap();
+        assert_eq!(a.modes, vec![false, true]);
+    }
+
+    #[test]
+    fn fabric_rejects_malformed_input() {
+        let bad = |xs: &[&str]| FabricArgs::parse(Scale::Ci, &s(xs)).is_err();
+        assert!(bad(&["--nodes", "0"]), "zero nodes");
+        assert!(bad(&["--nodes", "17"]), "node count beyond the fabric limit");
+        assert!(bad(&["--nodes", "two"]), "non-numeric nodes");
+        assert!(bad(&["--nodes", ""]), "empty node list");
+        assert!(bad(&["--migrate", "sometimes"]), "bad migrate mode");
+        assert!(bad(&["--threshold", "0"]), "zero threshold");
+        assert!(bad(&["--slices", "0"]), "zero slices");
+        assert!(bad(&["--rate", "-1"]), "negative rate");
+        assert!(bad(&["--ops", "0"]), "zero ops");
+        assert!(bad(&["--scenario", "nope"]), "unknown scenario");
+        assert!(bad(&["--theta", "-0.5"]), "negative theta");
+        assert!(bad(&["--wat", "1"]), "unknown flag");
+        assert!(bad(&["--nodes"]), "missing value");
+        // workload/faults-only knobs are stray here and must fail loudly
+        assert!(bad(&["--cached-slices", "2"]), "no cached sweep on fabric");
+        assert!(bad(&["--ber", "1e-3"]), "fault knobs belong to `faults`");
     }
 
     #[test]

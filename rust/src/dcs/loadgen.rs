@@ -442,7 +442,7 @@ impl LoadGen {
                     self.eng.schedule_at(t, Ev::Poll(s as u32));
                     break;
                 }
-                Some(SliceService::Done(ready, _, fx)) => self.handle_effects(ready, fx),
+                Some(SliceService::Done(ready, _, _, fx)) => self.handle_effects(ready, fx),
             }
         }
     }

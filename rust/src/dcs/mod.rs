@@ -226,8 +226,11 @@ pub enum SliceService {
     Busy(Time),
     /// One message was serviced; its effects are ready at `t`. The
     /// serviced VC is reported so a link-framed ingress can return the
-    /// frame's credit when the slice frees the buffer slot.
-    Done(Time, VcId, Vec<HomeEffect>),
+    /// frame's credit when the slice frees the buffer slot, and the
+    /// serviced line address so multi-source hosts (the inter-node
+    /// fabric) can attribute the service to the right ingress and track
+    /// per-line in-flight work for quiesce protocols.
+    Done(Time, VcId, LineAddr, Vec<HomeEffect>),
 }
 
 /// The sharded directory controller.
@@ -386,8 +389,20 @@ impl Dcs {
         slice.busy_until = done;
         slice.stats.busy += proc;
         slice.stats.served += 1;
+        let addr = msg.addr;
         let fx = slice.home.on_message(msg, ram);
-        Some(SliceService::Done(done, vc, fx))
+        Some(SliceService::Done(done, vc, addr, fx))
+    }
+
+    /// Evict the owning slice's cached copy of `addr` (writing dirty
+    /// data back to `ram`) and drop the line's directory entry, provided
+    /// no remote possession or pending forward is outstanding. Returns
+    /// `true` when the line ends untracked — the handoff step of a home
+    /// migration: after a successful surrender the line's entire state
+    /// lives in the backing store and a new home node can adopt it cold.
+    pub fn surrender_local(&mut self, addr: LineAddr, ram: &mut MemStore) -> bool {
+        let s = self.slice_of(addr);
+        self.slices[s].home.surrender_copy(addr, ram)
     }
 
     /// Total queued messages across slices (staged ingress frames
@@ -551,9 +566,11 @@ mod tests {
         dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
         dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(4)));
         // first service completes at proc
-        let Some(SliceService::Done(t1, vc1, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t1, vc1, a1, fx)) = dcs.service_one(0, Time(0), &mut ram)
+        else {
             panic!("expected service");
         };
+        assert_eq!(a1, LineAddr(2), "Done reports the serviced line");
         assert_eq!(vc1, VcId(0), "even request rides the even Req VC");
         assert_eq!(t1, Time(0) + proc);
         assert_eq!(fx.len(), 1);
@@ -563,9 +580,10 @@ mod tests {
         };
         assert_eq!(t, t1);
         // at t1 the second message goes through
-        let Some(SliceService::Done(t2, _, _)) = dcs.service_one(0, t1, &mut ram) else {
+        let Some(SliceService::Done(t2, _, a2, _)) = dcs.service_one(0, t1, &mut ram) else {
             panic!("expected service");
         };
+        assert_eq!(a2, LineAddr(4));
         assert_eq!(t2, t1 + proc);
         assert!(dcs.service_one(0, t2, &mut ram).is_none(), "queue drained");
         assert_eq!(dcs.slice_stats(0).served, 2);
@@ -578,10 +596,10 @@ mod tests {
         // even line -> slice 0, odd line -> slice 1
         dcs.enqueue(Time(0), Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(2)));
         dcs.enqueue(Time(0), Message::coh_req(ReqId(2), Node::Remote, CohOp::ReadShared, LineAddr(3)));
-        let Some(SliceService::Done(t0, _, _)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t0, _, _, _)) = dcs.service_one(0, Time(0), &mut ram) else {
             panic!()
         };
-        let Some(SliceService::Done(t1, _, _)) = dcs.service_one(1, Time(0), &mut ram) else {
+        let Some(SliceService::Done(t1, _, _, _)) = dcs.service_one(1, Time(0), &mut ram) else {
             panic!()
         };
         // both complete after ONE service latency: true slice parallelism
@@ -613,7 +631,7 @@ mod tests {
                 Box::new([7u8; 128]),
             ),
         );
-        let Some(SliceService::Done(_, vc, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
+        let Some(SliceService::Done(_, vc, _, fx)) = dcs.service_one(0, Time(0), &mut ram) else {
             panic!()
         };
         assert_eq!(vc, VcId(8), "writeback class, even parity");

@@ -1,0 +1,177 @@
+//! Home-migration bookkeeping: talker accounting (who keeps asking for
+//! a line), the quiesce state of lines mid-move, and the parking lot
+//! for requests that arrive during a move.
+//!
+//! The protocol itself (when a move may commit, how parked requests are
+//! re-homed) lives in the fabric host; this module is the pure state so
+//! it can be unit-tested without an event loop.
+
+use std::collections::VecDeque;
+
+use crate::proto::messages::{LineAddr, Message};
+use crate::rustc_hash::FxHashMap as HashMap;
+
+/// Per-line, per-source request counting plus the in-flight move state.
+#[derive(Debug, Default)]
+pub struct Migrator {
+    /// Response-needing requests seen per (line, source node) since the
+    /// line last moved.
+    talkers: HashMap<LineAddr, HashMap<u8, u32>>,
+    /// Lines mid-move -> target node. While present, new requests for
+    /// the line park instead of entering the directory.
+    migrating: HashMap<LineAddr, u8>,
+    /// Requests (source node, message with its *original* id) that
+    /// arrived mid-move, in arrival order.
+    parked: HashMap<LineAddr, VecDeque<(u8, Message)>>,
+    /// Messages for the line currently admitted into a directory and
+    /// not yet serviced; a move can only commit at zero.
+    live: HashMap<LineAddr, u32>,
+}
+
+impl Migrator {
+    pub fn new() -> Migrator {
+        Migrator::default()
+    }
+
+    /// Count a response-needing request for `addr` from `src`. Returns
+    /// `true` when this request should *trigger* a move of `addr` to
+    /// `src`: the count reached `threshold`, `src` is not already the
+    /// home, and `src` dominates every other talker by at least 2x (a
+    /// line two nodes fight over stays put rather than ping-ponging).
+    pub fn note(&mut self, addr: LineAddr, src: u8, home: u8, threshold: u32) -> bool {
+        let by_src = self.talkers.entry(addr).or_default();
+        let n = by_src.entry(src).or_insert(0);
+        *n += 1;
+        let n = *n;
+        if src == home || n < threshold || self.migrating.contains_key(&addr) {
+            return false;
+        }
+        by_src.iter().all(|(&s, &c)| s == src || n >= 2 * c)
+    }
+
+    pub fn begin(&mut self, addr: LineAddr, target: u8) {
+        let prev = self.migrating.insert(addr, target);
+        debug_assert!(prev.is_none(), "line already migrating");
+    }
+
+    pub fn target_of(&self, addr: LineAddr) -> Option<u8> {
+        self.migrating.get(&addr).copied()
+    }
+
+    pub fn park(&mut self, addr: LineAddr, src: u8, msg: Message) {
+        self.parked.entry(addr).or_default().push_back((src, msg));
+    }
+
+    pub fn parked_count(&self, addr: LineAddr) -> usize {
+        self.parked.get(&addr).map_or(0, |q| q.len())
+    }
+
+    /// Take the parking lot for `addr` (commit or abort), in arrival
+    /// order.
+    pub fn take_parked(&mut self, addr: LineAddr) -> VecDeque<(u8, Message)> {
+        self.parked.remove(&addr).unwrap_or_default()
+    }
+
+    /// A message for `addr` entered a directory.
+    pub fn live_inc(&mut self, addr: LineAddr) {
+        *self.live.entry(addr).or_insert(0) += 1;
+    }
+
+    /// A message for `addr` finished service; returns the remaining
+    /// live count.
+    pub fn live_dec(&mut self, addr: LineAddr) -> u32 {
+        match self.live.get_mut(&addr) {
+            Some(n) => {
+                *n -= 1;
+                let left = *n;
+                if left == 0 {
+                    self.live.remove(&addr);
+                }
+                left
+            }
+            None => {
+                debug_assert!(false, "live_dec without live_inc for {addr}");
+                0
+            }
+        }
+    }
+
+    pub fn live(&self, addr: LineAddr) -> u32 {
+        self.live.get(&addr).copied().unwrap_or(0)
+    }
+
+    /// The move of `addr` is over (committed or aborted): drop its move
+    /// state and talker history so accounting restarts fresh at the new
+    /// home.
+    pub fn end(&mut self, addr: LineAddr) {
+        self.migrating.remove(&addr);
+        self.talkers.remove(&addr);
+        debug_assert!(!self.parked.contains_key(&addr), "ending a move with parked requests");
+    }
+
+    /// Lines currently mid-move (diagnostics / settle assertions).
+    pub fn in_flight(&self) -> usize {
+        self.migrating.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::messages::{CohOp, ReqId};
+    use crate::proto::states::Node;
+
+    #[test]
+    fn triggers_at_threshold_for_dominant_remote_talker() {
+        let mut m = Migrator::new();
+        let a = LineAddr(9);
+        // two requests below threshold: no trigger
+        assert!(!m.note(a, 1, 0, 3));
+        assert!(!m.note(a, 1, 0, 3));
+        // third reaches threshold, src 1 dominates (sole talker)
+        assert!(m.note(a, 1, 0, 3));
+        // requests from the line's own home never trigger
+        let b = LineAddr(10);
+        for _ in 0..10 {
+            assert!(!m.note(b, 0, 0, 3));
+        }
+    }
+
+    #[test]
+    fn contended_lines_stay_put() {
+        let mut m = Migrator::new();
+        let a = LineAddr(5);
+        // two nodes alternate: neither ever doubles the other
+        for _ in 0..20 {
+            assert!(!m.note(a, 1, 0, 3), "contended line must not ping-pong");
+            assert!(!m.note(a, 2, 0, 3), "contended line must not ping-pong");
+        }
+    }
+
+    #[test]
+    fn live_and_park_bookkeeping() {
+        let mut m = Migrator::new();
+        let a = LineAddr(7);
+        m.live_inc(a);
+        m.live_inc(a);
+        assert_eq!(m.live(a), 2);
+        assert_eq!(m.live_dec(a), 1);
+        assert_eq!(m.live_dec(a), 0);
+        assert_eq!(m.live(a), 0);
+
+        m.begin(a, 2);
+        assert_eq!(m.target_of(a), Some(2));
+        let msg = Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, a);
+        m.park(a, 1, msg);
+        assert_eq!(m.parked_count(a), 1);
+        let q = m.take_parked(a);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].0, 1);
+        m.end(a);
+        assert_eq!(m.target_of(a), None);
+        assert_eq!(m.in_flight(), 0);
+        // talker history restarted: counting begins again
+        assert!(!m.note(a, 1, 0, 2));
+        assert!(m.note(a, 1, 0, 2));
+    }
+}

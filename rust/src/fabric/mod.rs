@@ -1,0 +1,1747 @@
+//! fabric — the N-node scale-out composition of the two-socket unit
+//! cell.
+//!
+//! Every node is a full open-loop cell (its own sliced directory, FPGA
+//! DRAM, KVS pool, streaming/caching client behind real link framing —
+//! exactly the [`crate::workload::openloop`] machinery), and the nodes
+//! are joined by an inter-node fabric: one framed, credit-managed,
+//! optionally reliable link pair per ordered node pair, the same
+//! [`FramedIngress`] transport the intra-node links use.
+//!
+//! Three mechanisms make it a coherence fabric rather than N isolated
+//! machines (DESIGN.md §"The fabric subsystem"):
+//!
+//! * **Global interleave** ([`route::Interleave`]) — every line has
+//!   exactly one home node (`addr % nodes`, plus a sparse override
+//!   table for migrated lines). A request whose line homes elsewhere is
+//!   *forwarded*: the local hop's credit is returned, the message
+//!   crosses the fabric link, and the response crosses back — the
+//!   two-hop remote-fill path whose cost the `fig_fabric` experiment
+//!   measures.
+//! * **Id translation** ([`route::IdTranslator`]) — each node's client
+//!   numbers its transactions independently, so requests from N clients
+//!   meeting at one home directory would collide. The forwarding point
+//!   swaps the id for a fabric-unique one (bit 31 set) and the
+//!   responding home restores the original, because the source client
+//!   matches responses by id.
+//! * **Home migration** ([`migrate::Migrator`]) — a line whose traffic
+//!   is dominated by one remote node moves its home there.  The move is
+//!   a quiesce-and-handoff: new transactions for the line park, in-
+//!   flight ones drain (live count reaches zero), the old home flushes
+//!   any cached copy and drops its directory entry
+//!   ([`crate::dcs::Dcs::surrender_local`]), the backing bytes and the
+//!   interleave entry move, and the parked requests are re-injected at
+//!   the new home — no request ever observes the line mid-move.  An
+//!   `UpgradeS2E` arriving mid-move *aborts* the move instead of
+//!   parking: its issuer holds the line in `S`, so the line could never
+//!   quiesce while the upgrade waits.
+//!
+//! Determinism carries over from the unit cell: with one node, the
+//! fabric's RNG stream, event sequence, and settled-state digest are
+//! bit-identical to a bare [`crate::workload::OpenLoop`] (the
+//! `one_node_fabric_equals_openloop` gate in `tests/fabric.rs`).
+
+pub mod migrate;
+pub mod route;
+
+pub use migrate::Migrator;
+pub use route::{IdTranslator, Interleave};
+
+use std::collections::VecDeque;
+
+use crate::agents::cache::Cache;
+use crate::agents::dram::{Dram, MemStore};
+use crate::agents::home::HomeEffect;
+use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
+use crate::dcs::{Dcs, SliceService};
+use crate::memctl::KvsService;
+use crate::obs::{Obs, ObsConfig, ObsReport, Registry, Stage};
+use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind};
+use crate::proto::spec::generate_remote;
+use crate::proto::states::Node;
+use crate::proto::transitions::reference_transitions;
+use crate::rustc_hash::{FxHashMap as HashMap, FxHashSet as HashSet};
+use crate::sim::engine::Engine;
+use crate::sim::rng::Rng;
+use crate::sim::stats::{Counters, Histogram};
+use crate::sim::time::{Duration, Time};
+use crate::transport::{vc_for, Control, Frame, FramedIngress, VcId};
+use crate::workload::openloop::OpenLoopConfig;
+use crate::workload::sampler::{SampleKind, TrafficSampler};
+use crate::workload::scenario::Scenario;
+
+/// Fabric parameters. The per-node cell (offered rate, client style,
+/// link, directory pipeline) comes from the embedded
+/// [`OpenLoopConfig`]; `rate_per_s` is *per node* while `ops` is the
+/// fabric-wide total (split evenly, remainder to the low nodes).
+#[derive(Clone, Copy, Debug)]
+pub struct FabricConfig {
+    pub nodes: u8,
+    /// Enable threshold-based home migration.
+    pub migrate: bool,
+    /// Response-needing requests from one remote node before its lines
+    /// migrate toward it.
+    pub threshold: u32,
+    /// Directory slices per node.
+    pub slices: usize,
+    pub ol: OpenLoopConfig,
+}
+
+impl Default for FabricConfig {
+    fn default() -> FabricConfig {
+        FabricConfig {
+            nodes: 2,
+            migrate: false,
+            threshold: 8,
+            slices: 2,
+            ol: OpenLoopConfig::default(),
+        }
+    }
+}
+
+/// Per-node results.
+#[derive(Clone, Debug)]
+pub struct FabricNodeReport {
+    pub node: usize,
+    pub completed: u64,
+    /// Arrival-to-completion latency of this node's operations, ps.
+    pub lat: Histogram,
+    pub fills_local: u64,
+    pub fills_remote: u64,
+    pub migrations_in: u64,
+    pub migrations_out: u64,
+    pub credit_stalls: u64,
+    pub counters: Counters,
+}
+
+/// Results of one fabric run.
+#[derive(Debug)]
+pub struct FabricReport {
+    pub scenario: String,
+    pub nodes: usize,
+    pub migrate: bool,
+    /// Aggregate configured arrival rate (per-node rate x nodes).
+    pub offered_per_s: f64,
+    /// Aggregate completions over total simulated time.
+    pub delivered_per_s: f64,
+    pub completed: u64,
+    pub sim_time: Time,
+    /// Fabric-wide operation latency: the per-node histograms merged
+    /// ([`Histogram::merge`]), ps.
+    pub lat: Histogram,
+    /// Per-frame inter-node hop latency (launch to landing), ps — empty
+    /// on a 1-node fabric.
+    pub hop_lat: Histogram,
+    /// Fills served by the requester's own home slice vs. across the
+    /// fabric (two-hop path).
+    pub fills_local: u64,
+    pub fills_remote: u64,
+    /// Committed home migrations.
+    pub migrations: u64,
+    /// Lines living away from their natural interleave home at the end.
+    pub moved_lines: usize,
+    /// Simulator events dispatched (host-side cost; the selfperf
+    /// metric).
+    pub events: u64,
+    pub per_node: Vec<FabricNodeReport>,
+    pub counters: Counters,
+}
+
+impl FabricReport {
+    pub fn p50_ns(&self) -> f64 {
+        self.lat.p50() as f64 / 1000.0
+    }
+    pub fn p99_ns(&self) -> f64 {
+        self.lat.p99() as f64 / 1000.0
+    }
+    pub fn p999_ns(&self) -> f64 {
+        self.lat.p999() as f64 / 1000.0
+    }
+    pub fn hop_p99_ns(&self) -> f64 {
+        self.hop_lat.p99() as f64 / 1000.0
+    }
+    /// Remote share of all coherence fills.
+    pub fn remote_fill_frac(&self) -> f64 {
+        let total = self.fills_local + self.fills_remote;
+        if total == 0 {
+            0.0
+        } else {
+            self.fills_remote as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum OpKind {
+    Read,
+    Write,
+    Chase { left: u64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct OpCtx {
+    kind: OpKind,
+    addr: LineAddr,
+    started: Time,
+    active: bool,
+}
+
+/// Where an admitted directory message came from — decides where its
+/// held request-direction credit flows back to when the slice consumes
+/// it.
+#[derive(Clone, Copy, Debug)]
+enum Source {
+    /// The home node's own client link.
+    Local,
+    /// A fabric channel's request direction.
+    Chan(u16),
+    /// Re-injected after parking (its original credit was returned at
+    /// park time).
+    Parked,
+}
+
+/// What the migration gate decided about an arriving request.
+enum Gate {
+    Admit,
+    Park,
+}
+
+/// One node: the full open-loop unit cell, minus the engine (shared)
+/// and the fabric-global state.
+struct NodeCell {
+    dcs: Dcs,
+    /// Full global backing image. Only the stripe this node homes is
+    /// authoritative; chase pointers (never rewritten) are valid
+    /// everywhere.
+    mem: MemStore,
+    dram: Dram,
+    kvs: KvsService,
+    remote: RemoteAgent,
+    cache: Cache,
+    /// Client -> local home slice (requests).
+    to_home: FramedIngress,
+    /// Local home slice -> client (responses).
+    to_cpu: FramedIngress,
+    arrivals: Arrivals,
+    traffic_rng: Rng,
+    sampler: TrafficSampler,
+    /// Arrivals this node generates (its share of the fabric total).
+    quota: u64,
+    ops: Vec<OpCtx>,
+    free: Vec<u32>,
+    waiters: HashMap<LineAddr, Vec<u32>>,
+    chase_ids: HashSet<u32>,
+    issued: u64,
+    completed: u64,
+    poll_at: Vec<Time>,
+    peak_in_flight: u32,
+    retx_pending: [bool; 2],
+    retx_seen_acked: [u64; 2],
+    ack_flush_pending: [bool; 2],
+    /// Per-(slice, vc) provenance of admitted messages, matched by line
+    /// address at service time (see [`Source`]).
+    prov: HashMap<(usize, u8), VecDeque<(LineAddr, Source)>>,
+    lat: Histogram,
+    /// Inter-node hop latency of frames landing at this node.
+    hop_lat: Histogram,
+    counters: Counters,
+}
+
+/// One ordered node pair's fabric link: requests src -> dst, responses
+/// dst -> src, each a full framed/credit/rel ingress.
+struct FabChan {
+    src: u8,
+    dst: u8,
+    req: FramedIngress,
+    rsp: FramedIngress,
+    /// Per-direction rel-link timer state (0 = req, 1 = rsp).
+    retx_pending: [bool; 2],
+    retx_seen_acked: [u64; 2],
+    ack_flush_pending: [bool; 2],
+}
+
+enum Ev {
+    // -- node-local (the open-loop cell, node-tagged) --
+    Arrive(u8),
+    Step(u8, u32),
+    LandHome(u8, Box<Frame>),
+    LandCpu(u8, Box<Frame>),
+    HomeSend(u8, Box<Message>),
+    CtlHome(u8, Control),
+    CtlCpu(u8, Control),
+    CreditHome(u8, VcId),
+    CreditCpu(u8, VcId),
+    Poll(u8, u32),
+    RetxHome(u8),
+    RetxCpu(u8),
+    AckFlushHome(u8),
+    AckFlushCpu(u8),
+    // -- fabric channels (chan-index-tagged) --
+    FabLandReq(u16, Box<Frame>),
+    FabLandRsp(u16, Box<Frame>),
+    /// A home-side response is ready for a channel's return direction.
+    FabSendRsp(u16, Box<Message>),
+    FabCtlReq(u16, Control),
+    FabCtlRsp(u16, Control),
+    FabCreditReq(u16, VcId),
+    FabCreditRsp(u16, VcId),
+    FabRetxReq(u16),
+    FabRetxRsp(u16),
+    FabAckFlushReq(u16),
+    FabAckFlushRsp(u16),
+    /// Hand a message (original id restored) from node `2` to home `0`
+    /// directly: parked-request re-injection after a migration commits
+    /// or aborts, and post-commit races chasing a moved line.
+    FabInject(u8, Box<Message>, u8),
+}
+
+use crate::workload::arrival::Arrivals;
+
+fn chan_idx(src: u8, dst: u8, nodes: u8) -> u16 {
+    debug_assert_ne!(src, dst, "no self-channel");
+    src as u16 * nodes as u16 + dst as u16
+}
+
+/// Span-tracer keys must be fabric-unique: node in the top bits, the
+/// client's transaction id below. With one node this is the identity
+/// map, so 1-node fabric waterfalls match open-loop ones exactly.
+fn span_key(node: u8, id: u32) -> u32 {
+    debug_assert_eq!(id & 0xFC00_0000, 0, "client ids stay below 2^26");
+    ((node as u32) << 26) | id
+}
+
+/// The N-node fabric host: N open-loop cells on one event engine,
+/// joined by framed inter-node channels, a global interleave, and the
+/// migration machinery.
+pub struct Fabric {
+    cfg: FabricConfig,
+    scenario_name: String,
+    eng: Engine<Ev>,
+    nodes: Vec<NodeCell>,
+    /// Dense N x N, `None` on the diagonal; index = src * N + dst.
+    chans: Vec<Option<FabChan>>,
+    interleave: Interleave,
+    xlat: IdTranslator,
+    mig: Migrator,
+    /// Last node granted each line (routes home-initiated `Fwd*` to the
+    /// holder).
+    granted_to: HashMap<LineAddr, u8>,
+    /// Lines per node's traffic window (class windows back to back).
+    window_lines: u64,
+    /// Total lines across all windows.
+    region_lines: u64,
+    completed_total: u64,
+    scratch: Vec<(Time, Frame)>,
+    rx_frames: Vec<Frame>,
+    rx_ctls: Vec<Control>,
+    obs: Option<Obs>,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig, scenario: &Scenario) -> Fabric {
+        assert!(cfg.nodes >= 1, "fabric needs at least one node");
+        assert!(cfg.slices > 0, "need at least one slice per node");
+        assert!(cfg.ol.ops > 0, "need at least one arrival");
+        assert!(
+            !(cfg.migrate && cfg.ol.cached),
+            "home migration requires streaming clients: a caching client \
+             never releases its lines, so a mid-move line would never quiesce"
+        );
+        let n = cfg.nodes as u64;
+        let mut master = Rng::new(cfg.ol.seed);
+        let spec = reference_transitions();
+
+        let window = scenario.total_lines();
+        assert!(window >= 2, "scenario region too small");
+        let region = window * n;
+
+        // Pass 1: everything that draws on the master RNG, node-major in
+        // the exact open-loop order (shuffle, sampler, links, arrivals,
+        // traffic). With one node this is bit-identical to
+        // `OpenLoop::new`, which is what the 1-node equivalence gate
+        // checks end to end.
+        struct Proto {
+            chain: Vec<u64>,
+            sampler: TrafficSampler,
+            to_home: FramedIngress,
+            to_cpu: FramedIngress,
+            arrivals: Arrivals,
+            traffic_rng: Rng,
+        }
+        let mut protos: Vec<Proto> = Vec::with_capacity(cfg.nodes as usize);
+        for node in 0..n {
+            let mut chain: Vec<u64> = (0..window).collect();
+            master.shuffle(&mut chain);
+            let sampler = TrafficSampler::build(scenario, &mut master);
+            let to_home = match cfg.ol.machine.rel {
+                Some(mut rc) => {
+                    rc.faults.seed = rc.faults.seed.wrapping_add(2 * node);
+                    FramedIngress::with_rel(cfg.ol.machine.link, Node::Remote, master.fork(2), rc)
+                }
+                None => FramedIngress::new(cfg.ol.machine.link, Node::Remote, master.fork(2)),
+            };
+            let to_cpu = match cfg.ol.machine.rel {
+                // every link direction draws an independent fault stream
+                Some(mut rc) => {
+                    rc.faults.seed = rc.faults.seed.wrapping_add(2 * node + 1);
+                    FramedIngress::with_rel(cfg.ol.machine.link, Node::Home, master.fork(3), rc)
+                }
+                None => FramedIngress::new(cfg.ol.machine.link, Node::Home, master.fork(3)),
+            };
+            let arrivals = Arrivals::new(cfg.ol.arrivals, cfg.ol.rate_per_s, master.fork(4));
+            let traffic_rng = master.fork(5);
+            protos.push(Proto { chain, sampler, to_home, to_cpu, arrivals, traffic_rng });
+        }
+
+        // Fabric channels draw after all nodes (a 1-node fabric builds
+        // none, leaving the stream untouched).
+        let mut chans: Vec<Option<FabChan>> = Vec::with_capacity((n * n) as usize);
+        for s in 0..cfg.nodes {
+            for d in 0..cfg.nodes {
+                if s == d {
+                    chans.push(None);
+                    continue;
+                }
+                let c = s as u64 * n + d as u64;
+                let req = match cfg.ol.machine.rel {
+                    Some(mut rc) => {
+                        rc.faults.seed = rc.faults.seed.wrapping_add(2 * n + 2 * c);
+                        FramedIngress::with_rel(
+                            cfg.ol.machine.link,
+                            Node::Remote,
+                            master.fork(1000 + 2 * c),
+                            rc,
+                        )
+                    }
+                    None => {
+                        FramedIngress::new(cfg.ol.machine.link, Node::Remote, master.fork(1000 + 2 * c))
+                    }
+                };
+                let rsp = match cfg.ol.machine.rel {
+                    Some(mut rc) => {
+                        rc.faults.seed = rc.faults.seed.wrapping_add(2 * n + 2 * c + 1);
+                        FramedIngress::with_rel(
+                            cfg.ol.machine.link,
+                            Node::Home,
+                            master.fork(1000 + 2 * c + 1),
+                            rc,
+                        )
+                    }
+                    None => FramedIngress::new(
+                        cfg.ol.machine.link,
+                        Node::Home,
+                        master.fork(1000 + 2 * c + 1),
+                    ),
+                };
+                chans.push(Some(FabChan {
+                    src: s,
+                    dst: d,
+                    req,
+                    rsp,
+                    retx_pending: [false; 2],
+                    retx_seen_acked: [0; 2],
+                    ack_flush_pending: [false; 2],
+                }));
+            }
+        }
+
+        // Global backing image: node m's window holds lines
+        // [m*window, (m+1)*window); chase chains stay inside their
+        // window (pointer = m*window + chain_m[i]).
+        let mut image: Vec<[u8; 128]> = Vec::with_capacity(region as usize);
+        for (m, p) in protos.iter().enumerate() {
+            for i in 0..window {
+                let g = m as u64 * window + i;
+                let mut line = [0u8; 128];
+                line[0..8].copy_from_slice(&g.to_le_bytes());
+                line[120..128]
+                    .copy_from_slice(&(m as u64 * window + p.chain[i as usize]).to_le_bytes());
+                image.push(line);
+            }
+        }
+
+        let quota_base = cfg.ol.ops / n;
+        let quota_rem = cfg.ol.ops % n;
+        let mut cells: Vec<NodeCell> = Vec::with_capacity(cfg.nodes as usize);
+        for (idx, p) in protos.into_iter().enumerate() {
+            let mut mem = MemStore::new(LineAddr(0), (region as usize) * 128);
+            for (g, line) in image.iter().enumerate() {
+                mem.write_line(LineAddr(g as u64), line);
+            }
+            let dcs_cfg = if cfg.ol.home_cached {
+                cfg.ol.machine.dcs_cached_config(cfg.slices)
+            } else {
+                cfg.ol.machine.dcs_config(cfg.slices)
+            };
+            cells.push(NodeCell {
+                dcs: Dcs::with_reference_rules(dcs_cfg),
+                mem,
+                dram: Dram::new(cfg.ol.machine.fpga_dram),
+                kvs: KvsService::new(cfg.ol.kvs_engines),
+                remote: RemoteAgent::new(Node::Remote, generate_remote(&spec), LineAddr(0), region),
+                cache: Cache::new(cfg.ol.machine.cpu.llc_bytes, cfg.ol.machine.cpu.llc_ways),
+                to_home: p.to_home,
+                to_cpu: p.to_cpu,
+                arrivals: p.arrivals,
+                traffic_rng: p.traffic_rng,
+                sampler: p.sampler,
+                quota: quota_base + u64::from((idx as u64) < quota_rem),
+                ops: Vec::new(),
+                free: Vec::new(),
+                waiters: HashMap::default(),
+                chase_ids: HashSet::default(),
+                issued: 0,
+                completed: 0,
+                poll_at: vec![Time::ZERO; cfg.slices],
+                peak_in_flight: 0,
+                retx_pending: [false; 2],
+                retx_seen_acked: [0; 2],
+                ack_flush_pending: [false; 2],
+                prov: HashMap::default(),
+                lat: Histogram::new(),
+                hop_lat: Histogram::new(),
+                counters: Counters::new(),
+            });
+        }
+
+        Fabric {
+            scenario_name: scenario.name.clone(),
+            eng: Engine::new(),
+            nodes: cells,
+            chans,
+            interleave: Interleave::new(cfg.nodes),
+            xlat: IdTranslator::new(),
+            mig: Migrator::new(),
+            granted_to: HashMap::default(),
+            window_lines: window,
+            region_lines: region,
+            completed_total: 0,
+            scratch: Vec::new(),
+            rx_frames: Vec::new(),
+            rx_ctls: Vec::new(),
+            obs: None,
+            cfg,
+        }
+    }
+
+    /// Attach passive observability before running (span tracing and/or
+    /// the telemetry ticker); collect through [`Fabric::run_observed`]
+    /// or [`Fabric::run_settled_observed`].
+    pub fn with_obs(mut self, ocfg: &ObsConfig) -> Fabric {
+        if ocfg.enabled() {
+            self.obs = Some(Obs::new(ocfg));
+        }
+        self
+    }
+
+    /// Run until every arrival on every node has completed.
+    pub fn run(mut self) -> FabricReport {
+        self.run_to_completion();
+        self.report()
+    }
+
+    /// Run to completion, settle every trailing event (releases,
+    /// replays, credit returns, parked re-injections), and digest the
+    /// final global state: for every line, the *home* node's directory
+    /// state and backing bytes. On one node this digest is computed
+    /// exactly as [`crate::workload::OpenLoop::run_settled`] computes
+    /// its own.
+    pub fn run_settled(mut self) -> (FabricReport, u64) {
+        let digest = self.settle();
+        (self.report(), digest)
+    }
+
+    pub fn run_observed(mut self) -> (FabricReport, ObsReport) {
+        self.run_to_completion();
+        let obs = self.finish_obs();
+        (self.report(), obs)
+    }
+
+    pub fn run_settled_observed(mut self) -> (FabricReport, u64, ObsReport) {
+        let digest = self.settle();
+        let obs = self.finish_obs();
+        (self.report(), digest, obs)
+    }
+
+    fn settle(&mut self) -> u64 {
+        self.run_to_completion();
+        while let Some((_, ev)) = self.eng.pop() {
+            self.dispatch(ev);
+            self.obs_tick();
+        }
+        debug_assert_eq!(self.mig.in_flight(), 0, "settled with a migration mid-move");
+        debug_assert_eq!(self.xlat.pending(), 0, "settled with unresolved forwarded ids");
+        self.state_digest()
+    }
+
+    fn run_to_completion(&mut self) {
+        for node in 0..self.cfg.nodes {
+            if self.nodes[node as usize].quota > 0 {
+                self.eng.schedule(Duration::ZERO, Ev::Arrive(node));
+            }
+        }
+        while self.completed_total < self.cfg.ol.ops {
+            let Some((_, ev)) = self.eng.pop() else {
+                let per: Vec<(u64, u64, usize)> = self
+                    .nodes
+                    .iter()
+                    .map(|c| (c.completed, c.quota, c.dcs.pending()))
+                    .collect();
+                panic!(
+                    "fabric deadlock: {} of {} ops complete, {} moves in flight, \
+                     per-node (completed, quota, dcs-pending) {:?}",
+                    self.completed_total,
+                    self.cfg.ol.ops,
+                    self.mig.in_flight(),
+                    per
+                );
+            };
+            self.dispatch(ev);
+            self.obs_tick();
+        }
+    }
+
+    fn obs_tick(&mut self) {
+        let now = self.eng.now();
+        if !self.obs.as_ref().is_some_and(|o| o.tick_due(now)) {
+            return;
+        }
+        let mut obs = self.obs.take().expect("checked above");
+        self.refresh_registry(&mut obs.registry);
+        if let Some(sp) = &obs.spans {
+            obs.registry.gauge("obs.live_spans", sp.live_spans() as f64);
+        }
+        obs.tick(now);
+        self.obs = Some(obs);
+    }
+
+    /// Absorb every node's counter surfaces under `node<N>.`-prefixed
+    /// dotted names (no collisions across nodes), plus the fabric
+    /// channels and the merged rel-link stats.
+    fn refresh_registry(&self, reg: &mut Registry) {
+        let mut rel = None;
+        let mut eat_rel = |ing: &FramedIngress, rel: &mut Option<crate::transport::rel::RelStats>| {
+            if let Some(s) = ing.rel_stats() {
+                match rel {
+                    Some(acc) => acc.merge(&s),
+                    None => *rel = Some(s),
+                }
+            }
+        };
+        for (i, cell) in self.nodes.iter().enumerate() {
+            reg.absorb(&format!("node{i}.workload"), &cell.counters);
+            reg.set(&format!("node{i}.workload.issued"), cell.issued);
+            reg.set(&format!("node{i}.workload.completed"), cell.completed);
+            reg.set(&format!("node{i}.workload.kvs_lookups"), cell.kvs.served);
+            reg.absorb(&format!("node{i}.dcs"), &cell.dcs.counters());
+            cell.dcs.observe_gauges(&format!("node{i}.dcs"), reg);
+            cell.to_home.observe(&format!("node{i}.ingress.to_home"), reg);
+            cell.to_cpu.observe(&format!("node{i}.ingress.to_cpu"), reg);
+            eat_rel(&cell.to_home, &mut rel);
+            eat_rel(&cell.to_cpu, &mut rel);
+        }
+        for ch in self.chans.iter().flatten() {
+            let (s, d) = (ch.src, ch.dst);
+            ch.req.observe(&format!("node{s}.flink{d}.req"), reg);
+            ch.rsp.observe(&format!("node{s}.flink{d}.rsp"), reg);
+            eat_rel(&ch.req, &mut rel);
+            eat_rel(&ch.rsp, &mut rel);
+        }
+        reg.set("fabric.moved_lines", self.interleave.moved_lines() as u64);
+        reg.set("fabric.migrations_in_flight", self.mig.in_flight() as u64);
+        reg.set("fabric.ids_pending", self.xlat.pending() as u64);
+        if let Some(s) = rel {
+            reg.absorb_rel("rel", &s);
+        }
+    }
+
+    fn finish_obs(&mut self) -> ObsReport {
+        let mut obs = self.obs.take().expect("attach obs with with_obs first");
+        self.refresh_registry(&mut obs.registry);
+        obs.tick(self.eng.now());
+        obs.finish()
+    }
+
+    /// FNV-1a over every line's directory state *at its home node* and
+    /// that node's backing bytes.
+    fn state_digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |h: &mut u64, b: u8| {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(FNV_PRIME);
+        };
+        for i in 0..self.region_lines {
+            let addr = LineAddr(i);
+            let home = self.interleave.home_of(addr) as usize;
+            for b in format!("{:?}", self.nodes[home].dcs.state_of(addr)).bytes() {
+                eat(&mut h, b);
+            }
+            for &b in self.nodes[home].mem.read_line(addr).iter() {
+                eat(&mut h, b);
+            }
+        }
+        h
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(n) => self.arrive(n),
+            Ev::Step(n, s) => self.step(n, s),
+            Ev::LandHome(n, f) => self.land_home(n, f),
+            Ev::LandCpu(n, f) => self.land_cpu(n, f),
+            Ev::HomeSend(n, m) => {
+                self.nodes[n as usize].to_cpu.offer(*m);
+                self.pump_cpu(n);
+            }
+            Ev::CtlHome(n, c) => {
+                let now = self.eng.now();
+                self.nodes[n as usize].to_home.on_control(now, c);
+                self.pump_home(n);
+            }
+            Ev::CtlCpu(n, c) => {
+                let now = self.eng.now();
+                self.nodes[n as usize].to_cpu.on_control(now, c);
+                self.pump_cpu(n);
+            }
+            Ev::CreditHome(n, vc) => {
+                self.nodes[n as usize].to_home.credit_return(vc);
+                self.pump_home(n);
+            }
+            Ev::CreditCpu(n, vc) => {
+                self.nodes[n as usize].to_cpu.credit_return(vc);
+                self.pump_cpu(n);
+            }
+            Ev::Poll(n, s) => self.pump_slice(n, s as usize),
+            Ev::RetxHome(n) => self.on_retx(n, 0),
+            Ev::RetxCpu(n) => self.on_retx(n, 1),
+            Ev::AckFlushHome(n) => self.on_ack_flush(n, 0),
+            Ev::AckFlushCpu(n) => self.on_ack_flush(n, 1),
+            Ev::FabLandReq(c, f) => self.fab_land_req(c, f),
+            Ev::FabLandRsp(c, f) => self.fab_land_rsp(c, f),
+            Ev::FabSendRsp(c, m) => {
+                self.chans[c as usize].as_mut().expect("off-diagonal").rsp.offer(*m);
+                self.pump_chan(c, 1);
+            }
+            Ev::FabCtlReq(c, ctl) => {
+                let now = self.eng.now();
+                self.chans[c as usize].as_mut().expect("off-diagonal").req.on_control(now, ctl);
+                self.pump_chan(c, 0);
+            }
+            Ev::FabCtlRsp(c, ctl) => {
+                let now = self.eng.now();
+                self.chans[c as usize].as_mut().expect("off-diagonal").rsp.on_control(now, ctl);
+                self.pump_chan(c, 1);
+            }
+            Ev::FabCreditReq(c, vc) => {
+                self.chans[c as usize].as_mut().expect("off-diagonal").req.credit_return(vc);
+                self.pump_chan(c, 0);
+            }
+            Ev::FabCreditRsp(c, vc) => {
+                self.chans[c as usize].as_mut().expect("off-diagonal").rsp.credit_return(vc);
+                self.pump_chan(c, 1);
+            }
+            Ev::FabRetxReq(c) => self.on_chan_retx(c, 0),
+            Ev::FabRetxRsp(c) => self.on_chan_retx(c, 1),
+            Ev::FabAckFlushReq(c) => self.on_chan_ack_flush(c, 0),
+            Ev::FabAckFlushRsp(c) => self.on_chan_ack_flush(c, 1),
+            Ev::FabInject(h, m, src) => self.fab_inject(h, *m, src),
+        }
+    }
+
+    // -- arrivals -----------------------------------------------------------
+
+    fn arrive(&mut self, n: u8) {
+        if self.nodes[n as usize].issued >= self.nodes[n as usize].quota {
+            return;
+        }
+        self.spawn(n);
+        let cell = &mut self.nodes[n as usize];
+        if cell.issued < cell.quota {
+            let gap = cell.arrivals.next_gap();
+            self.eng.schedule(gap, Ev::Arrive(n));
+        }
+    }
+
+    fn spawn(&mut self, n: u8) {
+        let now = self.eng.now();
+        let base = n as u64 * self.window_lines;
+        let cell = &mut self.nodes[n as usize];
+        let (_, kind, line) = cell.sampler.sample(&mut cell.traffic_rng);
+        let kind = match kind {
+            SampleKind::Read => OpKind::Read,
+            SampleKind::Write => OpKind::Write,
+            SampleKind::Chase { hops } => OpKind::Chase { left: hops },
+        };
+        // each node draws inside its own window: windows are disjoint,
+        // so every line has exactly one *talker* — but its home is
+        // wherever the interleave puts it
+        let ctx = OpCtx { kind, addr: LineAddr(base + line), started: now, active: true };
+        let slot = match cell.free.pop() {
+            Some(s) => {
+                cell.ops[s as usize] = ctx;
+                s
+            }
+            None => {
+                cell.ops.push(ctx);
+                (cell.ops.len() - 1) as u32
+            }
+        };
+        cell.issued += 1;
+        self.step(n, slot);
+    }
+
+    // -- client side --------------------------------------------------------
+
+    /// Single admission point for node `n`'s client traffic toward its
+    /// local home hop (span stage `Issue`).
+    fn offer_home(&mut self, n: u8, m: Message) {
+        if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+            if let MsgKind::CohReq { op } = &m.kind {
+                if op.needs_response() {
+                    sp.on_issue(self.eng.now(), span_key(n, m.id.0));
+                }
+            }
+        }
+        self.nodes[n as usize].to_home.offer(m);
+    }
+
+    fn step(&mut self, n: u8, slot: u32) {
+        let (addr, write, is_chase) = {
+            let o = &self.nodes[n as usize].ops[slot as usize];
+            debug_assert!(o.active, "step on a completed op slot");
+            (o.addr, matches!(o.kind, OpKind::Write), matches!(o.kind, OpKind::Chase { .. }))
+        };
+        let (acc, fx) = {
+            let cell = &mut self.nodes[n as usize];
+            cell.remote.local_access(addr, write, &mut cell.cache)
+        };
+        let mut sent = false;
+        for e in fx {
+            match e {
+                RemoteEffect::Send(m) => {
+                    if is_chase {
+                        if let MsgKind::CohReq { op } = &m.kind {
+                            if op.needs_response() {
+                                self.nodes[n as usize].chase_ids.insert(m.id.0);
+                            }
+                        }
+                    }
+                    self.offer_home(n, m);
+                    sent = true;
+                }
+                RemoteEffect::Stalled => {}
+                RemoteEffect::Filled { .. } => {}
+                RemoteEffect::ForeignVictim(_) => {
+                    self.nodes[n as usize].counters.inc("foreign_victim")
+                }
+            }
+        }
+        if sent {
+            self.pump_home(n);
+        }
+        match acc {
+            Access::Hit => self.access_done(n, slot),
+            Access::Pending => {
+                let cell = &mut self.nodes[n as usize];
+                cell.waiters.entry(addr).or_default().push(slot);
+                if !sent {
+                    cell.counters.inc("mshr_merged");
+                }
+            }
+        }
+    }
+
+    fn access_done(&mut self, n: u8, slot: u32) {
+        let now = self.eng.now();
+        let (kind, addr) = {
+            let o = &self.nodes[n as usize].ops[slot as usize];
+            (o.kind, o.addr)
+        };
+        match kind {
+            OpKind::Write => {
+                if let Some(e) = self.nodes[n as usize].cache.lookup(addr) {
+                    e.data[0..8].copy_from_slice(&now.ps().to_le_bytes());
+                }
+                self.finish(n, slot, addr);
+            }
+            OpKind::Read => self.finish(n, slot, addr),
+            OpKind::Chase { left } => {
+                if left <= 1 {
+                    self.finish(n, slot, addr);
+                    return;
+                }
+                let data = {
+                    let cell = &mut self.nodes[n as usize];
+                    // chase pointers (bytes 120..128) are never
+                    // rewritten, so even a node's stale copy of a
+                    // remote-homed line decodes the right next hop
+                    cell.cache
+                        .peek(addr)
+                        .map(|e| *e.data)
+                        .unwrap_or_else(|| cell.mem.read_line(addr))
+                };
+                let ptr = u64::from_le_bytes(data[120..128].try_into().unwrap());
+                if !self.cfg.ol.cached {
+                    self.release(n, addr);
+                }
+                let o = &mut self.nodes[n as usize].ops[slot as usize];
+                o.addr = LineAddr(ptr % self.region_lines);
+                o.kind = OpKind::Chase { left: left - 1 };
+                self.eng.schedule(self.cfg.ol.hop_think, Ev::Step(n, slot));
+            }
+        }
+    }
+
+    fn finish(&mut self, n: u8, slot: u32, addr: LineAddr) {
+        let now = self.eng.now();
+        {
+            let cell = &mut self.nodes[n as usize];
+            let started = cell.ops[slot as usize].started;
+            cell.lat.record(now.since(started).ps());
+            cell.ops[slot as usize].active = false;
+            cell.completed += 1;
+            cell.free.push(slot);
+        }
+        self.completed_total += 1;
+        if !self.cfg.ol.cached {
+            self.release(n, addr);
+        }
+    }
+
+    fn release(&mut self, n: u8, addr: LineAddr) {
+        let fx = {
+            let cell = &mut self.nodes[n as usize];
+            cell.remote.evict(addr, &mut cell.cache)
+        };
+        let mut sent = false;
+        for e in fx {
+            match e {
+                RemoteEffect::Send(m) => {
+                    self.offer_home(n, m);
+                    sent = true;
+                }
+                RemoteEffect::Stalled => self.nodes[n as usize].counters.inc("release_deferred"),
+                RemoteEffect::Filled { .. } => {}
+                RemoteEffect::ForeignVictim(_) => {
+                    self.nodes[n as usize].counters.inc("foreign_victim")
+                }
+            }
+        }
+        if sent {
+            self.nodes[n as usize].counters.inc("released");
+            self.pump_home(n);
+        }
+    }
+
+    fn wake(&mut self, n: u8, addr: LineAddr) {
+        let Some(slots) = self.nodes[n as usize].waiters.remove(&addr) else { return };
+        for s in slots {
+            self.eng.schedule(Duration::ZERO, Ev::Step(n, s));
+        }
+    }
+
+    // -- node-local link pumping -------------------------------------------
+
+    fn pump_home(&mut self, n: u8) {
+        let now = self.eng.now();
+        let mut out = std::mem::take(&mut self.scratch);
+        {
+            let cell = &mut self.nodes[n as usize];
+            cell.to_home.steal_piggy_from(&mut cell.to_cpu);
+            cell.to_home.pump(now, &mut out);
+        }
+        for (at, f) in out.drain(..) {
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                sp.mark(now, span_key(n, f.msg.id.0), Stage::Launch);
+            }
+            self.eng.schedule_at(at, Ev::LandHome(n, Box::new(f)));
+        }
+        self.scratch = out;
+        let cell = &mut self.nodes[n as usize];
+        cell.peak_in_flight = cell.peak_in_flight.max(cell.to_home.in_flight_total());
+        self.arm_retx(n, 0);
+    }
+
+    fn pump_cpu(&mut self, n: u8) {
+        let now = self.eng.now();
+        let mut out = std::mem::take(&mut self.scratch);
+        {
+            let cell = &mut self.nodes[n as usize];
+            cell.to_cpu.steal_piggy_from(&mut cell.to_home);
+            cell.to_cpu.pump(now, &mut out);
+        }
+        for (at, f) in out.drain(..) {
+            self.eng.schedule_at(at, Ev::LandCpu(n, Box::new(f)));
+        }
+        self.scratch = out;
+        self.arm_retx(n, 1);
+    }
+
+    fn on_retx(&mut self, n: u8, dir: usize) {
+        let cell = &mut self.nodes[n as usize];
+        cell.retx_pending[dir] = false;
+        let ing = if dir == 0 { &mut cell.to_home } else { &mut cell.to_cpu };
+        if ing.rel_unacked() == 0 {
+            return;
+        }
+        if ing.rel_acked() == cell.retx_seen_acked[dir] {
+            ing.rel_force_replay();
+        }
+        if dir == 0 {
+            self.pump_home(n);
+        } else {
+            self.pump_cpu(n);
+        }
+    }
+
+    fn arm_retx(&mut self, n: u8, dir: usize) {
+        let cell = &mut self.nodes[n as usize];
+        let ing = if dir == 0 { &cell.to_home } else { &cell.to_cpu };
+        let Some(rto) = ing.link.rel_rto() else { return };
+        if ing.rel_unacked() == 0 || cell.retx_pending[dir] {
+            return;
+        }
+        cell.retx_seen_acked[dir] = ing.rel_acked();
+        cell.retx_pending[dir] = true;
+        self.eng.schedule(rto, if dir == 0 { Ev::RetxHome(n) } else { Ev::RetxCpu(n) });
+    }
+
+    fn on_ack_flush(&mut self, n: u8, dir: usize) {
+        self.nodes[n as usize].ack_flush_pending[dir] = false;
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        loop {
+            let cell = &mut self.nodes[n as usize];
+            let ing = if dir == 0 { &mut cell.to_home } else { &mut cell.to_cpu };
+            let Some((vc, seq)) = ing.take_piggy_ack() else { break };
+            let ctl = Control::VcAck(vc, seq);
+            self.eng
+                .schedule(ctrl, if dir == 0 { Ev::CtlHome(n, ctl) } else { Ev::CtlCpu(n, ctl) });
+        }
+    }
+
+    fn arm_ack_flush(&mut self, n: u8, dir: usize) {
+        let cell = &mut self.nodes[n as usize];
+        let ing = if dir == 0 { &cell.to_home } else { &cell.to_cpu };
+        if cell.ack_flush_pending[dir] || !ing.rel_has_ack_debt() {
+            return;
+        }
+        cell.ack_flush_pending[dir] = true;
+        self.eng.schedule(
+            crate::transport::rel::ACK_FLUSH_DELAY,
+            if dir == 0 { Ev::AckFlushHome(n) } else { Ev::AckFlushCpu(n) },
+        );
+    }
+
+    // -- routing & admission ------------------------------------------------
+
+    /// A frame from node `n`'s client lands at node `n`'s home hop:
+    /// admit it locally if the line homes here, else forward it across
+    /// the fabric.
+    fn land_home(&mut self, n: u8, frame: Box<Frame>) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        {
+            let cell = &mut self.nodes[n as usize];
+            if let Some((vc, seq)) = frame.ack {
+                cell.to_cpu.on_control(now, Control::VcAck(vc, seq));
+            }
+            cell.to_home.deliver(*frame, &mut delivered, &mut ctls);
+        }
+        for c in ctls.drain(..) {
+            self.eng.schedule(ctrl, Ev::CtlHome(n, c));
+        }
+        self.rx_ctls = ctls;
+        self.arm_ack_flush(n, 0);
+        for f in delivered.drain(..) {
+            self.route_local(n, f);
+        }
+        self.rx_frames = delivered;
+    }
+
+    fn route_local(&mut self, n: u8, mut f: Frame) {
+        let home = self.interleave.home_of(f.msg.addr);
+        if home == n {
+            self.admit_frame(n, n, f, Source::Local);
+            return;
+        }
+        // Two-hop path. The local hop is done with this frame: return
+        // its credit, translate the id of anything that expects a
+        // response (per-node id spaces collide at the remote home), and
+        // put the message on the fabric channel.
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        self.eng.schedule(ctrl, Ev::CreditHome(n, f.vc));
+        if let MsgKind::CohReq { op } = &f.msg.kind {
+            if op.needs_response() && op.initiator() == Node::Remote {
+                f.msg.id = self.xlat.translate(n, f.msg.id);
+            }
+        }
+        self.nodes[n as usize].counters.inc("fab_fwd_out");
+        let c = chan_idx(n, home, self.cfg.nodes);
+        self.chans[c as usize].as_mut().expect("off-diagonal").req.offer(f.msg);
+        self.pump_chan(c, 0);
+    }
+
+    /// The migration gate, run on every client-initiated
+    /// response-needing request reaching home `h` from node `src`.
+    /// Everything else (voluntary downgrades, fwd responses) always
+    /// admits — those are the messages a quiescing line is waiting for.
+    fn migration_gate(&mut self, h: u8, src: u8, msg: &Message) -> Gate {
+        if !self.cfg.migrate {
+            return Gate::Admit;
+        }
+        let addr = msg.addr;
+        let MsgKind::CohReq { op } = msg.kind else { return Gate::Admit };
+        if !op.needs_response() || op.initiator() != Node::Remote {
+            return Gate::Admit;
+        }
+        if self.mig.target_of(addr).is_some() {
+            if matches!(op, CohOp::UpgradeS2E) {
+                // the issuer holds the line in S — it can never quiesce
+                // while this waits, so the move loses
+                self.abort_migration(h, addr);
+                // fall through to fresh accounting below
+            } else {
+                return Gate::Park;
+            }
+        }
+        if self.mig.note(addr, src, h, self.cfg.threshold) {
+            self.mig.begin(addr, src);
+            self.nodes[h as usize].counters.inc("fab_migration_begin");
+            // the trigger request parks too: it completes at the new home
+            return Gate::Park;
+        }
+        Gate::Admit
+    }
+
+    /// Admit a delivered frame into home `h`'s directory (or park it if
+    /// the line is mid-move). `src` is the requesting node; `source`
+    /// says which transport hop holds the credit.
+    fn admit_frame(&mut self, h: u8, src: u8, f: Frame, source: Source) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        match self.migration_gate(h, src, &f.msg) {
+            Gate::Park => {
+                let vc = f.vc;
+                let mut msg = f.msg;
+                // restore the original id before parking: re-injection
+                // happens node-to-node, past the translation point
+                let true_src = if IdTranslator::is_translated(msg.id) {
+                    let (s0, orig) = self.xlat.resolve(msg.id).expect("translated id pending");
+                    msg.id = orig;
+                    s0
+                } else {
+                    src
+                };
+                let addr = msg.addr;
+                self.mig.park(addr, true_src, msg);
+                self.nodes[h as usize].counters.inc("fab_parked");
+                // the message left the wire: release the hop's credit
+                match source {
+                    Source::Local => self.eng.schedule(ctrl, Ev::CreditHome(h, vc)),
+                    Source::Chan(c) => self.eng.schedule(ctrl, Ev::FabCreditReq(c, vc)),
+                    Source::Parked => {}
+                }
+                self.try_commit(h, addr);
+            }
+            Gate::Admit => {
+                if self.cfg.migrate {
+                    self.mig.live_inc(f.msg.addr);
+                }
+                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                    let key = match self.xlat.peek(f.msg.id) {
+                        Some((s0, orig)) => span_key(s0, orig.0),
+                        None => span_key(src, f.msg.id.0),
+                    };
+                    sp.mark(now, key, Stage::Deliver);
+                }
+                let addr = f.msg.addr;
+                let vc = f.vc;
+                let cell = &mut self.nodes[h as usize];
+                let s = cell.dcs.enqueue_frame(now, f);
+                cell.prov.entry((s, vc.0)).or_default().push_back((addr, source));
+                self.pump_slice(h, s);
+            }
+        }
+    }
+
+    /// Direct message injection at home `h` (parked re-injection and
+    /// post-commit races). The id is already the original; the credit
+    /// was returned when the message first left its wire.
+    fn fab_inject(&mut self, h: u8, msg: Message, src: u8) {
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let addr = msg.addr;
+        let home = self.interleave.home_of(addr);
+        if home != h {
+            // the line moved again while this was in flight: chase it
+            self.nodes[h as usize].counters.inc("fab_late_reforward");
+            self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(msg), src));
+            return;
+        }
+        match self.migration_gate(h, src, &msg) {
+            Gate::Park => {
+                self.mig.park(addr, src, msg);
+                self.nodes[h as usize].counters.inc("fab_parked");
+                self.try_commit(h, addr);
+            }
+            Gate::Admit => {
+                let now = self.eng.now();
+                if self.cfg.migrate {
+                    self.mig.live_inc(addr);
+                }
+                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                    sp.mark(now, span_key(src, msg.id.0), Stage::Deliver);
+                }
+                let vc = vc_for(&msg);
+                let cell = &mut self.nodes[h as usize];
+                let s = cell.dcs.slice_of(addr);
+                cell.dcs.enqueue(now, msg);
+                cell.prov.entry((s, vc.0)).or_default().push_back((addr, Source::Parked));
+                self.pump_slice(h, s);
+            }
+        }
+    }
+
+    // -- home migration -----------------------------------------------------
+
+    /// Commit the move of `addr` away from `h` if the line has fully
+    /// quiesced: nothing admitted and un-serviced (live count zero) and
+    /// the old home able to surrender — no remote possession, no
+    /// pending forward, no stalled events, any dirty home-cache copy
+    /// flushed. Called after every park and every serviced message for
+    /// the line, so the commit happens at the first quiet instant.
+    fn try_commit(&mut self, h: u8, addr: LineAddr) {
+        let Some(target) = self.mig.target_of(addr) else { return };
+        if self.mig.live(addr) != 0 {
+            return;
+        }
+        let surrendered = {
+            let cell = &mut self.nodes[h as usize];
+            let (dcs, mem) = (&mut cell.dcs, &mut cell.mem);
+            dcs.surrender_local(addr, mem)
+        };
+        if !surrendered {
+            return;
+        }
+        // handoff: the old home's backing bytes are now authoritative —
+        // move them, flip the interleave, re-home the parked requests
+        let line = self.nodes[h as usize].mem.read_line(addr);
+        self.nodes[target as usize].mem.write_line(addr, &line);
+        self.interleave.set_home(addr, target);
+        self.granted_to.remove(&addr);
+        self.nodes[h as usize].counters.inc("fab_migrations_out");
+        self.nodes[target as usize].counters.inc("fab_migrations_in");
+        let parked = self.mig.take_parked(addr);
+        self.mig.end(addr);
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        for (src, m) in parked {
+            self.eng.schedule(ctrl, Ev::FabInject(target, Box::new(m), src));
+        }
+    }
+
+    /// Abort the move of `addr` (an `UpgradeS2E` arrived; see
+    /// [`Fabric::migration_gate`]): re-inject everything parked at the
+    /// *current* home and drop the move state.
+    fn abort_migration(&mut self, h: u8, addr: LineAddr) {
+        let parked = self.mig.take_parked(addr);
+        self.mig.end(addr);
+        self.nodes[h as usize].counters.inc("fab_migration_abort");
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        for (src, m) in parked {
+            self.eng.schedule(ctrl, Ev::FabInject(h, Box::new(m), src));
+        }
+    }
+
+    // -- directory service --------------------------------------------------
+
+    fn pump_slice(&mut self, h: u8, s: usize) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        loop {
+            let res = {
+                let cell = &mut self.nodes[h as usize];
+                let (dcs, mem) = (&mut cell.dcs, &mut cell.mem);
+                dcs.service_one(s, now, mem)
+            };
+            match res {
+                None => break,
+                Some(SliceService::Busy(t)) => {
+                    let cell = &mut self.nodes[h as usize];
+                    if cell.poll_at[s] < t {
+                        cell.poll_at[s] = t;
+                        self.eng.schedule_at(t, Ev::Poll(h, s as u32));
+                    }
+                    break;
+                }
+                Some(SliceService::Done(ready, vc, addr, fx)) => {
+                    let source = {
+                        let cell = &mut self.nodes[h as usize];
+                        let q = cell
+                            .prov
+                            .get_mut(&(s, vc.0))
+                            .expect("every serviced message was admitted");
+                        let i = q
+                            .iter()
+                            .position(|(a, _)| *a == addr)
+                            .expect("provenance recorded at admission");
+                        q.remove(i).expect("index from position").1
+                    };
+                    match source {
+                        Source::Local => {
+                            self.eng.schedule_at(ready + ctrl, Ev::CreditHome(h, vc))
+                        }
+                        Source::Chan(c) => {
+                            self.eng.schedule_at(ready + ctrl, Ev::FabCreditReq(c, vc))
+                        }
+                        Source::Parked => {}
+                    }
+                    if self.cfg.migrate {
+                        self.mig.live_dec(addr);
+                    }
+                    self.handle_effects(h, ready, fx);
+                    if self.cfg.migrate {
+                        self.try_commit(h, addr);
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_effects(&mut self, h: u8, ready: Time, fx: Vec<HomeEffect>) {
+        let nodes = self.cfg.nodes;
+        for e in fx {
+            match e {
+                HomeEffect::Respond { mut msg, from_ram } => {
+                    // restore the requester's id and learn who it was
+                    let (src, orig) = if IdTranslator::is_translated(msg.id) {
+                        self.xlat.resolve(msg.id).expect("translated id pending")
+                    } else {
+                        (h, msg.id)
+                    };
+                    let is_chase = self.nodes[src as usize].chase_ids.remove(&orig.0);
+                    let addr = msg.addr;
+                    let t = {
+                        let cell = &mut self.nodes[h as usize];
+                        if is_chase {
+                            cell.counters.inc("chase_via_kvs");
+                            cell.kvs.submit(ready, 1, &mut cell.dram)
+                        } else if from_ram {
+                            cell.dram.read(ready, addr)
+                        } else {
+                            ready
+                        }
+                    };
+                    if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                        let proc = self.nodes[h as usize].dcs.cfg.slice_proc.ps();
+                        let key = span_key(src, orig.0);
+                        sp.mark(Time(ready.ps().saturating_sub(proc)), key, Stage::SvcStart);
+                        sp.mark(ready, key, Stage::SvcDone);
+                        sp.mark(t, key, Stage::Reply);
+                    }
+                    msg.id = orig;
+                    self.granted_to.insert(addr, src);
+                    self.nodes[h as usize]
+                        .counters
+                        .inc(if src == h { "fab_fills_local" } else { "fab_fills_remote" });
+                    if src == h {
+                        self.eng.schedule_at(t, Ev::HomeSend(h, Box::new(msg)));
+                    } else {
+                        self.eng
+                            .schedule_at(t, Ev::FabSendRsp(chan_idx(src, h, nodes), Box::new(msg)));
+                    }
+                }
+                HomeEffect::Fwd { msg } => {
+                    // home-initiated downgrade: route to the last holder
+                    let dst = self.granted_to.get(&msg.addr).copied().unwrap_or(h);
+                    self.nodes[h as usize].counters.inc("fab_fwds");
+                    if dst == h {
+                        self.eng.schedule_at(ready, Ev::HomeSend(h, Box::new(msg)));
+                    } else {
+                        self.eng.schedule_at(
+                            ready,
+                            Ev::FabSendRsp(chan_idx(dst, h, nodes), Box::new(msg)),
+                        );
+                    }
+                }
+                HomeEffect::RamWrite { addr } => {
+                    self.nodes[h as usize].dram.write(ready, addr);
+                }
+                HomeEffect::LocalDone { .. } => {}
+            }
+        }
+    }
+
+    // -- node-local response landing ----------------------------------------
+
+    fn land_cpu(&mut self, n: u8, frame: Box<Frame>) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        {
+            let cell = &mut self.nodes[n as usize];
+            if let Some((avc, seq)) = frame.ack {
+                cell.to_home.on_control(now, Control::VcAck(avc, seq));
+            }
+            cell.to_cpu.deliver(*frame, &mut delivered, &mut ctls);
+        }
+        for c in ctls.drain(..) {
+            self.eng.schedule(ctrl, Ev::CtlCpu(n, c));
+        }
+        self.rx_ctls = ctls;
+        self.arm_ack_flush(n, 1);
+        let mut sent = false;
+        let mut fills: Vec<LineAddr> = Vec::new();
+        for f in delivered.drain(..) {
+            self.eng.schedule(ctrl, Ev::CreditCpu(n, f.vc));
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                if matches!(f.msg.kind, MsgKind::CohRsp { .. }) {
+                    sp.complete(now, span_key(n, f.msg.id.0));
+                }
+            }
+            let fx = {
+                let cell = &mut self.nodes[n as usize];
+                cell.remote.on_message(f.msg, &mut cell.cache)
+            };
+            for e in fx {
+                match e {
+                    RemoteEffect::Send(m) => {
+                        self.offer_home(n, m);
+                        sent = true;
+                    }
+                    RemoteEffect::Filled { addr } => fills.push(addr),
+                    RemoteEffect::Stalled => {}
+                    RemoteEffect::ForeignVictim(_) => {
+                        self.nodes[n as usize].counters.inc("foreign_victim")
+                    }
+                }
+            }
+        }
+        self.rx_frames = delivered;
+        if sent {
+            self.pump_home(n);
+        }
+        for a in fills {
+            self.wake(n, a);
+        }
+    }
+
+    // -- fabric channel pumping ---------------------------------------------
+
+    fn pump_chan(&mut self, c: u16, dir: usize) {
+        let now = self.eng.now();
+        let mut out = std::mem::take(&mut self.scratch);
+        let (src, dst) = {
+            let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+            let (tx, rx) =
+                if dir == 0 { (&mut ch.req, &mut ch.rsp) } else { (&mut ch.rsp, &mut ch.req) };
+            tx.steal_piggy_from(rx);
+            tx.pump(now, &mut out);
+            (ch.src, ch.dst)
+        };
+        let landing = if dir == 0 { dst } else { src };
+        for (at, f) in out.drain(..) {
+            // hop latency accrues to the node the frame lands at —
+            // intentionally NOT a span Launch mark: chan pumps re-send
+            // translated ids, and retransmit-episode accounting belongs
+            // to the client-side link only
+            self.nodes[landing as usize].hop_lat.record_dur(at.since(now));
+            let ev = if dir == 0 {
+                Ev::FabLandReq(c, Box::new(f))
+            } else {
+                Ev::FabLandRsp(c, Box::new(f))
+            };
+            self.eng.schedule_at(at, ev);
+        }
+        self.scratch = out;
+        self.arm_chan_retx(c, dir);
+    }
+
+    /// A forwarded request lands at the far home hop.
+    fn fab_land_req(&mut self, c: u16, frame: Box<Frame>) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        let (h, src) = {
+            let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+            if let Some((vc, seq)) = frame.ack {
+                ch.rsp.on_control(now, Control::VcAck(vc, seq));
+            }
+            ch.req.deliver(*frame, &mut delivered, &mut ctls);
+            (ch.dst, ch.src)
+        };
+        for ctl in ctls.drain(..) {
+            self.eng.schedule(ctrl, Ev::FabCtlReq(c, ctl));
+        }
+        self.rx_ctls = ctls;
+        self.arm_chan_ack_flush(c, 0);
+        for f in delivered.drain(..) {
+            let home = self.interleave.home_of(f.msg.addr);
+            if home == h {
+                self.admit_frame(h, src, f, Source::Chan(c));
+            } else {
+                // the line migrated while this request crossed the
+                // fabric: free the channel credit and chase the new home
+                self.nodes[h as usize].counters.inc("fab_late_reforward");
+                self.eng.schedule(ctrl, Ev::FabCreditReq(c, f.vc));
+                let mut msg = f.msg;
+                let true_src = if IdTranslator::is_translated(msg.id) {
+                    let (s0, orig) = self.xlat.resolve(msg.id).expect("translated id pending");
+                    msg.id = orig;
+                    s0
+                } else {
+                    src
+                };
+                self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(msg), true_src));
+            }
+        }
+        self.rx_frames = delivered;
+    }
+
+    /// A response (or home-initiated fwd) lands back at the requesting
+    /// node's client.
+    fn fab_land_rsp(&mut self, c: u16, frame: Box<Frame>) {
+        let now = self.eng.now();
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let mut delivered = std::mem::take(&mut self.rx_frames);
+        let mut ctls = std::mem::take(&mut self.rx_ctls);
+        let s = {
+            let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+            if let Some((vc, seq)) = frame.ack {
+                ch.req.on_control(now, Control::VcAck(vc, seq));
+            }
+            ch.rsp.deliver(*frame, &mut delivered, &mut ctls);
+            ch.src
+        };
+        for ctl in ctls.drain(..) {
+            self.eng.schedule(ctrl, Ev::FabCtlRsp(c, ctl));
+        }
+        self.rx_ctls = ctls;
+        self.arm_chan_ack_flush(c, 1);
+        let mut sent = false;
+        let mut fills: Vec<LineAddr> = Vec::new();
+        for f in delivered.drain(..) {
+            self.eng.schedule(ctrl, Ev::FabCreditRsp(c, f.vc));
+            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                if matches!(f.msg.kind, MsgKind::CohRsp { .. }) {
+                    sp.complete(now, span_key(s, f.msg.id.0));
+                }
+            }
+            let fx = {
+                let cell = &mut self.nodes[s as usize];
+                cell.remote.on_message(f.msg, &mut cell.cache)
+            };
+            for e in fx {
+                match e {
+                    RemoteEffect::Send(m) => {
+                        self.offer_home(s, m);
+                        sent = true;
+                    }
+                    RemoteEffect::Filled { addr } => fills.push(addr),
+                    RemoteEffect::Stalled => {}
+                    RemoteEffect::ForeignVictim(_) => {
+                        self.nodes[s as usize].counters.inc("foreign_victim")
+                    }
+                }
+            }
+        }
+        self.rx_frames = delivered;
+        if sent {
+            self.pump_home(s);
+        }
+        for a in fills {
+            self.wake(s, a);
+        }
+    }
+
+    fn on_chan_retx(&mut self, c: u16, dir: usize) {
+        {
+            let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+            ch.retx_pending[dir] = false;
+            let ing = if dir == 0 { &mut ch.req } else { &mut ch.rsp };
+            if ing.rel_unacked() == 0 {
+                return;
+            }
+            if ing.rel_acked() == ch.retx_seen_acked[dir] {
+                ing.rel_force_replay();
+            }
+        }
+        self.pump_chan(c, dir);
+    }
+
+    fn arm_chan_retx(&mut self, c: u16, dir: usize) {
+        let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+        let ing = if dir == 0 { &ch.req } else { &ch.rsp };
+        let Some(rto) = ing.link.rel_rto() else { return };
+        if ing.rel_unacked() == 0 || ch.retx_pending[dir] {
+            return;
+        }
+        ch.retx_seen_acked[dir] = ing.rel_acked();
+        ch.retx_pending[dir] = true;
+        self.eng.schedule(rto, if dir == 0 { Ev::FabRetxReq(c) } else { Ev::FabRetxRsp(c) });
+    }
+
+    fn on_chan_ack_flush(&mut self, c: u16, dir: usize) {
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+        self.chans[c as usize].as_mut().expect("off-diagonal").ack_flush_pending[dir] = false;
+        loop {
+            let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+            let ing = if dir == 0 { &mut ch.req } else { &mut ch.rsp };
+            let Some((vc, seq)) = ing.take_piggy_ack() else { break };
+            let ctl = Control::VcAck(vc, seq);
+            self.eng.schedule(
+                ctrl,
+                if dir == 0 { Ev::FabCtlReq(c, ctl) } else { Ev::FabCtlRsp(c, ctl) },
+            );
+        }
+    }
+
+    fn arm_chan_ack_flush(&mut self, c: u16, dir: usize) {
+        let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
+        let ing = if dir == 0 { &ch.req } else { &ch.rsp };
+        if ch.ack_flush_pending[dir] || !ing.rel_has_ack_debt() {
+            return;
+        }
+        ch.ack_flush_pending[dir] = true;
+        self.eng.schedule(
+            crate::transport::rel::ACK_FLUSH_DELAY,
+            if dir == 0 { Ev::FabAckFlushReq(c) } else { Ev::FabAckFlushRsp(c) },
+        );
+    }
+
+    // -- reporting ----------------------------------------------------------
+
+    fn report(self) -> FabricReport {
+        let sim_time = self.eng.now();
+        let mut lat = Histogram::new();
+        let mut hop_lat = Histogram::new();
+        let mut counters = Counters::new();
+        let mut per_node = Vec::with_capacity(self.nodes.len());
+        for (i, cell) in self.nodes.into_iter().enumerate() {
+            // fabric-wide distributions are the per-node histograms
+            // merged — no sample is recorded twice
+            lat.merge(&cell.lat);
+            hop_lat.merge(&cell.hop_lat);
+            let mut nc = cell.dcs.counters();
+            for (k, v) in cell.remote.stats.iter() {
+                nc.add(k, v);
+            }
+            for (k, v) in cell.counters.iter() {
+                nc.add(k, v);
+            }
+            nc.add("kvs_lookups", cell.kvs.served);
+            let frames_sent = |ing: &FramedIngress| match ing.link.rel.as_ref() {
+                Some(r) => r.tx.sent,
+                None => ing.link.tx.sent,
+            };
+            nc.add("frames_to_home", frames_sent(&cell.to_home));
+            nc.add("frames_to_cpu", frames_sent(&cell.to_cpu));
+            nc.add("home_credit_stalls", cell.to_home.credit_stalls);
+            for (k, v) in nc.iter() {
+                counters.add(k, v);
+            }
+            per_node.push(FabricNodeReport {
+                node: i,
+                completed: cell.completed,
+                lat: cell.lat,
+                fills_local: nc.get("fab_fills_local"),
+                fills_remote: nc.get("fab_fills_remote"),
+                migrations_in: nc.get("fab_migrations_in"),
+                migrations_out: nc.get("fab_migrations_out"),
+                credit_stalls: cell.to_home.credit_stalls,
+                counters: nc,
+            });
+        }
+        let delivered_per_s = if sim_time.ps() == 0 {
+            0.0
+        } else {
+            self.completed_total as f64 / sim_time.as_secs()
+        };
+        FabricReport {
+            scenario: self.scenario_name,
+            nodes: self.cfg.nodes as usize,
+            migrate: self.cfg.migrate,
+            offered_per_s: self.cfg.ol.rate_per_s * self.cfg.nodes as f64,
+            delivered_per_s,
+            completed: self.completed_total,
+            sim_time,
+            lat,
+            hop_lat,
+            fills_local: counters.get("fab_fills_local"),
+            fills_remote: counters.get("fab_fills_remote"),
+            migrations: counters.get("fab_migrations_in"),
+            moved_lines: self.interleave.moved_lines(),
+            events: self.eng.dispatched,
+            per_node,
+            counters,
+        }
+    }
+}
+
+/// Convenience: run `scenario` on a fresh fabric.
+pub fn run(cfg: FabricConfig, scenario: &Scenario) -> FabricReport {
+    Fabric::new(cfg, scenario).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_node_smoke() {
+        let sc = Scenario::preset("uniform", 1 << 10, 0.99).expect("preset");
+        let cfg = FabricConfig {
+            nodes: 2,
+            ol: OpenLoopConfig { rate_per_s: 4e6, ops: 800, ..Default::default() },
+            ..Default::default()
+        };
+        let (r, d1) = Fabric::new(cfg, &sc).run_settled();
+        assert_eq!(r.completed, 800);
+        assert_eq!(r.lat.count(), 800);
+        assert_eq!(r.per_node.len(), 2);
+        assert!(r.per_node.iter().all(|n| n.completed > 0), "{:?}", r.per_node);
+        // the interleave scatters each window across both homes, so
+        // roughly half the fills cross the fabric
+        assert!(r.fills_remote > 0, "{:?}", r.counters);
+        assert!(r.fills_local > 0, "{:?}", r.counters);
+        assert!(r.hop_lat.count() > 0, "two-hop fills must cross the fabric");
+        assert_eq!(r.migrations, 0, "migration is off");
+        // bit-reproducible: same seed, same settled state
+        let (r2, d2) = Fabric::new(cfg, &sc).run_settled();
+        assert_eq!(d1, d2);
+        assert_eq!(r.sim_time, r2.sim_time);
+        assert_eq!(r.events, r2.events);
+    }
+
+    #[test]
+    fn migration_moves_hot_lines_toward_their_talker() {
+        let sc = Scenario::preset("hot-kvs", 1 << 10, 0.99).expect("preset");
+        let mk = |migrate: bool| {
+            let cfg = FabricConfig {
+                nodes: 2,
+                migrate,
+                threshold: 4,
+                ol: OpenLoopConfig { rate_per_s: 4e6, ops: 2_500, ..Default::default() },
+                ..Default::default()
+            };
+            Fabric::new(cfg, &sc).run()
+        };
+        let off = mk(false);
+        let on = mk(true);
+        assert_eq!(off.completed, 2_500);
+        assert_eq!(on.completed, 2_500, "migration must not lose operations");
+        assert!(on.migrations > 0, "hot remote-homed lines must move: {:?}", on.counters);
+        assert!(on.moved_lines > 0);
+        // every migrated line turns its two-hop fills into local ones
+        assert!(
+            on.fills_remote < off.fills_remote,
+            "migration must cut remote fills: {} vs {}",
+            on.fills_remote,
+            off.fills_remote
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Routing primitives for the inter-node fabric: the global address
+//! interleave (every line has exactly one home node) and the request-id
+//! translator that keeps per-node `ReqId` spaces from colliding once
+//! requests from N independent clients meet at one home directory.
+
+use crate::proto::messages::{LineAddr, ReqId};
+use crate::rustc_hash::FxHashMap as HashMap;
+
+/// The global address interleave. The *natural* home of a line is
+/// `addr % nodes` — a static, stateless map every node computes
+/// identically — with a sparse override table on top recording lines
+/// that home migration has moved. A line therefore always has exactly
+/// one home: the override if present, the natural home otherwise.
+#[derive(Debug, Clone)]
+pub struct Interleave {
+    nodes: u8,
+    /// Lines whose home migration moved off the natural node.
+    overrides: HashMap<LineAddr, u8>,
+}
+
+impl Interleave {
+    pub fn new(nodes: u8) -> Interleave {
+        assert!(nodes >= 1, "fabric needs at least one node");
+        Interleave { nodes, overrides: HashMap::default() }
+    }
+
+    pub fn nodes(&self) -> u8 {
+        self.nodes
+    }
+
+    /// The one home node of `addr`.
+    pub fn home_of(&self, addr: LineAddr) -> u8 {
+        match self.overrides.get(&addr) {
+            Some(&n) => n,
+            None => (addr.0 % self.nodes as u64) as u8,
+        }
+    }
+
+    /// Re-home `addr` to `node` (migration commit). Overrides that put a
+    /// line back on its natural home are dropped, keeping the table
+    /// sparse under churn.
+    pub fn set_home(&mut self, addr: LineAddr, node: u8) {
+        debug_assert!(node < self.nodes);
+        if node == (addr.0 % self.nodes as u64) as u8 {
+            self.overrides.remove(&addr);
+        } else {
+            self.overrides.insert(addr, node);
+        }
+    }
+
+    /// Lines currently living away from their natural home.
+    pub fn moved_lines(&self) -> usize {
+        self.overrides.len()
+    }
+}
+
+/// Translated ids carry this bit so the home side can tell a forwarded
+/// request from one issued by its own local client (whose ids come from
+/// the per-node remote agents and stay below 2^31).
+pub const TRANSLATED_BIT: u32 = 0x8000_0000;
+
+/// Rewrites request ids at the fabric-forward point. Each node's remote
+/// agent numbers its transactions independently, so two nodes' requests
+/// meeting at one home would collide; the forwarding router swaps the
+/// original id for a fabric-unique one and remembers `(source node,
+/// original id)` until the response is generated, where the mapping is
+/// resolved and the original id restored (the source's remote agent
+/// matches responses by id).
+#[derive(Debug, Default)]
+pub struct IdTranslator {
+    next: u32,
+    pending: HashMap<u32, (u8, ReqId)>,
+}
+
+impl IdTranslator {
+    pub fn new() -> IdTranslator {
+        IdTranslator::default()
+    }
+
+    pub fn is_translated(id: ReqId) -> bool {
+        id.0 & TRANSLATED_BIT != 0
+    }
+
+    /// Allocate a fabric id for `(src, orig)`.
+    pub fn translate(&mut self, src: u8, orig: ReqId) -> ReqId {
+        debug_assert!(!Self::is_translated(orig), "double translation");
+        let id = TRANSLATED_BIT | self.next;
+        self.next = (self.next + 1) & !TRANSLATED_BIT;
+        let prev = self.pending.insert(id, (src, orig));
+        debug_assert!(prev.is_none(), "fabric id space wrapped while pending");
+        ReqId(id)
+    }
+
+    /// Look up a pending translation without consuming it (span marks at
+    /// delivery time).
+    pub fn peek(&self, id: ReqId) -> Option<(u8, ReqId)> {
+        self.pending.get(&id.0).copied()
+    }
+
+    /// Consume a pending translation (response generated, or the parked
+    /// request is being re-homed).
+    pub fn resolve(&mut self, id: ReqId) -> Option<(u8, ReqId)> {
+        self.pending.remove(&id.0)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_line_has_exactly_one_home() {
+        for nodes in [1u8, 2, 4] {
+            let il = Interleave::new(nodes);
+            for a in 0..4096u64 {
+                let h = il.home_of(LineAddr(a));
+                assert!(h < nodes);
+                // deterministic: asking twice gives the same answer
+                assert_eq!(h, il.home_of(LineAddr(a)));
+            }
+        }
+    }
+
+    #[test]
+    fn overrides_rehome_and_collapse_when_natural() {
+        let mut il = Interleave::new(4);
+        let a = LineAddr(6); // natural home 2
+        assert_eq!(il.home_of(a), 2);
+        il.set_home(a, 3);
+        assert_eq!(il.home_of(a), 3);
+        assert_eq!(il.moved_lines(), 1);
+        // moving it back to the natural home drops the override
+        il.set_home(a, 2);
+        assert_eq!(il.home_of(a), 2);
+        assert_eq!(il.moved_lines(), 0);
+    }
+
+    #[test]
+    fn translator_round_trips_and_flags() {
+        let mut t = IdTranslator::new();
+        let orig = ReqId(42);
+        let fab = t.translate(3, orig);
+        assert!(IdTranslator::is_translated(fab));
+        assert!(!IdTranslator::is_translated(orig));
+        assert_eq!(t.peek(fab), Some((3, orig)));
+        assert_eq!(t.pending(), 1);
+        assert_eq!(t.resolve(fab), Some((3, orig)));
+        assert_eq!(t.pending(), 0);
+        assert_eq!(t.resolve(fab), None, "resolution consumes the mapping");
+        // ids stay unique while earlier ones are pending
+        let a = t.translate(0, ReqId(1));
+        let b = t.translate(1, ReqId(1));
+        assert_ne!(a, b);
+    }
+}

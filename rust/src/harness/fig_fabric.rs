@@ -1,0 +1,239 @@
+//! Fabric scale-out: aggregate goodput and tail latency vs node count,
+//! with home migration on/off.
+//!
+//! Each fabric node is a full open-loop unit cell (its own directory
+//! slices, FPGA DRAM, KVS pool, framed links); the global interleave
+//! scatters every node's traffic window across all homes, so at N nodes
+//! roughly (N−1)/N of fills take the two-hop remote path. The sweep
+//! holds the *per-node* offered rate at a node-saturating point and
+//! grows N: aggregate goodput must scale with the node count (each node
+//! adds directory capacity), while the latency distribution absorbs the
+//! extra fabric hop. The migration rows re-run each point with
+//! threshold-based home migration enabled — hot lines move to their
+//! dominant talker, converting two-hop fills into local ones.
+//!
+//! Shape criteria (asserted at CI scale below): 2-node aggregate
+//! goodput strictly exceeds 1-node under node-saturating load, and
+//! migration at N≥2 commits moves and cuts the remote-fill share.
+
+use crate::fabric::{self, FabricConfig};
+use crate::workload::openloop::OpenLoopConfig;
+use crate::workload::scenario::Scenario;
+
+use super::common::{fmt_rate, ResultTable, Scale};
+use super::fig_loadcurve::base_rate;
+
+/// Fabric-wide arrivals per sweep point at each scale.
+pub fn ops_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 1_600,
+        Scale::Default => 8_000,
+        Scale::Paper => 32_000,
+    }
+}
+
+/// Per-node scenario footprint (base lines for [`Scenario::preset`]).
+pub fn footprint_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 1 << 10,
+        Scale::Default => 1 << 12,
+        Scale::Paper => 1 << 14,
+    }
+}
+
+/// Node counts swept by default.
+pub fn node_sweep(scale: Scale) -> Vec<u8> {
+    match scale {
+        Scale::Ci => vec![1, 2],
+        _ => vec![1, 2, 4],
+    }
+}
+
+/// A per-node offered rate that saturates one node's two default
+/// directory slices (ops cost ~2 slice messages each, so 2-slice
+/// capacity ≈ 2 × [`base_rate`]); holding it per node makes aggregate
+/// goodput a direct read of how capacity scales with N.
+pub fn saturating_rate(cfg: &OpenLoopConfig) -> f64 {
+    3.2 * base_rate(cfg.machine.home_proc)
+}
+
+/// One (node count, migration mode) sweep point.
+#[derive(Clone, Debug)]
+pub struct FabricPoint {
+    pub nodes: usize,
+    pub migrate: bool,
+    pub offered_per_s: f64,
+    pub delivered_per_s: f64,
+    pub completed: u64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    /// Share of coherence fills that took the two-hop remote path.
+    pub remote_fill_frac: f64,
+    /// Committed home migrations.
+    pub migrations: u64,
+    /// Lines living away from their natural interleave home at the end.
+    pub moved_lines: usize,
+    /// p99 of the per-frame inter-node hop latency (0 at one node).
+    pub hop_p99_ns: f64,
+    pub events: u64,
+}
+
+pub struct FigFabric {
+    pub scenario: String,
+    pub points: Vec<FabricPoint>,
+}
+
+/// Run one fabric configuration and flatten its report into a row.
+pub fn run_point(cfg: FabricConfig, scenario: &Scenario) -> FabricPoint {
+    let r = fabric::run(cfg, scenario);
+    FabricPoint {
+        nodes: r.nodes,
+        migrate: r.migrate,
+        offered_per_s: r.offered_per_s,
+        delivered_per_s: r.delivered_per_s,
+        completed: r.completed,
+        p50_ns: r.p50_ns(),
+        p99_ns: r.p99_ns(),
+        p999_ns: r.p999_ns(),
+        remote_fill_frac: r.remote_fill_frac(),
+        migrations: r.migrations,
+        moved_lines: r.moved_lines,
+        hop_p99_ns: r.hop_p99_ns(),
+        events: r.events,
+    }
+}
+
+/// Full figure: every node count at each requested migration setting,
+/// same scenario and per-node rate throughout.
+pub fn run_custom(
+    base: FabricConfig,
+    scenario: &Scenario,
+    nodes: &[u8],
+    modes: &[bool],
+) -> FigFabric {
+    let mut points = Vec::with_capacity(nodes.len() * modes.len());
+    for &migrate in modes {
+        for &n in nodes {
+            let cfg = FabricConfig { nodes: n, migrate, ..base };
+            points.push(run_point(cfg, scenario));
+        }
+    }
+    FigFabric { scenario: scenario.name.clone(), points }
+}
+
+/// The default figure: hot-kvs traffic (Zipf-hot lines make migration
+/// worthwhile) at a node-saturating per-node rate.
+pub fn run(scale: Scale) -> FigFabric {
+    let ol = OpenLoopConfig { ops: ops_for(scale), ..Default::default() };
+    let ol = OpenLoopConfig { rate_per_s: saturating_rate(&ol), ..ol };
+    let base = FabricConfig { ol, ..Default::default() };
+    let scenario =
+        Scenario::preset("hot-kvs", footprint_for(scale), 0.99).expect("hot-kvs preset");
+    run_custom(base, &scenario, &node_sweep(scale), &[false, true])
+}
+
+pub fn render(f: &FigFabric) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!(
+            "Fabric scale-out: goodput and tails vs node count, scenario `{}`",
+            f.scenario
+        ),
+        &[
+            "nodes",
+            "migrate",
+            "offered/s",
+            "goodput/s",
+            "p50 ns",
+            "p99 ns",
+            "p999 ns",
+            "remote fill %",
+            "migrations",
+            "moved lines",
+            "hop p99 ns",
+        ],
+    );
+    for p in &f.points {
+        t.row(vec![
+            p.nodes.to_string(),
+            if p.migrate { "on".into() } else { "off".into() },
+            fmt_rate(p.offered_per_s),
+            fmt_rate(p.delivered_per_s),
+            format!("{:.0}", p.p50_ns),
+            format!("{:.0}", p.p99_ns),
+            format!("{:.0}", p.p999_ns),
+            format!("{:.1}", 100.0 * p.remote_fill_frac),
+            p.migrations.to_string(),
+            p.moved_lines.to_string(),
+            format!("{:.0}", p.hop_p99_ns),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ci_fig() -> FigFabric {
+        run(Scale::Ci)
+    }
+
+    /// Acceptance: under node-saturating load, 2-node aggregate goodput
+    /// strictly exceeds 1-node (each node brings its own directory).
+    #[test]
+    fn aggregate_goodput_scales_with_nodes() {
+        let f = ci_fig();
+        let g = |nodes: usize, migrate: bool| {
+            f.points
+                .iter()
+                .find(|p| p.nodes == nodes && p.migrate == migrate)
+                .unwrap_or_else(|| panic!("missing point ({nodes}, {migrate})"))
+        };
+        let one = g(1, false);
+        let two = g(2, false);
+        assert_eq!(one.completed, ops_for(Scale::Ci));
+        assert_eq!(two.completed, ops_for(Scale::Ci));
+        assert!(
+            two.delivered_per_s > 1.3 * one.delivered_per_s,
+            "2-node goodput {} must scale past 1-node {}",
+            two.delivered_per_s,
+            one.delivered_per_s
+        );
+        // a 1-node fabric has no inter-node hops; a 2-node one must
+        assert_eq!(one.remote_fill_frac, 0.0);
+        assert!(two.remote_fill_frac > 0.25, "interleave must scatter homes");
+        assert!(two.hop_p99_ns > 0.0);
+    }
+
+    /// Acceptance: migration commits moves at N=2 and cuts the
+    /// remote-fill share vs the migration-off row.
+    #[test]
+    fn migration_cuts_remote_fill_share() {
+        let f = ci_fig();
+        let g = |migrate: bool| {
+            f.points.iter().find(|p| p.nodes == 2 && p.migrate == migrate).expect("2-node rows")
+        };
+        let off = g(false);
+        let on = g(true);
+        assert_eq!(off.migrations, 0);
+        assert!(on.migrations > 0, "hot remote-homed lines must move");
+        assert!(on.moved_lines > 0);
+        assert!(
+            on.remote_fill_frac < off.remote_fill_frac,
+            "migration must cut the remote-fill share: {} vs {}",
+            on.remote_fill_frac,
+            off.remote_fill_frac
+        );
+    }
+
+    #[test]
+    fn render_has_one_row_per_point() {
+        let f = ci_fig();
+        let t = render(&f);
+        assert_eq!(t.rows.len(), f.points.len());
+        assert_eq!(f.points.len(), 2 * node_sweep(Scale::Ci).len());
+        let md = t.to_markdown();
+        assert!(md.contains("remote fill %") && md.contains("hop p99 ns"));
+    }
+}

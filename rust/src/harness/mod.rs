@@ -5,6 +5,7 @@
 
 pub mod common;
 pub mod fig5;
+pub mod fig_fabric;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

@@ -2,7 +2,7 @@
 //!
 //! Every other harness measures the modeled system; this one measures
 //! the host — wall-clock simulated-operations/sec and events/sec on
-//! four pinned configurations (fixed seeds, fixed op counts, fixed
+//! five pinned configurations (fixed seeds, fixed op counts, fixed
 //! machine shapes), so optimization work on the simulator has a
 //! recorded baseline to regress against (`BENCH_6.json`).
 //!
@@ -18,6 +18,7 @@
 use std::time::Instant;
 
 use crate::agents::dram::MemStore;
+use crate::fabric::{self, FabricConfig};
 use crate::machine::{map, Machine, MachineConfig, Workload};
 use crate::obs::Json;
 use crate::proto::messages::{LineAddr, LINE_BYTES};
@@ -97,7 +98,22 @@ fn openloop_faulted(ops: u64) -> (u64, u64) {
     (r.completed, r.events)
 }
 
-/// Run the four pinned configurations at `scale` (1.0 = full; tests use
+/// The pinned two-node fabric configuration: uniform traffic over a
+/// 2^10-line footprint per node, so roughly half of all fills take the
+/// two-hop path — the simulator cost of the inter-node channels and the
+/// routing layer is what this config tracks.
+fn fabric_two_node(ops: u64) -> (u64, u64) {
+    let cfg = FabricConfig {
+        nodes: 2,
+        ol: OpenLoopConfig { ops, ..Default::default() },
+        ..Default::default()
+    };
+    let scenario = Scenario::preset("uniform", 1 << 10, 0.99).expect("uniform preset");
+    let r = fabric::run(cfg, &scenario);
+    (r.completed, r.events)
+}
+
+/// Run the five pinned configurations at `scale` (1.0 = full; tests use
 /// a small fraction). Workload sizes scale; seeds and shapes do not.
 pub fn run_with(scale: f64) -> Vec<SelfperfPoint> {
     let lines = ((STREAM_LINES as f64 * scale) as u64).max(256);
@@ -111,6 +127,7 @@ pub fn run_with(scale: f64) -> Vec<SelfperfPoint> {
             stream_machine(|c, f, m| Machine::dcs_cached_node(c, OPENLOOP_SLICES, f, m), lines)
         }),
         measure("faulted_sr", || openloop_faulted(ops)),
+        measure("fabric_2node", || fabric_two_node(ops)),
     ]
 }
 
@@ -233,11 +250,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn four_pinned_configs_measure_and_serialize() {
+    fn five_pinned_configs_measure_and_serialize() {
         let points = run_with(0.01);
-        assert_eq!(points.len(), 4);
+        assert_eq!(points.len(), 5);
         let names: Vec<&str> = points.iter().map(|p| p.name.as_str()).collect();
-        assert_eq!(names, ["memory_node", "dcs", "dcs_cached", "faulted_sr"]);
+        assert_eq!(names, ["memory_node", "dcs", "dcs_cached", "faulted_sr", "fabric_2node"]);
         for p in &points {
             assert!(p.sim_ops > 0, "{}: no ops", p.name);
             assert!(p.events > 0, "{}: no events", p.name);
@@ -247,9 +264,9 @@ mod tests {
         let back = Json::parse(&j.pretty()).unwrap();
         assert_eq!(back.get("version").and_then(|v| v.as_u64()), Some(VERSION));
         assert_eq!(back.get("calibrated").and_then(|v| v.as_bool()), Some(false));
-        assert_eq!(back.get("configs").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(back.get("configs").and_then(|v| v.as_arr()).map(|a| a.len()), Some(5));
         let md = render(&points).to_markdown();
-        assert!(md.contains("events/s") && md.contains("faulted_sr"));
+        assert!(md.contains("events/s") && md.contains("fabric_2node"));
     }
 
     #[test]

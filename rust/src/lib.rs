@@ -25,6 +25,7 @@ pub mod agents;
 pub mod anyhow;
 pub mod config;
 pub mod dcs;
+pub mod fabric;
 pub mod harness;
 pub mod machine;
 pub mod memctl;

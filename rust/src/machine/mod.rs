@@ -965,7 +965,7 @@ impl Machine {
                     self.eng.schedule_at(t, Ev::DcsPoll(s as u32));
                     break;
                 }
-                Some(SliceService::Done(ready, vc, fx)) => {
+                Some(SliceService::Done(ready, vc, _, fx)) => {
                     // the slice consumed the message: only now does its
                     // link-buffer slot free up (credits are held until
                     // slice service, not frame arrival — the same

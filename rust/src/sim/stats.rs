@@ -359,6 +359,45 @@ mod tests {
         assert_eq!(a.max(), 999);
     }
 
+    /// merge(a, b) must be indistinguishable from a histogram built
+    /// from the union of the two sample streams — every exposed
+    /// statistic, including the log-linear bin contents, across
+    /// mismatched bin-array lengths in both merge directions.
+    #[test]
+    fn histogram_merge_matches_union() {
+        let small: Vec<u64> = (0..300).map(|i| 3 * i + 1).collect();
+        let huge: Vec<u64> = (0..40).map(|i| (1u64 << 40) + (i << 22)).collect();
+        let check = |xs: &[u64], ys: &[u64]| {
+            let mut m = Histogram::new();
+            let mut union = Histogram::new();
+            let mut other = Histogram::new();
+            for &v in xs {
+                m.record(v);
+                union.record(v);
+            }
+            for &v in ys {
+                other.record(v);
+                union.record(v);
+            }
+            m.merge(&other);
+            assert_eq!(m.count(), union.count());
+            assert_eq!(m.min(), union.min());
+            assert_eq!(m.max(), union.max());
+            assert_eq!(m.bins(), union.bins());
+            assert!((m.mean() - union.mean()).abs() < 1e-9);
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                assert_eq!(m.quantile(q), union.quantile(q), "q={q}");
+            }
+        };
+        // small-into-large forces the bin resize; large-into-small
+        // exercises the already-long side; empty on either side is the
+        // per-node-report edge (a node that completed nothing)
+        check(&small, &huge);
+        check(&huge, &small);
+        check(&small, &[]);
+        check(&[], &huge);
+    }
+
     #[test]
     fn meter_rates() {
         let mut m = Meter::new();

@@ -250,6 +250,19 @@ impl FramedIngress {
         self.link.stage_piggy_ack(ack);
     }
 
+    /// Piggyback one pending ack from the opposite-direction ingress `rx`
+    /// onto this sender's next frame — but only when a frame can actually
+    /// launch now, so an ack is never stranded on a stalled sender. The
+    /// shared half of every paired-link pump loop (machine, open-loop
+    /// host, fabric links).
+    pub fn steal_piggy_from(&mut self, rx: &mut FramedIngress) {
+        if self.link.can_launch() {
+            if let Some(a) = rx.take_piggy_ack() {
+                self.stage_piggy_ack(a);
+            }
+        }
+    }
+
     /// Launched-but-unacked frames (rel links; drives the host's
     /// retransmit timer).
     pub fn rel_unacked(&self) -> usize {

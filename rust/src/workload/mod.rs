@@ -29,10 +29,12 @@
 
 pub mod arrival;
 pub mod openloop;
+pub mod sampler;
 pub mod scenario;
 pub mod zipf;
 
 pub use arrival::{ArrivalKind, Arrivals};
 pub use openloop::{run, ClassLatency, OpenLoop, OpenLoopConfig, OpenLoopReport};
+pub use sampler::{SampleKind, TrafficSampler};
 pub use scenario::{Popularity, Scenario, TrafficClass};
 pub use zipf::Zipf;

@@ -49,8 +49,8 @@ use crate::sim::time::{Duration, Time};
 use crate::transport::{Control, Frame, FramedIngress, VcId};
 
 use super::arrival::{ArrivalKind, Arrivals};
-use super::scenario::{Popularity, Scenario};
-use super::zipf::Zipf;
+use super::sampler::{SampleKind, TrafficSampler};
+use super::scenario::Scenario;
 
 /// Open-loop engine parameters (the traffic itself comes from a
 /// [`Scenario`]; the node shape comes from the embedded
@@ -193,21 +193,6 @@ struct OpCtx {
     class: u16,
 }
 
-/// Per-class runtime: address window, samplers, weight CDF entry.
-struct ClassRt {
-    name: String,
-    /// First line of this class's window.
-    base: u64,
-    lines: u64,
-    mix: crate::dcs::loadgen::MixConfig,
-    popularity: Popularity,
-    zipf: Option<Zipf>,
-    /// Rank -> line-offset scatter for Zipf classes.
-    perm: Vec<u32>,
-    /// Inclusive upper bound of this class in the rate-weight CDF.
-    weight_cum: u64,
-}
-
 enum Ev {
     /// Next open-loop arrival.
     Arrive,
@@ -259,8 +244,7 @@ pub struct OpenLoop {
     to_cpu: FramedIngress,
     arrivals: Arrivals,
     traffic_rng: Rng,
-    classes: Vec<ClassRt>,
-    weight_total: u64,
+    sampler: TrafficSampler,
     region_lines: u64,
     ops: Vec<OpCtx>,
     free: Vec<u32>,
@@ -322,33 +306,10 @@ impl OpenLoop {
             mem.write_line(LineAddr(i), &line);
         }
 
-        // Per-class runtime: weight CDF, Zipf sampler, rank scatter.
-        let mut classes = Vec::with_capacity(scenario.classes.len());
-        let mut base = 0u64;
-        let mut cum = 0u64;
-        for (i, c) in scenario.classes.iter().enumerate() {
-            cum += c.rate_weight as u64;
-            let (zipf, perm) = match c.popularity {
-                Popularity::Uniform => (None, Vec::new()),
-                Popularity::Zipf { theta } => {
-                    let mut r = master.fork(100 + i as u64);
-                    let (z, p) = Zipf::scattered(c.footprint_lines, theta, &mut r);
-                    (Some(z), p)
-                }
-            };
-            classes.push(ClassRt {
-                name: c.name.clone(),
-                base,
-                lines: c.footprint_lines,
-                mix: c.mix,
-                popularity: c.popularity,
-                zipf,
-                perm,
-                weight_cum: cum,
-            });
-            base += c.footprint_lines;
-        }
-        let n_classes = classes.len();
+        // Per-class runtime: weight CDF, Zipf sampler, rank scatter
+        // (forks `master` with the historical tags — digest-relevant).
+        let sampler = TrafficSampler::build(scenario, &mut master);
+        let n_classes = sampler.classes().len();
 
         let dcs_cfg = if cfg.home_cached {
             cfg.machine.dcs_cached_config(slices)
@@ -390,8 +351,7 @@ impl OpenLoop {
             },
             arrivals: Arrivals::new(cfg.arrivals, cfg.rate_per_s, master.fork(4)),
             traffic_rng: master.fork(5),
-            classes,
-            weight_total: cum,
+            sampler,
             region_lines,
             ops: Vec::new(),
             free: Vec::new(),
@@ -685,7 +645,8 @@ impl OpenLoop {
             None => 1.0,
         };
         let per_class = self
-            .classes
+            .sampler
+            .classes()
             .iter()
             .zip(&self.class_lat)
             .map(|(c, lat)| ClassLatency {
@@ -736,35 +697,18 @@ impl OpenLoop {
     /// Draw (class, op kind, line) for one arrival and start it.
     fn spawn(&mut self) {
         let now = self.eng.now();
-        let t = self.traffic_rng.below(self.weight_total);
-        let ci = self
-            .classes
-            .iter()
-            .position(|c| t < c.weight_cum)
-            .expect("weight CDF covers every draw");
-        let mix = self.classes[ci].mix;
-        let m = self.traffic_rng.below(mix.total() as u64) as u32;
-        let kind = if m < mix.reads {
-            OpKind::Read
-        } else if m < mix.reads + mix.writes {
-            OpKind::Write
-        } else {
-            OpKind::Chase { left: mix.chase_hops.max(1) }
-        };
-        let off = match self.classes[ci].popularity {
-            Popularity::Uniform => self.traffic_rng.below(self.classes[ci].lines),
-            Popularity::Zipf { .. } => {
-                let (cls, rng) = (&self.classes[ci], &mut self.traffic_rng);
-                let rank = cls.zipf.as_ref().expect("zipf sampler built at init").sample(rng);
-                cls.perm[rank as usize] as u64
-            }
+        let (ci, kind, line) = self.sampler.sample(&mut self.traffic_rng);
+        let kind = match kind {
+            SampleKind::Read => OpKind::Read,
+            SampleKind::Write => OpKind::Write,
+            SampleKind::Chase { hops } => OpKind::Chase { left: hops },
         };
         let ctx = OpCtx {
             kind,
-            addr: LineAddr(self.classes[ci].base + off),
+            addr: LineAddr(line),
             started: now,
             active: true,
-            class: ci as u16,
+            class: ci,
         };
         let slot = match self.free.pop() {
             Some(s) => {
@@ -930,11 +874,7 @@ impl OpenLoop {
         // requests piggyback the cumulative acks this node (the cpu)
         // owes for the responses it received — stolen only when a frame
         // will actually launch (else the delayed flush handles it)
-        if self.to_home.link.can_launch() {
-            if let Some(a) = self.to_cpu.take_piggy_ack() {
-                self.to_home.stage_piggy_ack(a);
-            }
-        }
+        self.to_home.steal_piggy_from(&mut self.to_cpu);
         let mut out = std::mem::take(&mut self.scratch);
         self.to_home.pump(now, &mut out);
         for (at, f) in out.drain(..) {
@@ -953,11 +893,7 @@ impl OpenLoop {
         let now = self.eng.now();
         // responses piggyback the acks the home owes for received
         // requests — stolen only when a frame will actually launch
-        if self.to_cpu.link.can_launch() {
-            if let Some(a) = self.to_home.take_piggy_ack() {
-                self.to_cpu.stage_piggy_ack(a);
-            }
-        }
+        self.to_cpu.steal_piggy_from(&mut self.to_home);
         let mut out = std::mem::take(&mut self.scratch);
         self.to_cpu.pump(now, &mut out);
         for (at, f) in out.drain(..) {
@@ -1014,7 +950,7 @@ impl OpenLoop {
                     }
                     break;
                 }
-                Some(SliceService::Done(ready, vc, fx)) => {
+                Some(SliceService::Done(ready, vc, _, fx)) => {
                     self.eng.schedule_at(ready + ctrl, Ev::CreditHome(vc));
                     self.handle_effects(ready, fx);
                 }

@@ -1,0 +1,152 @@
+//! Traffic sampling shared by the open-loop host and the multi-node
+//! fabric: per-class address windows, the rate-weight CDF, and the
+//! popularity samplers. Extracted from [`super::openloop`] so that
+//! every driver draws traffic with the identical RNG discipline —
+//! the same fork tags at construction and the same draw order per
+//! arrival — which is what lets the 1-node fabric reproduce the
+//! open-loop host's event stream bit for bit.
+
+use crate::dcs::loadgen::MixConfig;
+use crate::sim::rng::Rng;
+
+use super::scenario::{Popularity, Scenario};
+use super::zipf::Zipf;
+
+/// Per-class runtime: address window, samplers, weight CDF entry.
+pub struct ClassRt {
+    pub name: String,
+    /// First line of this class's window (windows sit back to back).
+    pub base: u64,
+    pub lines: u64,
+    pub mix: MixConfig,
+    pub popularity: Popularity,
+    zipf: Option<Zipf>,
+    /// Rank -> line-offset scatter for Zipf classes.
+    perm: Vec<u32>,
+    /// Inclusive upper bound of this class in the rate-weight CDF.
+    pub weight_cum: u64,
+}
+
+/// What one sampled arrival does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleKind {
+    Read,
+    Write,
+    Chase { hops: u64 },
+}
+
+/// The stationary scenario sampler: draw (class, kind, line) per
+/// arrival.
+pub struct TrafficSampler {
+    classes: Vec<ClassRt>,
+    weight_total: u64,
+}
+
+impl TrafficSampler {
+    /// Build the per-class runtimes: weight CDF, Zipf sampler, rank
+    /// scatter. Zipf classes fork their scatter stream from `master`
+    /// with tag `100 + class_index` — the historical open-loop fork
+    /// order, which downstream digests depend on.
+    pub fn build(scenario: &Scenario, master: &mut Rng) -> TrafficSampler {
+        let mut classes = Vec::with_capacity(scenario.classes.len());
+        let mut base = 0u64;
+        let mut cum = 0u64;
+        for (i, c) in scenario.classes.iter().enumerate() {
+            cum += c.rate_weight as u64;
+            let (zipf, perm) = match c.popularity {
+                Popularity::Uniform => (None, Vec::new()),
+                Popularity::Zipf { theta } => {
+                    let mut r = master.fork(100 + i as u64);
+                    let (z, p) = Zipf::scattered(c.footprint_lines, theta, &mut r);
+                    (Some(z), p)
+                }
+            };
+            classes.push(ClassRt {
+                name: c.name.clone(),
+                base,
+                lines: c.footprint_lines,
+                mix: c.mix,
+                popularity: c.popularity,
+                zipf,
+                perm,
+                weight_cum: cum,
+            });
+            base += c.footprint_lines;
+        }
+        TrafficSampler { classes, weight_total: cum }
+    }
+
+    pub fn classes(&self) -> &[ClassRt] {
+        &self.classes
+    }
+
+    pub fn weight_total(&self) -> u64 {
+        self.weight_total
+    }
+
+    /// Draw one arrival: (class index, op kind, absolute line index in
+    /// the scenario region). Exactly three draw sites on `rng`, in the
+    /// historical order — weight CDF, mix, popularity — so a host that
+    /// swaps in this sampler replays the identical stream.
+    pub fn sample(&self, rng: &mut Rng) -> (u16, SampleKind, u64) {
+        let t = rng.below(self.weight_total);
+        let ci = self
+            .classes
+            .iter()
+            .position(|c| t < c.weight_cum)
+            .expect("weight CDF covers every draw");
+        let cls = &self.classes[ci];
+        let mix = cls.mix;
+        let m = rng.below(mix.total() as u64) as u32;
+        let kind = if m < mix.reads {
+            SampleKind::Read
+        } else if m < mix.reads + mix.writes {
+            SampleKind::Write
+        } else {
+            SampleKind::Chase { hops: mix.chase_hops.max(1) }
+        };
+        let off = match cls.popularity {
+            Popularity::Uniform => rng.below(cls.lines),
+            Popularity::Zipf { .. } => {
+                let rank = cls.zipf.as_ref().expect("zipf sampler built at init").sample(rng);
+                cls.perm[rank as usize] as u64
+            }
+        };
+        (ci as u16, kind, cls.base + off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_stays_in_class_window_and_covers_all_classes() {
+        let sc = Scenario::preset("tenants", 1 << 12, 0.9).expect("preset");
+        let mut master = Rng::new(0xABCD);
+        let s = TrafficSampler::build(&sc, &mut master);
+        assert_eq!(s.classes().len(), sc.classes.len());
+        assert_eq!(s.weight_total(), sc.total_weight());
+        let mut rng = Rng::new(7);
+        let mut seen = vec![false; s.classes().len()];
+        for _ in 0..5_000 {
+            let (ci, _, line) = s.sample(&mut rng);
+            let c = &s.classes()[ci as usize];
+            assert!(line >= c.base && line < c.base + c.lines, "draw outside class window");
+            seen[ci as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every class must draw under its weight");
+    }
+
+    #[test]
+    fn sampler_is_seed_stable() {
+        let sc = Scenario::preset("hot-kvs", 1 << 12, 0.9).expect("preset");
+        let draw = |seed: u64| {
+            let mut master = Rng::new(seed);
+            let s = TrafficSampler::build(&sc, &mut master);
+            let mut rng = Rng::new(99);
+            (0..64).map(|_| s.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(0xEC1), draw(0xEC1), "same seed, same stream");
+    }
+}

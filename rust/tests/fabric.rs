@@ -1,0 +1,173 @@
+//! Multi-node fabric invariants, checked at the system level: the
+//! global interleave (exactly one home per line, under migration
+//! overrides too), seed-stable routing, the 1-node degenerate case
+//! (a fabric of one node IS the bare open-loop cell, settled digest
+//! and all), and migration transparency (moving homes mid-run must
+//! change *where* lines live, never *what* the protocol computes).
+
+use eci::fabric::route::Interleave;
+use eci::fabric::{Fabric, FabricConfig};
+use eci::proto::messages::LineAddr;
+use eci::ptest::Prop;
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
+use eci::workload::{OpenLoop, OpenLoopConfig, Scenario};
+
+/// The lossy-link configuration the environment asks for, if any — the
+/// same `ECI_LITMUS_FAULTS` / `ECI_LITMUS_REL_MODE` contract as the
+/// litmus suite, so the CI matrix runs every fabric invariant below
+/// clean AND fault-injected under both retransmission disciplines
+/// (per-hop replay on the inter-node channels included).
+fn rel_from_env() -> Option<RelConfig> {
+    let v = std::env::var("ECI_LITMUS_FAULTS").ok()?;
+    if v.is_empty() || v == "off" {
+        return None;
+    }
+    let ber: f64 = v.parse().expect("ECI_LITMUS_FAULTS must be a bit-error rate (or `off`)");
+    let spec = FaultSpec {
+        ber,
+        drop: (ber * 20.0).min(0.05),
+        reorder: (ber * 20.0).min(0.05),
+        burst_len: 1.0,
+    };
+    let mut rel = RelConfig::new(FaultConfig::new(spec, 7));
+    match std::env::var("ECI_LITMUS_REL_MODE").ok().filter(|m| !m.is_empty()) {
+        None => {}
+        Some(m) => match RelMode::parse(&m) {
+            Some(RelMode::GoBackN) => {}
+            Some(RelMode::SelectiveRepeat) => {
+                rel = rel.with_mode(RelMode::SelectiveRepeat).with_adaptive_rto(true);
+            }
+            None => panic!("ECI_LITMUS_REL_MODE must be gbn or sr, got {m:?}"),
+        },
+    }
+    Some(rel)
+}
+
+/// An [`OpenLoopConfig`] with the environment's fault profile applied.
+fn ol_config(rate_per_s: f64, ops: u64) -> OpenLoopConfig {
+    let mut ol = OpenLoopConfig { rate_per_s, ops, ..Default::default() };
+    if let Some(rel) = rel_from_env() {
+        ol.machine.rel = Some(rel);
+    }
+    ol
+}
+
+/// Model-based interleave property: under a random stream of migration
+/// commits (`set_home`), every line always has exactly one home, the
+/// home agrees with a shadow override map, and `moved_lines` counts
+/// exactly the lines living away from their natural `addr % nodes`
+/// home — for 1-, 2- and 4-node fabrics.
+#[test]
+fn interleave_keeps_exactly_one_home_under_random_overrides() {
+    const LINES: u64 = 256;
+    Prop::new("interleave exactly-one-home under overrides")
+        .cases(40)
+        .max_size(80)
+        .check_vec(
+            |g| (g.below(LINES), g.below(4) as u8),
+            |moves| {
+                for nodes in [1u8, 2, 4] {
+                    let mut il = Interleave::new(nodes);
+                    let mut model: std::collections::HashMap<u64, u8> = Default::default();
+                    for &(addr, node) in moves {
+                        let node = node % nodes;
+                        il.set_home(LineAddr(addr), node);
+                        if node == (addr % nodes as u64) as u8 {
+                            model.remove(&addr);
+                        } else {
+                            model.insert(addr, node);
+                        }
+                        for a in 0..LINES {
+                            let h = il.home_of(LineAddr(a));
+                            if h >= nodes {
+                                return false;
+                            }
+                            let want =
+                                model.get(&a).copied().unwrap_or((a % nodes as u64) as u8);
+                            if h != want {
+                                return false;
+                            }
+                        }
+                        if il.moved_lines() != model.len() {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+}
+
+/// Routing (and everything downstream of it) is a pure function of the
+/// seed: two identical 4-node runs — migration on, so forwarding,
+/// parking and re-homing are all exercised — settle to bit-identical
+/// state, simulated time and event counts.
+#[test]
+fn routing_is_seed_stable_across_identical_runs() {
+    let sc = Scenario::preset("hot-kvs", 1 << 9, 0.99).expect("preset");
+    let cfg = FabricConfig {
+        nodes: 4,
+        migrate: true,
+        threshold: 4,
+        ol: ol_config(4e6, 1_200),
+        ..Default::default()
+    };
+    let (r1, d1) = Fabric::new(cfg, &sc).run_settled();
+    let (r2, d2) = Fabric::new(cfg, &sc).run_settled();
+    assert_eq!(d1, d2, "same seed, same settled state");
+    assert_eq!(r1.sim_time, r2.sim_time);
+    assert_eq!(r1.events, r2.events);
+    assert_eq!(r1.completed, r2.completed);
+    assert_eq!(r1.migrations, r2.migrations);
+    // a different seed still completes every op (routing stays sound)
+    let cfg2 = FabricConfig {
+        ol: OpenLoopConfig { seed: cfg.ol.seed.wrapping_add(1), ..cfg.ol },
+        ..cfg
+    };
+    let (r3, _) = Fabric::new(cfg2, &sc).run_settled();
+    assert_eq!(r3.completed, 1_200);
+}
+
+/// The degenerate fabric: one node, no channels, every line homed
+/// locally. It must BE the bare open-loop cell — same settled digest,
+/// same completions over the same simulated time.
+#[test]
+fn one_node_fabric_equals_bare_openloop() {
+    let sc = Scenario::preset("hot-kvs", 1 << 10, 0.99).expect("preset");
+    let ol = ol_config(4e6, 1_000);
+    let fab_cfg = FabricConfig { nodes: 1, ol, ..Default::default() };
+    let (fab, fab_digest) = Fabric::new(fab_cfg, &sc).run_settled();
+    let (bare, bare_digest) = OpenLoop::new(ol, &sc, fab_cfg.slices).run_settled();
+    assert_eq!(fab_digest, bare_digest, "settled state must be bit-identical");
+    assert_eq!(fab.completed, bare.completed);
+    assert_eq!(fab.sim_time, bare.sim_time);
+    assert_eq!(fab.lat.count(), bare.lat.count());
+    assert!((fab.lat.mean() - bare.lat.mean()).abs() < 1e-9);
+    assert_eq!(fab.fills_remote, 0, "one node has no remote fills");
+    assert_eq!(fab.hop_lat.count(), 0, "one node has no fabric hops");
+}
+
+/// Migration transparency: a read-only scan over a small footprint (so
+/// lines are revisited past the threshold and homes actually move)
+/// settles to the same global state with migration on and off — moving
+/// a line's home relocates bytes, it never changes them.
+#[test]
+fn migration_on_and_off_settle_to_the_same_state() {
+    let sc = Scenario::preset("scan", 1 << 7, 0.99).expect("preset");
+    let mk = |migrate: bool| {
+        let cfg = FabricConfig {
+            nodes: 2,
+            migrate,
+            threshold: 2,
+            ol: ol_config(4e6, 1_500),
+            ..Default::default()
+        };
+        Fabric::new(cfg, &sc).run_settled()
+    };
+    let (off, d_off) = mk(false);
+    let (on, d_on) = mk(true);
+    assert_eq!(off.completed, 1_500);
+    assert_eq!(on.completed, 1_500, "migration must not lose operations");
+    assert!(on.migrations > 0, "the scan must re-home hot lines: {:?}", on.counters);
+    assert_eq!(d_on, d_off, "settled state must not depend on where lines live");
+}

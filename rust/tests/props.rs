@@ -437,7 +437,7 @@ fn ingress_batching_is_transparent_to_protocol_outcomes() {
             }
             for s in 0..dcs.slices() {
                 while let Some(sv) = dcs.service_one(s, Time(0), ram) {
-                    let SliceService::Done(_, _, fx) = sv else {
+                    let SliceService::Done(_, _, _, fx) = sv else {
                         panic!("zero-occupancy slice reported busy")
                     };
                     for e in fx {
@@ -603,7 +603,7 @@ fn batched_ingress_holds_credits_until_slice_service() {
                 );
                 for s in 0..dcs.slices() {
                     while let Some(sv) = dcs.service_one(s, now, &mut ram) {
-                        let SliceService::Done(_, vc, _) = sv else {
+                        let SliceService::Done(_, vc, _, _) = sv else {
                             panic!("zero-occupancy slice reported busy")
                         };
                         ing.credit_return(vc);
@@ -863,7 +863,7 @@ fn rel_replay_holds_credits_without_leak() {
                 );
                 for s in 0..dcs.slices() {
                     while let Some(sv) = dcs.service_one(s, now, &mut ram) {
-                        let SliceService::Done(_, vc, _) = sv else {
+                        let SliceService::Done(_, vc, _, _) = sv else {
                             panic!("zero-occupancy slice reported busy")
                         };
                         ing.credit_return(vc);
@@ -1014,7 +1014,7 @@ fn batch_flush_on_slice_dry_preserves_arrival_order() {
         serviced: &mut [Vec<u64>; 2],
     ) {
         while let Some(sv) = dcs.service_one(s, Time(0), ram) {
-            let SliceService::Done(_, _, fx) = sv else {
+            let SliceService::Done(_, _, _, fx) = sv else {
                 panic!("zero-occupancy slice reported busy")
             };
             for e in fx {
