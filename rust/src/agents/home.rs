@@ -232,6 +232,26 @@ impl HomeAgent {
         true
     }
 
+    /// The inverse of [`HomeAgent::surrender_copy`] for failover: adopt a
+    /// line whose previous home died while a remote node still holds a
+    /// copy. The surviving holder's cache is ground truth, so the
+    /// directory entry is rebuilt directly — `view` reflects the holder's
+    /// cached state, `holders` seeds the grant-epoch counter — without
+    /// replaying the grant that produced it. Only legal on a line this
+    /// slice owns and currently tracks nothing about.
+    pub fn adopt_remote(&mut self, addr: LineAddr, view: RemoteView, holders: u32) {
+        debug_assert!(self.owns(addr), "adopting a line outside this slice");
+        debug_assert!(self.state_of(addr) == HomeSt::idle(), "adopting a tracked line");
+        debug_assert!(!self.stalled.contains_key(&addr), "adopting a line with stalled events");
+        debug_assert!(
+            matches!(view, RemoteView::S | RemoteView::EorM),
+            "adoption is only meaningful for a held line"
+        );
+        self.set_state(addr, HomeSt { own: CacheState::I, own_dirty: false, view, pending_fwd: None });
+        self.possession.insert(addr, holders);
+        self.stats.inc("adopted");
+    }
+
     fn rule(&self, st: HomeSt, ev: HEvent) -> HRule {
         self.rules
             .get(&(st, ev))
@@ -625,6 +645,31 @@ mod tests {
         assert_eq!(a.stats.get("surrendered"), 1);
         // an untouched line surrenders trivially (nothing to flush)
         assert!(a.surrender_copy(LineAddr(12), &mut ram));
+    }
+
+    #[test]
+    fn adopt_remote_rebuilds_view_and_accepts_the_give_back() {
+        let (mut a, mut ram) = mk(false);
+        // failover: the previous home died while a remote held line 7
+        // exclusive — the new home adopts the holder's view directly.
+        a.adopt_remote(LineAddr(7), RemoteView::EorM, 1);
+        let st = a.state_of(LineAddr(7));
+        assert_eq!(st.view, RemoteView::EorM);
+        assert_eq!(st.own, CacheState::I);
+        assert_eq!(st.pending_fwd, None);
+        assert_eq!(a.possession_count(LineAddr(7)), 1);
+        assert_eq!(a.stats.get("adopted"), 1);
+        // the adopted state is live protocol state: a dirty give-back
+        // from the holder lands like any other and the line goes idle.
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0xEE;
+        a.on_message(
+            Message::coh_req_data(ReqId(1), Node::Remote, CohOp::VolDowngradeI, LineAddr(7), Box::new(dirty)),
+            &mut ram,
+        );
+        assert_eq!(a.state_of(LineAddr(7)), HomeSt::idle());
+        assert_eq!(a.possession_count(LineAddr(7)), 0);
+        assert_eq!(ram.read_line(LineAddr(7))[0], 0xEE, "adopted line's writeback must land");
     }
 
     #[test]

@@ -64,8 +64,16 @@
 //! eci bench fabric [--nodes 1,2,4] [--migrate on|off|both]
 //!                  [--threshold 8] [--slices 2] [--rate 2e6]
 //!                  [--ops 1600] [--scenario hot-kvs] [--theta 0.99]
+//!                  [--kill 1@200] [--detect-us 40]
 //!                  [--seed 7] [--json]
 //! ```
+//!
+//! `--kill N@US` scripts a whole-node failure: node N goes dark US
+//! microseconds into each sweep point (arrivals auto-extend so the kill
+//! lands mid-run), survivors re-home its lines and replay its in-flight
+//! requests, and a second table reports detection latency, goodput-dip
+//! depth and recovery duration. `--detect-us` bounds the failure
+//! detector's watchdog (default 40).
 //!
 //! The `selfperf` bench (the simulator's own host throughput on pinned
 //! configurations — `harness::selfperf`; `BENCH_6.json` is the
@@ -93,7 +101,7 @@
 //! a CI smoke step).
 
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
-use crate::fabric::FabricConfig;
+use crate::fabric::{FabricConfig, KillSpec};
 use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
     fig5, fig6, fig7, fig8, fig_fabric, fig_loadcurve, fig_retx, fig_throughput, selfperf, table2,
@@ -103,6 +111,7 @@ use crate::transport::RelMode;
 use crate::proto::messages::CohOp;
 use crate::proto::subset::{validate_with_workload, Subset};
 use crate::runtime::Runtime;
+use crate::sim::time::Duration;
 use crate::workload::{ArrivalKind, OpenLoopConfig, Scenario, TrafficClass};
 
 pub fn main_entry() {
@@ -668,6 +677,10 @@ pub struct FabricArgs {
     pub theta: f64,
     /// Fixed per-node offered rate; default saturates one node.
     pub rate: Option<f64>,
+    /// `--kill N@US`: node N goes dark US microseconds into each point.
+    pub kill: Option<KillSpec>,
+    /// `--detect-us`: failure-detector watchdog bound, µs.
+    pub detect_us: Option<u64>,
     /// `--json`: emit the table as JSON alongside the markdown.
     pub json: bool,
     pub cfg: OpenLoopConfig,
@@ -684,6 +697,8 @@ impl FabricArgs {
             scenario: "hot-kvs".into(),
             theta: 0.99,
             rate: None,
+            kill: None,
+            detect_us: None,
             json: false,
             cfg: OpenLoopConfig { ops: fig_fabric::ops_for(scale), ..Default::default() },
         }
@@ -768,11 +783,48 @@ impl FabricArgs {
                 "--seed" => {
                     out.cfg.seed = parse_seed(val)?;
                 }
+                "--kill" => {
+                    let (node, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("bad --kill {val:?} (want N@US, e.g. 1@200)"))?;
+                    let node: u8 = node
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad --kill node {node:?}"))?;
+                    let us: u64 = at
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad --kill time {at:?} (microseconds)"))?;
+                    if us == 0 {
+                        return Err("--kill time must be >= 1 microsecond".into());
+                    }
+                    out.kill = Some(KillSpec { node, at: Duration::from_us(us) });
+                }
+                "--detect-us" => {
+                    let us: u64 =
+                        val.parse().map_err(|_| format!("bad --detect-us {val:?}"))?;
+                    if us == 0 {
+                        return Err("--detect-us must be >= 1".into());
+                    }
+                    out.detect_us = Some(us);
+                }
                 other => return Err(format!("unknown fabric flag {other:?}")),
             }
         }
         if out.cfg.ops == 0 {
             return Err("--ops must be >= 1".into());
+        }
+        if let Some(k) = out.kill {
+            let max = out.nodes.iter().copied().max().unwrap_or(0);
+            if max < 2 {
+                return Err("--kill needs a sweep point with >= 2 nodes to fail over to".into());
+            }
+            if k.node >= max {
+                return Err(format!(
+                    "--kill node {} is outside every swept fabric (max nodes {max})",
+                    k.node
+                ));
+            }
         }
         Ok(out)
     }
@@ -1104,11 +1156,20 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         let scenario = Scenario::preset(&a.scenario, fig_fabric::footprint_for(scale), a.theta)
             .expect("validated at parse");
         let ol = OpenLoopConfig { rate_per_s: a.rate(), ..a.cfg };
-        let base =
-            FabricConfig { threshold: a.threshold, slices: a.slices, ol, ..Default::default() };
+        let mut base =
+            FabricConfig { threshold: a.threshold, slices: a.slices, ol, kill: a.kill, ..Default::default() };
+        if let Some(us) = a.detect_us {
+            base.detect = Duration::from_us(us);
+        }
         let f = fig_fabric::run_custom(base, &scenario, &a.nodes, &a.modes);
         let t = fig_fabric::render(&f);
         println!("{}", t.to_markdown());
+        if let Some(ft) = fig_fabric::render_failover(&f) {
+            println!("{}", ft.to_markdown());
+            if a.json {
+                println!("{}", ft.to_json().pretty());
+            }
+        }
         if a.json {
             println!("{}", t.to_json().pretty());
         }
@@ -1491,6 +1552,16 @@ mod tests {
         assert_eq!(a.modes, vec![false]);
         let a = FabricArgs::parse(Scale::Ci, &s(&["--migrate", "both"])).unwrap();
         assert_eq!(a.modes, vec![false, true]);
+        assert!(a.kill.is_none(), "no kill unless asked for");
+        let a = FabricArgs::parse(
+            Scale::Ci,
+            &s(&["--nodes", "3", "--kill", "1@200", "--detect-us", "25"]),
+        )
+        .unwrap();
+        let k = a.kill.expect("--kill parsed");
+        assert_eq!(k.node, 1);
+        assert_eq!(k.at, Duration::from_us(200));
+        assert_eq!(a.detect_us, Some(25));
     }
 
     #[test]
@@ -1512,6 +1583,13 @@ mod tests {
         // workload/faults-only knobs are stray here and must fail loudly
         assert!(bad(&["--cached-slices", "2"]), "no cached sweep on fabric");
         assert!(bad(&["--ber", "1e-3"]), "fault knobs belong to `faults`");
+        assert!(bad(&["--kill", "1"]), "kill needs N@US");
+        assert!(bad(&["--kill", "x@200"]), "non-numeric kill node");
+        assert!(bad(&["--kill", "1@x"]), "non-numeric kill time");
+        assert!(bad(&["--kill", "1@0"]), "kill at time zero");
+        assert!(bad(&["--nodes", "1", "--kill", "0@200"]), "no survivors to fail over to");
+        assert!(bad(&["--nodes", "2", "--kill", "2@200"]), "kill node outside every sweep");
+        assert!(bad(&["--nodes", "3", "--kill", "1@200", "--detect-us", "0"]), "zero watchdog");
     }
 
     #[test]

@@ -405,6 +405,14 @@ impl Dcs {
         self.slices[s].home.surrender_copy(addr, ram)
     }
 
+    /// Failover adoption: rebuild the owning slice's directory entry for
+    /// a line whose previous home died while a remote still holds a copy
+    /// (see [`HomeAgent::adopt_remote`]).
+    pub fn adopt_remote(&mut self, addr: LineAddr, view: crate::proto::spec::RemoteView, holders: u32) {
+        let s = self.slice_of(addr);
+        self.slices[s].home.adopt_remote(addr, view, holders);
+    }
+
     /// Total queued messages across slices (staged ingress frames
     /// included — they occupy receiver buffer slots like queued ones).
     pub fn pending(&self) -> usize {

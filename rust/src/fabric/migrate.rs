@@ -78,7 +78,11 @@ impl Migrator {
     }
 
     /// A message for `addr` finished service; returns the remaining
-    /// live count.
+    /// live count. A decrement without a matching increment is an
+    /// invariant violation, not a recoverable state: returning 0 here
+    /// would open the zero-live commit gate early and let a move commit
+    /// with a request still inside the directory — so it panics in
+    /// release builds too.
     pub fn live_dec(&mut self, addr: LineAddr) -> u32 {
         match self.live.get_mut(&addr) {
             Some(n) => {
@@ -89,10 +93,7 @@ impl Migrator {
                 }
                 left
             }
-            None => {
-                debug_assert!(false, "live_dec without live_inc for {addr}");
-                0
-            }
+            None => panic!("live_dec without live_inc for {addr}"),
         }
     }
 
@@ -112,6 +113,36 @@ impl Migrator {
     /// Lines currently mid-move (diagnostics / settle assertions).
     pub fn in_flight(&self) -> usize {
         self.migrating.len()
+    }
+
+    /// Snapshot of the in-flight moves `(line, target)` — the failover
+    /// path walks this to cancel moves touching a dead node.
+    pub fn moves(&self) -> Vec<(LineAddr, u8)> {
+        self.migrating.iter().map(|(&a, &t)| (a, t)).collect()
+    }
+
+    /// Drop every parked request sourced by `src` (a dead node's
+    /// requests are abandoned, not replayed); returns how many were
+    /// dropped.
+    pub fn drop_parked_from(&mut self, src: u8) -> u64 {
+        let mut dropped = 0;
+        self.parked.retain(|_, q| {
+            let before = q.len();
+            q.retain(|&(s, _)| s != src);
+            dropped += (before - q.len()) as u64;
+            !q.is_empty()
+        });
+        dropped
+    }
+
+    /// Forget everything known about `addr` — talker history and live
+    /// accounting. Used when a line is force-re-homed around a dead
+    /// node: live counts at the dead home are meaningless and talker
+    /// history must restart fresh at the survivor.
+    pub fn forget(&mut self, addr: LineAddr) {
+        self.talkers.remove(&addr);
+        self.live.remove(&addr);
+        debug_assert!(!self.migrating.contains_key(&addr), "forget during a move");
     }
 }
 
@@ -171,6 +202,49 @@ mod tests {
         assert_eq!(m.target_of(a), None);
         assert_eq!(m.in_flight(), 0);
         // talker history restarted: counting begins again
+        assert!(!m.note(a, 1, 0, 2));
+        assert!(m.note(a, 1, 0, 2));
+    }
+
+    /// Regression (bugfix): an unmatched `live_dec` used to be a
+    /// `debug_assert` + silent `0` in release builds — which is exactly
+    /// the value that opens the zero-live migration-commit gate. It is
+    /// an invariant violation and must die loudly in every build.
+    #[test]
+    #[should_panic(expected = "live_dec without live_inc")]
+    fn unmatched_live_dec_panics_in_all_builds() {
+        let mut m = Migrator::new();
+        m.live_dec(LineAddr(3));
+    }
+
+    #[test]
+    fn parked_requests_keep_arrival_order_and_dead_sources_drop() {
+        let mut m = Migrator::new();
+        let a = LineAddr(11);
+        m.begin(a, 2);
+        for (i, src) in [1u8, 3, 1, 2, 3].iter().enumerate() {
+            let msg = Message::coh_req(ReqId(i as u32), Node::Remote, CohOp::ReadShared, a);
+            m.park(a, *src, msg);
+        }
+        assert_eq!(m.drop_parked_from(3), 2, "both of node 3's parked requests drop");
+        let q = m.take_parked(a);
+        let order: Vec<(u8, u32)> = q.iter().map(|(s, msg)| (*s, msg.id.0)).collect();
+        // survivors keep their exact arrival order (ids 0, 2, 3)
+        assert_eq!(order, vec![(1, 0), (1, 2), (2, 3)]);
+        m.end(a);
+    }
+
+    #[test]
+    fn forget_clears_talkers_and_live() {
+        let mut m = Migrator::new();
+        let a = LineAddr(4);
+        for _ in 0..5 {
+            m.note(a, 1, 0, 100);
+        }
+        m.live_inc(a);
+        m.forget(a);
+        assert_eq!(m.live(a), 0);
+        // talker history is gone: threshold counting restarts
         assert!(!m.note(a, 1, 0, 2));
         assert!(m.note(a, 1, 0, 2));
     }

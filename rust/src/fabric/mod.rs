@@ -36,6 +36,19 @@
 //!   parking: its issuer holds the line in `S`, so the line could never
 //!   quiesce while the upgrade waits.
 //!
+//! A fourth mechanism handles **whole-node failure** (DESIGN.md
+//! §"Failure semantics"): a scripted kill silences one node's cell and
+//! channels mid-run; the survivors detect the silence (barren
+//! retransmissions on a reliable fabric link, or the bounded watchdog
+//! on a clean one), declare the node dead exactly once, re-interleave
+//! its homed lines across themselves, rebuild each re-homed line's
+//! directory view from survivor cache truth, close the possession
+//! epochs the dead node still held, and replay every in-flight request
+//! whose translation entry is still pending — entries retire only when
+//! the response *lands* at its source, so "entry pending" is exactly
+//! "source still waiting" and each replayed request completes exactly
+//! once.
+//!
 //! Determinism carries over from the unit cell: with one node, the
 //! fabric's RNG stream, event sequence, and settled-state digest are
 //! bit-identical to a bare [`crate::workload::OpenLoop`] (the
@@ -56,13 +69,13 @@ use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
 use crate::dcs::{Dcs, SliceService};
 use crate::memctl::KvsService;
 use crate::obs::{Obs, ObsConfig, ObsReport, Registry, Stage};
-use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind};
-use crate::proto::spec::generate_remote;
-use crate::proto::states::Node;
+use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind, ReqId};
+use crate::proto::spec::{generate_remote, PendingFwd, RemoteView};
+use crate::proto::states::{CacheState, Node};
 use crate::proto::transitions::reference_transitions;
 use crate::rustc_hash::{FxHashMap as HashMap, FxHashSet as HashSet};
 use crate::sim::engine::Engine;
-use crate::sim::rng::Rng;
+use crate::sim::rng::{stream_seed, Rng};
 use crate::sim::stats::{Counters, Histogram};
 use crate::sim::time::{Duration, Time};
 use crate::transport::{vc_for, Control, Frame, FramedIngress, VcId};
@@ -84,7 +97,25 @@ pub struct FabricConfig {
     pub threshold: u32,
     /// Directory slices per node.
     pub slices: usize,
+    /// Scripted whole-node failure: the node goes dark (cell and all
+    /// channel endpoints silenced) at the given sim time.
+    pub kill: Option<KillSpec>,
+    /// Watchdog bound on failure detection: survivors declare a killed
+    /// node dead at most this long after it went dark, even when no
+    /// reliable-link retransmission traffic points at it first.
+    pub detect: Duration,
+    /// Fault injection for the migration *abort* path: every begun move
+    /// aborts at its first commit check instead of committing, so
+    /// parked requests always replay against the old home.
+    pub abort_inject: bool,
     pub ol: OpenLoopConfig,
+}
+
+/// Scripted kill of one node at a sim time.
+#[derive(Clone, Copy, Debug)]
+pub struct KillSpec {
+    pub node: u8,
+    pub at: Duration,
 }
 
 impl Default for FabricConfig {
@@ -94,6 +125,9 @@ impl Default for FabricConfig {
             migrate: false,
             threshold: 8,
             slices: 2,
+            kill: None,
+            detect: Duration::from_us(40),
+            abort_inject: false,
             ol: OpenLoopConfig::default(),
         }
     }
@@ -143,8 +177,47 @@ pub struct FabricReport {
     /// Simulator events dispatched (host-side cost; the selfperf
     /// metric).
     pub events: u64,
+    /// Whole-node-failure outcome (present iff the run was configured
+    /// with a [`KillSpec`]).
+    pub kill: Option<KillReport>,
     pub per_node: Vec<FabricNodeReport>,
     pub counters: Counters,
+}
+
+/// What the failover machinery did during a killed run.
+#[derive(Clone, Debug)]
+pub struct KillReport {
+    pub node: u8,
+    /// When the node went dark (`None` if the run finished first).
+    pub killed_at: Option<Time>,
+    /// When the survivors declared it dead.
+    pub declared_at: Option<Time>,
+    /// Lines re-interleaved off the dead node onto survivors.
+    pub rehomed_lines: u64,
+    /// In-flight requests replayed against their new home.
+    pub replayed: u64,
+    /// Possession epochs held by the dead node closed on its behalf.
+    pub reclaimed_epochs: u64,
+    /// Dead-sourced requests dropped (no requester left to answer).
+    pub dropped_requests: u64,
+    /// Responses to the dead node dropped at generation.
+    pub dropped_responses: u64,
+    /// The dead node's unfinished arrival quota, subtracted from the
+    /// fabric completion target.
+    pub abandoned_ops: u64,
+    /// Completion timestamp (ps) of every finished op, for the
+    /// goodput-dip timeline.
+    pub completion_ps: Vec<u64>,
+}
+
+impl KillReport {
+    /// Kill-to-declaration latency, when both happened.
+    pub fn detect_latency(&self) -> Option<Duration> {
+        match (self.killed_at, self.declared_at) {
+            (Some(k), Some(d)) => Some(d.since(k)),
+            _ => None,
+        }
+    }
 }
 
 impl FabricReport {
@@ -258,7 +331,14 @@ struct FabChan {
     retx_pending: [bool; 2],
     retx_seen_acked: [u64; 2],
     ack_flush_pending: [bool; 2],
+    /// Consecutive forced replays with no ack progress, per direction —
+    /// the failure detector's evidence that the peer has gone silent.
+    barren: [u32; 2],
 }
+
+/// Consecutive barren retransmissions on one channel direction before
+/// the transmitter suspects its peer is dead.
+const DEAD_RETX_SUSPECT: u32 = 8;
 
 enum Ev {
     // -- node-local (the open-loop cell, node-tagged) --
@@ -291,8 +371,14 @@ enum Ev {
     FabAckFlushRsp(u16),
     /// Hand a message (original id restored) from node `2` to home `0`
     /// directly: parked-request re-injection after a migration commits
-    /// or aborts, and post-commit races chasing a moved line.
+    /// or aborts, post-commit races chasing a moved line, and failover
+    /// replay/reclaim injections.
     FabInject(u8, Box<Message>, u8),
+    /// Scripted whole-node failure: the node goes dark now.
+    Kill(u8),
+    /// Watchdog deadline for a killed node: declare it dead if the
+    /// retransmission detector has not already.
+    FailCheck(u8),
 }
 
 use crate::workload::arrival::Arrivals;
@@ -331,10 +417,37 @@ pub struct Fabric {
     /// Total lines across all windows.
     region_lines: u64,
     completed_total: u64,
+    /// Ops the fabric still owes: the configured total minus the dead
+    /// node's abandoned quota once a kill is declared.
+    target_ops: u64,
+    /// Scripted kill fired: (node, when it went dark).
+    killed: Option<(u8, Time)>,
+    /// Survivors declared the kill: (node, when).
+    dead_declared: Option<(u8, Time)>,
+    /// Messages bound for a killed-but-undeclared home, held until the
+    /// declaration re-homes their lines.
+    limbo: Vec<(Message, u8)>,
+    /// Fabric-side mirror of remote-held possession epochs per
+    /// (line, holder node), holder != home. Read once at declaration to
+    /// close the grants the dead node still held, then frozen.
+    epochs: HashMap<(LineAddr, u8), u32>,
+    kill_stats: KillStats,
+    /// Completion timestamps (kill runs only) for the goodput timeline.
+    completion_ps: Vec<u64>,
     scratch: Vec<(Time, Frame)>,
     rx_frames: Vec<Frame>,
     rx_ctls: Vec<Control>,
     obs: Option<Obs>,
+}
+
+#[derive(Default)]
+struct KillStats {
+    rehomed: u64,
+    replayed: u64,
+    reclaimed: u64,
+    dropped_requests: u64,
+    dropped_responses: u64,
+    abandoned_ops: u64,
 }
 
 impl Fabric {
@@ -347,6 +460,10 @@ impl Fabric {
             "home migration requires streaming clients: a caching client \
              never releases its lines, so a mid-move line would never quiesce"
         );
+        if let Some(k) = cfg.kill {
+            assert!(k.node < cfg.nodes, "kill target out of range");
+            assert!(cfg.nodes >= 2, "killing the only node leaves no survivors");
+        }
         let n = cfg.nodes as u64;
         let mut master = Rng::new(cfg.ol.seed);
         let spec = reference_transitions();
@@ -373,17 +490,21 @@ impl Fabric {
             let mut chain: Vec<u64> = (0..window).collect();
             master.shuffle(&mut chain);
             let sampler = TrafficSampler::build(scenario, &mut master);
+            // every link direction draws a provably disjoint fault
+            // stream: kind 1 = node<->client links, indexed by node
+            // (kind 2 below = inter-node channels). The old affine
+            // `seed + 2*node(+1)` scheme let different link families
+            // collide on one seed and replay correlated fault patterns.
             let to_home = match cfg.ol.machine.rel {
                 Some(mut rc) => {
-                    rc.faults.seed = rc.faults.seed.wrapping_add(2 * node);
+                    rc.faults.seed = stream_seed(rc.faults.seed, 1, node, 0);
                     FramedIngress::with_rel(cfg.ol.machine.link, Node::Remote, master.fork(2), rc)
                 }
                 None => FramedIngress::new(cfg.ol.machine.link, Node::Remote, master.fork(2)),
             };
             let to_cpu = match cfg.ol.machine.rel {
-                // every link direction draws an independent fault stream
                 Some(mut rc) => {
-                    rc.faults.seed = rc.faults.seed.wrapping_add(2 * node + 1);
+                    rc.faults.seed = stream_seed(rc.faults.seed, 1, node, 1);
                     FramedIngress::with_rel(cfg.ol.machine.link, Node::Home, master.fork(3), rc)
                 }
                 None => FramedIngress::new(cfg.ol.machine.link, Node::Home, master.fork(3)),
@@ -405,7 +526,7 @@ impl Fabric {
                 let c = s as u64 * n + d as u64;
                 let req = match cfg.ol.machine.rel {
                     Some(mut rc) => {
-                        rc.faults.seed = rc.faults.seed.wrapping_add(2 * n + 2 * c);
+                        rc.faults.seed = stream_seed(rc.faults.seed, 2, c, 0);
                         FramedIngress::with_rel(
                             cfg.ol.machine.link,
                             Node::Remote,
@@ -419,7 +540,7 @@ impl Fabric {
                 };
                 let rsp = match cfg.ol.machine.rel {
                     Some(mut rc) => {
-                        rc.faults.seed = rc.faults.seed.wrapping_add(2 * n + 2 * c + 1);
+                        rc.faults.seed = stream_seed(rc.faults.seed, 2, c, 1);
                         FramedIngress::with_rel(
                             cfg.ol.machine.link,
                             Node::Home,
@@ -441,6 +562,7 @@ impl Fabric {
                     retx_pending: [false; 2],
                     retx_seen_acked: [0; 2],
                     ack_flush_pending: [false; 2],
+                    barren: [0; 2],
                 }));
             }
         }
@@ -516,6 +638,13 @@ impl Fabric {
             window_lines: window,
             region_lines: region,
             completed_total: 0,
+            target_ops: cfg.ol.ops,
+            killed: None,
+            dead_declared: None,
+            limbo: Vec::new(),
+            epochs: HashMap::default(),
+            kill_stats: KillStats::default(),
+            completion_ps: Vec::new(),
             scratch: Vec::new(),
             rx_frames: Vec::new(),
             rx_ctls: Vec::new(),
@@ -571,6 +700,7 @@ impl Fabric {
         }
         debug_assert_eq!(self.mig.in_flight(), 0, "settled with a migration mid-move");
         debug_assert_eq!(self.xlat.pending(), 0, "settled with unresolved forwarded ids");
+        debug_assert!(self.limbo.is_empty(), "settled with messages limboed at a dead home");
         self.state_digest()
     }
 
@@ -580,20 +710,35 @@ impl Fabric {
                 self.eng.schedule(Duration::ZERO, Ev::Arrive(node));
             }
         }
-        while self.completed_total < self.cfg.ol.ops {
+        if let Some(k) = self.cfg.kill {
+            self.eng.schedule(k.at, Ev::Kill(k.node));
+        }
+        while self.completed_total < self.target_ops {
             let Some((_, ev)) = self.eng.pop() else {
                 let per: Vec<(u64, u64, usize)> = self
                     .nodes
                     .iter()
                     .map(|c| (c.completed, c.quota, c.dcs.pending()))
                     .collect();
+                // a dead node is an explained stall; an empty queue short
+                // of target with no kill in play is a stuck protocol
+                let failure = match (self.killed, self.dead_declared) {
+                    (Some((n, at)), None) => {
+                        format!(" [node {n} killed at {at:?}, death NOT yet declared]")
+                    }
+                    (_, Some((n, at))) => {
+                        format!(" [node {n} dead (declared at {at:?}), survivors stuck]")
+                    }
+                    _ => String::new(),
+                };
                 panic!(
                     "fabric deadlock: {} of {} ops complete, {} moves in flight, \
-                     per-node (completed, quota, dcs-pending) {:?}",
+                     per-node (completed, quota, dcs-pending) {:?}{}",
                     self.completed_total,
-                    self.cfg.ol.ops,
+                    self.target_ops,
                     self.mig.in_flight(),
-                    per
+                    per,
+                    failure
                 );
             };
             self.dispatch(ev);
@@ -650,6 +795,15 @@ impl Fabric {
         reg.set("fabric.moved_lines", self.interleave.moved_lines() as u64);
         reg.set("fabric.migrations_in_flight", self.mig.in_flight() as u64);
         reg.set("fabric.ids_pending", self.xlat.pending() as u64);
+        if self.cfg.kill.is_some() {
+            for i in 0..self.nodes.len() {
+                let dead = matches!(self.dead_declared, Some((n, _)) if n as usize == i);
+                reg.gauge(&format!("node{i}.dead"), if dead { 1.0 } else { 0.0 });
+            }
+            reg.set("fabric.rehomed_lines", self.kill_stats.rehomed);
+            reg.set("fabric.replayed_requests", self.kill_stats.replayed);
+            reg.set("fabric.reclaimed_epochs", self.kill_stats.reclaimed);
+        }
         if let Some(s) = rel {
             reg.absorb_rel("rel", &s);
         }
@@ -685,7 +839,61 @@ impl Fabric {
         h
     }
 
+    /// Should this event be silently discarded because a killed node is
+    /// on its path? The dead cell's own events always drop; channel
+    /// events with a dead endpoint drop *except* the surviving
+    /// transmitter's retransmission timers before the declaration —
+    /// those ARE the failure detector. `FabInject` routes around death
+    /// inside its handler, and the kill/watchdog events always run.
+    fn gated_by_death(&self, ev: &Ev) -> bool {
+        let Some((p, _)) = self.killed else { return false };
+        let declared = self.dead_declared.is_some();
+        let touches = |c: u16| {
+            let ch = self.chans[c as usize].as_ref().expect("off-diagonal");
+            ch.src == p || ch.dst == p
+        };
+        match ev {
+            Ev::Kill(_) | Ev::FailCheck(_) | Ev::FabInject(..) => false,
+            Ev::Arrive(n)
+            | Ev::Step(n, _)
+            | Ev::LandHome(n, _)
+            | Ev::LandCpu(n, _)
+            | Ev::HomeSend(n, _)
+            | Ev::CtlHome(n, _)
+            | Ev::CtlCpu(n, _)
+            | Ev::CreditHome(n, _)
+            | Ev::CreditCpu(n, _)
+            | Ev::Poll(n, _)
+            | Ev::RetxHome(n)
+            | Ev::RetxCpu(n)
+            | Ev::AckFlushHome(n)
+            | Ev::AckFlushCpu(n) => *n == p,
+            Ev::FabLandReq(c, _)
+            | Ev::FabLandRsp(c, _)
+            | Ev::FabSendRsp(c, _)
+            | Ev::FabCtlReq(c, _)
+            | Ev::FabCtlRsp(c, _)
+            | Ev::FabCreditReq(c, _)
+            | Ev::FabCreditRsp(c, _)
+            | Ev::FabAckFlushReq(c)
+            | Ev::FabAckFlushRsp(c) => touches(*c),
+            Ev::FabRetxReq(c) => {
+                touches(*c)
+                    && (declared
+                        || self.chans[*c as usize].as_ref().expect("off-diagonal").src == p)
+            }
+            Ev::FabRetxRsp(c) => {
+                touches(*c)
+                    && (declared
+                        || self.chans[*c as usize].as_ref().expect("off-diagonal").dst == p)
+            }
+        }
+    }
+
     fn dispatch(&mut self, ev: Ev) {
+        if self.gated_by_death(&ev) {
+            return;
+        }
         match ev {
             Ev::Arrive(n) => self.arrive(n),
             Ev::Step(n, s) => self.step(n, s),
@@ -747,6 +955,12 @@ impl Fabric {
             Ev::FabAckFlushReq(c) => self.on_chan_ack_flush(c, 0),
             Ev::FabAckFlushRsp(c) => self.on_chan_ack_flush(c, 1),
             Ev::FabInject(h, m, src) => self.fab_inject(h, *m, src),
+            Ev::Kill(n) => self.on_kill(n),
+            Ev::FailCheck(n) => {
+                if self.dead_declared.is_none() {
+                    self.declare_dead(n);
+                }
+            }
         }
     }
 
@@ -905,6 +1119,9 @@ impl Fabric {
             cell.free.push(slot);
         }
         self.completed_total += 1;
+        if self.cfg.kill.is_some() {
+            self.completion_ps.push(now.ps());
+        }
         if !self.cfg.ol.cached {
             self.release(n, addr);
         }
@@ -1076,7 +1293,7 @@ impl Fabric {
         self.eng.schedule(ctrl, Ev::CreditHome(n, f.vc));
         if let MsgKind::CohReq { op } = &f.msg.kind {
             if op.needs_response() && op.initiator() == Node::Remote {
-                f.msg.id = self.xlat.translate(n, f.msg.id);
+                f.msg.id = self.xlat.translate(n, home, &f.msg);
             }
         }
         self.nodes[n as usize].counters.inc("fab_fwd_out");
@@ -1108,13 +1325,39 @@ impl Fabric {
                 return Gate::Park;
             }
         }
-        if self.mig.note(addr, src, h, self.cfg.threshold) {
+        // An UpgradeS2E may *count* toward the threshold but must never
+        // *trigger* a move: parking it while its issuer holds the line
+        // in S would block the quiesce it is itself waiting on.
+        if self.mig.note(addr, src, h, self.cfg.threshold) && !matches!(op, CohOp::UpgradeS2E) {
             self.mig.begin(addr, src);
             self.nodes[h as usize].counters.inc("fab_migration_begin");
             // the trigger request parks too: it completes at the new home
             return Gate::Park;
         }
         Gate::Admit
+    }
+
+    /// Mirror the home's possession-epoch arithmetic for *remote*
+    /// holders as messages are admitted, so a declaration can read off
+    /// exactly which grants a dead node still held. Frozen (no-op) once
+    /// a death is declared.
+    fn ledger_on_admit(&mut self, h: u8, src: u8, msg: &Message) {
+        if self.cfg.kill.is_none() || self.dead_declared.is_some() || src == h {
+            return;
+        }
+        let close = match &msg.kind {
+            MsgKind::CohReq { op: CohOp::VolDowngradeI } => true,
+            MsgKind::CohRsp { op: CohOp::FwdDowngradeI, had_copy, .. } => *had_copy,
+            _ => false,
+        };
+        if close {
+            if let Some(k) = self.epochs.get_mut(&(msg.addr, src)) {
+                *k = k.saturating_sub(1);
+                if *k == 0 {
+                    self.epochs.remove(&(msg.addr, src));
+                }
+            }
+        }
     }
 
     /// Admit a delivered frame into home `h`'s directory (or park it if
@@ -1151,6 +1394,7 @@ impl Fabric {
                 if self.cfg.migrate {
                     self.mig.live_inc(f.msg.addr);
                 }
+                self.ledger_on_admit(h, src, &f.msg);
                 if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
                     let key = match self.xlat.peek(f.msg.id) {
                         Some((s0, orig)) => span_key(s0, orig.0),
@@ -1168,12 +1412,34 @@ impl Fabric {
         }
     }
 
-    /// Direct message injection at home `h` (parked re-injection and
-    /// post-commit races). The id is already the original; the credit
-    /// was returned when the message first left its wire.
-    fn fab_inject(&mut self, h: u8, msg: Message, src: u8) {
+    /// Direct message injection at home `h` (parked re-injection,
+    /// post-commit races, failover replay/reclaim). The id is the
+    /// original; the credit was returned when the message first left
+    /// its wire.
+    fn fab_inject(&mut self, h: u8, mut msg: Message, src: u8) {
         let ctrl = self.cfg.ol.machine.ctrl_latency;
         let addr = msg.addr;
+        // a killed-but-undeclared home cannot admit anything: hold the
+        // message until the declaration re-homes its line
+        if let Some((p, _)) = self.killed {
+            if p == h && self.dead_declared.is_none() {
+                self.limbo.push((msg, src));
+                return;
+            }
+            // a dead source's response-needing requests have no
+            // requester left to answer — drop them (its voluntary
+            // downgrades and fwd responses still admit: the reclaim
+            // path speaks for the dead node with exactly those)
+            if self.dead_declared.is_some() && src == p {
+                if let MsgKind::CohReq { op } = &msg.kind {
+                    if op.needs_response() && op.initiator() == Node::Remote {
+                        self.kill_stats.dropped_requests += 1;
+                        self.nodes[h as usize].counters.inc("fab_dropped_dead_src");
+                        return;
+                    }
+                }
+            }
+        }
         let home = self.interleave.home_of(addr);
         if home != h {
             // the line moved again while this was in flight: chase it
@@ -1192,8 +1458,20 @@ impl Fabric {
                 if self.cfg.migrate {
                     self.mig.live_inc(addr);
                 }
+                self.ledger_on_admit(h, src, &msg);
                 if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
                     sp.mark(now, span_key(src, msg.id.0), Stage::Deliver);
+                }
+                // a remote source's response-needing request must enter
+                // the directory under a translated id, exactly as if it
+                // had crossed the fabric — the response routes home by
+                // resolving that id (re-injections carry original ids)
+                if src != h && !IdTranslator::is_translated(msg.id) {
+                    if let MsgKind::CohReq { op } = &msg.kind {
+                        if op.needs_response() && op.initiator() == Node::Remote {
+                            msg.id = self.xlat.translate(src, h, &msg);
+                        }
+                    }
                 }
                 let vc = vc_for(&msg);
                 let cell = &mut self.nodes[h as usize];
@@ -1216,6 +1494,12 @@ impl Fabric {
     fn try_commit(&mut self, h: u8, addr: LineAddr) {
         let Some(target) = self.mig.target_of(addr) else { return };
         if self.mig.live(addr) != 0 {
+            return;
+        }
+        if self.cfg.abort_inject {
+            // fault injection: the move loses its commit race every
+            // time, so every begun migration exercises the abort path
+            self.abort_migration(h, addr);
             return;
         }
         let surrendered = {
@@ -1315,11 +1599,45 @@ impl Fabric {
         for e in fx {
             match e {
                 HomeEffect::Respond { mut msg, from_ram } => {
-                    // restore the requester's id and learn who it was
-                    let (src, orig) = if IdTranslator::is_translated(msg.id) {
-                        self.xlat.resolve(msg.id).expect("translated id pending")
+                    // learn who the requester was — without retiring the
+                    // translation entry: it retires only when the
+                    // response *lands* at the source (fab_land_rsp), so
+                    // a response lost with a dying node leaves its
+                    // request pending for replay
+                    let resolved = if IdTranslator::is_translated(msg.id) {
+                        self.xlat.peek(msg.id)
                     } else {
-                        (h, msg.id)
+                        Some((h, msg.id))
+                    };
+                    let Some((src, orig)) = resolved else {
+                        // only a swept entry peeks to None: the
+                        // requester was declared dead and its pending
+                        // ids dropped. Drop the response — and if it
+                        // granted a copy, surrender that grant on the
+                        // dead node's behalf so the possession epoch the
+                        // home just opened closes again.
+                        let (p, _) = self
+                            .dead_declared
+                            .expect("translated id vanished without a declared death");
+                        self.kill_stats.dropped_responses += 1;
+                        self.nodes[h as usize].counters.inc("fab_rsp_to_dead");
+                        if let MsgKind::CohRsp {
+                            op: CohOp::ReadShared | CohOp::ReadExclusive, ..
+                        } = msg.kind
+                        {
+                            let give_back = Message::coh_req(
+                                ReqId(0),
+                                Node::Remote,
+                                CohOp::VolDowngradeI,
+                                msg.addr,
+                            );
+                            self.kill_stats.reclaimed += 1;
+                            self.eng.schedule_at(
+                                ready + self.cfg.ol.machine.ctrl_latency,
+                                Ev::FabInject(h, Box::new(give_back), p),
+                            );
+                        }
+                        continue;
                     };
                     let is_chase = self.nodes[src as usize].chase_ids.remove(&orig.0);
                     let addr = msg.addr;
@@ -1342,6 +1660,17 @@ impl Fabric {
                         sp.mark(t, key, Stage::Reply);
                     }
                     msg.id = orig;
+                    // ledger: a grant to a remote holder opens a
+                    // possession epoch the failover path may later have
+                    // to close on the holder's behalf
+                    if self.cfg.kill.is_some() && self.dead_declared.is_none() && src != h {
+                        if let MsgKind::CohRsp {
+                            op: CohOp::ReadShared | CohOp::ReadExclusive, ..
+                        } = msg.kind
+                        {
+                            *self.epochs.entry((addr, src)).or_insert(0) += 1;
+                        }
+                    }
                     self.granted_to.insert(addr, src);
                     self.nodes[h as usize]
                         .counters
@@ -1526,8 +1855,14 @@ impl Fabric {
         let mut fills: Vec<LineAddr> = Vec::new();
         for f in delivered.drain(..) {
             self.eng.schedule(ctrl, Ev::FabCreditRsp(c, f.vc));
-            if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
-                if matches!(f.msg.kind, MsgKind::CohRsp { .. }) {
+            if let MsgKind::CohRsp { op, .. } = &f.msg.kind {
+                // the response landed at its source: only now does the
+                // forwarded transaction's translation entry retire, so
+                // "entry pending" always means "source still waiting"
+                if op.initiator() == Node::Remote {
+                    self.xlat.complete(s, f.msg.id);
+                }
+                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
                     sp.complete(now, span_key(s, f.msg.id.0));
                 }
             }
@@ -1559,18 +1894,47 @@ impl Fabric {
     }
 
     fn on_chan_retx(&mut self, c: u16, dir: usize) {
+        let mut suspect = None;
         {
             let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
             ch.retx_pending[dir] = false;
             let ing = if dir == 0 { &mut ch.req } else { &mut ch.rsp };
             if ing.rel_unacked() == 0 {
+                ch.barren[dir] = 0;
                 return;
             }
             if ing.rel_acked() == ch.retx_seen_acked[dir] {
                 ing.rel_force_replay();
+                // no ack progress across a full RTO: evidence the peer
+                // has gone silent
+                ch.barren[dir] += 1;
+                if ch.barren[dir] >= DEAD_RETX_SUSPECT {
+                    ch.barren[dir] = 0;
+                    suspect = Some(if dir == 0 { ch.dst } else { ch.src });
+                }
+            } else {
+                ch.barren[dir] = 0;
             }
         }
+        if let Some(p) = suspect {
+            self.suspect_dead(p);
+        }
         self.pump_chan(c, dir);
+    }
+
+    /// A channel transmitter accumulated [`DEAD_RETX_SUSPECT`] barren
+    /// retransmissions toward `p`. The simulator is omniscient, so a
+    /// lone barren link only condemns a node that really was killed —
+    /// against a live-but-lossy peer it records a false suspicion
+    /// instead (a real deployment would need a quorum here).
+    fn suspect_dead(&mut self, p: u8) {
+        if self.dead_declared.is_some() {
+            return;
+        }
+        match self.killed {
+            Some((k, _)) if k == p => self.declare_dead(p),
+            _ => self.nodes[p as usize].counters.inc("fab_false_suspect"),
+        }
     }
 
     fn arm_chan_retx(&mut self, c: u16, dir: usize) {
@@ -1611,6 +1975,175 @@ impl Fabric {
             crate::transport::rel::ACK_FLUSH_DELAY,
             if dir == 0 { Ev::FabAckFlushReq(c) } else { Ev::FabAckFlushRsp(c) },
         );
+    }
+
+    // -- whole-node failure -------------------------------------------------
+
+    fn on_kill(&mut self, n: u8) {
+        assert!(self.killed.is_none(), "one scripted kill per run");
+        let now = self.eng.now();
+        self.killed = Some((n, now));
+        self.nodes[n as usize].counters.inc("fab_killed");
+        // watchdog: detection is bounded by cfg.detect even when no
+        // retransmission traffic points at the dead node (clean links
+        // have no rel timers to starve)
+        self.eng.schedule(self.cfg.detect, Ev::FailCheck(n));
+    }
+
+    /// Declare node `p` dead. Runs exactly once, atomically inside one
+    /// event, from whichever detector fires first (barren channel
+    /// retransmissions or the watchdog):
+    ///
+    /// 1. abandon the dead node's unfinished arrival quota;
+    /// 2. cancel migrations touching it (its parked requests drop,
+    ///    survivors' parked requests follow their line's new home);
+    /// 3. re-interleave its homed lines across the survivors;
+    /// 4. rebuild each re-homed line's directory view from survivor
+    ///    cache truth (the dead directory's in-flight state is noise);
+    /// 5. close the possession epochs the dead node still held at
+    ///    surviving homes by speaking for it: answer stalled forwards,
+    ///    then surrender each remaining grant;
+    /// 6. replay every pending forwarded request a survivor still waits
+    ///    on (translation entries retire at response landing, so the
+    ///    pending set is exactly the unanswered set — exactly-once);
+    /// 7. re-home limboed and saved parked messages.
+    fn declare_dead(&mut self, p: u8) {
+        debug_assert!(self.dead_declared.is_none(), "death declared twice");
+        debug_assert!(
+            matches!(self.killed, Some((k, _)) if k == p),
+            "declaring a live node dead"
+        );
+        let now = self.eng.now();
+        self.dead_declared = Some((p, now));
+        self.nodes[p as usize].counters.inc("fab_dead_declared");
+        let ctrl = self.cfg.ol.machine.ctrl_latency;
+
+        // 1. abandoned work
+        let abandoned = self.nodes[p as usize].quota - self.nodes[p as usize].completed;
+        self.kill_stats.abandoned_ops = abandoned;
+        self.target_ops -= abandoned;
+
+        // 2. migrations touching the dead node
+        self.kill_stats.dropped_requests += self.mig.drop_parked_from(p);
+        let mut saved_parked: Vec<(u8, Message)> = Vec::new();
+        for (a, t) in self.mig.moves() {
+            let old = self.interleave.home_of(a);
+            if old == p {
+                // the old home died mid-move: survivors' parked
+                // requests re-route to the line's post-death home below
+                saved_parked.extend(self.mig.take_parked(a));
+                self.mig.end(a);
+            } else if t == p {
+                // the *target* died: abort at the live old home
+                self.abort_migration(old, a);
+            }
+        }
+
+        // 3. re-interleave
+        let rehomed: Vec<LineAddr> = (0..self.region_lines)
+            .map(LineAddr)
+            .filter(|&a| self.interleave.home_of(a) == p)
+            .collect();
+        self.interleave.mark_dead(p);
+        self.kill_stats.rehomed = rehomed.len() as u64;
+        self.granted_to.retain(|_, holder| *holder != p);
+        for &a in &rehomed {
+            self.mig.forget(a);
+            self.granted_to.remove(&a);
+        }
+
+        // 4. adoption from cache truth
+        for &a in &rehomed {
+            let mut holder: Option<(u8, CacheState)> = None;
+            for (i, cell) in self.nodes.iter().enumerate() {
+                if i == p as usize {
+                    continue;
+                }
+                let st = cell.cache.state_of(a);
+                if st == CacheState::I {
+                    continue;
+                }
+                debug_assert!(holder.is_none(), "one talker per line");
+                holder = Some((i as u8, st));
+            }
+            if let Some((holder_node, st)) = holder {
+                let view = if st == CacheState::S { RemoteView::S } else { RemoteView::EorM };
+                let home = self.interleave.home_of(a);
+                self.nodes[home as usize].dcs.adopt_remote(a, view, 1);
+                self.granted_to.insert(a, holder_node);
+                self.nodes[home as usize].counters.inc("fab_adopted");
+            }
+        }
+
+        // 5. close the dead node's epochs at surviving homes
+        let rehomed_set: HashSet<LineAddr> = rehomed.iter().copied().collect();
+        let mut held: Vec<(LineAddr, u32)> = self
+            .epochs
+            .iter()
+            .filter(|((a, holder), _)| *holder == p && !rehomed_set.contains(a))
+            .map(|(&(a, _), &k)| (a, k))
+            .collect();
+        held.sort_unstable_by_key(|(a, _)| a.0);
+        for (a, k) in held {
+            let home = self.interleave.home_of(a);
+            let st = self.nodes[home as usize].dcs.state_of(a);
+            let mut remaining = k;
+            match st.pending_fwd {
+                Some(PendingFwd::ToI) => {
+                    // answer the invalidation stalled on the dead
+                    // holder; had_copy closes one epoch at the home
+                    let rsp = Message::coh_rsp(
+                        ReqId(0),
+                        Node::Remote,
+                        CohOp::FwdDowngradeI,
+                        a,
+                        false,
+                        None,
+                    );
+                    self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(rsp), p));
+                    remaining = remaining.saturating_sub(1);
+                }
+                Some(PendingFwd::ToS) => {
+                    let rsp = Message::coh_rsp(
+                        ReqId(0),
+                        Node::Remote,
+                        CohOp::FwdDowngradeS,
+                        a,
+                        false,
+                        None,
+                    );
+                    self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(rsp), p));
+                }
+                // None or AwaitVolDowngrade: the surrenders below are
+                // exactly the voluntary downgrades the home awaits
+                _ => {}
+            }
+            for _ in 0..remaining {
+                let m = Message::coh_req(ReqId(0), Node::Remote, CohOp::VolDowngradeI, a);
+                self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(m), p));
+            }
+            self.kill_stats.reclaimed += u64::from(k);
+        }
+        self.epochs.clear();
+
+        // 6. replay pending forwarded requests (dead-sourced ones drop)
+        let (replay, dropped) = self.xlat.on_node_dead(p);
+        self.kill_stats.dropped_requests += dropped;
+        self.kill_stats.replayed = replay.len() as u64;
+        for e in replay {
+            let home = self.interleave.home_of(e.msg.addr);
+            self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(e.msg), e.src));
+        }
+
+        // 7. limboed and saved parked messages follow their new homes
+        for (m, src) in std::mem::take(&mut self.limbo) {
+            let home = self.interleave.home_of(m.addr);
+            self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(m), src));
+        }
+        for (src, m) in saved_parked {
+            let home = self.interleave.home_of(m.addr);
+            self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(m), src));
+        }
     }
 
     // -- reporting ----------------------------------------------------------
@@ -1661,6 +2194,18 @@ impl Fabric {
         } else {
             self.completed_total as f64 / sim_time.as_secs()
         };
+        let kill = self.cfg.kill.map(|k| KillReport {
+            node: k.node,
+            killed_at: self.killed.map(|(_, t)| t),
+            declared_at: self.dead_declared.map(|(_, t)| t),
+            rehomed_lines: self.kill_stats.rehomed,
+            replayed: self.kill_stats.replayed,
+            reclaimed_epochs: self.kill_stats.reclaimed,
+            dropped_requests: self.kill_stats.dropped_requests,
+            dropped_responses: self.kill_stats.dropped_responses,
+            abandoned_ops: self.kill_stats.abandoned_ops,
+            completion_ps: self.completion_ps,
+        });
         FabricReport {
             scenario: self.scenario_name,
             nodes: self.cfg.nodes as usize,
@@ -1676,6 +2221,7 @@ impl Fabric {
             migrations: counters.get("fab_migrations_in"),
             moved_lines: self.interleave.moved_lines(),
             events: self.eng.dispatched,
+            kill,
             per_node,
             counters,
         }
@@ -1715,6 +2261,73 @@ mod tests {
         assert_eq!(d1, d2);
         assert_eq!(r.sim_time, r2.sim_time);
         assert_eq!(r.events, r2.events);
+    }
+
+    /// Regression (bugfix): the fault seeds of every directed link in a
+    /// fabric must be pairwise distinct. The old affine derivation
+    /// (`seed + 2*node(+1)` for node links, `seed + 2*n + 2*c(+1)` for
+    /// channels) let links from different families share a seed and
+    /// replay correlated fault patterns; the stream_seed scheme packs a
+    /// family tag + index + direction into disjoint bits before mixing.
+    #[test]
+    fn fabric_link_seeds_are_pairwise_distinct_in_a_four_node_fabric() {
+        let nodes = 4u64;
+        let base = 7u64;
+        let mut seen = std::collections::HashSet::new();
+        // node<->client links: kind 1, indexed by node, both directions
+        for node in 0..nodes {
+            for dir in 0..2 {
+                assert!(seen.insert(stream_seed(base, 1, node, dir)), "node-link seed collides");
+            }
+        }
+        // inter-node channels: kind 2, indexed by the dense chan index,
+        // both directions — exactly the coordinates Fabric::new uses
+        for s in 0..nodes {
+            for d in 0..nodes {
+                if s == d {
+                    continue;
+                }
+                let c = s * nodes + d;
+                for dir in 0..2 {
+                    assert!(
+                        seen.insert(stream_seed(base, 2, c, dir)),
+                        "channel seed collides at ({s},{d},{dir})"
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), (2 * nodes + 2 * nodes * (nodes - 1)) as usize);
+    }
+
+    #[test]
+    fn killing_a_node_mid_run_completes_survivor_work() {
+        let sc = Scenario::preset("uniform", 1 << 9, 0.99).expect("preset");
+        let cfg = FabricConfig {
+            nodes: 3,
+            kill: Some(KillSpec { node: 1, at: Duration::from_us(20) }),
+            ol: OpenLoopConfig { rate_per_s: 4e6, ops: 900, ..Default::default() },
+            ..Default::default()
+        };
+        let (r, d1) = Fabric::new(cfg, &sc).run_settled();
+        let k = r.kill.as_ref().expect("kill configured");
+        assert!(k.killed_at.is_some(), "kill must fire mid-run");
+        assert!(k.declared_at.is_some(), "survivors must declare the death");
+        assert!(
+            k.detect_latency().expect("both stamped").ps() <= cfg.detect.ps(),
+            "watchdog bounds detection"
+        );
+        assert!(k.rehomed_lines > 0, "the dead node homed lines");
+        assert_eq!(
+            r.completed + k.abandoned_ops,
+            900,
+            "every non-abandoned op completes: {:?}",
+            r.counters
+        );
+        let dead = &r.per_node[1];
+        assert!(dead.completed < 300, "the dead node cannot finish its quota");
+        // bit-reproducible under failover too
+        let (_, d2) = Fabric::new(cfg, &sc).run_settled();
+        assert_eq!(d1, d2);
     }
 
     #[test]

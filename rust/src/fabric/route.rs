@@ -3,7 +3,7 @@
 //! translator that keeps per-node `ReqId` spaces from colliding once
 //! requests from N independent clients meet at one home directory.
 
-use crate::proto::messages::{LineAddr, ReqId};
+use crate::proto::messages::{LineAddr, Message, ReqId};
 use crate::rustc_hash::FxHashMap as HashMap;
 
 /// The global address interleave. The *natural* home of a line is
@@ -11,28 +11,50 @@ use crate::rustc_hash::FxHashMap as HashMap;
 /// identically — with a sparse override table on top recording lines
 /// that home migration has moved. A line therefore always has exactly
 /// one home: the override if present, the natural home otherwise.
+///
+/// After [`Interleave::mark_dead`] the natural map is patched around
+/// the dead node: lines whose natural home died re-interleave
+/// deterministically across the survivors (`survivors[addr % (N-1)]`),
+/// and overrides may never point at the dead node again.
 #[derive(Debug, Clone)]
 pub struct Interleave {
     nodes: u8,
     /// Lines whose home migration moved off the natural node.
     overrides: HashMap<LineAddr, u8>,
+    /// The one failed node, if any, and the surviving nodes in index
+    /// order (the re-interleave target list).
+    dead: Option<u8>,
+    survivors: Vec<u8>,
 }
 
 impl Interleave {
     pub fn new(nodes: u8) -> Interleave {
         assert!(nodes >= 1, "fabric needs at least one node");
-        Interleave { nodes, overrides: HashMap::default() }
+        Interleave { nodes, overrides: HashMap::default(), dead: None, survivors: Vec::new() }
     }
 
     pub fn nodes(&self) -> u8 {
         self.nodes
     }
 
+    pub fn dead(&self) -> Option<u8> {
+        self.dead
+    }
+
+    /// The home `addr` falls back to with no override in play.
+    fn natural_of(&self, addr: LineAddr) -> u8 {
+        let n = (addr.0 % self.nodes as u64) as u8;
+        match self.dead {
+            Some(d) if n == d => self.survivors[(addr.0 % self.survivors.len() as u64) as usize],
+            _ => n,
+        }
+    }
+
     /// The one home node of `addr`.
     pub fn home_of(&self, addr: LineAddr) -> u8 {
         match self.overrides.get(&addr) {
             Some(&n) => n,
-            None => (addr.0 % self.nodes as u64) as u8,
+            None => self.natural_of(addr),
         }
     }
 
@@ -41,11 +63,40 @@ impl Interleave {
     /// sparse under churn.
     pub fn set_home(&mut self, addr: LineAddr, node: u8) {
         debug_assert!(node < self.nodes);
-        if node == (addr.0 % self.nodes as u64) as u8 {
+        debug_assert!(Some(node) != self.dead, "re-homing a line onto a dead node");
+        if node == self.natural_of(addr) {
             self.overrides.remove(&addr);
         } else {
             self.overrides.insert(addr, node);
         }
+    }
+
+    /// Declare `dead` failed: every line it homed — naturally or via a
+    /// migration override — re-homes deterministically across the
+    /// survivors, and the node can never be a home again. Single
+    /// failure only (a second distinct death is unsupported).
+    pub fn mark_dead(&mut self, dead: u8) {
+        assert!(dead < self.nodes, "dead node out of range");
+        assert!(self.nodes >= 2, "a 1-node fabric cannot lose its only node");
+        assert!(self.dead.is_none(), "only one node failure is supported");
+        self.dead = Some(dead);
+        self.survivors = (0..self.nodes).filter(|&n| n != dead).collect();
+        // overrides that pointed at the dead node dissolve: the line
+        // returns to its (patched) natural placement
+        self.overrides.retain(|_, &mut n| n != dead);
+        // overrides that now AGREE with the patched natural map would
+        // stop being "moved"; collapse them to keep moved_lines honest
+        let survivors = std::mem::take(&mut self.survivors);
+        self.overrides.retain(|&a, &mut n| {
+            let nat = (a.0 % self.nodes as u64) as u8;
+            let eff = if nat == dead {
+                survivors[(a.0 % survivors.len() as u64) as usize]
+            } else {
+                nat
+            };
+            n != eff
+        });
+        self.survivors = survivors;
     }
 
     /// Lines currently living away from their natural home.
@@ -59,17 +110,35 @@ impl Interleave {
 /// the per-node remote agents and stay below 2^31).
 pub const TRANSLATED_BIT: u32 = 0x8000_0000;
 
+/// One pending forward at the translation point: where the request came
+/// from, the id it carried there, the home it was sent to, and a copy
+/// of the request itself (with its *original* id) so the fabric can
+/// re-issue it against a new home if the old one dies mid-flight.
+#[derive(Debug, Clone)]
+pub struct PendingXlat {
+    pub src: u8,
+    pub orig: ReqId,
+    pub home: u8,
+    pub msg: Message,
+}
+
 /// Rewrites request ids at the fabric-forward point. Each node's remote
 /// agent numbers its transactions independently, so two nodes' requests
 /// meeting at one home would collide; the forwarding router swaps the
-/// original id for a fabric-unique one and remembers `(source node,
-/// original id)` until the response is generated, where the mapping is
-/// resolved and the original id restored (the source's remote agent
-/// matches responses by id).
+/// original id for a fabric-unique one and remembers the
+/// [`PendingXlat`] until the response *lands back at the source*
+/// ([`IdTranslator::complete`]). Keeping entries alive until landing —
+/// not merely until the response is generated — is what makes failover
+/// replay exactly-once: an entry is pending if and only if the source
+/// has not received its response, so replaying exactly the entries
+/// homed at a dead node re-issues every unanswered request and nothing
+/// else.
 #[derive(Debug, Default)]
 pub struct IdTranslator {
     next: u32,
-    pending: HashMap<u32, (u8, ReqId)>,
+    pending: HashMap<u32, PendingXlat>,
+    /// Reverse index for completion at response landing.
+    by_orig: HashMap<(u8, u32), u32>,
 }
 
 impl IdTranslator {
@@ -81,26 +150,85 @@ impl IdTranslator {
         id.0 & TRANSLATED_BIT != 0
     }
 
-    /// Allocate a fabric id for `(src, orig)`.
-    pub fn translate(&mut self, src: u8, orig: ReqId) -> ReqId {
+    /// Allocate a fabric id for `msg` (carrying its original id) sent
+    /// by `src` toward `home`. If the 31-bit id space wraps onto an id
+    /// that is still pending, the allocator skips forward to the next
+    /// free id instead of silently overwriting the older mapping (which
+    /// would lose the original requester's response).
+    pub fn translate(&mut self, src: u8, home: u8, msg: &Message) -> ReqId {
+        let orig = msg.id;
         debug_assert!(!Self::is_translated(orig), "double translation");
-        let id = TRANSLATED_BIT | self.next;
-        self.next = (self.next + 1) & !TRANSLATED_BIT;
-        let prev = self.pending.insert(id, (src, orig));
-        debug_assert!(prev.is_none(), "fabric id space wrapped while pending");
+        let mut probes: u32 = 0;
+        let id = loop {
+            let cand = TRANSLATED_BIT | self.next;
+            self.next = (self.next + 1) & !TRANSLATED_BIT;
+            if !self.pending.contains_key(&cand) {
+                break cand;
+            }
+            probes += 1;
+            assert!(probes < TRANSLATED_BIT, "fabric id space exhausted: every id pending");
+        };
+        self.pending.insert(id, PendingXlat { src, orig, home, msg: msg.clone() });
+        let stale = self.by_orig.insert((src, orig.0), id);
+        debug_assert!(stale.is_none(), "source {src} re-used id {orig:?} while pending");
         ReqId(id)
     }
 
-    /// Look up a pending translation without consuming it (span marks at
-    /// delivery time).
+    /// Look up a pending translation without consuming it (response
+    /// generation, span marks at delivery time).
     pub fn peek(&self, id: ReqId) -> Option<(u8, ReqId)> {
-        self.pending.get(&id.0).copied()
+        self.pending.get(&id.0).map(|p| (p.src, p.orig))
     }
 
-    /// Consume a pending translation (response generated, or the parked
-    /// request is being re-homed).
+    /// Consume a pending translation (the parked or mid-flight request
+    /// is being re-issued and will be re-translated).
     pub fn resolve(&mut self, id: ReqId) -> Option<(u8, ReqId)> {
-        self.pending.remove(&id.0)
+        let p = self.pending.remove(&id.0)?;
+        self.by_orig.remove(&(p.src, p.orig.0));
+        Some((p.src, p.orig))
+    }
+
+    /// The response for `(src, orig)` landed at the source: retire the
+    /// mapping. Returns whether an entry was pending (false for
+    /// responses whose request was never translated, e.g. local fills).
+    pub fn complete(&mut self, src: u8, orig: ReqId) -> bool {
+        match self.by_orig.remove(&(src, orig.0)) {
+            Some(fab) => {
+                let p = self.pending.remove(&fab);
+                debug_assert!(p.is_some(), "by_orig points at a missing pending entry");
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Sweep the table after `dead` fails. Entries *homed* at the dead
+    /// node are unanswered requests from surviving sources — returned
+    /// (in fabric-id allocation order, i.e. roughly issue order) for
+    /// replay against the lines' new homes. Entries *sourced* by the
+    /// dead node no longer have a requester to answer — dropped; the
+    /// count comes back for accounting.
+    pub fn on_node_dead(&mut self, dead: u8) -> (Vec<PendingXlat>, u64) {
+        let mut replay: Vec<(u32, PendingXlat)> = Vec::new();
+        let mut dropped = 0u64;
+        self.pending.retain(|&id, p| {
+            if p.src == dead {
+                dropped += 1;
+                false
+            } else if p.home == dead {
+                replay.push((id, p.clone()));
+                false
+            } else {
+                true
+            }
+        });
+        replay.sort_by_key(|&(id, _)| id);
+        let replay: Vec<PendingXlat> = replay.into_iter().map(|(_, p)| p).collect();
+        for p in &replay {
+            self.by_orig.remove(&(p.src, p.orig.0));
+        }
+        self.by_orig.retain(|&(src, _), _| src != dead);
+        (replay, dropped)
     }
 
     pub fn pending(&self) -> usize {
@@ -111,6 +239,12 @@ impl IdTranslator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proto::messages::CohOp;
+    use crate::proto::states::Node;
+
+    fn req(id: u32, addr: u64) -> Message {
+        Message::coh_req(ReqId(id), Node::Remote, CohOp::ReadShared, LineAddr(addr))
+    }
 
     #[test]
     fn every_line_has_exactly_one_home() {
@@ -140,20 +274,100 @@ mod tests {
     }
 
     #[test]
+    fn mark_dead_reinterleaves_exactly_the_dead_nodes_lines() {
+        let mut il = Interleave::new(3);
+        // one migration override onto the doomed node, one off it
+        il.set_home(LineAddr(5), 1); // natural 2 -> 1 (dissolves on death)
+        il.set_home(LineAddr(6), 2); // natural 0 -> 2 (survives)
+        let before: Vec<u8> = (0..64).map(|a| il.home_of(LineAddr(a))).collect();
+        il.mark_dead(1);
+        assert_eq!(il.dead(), Some(1));
+        for a in 0..64u64 {
+            let h = il.home_of(LineAddr(a));
+            assert_ne!(h, 1, "line {a} still homed at the dead node");
+            assert!(h < 3);
+            // lines the dead node never homed keep their placement
+            if before[a as usize] != 1 {
+                assert_eq!(h, before[a as usize], "line {a} moved needlessly");
+            }
+        }
+        // the surviving override is untouched
+        assert_eq!(il.home_of(LineAddr(6)), 2);
+        // deterministic: the re-interleave is a pure function of addr
+        let mut il2 = Interleave::new(3);
+        il2.mark_dead(1);
+        for a in 0..64u64 {
+            if (a % 3) == 1 {
+                assert_eq!(il.home_of(LineAddr(a)), il2.home_of(LineAddr(a)));
+            }
+        }
+    }
+
+    #[test]
     fn translator_round_trips_and_flags() {
         let mut t = IdTranslator::new();
-        let orig = ReqId(42);
-        let fab = t.translate(3, orig);
+        let m = req(42, 9);
+        let fab = t.translate(3, 0, &m);
         assert!(IdTranslator::is_translated(fab));
-        assert!(!IdTranslator::is_translated(orig));
-        assert_eq!(t.peek(fab), Some((3, orig)));
+        assert!(!IdTranslator::is_translated(m.id));
+        assert_eq!(t.peek(fab), Some((3, ReqId(42))));
         assert_eq!(t.pending(), 1);
-        assert_eq!(t.resolve(fab), Some((3, orig)));
+        assert_eq!(t.resolve(fab), Some((3, ReqId(42))));
         assert_eq!(t.pending(), 0);
         assert_eq!(t.resolve(fab), None, "resolution consumes the mapping");
         // ids stay unique while earlier ones are pending
-        let a = t.translate(0, ReqId(1));
-        let b = t.translate(1, ReqId(1));
+        let a = t.translate(0, 0, &req(1, 2));
+        let b = t.translate(1, 0, &req(1, 2));
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn complete_retires_by_source_and_original_id() {
+        let mut t = IdTranslator::new();
+        t.translate(2, 0, &req(7, 3));
+        assert!(t.complete(2, ReqId(7)));
+        assert_eq!(t.pending(), 0);
+        assert!(!t.complete(2, ReqId(7)), "already retired");
+        assert!(!t.complete(1, ReqId(7)), "wrong source never matches");
+    }
+
+    /// Regression (bugfix): a 31-bit id-space wrap onto a still-pending
+    /// id used to be a `debug_assert` + silent `HashMap::insert`
+    /// overwrite in release builds, losing the older requester's
+    /// response. The allocator must skip to the next free id.
+    #[test]
+    fn wrap_skips_pending_ids_instead_of_overwriting() {
+        let mut t = IdTranslator::new();
+        // allocate the very last id of the space and keep it pending
+        t.next = !TRANSLATED_BIT; // 0x7FFF_FFFF
+        let last = t.translate(0, 1, &req(10, 4));
+        assert_eq!(last.0, u32::MAX);
+        // force the allocator to land on `last` again
+        t.next = !TRANSLATED_BIT;
+        let next = t.translate(1, 1, &req(11, 5));
+        assert_eq!(next.0, TRANSLATED_BIT, "wrap must skip the pending id");
+        // the older mapping survived intact
+        assert_eq!(t.resolve(last), Some((0, ReqId(10))));
+        assert_eq!(t.resolve(next), Some((1, ReqId(11))));
+    }
+
+    #[test]
+    fn node_death_splits_pending_into_replay_and_dropped() {
+        let mut t = IdTranslator::new();
+        t.translate(0, 1, &req(1, 10)); // survivor -> dead home: replay
+        t.translate(2, 1, &req(2, 11)); // survivor -> dead home: replay
+        t.translate(1, 0, &req(3, 12)); // dead source: drop
+        t.translate(0, 2, &req(4, 13)); // untouched
+        let (replay, dropped) = t.on_node_dead(1);
+        assert_eq!(dropped, 1);
+        assert_eq!(replay.len(), 2);
+        // replay comes back in allocation order with original ids
+        assert_eq!((replay[0].src, replay[0].orig), (0, ReqId(1)));
+        assert_eq!((replay[1].src, replay[1].orig), (2, ReqId(2)));
+        assert_eq!(replay[0].msg.id, ReqId(1), "stored message keeps its original id");
+        assert_eq!(t.pending(), 1, "entries not touching the dead node stay");
+        // the survivors' by_orig slots are free again for re-issue
+        let refab = t.translate(0, 2, &req(1, 10));
+        assert!(IdTranslator::is_translated(refab));
     }
 }

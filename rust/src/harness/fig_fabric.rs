@@ -16,7 +16,8 @@
 //! goodput strictly exceeds 1-node under node-saturating load, and
 //! migration at N≥2 commits moves and cuts the remote-fill share.
 
-use crate::fabric::{self, FabricConfig};
+use crate::fabric::{self, FabricConfig, KillReport};
+use crate::sim::time::Duration;
 use crate::workload::openloop::OpenLoopConfig;
 use crate::workload::scenario::Scenario;
 
@@ -57,6 +58,100 @@ pub fn saturating_rate(cfg: &OpenLoopConfig) -> f64 {
     3.2 * base_rate(cfg.machine.home_proc)
 }
 
+/// Arrivals needed so a kill scheduled at `at` lands *mid-run* rather
+/// than after the last completion: the configured sweep ops, or enough
+/// arrivals to keep the fabric busy ~60% past the kill time, whichever
+/// is larger. Without this, the default CI sweep (~20µs of traffic)
+/// would finish long before a `--kill 1@200` ever fired.
+pub fn ops_covering_kill(base_ops: u64, per_node_rate: f64, nodes: u8, at: Duration) -> u64 {
+    let span_s = at.ps() as f64 * 1e-12;
+    let needed = (per_node_rate * nodes as f64 * span_s * 1.6).ceil() as u64;
+    base_ops.max(needed)
+}
+
+/// Post-failure goodput trajectory distilled from the completion
+/// timeline of a killed run: how deep the dip went relative to the
+/// pre-kill steady rate, and how long after the kill the fabric climbed
+/// back to its survivor steady state.
+#[derive(Clone, Debug)]
+pub struct FailoverSummary {
+    pub node: u8,
+    pub killed_us: f64,
+    /// Kill-to-declaration latency, µs.
+    pub detect_us: Option<f64>,
+    pub rehomed_lines: u64,
+    pub replayed: u64,
+    pub reclaimed_epochs: u64,
+    pub abandoned_ops: u64,
+    /// Worst post-kill goodput bucket vs the pre-kill steady rate, %.
+    /// `None` when the timeline is too short to bucket on either side.
+    pub dip_depth_pct: Option<f64>,
+    /// Time from the kill until a goodput bucket regained >= 90% of the
+    /// survivor steady rate, µs.
+    pub recovery_us: Option<f64>,
+}
+
+/// Bucket a killed run's completion timestamps into goodput windows and
+/// read off the dip depth and recovery point. Returns `None` when the
+/// node was never actually killed (the run finished first).
+pub fn failover_summary(k: &KillReport) -> Option<FailoverSummary> {
+    let killed_ps = k.killed_at?.ps();
+    let mut out = FailoverSummary {
+        node: k.node,
+        killed_us: killed_ps as f64 * 1e-6,
+        detect_us: k.detect_latency().map(|d| d.ps() as f64 * 1e-6),
+        rehomed_lines: k.rehomed_lines,
+        replayed: k.replayed,
+        reclaimed_epochs: k.reclaimed_epochs,
+        abandoned_ops: k.abandoned_ops,
+        dip_depth_pct: None,
+        recovery_us: None,
+    };
+    let ps = &k.completion_ps;
+    if ps.len() < 2 {
+        return Some(out);
+    }
+    let first = ps[0];
+    let last = *ps.last().expect("non-empty");
+    let span = (last - first).max(1);
+    // >=1µs windows, at most 32 of them across the run
+    let w = (span / 32).max(1_000_000);
+    let n_buckets = (span / w + 1) as usize;
+    let mut counts = vec![0u64; n_buckets];
+    for &t in ps {
+        counts[((t - first) / w) as usize] += 1;
+    }
+    let rate_of = |c: u64| c as f64 / (w as f64 * 1e-12);
+    // the final bucket is partial width; keep it out of the statistics
+    let full = counts.len().saturating_sub(1);
+    let pre: Vec<f64> = (0..full)
+        .filter(|&i| first + (i as u64 + 1) * w <= killed_ps)
+        .map(|i| rate_of(counts[i]))
+        .collect();
+    let post: Vec<(usize, f64)> = (0..full)
+        .filter(|&i| first + i as u64 * w >= killed_ps)
+        .map(|i| (i, rate_of(counts[i])))
+        .collect();
+    if pre.is_empty() || post.is_empty() {
+        return Some(out);
+    }
+    let pre_steady = pre.iter().sum::<f64>() / pre.len() as f64;
+    let dip = post.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min);
+    if pre_steady > 0.0 {
+        out.dip_depth_pct = Some((100.0 * (1.0 - dip / pre_steady)).clamp(0.0, 100.0));
+    }
+    // survivor steady state: the back half of the post-kill buckets
+    let tail = &post[post.len() / 2..];
+    let post_steady = tail.iter().map(|&(_, r)| r).sum::<f64>() / tail.len() as f64;
+    if post_steady > 0.0 {
+        if let Some(&(i, _)) = post.iter().find(|&&(_, r)| r >= 0.9 * post_steady) {
+            let bucket_end = first + (i as u64 + 1) * w;
+            out.recovery_us = Some(bucket_end.saturating_sub(killed_ps) as f64 * 1e-6);
+        }
+    }
+    Some(out)
+}
+
 /// One (node count, migration mode) sweep point.
 #[derive(Clone, Debug)]
 pub struct FabricPoint {
@@ -77,6 +172,8 @@ pub struct FabricPoint {
     /// p99 of the per-frame inter-node hop latency (0 at one node).
     pub hop_p99_ns: f64,
     pub events: u64,
+    /// Present iff the point ran with a scripted node kill that fired.
+    pub failover: Option<FailoverSummary>,
 }
 
 pub struct FigFabric {
@@ -87,6 +184,7 @@ pub struct FigFabric {
 /// Run one fabric configuration and flatten its report into a row.
 pub fn run_point(cfg: FabricConfig, scenario: &Scenario) -> FabricPoint {
     let r = fabric::run(cfg, scenario);
+    let failover = r.kill.as_ref().and_then(failover_summary);
     FabricPoint {
         nodes: r.nodes,
         migrate: r.migrate,
@@ -101,6 +199,7 @@ pub fn run_point(cfg: FabricConfig, scenario: &Scenario) -> FabricPoint {
         moved_lines: r.moved_lines,
         hop_p99_ns: r.hop_p99_ns(),
         events: r.events,
+        failover,
     }
 }
 
@@ -115,7 +214,16 @@ pub fn run_custom(
     let mut points = Vec::with_capacity(nodes.len() * modes.len());
     for &migrate in modes {
         for &n in nodes {
-            let cfg = FabricConfig { nodes: n, migrate, ..base };
+            let mut cfg = FabricConfig { nodes: n, migrate, ..base };
+            if let Some(k) = cfg.kill {
+                // a kill only makes sense with survivors to fail over to;
+                // sweep points too small for it run unkilled
+                if n < 2 || k.node >= n {
+                    cfg.kill = None;
+                } else {
+                    cfg.ol.ops = ops_covering_kill(cfg.ol.ops, cfg.ol.rate_per_s, n, k.at);
+                }
+            }
             points.push(run_point(cfg, scenario));
         }
     }
@@ -171,9 +279,55 @@ pub fn render(f: &FigFabric) -> ResultTable {
     t
 }
 
+/// Companion table for killed runs: one row per sweep point whose
+/// scripted kill actually fired, with the dip-depth/recovery readout
+/// the ISSUE's `--kill` figure asks for. `None` when no point was
+/// killed (the common, unkilled sweep).
+pub fn render_failover(f: &FigFabric) -> Option<ResultTable> {
+    let killed: Vec<(&FabricPoint, &FailoverSummary)> =
+        f.points.iter().filter_map(|p| p.failover.as_ref().map(|s| (p, s))).collect();
+    if killed.is_empty() {
+        return None;
+    }
+    let mut t = ResultTable::new(
+        &format!("Whole-node failover: goodput dip and recovery, scenario `{}`", f.scenario),
+        &[
+            "nodes",
+            "migrate",
+            "killed node",
+            "killed @ us",
+            "detect us",
+            "dip depth %",
+            "recovery us",
+            "rehomed",
+            "replayed",
+            "reclaimed",
+            "abandoned",
+        ],
+    );
+    let opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.1}"));
+    for (p, s) in killed {
+        t.row(vec![
+            p.nodes.to_string(),
+            if p.migrate { "on".into() } else { "off".into() },
+            s.node.to_string(),
+            format!("{:.1}", s.killed_us),
+            opt(s.detect_us),
+            opt(s.dip_depth_pct),
+            opt(s.recovery_us),
+            s.rehomed_lines.to_string(),
+            s.replayed.to_string(),
+            s.reclaimed_epochs.to_string(),
+            s.abandoned_ops.to_string(),
+        ]);
+    }
+    Some(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::KillSpec;
 
     fn ci_fig() -> FigFabric {
         run(Scale::Ci)
@@ -235,5 +389,36 @@ mod tests {
         assert_eq!(f.points.len(), 2 * node_sweep(Scale::Ci).len());
         let md = t.to_markdown();
         assert!(md.contains("remote fill %") && md.contains("hop p99 ns"));
+        // the unkilled sweep has no failover table
+        assert!(render_failover(&f).is_none());
+    }
+
+    /// A killed sweep point auto-extends its arrivals past the kill
+    /// time, reports the failover trajectory, and renders the
+    /// dip/recovery table.
+    #[test]
+    fn killed_sweep_reports_dip_and_recovery() {
+        let ol = OpenLoopConfig { ops: ops_for(Scale::Ci), ..Default::default() };
+        let ol = OpenLoopConfig { rate_per_s: saturating_rate(&ol), ..ol };
+        let kill = KillSpec { node: 1, at: Duration::from_us(30) };
+        let base = FabricConfig { ol, kill: Some(kill), ..Default::default() };
+        let scenario =
+            Scenario::preset("hot-kvs", footprint_for(Scale::Ci), 0.99).expect("hot-kvs preset");
+        let f = run_custom(base, &scenario, &[3], &[false]);
+        assert_eq!(f.points.len(), 1);
+        let p = &f.points[0];
+        let s = p.failover.as_ref().expect("kill must fire mid-run");
+        assert_eq!(s.node, 1);
+        assert!((s.killed_us - 30.0).abs() < 1e-6, "killed at the scripted time");
+        let detect = s.detect_us.expect("survivors must declare the death");
+        assert!(detect > 0.0 && detect <= 40.0, "watchdog bounds detection: {detect}");
+        assert!(s.rehomed_lines > 0, "the dead node homed ~a third of the lines");
+        // lossless accounting: every op not abandoned with the dead node completed
+        let target = ops_covering_kill(ops_for(Scale::Ci), ol.rate_per_s, 3, kill.at);
+        assert!(target > ops_for(Scale::Ci), "arrivals must extend past the kill");
+        assert_eq!(p.completed + s.abandoned_ops, target);
+        let t = render_failover(&f).expect("killed sweep renders the failover table");
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.to_markdown().contains("dip depth %"));
     }
 }

@@ -21,6 +21,24 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Derive a fault-injection seed for one directed link from a base
+/// seed and the link's coordinates. `kind` tags the link family (1 =
+/// node↔client links, 2 = inter-node fabric channels), `idx` the link
+/// within the family, `dir` the direction (0/1). The coordinates are
+/// packed into disjoint bit ranges and mixed through splitmix64 — a
+/// bijection on `u64` — so for a fixed base seed, distinct
+/// `(kind, idx, dir)` triples are *guaranteed* distinct seeds, unlike
+/// the affine `seed + 2*idx` schemes this replaces, where different
+/// families could collide and see correlated fault patterns.
+#[inline]
+pub fn stream_seed(base: u64, kind: u64, idx: u64, dir: u64) -> u64 {
+    debug_assert!(kind > 0 && kind < 1 << 8, "kind tag out of range");
+    debug_assert!(idx < 1 << 32, "link index out of range");
+    debug_assert!(dir < 2, "direction must be 0 or 1");
+    let mut packed = base ^ ((kind << 40) | (idx << 1) | dir);
+    splitmix64(&mut packed)
+}
+
 impl Rng {
     /// Seed the generator. Any seed (including 0) is valid; the state is
     /// expanded through splitmix64 as the xoshiro authors recommend.
@@ -171,6 +189,27 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn stream_seeds_are_distinct_across_kinds_and_indices() {
+        // splitmix64 is a bijection, so distinct packed coordinates map
+        // to distinct seeds — verify the packing itself is injective
+        // over a realistic link population (two kinds, many indices,
+        // both directions) and stable across a couple of base seeds.
+        for base in [0u64, 7, u64::MAX / 3] {
+            let mut seen = std::collections::HashSet::new();
+            for kind in 1..=2u64 {
+                for idx in 0..64u64 {
+                    for dir in 0..2u64 {
+                        assert!(
+                            seen.insert(stream_seed(base, kind, idx, dir)),
+                            "collision at base {base} kind {kind} idx {idx} dir {dir}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

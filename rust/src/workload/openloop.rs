@@ -43,7 +43,7 @@ use crate::proto::states::Node;
 use crate::proto::transitions::reference_transitions;
 use crate::rustc_hash::{FxHashMap as HashMap, FxHashSet as HashSet};
 use crate::sim::engine::Engine;
-use crate::sim::rng::Rng;
+use crate::sim::rng::{stream_seed, Rng};
 use crate::sim::stats::{Counters, Histogram};
 use crate::sim::time::{Duration, Time};
 use crate::transport::{Control, Frame, FramedIngress, VcId};
@@ -335,16 +335,20 @@ impl OpenLoop {
             // streaming mode lines are released right after use and the
             // cache stays nearly empty regardless of size
             cache: Cache::new(cfg.machine.cpu.llc_bytes, cfg.machine.cpu.llc_ways),
+            // both link directions draw independent fault streams via
+            // `stream_seed` (kind 1 = node↔client links, idx 0 here);
+            // the fabric derives its node-0 links identically, which is
+            // what keeps a 1-node fabric bit-identical to this cell
             to_home: match cfg.machine.rel {
-                Some(rc) => {
+                Some(mut rc) => {
+                    rc.faults.seed = stream_seed(rc.faults.seed, 1, 0, 0);
                     FramedIngress::with_rel(cfg.machine.link, Node::Remote, master.fork(2), rc)
                 }
                 None => FramedIngress::new(cfg.machine.link, Node::Remote, master.fork(2)),
             },
             to_cpu: match cfg.machine.rel {
-                // the response direction draws an independent fault stream
                 Some(mut rc) => {
-                    rc.faults.seed = rc.faults.seed.wrapping_add(1);
+                    rc.faults.seed = stream_seed(rc.faults.seed, 1, 0, 1);
                     FramedIngress::with_rel(cfg.machine.link, Node::Home, master.fork(3), rc)
                 }
                 None => FramedIngress::new(cfg.machine.link, Node::Home, master.fork(3)),
