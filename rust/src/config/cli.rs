@@ -138,7 +138,7 @@ pub fn main_entry() {
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
                                  --batch 4 --rate 2e6,8e6 --theta 0.99 --classes hot-kvs:2,scan:1\n\
                                  --ops 12000 --arrivals poisson|fixed --cached --seed N --json\n\
-                                 --spans --obs-out run.jsonl\n\
+                                 --spans --obs-out run.jsonl --trace-out run.trace.json\n\
                  faults flags:   --ber 1e-6,1e-4,1e-3 --drop 0.02 --reorder 0.02 --burst 8\n\
                                  --seed 7 --slices 1,4 --cached-slices 2 --rate 2e6\n\
                                  --ops 1200 --scenario {scenarios} --mode gbn|sr --adaptive-rto --json\n\
@@ -146,6 +146,8 @@ pub fn main_entry() {
                                  --slices 4 --rate 2e6 --ops 1200 --scenario {scenarios} --json\n\
                  fabric flags:   --nodes 1,2,4 --migrate on|off|both --threshold 8 --slices 2\n\
                                  --rate 2e6 --ops 1600 --scenario {scenarios} --theta 0.99 --seed 7 --json\n\
+                                 --kill 1@200 --detect-us 500 --spans --obs-out fab.jsonl\n\
+                                 --trace-out fab.trace.json --flight-dump post.json\n\
                  selfperf flags: --check BENCH_6.json --record BENCH_6.json --tolerance 0.25 --json\n\
                  seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx/fabric 0x0C3A)\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?}; selfperf ignores it)",
@@ -301,6 +303,9 @@ pub struct WorkloadArgs {
     pub spans: bool,
     /// `--obs-out <path>`: write telemetry JSONL (first slice count).
     pub obs_out: Option<String>,
+    /// `--trace-out <path>`: write the observed run as Chrome
+    /// trace-event JSON (first slice count).
+    pub trace_out: Option<String>,
     /// `--json`: emit tables as JSON alongside the markdown.
     pub json: bool,
     pub cfg: OpenLoopConfig,
@@ -317,6 +322,7 @@ impl WorkloadArgs {
             rates: None,
             spans: false,
             obs_out: None,
+            trace_out: None,
             json: false,
             cfg: OpenLoopConfig { ops: fig_loadcurve::ops_for(scale), ..Default::default() },
         }
@@ -419,6 +425,12 @@ impl WorkloadArgs {
                         return Err("--obs-out needs a file path".into());
                     }
                     out.obs_out = Some(val.clone());
+                }
+                "--trace-out" => {
+                    if val.is_empty() {
+                        return Err("--trace-out needs a file path".into());
+                    }
+                    out.trace_out = Some(val.clone());
                 }
                 "--seed" => {
                     out.cfg.seed = parse_seed(val)?;
@@ -681,6 +693,17 @@ pub struct FabricArgs {
     pub kill: Option<KillSpec>,
     /// `--detect-us`: failure-detector watchdog bound, µs.
     pub detect_us: Option<u64>,
+    /// `--spans`: run observed points (one per node count, first
+    /// migrate mode) and print local + remote latency waterfalls.
+    pub spans: bool,
+    /// `--obs-out <path>`: write telemetry JSONL (first node count).
+    pub obs_out: Option<String>,
+    /// `--trace-out <path>`: write the observed run as Chrome
+    /// trace-event JSON (first node count).
+    pub trace_out: Option<String>,
+    /// `--flight-dump <path>`: attach the flight recorder and write its
+    /// dumps (deadlock, `declare_dead`, end of run) here.
+    pub flight_dump: Option<String>,
     /// `--json`: emit the table as JSON alongside the markdown.
     pub json: bool,
     pub cfg: OpenLoopConfig,
@@ -699,19 +722,27 @@ impl FabricArgs {
             rate: None,
             kill: None,
             detect_us: None,
+            spans: false,
+            obs_out: None,
+            trace_out: None,
+            flight_dump: None,
             json: false,
             cfg: OpenLoopConfig { ops: fig_fabric::ops_for(scale), ..Default::default() },
         }
     }
 
-    /// Parse `--flag value` pairs (`--json` is a bare flag); unknown
-    /// flags are errors.
+    /// Parse `--flag value` pairs (`--spans` and `--json` are bare
+    /// flags); unknown flags are errors.
     pub fn parse(scale: Scale, args: &[String]) -> Result<FabricArgs, String> {
         let mut out = FabricArgs::defaults(scale);
         let mut it = args.iter();
         while let Some(flag) = it.next() {
             if flag == "--json" {
                 out.json = true;
+                continue;
+            }
+            if flag == "--spans" {
+                out.spans = true;
                 continue;
             }
             let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
@@ -808,6 +839,24 @@ impl FabricArgs {
                     }
                     out.detect_us = Some(us);
                 }
+                "--obs-out" => {
+                    if val.is_empty() {
+                        return Err("--obs-out needs a file path".into());
+                    }
+                    out.obs_out = Some(val.clone());
+                }
+                "--trace-out" => {
+                    if val.is_empty() {
+                        return Err("--trace-out needs a file path".into());
+                    }
+                    out.trace_out = Some(val.clone());
+                }
+                "--flight-dump" => {
+                    if val.is_empty() {
+                        return Err("--flight-dump needs a file path".into());
+                    }
+                    out.flight_dump = Some(val.clone());
+                }
                 other => return Err(format!("unknown fabric flag {other:?}")),
             }
         }
@@ -832,6 +881,14 @@ impl FabricArgs {
     /// The per-node offered rate of the sweep.
     pub fn rate(&self) -> f64 {
         self.rate.unwrap_or_else(|| fig_fabric::saturating_rate(&self.cfg))
+    }
+
+    /// Any observability surface requested?
+    pub fn observed(&self) -> bool {
+        self.spans
+            || self.obs_out.is_some()
+            || self.trace_out.is_some()
+            || self.flight_dump.is_some()
     }
 }
 
@@ -1076,7 +1133,7 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
                 std::process::exit(2);
             }
         };
-        if a.spans || a.obs_out.is_some() {
+        if a.spans || a.obs_out.is_some() || a.trace_out.is_some() {
             // observed mode: one point per slice count at the first
             // rate of the grid, with span tracing / telemetry attached
             run_workload_observed(&a, &scenario);
@@ -1161,17 +1218,23 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
         if let Some(us) = a.detect_us {
             base.detect = Duration::from_us(us);
         }
-        let f = fig_fabric::run_custom(base, &scenario, &a.nodes, &a.modes);
-        let t = fig_fabric::render(&f);
-        println!("{}", t.to_markdown());
-        if let Some(ft) = fig_fabric::render_failover(&f) {
-            println!("{}", ft.to_markdown());
-            if a.json {
-                println!("{}", ft.to_json().pretty());
+        if a.observed() {
+            // observed mode: one point per node count at the first
+            // migrate mode, with spans / telemetry / flight attached
+            run_fabric_observed(&a, &scenario, base);
+        } else {
+            let f = fig_fabric::run_custom(base, &scenario, &a.nodes, &a.modes);
+            let t = fig_fabric::render(&f);
+            println!("{}", t.to_markdown());
+            if let Some(ft) = fig_fabric::render_failover(&f) {
+                println!("{}", ft.to_markdown());
+                if a.json {
+                    println!("{}", ft.to_json().pretty());
+                }
             }
-        }
-        if a.json {
-            println!("{}", t.to_json().pretty());
+            if a.json {
+                println!("{}", t.to_json().pretty());
+            }
         }
     }
     // deliberately NOT part of `all`: selfperf measures the host, not
@@ -1236,9 +1299,11 @@ fn run_workload_observed(a: &WorkloadArgs, scenario: &Scenario) {
     use crate::obs::ObsConfig;
     let rate = a.rates()[0];
     let ocfg = ObsConfig {
-        spans: a.spans,
+        spans: a.spans || a.trace_out.is_some(),
         span_sample_every: 8,
+        record_spans: a.trace_out.is_some(),
         tick: a.obs_out.as_ref().map(|_| waterfall::DEFAULT_TICK),
+        ..ObsConfig::default()
     };
     let mut wrote_obs = false;
     for &n in &a.slices {
@@ -1259,13 +1324,103 @@ fn run_workload_observed(a: &WorkloadArgs, scenario: &Scenario) {
                 println!("{}", w.to_json().pretty());
             }
         }
-        if let (Some(path), false) = (&a.obs_out, wrote_obs) {
-            if let Err(e) = obs.write_jsonl(path) {
-                eprintln!("eci bench workload: cannot write {path:?}: {e}");
-                std::process::exit(2);
+        if !wrote_obs {
+            if let Some(path) = &a.obs_out {
+                if let Err(e) = obs.write_jsonl(path) {
+                    eprintln!("eci bench workload: cannot write {path:?}: {e}");
+                    std::process::exit(2);
+                }
+                println!("workload observed: telemetry ({} records) -> {path}", obs.jsonl.len());
             }
-            println!("workload observed: telemetry ({} records) -> {path}", obs.jsonl.len());
+            if let Some(path) = &a.trace_out {
+                // single-cell host: span keys carry no node bits
+                if let Err(e) = obs.write_trace(path, 0) {
+                    eprintln!("eci bench workload: cannot write {path:?}: {e}");
+                    std::process::exit(2);
+                }
+                println!(
+                    "workload observed: trace ({} spans) -> {path}",
+                    obs.span_records.len()
+                );
+            }
             wrote_obs = true;
+        }
+    }
+}
+
+/// `eci bench fabric --spans [--obs-out <p>] [--trace-out <p>]
+/// [--flight-dump <p>]`: one observed fabric point per node count at
+/// the first migrate mode. Multi-node waterfalls carry two telescoping
+/// classes (local fills and remote fills); the trace export lays spans
+/// and flight events out per node; the flight recorder dumps on
+/// `declare_dead`, on a deadlock panic, and at end of run. Files are
+/// written from the first node count's run.
+fn run_fabric_observed(a: &FabricArgs, scenario: &Scenario, base: FabricConfig) {
+    use crate::fabric::{Fabric, SPAN_NODE_SHIFT};
+    use crate::harness::waterfall;
+    use crate::obs::{flight::DEFAULT_FLIGHT_CAP, ObsConfig};
+    let migrate = a.modes[0];
+    let ocfg = ObsConfig {
+        spans: a.spans || a.trace_out.is_some(),
+        span_sample_every: 8,
+        record_spans: a.trace_out.is_some(),
+        tick: a.obs_out.as_ref().map(|_| waterfall::DEFAULT_TICK),
+        flight: a.flight_dump.as_ref().map(|_| DEFAULT_FLIGHT_CAP),
+        flight_path: a.flight_dump.clone(),
+        ..ObsConfig::default()
+    };
+    let mut wrote = false;
+    for &n in &a.nodes {
+        let mut cfg = base;
+        cfg.nodes = n;
+        cfg.migrate = migrate && n > 1;
+        // a kill point needs survivors; smaller sweep entries run clean
+        cfg.kill = base.kill.filter(|k| n >= 2 && k.node < n);
+        let (r, obs) = Fabric::new(cfg, scenario).with_obs(&ocfg).run_observed();
+        println!(
+            "fabric observed: {} node(s), migrate {}, {} completed, {} remote fills, \
+             e2e p50 {:.0} ns p99 {:.0} ns",
+            n,
+            cfg.migrate,
+            r.completed,
+            r.fills_remote,
+            r.p50_ns(),
+            r.p99_ns(),
+        );
+        if let Some(w) = &obs.waterfall {
+            let t = waterfall::render_titled(&format!("{n} node(s)"), w);
+            println!("{}", t.to_markdown());
+            if a.json {
+                println!("{}", w.to_json().pretty());
+            }
+        }
+        if !wrote {
+            let die = |path: &String, e: std::io::Error| -> ! {
+                eprintln!("eci bench fabric: cannot write {path:?}: {e}");
+                std::process::exit(2);
+            };
+            if let Some(path) = &a.obs_out {
+                if let Err(e) = obs.write_jsonl(path) {
+                    die(path, e);
+                }
+                println!("fabric observed: telemetry ({} records) -> {path}", obs.jsonl.len());
+            }
+            if let Some(path) = &a.trace_out {
+                if let Err(e) = obs.write_trace(path, SPAN_NODE_SHIFT) {
+                    die(path, e);
+                }
+                println!("fabric observed: trace ({} spans) -> {path}", obs.span_records.len());
+            }
+            if let Some(path) = &a.flight_dump {
+                if let Err(e) = obs.write_flight(path) {
+                    die(path, e);
+                }
+                println!(
+                    "fabric observed: flight recorder ({} dumps) -> {path}",
+                    obs.flight_dumps.len()
+                );
+            }
+            wrote = true;
         }
     }
 }
@@ -1409,6 +1564,35 @@ mod tests {
         assert!(!d.spans && d.obs_out.is_none(), "observed mode is opt-in");
         assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--obs-out"])).is_err(), "missing path");
         assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--obs-out", ""])).is_err(), "empty path");
+        let t = WorkloadArgs::parse(Scale::Ci, &s(&["--trace-out", "run.trace.json"])).unwrap();
+        assert_eq!(t.trace_out.as_deref(), Some("run.trace.json"));
+        assert!(WorkloadArgs::parse(Scale::Ci, &s(&["--trace-out", ""])).is_err(), "empty path");
+    }
+
+    #[test]
+    fn fabric_observability_flags() {
+        let a = FabricArgs::parse(
+            Scale::Ci,
+            &s(&[
+                "--nodes", "2",
+                "--spans",
+                "--obs-out", "fab.jsonl",
+                "--trace-out", "fab.trace.json",
+                "--flight-dump", "post.json",
+            ]),
+        )
+        .unwrap();
+        assert!(a.spans && a.observed());
+        assert_eq!(a.obs_out.as_deref(), Some("fab.jsonl"));
+        assert_eq!(a.trace_out.as_deref(), Some("fab.trace.json"));
+        assert_eq!(a.flight_dump.as_deref(), Some("post.json"));
+        // each surface alone flips observed mode; defaults stay off
+        let d = FabricArgs::defaults(Scale::Ci);
+        assert!(!d.spans && !d.observed(), "observed mode is opt-in");
+        let f = FabricArgs::parse(Scale::Ci, &s(&["--flight-dump", "p.json"])).unwrap();
+        assert!(!f.spans && f.observed());
+        assert!(FabricArgs::parse(Scale::Ci, &s(&["--trace-out", ""])).is_err(), "empty path");
+        assert!(FabricArgs::parse(Scale::Ci, &s(&["--flight-dump"])).is_err(), "missing path");
     }
 
     #[test]

@@ -68,7 +68,7 @@ use crate::agents::home::HomeEffect;
 use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
 use crate::dcs::{Dcs, SliceService};
 use crate::memctl::KvsService;
-use crate::obs::{Obs, ObsConfig, ObsReport, Registry, Stage};
+use crate::obs::{FlightKind, Obs, ObsConfig, ObsReport, Registry, Stage};
 use crate::proto::messages::{CohOp, LineAddr, Message, MsgKind, ReqId};
 use crate::proto::spec::{generate_remote, PendingFwd, RemoteView};
 use crate::proto::states::{CacheState, Node};
@@ -388,12 +388,36 @@ fn chan_idx(src: u8, dst: u8, nodes: u8) -> u16 {
     src as u16 * nodes as u16 + dst as u16
 }
 
+/// Bit position of the node id inside a span key (trace exporters pass
+/// this to [`crate::obs::chrome::build`] to recover the node track).
+pub const SPAN_NODE_SHIFT: u32 = 26;
+
 /// Span-tracer keys must be fabric-unique: node in the top bits, the
 /// client's transaction id below. With one node this is the identity
 /// map, so 1-node fabric waterfalls match open-loop ones exactly.
 fn span_key(node: u8, id: u32) -> u32 {
     debug_assert_eq!(id & 0xFC00_0000, 0, "client ids stay below 2^26");
-    ((node as u32) << 26) | id
+    ((node as u32) << SPAN_NODE_SHIFT) | id
+}
+
+/// Per-node span-sampling phases, derived from the run seed so they are
+/// deterministic yet uncorrelated with the arrival process. Nodes issue
+/// in near-lockstep (same arrival config), so identical phases would
+/// sample the *same* global positions on every node; pairwise-distinct
+/// phases (enforced by linear probing while distinct residues remain)
+/// spread the 1-in-N samples across the fabric's issue interleaving.
+pub fn span_phases(seed: u64, nodes: u8, every: u32) -> Vec<u32> {
+    let every = every.max(1);
+    let mut out: Vec<u32> = Vec::with_capacity(nodes as usize);
+    for node in 0..nodes as u64 {
+        let mut p = (stream_seed(seed, 3, node, 0) % every as u64) as u32;
+        // only probe while distinct residues remain (nodes > every wraps)
+        while out.len() < every as usize && out.contains(&p) {
+            p = (p + 1) % every;
+        }
+        out.push(p);
+    }
+    out
 }
 
 /// The N-node fabric host: N open-loop cells on one event engine,
@@ -658,7 +682,20 @@ impl Fabric {
     /// or [`Fabric::run_settled_observed`].
     pub fn with_obs(mut self, ocfg: &ObsConfig) -> Fabric {
         if ocfg.enabled() {
-            self.obs = Some(Obs::new(ocfg));
+            // multi-node runs decorrelate span sampling across cells
+            // (see `span_phases`); 1-node runs keep phase 0 so their
+            // waterfall stays bit-identical to the open-loop host's
+            if ocfg.spans && ocfg.span_phases.is_empty() && self.cfg.nodes > 1 {
+                let mut derived = ocfg.clone();
+                derived.span_phases = span_phases(
+                    self.cfg.ol.seed,
+                    self.cfg.nodes,
+                    ocfg.span_sample_every.max(1),
+                );
+                self.obs = Some(Obs::new(&derived));
+            } else {
+                self.obs = Some(Obs::new(ocfg));
+            }
         }
         self
     }
@@ -731,6 +768,18 @@ impl Fabric {
                     }
                     _ => String::new(),
                 };
+                // post-mortem: dump the flight recorder *before*
+                // unwinding so the stuck run leaves evidence behind
+                if let Some(fl) = self.obs.as_mut().and_then(|o| o.flight.as_mut()) {
+                    let dump = fl.dump_string("deadlock", self.eng.now());
+                    match self.obs.as_ref().and_then(|o| o.flight_path.as_deref()) {
+                        Some(path) => {
+                            let _ = std::fs::write(path, format!("[{dump}]\n"));
+                            eprintln!("flight recorder dumped to {path}");
+                        }
+                        None => eprintln!("flight recorder: {dump}"),
+                    }
+                }
                 panic!(
                     "fabric deadlock: {} of {} ops complete, {} moves in flight, \
                      per-node (completed, quota, dcs-pending) {:?}{}",
@@ -764,6 +813,7 @@ impl Fabric {
     /// dotted names (no collisions across nodes), plus the fabric
     /// channels and the merged rel-link stats.
     fn refresh_registry(&self, reg: &mut Registry) {
+        reg.begin_refresh();
         let mut rel = None;
         let mut eat_rel = |ing: &FramedIngress, rel: &mut Option<crate::transport::rel::RelStats>| {
             if let Some(s) = ing.rel_stats() {
@@ -813,7 +863,7 @@ impl Fabric {
         let mut obs = self.obs.take().expect("attach obs with with_obs first");
         self.refresh_registry(&mut obs.registry);
         obs.tick(self.eng.now());
-        obs.finish()
+        obs.finish_at(self.eng.now())
     }
 
     /// FNV-1a over every line's directory state *at its home node* and
@@ -1009,12 +1059,14 @@ impl Fabric {
     // -- client side --------------------------------------------------------
 
     /// Single admission point for node `n`'s client traffic toward its
-    /// local home hop (span stage `Issue`).
+    /// local home hop (span stage `Issue`). Each node is its own issue
+    /// stream: the tracer's per-stream phases keep multi-node sampling
+    /// from locking onto the same arrival ordinals on every cell.
     fn offer_home(&mut self, n: u8, m: Message) {
         if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
             if let MsgKind::CohReq { op } = &m.kind {
                 if op.needs_response() {
-                    sp.on_issue(self.eng.now(), span_key(n, m.id.0));
+                    sp.on_issue_stream(self.eng.now(), span_key(n, m.id.0), n as usize);
                 }
             }
         }
@@ -1290,9 +1342,20 @@ impl Fabric {
         // response (per-node id spaces collide at the remote home), and
         // put the message on the fabric channel.
         let ctrl = self.cfg.ol.machine.ctrl_latency;
+        let now = self.eng.now();
         self.eng.schedule(ctrl, Ev::CreditHome(n, f.vc));
         if let MsgKind::CohReq { op } = &f.msg.kind {
             if op.needs_response() && op.initiator() == Node::Remote {
+                // the trace context is the (source node, original id)
+                // pair the translator carries: mark the span under the
+                // pre-translation key — the same key the home-side and
+                // landing marks recover through `IdTranslator::peek`.
+                if let Some(obs) = self.obs.as_mut() {
+                    if let Some(sp) = obs.spans.as_mut() {
+                        sp.mark(now, span_key(n, f.msg.id.0), Stage::FwdOut);
+                    }
+                    obs.flight_record(now, n as u32, FlightKind::FwdOut, f.msg.id.0 as u64, home as u64);
+                }
                 f.msg.id = self.xlat.translate(n, home, &f.msg);
             }
         }
@@ -1331,6 +1394,10 @@ impl Fabric {
         if self.mig.note(addr, src, h, self.cfg.threshold) && !matches!(op, CohOp::UpgradeS2E) {
             self.mig.begin(addr, src);
             self.nodes[h as usize].counters.inc("fab_migration_begin");
+            if let Some(obs) = self.obs.as_mut() {
+                let now = self.eng.now();
+                obs.flight_record(now, h as u32, FlightKind::MigBegin, addr.0, src as u64);
+            }
             // the trigger request parks too: it completes at the new home
             return Gate::Park;
         }
@@ -1380,6 +1447,12 @@ impl Fabric {
                     src
                 };
                 let addr = msg.addr;
+                if let Some(obs) = self.obs.as_mut() {
+                    if let Some(sp) = obs.spans.as_mut() {
+                        sp.note_park(span_key(true_src, msg.id.0));
+                    }
+                    obs.flight_record(now, h as u32, FlightKind::Park, msg.id.0 as u64, addr.0);
+                }
                 self.mig.park(addr, true_src, msg);
                 self.nodes[h as usize].counters.inc("fab_parked");
                 // the message left the wire: release the hop's credit
@@ -1395,12 +1468,23 @@ impl Fabric {
                     self.mig.live_inc(f.msg.addr);
                 }
                 self.ledger_on_admit(h, src, &f.msg);
-                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
-                    let key = match self.xlat.peek(f.msg.id) {
-                        Some((s0, orig)) => span_key(s0, orig.0),
-                        None => span_key(src, f.msg.id.0),
-                    };
-                    sp.mark(now, key, Stage::Deliver);
+                if let Some(obs) = self.obs.as_mut() {
+                    if let Some(sp) = obs.spans.as_mut() {
+                        let key = match self.xlat.peek(f.msg.id) {
+                            Some((s0, orig)) => span_key(s0, orig.0),
+                            None => span_key(src, f.msg.id.0),
+                        };
+                        sp.mark(now, key, Stage::Deliver);
+                    }
+                    if src != h {
+                        obs.flight_record(
+                            now,
+                            h as u32,
+                            FlightKind::Admit,
+                            f.msg.id.0 as u64,
+                            src as u64,
+                        );
+                    }
                 }
                 let addr = f.msg.addr;
                 let vc = f.vc;
@@ -1449,6 +1533,13 @@ impl Fabric {
         }
         match self.migration_gate(h, src, &msg) {
             Gate::Park => {
+                if let Some(obs) = self.obs.as_mut() {
+                    let now = self.eng.now();
+                    if let Some(sp) = obs.spans.as_mut() {
+                        sp.note_park(span_key(src, msg.id.0));
+                    }
+                    obs.flight_record(now, h as u32, FlightKind::Park, msg.id.0 as u64, addr.0);
+                }
                 self.mig.park(addr, src, msg);
                 self.nodes[h as usize].counters.inc("fab_parked");
                 self.try_commit(h, addr);
@@ -1459,8 +1550,15 @@ impl Fabric {
                     self.mig.live_inc(addr);
                 }
                 self.ledger_on_admit(h, src, &msg);
-                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
-                    sp.mark(now, span_key(src, msg.id.0), Stage::Deliver);
+                if let Some(obs) = self.obs.as_mut() {
+                    if let Some(sp) = obs.spans.as_mut() {
+                        sp.mark(now, span_key(src, msg.id.0), Stage::Deliver);
+                        // every fab_inject admission is a re-injection:
+                        // a parked request following a commit/abort, a
+                        // post-commit race, or a failover replay
+                        sp.note_replay(span_key(src, msg.id.0));
+                    }
+                    obs.flight_record(now, h as u32, FlightKind::Replay, msg.id.0 as u64, h as u64);
                 }
                 // a remote source's response-needing request must enter
                 // the directory under a translated id, exactly as if it
@@ -1516,6 +1614,10 @@ impl Fabric {
         self.nodes[target as usize].mem.write_line(addr, &line);
         self.interleave.set_home(addr, target);
         self.granted_to.remove(&addr);
+        if let Some(obs) = self.obs.as_mut() {
+            let now = self.eng.now();
+            obs.flight_record(now, h as u32, FlightKind::MigCommit, addr.0, target as u64);
+        }
         self.nodes[h as usize].counters.inc("fab_migrations_out");
         self.nodes[target as usize].counters.inc("fab_migrations_in");
         let parked = self.mig.take_parked(addr);
@@ -1533,6 +1635,10 @@ impl Fabric {
         let parked = self.mig.take_parked(addr);
         self.mig.end(addr);
         self.nodes[h as usize].counters.inc("fab_migration_abort");
+        if let Some(obs) = self.obs.as_mut() {
+            let now = self.eng.now();
+            obs.flight_record(now, h as u32, FlightKind::MigAbort, addr.0, h as u64);
+        }
         let ctrl = self.cfg.ol.machine.ctrl_latency;
         for (src, m) in parked {
             self.eng.schedule(ctrl, Ev::FabInject(h, Box::new(m), src));
@@ -1778,6 +1884,21 @@ impl Fabric {
             // translated ids, and retransmit-episode accounting belongs
             // to the client-side link only
             self.nodes[landing as usize].hop_lat.record_dur(at.since(now));
+            if let Some(obs) = self.obs.as_mut() {
+                if dir == 1 {
+                    // the response hop starts here: rsp frames carry the
+                    // restored original id and ch.src is the requester
+                    if let MsgKind::CohRsp { op, .. } = &f.msg.kind {
+                        if op.initiator() == Node::Remote {
+                            if let Some(sp) = obs.spans.as_mut() {
+                                sp.mark(now, span_key(src, f.msg.id.0), Stage::RspLaunch);
+                            }
+                        }
+                    }
+                }
+                let tx = if dir == 0 { src } else { dst };
+                obs.flight_record(now, tx as u32, FlightKind::ChanLaunch, f.msg.id.0 as u64, c as u64);
+            }
             let ev = if dir == 0 {
                 Ev::FabLandReq(c, Box::new(f))
             } else {
@@ -1809,6 +1930,9 @@ impl Fabric {
         self.rx_ctls = ctls;
         self.arm_chan_ack_flush(c, 0);
         for f in delivered.drain(..) {
+            if let Some(obs) = self.obs.as_mut() {
+                obs.flight_record(now, h as u32, FlightKind::ChanLand, f.msg.id.0 as u64, c as u64);
+            }
             let home = self.interleave.home_of(f.msg.addr);
             if home == h {
                 self.admit_frame(h, src, f, Source::Chan(c));
@@ -1855,15 +1979,18 @@ impl Fabric {
         let mut fills: Vec<LineAddr> = Vec::new();
         for f in delivered.drain(..) {
             self.eng.schedule(ctrl, Ev::FabCreditRsp(c, f.vc));
+            if let Some(obs) = self.obs.as_mut() {
+                obs.flight_record(now, s as u32, FlightKind::ChanLand, f.msg.id.0 as u64, c as u64);
+            }
             if let MsgKind::CohRsp { op, .. } = &f.msg.kind {
                 // the response landed at its source: only now does the
                 // forwarded transaction's translation entry retire, so
                 // "entry pending" always means "source still waiting"
                 if op.initiator() == Node::Remote {
                     self.xlat.complete(s, f.msg.id);
-                }
-                if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
-                    sp.complete(now, span_key(s, f.msg.id.0));
+                    if let Some(sp) = self.obs.as_mut().and_then(|o| o.spans.as_mut()) {
+                        sp.complete(now, span_key(s, f.msg.id.0));
+                    }
                 }
             }
             let fx = {
@@ -1895,6 +2022,7 @@ impl Fabric {
 
     fn on_chan_retx(&mut self, c: u16, dir: usize) {
         let mut suspect = None;
+        let mut replayed = None;
         {
             let ch = self.chans[c as usize].as_mut().expect("off-diagonal");
             ch.retx_pending[dir] = false;
@@ -1905,6 +2033,7 @@ impl Fabric {
             }
             if ing.rel_acked() == ch.retx_seen_acked[dir] {
                 ing.rel_force_replay();
+                replayed = Some(if dir == 0 { ch.src } else { ch.dst });
                 // no ack progress across a full RTO: evidence the peer
                 // has gone silent
                 ch.barren[dir] += 1;
@@ -1914,6 +2043,12 @@ impl Fabric {
                 }
             } else {
                 ch.barren[dir] = 0;
+            }
+        }
+        if let Some(tx) = replayed {
+            if let Some(obs) = self.obs.as_mut() {
+                let now = self.eng.now();
+                obs.flight_record(now, tx as u32, FlightKind::ChanRetx, c as u64, dir as u64);
             }
         }
         if let Some(p) = suspect {
@@ -1930,6 +2065,11 @@ impl Fabric {
     fn suspect_dead(&mut self, p: u8) {
         if self.dead_declared.is_some() {
             return;
+        }
+        if let Some(obs) = self.obs.as_mut() {
+            let now = self.eng.now();
+            let real = matches!(self.killed, Some((k, _)) if k == p);
+            obs.flight_record(now, p as u32, FlightKind::Suspect, p as u64, real as u64);
         }
         match self.killed {
             Some((k, _)) if k == p => self.declare_dead(p),
@@ -1984,6 +2124,9 @@ impl Fabric {
         let now = self.eng.now();
         self.killed = Some((n, now));
         self.nodes[n as usize].counters.inc("fab_killed");
+        if let Some(obs) = self.obs.as_mut() {
+            obs.flight_record(now, n as u32, FlightKind::Kill, n as u64, 0);
+        }
         // watchdog: detection is bounded by cfg.detect even when no
         // retransmission traffic points at the dead node (clean links
         // have no rel timers to starve)
@@ -2016,6 +2159,10 @@ impl Fabric {
         let now = self.eng.now();
         self.dead_declared = Some((p, now));
         self.nodes[p as usize].counters.inc("fab_dead_declared");
+        if let Some(obs) = self.obs.as_mut() {
+            let lag = now.since(self.killed.expect("checked above").1);
+            obs.flight_record(now, p as u32, FlightKind::DeclareDead, p as u64, lag.ps());
+        }
         let ctrl = self.cfg.ol.machine.ctrl_latency;
 
         // 1. abandoned work
@@ -2046,6 +2193,9 @@ impl Fabric {
             .collect();
         self.interleave.mark_dead(p);
         self.kill_stats.rehomed = rehomed.len() as u64;
+        if let Some(obs) = self.obs.as_mut() {
+            obs.flight_record(now, p as u32, FlightKind::Rehome, rehomed.len() as u64, p as u64);
+        }
         self.granted_to.retain(|_, holder| *holder != p);
         for &a in &rehomed {
             self.mig.forget(a);
@@ -2123,6 +2273,9 @@ impl Fabric {
                 self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(m), p));
             }
             self.kill_stats.reclaimed += u64::from(k);
+            if let Some(obs) = self.obs.as_mut() {
+                obs.flight_record(now, home as u32, FlightKind::EpochReclaim, a.0, u64::from(k));
+            }
         }
         self.epochs.clear();
 
@@ -2143,6 +2296,13 @@ impl Fabric {
         for (src, m) in saved_parked {
             let home = self.interleave.home_of(m.addr);
             self.eng.schedule(ctrl, Ev::FabInject(home, Box::new(m), src));
+        }
+
+        // post-mortem: snapshot the ring at the declaration instant so
+        // the events *leading up to* the failure survive verbatim even
+        // if the run continues long enough to overwrite them
+        if let Some(fl) = self.obs.as_mut().and_then(|o| o.flight.as_mut()) {
+            fl.dump("declare_dead", now);
         }
     }
 
@@ -2356,5 +2516,99 @@ mod tests {
             on.fills_remote,
             off.fills_remote
         );
+    }
+
+    /// Regression (S2): fabric cells issue in near-lockstep, so
+    /// identical sampling phases on every node would trace the *same*
+    /// global arrival positions N times over. The derived phases must be
+    /// deterministic in the seed and pairwise distinct while distinct
+    /// residues mod `every` remain.
+    #[test]
+    fn span_sampling_phases_are_deterministic_and_pairwise_distinct() {
+        for seed in [0u64, 1, 7, 0xdead_beef] {
+            let p = span_phases(seed, 4, 8);
+            assert_eq!(p, span_phases(seed, 4, 8), "phases must be seed-deterministic");
+            assert_eq!(p.len(), 4);
+            let set: std::collections::HashSet<u32> = p.iter().copied().collect();
+            assert_eq!(set.len(), 4, "phases must be pairwise distinct: {p:?}");
+            assert!(p.iter().all(|&x| x < 8));
+        }
+        // more nodes than residues: the first `every` phases stay
+        // distinct, the wrap past that is allowed (and must terminate)
+        let p = span_phases(3, 6, 4);
+        assert_eq!(p.len(), 6);
+        let first: std::collections::HashSet<u32> = p[..4].iter().copied().collect();
+        assert_eq!(first.len(), 4);
+        // every == 1 degenerates to all-zero (every span sampled anyway)
+        assert!(span_phases(9, 3, 1).iter().all(|&x| x == 0));
+    }
+
+    /// Acceptance: a 2-node observed run yields a remote-fill span class
+    /// whose per-hop + service stage means telescope exactly to the
+    /// measured remote end-to-end mean — and the local class likewise.
+    #[test]
+    fn two_node_remote_spans_telescope_to_their_e2e() {
+        let sc = Scenario::preset("uniform", 1 << 10, 0.99).expect("preset");
+        let cfg = FabricConfig {
+            nodes: 2,
+            ol: OpenLoopConfig { rate_per_s: 4e6, ops: 800, ..Default::default() },
+            ..Default::default()
+        };
+        let ocfg = ObsConfig { spans: true, span_sample_every: 1, ..ObsConfig::default() };
+        let (r, obs) = Fabric::new(cfg, &sc).with_obs(&ocfg).run_observed();
+        assert_eq!(r.completed, 800);
+        let w = obs.waterfall.expect("spans were on");
+        assert_eq!(w.sampled, 800, "1-in-1 sampling traces every op");
+        assert_eq!(w.completed + w.remote_completed, 800, "every span completes");
+        assert!(w.remote_completed > 0, "the interleave forces remote fills");
+        assert!(w.completed > 0, "and keeps local fills too");
+        // telescoping: within each class, stage means sum to e2e mean
+        assert!(
+            (w.stage_mean_sum_ns() - w.e2e.mean_ns).abs() < 1e-6,
+            "local stages must telescope: {} vs {}",
+            w.stage_mean_sum_ns(),
+            w.e2e.mean_ns
+        );
+        let er = w.e2e_remote.as_ref().expect("remote fills completed");
+        assert!(
+            (w.remote_stage_mean_sum_ns() - er.mean_ns).abs() < 1e-6,
+            "remote stages must telescope: {} vs {}",
+            w.remote_stage_mean_sum_ns(),
+            er.mean_ns
+        );
+        assert_eq!(w.remote_rows.len(), crate::obs::REMOTE_STAGE_NAMES.len());
+        // a remote fill pays two extra hops: its mean e2e must exceed local
+        assert!(er.mean_ns > w.e2e.mean_ns, "{} vs {}", er.mean_ns, w.e2e.mean_ns);
+    }
+
+    /// Acceptance: a kill run with the flight recorder attached emits a
+    /// `declare_dead` dump capturing the events leading up to the
+    /// declaration, plus the final `end_of_run` snapshot.
+    #[test]
+    fn kill_run_emits_a_declare_dead_flight_dump() {
+        let sc = Scenario::preset("uniform", 1 << 9, 0.99).expect("preset");
+        let cfg = FabricConfig {
+            nodes: 3,
+            kill: Some(KillSpec { node: 1, at: Duration::from_us(20) }),
+            ol: OpenLoopConfig { rate_per_s: 4e6, ops: 900, ..Default::default() },
+            ..Default::default()
+        };
+        let ocfg = ObsConfig { flight: Some(64), ..ObsConfig::default() };
+        let (r, _digest, obs) = Fabric::new(cfg, &sc).with_obs(&ocfg).run_settled_observed();
+        assert!(r.kill.as_ref().and_then(|k| k.declared_at).is_some());
+        assert_eq!(obs.flight_dumps.len(), 2, "declare_dead + end_of_run");
+        let (trigger, dump) = &obs.flight_dumps[0];
+        assert_eq!(trigger, "declare_dead");
+        let j = crate::obs::Json::parse(dump).expect("dump must parse as JSON");
+        assert_eq!(j.get("trigger").and_then(|t| t.as_str()), Some("declare_dead"));
+        let nodes = j.get("nodes").and_then(|n| n.as_arr()).expect("per-node rings");
+        let events: u64 = nodes
+            .iter()
+            .map(|n| n.get("recorded").and_then(|v| v.as_u64()).unwrap_or(0))
+            .sum();
+        assert!(events > 0, "the ring must hold events at declaration time");
+        // the final ring still knows about the kill chronology
+        assert!(obs.flight_events.iter().any(|e| matches!(e.kind, FlightKind::DeclareDead)));
+        assert_eq!(obs.flight_dumps[1].0, "end_of_run");
     }
 }

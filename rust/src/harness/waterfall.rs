@@ -33,11 +33,21 @@ pub fn run_observed(
 /// Render one configuration's waterfall as a table: one row per stage,
 /// then the stage sum, then the end-to-end distribution it must match.
 pub fn render(slices: usize, w: &Waterfall) -> ResultTable {
+    render_titled(&format!("{slices} slice(s)"), w)
+}
+
+/// [`render`] with a caller-supplied configuration label (the fabric
+/// bench renders per node count rather than per slice count).
+pub fn render_titled(what: &str, w: &Waterfall) -> ResultTable {
     let mut t = ResultTable::new(
         &format!(
-            "Latency waterfall, {slices} slice(s) — {} sampled / {} completed spans \
-             ({} retransmit episodes, {} incomplete)",
-            w.sampled, w.completed, w.retx_episodes, w.incomplete
+            "Latency waterfall, {what} — {} sampled / {} completed spans \
+             ({} remote, {} retransmit episodes, {} incomplete)",
+            w.sampled,
+            w.completed + w.remote_completed,
+            w.remote_completed,
+            w.retx_episodes,
+            w.incomplete
         ),
         &["stage", "count", "mean ns", "p50 ns", "p99 ns"],
     );
@@ -64,6 +74,33 @@ pub fn render(slices: usize, w: &Waterfall) -> ResultTable {
         format!("{:.1}", w.e2e.p50_ns),
         format!("{:.1}", w.e2e.p99_ns),
     ]);
+    // the remote-fill class (multi-node runs): same layout, its own
+    // telescoping sum against its own end-to-end row
+    if let Some(er) = &w.e2e_remote {
+        for r in &w.remote_rows {
+            t.row(vec![
+                format!("remote.{}", r.stage),
+                r.count.to_string(),
+                format!("{:.1}", r.mean_ns),
+                format!("{:.1}", r.p50_ns),
+                format!("{:.1}", r.p99_ns),
+            ]);
+        }
+        t.row(vec![
+            "remote.sum(stages)".into(),
+            w.remote_completed.to_string(),
+            format!("{:.1}", w.remote_stage_mean_sum_ns()),
+            "-".into(),
+            "-".into(),
+        ]);
+        t.row(vec![
+            "remote.end_to_end".into(),
+            er.count.to_string(),
+            format!("{:.1}", er.mean_ns),
+            format!("{:.1}", er.p50_ns),
+            format!("{:.1}", er.p99_ns),
+        ]);
+    }
     t
 }
 

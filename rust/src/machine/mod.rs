@@ -526,6 +526,7 @@ impl Machine {
     /// Snapshot every counter surface and live queue depth into the
     /// unified registry (dotted names; see DESIGN.md §obs).
     fn refresh_registry(&self, reg: &mut Registry) {
+        reg.begin_refresh();
         reg.absorb("machine", &self.counters);
         reg.set("machine.results", self.results);
         reg.set("machine.rows_scanned", self.rows_scanned);

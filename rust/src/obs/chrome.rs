@@ -1,0 +1,349 @@
+//! Chrome trace-event (Perfetto-loadable) export of an observed run.
+//!
+//! Renders retained spans ([`super::span::SpanRecord`]) and flight
+//! recorder events ([`super::flight::FlightEvent`]) as the Trace Event
+//! Format JSON that `chrome://tracing` and <https://ui.perfetto.dev>
+//! open directly: `{"traceEvents": [...], "displayTimeUnit": "ns"}`.
+//!
+//! Track layout: one *process* per simulated node (`pid` = node,
+//! named `node<N>`), and per node:
+//!
+//! * `tid 1` (`events`) — instant events for protocol milestones: kill,
+//!   suspect, declare_dead, rehome, epoch reclaim, migration
+//!   begin/commit/abort, park, replay;
+//! * `tid 2` (`channels`) — instant events for inter-node channel
+//!   activity (launch/land/retx, forwards, admits), `args.a` carrying
+//!   the channel or id operand;
+//! * `tid 10+k` (`spans.k`) — the span waterfall: one duration (`"X"`)
+//!   slice per telescoping stage interval of each retained span. Spans
+//!   overlap in time, so each is greedily packed onto the first lane
+//!   whose previous span already ended — lanes are non-overlapping and
+//!   the lane count is the node's concurrency high-water mark.
+//!
+//! Chrome timestamps are microseconds; simulated picoseconds divide by
+//! `1e6` into fractional µs, preserving ps resolution (the format takes
+//! doubles).
+
+use super::flight::{FlightEvent, FlightKind};
+use super::json::Json;
+use super::span::SpanRecord;
+
+/// Incremental trace-event builder.
+pub struct ChromeTrace {
+    events: Vec<Json>,
+}
+
+const TID_EVENTS: u64 = 1;
+const TID_CHANNELS: u64 = 2;
+const TID_SPAN_BASE: u64 = 10;
+
+fn us(ps: u64) -> Json {
+    Json::f(ps as f64 / 1e6)
+}
+
+impl ChromeTrace {
+    pub fn new() -> ChromeTrace {
+        ChromeTrace { events: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Name the process (node) `pid`.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.metadata("process_name", pid, None, name);
+    }
+
+    /// Name thread `tid` of process `pid`.
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        self.metadata("thread_name", pid, Some(tid), name);
+    }
+
+    fn metadata(&mut self, what: &str, pid: u64, tid: Option<u64>, name: &str) {
+        let mut m = vec![
+            ("name".to_string(), Json::s(what)),
+            ("ph".to_string(), Json::s("M")),
+            ("pid".to_string(), Json::u(pid)),
+        ];
+        if let Some(t) = tid {
+            m.push(("tid".to_string(), Json::u(t)));
+        }
+        m.push(("args".to_string(), Json::Obj(vec![("name".to_string(), Json::s(name))])));
+        self.events.push(Json::Obj(m));
+    }
+
+    /// A complete duration slice (`ph: "X"`), timestamps in ps.
+    pub fn slice(
+        &mut self,
+        name: &str,
+        pid: u64,
+        tid: u64,
+        start_ps: u64,
+        end_ps: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        let mut m = vec![
+            ("name".to_string(), Json::s(name)),
+            ("ph".to_string(), Json::s("X")),
+            ("pid".to_string(), Json::u(pid)),
+            ("tid".to_string(), Json::u(tid)),
+            ("ts".to_string(), us(start_ps)),
+            ("dur".to_string(), us(end_ps.saturating_sub(start_ps))),
+        ];
+        if !args.is_empty() {
+            m.push(("args".to_string(), Json::Obj(args)));
+        }
+        self.events.push(Json::Obj(m));
+    }
+
+    /// A thread-scoped instant event (`ph: "i"`), timestamp in ps.
+    pub fn instant(
+        &mut self,
+        name: &str,
+        pid: u64,
+        tid: u64,
+        at_ps: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        let mut m = vec![
+            ("name".to_string(), Json::s(name)),
+            ("ph".to_string(), Json::s("i")),
+            ("s".to_string(), Json::s("t")),
+            ("pid".to_string(), Json::u(pid)),
+            ("tid".to_string(), Json::u(tid)),
+            ("ts".to_string(), us(at_ps)),
+        ];
+        if !args.is_empty() {
+            m.push(("args".to_string(), Json::Obj(args)));
+        }
+        self.events.push(Json::Obj(m));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("traceEvents".to_string(), Json::Arr(self.events.clone())),
+            ("displayTimeUnit".to_string(), Json::s("ns")),
+        ])
+    }
+
+    /// The complete trace as compact JSON text (the `--trace-out` file).
+    pub fn render(&self) -> String {
+        self.to_json().compact()
+    }
+}
+
+impl Default for ChromeTrace {
+    fn default() -> Self {
+        ChromeTrace::new()
+    }
+}
+
+/// Is this flight event a channel-activity event (→ `channels` track)
+/// rather than a protocol milestone (→ `events` track)?
+fn is_channel_kind(k: FlightKind) -> bool {
+    matches!(
+        k,
+        FlightKind::ChanLaunch
+            | FlightKind::ChanLand
+            | FlightKind::ChanRetx
+            | FlightKind::FwdOut
+            | FlightKind::Admit
+    )
+}
+
+/// Build a trace from an observed run's retained spans and flight
+/// events. `node_shift` recovers the issuing node from a span key
+/// (`fabric::span_key` packs it in the high bits — pass
+/// `fabric::SPAN_NODE_SHIFT`); pass 0 for single-cell hosts, mapping
+/// every span to node 0.
+pub fn build(records: &[SpanRecord], flight: &[FlightEvent], node_shift: u32) -> ChromeTrace {
+    let mut tr = ChromeTrace::new();
+    let node_of = |id: u32| -> u64 {
+        if node_shift == 0 || node_shift >= 32 {
+            0
+        } else {
+            (id >> node_shift) as u64
+        }
+    };
+
+    // -- discover the node set so every process gets named ------------
+    let mut max_node: u64 = 0;
+    for r in records {
+        max_node = max_node.max(node_of(r.id));
+    }
+    for e in flight {
+        max_node = max_node.max(e.node as u64);
+    }
+    if records.is_empty() && flight.is_empty() {
+        return tr; // an empty but valid trace
+    }
+    for n in 0..=max_node {
+        tr.process_name(n, &format!("node{}", n));
+        tr.thread_name(n, TID_EVENTS, "events");
+        tr.thread_name(n, TID_CHANNELS, "channels");
+    }
+
+    // -- span waterfall: greedy lane packing per node -----------------
+    // lanes[node] = per-lane end-of-last-span (ps)
+    let mut lanes: Vec<Vec<u64>> = vec![Vec::new(); max_node as usize + 1];
+    let mut sorted: Vec<&SpanRecord> = records.iter().collect();
+    sorted.sort_by_key(|r| r.t[0]);
+    for r in sorted {
+        let node = node_of(r.id);
+        let iv = r.intervals();
+        let (start, end) = (iv.first().map_or(0, |i| i.1), iv.last().map_or(0, |i| i.2));
+        let ls = &mut lanes[node as usize];
+        let lane = match ls.iter().position(|&e| e <= start) {
+            Some(k) => k,
+            None => {
+                ls.push(0);
+                tr.thread_name(node, TID_SPAN_BASE + (ls.len() - 1) as u64, &format!(
+                    "spans.{}",
+                    ls.len() - 1
+                ));
+                ls.len() - 1
+            }
+        };
+        ls[lane] = end.max(start);
+        let tid = TID_SPAN_BASE + lane as u64;
+        for (k, (name, a, b)) in iv.iter().enumerate() {
+            let mut args = vec![("id".to_string(), Json::u(r.id as u64))];
+            if k == 0 {
+                args.push(("remote".to_string(), Json::u(r.remote as u64)));
+                args.push(("launches".to_string(), Json::u(r.launches as u64)));
+                if r.parks > 0 {
+                    args.push(("parks".to_string(), Json::u(r.parks as u64)));
+                }
+                if r.replays > 0 {
+                    args.push(("replays".to_string(), Json::u(r.replays as u64)));
+                }
+            }
+            tr.slice(name, node, tid, *a, *b, args);
+        }
+    }
+
+    // -- flight events as instants ------------------------------------
+    for e in flight {
+        let tid = if is_channel_kind(e.kind) { TID_CHANNELS } else { TID_EVENTS };
+        let args = vec![
+            ("a".to_string(), Json::u(e.a)),
+            ("b".to_string(), Json::u(e.b)),
+        ];
+        tr.instant(e.kind.name(), e.node as u64, tid, e.t_ps, args);
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Time;
+
+    fn rec(id: u32, base: u64, remote: bool) -> SpanRecord {
+        use crate::obs::span::{SpanTracer, Stage};
+        let mut sp = SpanTracer::new(1);
+        sp.record_spans(true);
+        sp.on_issue(Time(base), id);
+        sp.mark(Time(base + 10), id, Stage::Launch);
+        if remote {
+            sp.mark(Time(base + 20), id, Stage::FwdOut);
+        }
+        sp.mark(Time(base + 30), id, Stage::Deliver);
+        sp.mark(Time(base + 35), id, Stage::SvcStart);
+        sp.mark(Time(base + 40), id, Stage::SvcDone);
+        sp.mark(Time(base + 45), id, Stage::Reply);
+        if remote {
+            sp.mark(Time(base + 50), id, Stage::RspLaunch);
+        }
+        sp.complete(Time(base + 60), id);
+        sp.take_records().pop().expect("span completed")
+    }
+
+    #[test]
+    fn trace_renders_valid_json_with_expected_phases() {
+        let records = [rec(1, 100, false), rec(2, 120, true)];
+        let mut fl = crate::obs::flight::FlightRecorder::new(8);
+        fl.record(Time(50), 0, FlightKind::Kill, 1, 0);
+        fl.record(Time(60), 1, FlightKind::ChanLaunch, 0, 2);
+        let tr = build(&records, &fl.events_chrono(), 0);
+        let text = tr.render();
+        let j = Json::parse(&text).unwrap();
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert!(!evs.is_empty());
+        // every event has a phase and a pid
+        for e in evs {
+            assert!(e.get("ph").and_then(|v| v.as_str()).is_some());
+            assert!(e.get("pid").and_then(|v| v.as_u64()).is_some());
+        }
+        // 6 local + 8 remote duration slices
+        let slices = evs.iter().filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"));
+        assert_eq!(slices.count(), 14);
+        // both flight instants present
+        let instants: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 2);
+        assert!(instants.iter().any(|e| e.get("name").and_then(|v| v.as_str()) == Some("kill")));
+    }
+
+    #[test]
+    fn node_shift_routes_spans_to_their_node_track() {
+        let shift = 26;
+        let mut r = rec(5, 0, false);
+        r.id |= 3 << shift; // node 3's span key
+        let tr = build(&[r], &[], shift);
+        let j = Json::parse(&tr.render()).unwrap();
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let pid_of_slices: Vec<u64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+            .filter_map(|e| e.get("pid").and_then(|v| v.as_u64()))
+            .collect();
+        assert!(!pid_of_slices.is_empty());
+        assert!(pid_of_slices.iter().all(|&p| p == 3));
+        // processes node0..node3 all got named
+        let names = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|v| v.as_str()) == Some("process_name"))
+            .count();
+        assert_eq!(names, 4);
+    }
+
+    #[test]
+    fn overlapping_spans_pack_onto_distinct_lanes() {
+        // two spans overlapping in time must land on different tids
+        let a = rec(1, 0, false);
+        let b = rec(2, 30, false); // starts before a (0..60) ends
+        let tr = build(&[a, b], &[], 0);
+        let j = Json::parse(&tr.render()).unwrap();
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let mut tids: Vec<(u64, u64)> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+            .map(|e| {
+                (
+                    e.get("args").and_then(|a| a.get("id")).and_then(|v| v.as_u64()).unwrap(),
+                    e.get("tid").and_then(|v| v.as_u64()).unwrap(),
+                )
+            })
+            .collect();
+        tids.dedup();
+        let tid_of = |id: u64| {
+            tids.iter().find(|(i, _)| *i == id).map(|(_, t)| *t).unwrap()
+        };
+        assert_ne!(tid_of(1), tid_of(2));
+    }
+
+    #[test]
+    fn empty_observation_renders_an_empty_valid_trace() {
+        let tr = build(&[], &[], 0);
+        let j = Json::parse(&tr.render()).unwrap();
+        assert_eq!(j.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len()), Some(0));
+    }
+}

@@ -1,0 +1,274 @@
+//! Post-mortem flight recorder: bounded per-node rings of recent
+//! protocol/channel events.
+//!
+//! The fabric's deadlock panic used to destroy the evidence needed to
+//! debug it — by the time the event queue is empty short of the
+//! completion target, the interesting history (the last channel
+//! launches, parks, replays, death declarations) is gone. The flight
+//! recorder keeps the last `cap` events per node in a fixed ring:
+//! pre-allocated, overwritten in place once full, so the steady state
+//! allocates nothing and recording is a couple of stores.
+//!
+//! Dumps are structured JSON snapshots taken at three triggers:
+//! the fabric **deadlock panic** (written synchronously to the
+//! `--flight-dump` path *before* the panic unwinds, so the post-mortem
+//! survives the process), **`declare_dead`** (the state of the world at
+//! the moment a node's death was declared), and **on demand** at end of
+//! run when `--flight-dump <path>` is given. Like the rest of `obs`,
+//! the recorder is passive — it owns no RNG and schedules nothing, so
+//! the transparency gate covers it.
+
+use crate::sim::time::Time;
+
+use super::json::Json;
+
+/// What happened. `a`/`b` are kind-specific operands (ids, node or
+/// channel indices, counts) kept as raw integers so an event is `Copy`
+/// and fixed-size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightKind {
+    /// Frame launched on an inter-node channel (a = channel, b = msg id).
+    ChanLaunch,
+    /// Frame landed off an inter-node channel (a = channel, b = msg id).
+    ChanLand,
+    /// Forced retransmission on a channel (a = channel, b = barren streak).
+    ChanRetx,
+    /// Request translated and forwarded toward a remote home
+    /// (a = original id, b = home node).
+    FwdOut,
+    /// Remote request admitted into the home dcs (a = id, b = source node).
+    Admit,
+    /// Request parked by an in-flight migration (a = id, b = line).
+    Park,
+    /// Parked/pending request re-injected toward a (new) home
+    /// (a = id, b = home node).
+    Replay,
+    /// Home migration began (a = line, b = target node).
+    MigBegin,
+    /// Home migration committed (a = line, b = new home).
+    MigCommit,
+    /// Home migration aborted (a = line, b = old home).
+    MigAbort,
+    /// Scripted fail-stop fired (a = killed node).
+    Kill,
+    /// A channel's barren-retx detector suspects its peer
+    /// (a = suspected node, b = barren streak).
+    Suspect,
+    /// Death declared; recovery ran (a = dead node, b = replayed count).
+    DeclareDead,
+    /// Lines re-homed off a dead node (a = dead node, b = line count).
+    Rehome,
+    /// Grant epoch reclaimed from a dead node (a = line, b = dead node).
+    EpochReclaim,
+}
+
+impl FlightKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::ChanLaunch => "chan_launch",
+            FlightKind::ChanLand => "chan_land",
+            FlightKind::ChanRetx => "chan_retx",
+            FlightKind::FwdOut => "fwd_out",
+            FlightKind::Admit => "admit",
+            FlightKind::Park => "park",
+            FlightKind::Replay => "replay",
+            FlightKind::MigBegin => "mig_begin",
+            FlightKind::MigCommit => "mig_commit",
+            FlightKind::MigAbort => "mig_abort",
+            FlightKind::Kill => "kill",
+            FlightKind::Suspect => "suspect",
+            FlightKind::DeclareDead => "declare_dead",
+            FlightKind::Rehome => "rehome",
+            FlightKind::EpochReclaim => "epoch_reclaim",
+        }
+    }
+}
+
+/// One recorded event: fixed-size, `Copy`, no heap.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    pub t_ps: u64,
+    pub node: u32,
+    pub kind: FlightKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+struct Ring {
+    buf: Vec<FlightEvent>,
+    head: usize, // next overwrite position once the ring is full
+    total: u64,  // events ever recorded on this node
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap), head: 0, total: 0 }
+    }
+
+    fn push(&mut self, cap: usize, ev: FlightEvent) {
+        self.total += 1;
+        if self.buf.len() < cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % cap;
+        }
+    }
+
+    /// Events oldest-first.
+    fn chrono(&self) -> impl Iterator<Item = &FlightEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// Default per-node ring capacity (events).
+pub const DEFAULT_FLIGHT_CAP: usize = 256;
+
+/// Per-node bounded rings of recent events plus accumulated dumps.
+pub struct FlightRecorder {
+    cap: usize,
+    rings: Vec<Ring>,
+    dumps: Vec<(String, String)>, // (trigger, compact JSON)
+}
+
+impl FlightRecorder {
+    /// `cap` = events retained per node (0 coerces to 1).
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder { cap: cap.max(1), rings: Vec::new(), dumps: Vec::new() }
+    }
+
+    /// Record one event on `node`'s ring. Rings materialize on a node's
+    /// first event (one allocation per node, ever); after that the ring
+    /// overwrites in place.
+    pub fn record(&mut self, now: Time, node: u32, kind: FlightKind, a: u64, b: u64) {
+        let n = node as usize;
+        while self.rings.len() <= n {
+            self.rings.push(Ring::new(self.cap));
+        }
+        self.rings[n].push(self.cap, FlightEvent { t_ps: now.ps(), node, kind, a, b });
+    }
+
+    /// Events ever recorded (all nodes).
+    pub fn total(&self) -> u64 {
+        self.rings.iter().map(|r| r.total).sum()
+    }
+
+    /// All retained events, merged across nodes, oldest-first.
+    pub fn events_chrono(&self) -> Vec<FlightEvent> {
+        let mut out: Vec<FlightEvent> = Vec::with_capacity(self.rings.iter().map(|r| r.buf.len()).sum());
+        for r in &self.rings {
+            out.extend(r.chrono().copied());
+        }
+        out.sort_by_key(|e| (e.t_ps, e.node));
+        out
+    }
+
+    /// Structured snapshot of every ring: per node the retained events
+    /// oldest-first, how many were ever recorded, and how many the ring
+    /// dropped.
+    pub fn snapshot(&self, trigger: &str, now: Time) -> Json {
+        let nodes = self
+            .rings
+            .iter()
+            .enumerate()
+            .map(|(n, r)| {
+                let events = r
+                    .chrono()
+                    .map(|e| {
+                        Json::Obj(vec![
+                            ("t_ps".into(), Json::u(e.t_ps)),
+                            ("kind".into(), Json::s(e.kind.name())),
+                            ("a".into(), Json::u(e.a)),
+                            ("b".into(), Json::u(e.b)),
+                        ])
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    ("node".into(), Json::u(n as u64)),
+                    ("recorded".into(), Json::u(r.total)),
+                    ("dropped".into(), Json::u(r.total - r.buf.len() as u64)),
+                    ("events".into(), Json::Arr(events)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("trigger".into(), Json::s(trigger)),
+            ("t_ps".into(), Json::u(now.ps())),
+            ("cap_per_node".into(), Json::u(self.cap as u64)),
+            ("nodes".into(), Json::Arr(nodes)),
+        ])
+    }
+
+    /// Snapshot as compact JSON text — the panic path uses this to
+    /// write the dump synchronously before unwinding.
+    pub fn dump_string(&self, trigger: &str, now: Time) -> String {
+        self.snapshot(trigger, now).compact()
+    }
+
+    /// Take a snapshot and keep it with the recorder (surfaced through
+    /// the obs report at end of run).
+    pub fn dump(&mut self, trigger: &str, now: Time) {
+        let s = self.dump_string(trigger, now);
+        self.dumps.push((trigger.to_string(), s));
+    }
+
+    /// Accumulated dumps, in trigger order.
+    pub fn dumps(&self) -> &[(String, String)] {
+        &self.dumps
+    }
+
+    pub fn take_dumps(&mut self) -> Vec<(String, String)> {
+        std::mem::take(&mut self.dumps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_once_full() {
+        let mut fl = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            fl.record(Time(i * 100), 0, FlightKind::ChanLaunch, i, 0);
+        }
+        assert_eq!(fl.total(), 10);
+        let evs = fl.events_chrono();
+        assert_eq!(evs.len(), 4);
+        // the last four, oldest-first
+        assert_eq!(evs.iter().map(|e| e.a).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert!(evs.windows(2).all(|w| w[0].t_ps <= w[1].t_ps));
+    }
+
+    #[test]
+    fn per_node_rings_are_independent() {
+        let mut fl = FlightRecorder::new(2);
+        fl.record(Time(1), 0, FlightKind::Park, 10, 0);
+        fl.record(Time(2), 2, FlightKind::Kill, 2, 0);
+        fl.record(Time(3), 0, FlightKind::Replay, 10, 1);
+        fl.record(Time(4), 0, FlightKind::Admit, 11, 0); // evicts Park on node 0
+        let evs = fl.events_chrono();
+        assert_eq!(evs.len(), 3);
+        assert!(evs.iter().all(|e| e.kind != FlightKind::Park));
+        assert!(evs.iter().any(|e| e.kind == FlightKind::Kill && e.node == 2));
+    }
+
+    #[test]
+    fn snapshot_json_is_well_formed_and_counts_drops() {
+        let mut fl = FlightRecorder::new(2);
+        for i in 0..5u64 {
+            fl.record(Time(i), 1, FlightKind::ChanLand, i, i + 1);
+        }
+        fl.dump("declare_dead", Time(99));
+        assert_eq!(fl.dumps().len(), 1);
+        let (trigger, text) = &fl.dumps()[0];
+        assert_eq!(trigger, "declare_dead");
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.get("trigger").and_then(|v| v.as_str()), Some("declare_dead"));
+        let nodes = j.get("nodes").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(nodes.len(), 2); // node 0 ring exists (empty), node 1 full
+        assert_eq!(nodes[1].get("recorded").and_then(|v| v.as_u64()), Some(5));
+        assert_eq!(nodes[1].get("dropped").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(nodes[1].get("events").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+    }
+}

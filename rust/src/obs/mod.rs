@@ -7,10 +7,17 @@
 //!
 //! - [`span`]: sampled per-transaction lifecycle tracking feeding
 //!   per-stage histograms — the latency waterfall
-//!   (`eci bench workload --spans`).
+//!   (`eci bench workload|fabric --spans`), local and cross-node
+//!   (remote-fill) span classes each telescoping exactly to their
+//!   end-to-end mean.
 //! - [`ticker`] + [`registry`]: a simulated-time ticker snapshotting
 //!   counter deltas and gauges into JSON-lines (`--obs-out run.jsonl`)
 //!   via a unified metric registry with stable dotted names.
+//! - [`flight`]: a bounded per-node ring of recent protocol/channel
+//!   events, dumped as structured JSON on the fabric deadlock panic, on
+//!   `declare_dead`, and on demand (`--flight-dump post.json`).
+//! - [`chrome`]: Chrome trace-event (Perfetto-loadable) export of an
+//!   observed run (`--trace-out run.trace.json`).
 //! - [`json`]: the dependency-free serializer/parser behind every
 //!   machine-readable artifact (JSONL, `--json` tables, selfperf
 //!   baselines).
@@ -20,14 +27,18 @@
 //! simulation state — runs with observability on and off produce
 //! identical settled digests and identical observables.
 
+pub mod chrome;
+pub mod flight;
 pub mod json;
 pub mod registry;
 pub mod span;
 pub mod ticker;
 
+pub use chrome::ChromeTrace;
+pub use flight::{FlightEvent, FlightKind, FlightRecorder};
 pub use json::Json;
 pub use registry::Registry;
-pub use span::{SpanTracer, Stage, Waterfall, WaterfallRow, STAGE_NAMES};
+pub use span::{SpanRecord, SpanTracer, Stage, Waterfall, WaterfallRow, REMOTE_STAGE_NAMES, STAGE_NAMES};
 pub use ticker::Ticker;
 
 use crate::sim::time::{Duration, Time};
@@ -41,8 +52,20 @@ pub struct ObsConfig {
     pub spans: bool,
     /// Trace every N-th issued transaction (0/1 = all).
     pub span_sample_every: u32,
+    /// Per-issue-stream sampling phases (one per node; empty = single
+    /// stream, phase 0). Multi-node hosts pass pairwise-distinct phases
+    /// so the cells don't sample lockstep-correlated arrivals.
+    pub span_phases: Vec<u32>,
+    /// Retain completed spans verbatim for trace export (`--trace-out`).
+    pub record_spans: bool,
     /// Telemetry snapshot interval in simulated time (`None` = off).
     pub tick: Option<Duration>,
+    /// Flight recorder: per-node ring capacity (`None` = off).
+    pub flight: Option<usize>,
+    /// Where flight dumps go. The deadlock panic path writes here
+    /// *synchronously before unwinding*; a completed run writes all
+    /// accumulated dumps here at the end.
+    pub flight_path: Option<String>,
 }
 
 impl ObsConfig {
@@ -57,7 +80,7 @@ impl ObsConfig {
     }
 
     pub fn enabled(&self) -> bool {
-        self.spans || self.tick.is_some()
+        self.spans || self.tick.is_some() || self.flight.is_some()
     }
 }
 
@@ -66,14 +89,36 @@ pub struct Obs {
     pub registry: Registry,
     pub spans: Option<SpanTracer>,
     pub ticker: Option<Ticker>,
+    pub flight: Option<FlightRecorder>,
+    /// Destination for flight dumps (see [`ObsConfig::flight_path`]).
+    pub flight_path: Option<String>,
 }
 
 impl Obs {
     pub fn new(cfg: &ObsConfig) -> Obs {
+        let spans = cfg.spans.then(|| {
+            let mut sp = if cfg.span_phases.is_empty() {
+                SpanTracer::new(cfg.span_sample_every.max(1))
+            } else {
+                SpanTracer::with_phases(cfg.span_sample_every.max(1), &cfg.span_phases)
+            };
+            sp.record_spans(cfg.record_spans);
+            sp
+        });
         Obs {
             registry: Registry::new(),
-            spans: cfg.spans.then(|| SpanTracer::new(cfg.span_sample_every.max(1))),
+            spans,
             ticker: cfg.tick.map(Ticker::new),
+            flight: cfg.flight.map(FlightRecorder::new),
+            flight_path: cfg.flight_path.clone(),
+        }
+    }
+
+    /// Record a flight event (no-op when the recorder is off).
+    #[inline]
+    pub fn flight_record(&mut self, now: Time, node: u32, kind: FlightKind, a: u64, b: u64) {
+        if let Some(fl) = &mut self.flight {
+            fl.record(now, node, kind, a, b);
         }
     }
 
@@ -92,16 +137,35 @@ impl Obs {
         }
     }
 
-    /// Seal in-flight spans and produce the final report.
-    pub fn finish(mut self) -> ObsReport {
+    /// Seal in-flight spans and produce the final report. `now` is the
+    /// run's final simulated time (stamped on the end-of-run flight
+    /// dump).
+    pub fn finish_at(mut self, now: Time) -> ObsReport {
         if let Some(sp) = &mut self.spans {
             sp.seal();
         }
+        let (flight_dumps, flight_events) = match &mut self.flight {
+            Some(fl) => {
+                fl.dump("end_of_run", now);
+                (fl.take_dumps(), fl.events_chrono())
+            }
+            None => (Vec::new(), Vec::new()),
+        };
         ObsReport {
             waterfall: self.spans.as_ref().map(|s| s.waterfall()),
+            span_records: self.spans.as_mut().map(|s| s.take_records()).unwrap_or_default(),
             jsonl: self.ticker.map(Ticker::into_lines).unwrap_or_default(),
             registry: self.registry,
+            flight_dumps,
+            flight_events,
+            flight_path: self.flight_path,
         }
+    }
+
+    /// [`Obs::finish_at`] without a final timestamp (single-cell hosts
+    /// that don't run a flight recorder).
+    pub fn finish(self) -> ObsReport {
+        self.finish_at(Time(0))
     }
 }
 
@@ -109,10 +173,20 @@ impl Obs {
 pub struct ObsReport {
     /// Latency waterfall (present when span tracing was on).
     pub waterfall: Option<Waterfall>,
+    /// Completed spans retained verbatim (when `record_spans` was on).
+    pub span_records: Vec<SpanRecord>,
     /// Telemetry JSONL records (present when the ticker was on).
     pub jsonl: Vec<String>,
     /// Final registry snapshot.
     pub registry: Registry,
+    /// Flight-recorder dumps accumulated over the run
+    /// (`declare_dead` triggers plus the final `end_of_run` snapshot).
+    pub flight_dumps: Vec<(String, String)>,
+    /// Final flight-recorder contents, merged chronologically (feeds
+    /// the trace export's instant events).
+    pub flight_events: Vec<FlightEvent>,
+    /// Configured flight dump destination, if any.
+    pub flight_path: Option<String>,
 }
 
 impl ObsReport {
@@ -126,6 +200,27 @@ impl ObsReport {
         std::fs::write(path, out)
     }
 
+    /// Write the accumulated flight dumps as one JSON array.
+    pub fn write_flight(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::from("[");
+        for (i, (_, dump)) in self.flight_dumps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(dump);
+        }
+        out.push_str("]\n");
+        std::fs::write(path, out)
+    }
+
+    /// Render the run as Chrome trace-event JSON and write it.
+    /// `node_shift` recovers the node from span keys (see
+    /// [`chrome::build`]); single-cell hosts pass 0.
+    pub fn write_trace(&self, path: &str, node_shift: u32) -> std::io::Result<()> {
+        let tr = chrome::build(&self.span_records, &self.flight_events, node_shift);
+        std::fs::write(path, tr.render())
+    }
+
     /// Machine-readable summary: registry dump plus waterfall.
     pub fn to_json(&self) -> Json {
         let mut members = vec![("registry".to_string(), self.registry.to_json())];
@@ -133,6 +228,7 @@ impl ObsReport {
             members.push(("waterfall".to_string(), w.to_json()));
         }
         members.push(("telemetry_records".to_string(), Json::u(self.jsonl.len() as u64)));
+        members.push(("flight_dumps".to_string(), Json::u(self.flight_dumps.len() as u64)));
         Json::Obj(members)
     }
 }
@@ -157,7 +253,8 @@ mod tests {
 
     #[test]
     fn finish_seals_spans_and_reports() {
-        let mut obs = Obs::new(&ObsConfig { spans: true, span_sample_every: 1, tick: None });
+        let mut obs =
+            Obs::new(&ObsConfig { spans: true, span_sample_every: 1, ..ObsConfig::default() });
         let sp = obs.spans.as_mut().unwrap();
         sp.on_issue(Time(0), 1);
         sp.mark(Time(1_000), 1, Stage::Launch);
@@ -168,6 +265,22 @@ mod tests {
         assert_eq!(w.completed, 0);
         assert_eq!(w.incomplete, 1);
         assert!(report.jsonl.is_empty());
+    }
+
+    #[test]
+    fn flight_and_trace_surface_through_the_report() {
+        let mut obs = Obs::new(&ObsConfig { flight: Some(4), ..ObsConfig::default() });
+        assert!(ObsConfig { flight: Some(4), ..ObsConfig::default() }.enabled());
+        obs.flight_record(Time(10), 0, FlightKind::Kill, 1, 0);
+        if let Some(fl) = &mut obs.flight {
+            fl.dump("declare_dead", Time(15));
+        }
+        let report = obs.finish_at(Time(20));
+        assert_eq!(report.flight_dumps.len(), 2); // declare_dead + end_of_run
+        assert_eq!(report.flight_dumps[0].0, "declare_dead");
+        assert_eq!(report.flight_dumps[1].0, "end_of_run");
+        assert_eq!(report.flight_events.len(), 1);
+        assert_eq!(report.to_json().get("flight_dumps").and_then(|v| v.as_u64()), Some(2));
     }
 
     #[test]

@@ -29,6 +29,15 @@ pub struct Registry {
     gauges: BTreeMap<String, f64>,
     /// Counter values at the last `deltas()` call (ticker baselines).
     last: BTreeMap<String, u64>,
+    /// Names written since the last `begin_refresh` (debug builds
+    /// only): two sources landing on the same dotted name within one
+    /// refresh is a silent last-writer-wins collision — made loud here,
+    /// since `node<N>.` prefixing makes such collisions easy to
+    /// reintroduce.
+    #[cfg(debug_assertions)]
+    fresh: std::collections::BTreeSet<String>,
+    #[cfg(debug_assertions)]
+    guarding: bool,
 }
 
 impl Registry {
@@ -36,8 +45,33 @@ impl Registry {
         Registry::default()
     }
 
+    /// Start a refresh epoch: hosts call this at the top of their
+    /// `refresh_registry`, and every metric name may then be written at
+    /// most once until the next `begin_refresh` (debug builds panic on
+    /// a duplicate). Without any `begin_refresh` call the guard stays
+    /// off — snapshot-style overwrites across ticks are the norm.
+    pub fn begin_refresh(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            self.fresh.clear();
+            self.guarding = true;
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn guard(&mut self, name: &str) {
+        if self.guarding && !self.fresh.insert(name.to_string()) {
+            panic!("duplicate metric registration within one refresh: {name}");
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn guard(&mut self, _name: &str) {}
+
     /// Set a counter to its current absolute value.
     pub fn set(&mut self, name: &str, v: u64) {
+        self.guard(name);
         match self.counters.get_mut(name) {
             Some(slot) => *slot = v,
             None => {
@@ -48,6 +82,7 @@ impl Registry {
 
     /// Set an instantaneous gauge.
     pub fn gauge(&mut self, name: &str, v: f64) {
+        self.guard(name);
         match self.gauges.get_mut(name) {
             Some(slot) => *slot = v,
             None => {
@@ -201,6 +236,28 @@ mod tests {
         assert_eq!(r.get("rel.retransmitted"), 2);
         assert!((r.get_gauge("rel.peak_buffered") - 6.0).abs() < 1e-12);
         assert!((r.get_gauge("rel.rto_ns") - 2000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refresh_epochs_allow_overwrites_across_ticks() {
+        let mut r = Registry::new();
+        r.begin_refresh();
+        r.set("node0.ops", 1);
+        r.gauge("node0.depth", 2.0);
+        r.begin_refresh();
+        r.set("node0.ops", 5); // same name, next epoch: fine
+        r.gauge("node0.depth", 1.0);
+        assert_eq!(r.get("node0.ops"), 5);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "duplicate metric registration")]
+    fn duplicate_name_within_one_refresh_panics() {
+        let mut r = Registry::new();
+        r.begin_refresh();
+        r.set("node1.dcs.ops", 1);
+        r.set("node1.dcs.ops", 2); // two sources on one dotted name
     }
 
     #[test]

@@ -1,24 +1,42 @@
-//! Sampled per-transaction span tracing.
+//! Sampled per-transaction span tracing, fabric-aware.
 //!
 //! A *span* follows one response-needing coherence request from the
 //! moment the client issues it until its response lands back, keyed by
 //! the transaction id ([`crate::proto::messages::ReqId`]) which the
-//! stack carries intact from request to response. Each span records a
+//! stack carries intact from request to response (the fabric widens the
+//! key with the issuing node: `fabric::span_key`). Each span records a
 //! timestamp at every lifecycle stage; on completion the deltas between
 //! consecutive stages feed per-stage [`Histogram`]s, so an end-to-end
-//! p99 decomposes into queueing vs wire/replay vs service vs memory
-//! time — the latency waterfall.
+//! p99 decomposes into queueing vs wire/replay vs hop vs service vs
+//! memory time — the latency waterfall.
 //!
-//! Stages telescope: `issue → launch → deliver → svc_start → svc_done →
-//! reply → complete`, so the per-span stage intervals sum *exactly* to
-//! the span's end-to-end latency, and stage means sum to the e2e mean
-//! (quantiles agree within histogram binning error only, since
-//! quantiles don't add).
+//! Spans come in two classes that are told apart *at completion*:
+//!
+//! * **local** — the request was served by the issuing cell's own
+//!   directory. Six telescoping intervals:
+//!   `issue → launch → deliver → svc_start → svc_done → reply →
+//!   complete` ([`STAGE_NAMES`]).
+//! * **remote** — the request crossed the fabric to another node's
+//!   home. Two extra checkpoints split the journey per hop:
+//!   [`Stage::FwdOut`] (the source router translated the id and put the
+//!   request on the inter-node channel) and [`Stage::RspLaunch`] (the
+//!   response frame left the home on the return channel), giving eight
+//!   telescoping intervals ([`REMOTE_STAGE_NAMES`]).
+//!
+//! Within each class the per-span stage intervals sum *exactly* to the
+//! span's end-to-end latency, so each class's stage means sum to that
+//! class's e2e mean (quantiles agree within histogram binning error
+//! only, since quantiles don't add). A span that marked `FwdOut` is
+//! remote; one that never did is local — a single tracer serves a whole
+//! fabric without pre-declaring which requests will travel.
 //!
 //! Sampling is deterministic — every `sample_every`-th issued
-//! transaction, no RNG — and the tracer is passive: it never schedules
-//! events or perturbs simulation state, which the obs transparency gate
-//! checks.
+//! transaction per issue *stream*, no RNG. A stream is one issuing
+//! cell: multi-node hosts give each node its own stream with its own
+//! counter phase ([`SpanTracer::with_phases`]) so the cells don't all
+//! sample the lockstep-correlated k·N-th transactions. The tracer is
+//! passive: it never schedules events or perturbs simulation state,
+//! which the obs transparency gate checks.
 
 use crate::rustc_hash::FxHashMap as HashMap;
 use crate::sim::stats::Histogram;
@@ -34,25 +52,31 @@ pub enum Stage {
     /// Request frame left the ingress mux onto the wire (first launch;
     /// later launches of the same id are retransmit episodes).
     Launch = 1,
+    /// Remote only: the source node's router translated the request id
+    /// and offered the frame to the inter-node request channel.
+    FwdOut = 2,
     /// Request frame delivered at the home side and enqueued on its
     /// directory slice FIFO.
-    Deliver = 2,
+    Deliver = 3,
     /// Home agent began servicing the request (slice grant).
-    SvcStart = 3,
+    SvcStart = 4,
     /// Directory/home produced the response message.
-    SvcDone = 4,
+    SvcDone = 5,
     /// Response ready to send after the memory/KVS backend.
-    Reply = 5,
+    Reply = 6,
+    /// Remote only: the response frame left the home node on the
+    /// inter-node response channel back toward the source.
+    RspLaunch = 7,
     /// Response landed back at the client.
-    Complete = 6,
+    Complete = 8,
 }
 
-const NUM_STAGES: usize = 7;
+const NUM_STAGES: usize = 9;
 const UNSET: u64 = u64::MAX;
 
-/// Names of the six telescoping intervals between consecutive stages,
-/// in order. These are the waterfall rows and the JSONL/JSON keys.
-pub const STAGE_NAMES: [&str; NUM_STAGES - 1] = [
+/// Names of the six telescoping intervals of a *local* span, in order.
+/// These are the waterfall rows and the JSONL/JSON keys.
+pub const STAGE_NAMES: [&str; 6] = [
     "ingress_wait",   // issue   -> launch : VC/credit + mux queueing
     "wire_transit",   // launch  -> deliver: flight time incl. replay episodes
     "slice_queue",    // deliver -> svc_start: directory slice FIFO wait
@@ -61,66 +85,196 @@ pub const STAGE_NAMES: [&str; NUM_STAGES - 1] = [
     "reply_delivery", // reply   -> complete: response wire + client ingress
 ];
 
+/// Names of the eight telescoping intervals of a *remote* (cross-node)
+/// span, in order.
+pub const REMOTE_STAGE_NAMES: [&str; 8] = [
+    "ingress_wait",   // issue    -> launch  : VC/credit + mux queueing
+    "wire_transit",   // launch   -> fwd_out : local CPU->FPGA wire to the router
+    "hop_request",    // fwd_out  -> deliver : inter-node request channel hop
+    "slice_queue",    // deliver  -> svc_start: home slice FIFO wait
+    "home_service",   // svc_start-> svc_done: home-agent occupancy
+    "memory_backend", // svc_done -> reply   : DRAM / KVS backend
+    "hop_rsp_wait",   // reply    -> rsp_launch: response channel queue + credit
+    "reply_delivery", // rsp_launch -> complete: response hop + source delivery
+];
+
+/// Consecutive-stage index pairs of a local span's six intervals.
+const LOCAL_PAIRS: [(usize, usize); 6] = [(0, 1), (1, 3), (3, 4), (4, 5), (5, 6), (6, 8)];
+/// Consecutive-stage index pairs of a remote span's eight intervals.
+const REMOTE_PAIRS: [(usize, usize); 8] =
+    [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 8)];
+
 struct Span {
     t: [u64; NUM_STAGES], // ps; UNSET until the stage is marked
     launches: u32,
+    parks: u32,
+    replays: u32,
 }
 
-/// Tracks sampled in-flight spans and accumulates per-stage histograms.
+/// A completed span retained verbatim for trace export
+/// ([`crate::obs::chrome`]): stage timestamps plus detour annotations.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    /// The (possibly node-widened) transaction key.
+    pub id: u32,
+    /// Per-stage timestamps in picoseconds; `u64::MAX` = never marked.
+    pub t: [u64; NUM_STAGES],
+    /// Total wire launches (1 + retransmission episodes).
+    pub launches: u32,
+    /// Migration park episodes the request sat through.
+    pub parks: u32,
+    /// Re-injection replays (migration handoff or failover).
+    pub replays: u32,
+    /// Crossed the fabric to a remote home.
+    pub remote: bool,
+}
+
+impl SpanRecord {
+    /// Picosecond timestamp of `stage`, if it was marked.
+    pub fn at(&self, stage: Stage) -> Option<u64> {
+        let v = self.t[stage as usize];
+        (v != UNSET).then_some(v)
+    }
+
+    /// The record's telescoping intervals as
+    /// `(stage name, start_ps, end_ps)`, local or remote as classified
+    /// at completion. Records only ever hold well-formed spans, so
+    /// every interval is present and monotone.
+    pub fn intervals(&self) -> Vec<(&'static str, u64, u64)> {
+        let (pairs, names): (&[(usize, usize)], &[&'static str]) = if self.remote {
+            (&REMOTE_PAIRS, &REMOTE_STAGE_NAMES)
+        } else {
+            (&LOCAL_PAIRS, &STAGE_NAMES)
+        };
+        pairs
+            .iter()
+            .zip(names.iter())
+            .map(|(&(a, b), &name)| (name, self.t[a], self.t[b]))
+            .collect()
+    }
+}
+
+struct IssueStream {
+    seen: u64,
+    phase: u64,
+}
+
+/// Tracks sampled in-flight spans and accumulates per-stage histograms,
+/// split into local and remote classes.
 pub struct SpanTracer {
     every: u64,
-    seen: u64,
+    streams: Vec<IssueStream>,
     live: HashMap<u32, Span>,
-    /// One histogram per entry of [`STAGE_NAMES`] (picoseconds).
+    /// One histogram per entry of [`STAGE_NAMES`] (ps), local spans.
     pub stages: Vec<Histogram>,
-    /// End-to-end latency of completed sampled spans (picoseconds).
+    /// One histogram per entry of [`REMOTE_STAGE_NAMES`] (ps), remote spans.
+    pub remote_stages: Vec<Histogram>,
+    /// End-to-end latency of completed local sampled spans (ps).
     pub e2e: Histogram,
+    /// End-to-end latency of completed remote sampled spans (ps).
+    pub e2e_remote: Histogram,
     /// Spans selected for tracing.
     pub sampled: u64,
-    /// Sampled spans that completed with a full, monotone stage record.
+    /// Sampled spans that completed with a full, monotone stage record
+    /// (local + remote).
     pub completed: u64,
+    /// Of `completed`, those that crossed the fabric.
+    pub remote_completed: u64,
     /// Extra launches of an already-launched traced request — each one
     /// is a retransmission episode the span sat through.
     pub retx_episodes: u64,
+    /// Migration park episodes observed on traced requests.
+    pub park_episodes: u64,
+    /// Replay (re-injection) episodes observed on traced requests —
+    /// migration handoffs and failover replays.
+    pub replay_episodes: u64,
     /// Sampled spans that finished with a missing or non-monotone stage
     /// (or never finished — see [`SpanTracer::seal`]). Excluded from the
     /// histograms so stage sums stay consistent with e2e.
     pub incomplete: u64,
+    record: bool,
+    records_cap: usize,
+    records: Vec<SpanRecord>,
 }
+
+/// Default cap on retained [`SpanRecord`]s when recording is on.
+pub const DEFAULT_RECORDS_CAP: usize = 65_536;
 
 impl SpanTracer {
     /// `sample_every` = N traces every N-th issued transaction (1 = all).
+    /// Single issue stream, phase 0.
     pub fn new(sample_every: u32) -> SpanTracer {
+        SpanTracer::with_phases(sample_every, &[0])
+    }
+
+    /// Multi-stream tracer: stream `s` picks the transactions where
+    /// `(seen_s + phases[s]) % sample_every == 0`. Hosts with several
+    /// issuing cells (the fabric) pass one pairwise-distinct phase per
+    /// node so the cells don't sample lockstep-correlated arrivals.
+    pub fn with_phases(sample_every: u32, phases: &[u32]) -> SpanTracer {
+        let every = sample_every.max(1) as u64;
+        let streams = if phases.is_empty() { &[0][..] } else { phases };
         SpanTracer {
-            every: sample_every.max(1) as u64,
-            seen: 0,
+            every,
+            streams: streams
+                .iter()
+                .map(|&p| IssueStream { seen: 0, phase: p as u64 % every })
+                .collect(),
             live: HashMap::default(),
-            stages: (0..NUM_STAGES - 1).map(|_| Histogram::new()).collect(),
+            stages: (0..STAGE_NAMES.len()).map(|_| Histogram::new()).collect(),
+            remote_stages: (0..REMOTE_STAGE_NAMES.len()).map(|_| Histogram::new()).collect(),
             e2e: Histogram::new(),
+            e2e_remote: Histogram::new(),
             sampled: 0,
             completed: 0,
+            remote_completed: 0,
             retx_episodes: 0,
+            park_episodes: 0,
+            replay_episodes: 0,
             incomplete: 0,
+            record: false,
+            records_cap: DEFAULT_RECORDS_CAP,
+            records: Vec::new(),
         }
     }
 
-    /// Offer an issued transaction for sampling. Call exactly once per
-    /// response-needing request, at issue time.
+    /// Retain completed spans verbatim (capped) for trace export.
+    pub fn record_spans(&mut self, on: bool) {
+        self.record = on;
+    }
+
+    /// The per-stream sampling phases (for tests and diagnostics).
+    pub fn phases(&self) -> Vec<u32> {
+        self.streams.iter().map(|s| s.phase as u32).collect()
+    }
+
+    /// Offer an issued transaction for sampling on stream 0. Call
+    /// exactly once per response-needing request, at issue time.
     pub fn on_issue(&mut self, now: Time, id: u32) {
-        let pick = self.seen % self.every == 0;
-        self.seen += 1;
+        self.on_issue_stream(now, id, 0);
+    }
+
+    /// Offer an issued transaction for sampling on issue stream
+    /// `stream` (one stream per issuing cell; out-of-range streams fold
+    /// onto stream 0 defensively).
+    pub fn on_issue_stream(&mut self, now: Time, id: u32, stream: usize) {
+        let s = &mut self.streams[if stream < self.streams.len() { stream } else { 0 }];
+        let pick = (s.seen + s.phase) % self.every == 0;
+        s.seen += 1;
         if !pick {
             return;
         }
         self.sampled += 1;
         let mut t = [UNSET; NUM_STAGES];
         t[Stage::Issue as usize] = now.ps();
-        self.live.insert(id, Span { t, launches: 0 });
+        self.live.insert(id, Span { t, launches: 0, parks: 0, replays: 0 });
     }
 
     /// Record a lifecycle checkpoint for `id` (no-op unless sampled).
     /// The first `Launch` stamps the span; every further `Launch` of the
-    /// same id counts as a retransmission episode.
+    /// same id counts as a retransmission episode. All other stages are
+    /// first-write-wins, so a replayed request keeps its original
+    /// timeline and the replay cost lands in the enclosing interval.
     pub fn mark(&mut self, now: Time, id: u32, stage: Stage) {
         let Some(sp) = self.live.get_mut(&id) else {
             return;
@@ -138,8 +292,29 @@ impl SpanTracer {
         }
     }
 
-    /// Complete the span for `id`: stamp `Complete`, fold its intervals
-    /// into the histograms, and retire it.
+    /// Annotate a traced request parked by a home migration (no-op
+    /// unless sampled). The park shows up as an episode count — the
+    /// wait itself stays inside the interval it interrupted.
+    pub fn note_park(&mut self, id: u32) {
+        if let Some(sp) = self.live.get_mut(&id) {
+            sp.parks += 1;
+            self.park_episodes += 1;
+        }
+    }
+
+    /// Annotate a traced request replayed (re-injected) toward a new
+    /// home — migration handoff or failover replay (no-op unless
+    /// sampled).
+    pub fn note_replay(&mut self, id: u32) {
+        if let Some(sp) = self.live.get_mut(&id) {
+            sp.replays += 1;
+            self.replay_episodes += 1;
+        }
+    }
+
+    /// Complete the span for `id`: stamp `Complete`, classify it local
+    /// or remote (did it mark `FwdOut`?), fold its intervals into that
+    /// class's histograms, and retire it.
     pub fn complete(&mut self, now: Time, id: u32) {
         let Some(mut sp) = self.live.remove(&id) else {
             return;
@@ -147,17 +322,41 @@ impl SpanTracer {
         if sp.t[Stage::Complete as usize] == UNSET {
             sp.t[Stage::Complete as usize] = now.ps();
         }
-        let full_and_monotone =
-            sp.t.iter().all(|&t| t != UNSET) && sp.t.windows(2).all(|w| w[0] <= w[1]);
-        if !full_and_monotone {
+        let remote = sp.t[Stage::FwdOut as usize] != UNSET;
+        let pairs: &[(usize, usize)] = if remote { &REMOTE_PAIRS } else { &LOCAL_PAIRS };
+        let well_formed = pairs
+            .iter()
+            .all(|&(a, b)| sp.t[a] != UNSET && sp.t[b] != UNSET && sp.t[a] <= sp.t[b])
+            // a local span must not carry a stray response-hop mark
+            && (remote || sp.t[Stage::RspLaunch as usize] == UNSET);
+        if !well_formed {
             self.incomplete += 1;
             return;
         }
-        for (i, h) in self.stages.iter_mut().enumerate() {
-            h.record(sp.t[i + 1] - sp.t[i]);
+        if remote {
+            for (h, &(a, b)) in self.remote_stages.iter_mut().zip(REMOTE_PAIRS.iter()) {
+                h.record(sp.t[b] - sp.t[a]);
+            }
+            self.e2e_remote
+                .record(sp.t[Stage::Complete as usize] - sp.t[Stage::Issue as usize]);
+            self.remote_completed += 1;
+        } else {
+            for (h, &(a, b)) in self.stages.iter_mut().zip(LOCAL_PAIRS.iter()) {
+                h.record(sp.t[b] - sp.t[a]);
+            }
+            self.e2e.record(sp.t[Stage::Complete as usize] - sp.t[Stage::Issue as usize]);
         }
-        self.e2e.record(sp.t[Stage::Complete as usize] - sp.t[Stage::Issue as usize]);
         self.completed += 1;
+        if self.record && self.records.len() < self.records_cap {
+            self.records.push(SpanRecord {
+                id,
+                t: sp.t,
+                launches: sp.launches,
+                parks: sp.parks,
+                replays: sp.replays,
+                remote,
+            });
+        }
     }
 
     /// End of run: every span still live (issued but never completed —
@@ -170,6 +369,16 @@ impl SpanTracer {
     /// Spans currently in flight (a telemetry gauge).
     pub fn live_spans(&self) -> usize {
         self.live.len()
+    }
+
+    /// Retained completed spans (empty unless `record_spans(true)`).
+    pub fn records(&self) -> &[SpanRecord] {
+        &self.records
+    }
+
+    /// Take the retained spans out of the tracer.
+    pub fn take_records(&mut self) -> Vec<SpanRecord> {
+        std::mem::take(&mut self.records)
     }
 
     /// Summarize into waterfall rows (ns).
@@ -188,9 +397,23 @@ impl SpanTracer {
                 .map(|(name, h)| row(name, h))
                 .collect(),
             e2e: row("end_to_end", &self.e2e),
+            remote_rows: if self.remote_completed > 0 {
+                REMOTE_STAGE_NAMES
+                    .iter()
+                    .zip(self.remote_stages.iter())
+                    .map(|(name, h)| row(name, h))
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            e2e_remote: (self.remote_completed > 0)
+                .then(|| row("end_to_end_remote", &self.e2e_remote)),
             sampled: self.sampled,
             completed: self.completed,
+            remote_completed: self.remote_completed,
             retx_episodes: self.retx_episodes,
+            park_episodes: self.park_episodes,
+            replay_episodes: self.replay_episodes,
             incomplete: self.incomplete,
         }
     }
@@ -207,23 +430,37 @@ pub struct WaterfallRow {
 }
 
 /// The latency waterfall: per-stage rows plus the end-to-end line they
-/// telescope into. Stage `mean_ns` values sum to `e2e.mean_ns` exactly
-/// (modulo ps→ns float division); p50/p99 columns are per-stage
-/// distributions and do not add.
+/// telescope into, per span class. `rows`/`e2e` cover local spans;
+/// `remote_rows`/`e2e_remote` (empty/`None` when no span crossed the
+/// fabric) cover remote fills. Within each class, stage `mean_ns`
+/// values sum to that class's e2e mean exactly (modulo ps→ns float
+/// division); p50/p99 columns are per-stage distributions and do not
+/// add.
 #[derive(Clone, Debug)]
 pub struct Waterfall {
     pub rows: Vec<WaterfallRow>,
     pub e2e: WaterfallRow,
+    pub remote_rows: Vec<WaterfallRow>,
+    pub e2e_remote: Option<WaterfallRow>,
     pub sampled: u64,
     pub completed: u64,
+    pub remote_completed: u64,
     pub retx_episodes: u64,
+    pub park_episodes: u64,
+    pub replay_episodes: u64,
     pub incomplete: u64,
 }
 
 impl Waterfall {
-    /// Sum of per-stage means — equals `e2e.mean_ns` for full spans.
+    /// Sum of local per-stage means — equals `e2e.mean_ns` for full spans.
     pub fn stage_mean_sum_ns(&self) -> f64 {
         self.rows.iter().map(|r| r.mean_ns).sum()
+    }
+
+    /// Sum of remote per-stage means — equals `e2e_remote.mean_ns` when
+    /// any remote span completed (0.0 otherwise).
+    pub fn remote_stage_mean_sum_ns(&self) -> f64 {
+        self.remote_rows.iter().map(|r| r.mean_ns).sum()
     }
 
     pub fn to_json(&self) -> Json {
@@ -236,15 +473,30 @@ impl Waterfall {
                 ("p99_ns".into(), Json::f(r.p99_ns)),
             ])
         };
-        Json::Obj(vec![
+        let mut members = vec![
             ("stages".into(), Json::Arr(self.rows.iter().map(row_json).collect())),
             ("end_to_end".into(), row_json(&self.e2e)),
             ("stage_mean_sum_ns".into(), Json::f(self.stage_mean_sum_ns())),
-            ("sampled".into(), Json::u(self.sampled)),
-            ("completed".into(), Json::u(self.completed)),
-            ("retx_episodes".into(), Json::u(self.retx_episodes)),
-            ("incomplete".into(), Json::u(self.incomplete)),
-        ])
+        ];
+        if let Some(r) = &self.e2e_remote {
+            members.push((
+                "remote_stages".into(),
+                Json::Arr(self.remote_rows.iter().map(row_json).collect()),
+            ));
+            members.push(("end_to_end_remote".into(), row_json(r)));
+            members
+                .push(("remote_stage_mean_sum_ns".into(), Json::f(self.remote_stage_mean_sum_ns())));
+        }
+        members.extend([
+            ("sampled".to_string(), Json::u(self.sampled)),
+            ("completed".to_string(), Json::u(self.completed)),
+            ("remote_completed".to_string(), Json::u(self.remote_completed)),
+            ("retx_episodes".to_string(), Json::u(self.retx_episodes)),
+            ("park_episodes".to_string(), Json::u(self.park_episodes)),
+            ("replay_episodes".to_string(), Json::u(self.replay_episodes)),
+            ("incomplete".to_string(), Json::u(self.incomplete)),
+        ]);
+        Json::Obj(members)
     }
 }
 
@@ -266,6 +518,18 @@ mod tests {
         tr.complete(t(base_ns + 120), id);
     }
 
+    fn drive_remote_span(tr: &mut SpanTracer, id: u32, base_ns: u64) {
+        tr.on_issue(t(base_ns), id);
+        tr.mark(t(base_ns + 10), id, Stage::Launch);
+        tr.mark(t(base_ns + 30), id, Stage::FwdOut);
+        tr.mark(t(base_ns + 80), id, Stage::Deliver);
+        tr.mark(t(base_ns + 85), id, Stage::SvcStart);
+        tr.mark(t(base_ns + 125), id, Stage::SvcDone);
+        tr.mark(t(base_ns + 145), id, Stage::Reply);
+        tr.mark(t(base_ns + 150), id, Stage::RspLaunch);
+        tr.complete(t(base_ns + 220), id);
+    }
+
     #[test]
     fn stage_intervals_telescope_to_e2e() {
         let mut tr = SpanTracer::new(1);
@@ -282,6 +546,39 @@ mod tests {
         assert_eq!(w.rows[0].stage, "ingress_wait");
         assert!((w.rows[0].mean_ns - 10.0).abs() < 1e-6);
         assert!((w.rows[3].mean_ns - 40.0).abs() < 1e-6);
+        // no remote spans: the remote side stays empty
+        assert_eq!(w.remote_completed, 0);
+        assert!(w.remote_rows.is_empty());
+        assert!(w.e2e_remote.is_none());
+    }
+
+    #[test]
+    fn remote_stage_intervals_telescope_to_remote_e2e() {
+        let mut tr = SpanTracer::new(1);
+        for i in 0..20u32 {
+            drive_remote_span(&mut tr, i, 500 + 11 * i as u64);
+        }
+        // and a few locals interleaved: the classes must not bleed
+        for i in 100..110u32 {
+            drive_span(&mut tr, i, 2000 + 3 * i as u64);
+        }
+        assert_eq!(tr.completed, 30);
+        assert_eq!(tr.remote_completed, 20);
+        assert_eq!(tr.incomplete, 0);
+        let w = tr.waterfall();
+        assert_eq!(w.remote_rows.len(), REMOTE_STAGE_NAMES.len());
+        let r = w.e2e_remote.as_ref().expect("remote spans completed");
+        assert!((w.remote_stage_mean_sum_ns() - r.mean_ns).abs() < 1e-6);
+        assert!((r.mean_ns - 220.0).abs() < 1e-6);
+        // hop_request = fwd_out -> deliver = 50ns
+        assert_eq!(w.remote_rows[2].stage, "hop_request");
+        assert!((w.remote_rows[2].mean_ns - 50.0).abs() < 1e-6);
+        // hop_rsp_wait = reply -> rsp_launch = 5ns
+        assert_eq!(w.remote_rows[6].stage, "hop_rsp_wait");
+        assert!((w.remote_rows[6].mean_ns - 5.0).abs() < 1e-6);
+        // the local class is untouched by remote traffic
+        assert!((w.e2e.mean_ns - 120.0).abs() < 1e-6);
+        assert!((w.stage_mean_sum_ns() - w.e2e.mean_ns).abs() < 1e-6);
     }
 
     #[test]
@@ -297,6 +594,28 @@ mod tests {
         tr.mark(t(100), 5, Stage::Launch); // not sampled: ignored
         tr.complete(t(200), 4);
         assert_eq!(tr.incomplete, 1); // id 4 lacked middle stages
+    }
+
+    #[test]
+    fn per_stream_phases_decorrelate_sampling() {
+        // two streams, every=4, phases 0 and 1: stream 0 picks its
+        // arrivals 0,4,8,...; stream 1 picks 3,7,11,... — never the
+        // same ordinal, which is the point of the per-node offsets.
+        let mut tr = SpanTracer::with_phases(4, &[0, 1]);
+        let mut picked = [Vec::new(), Vec::new()];
+        for k in 0..16u32 {
+            for s in 0..2usize {
+                let before = tr.sampled;
+                let id = k * 2 + s as u32;
+                tr.on_issue_stream(t(k as u64), id, s);
+                if tr.sampled > before {
+                    picked[s].push(k);
+                }
+            }
+        }
+        assert_eq!(picked[0], vec![0, 4, 8, 12]);
+        assert_eq!(picked[1], vec![3, 7, 11, 15]);
+        assert_eq!(tr.phases(), vec![0, 1]);
     }
 
     #[test]
@@ -319,6 +638,26 @@ mod tests {
     }
 
     #[test]
+    fn park_and_replay_annotations_count_episodes() {
+        let mut tr = SpanTracer::new(1);
+        tr.on_issue(t(0), 3);
+        tr.mark(t(5), 3, Stage::Launch);
+        tr.note_park(3);
+        tr.note_replay(3);
+        tr.note_replay(42); // not sampled: ignored
+        tr.mark(t(40), 3, Stage::Deliver);
+        tr.mark(t(41), 3, Stage::SvcStart);
+        tr.mark(t(50), 3, Stage::SvcDone);
+        tr.mark(t(50), 3, Stage::Reply);
+        tr.complete(t(60), 3);
+        assert_eq!(tr.park_episodes, 1);
+        assert_eq!(tr.replay_episodes, 1);
+        let w = tr.waterfall();
+        assert_eq!(w.park_episodes, 1);
+        assert_eq!(w.replay_episodes, 1);
+    }
+
+    #[test]
     fn seal_retires_unfinished_spans() {
         let mut tr = SpanTracer::new(1);
         tr.on_issue(t(0), 1);
@@ -331,13 +670,31 @@ mod tests {
     }
 
     #[test]
+    fn recorded_spans_round_trip_their_timeline() {
+        let mut tr = SpanTracer::new(1);
+        tr.record_spans(true);
+        drive_span(&mut tr, 7, 100);
+        drive_remote_span(&mut tr, 8, 100);
+        let recs = tr.records();
+        assert_eq!(recs.len(), 2);
+        assert!(!recs[0].remote);
+        assert!(recs[1].remote);
+        assert_eq!(recs[0].at(Stage::Issue), Some(t(100).ps()));
+        assert_eq!(recs[0].at(Stage::FwdOut), None);
+        assert_eq!(recs[1].at(Stage::RspLaunch), Some(t(250).ps()));
+    }
+
+    #[test]
     fn waterfall_json_is_well_formed() {
         let mut tr = SpanTracer::new(1);
         drive_span(&mut tr, 1, 0);
+        drive_remote_span(&mut tr, 2, 0);
         let j = tr.waterfall().to_json();
         let text = j.compact();
         let back = Json::parse(&text).unwrap();
-        assert_eq!(back.get("completed").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(back.get("completed").and_then(|v| v.as_u64()), Some(2));
         assert_eq!(back.get("stages").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+        assert_eq!(back.get("remote_stages").and_then(|v| v.as_arr()).map(|a| a.len()), Some(8));
+        assert_eq!(back.get("remote_completed").and_then(|v| v.as_u64()), Some(1));
     }
 }

@@ -473,6 +473,7 @@ impl OpenLoop {
     /// refresh the instantaneous gauges (queue depths, credit occupancy,
     /// OOO-buffer depth, effective RTO).
     fn refresh_registry(&self, reg: &mut Registry) {
+        reg.begin_refresh();
         reg.absorb("workload", &self.counters);
         reg.set("workload.issued", self.issued);
         reg.set("workload.completed", self.completed);
@@ -1258,8 +1259,12 @@ mod tests {
     fn observed_run_produces_waterfall_and_telemetry() {
         let cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 1_000, ..Default::default() };
         let sc = Scenario::preset("uniform", 1 << 12, 0.99).expect("preset");
-        let ocfg =
-            ObsConfig { spans: true, span_sample_every: 4, tick: Some(Duration::from_us(5)) };
+        let ocfg = ObsConfig {
+            spans: true,
+            span_sample_every: 4,
+            tick: Some(Duration::from_us(5)),
+            ..ObsConfig::default()
+        };
         let (r, obs) = OpenLoop::new(cfg, &sc, 2).with_obs(&ocfg).run_observed();
         assert_eq!(r.completed, 1_000);
         let w = obs.waterfall.expect("spans were on");

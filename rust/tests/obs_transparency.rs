@@ -8,6 +8,7 @@
 //! you can see.
 
 use eci::agents::dram::MemStore;
+use eci::fabric::{Fabric, FabricConfig, KillSpec};
 use eci::machine::{map, Machine, MachineConfig, Workload};
 use eci::obs::{ObsConfig, STAGE_NAMES};
 use eci::proto::messages::{Line, LineAddr, LINE_BYTES};
@@ -110,6 +111,7 @@ fn openloop_observables(
             spans: true,
             span_sample_every: 2,
             tick: Some(Duration::from_us(5)),
+            ..ObsConfig::default()
         };
         let (r, digest, report) =
             OpenLoop::new(cfg, scenario, slices).with_obs(&ocfg).run_settled_observed();
@@ -163,6 +165,82 @@ fn openloop_obs_is_transparent_under_faulted_sr() {
     );
     assert_eq!(d_on, d_off, "faulted-SR settled digests must match");
     assert_eq!(obs_on, obs_off, "faulted-SR observables must match");
+}
+
+/// Fabric observables, flattened for equality. As for the open loop,
+/// `events` is the strictest check: one extra scheduled event shows.
+type FabricObservables = (u64, u64, u64, String, Vec<(String, u64)>);
+
+fn fabric_observables(cfg: FabricConfig, sc: &Scenario, obs: bool) -> (FabricObservables, u64) {
+    let (r, digest) = if obs {
+        // every obs surface at once: spans (with the fabric's derived
+        // per-node sampling phases), the ticker, and the flight recorder
+        let ocfg = ObsConfig {
+            spans: true,
+            span_sample_every: 2,
+            tick: Some(Duration::from_us(5)),
+            flight: Some(128),
+            ..ObsConfig::default()
+        };
+        let (r, digest, report) = Fabric::new(cfg, sc).with_obs(&ocfg).run_settled_observed();
+        let w = report.waterfall.expect("spans were on");
+        assert!(w.completed + w.remote_completed > 0, "sampled spans must have completed");
+        if cfg.nodes > 1 {
+            assert!(w.remote_completed > 0, "multi-node runs must trace remote fills");
+        }
+        assert!(!report.jsonl.is_empty(), "the ticker must have snapshotted");
+        assert!(!report.flight_dumps.is_empty(), "the end-of-run dump is always present");
+        if cfg.kill.is_some() {
+            assert!(
+                report.flight_dumps.iter().any(|(t, _)| t == "declare_dead"),
+                "a declared death must dump the flight recorder"
+            );
+        }
+        (r, digest)
+    } else {
+        Fabric::new(cfg, sc).run_settled()
+    };
+    let lat = format!("{:.6}/{}/{}", r.lat.mean(), r.lat.p50(), r.lat.p99());
+    let counters: Vec<(String, u64)> =
+        r.counters.iter().map(|(k, v)| (k.to_string(), v)).collect();
+    ((r.completed, r.sim_time.0, r.events, lat, counters), digest)
+}
+
+/// The fabric-host gate: spans + ticker + flight recorder attached to a
+/// 2- and 3-node fabric leave the settled digest and every observable
+/// identical.
+#[test]
+fn fabric_obs_is_transparent_on_two_and_three_nodes() {
+    let sc = Scenario::preset("uniform", 1 << 10, 0.99).expect("preset");
+    for nodes in [2u8, 3] {
+        let cfg = FabricConfig {
+            nodes,
+            ol: OpenLoopConfig { rate_per_s: 4e6, ops: 600, ..Default::default() },
+            ..Default::default()
+        };
+        let (off, d_off) = fabric_observables(cfg, &sc, false);
+        let (on, d_on) = fabric_observables(cfg, &sc, true);
+        assert_eq!(d_on, d_off, "{nodes} nodes: settled digests must match");
+        assert_eq!(on, off, "{nodes} nodes: observables must match");
+    }
+}
+
+/// Same gate through a whole-node failure: the kill, the barren-channel
+/// detection, the declaration (which snapshots the flight recorder),
+/// re-homing, and replay must all be invisible to the run's outcome.
+#[test]
+fn fabric_obs_is_transparent_under_a_kill() {
+    let sc = Scenario::preset("uniform", 1 << 9, 0.99).expect("preset");
+    let cfg = FabricConfig {
+        nodes: 3,
+        kill: Some(KillSpec { node: 1, at: Duration::from_us(20) }),
+        ol: OpenLoopConfig { rate_per_s: 4e6, ops: 900, ..Default::default() },
+        ..Default::default()
+    };
+    let (off, d_off) = fabric_observables(cfg, &sc, false);
+    let (on, d_on) = fabric_observables(cfg, &sc, true);
+    assert_eq!(d_on, d_off, "kill run: settled digests must match");
+    assert_eq!(on, off, "kill run: observables must match");
 }
 
 /// Satellite gate: the online protocol checker wired into the machine
