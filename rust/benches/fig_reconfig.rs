@@ -1,0 +1,32 @@
+//! Bench: live reconfiguration — p99 dip depth and duration per
+//! scripted transition (ctrl subsystem). Custom harness (criterion is
+//! not available in the offline registry).
+
+use eci::harness::{fig_reconfig, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let f = fig_reconfig::run(scale);
+    println!("{}", fig_reconfig::render(&f).to_markdown());
+    let executed = f.points.iter().filter(|p| !p.skipped).count();
+    let worst = f
+        .points
+        .iter()
+        .filter_map(|p| p.dip.as_ref())
+        .max_by(|a, b| a.depth_pct.total_cmp(&b.depth_pct));
+    match worst {
+        Some(d) => println!(
+            "{executed}/{} transitions executed; worst p99 dip {:.0}% for {:.1}us   (host {:?}, scale {scale:?})",
+            f.points.len(),
+            d.depth_pct,
+            d.dip_us,
+            t0.elapsed()
+        ),
+        None => println!(
+            "{executed}/{} transitions executed   (host {:?}, scale {scale:?})",
+            f.points.len(),
+            t0.elapsed()
+        ),
+    }
+}

@@ -43,6 +43,24 @@ struct Pending {
     tag: u64,
 }
 
+/// Everything one slice knows about a line, packed for a handoff to a
+/// *different* slice during live reconfiguration. Unlike
+/// [`HomeAgent::surrender_copy`] (which retires the line to RAM so a cold
+/// adopter rebuilds from the backing store), an export carries the exact
+/// directory word, the grant-epoch count, and any cached copy with its
+/// state, so the importing slice reproduces the pre-handoff shape
+/// bit-for-bit — the transparency property the reconfig litmus tests gate
+/// on.
+#[derive(Debug)]
+pub struct ExportedLine {
+    /// The directory word, verbatim.
+    pub st: HomeSt,
+    /// Outstanding grant epochs (possession counter).
+    pub holders: u32,
+    /// The home-cache copy, if resident: its state and bytes.
+    pub cached: Option<(CacheState, Box<Line>)>,
+}
+
 /// The directory controller. Since the dcs refactor the agent is
 /// *slice-local*: it fronts the lines whose address satisfies
 /// `addr % slice_count == slice_index` and nothing else — there is no
@@ -56,6 +74,10 @@ pub struct HomeAgent {
     /// This agent's slice of the address-interleaved directory.
     slice_index: u64,
     slice_count: u64,
+    /// A sibling slice that has gone dark (drain/failover): lines whose
+    /// natural owner is the dead slice re-home across the survivors by a
+    /// deterministic spread, mirrored exactly by `Dcs::slice_of`.
+    dead_sibling: Option<u64>,
     /// Per-line directory state; absent = idle (I/I, no pending).
     dir: HashMap<LineAddr, HomeSt>,
     /// Grant-epoch possession counter per line: grants of a copy
@@ -98,6 +120,7 @@ impl HomeAgent {
             policy,
             slice_index,
             slice_count,
+            dead_sibling: None,
             dir: HashMap::default(),
             possession: HashMap::default(),
             stalled: HashMap::default(),
@@ -112,9 +135,31 @@ impl HomeAgent {
     }
 
     /// Does this slice front `addr`? (Always true for a 1-slice agent.)
+    /// While a sibling is drained, its natural lines spread across the
+    /// survivors: line `a` with natural owner `d` re-homes to
+    /// `(d + 1 + (a/n) % (n-1)) % n`, which never lands back on `d` and
+    /// distributes the orphaned range evenly.
     #[inline]
     pub fn owns(&self, addr: LineAddr) -> bool {
-        addr.0 % self.slice_count == self.slice_index
+        let n = self.slice_count;
+        let natural = addr.0 % n;
+        if self.dead_sibling == Some(natural) {
+            let k = (addr.0 / n) % (n - 1);
+            return (natural + 1 + k) % n == self.slice_index;
+        }
+        natural == self.slice_index
+    }
+
+    /// Mark a sibling slice dark (or clear the mark). While set, this
+    /// slice adopts its deterministic share of the dead slice's address
+    /// range — see [`HomeAgent::owns`].
+    pub fn set_dead_sibling(&mut self, dead: Option<u64>) {
+        if let Some(d) = dead {
+            assert!(self.slice_count >= 2, "draining the only slice");
+            assert!(d < self.slice_count, "bad dead slice {d}/{}", self.slice_count);
+            assert_ne!(d, self.slice_index, "a drained slice cannot re-home to itself");
+        }
+        self.dead_sibling = dead;
     }
 
     pub fn slice_index(&self) -> u64 {
@@ -250,6 +295,84 @@ impl HomeAgent {
         self.set_state(addr, HomeSt { own: CacheState::I, own_dirty: false, view, pending_fwd: None });
         self.possession.insert(addr, holders);
         self.stats.inc("adopted");
+    }
+
+    /// Pack up everything this slice knows about `addr` for a handoff to
+    /// another slice (live reconfiguration). Returns `None` when there is
+    /// nothing to move (idle, no epochs, no cached copy). Only legal on a
+    /// quiescent line — the control plane quiesces the whole data plane
+    /// before calling this, so a pending forward or stalled event here is
+    /// a protocol bug.
+    pub fn export_line(&mut self, addr: LineAddr) -> Option<ExportedLine> {
+        let st = self.state_of(addr);
+        debug_assert!(st.pending_fwd.is_none(), "exporting {addr} mid-transaction");
+        debug_assert!(!self.stalled.contains_key(&addr), "exporting {addr} with stalled events");
+        let cached = self
+            .cache
+            .as_mut()
+            .and_then(|c| c.remove(addr))
+            .map(|v| (v.state, v.data));
+        debug_assert!(
+            st.own == CacheState::I || cached.is_some(),
+            "directory says own={:?} but no cached copy for {addr}",
+            st.own
+        );
+        let holders = self.possession.remove(&addr).unwrap_or(0);
+        self.set_state(addr, HomeSt::idle());
+        if st == HomeSt::idle() && holders == 0 && cached.is_none() {
+            return None;
+        }
+        self.stats.inc("exported");
+        Some(ExportedLine { st, holders, cached })
+    }
+
+    /// The inverse of [`HomeAgent::export_line`]: install a handed-off
+    /// line verbatim. If the export carried a cached copy it is inserted
+    /// into this slice's cache (victims follow the same freshest-copy
+    /// writeback rule as `FillOwn`); when this slice has *no* cache (a
+    /// shrink-to-uncached resize) the copy retires to RAM if it was the
+    /// freshest version and the directory's own-state clears. Returns the
+    /// number of cache victims (incl. retired copies) for bookkeeping.
+    pub fn import_line(&mut self, addr: LineAddr, ex: ExportedLine, ram: &mut MemStore) -> u64 {
+        debug_assert!(self.owns(addr), "importing a line outside this slice");
+        debug_assert!(self.state_of(addr) == HomeSt::idle(), "importing over a tracked line");
+        debug_assert!(!self.stalled.contains_key(&addr), "importing over stalled events");
+        let mut victims = 0;
+        let mut st = ex.st;
+        if let Some((cst, data)) = ex.cached {
+            match self.cache.as_mut() {
+                Some(c) => {
+                    if let Some(v) = c.insert(addr, cst, data) {
+                        let mut vst = self.state_of(v.addr);
+                        if v.state == CacheState::M || vst.own_dirty {
+                            ram.write_line(v.addr, &v.data);
+                            self.stats.inc("ram_write");
+                        }
+                        vst.own = CacheState::I;
+                        vst.own_dirty = false;
+                        self.set_state(v.addr, vst);
+                        victims += 1;
+                    }
+                }
+                None => {
+                    if cst == CacheState::M || st.own_dirty {
+                        ram.write_line(addr, &data);
+                        self.stats.inc("ram_write");
+                    }
+                    st.own = CacheState::I;
+                    st.own_dirty = false;
+                    victims += 1;
+                }
+            }
+        }
+        if st != HomeSt::idle() {
+            self.set_state(addr, st);
+        }
+        if ex.holders > 0 {
+            self.possession.insert(addr, ex.holders);
+        }
+        self.stats.inc("imported");
+        victims
     }
 
     fn rule(&self, st: HomeSt, ev: HEvent) -> HRule {
@@ -670,6 +793,125 @@ mod tests {
         assert_eq!(a.state_of(LineAddr(7)), HomeSt::idle());
         assert_eq!(a.possession_count(LineAddr(7)), 0);
         assert_eq!(ram.read_line(LineAddr(7))[0], 0xEE, "adopted line's writeback must land");
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_state_exact() {
+        let policy = HomePolicy { cache_fills: true, ..HomePolicy::default() };
+        let rules = generate_home(&reference_transitions(), policy);
+        let mut a = HomeAgent::new(rules.clone(), policy, Some(Cache::new(64 * 1024, 4)));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        let mut l = [0u8; 128];
+        l[0] = 0x42;
+        ram.write_line(LineAddr(3), &l);
+        // remote shares line 3; the home keeps a clean S copy in-cache
+        a.on_message(
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadShared, LineAddr(3)),
+            &mut ram,
+        );
+        let before = a.state_of(LineAddr(3));
+        assert_eq!(before.own, CacheState::S);
+        assert_eq!(a.possession_count(LineAddr(3)), 1);
+        // export: the source slice forgets the line entirely
+        let ex = a.export_line(LineAddr(3)).expect("tracked line must export");
+        assert_eq!(a.state_of(LineAddr(3)), HomeSt::idle());
+        assert_eq!(a.possession_count(LineAddr(3)), 0);
+        assert!(a.cached_line(LineAddr(3)).is_none());
+        // import into a fresh agent: directory word, epochs and cached
+        // bytes all reappear verbatim
+        let mut b = HomeAgent::new(rules, policy, Some(Cache::new(64 * 1024, 4)));
+        let victims = b.import_line(LineAddr(3), ex, &mut ram);
+        assert_eq!(victims, 0);
+        assert_eq!(b.state_of(LineAddr(3)), before);
+        assert_eq!(b.possession_count(LineAddr(3)), 1);
+        // the imported copy is live: a repeat read is served slice-locally
+        b.on_message(
+            Message::coh_req(ReqId(2), Node::Remote, CohOp::VolDowngradeI, LineAddr(3)),
+            &mut ram,
+        );
+        let fx = b.on_message(
+            Message::coh_req(ReqId(3), Node::Remote, CohOp::ReadShared, LineAddr(3)),
+            &mut ram,
+        );
+        let HomeEffect::Respond { from_ram, msg } = &fx[0] else { panic!("{fx:?}") };
+        assert!(!*from_ram, "imported copy must serve from the home cache");
+        assert_eq!(msg.payload.as_ref().unwrap()[0], 0x42);
+        // a line nobody tracks exports as None
+        assert!(a.export_line(LineAddr(50)).is_none());
+    }
+
+    #[test]
+    fn import_into_uncached_slice_retires_dirty_copy_to_ram() {
+        // cache_writebacks parks dirty remote writebacks in the home cache
+        let policy = HomePolicy { cache_writebacks: true, ..HomePolicy::default() };
+        let rules = generate_home(&reference_transitions(), policy);
+        let mut a = HomeAgent::new(rules, policy, Some(Cache::new(64 * 1024, 4)));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        a.on_message(
+            Message::coh_req(ReqId(1), Node::Remote, CohOp::ReadExclusive, LineAddr(9)),
+            &mut ram,
+        );
+        let mut dirty = [0u8; 128];
+        dirty[0] = 0xD1;
+        a.on_message(
+            Message::coh_req_data(ReqId(2), Node::Remote, CohOp::VolDowngradeI, LineAddr(9), Box::new(dirty)),
+            &mut ram,
+        );
+        assert_ne!(ram.read_line(LineAddr(9))[0], 0xD1, "writeback cached, not stored");
+        let ex = a.export_line(LineAddr(9)).expect("cached copy must export");
+        // shrink-to-uncached: the importing slice has no home cache, so
+        // the freshest bytes must retire to RAM instead of vanishing
+        let (mut b, _) = mk(false);
+        let victims = b.import_line(LineAddr(9), ex, &mut ram);
+        assert_eq!(victims, 1);
+        assert_eq!(ram.read_line(LineAddr(9))[0], 0xD1, "dirty bytes must survive the shrink");
+        assert_eq!(b.state_of(LineAddr(9)).own, CacheState::I);
+    }
+
+    #[test]
+    fn dead_sibling_spreads_ownership_across_survivors() {
+        let rules = generate_home(&reference_transitions(), HomePolicy::default());
+        let n = 4u64;
+        let mut slices: Vec<HomeAgent> = (0..n)
+            .map(|i| {
+                let mut a =
+                    HomeAgent::new_slice(rules.clone(), HomePolicy::default(), None, i, n);
+                if i != 1 {
+                    a.set_dead_sibling(Some(1));
+                }
+                a
+            })
+            .collect();
+        let mut spread = [0u64; 4];
+        for addr in 0..4096u64 {
+            let owners: Vec<u64> = (0..n)
+                .filter(|&i| i != 1 && slices[i as usize].owns(LineAddr(addr)))
+                .collect();
+            if addr % n == 1 {
+                // orphaned range: exactly one survivor adopts each line
+                assert_eq!(owners.len(), 1, "addr {addr}: {owners:?}");
+                assert_ne!(owners[0], 1);
+                spread[owners[0] as usize] += 1;
+            } else {
+                assert_eq!(owners, vec![addr % n], "natural lines keep their owner");
+            }
+        }
+        // the 1024 orphaned lines spread evenly over the 3 survivors
+        assert_eq!(spread[1], 0);
+        for s in [0usize, 2, 3] {
+            assert!(spread[s] >= 300, "survivor {s} got {} lines", spread[s]);
+        }
+        // rejoin: clearing the mark restores the natural interleave
+        for (i, a) in slices.iter_mut().enumerate() {
+            if i != 1 {
+                a.set_dead_sibling(None);
+            }
+        }
+        for addr in 0..256u64 {
+            for (i, a) in slices.iter().enumerate() {
+                assert_eq!(a.owns(LineAddr(addr)), addr % n == i as u64);
+            }
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! eci resources                  print Table 2 + subsetting ablation
-//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|selfperf|all> [flags]
+//! eci bench <table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|reconfig|selfperf|all> [flags]
 //! eci check                      validate envelope + subsets, print report
 //! eci trace-demo                 run a traffic capture through the
 //!                                dissector and the online checker
@@ -75,6 +75,28 @@
 //! depth and recovery duration. `--detect-us` bounds the failure
 //! detector's watchdog (default 40).
 //!
+//! The `reconfig` bench (live reconfiguration with traffic in flight:
+//! p99 dip depth and duration per scripted transition —
+//! `harness::fig_reconfig`; see `rust/DESIGN.md` §ctrl). `--scenario`,
+//! `--theta` and `--json` are bench-local; every other flag resolves
+//! through `SystemSpec::FIELDS`, the shared field-metadata table, so
+//! `--slices`, `--rate`, `--ops`, `--seed`, `--reconfig` (and friends)
+//! parse identically everywhere and a stray flag is an error, never
+//! silently ignored:
+//!
+//! ```text
+//! eci bench reconfig [--reconfig reslice:4@200us,cache:64k@400us]
+//!                    [--reconfig relmode:sr@600us]   (repeatable)
+//!                    [--slices 2] [--home-cached] [--rate 6e6]
+//!                    [--ops 12000] [--scenario scan] [--theta 0.99]
+//!                    [--seed N] [--json]
+//! ```
+//!
+//! With no `--reconfig` script it runs the default transition family
+//! (re-slice 2→4, drain + rejoin, rel-mode swap, cache resize) spaced
+//! across the run. The script is shape-validated before anything runs
+//! (`SystemSpec::validate` walks it transition by transition).
+//!
 //! The `selfperf` bench (the simulator's own host throughput on pinned
 //! configurations — `harness::selfperf`; `BENCH_6.json` is the
 //! committed baseline, `--check` gates CI on it):
@@ -100,14 +122,15 @@
 //! bench id rejects stray arguments loudly (a typo must not green-wash
 //! a CI smoke step).
 
+use crate::config::SystemSpec;
 use crate::dcs::loadgen::{LoadGenConfig, MixConfig};
 use crate::fabric::{FabricConfig, KillSpec};
 use crate::harness::fig_goodput::{self, FaultKnobs};
 use crate::harness::{
-    fig5, fig6, fig7, fig8, fig_fabric, fig_loadcurve, fig_retx, fig_throughput, selfperf, table2,
-    table3, Scale,
+    fig5, fig6, fig7, fig8, fig_fabric, fig_loadcurve, fig_reconfig, fig_retx, fig_throughput,
+    selfperf, table2, table3, Scale,
 };
-use crate::transport::RelMode;
+use crate::transport::{RelConfig, RelMode};
 use crate::proto::messages::CohOp;
 use crate::proto::subset::{validate_with_workload, Subset};
 use crate::runtime::Runtime;
@@ -132,7 +155,7 @@ pub fn main_entry() {
         "trace-demo" => crate::trace::demo::run_demo(),
         _ => {
             eprintln!(
-                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|selfperf|all]|check|trace-demo>\n\
+                "usage: eci <resources|bench [table3|fig5|fig6|fig7|fig8|dcs|workload|faults|retx|fabric|reconfig|selfperf|all]|check|trace-demo>\n\
                  dcs flags:      --slices 1,2,4,8 --cached-slices 2,4 --batch 4 --clients 32\n\
                                  --ops 20000 --mix 60:20:20 --hops 4 --theta 0.99 --seed N --json\n\
                  workload flags: --scenario {scenarios} --slices 1,2,4,8 --cached-slices 2,4\n\
@@ -148,6 +171,9 @@ pub fn main_entry() {
                                  --rate 2e6 --ops 1600 --scenario {scenarios} --theta 0.99 --seed 7 --json\n\
                                  --kill 1@200 --detect-us 500 --spans --obs-out fab.jsonl\n\
                                  --trace-out fab.trace.json --flight-dump post.json\n\
+                 reconfig flags: --reconfig reslice:4@200us,cache:64k@400us (repeatable)\n\
+                                 --slices 2 --home-cached --rate 6e6 --ops 12000\n\
+                                 --scenario {scenarios} --theta 0.99 --seed N --json\n\
                  selfperf flags: --check BENCH_6.json --record BENCH_6.json --tolerance 0.25 --json\n\
                  seeds: every stochastic bench takes --seed (defaults: dcs 0xDC5, workload/faults/retx/fabric 0x0C3A)\n\
                  env: ECI_SCALE={{ci,default,paper}} (current: {scale:?}; selfperf ignores it)",
@@ -953,6 +979,82 @@ impl SelfperfArgs {
     }
 }
 
+/// Parsed `eci bench reconfig` flags. The bench owns only `--scenario`,
+/// `--theta` and `--json`; every other flag resolves through
+/// [`SystemSpec::FIELDS`], so the spec's field metadata — not this
+/// file — is the single home of each spelling.
+#[derive(Clone, Debug)]
+pub struct ReconfigArgs {
+    pub spec: SystemSpec,
+    pub scenario: String,
+    pub theta: f64,
+    /// `--json`: emit the table as JSON alongside the markdown.
+    pub json: bool,
+}
+
+impl ReconfigArgs {
+    pub fn defaults(scale: Scale) -> ReconfigArgs {
+        let mut spec = SystemSpec::dcs_cached(2);
+        spec.rate_per_s = 6e6;
+        spec.ops = fig_reconfig::ops_for(scale);
+        // clean reliable framing, so a scripted rel-mode swap is a real
+        // swap rather than a recorded no-op
+        spec.machine.rel = Some(RelConfig::from_ber(0.0, 0x5EED));
+        ReconfigArgs { spec, scenario: "scan".into(), theta: 0.99, json: false }
+    }
+
+    /// Parse flags; unknown flags are errors (never silently ignored).
+    /// An empty `--reconfig` script falls back to
+    /// [`fig_reconfig::default_script`]; the final spec (script
+    /// included) is shape-validated before anything runs.
+    pub fn parse(scale: Scale, args: &[String]) -> Result<ReconfigArgs, String> {
+        let mut out = ReconfigArgs::defaults(scale);
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            match flag.as_str() {
+                "--json" => out.json = true,
+                "--scenario" => {
+                    let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+                    out.scenario = check_scenario(val)?;
+                }
+                "--theta" => {
+                    let val = it.next().ok_or_else(|| format!("{flag} needs a value"))?;
+                    let t: f64 = val.parse().map_err(|_| format!("bad theta {val:?}"))?;
+                    if !(t >= 0.0 && t.is_finite()) {
+                        return Err(format!("theta must be >= 0, got {val:?}"));
+                    }
+                    out.theta = t;
+                }
+                other => {
+                    let Some(takes_value) = SystemSpec::flag_takes_value(other) else {
+                        return Err(format!(
+                            "unknown reconfig flag {other:?} (spec flags: {})",
+                            SystemSpec::FIELDS
+                                .iter()
+                                .map(|f| f.flag)
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        ));
+                    };
+                    let val = if takes_value {
+                        it.next().ok_or_else(|| format!("{flag} needs a value"))?.as_str()
+                    } else {
+                        ""
+                    };
+                    out.spec
+                        .apply_flag(other, val)
+                        .expect("flag_takes_value said the spec owns this flag")?;
+                }
+            }
+        }
+        if out.spec.reconfig.is_empty() {
+            out.spec.reconfig = fig_reconfig::default_script(out.spec.ops, out.spec.rate_per_s);
+        }
+        out.spec.validate()?;
+        Ok(out)
+    }
+}
+
 /// `--ber` accepts a comma-separated grid of bit-error rates, each in
 /// [0, 0.1) (shared by `faults` and `retx`, so the two benches can
 /// never diverge on what a legal BER is).
@@ -1051,21 +1153,21 @@ fn parse_usize_list(val: &str) -> Result<Vec<usize>, String> {
 /// quietly running the defaults), which green-washes misconfigured CI
 /// smoke steps exactly like an unknown bench id would.
 fn bench_rejects_flags(which: &str, rest: &[String]) -> Result<(), String> {
-    if matches!(which, "dcs" | "workload" | "faults" | "retx" | "fabric" | "selfperf")
+    if matches!(which, "dcs" | "workload" | "faults" | "retx" | "fabric" | "reconfig" | "selfperf")
         || rest.is_empty()
     {
         return Ok(());
     }
     Err(format!(
-        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults`, `retx`, `fabric` or `selfperf`)",
+        "bench {which:?} takes no flags, got {:?} (flags belong to `dcs`, `workload`, `faults`, `retx`, `fabric`, `reconfig` or `selfperf`)",
         rest.join(" ")
     ))
 }
 
 fn run_bench(which: &str, scale: Scale, rest: &[String]) {
-    const KNOWN: [&str; 12] = [
+    const KNOWN: [&str; 13] = [
         "table3", "fig5", "fig6", "fig7", "fig8", "dcs", "workload", "faults", "retx", "fabric",
-        "selfperf", "all",
+        "reconfig", "selfperf", "all",
     ];
     if !KNOWN.contains(&which) {
         // a typo must fail loudly, not green-wash a CI smoke step
@@ -1235,6 +1337,29 @@ fn run_bench(which: &str, scale: Scale, rest: &[String]) {
             if a.json {
                 println!("{}", t.to_json().pretty());
             }
+        }
+    }
+    if matches!(which, "reconfig" | "all") {
+        let rest = if which == "reconfig" { rest } else { &[] };
+        let a = match ReconfigArgs::parse(scale, rest) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("eci bench reconfig: {e}");
+                std::process::exit(2);
+            }
+        };
+        let scenario = Scenario::preset(&a.scenario, fig_loadcurve::footprint_for(scale), a.theta)
+            .expect("validated at parse");
+        let f = fig_reconfig::run_custom(
+            a.spec.openloop_config(),
+            &scenario,
+            a.spec.slices,
+            a.spec.reconfig.clone(),
+        );
+        let t = fig_reconfig::render(&f);
+        println!("{}", t.to_markdown());
+        if a.json {
+            println!("{}", t.to_json().pretty());
         }
     }
     // deliberately NOT part of `all`: selfperf measures the host, not
@@ -1530,6 +1655,7 @@ mod tests {
         assert!(bench_rejects_flags("faults", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("retx", &s(&["--ber", "1e-3"])).is_ok());
         assert!(bench_rejects_flags("fabric", &s(&["--nodes", "2"])).is_ok());
+        assert!(bench_rejects_flags("reconfig", &s(&["--reconfig", "reslice:4@200us"])).is_ok());
         assert!(bench_rejects_flags("selfperf", &s(&["--check", "b.json"])).is_ok());
         assert!(bench_rejects_flags("table3", &[]).is_ok());
         assert!(bench_rejects_flags("all", &[]).is_ok());
@@ -1548,6 +1674,59 @@ mod tests {
         assert!(a.json);
         assert_eq!(a.slices, vec![2]);
         assert_eq!(a.cfg.ops, 100);
+    }
+
+    #[test]
+    fn reconfig_args_resolve_through_spec_field_metadata() {
+        let a = ReconfigArgs::parse(
+            Scale::Ci,
+            &s(&[
+                "--slices", "4",
+                "--rate", "4M",
+                "--ops", "5000",
+                "--seed", "0xBEEF",
+                "--home-cached",
+                "--scenario", "uniform",
+                "--theta", "0.5",
+                "--reconfig", "reslice:8@100us,relmode:sr@200us",
+                "--reconfig", "cache:64k@300us",
+                "--json",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(a.spec.slices, 4);
+        assert_eq!(a.spec.rate_per_s, 4e6);
+        assert_eq!(a.spec.ops, 5_000);
+        assert_eq!(a.spec.seed, 0xBEEF);
+        assert!(a.spec.home_cached);
+        assert_eq!(a.scenario, "uniform");
+        assert_eq!(a.theta, 0.5);
+        assert_eq!(a.spec.reconfig.len(), 3, "--reconfig is repeatable and list-valued");
+        assert!(a.json);
+    }
+
+    #[test]
+    fn reconfig_defaults_fall_back_to_the_default_script() {
+        let a = ReconfigArgs::parse(Scale::Ci, &[]).unwrap();
+        assert_eq!(a.spec.ops, 4_000);
+        assert!(a.spec.home_cached);
+        assert!(a.spec.machine.rel.is_some(), "rel framing on, so relmode swaps are real");
+        assert_eq!(a.spec.reconfig.len(), 5, "default script covers every transition family");
+        assert_eq!(a.scenario, "scan");
+    }
+
+    #[test]
+    fn reconfig_rejects_bad_flags_and_bad_scripts_loudly() {
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--wat", "3"])).is_err());
+        // a flag another bench owns is still unknown here
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--mix", "60:20:20"])).is_err());
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--reconfig", "reslice:0@10us"])).is_err());
+        // shape-validated before anything runs: rejoin with nothing drained
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--reconfig", "rejoin@10us"])).is_err());
+        // live reconfiguration is single-cell for now
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--nodes", "2"])).is_err());
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--scenario", "nope"])).is_err());
+        assert!(ReconfigArgs::parse(Scale::Ci, &s(&["--reconfig"])).is_err(), "needs a value");
     }
 
     #[test]

@@ -1,1 +1,4 @@
 pub mod cli;
+pub mod spec;
+
+pub use spec::{FieldMeta, SystemSpec};

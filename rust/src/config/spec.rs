@@ -1,0 +1,641 @@
+//! `SystemSpec` — the one typed, validated description of a simulated
+//! system.
+//!
+//! Before this existed, every host composed its shape from loose
+//! parts: an [`OpenLoopConfig`] here, a slice count passed alongside
+//! it there, a [`FabricConfig`] wrapping both, and per-bench CLI
+//! parsers each re-implementing `--slices/--rate/--seed`. The spec
+//! centralizes that: one struct owns the full shape (machine wiring,
+//! directory slicing, traffic, fabric topology, scripted failures and
+//! reconfigurations), validates it as a whole ([`SystemSpec::validate`]
+//! walks the reconfig script with shape tracking, so `drain:1` after
+//! `reslice:1` is rejected *before* the run), and derives the
+//! plane-level configs from it (`From<&SystemSpec>` for
+//! [`OpenLoopConfig`], [`DcsConfig`], [`FabricConfig`] — the old
+//! structs stay as internal plumbing).
+//!
+//! The control plane ([`crate::ctrl`]) holds a `SystemSpec` as the
+//! canonical "current shape" and mutates *it* on every live
+//! transition; hosts re-derive the plane configs from the mutated
+//! spec, so there is exactly one place the running shape lives.
+//!
+//! [`SystemSpec::FIELDS`] is the CLI metadata table: every common
+//! flag's spelling, metavar, help line, and apply function in one
+//! place, so `eci bench` subcommands parse shared flags identically
+//! ([`SystemSpec::apply_flag`]).
+
+use crate::ctrl::{ReconfigEvent, ReconfigKind};
+use crate::dcs::DcsConfig;
+use crate::fabric::{FabricConfig, KillSpec};
+use crate::machine::MachineConfig;
+use crate::sim::time::Duration;
+use crate::workload::arrival::ArrivalKind;
+use crate::workload::openloop::OpenLoopConfig;
+
+/// The full shape of one simulated system. Not `Copy` (it carries the
+/// reconfig script), but cheap to clone.
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    /// Node wiring: link credits/framing, slice pipeline, control-path
+    /// latency, FPGA DRAM, home-cache budget, reliability.
+    pub machine: MachineConfig,
+    /// Directory slices per node.
+    pub slices: usize,
+    /// Slices carry partitions of the machine's home-cache budget.
+    pub home_cached: bool,
+    /// One slice is administratively drained; its range re-homes
+    /// across the survivors (normally set mid-run by `drain:`).
+    pub dead_slice: Option<usize>,
+    /// Offered arrival rate, operations/second (per node).
+    pub rate_per_s: f64,
+    pub arrivals: ArrivalKind,
+    /// Total arrivals to generate (fabric-wide when `nodes > 1`).
+    pub ops: u64,
+    /// Caching client (loadgen-style shared LLC) instead of the
+    /// streaming default.
+    pub cached_client: bool,
+    /// Client-side processing between dependent chase hops.
+    pub hop_think: Duration,
+    /// KVS engine-pool size backing chase resolution at the home.
+    pub kvs_engines: usize,
+    pub seed: u64,
+    /// Fabric width (1 = a single two-socket cell).
+    pub nodes: u8,
+    /// Threshold-based home migration across the fabric.
+    pub migrate: bool,
+    /// Remote requests from one node before its lines migrate toward
+    /// it.
+    pub threshold: u32,
+    /// Watchdog bound on whole-node failure detection.
+    pub detect: Duration,
+    /// Scripted whole-node failure.
+    pub kill: Option<KillSpec>,
+    /// Scripted live reconfigurations (`--reconfig`, repeatable).
+    pub reconfig: Vec<ReconfigEvent>,
+}
+
+impl Default for SystemSpec {
+    fn default() -> SystemSpec {
+        let ol = OpenLoopConfig::default();
+        SystemSpec {
+            machine: ol.machine,
+            slices: 2,
+            home_cached: false,
+            dead_slice: None,
+            rate_per_s: ol.rate_per_s,
+            arrivals: ol.arrivals,
+            ops: ol.ops,
+            cached_client: ol.cached,
+            hop_think: ol.hop_think,
+            kvs_engines: ol.kvs_engines,
+            seed: ol.seed,
+            nodes: 1,
+            migrate: false,
+            threshold: 8,
+            detect: Duration::from_us(40),
+            kill: None,
+            reconfig: Vec::new(),
+        }
+    }
+}
+
+impl SystemSpec {
+    // -- presets ------------------------------------------------------------
+
+    /// The paper's memory-node appliance: one directory slice, no
+    /// caches anywhere, streaming client.
+    pub fn memory_node() -> SystemSpec {
+        SystemSpec { slices: 1, ..SystemSpec::default() }
+    }
+
+    /// A cached sliced directory: `n` slices sharing the machine's
+    /// home-cache budget.
+    pub fn dcs_cached(n: usize) -> SystemSpec {
+        SystemSpec { slices: n, home_cached: true, ..SystemSpec::default() }
+    }
+
+    /// An `n`-node coherence fabric of default cells.
+    pub fn fabric(n: u8) -> SystemSpec {
+        SystemSpec { nodes: n, ..SystemSpec::default() }
+    }
+
+    /// Wrap an existing openloop config + slice count as a spec — the
+    /// bridge hosts use to seed the control plane's "current shape"
+    /// from their legacy constructor arguments.
+    pub fn of_openloop(cfg: OpenLoopConfig, slices: usize) -> SystemSpec {
+        SystemSpec {
+            machine: cfg.machine,
+            slices,
+            home_cached: cfg.home_cached,
+            rate_per_s: cfg.rate_per_s,
+            arrivals: cfg.arrivals,
+            ops: cfg.ops,
+            cached_client: cfg.cached,
+            hop_think: cfg.hop_think,
+            kvs_engines: cfg.kvs_engines,
+            seed: cfg.seed,
+            ..SystemSpec::default()
+        }
+    }
+
+    // -- derived plane configs ----------------------------------------------
+
+    pub fn openloop_config(&self) -> OpenLoopConfig {
+        OpenLoopConfig {
+            rate_per_s: self.rate_per_s,
+            arrivals: self.arrivals,
+            ops: self.ops,
+            cached: self.cached_client,
+            home_cached: self.home_cached,
+            hop_think: self.hop_think,
+            kvs_engines: self.kvs_engines,
+            seed: self.seed,
+            machine: self.machine,
+        }
+    }
+
+    pub fn dcs_config(&self) -> DcsConfig {
+        let base = if self.home_cached {
+            self.machine.dcs_cached_config(self.slices)
+        } else {
+            self.machine.dcs_config(self.slices)
+        };
+        base.with_dead_slice(self.dead_slice)
+    }
+
+    pub fn fabric_config(&self) -> FabricConfig {
+        FabricConfig {
+            nodes: self.nodes,
+            migrate: self.migrate,
+            threshold: self.threshold,
+            slices: self.slices,
+            kill: self.kill,
+            detect: self.detect,
+            abort_inject: false,
+            ol: self.openloop_config(),
+        }
+    }
+
+    // -- validation ---------------------------------------------------------
+
+    /// Whole-spec validation, including a shape-tracking walk of the
+    /// reconfig script: each scripted transition is checked against
+    /// the shape the *preceding* transitions leave behind.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.slices == 0 {
+            return Err("need at least one directory slice".into());
+        }
+        if self.ops == 0 {
+            return Err("need at least one arrival".into());
+        }
+        if !(self.rate_per_s > 0.0) {
+            return Err(format!("offered rate must be positive, got {}", self.rate_per_s));
+        }
+        if self.kvs_engines == 0 {
+            return Err("need at least one KVS engine".into());
+        }
+        if self.nodes == 0 {
+            return Err("need at least one node".into());
+        }
+        if let Some(k) = &self.kill {
+            if k.node as usize >= self.nodes as usize {
+                return Err(format!("--kill node {} out of range (nodes {})", k.node, self.nodes));
+            }
+        }
+        if self.nodes > 1 && !self.reconfig.is_empty() {
+            return Err("live reconfiguration is single-cell for now (nodes must be 1)".into());
+        }
+
+        // shape-tracking walk of the reconfig script
+        let mut cur_slices = self.slices;
+        let mut cur_dead = self.dead_slice;
+        let mut cur_cache =
+            if self.home_cached { self.machine.home_cache_bytes } else { 0 };
+        let ways = self.machine.home_cache_ways;
+        let check_cache = |bytes: usize, slices: usize| -> Result<(), String> {
+            if bytes > 0 && DcsConfig::max_cached_slices(bytes, ways) < slices {
+                return Err(format!(
+                    "home-cache budget {bytes}B is too small for {slices} cached slices"
+                ));
+            }
+            Ok(())
+        };
+        check_cache(cur_cache, cur_slices).map_err(|e| format!("initial shape: {e}"))?;
+        if let Some(d) = cur_dead {
+            if cur_slices < 2 || d >= cur_slices {
+                return Err(format!("dead slice {d} out of range ({cur_slices} slices)"));
+            }
+        }
+        let mut sorted: Vec<&ReconfigEvent> = self.reconfig.iter().collect();
+        sorted.sort_by_key(|e| e.at);
+        for ev in sorted {
+            let at = ev.at.ps() / 1_000_000;
+            match ev.kind {
+                ReconfigKind::Reslice(n) => {
+                    if n == 0 {
+                        return Err(format!("reslice target must be >= 1 (at {at}us)"));
+                    }
+                    if cur_dead.is_some() {
+                        return Err(format!(
+                            "reslice at {at}us while a slice is drained (rejoin first)"
+                        ));
+                    }
+                    check_cache(cur_cache, n)
+                        .map_err(|e| format!("reslice at {at}us: {e}"))?;
+                    cur_slices = n;
+                }
+                ReconfigKind::CacheResize(b) => {
+                    check_cache(b, cur_slices)
+                        .map_err(|e| format!("cache resize at {at}us: {e}"))?;
+                    cur_cache = b;
+                }
+                ReconfigKind::RelSwap(_) => {} // no-op on an unreliable link, by design
+                ReconfigKind::Drain(d) => {
+                    if cur_dead.is_some() {
+                        return Err(format!("drain at {at}us with a slice already drained"));
+                    }
+                    if cur_slices < 2 {
+                        return Err(format!("drain at {at}us would drain the only slice"));
+                    }
+                    if d >= cur_slices {
+                        return Err(format!(
+                            "drain target {d} out of range at {at}us ({cur_slices} slices)"
+                        ));
+                    }
+                    cur_dead = Some(d);
+                }
+                ReconfigKind::Rejoin => {
+                    if cur_dead.is_none() {
+                        return Err(format!("rejoin at {at}us with no slice drained"));
+                    }
+                    cur_dead = None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- CLI metadata -------------------------------------------------------
+
+    /// Apply one CLI flag through the metadata table. `None` = the
+    /// flag is not a spec field (the caller handles it); `Some(res)` =
+    /// it is, with the parse outcome.
+    pub fn apply_flag(&mut self, flag: &str, value: &str) -> Option<Result<(), String>> {
+        SystemSpec::FIELDS.iter().find(|f| f.flag == flag).map(|f| (f.apply)(self, value))
+    }
+
+    /// Flags in [`SystemSpec::FIELDS`] that take a value (the CLI
+    /// needs to know whether to consume the next argv token).
+    pub fn flag_takes_value(flag: &str) -> Option<bool> {
+        SystemSpec::FIELDS.iter().find(|f| f.flag == flag).map(|f| f.value.is_some())
+    }
+
+    /// One metadata row per shared CLI flag: spelling, metavar, help,
+    /// and the parse-and-apply function. Every `eci bench` subcommand
+    /// resolves these flags through this table, so `--slices`,
+    /// `--rate`, `--seed` (and friends) parse identically everywhere.
+    pub const FIELDS: &'static [FieldMeta] = &[
+        FieldMeta {
+            flag: "--slices",
+            value: Some("N"),
+            help: "directory slices per node",
+            apply: |s, v| {
+                s.slices = parse_usize(v, "--slices")?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--rate",
+            value: Some("OPS_PER_S"),
+            help: "offered arrival rate (accepts 4e6, 4M, 500k)",
+            apply: |s, v| {
+                s.rate_per_s = parse_rate(v)?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--ops",
+            value: Some("N"),
+            help: "total arrivals to generate",
+            apply: |s, v| {
+                s.ops = parse_u64(v, "--ops")?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--seed",
+            value: Some("SEED"),
+            help: "master RNG seed (decimal or 0x hex)",
+            apply: |s, v| {
+                s.seed = parse_seed(v)?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--nodes",
+            value: Some("N"),
+            help: "fabric width (1 = single cell)",
+            apply: |s, v| {
+                let n = parse_usize(v, "--nodes")?;
+                s.nodes = u8::try_from(n).map_err(|_| format!("--nodes {n} too large"))?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--cached",
+            value: None,
+            help: "caching client (default: streaming)",
+            apply: |s, _| {
+                s.cached_client = true;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--home-cached",
+            value: None,
+            help: "slices carry partitions of the home-cache budget",
+            apply: |s, _| {
+                s.home_cached = true;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--deterministic",
+            value: None,
+            help: "deterministic arrivals (default: Poisson)",
+            apply: |s, _| {
+                s.arrivals = ArrivalKind::Deterministic;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--kvs",
+            value: Some("N"),
+            help: "KVS engine-pool size",
+            apply: |s, v| {
+                s.kvs_engines = parse_usize(v, "--kvs")?;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--migrate",
+            value: None,
+            help: "threshold-based home migration (fabric)",
+            apply: |s, _| {
+                s.migrate = true;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--threshold",
+            value: Some("N"),
+            help: "remote requests before a line migrates",
+            apply: |s, v| {
+                s.threshold = parse_usize(v, "--threshold")? as u32;
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--kill",
+            value: Some("NODE@US"),
+            help: "scripted whole-node failure (fabric)",
+            apply: |s, v| {
+                s.kill = Some(parse_kill(v)?);
+                Ok(())
+            },
+        },
+        FieldMeta {
+            flag: "--reconfig",
+            value: Some("KIND[:ARG]@US"),
+            help: "scripted live reconfiguration (repeatable; \
+                   reslice:4@200us, cache:64k@50us, relmode:sr@300us, \
+                   drain:1@120us, rejoin@240us)",
+            apply: |s, v| {
+                s.reconfig.extend(ReconfigEvent::parse_list(v)?);
+                Ok(())
+            },
+        },
+    ];
+}
+
+impl From<&SystemSpec> for OpenLoopConfig {
+    fn from(s: &SystemSpec) -> OpenLoopConfig {
+        s.openloop_config()
+    }
+}
+
+impl From<&SystemSpec> for DcsConfig {
+    fn from(s: &SystemSpec) -> DcsConfig {
+        s.dcs_config()
+    }
+}
+
+impl From<&SystemSpec> for FabricConfig {
+    fn from(s: &SystemSpec) -> FabricConfig {
+        s.fabric_config()
+    }
+}
+
+/// One shared CLI flag: spelling, metavar (None = bare boolean), help
+/// line, and the parse-and-apply function.
+pub struct FieldMeta {
+    pub flag: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+    pub apply: fn(&mut SystemSpec, &str) -> Result<(), String>,
+}
+
+// -- shared scalar parsers (the single home of each spelling) ---------------
+
+fn parse_usize(v: &str, flag: &str) -> Result<usize, String> {
+    v.parse().map_err(|_| format!("{flag} wants a non-negative integer, got `{v}`"))
+}
+
+fn parse_u64(v: &str, flag: &str) -> Result<u64, String> {
+    v.parse().map_err(|_| format!("{flag} wants a non-negative integer, got `{v}`"))
+}
+
+/// Seeds accept decimal or `0x` hex.
+pub fn parse_seed(v: &str) -> Result<u64, String> {
+    let r = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse(),
+    };
+    r.map_err(|_| format!("--seed wants decimal or 0x hex, got `{v}`"))
+}
+
+/// Rates accept plain/scientific floats plus `k`/`M`/`G` suffixes.
+pub fn parse_rate(v: &str) -> Result<f64, String> {
+    let (digits, mul) = match v.as_bytes().last() {
+        Some(b'k') | Some(b'K') => (&v[..v.len() - 1], 1e3),
+        Some(b'm') | Some(b'M') => (&v[..v.len() - 1], 1e6),
+        Some(b'g') | Some(b'G') => (&v[..v.len() - 1], 1e9),
+        _ => (v, 1.0),
+    };
+    let r: f64 =
+        digits.parse().map_err(|_| format!("--rate wants a rate (4e6, 4M, 500k), got `{v}`"))?;
+    if !(r > 0.0) {
+        return Err(format!("--rate must be positive, got `{v}`"));
+    }
+    Ok(r * mul)
+}
+
+/// `--kill NODE@US`.
+pub fn parse_kill(v: &str) -> Result<KillSpec, String> {
+    let (node, at) =
+        v.split_once('@').ok_or_else(|| format!("--kill wants NODE@US, got `{v}`"))?;
+    let node: u8 = node.parse().map_err(|_| format!("bad --kill node `{node}`"))?;
+    let at = at.strip_suffix("us").unwrap_or(at);
+    let us: u64 = at.parse().map_err(|_| format!("bad --kill time `{at}`"))?;
+    Ok(KillSpec { node, at: Duration::from_us(us) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_presets_validate() {
+        SystemSpec::default().validate().unwrap();
+        SystemSpec::memory_node().validate().unwrap();
+        SystemSpec::dcs_cached(4).validate().unwrap();
+        SystemSpec::fabric(3).validate().unwrap();
+        assert_eq!(SystemSpec::memory_node().slices, 1);
+        assert!(SystemSpec::dcs_cached(4).home_cached);
+        assert_eq!(SystemSpec::fabric(3).nodes, 3);
+    }
+
+    #[test]
+    fn derived_configs_mirror_the_spec() {
+        let mut s = SystemSpec::dcs_cached(4);
+        s.rate_per_s = 7e6;
+        s.ops = 123;
+        s.seed = 0xBEEF;
+        let ol: OpenLoopConfig = (&s).into();
+        assert_eq!(ol.rate_per_s, 7e6);
+        assert_eq!(ol.ops, 123);
+        assert_eq!(ol.seed, 0xBEEF);
+        assert!(ol.home_cached);
+        let d: DcsConfig = (&s).into();
+        assert_eq!(d.slices, 4);
+        assert!(d.home_cached());
+        assert_eq!(d.dead_slice, None);
+        let f: FabricConfig = (&s).into();
+        assert_eq!(f.slices, 4);
+        assert_eq!(f.ol.ops, 123);
+
+        s.dead_slice = Some(1);
+        assert_eq!(s.dcs_config().dead_slice, Some(1));
+    }
+
+    #[test]
+    fn of_openloop_round_trips() {
+        let mut cfg = OpenLoopConfig::default();
+        cfg.rate_per_s = 9e6;
+        cfg.cached = true;
+        let s = SystemSpec::of_openloop(cfg, 3);
+        assert_eq!(s.slices, 3);
+        assert!(s.cached_client);
+        let back = s.openloop_config();
+        assert_eq!(back.rate_per_s, cfg.rate_per_s);
+        assert_eq!(back.ops, cfg.ops);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.cached, cfg.cached);
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let bad = |f: fn(&mut SystemSpec)| {
+            let mut s = SystemSpec::default();
+            f(&mut s);
+            s.validate().unwrap_err()
+        };
+        assert!(bad(|s| s.slices = 0).contains("slice"));
+        assert!(bad(|s| s.ops = 0).contains("arrival"));
+        assert!(bad(|s| s.rate_per_s = 0.0).contains("rate"));
+        assert!(bad(|s| s.kvs_engines = 0).contains("KVS"));
+        assert!(bad(|s| s.nodes = 0).contains("node"));
+        assert!(bad(|s| s.dead_slice = Some(5)).contains("out of range"));
+        assert!(bad(|s| {
+            s.nodes = 2;
+            s.kill = Some(KillSpec { node: 2, at: Duration::from_us(1) });
+        })
+        .contains("out of range"));
+    }
+
+    #[test]
+    fn validate_walks_the_reconfig_script_with_shape_tracking() {
+        let script = |specs: &[&str]| -> Result<(), String> {
+            let mut s = SystemSpec::default();
+            for p in specs {
+                s.reconfig.push(ReconfigEvent::parse(p).unwrap());
+            }
+            s.validate()
+        };
+        script(&["reslice:4@200us", "rejoin@400us"]).unwrap_err(); // rejoin w/o drain
+        script(&["drain:1@100us", "drain:0@200us"]).unwrap_err(); // double drain
+        script(&["drain:1@100us", "reslice:4@200us"]).unwrap_err(); // reslice while drained
+        script(&["reslice:1@100us", "drain:0@200us"]).unwrap_err(); // drain the only slice
+        script(&["drain:3@100us"]).unwrap_err(); // target out of range
+        script(&["drain:1@100us", "rejoin@200us", "reslice:4@300us", "drain:3@400us"])
+            .unwrap();
+        // events validate in *time* order even if scripted out of order
+        script(&["rejoin@400us", "drain:1@100us"]).unwrap();
+    }
+
+    #[test]
+    fn validate_checks_cache_budget_against_slice_count() {
+        let mut s = SystemSpec::dcs_cached(2);
+        s.machine.home_cache_bytes = 1024; // 8 lines: too few for per-slice sets
+        assert!(s.validate().is_err());
+
+        let mut s = SystemSpec::default();
+        s.reconfig.push(ReconfigEvent::parse("cache:1k@100us").unwrap());
+        assert!(s.validate().is_err(), "scripted resize must respect the budget floor");
+        let mut s = SystemSpec::default();
+        s.reconfig.push(ReconfigEvent::parse("cache:0@100us").unwrap());
+        s.validate().unwrap(); // 0 = caches off, always fine
+    }
+
+    #[test]
+    fn apply_flag_covers_the_shared_surface() {
+        let mut s = SystemSpec::default();
+        s.apply_flag("--slices", "4").unwrap().unwrap();
+        s.apply_flag("--rate", "2M").unwrap().unwrap();
+        s.apply_flag("--ops", "5000").unwrap().unwrap();
+        s.apply_flag("--seed", "0xAB").unwrap().unwrap();
+        s.apply_flag("--cached", "").unwrap().unwrap();
+        s.apply_flag("--home-cached", "").unwrap().unwrap();
+        s.apply_flag("--deterministic", "").unwrap().unwrap();
+        s.apply_flag("--reconfig", "reslice:4@200us").unwrap().unwrap();
+        s.apply_flag("--reconfig", "rejoin@400us").unwrap().unwrap();
+        assert_eq!(s.slices, 4);
+        assert_eq!(s.rate_per_s, 2e6);
+        assert_eq!(s.ops, 5000);
+        assert_eq!(s.seed, 0xAB);
+        assert!(s.cached_client && s.home_cached);
+        assert_eq!(s.arrivals, ArrivalKind::Deterministic);
+        assert_eq!(s.reconfig.len(), 2, "--reconfig is repeatable");
+
+        assert!(s.apply_flag("--no-such-flag", "1").is_none());
+        assert!(s.apply_flag("--slices", "wat").unwrap().is_err());
+        assert_eq!(SystemSpec::flag_takes_value("--slices"), Some(true));
+        assert_eq!(SystemSpec::flag_takes_value("--cached"), Some(false));
+        assert_eq!(SystemSpec::flag_takes_value("--bogus"), None);
+    }
+
+    #[test]
+    fn scalar_parsers_accept_the_documented_spellings() {
+        assert_eq!(parse_seed("0xEC1").unwrap(), 0xEC1);
+        assert_eq!(parse_seed("17").unwrap(), 17);
+        assert!(parse_seed("xyz").is_err());
+        assert_eq!(parse_rate("4e6").unwrap(), 4e6);
+        assert_eq!(parse_rate("500k").unwrap(), 5e5);
+        assert_eq!(parse_rate("2M").unwrap(), 2e6);
+        assert!(parse_rate("-1").is_err());
+        let k = parse_kill("1@250us").unwrap();
+        assert_eq!(k.node, 1);
+        assert_eq!(k.at, Duration::from_us(250));
+        assert!(parse_kill("250us").is_err());
+    }
+}

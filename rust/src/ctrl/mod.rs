@@ -1,0 +1,433 @@
+//! ctrl — the runtime control plane: scripted live reconfiguration of
+//! a running cell behind one quiesce → handoff → resume protocol.
+//!
+//! The data plane (directory slices, link framing, reliability) is
+//! built for steady state; every shape change — how many slices carve
+//! the address space, how much home-cache budget they share, which
+//! reliability mode the link runs — historically meant a fresh run.
+//! This module makes those changes *online*: a [`ReconfigEvent`] fires
+//! at a scripted sim time (`--reconfig reslice:4@200us`, composable
+//! like `--kill`), and the host executes it in three phases common to
+//! every transition kind:
+//!
+//! 1. **Quiesce** — new arrivals park (the arrival *clock* keeps
+//!    ticking, so the arrival process and every RNG draw match the
+//!    unreconfigured run bit-for-bit); in-flight operations drain until
+//!    the data plane is provably quiet: no queued or unacked frames,
+//!    no pending directory work, no waiters.
+//! 2. **Handoff** — the one canonical shape object (a
+//!    [`SystemSpec`]) is mutated, and state moves to the new shape:
+//!    re-slicing and drain/rejoin export every tracked line from the
+//!    retired directory and import it into the new one
+//!    (state-exact, residency included — `Dcs::export_line` /
+//!    `Dcs::import_line`); a cache resize funnels no-longer-resident
+//!    victims through their owning slice's writeback path; a rel-mode
+//!    swap flips both directions' sender/receiver in place
+//!    (sequence numbers and RTT estimators continue).
+//! 3. **Resume** — parked arrivals re-enter FIFO with their *original*
+//!    arrival timestamps, so the quiesce stall shows up in the latency
+//!    tail exactly as it would on real hardware (the `fig_reconfig`
+//!    dip), and the next scripted transition (if one fired mid-quiesce)
+//!    begins.
+//!
+//! The gate, enforced by `tests/reconfig.rs`: transitions are
+//! **lossless**. A run that re-slices, drains and rejoins, resizes, or
+//! swaps reliability mid-flight settles to the *same* digest
+//! (per-line directory state + backing bytes) as a run that never
+//! reconfigured — with and without link faults.
+
+use std::collections::VecDeque;
+
+use crate::config::SystemSpec;
+use crate::sim::stats::Counters;
+use crate::sim::time::{Duration, Time};
+use crate::transport::rel::RelMode;
+
+/// One shape change. The operand is the *target* shape, not a delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigKind {
+    /// Re-slice the directory to this many slices: the address
+    /// interleave changes, so every tracked line hands off to its new
+    /// owning slice.
+    Reslice(usize),
+    /// Resize the machine-wide home-cache budget to this many bytes
+    /// (0 turns the slice caches off). Shrinks funnel evicted dirty
+    /// copies through the owning slice's writeback path.
+    CacheResize(usize),
+    /// Swap the link-reliability mode on both directions. Sequence
+    /// numbers and RTT estimators continue across the swap; the
+    /// receiver's replay-dedup state migrates.
+    RelSwap(RelMode),
+    /// Drain one slice: it goes dark, its address range re-homes
+    /// deterministically across the survivors.
+    Drain(usize),
+    /// Rejoin the previously drained slice: its range hands back.
+    Rejoin,
+}
+
+impl ReconfigKind {
+    /// Stable spelling, matching what [`ReconfigEvent::parse`] accepts.
+    pub fn label(&self) -> String {
+        match self {
+            ReconfigKind::Reslice(n) => format!("reslice:{n}"),
+            ReconfigKind::CacheResize(b) => format!("cache:{b}"),
+            ReconfigKind::RelSwap(m) => format!("relmode:{}", m.name()),
+            ReconfigKind::Drain(s) => format!("drain:{s}"),
+            ReconfigKind::Rejoin => "rejoin".to_string(),
+        }
+    }
+}
+
+/// A scripted transition: *what* changes and *when* it starts
+/// quiescing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReconfigEvent {
+    pub at: Duration,
+    pub kind: ReconfigKind,
+}
+
+/// Parse a byte count with an optional binary suffix (`64k`, `1m`).
+fn parse_bytes(s: &str) -> Result<usize, String> {
+    let (digits, mul) = match s.as_bytes().last() {
+        Some(b'k') | Some(b'K') => (&s[..s.len() - 1], 1024),
+        Some(b'm') | Some(b'M') => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    let n: usize =
+        digits.parse().map_err(|_| format!("bad byte count `{s}` (want N, Nk, or Nm)"))?;
+    Ok(n * mul)
+}
+
+impl ReconfigEvent {
+    /// Parse a CLI spec: `<kind>[:<arg>]@<time>us`.
+    ///
+    /// Kinds: `reslice:<n>`, `cache:<bytes>[k|m]`, `relmode:<gbn|sr>`
+    /// (alias `rel:`), `drain:<slice>`, `rejoin`. The time is
+    /// microseconds of sim time, with an optional `us` suffix —
+    /// `reslice:4@200us`, `rejoin@350`.
+    pub fn parse(s: &str) -> Result<ReconfigEvent, String> {
+        let (lhs, rhs) = s
+            .split_once('@')
+            .ok_or_else(|| format!("reconfig spec `{s}` needs `@<time>us`"))?;
+        let digits = rhs.strip_suffix("us").unwrap_or(rhs);
+        let us: u64 = digits
+            .parse()
+            .map_err(|_| format!("bad reconfig time `{rhs}` (want microseconds, e.g. 200us)"))?;
+        let kind = match lhs.split_once(':') {
+            None => match lhs {
+                "rejoin" => ReconfigKind::Rejoin,
+                _ => return Err(format!("unknown reconfig kind `{lhs}` (it takes no `:arg`?)")),
+            },
+            Some(("reslice", n)) => {
+                let n: usize =
+                    n.parse().map_err(|_| format!("bad slice count in `{s}`"))?;
+                if n == 0 {
+                    return Err(format!("reslice target must be >= 1 in `{s}`"));
+                }
+                ReconfigKind::Reslice(n)
+            }
+            Some(("cache", b)) => ReconfigKind::CacheResize(parse_bytes(b)?),
+            Some(("relmode", m)) | Some(("rel", m)) => ReconfigKind::RelSwap(
+                RelMode::parse(m).ok_or_else(|| format!("bad rel mode `{m}` (gbn|sr)"))?,
+            ),
+            Some(("drain", d)) => ReconfigKind::Drain(
+                d.parse().map_err(|_| format!("bad drain slice in `{s}`"))?,
+            ),
+            Some((k, _)) => {
+                return Err(format!(
+                    "unknown reconfig kind `{k}` (reslice|cache|relmode|drain|rejoin)"
+                ))
+            }
+        };
+        Ok(ReconfigEvent { at: Duration::from_us(us), kind })
+    }
+
+    /// Parse a comma-separated list of specs (the repeatable
+    /// `--reconfig` flag also accepts one comma-joined value).
+    pub fn parse_list(s: &str) -> Result<Vec<ReconfigEvent>, String> {
+        s.split(',').filter(|p| !p.is_empty()).map(ReconfigEvent::parse).collect()
+    }
+}
+
+/// Control-plane phase, surfaced as the `ctrl.phase` gauge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Data plane running free.
+    Idle,
+    /// A transition is draining the data plane; arrivals park.
+    Quiescing,
+}
+
+/// What one executed (or skipped) transition did, for the report and
+/// the `fig_reconfig` table.
+#[derive(Clone, Debug)]
+pub struct TransitionRecord {
+    pub kind: ReconfigKind,
+    /// Scripted start time.
+    pub scheduled: Duration,
+    /// When quiescing actually began (>= `scheduled` if an earlier
+    /// transition was still in flight).
+    pub quiesce_start: Time,
+    /// When the data plane was quiet and the shape handoff executed.
+    pub handoff_at: Time,
+    /// When parked arrivals were released.
+    pub resume_at: Time,
+    /// Arrivals parked across the quiesce window.
+    pub parked: u64,
+    /// Directory lines exported/imported by the handoff.
+    pub moved_lines: u64,
+    /// Cached copies evicted (written back if dirty) because the new
+    /// shape had no room for them.
+    pub cache_victims: u64,
+    /// The event fired after the run's completion target and did
+    /// nothing.
+    pub skipped: bool,
+}
+
+impl TransitionRecord {
+    pub fn begun(ev: ReconfigEvent, now: Time) -> TransitionRecord {
+        TransitionRecord {
+            kind: ev.kind,
+            scheduled: ev.at,
+            quiesce_start: now,
+            handoff_at: now,
+            resume_at: now,
+            parked: 0,
+            moved_lines: 0,
+            cache_victims: 0,
+            skipped: false,
+        }
+    }
+
+    pub fn skipped_at(ev: ReconfigEvent, now: Time) -> TransitionRecord {
+        TransitionRecord { skipped: true, ..TransitionRecord::begun(ev, now) }
+    }
+
+    /// Quiesce-begin to handoff, µs.
+    pub fn quiesce_us(&self) -> f64 {
+        self.handoff_at.since(self.quiesce_start).ps() as f64 / 1e6
+    }
+
+    /// Quiesce-begin to resume — the window arrivals spent parked, µs.
+    pub fn stall_us(&self) -> f64 {
+        self.resume_at.since(self.quiesce_start).ps() as f64 / 1e6
+    }
+}
+
+/// The control plane a host carries while running: the scripted
+/// transitions, the canonical current shape, and the execution state.
+///
+/// The controller owns no RNG and schedules nothing itself — the host
+/// drives it from its own event loop, so runs without a controller are
+/// bit-identical to runs before the control plane existed.
+pub struct Controller {
+    /// The canonical "current shape". Every handoff mutates this spec
+    /// first ([`Controller::apply`]), then the host re-derives the
+    /// plane-level configs from it — there is exactly one place the
+    /// running shape lives.
+    pub spec: SystemSpec,
+    /// Scripted transitions, sorted by fire time (stable: equal times
+    /// keep script order).
+    pub events: Vec<ReconfigEvent>,
+    pub phase: Phase,
+    /// Index (into `events`) of the transition currently quiescing.
+    pub active: Option<usize>,
+    /// Transitions that fired while another was quiescing; they begin,
+    /// in order, at the in-flight one's resume.
+    pub backlog: VecDeque<usize>,
+    /// Execution-order records, one per fired event.
+    pub records: Vec<TransitionRecord>,
+    /// Counters absorbed from retired directory instances across
+    /// rebuilds — counter continuity for telemetry and the final
+    /// report.
+    pub carried: Counters,
+}
+
+impl Controller {
+    pub fn new(spec: SystemSpec, mut events: Vec<ReconfigEvent>) -> Controller {
+        events.sort_by_key(|e| e.at);
+        Controller {
+            spec,
+            events,
+            phase: Phase::Idle,
+            active: None,
+            backlog: VecDeque::new(),
+            records: Vec::new(),
+            carried: Counters::new(),
+        }
+    }
+
+    pub fn quiescing(&self) -> bool {
+        self.phase == Phase::Quiescing
+    }
+
+    /// Mutate the canonical shape for one transition. Pure spec
+    /// surgery — the host applies the derived configs to the data
+    /// plane afterwards.
+    pub fn apply(&mut self, kind: ReconfigKind) {
+        match kind {
+            ReconfigKind::Reslice(n) => {
+                assert!(
+                    self.spec.dead_slice.is_none(),
+                    "re-slice with a drained slice outstanding (rejoin first)"
+                );
+                self.spec.slices = n;
+            }
+            ReconfigKind::CacheResize(bytes) => {
+                self.spec.machine.home_cache_bytes = bytes;
+                self.spec.home_cached = bytes > 0;
+            }
+            ReconfigKind::RelSwap(m) => {
+                if let Some(rc) = &mut self.spec.machine.rel {
+                    rc.mode = m;
+                }
+            }
+            ReconfigKind::Drain(s) => {
+                assert!(self.spec.dead_slice.is_none(), "drain with a slice already drained");
+                self.spec.dead_slice = Some(s);
+            }
+            ReconfigKind::Rejoin => {
+                assert!(self.spec.dead_slice.is_some(), "rejoin with no slice drained");
+                self.spec.dead_slice = None;
+            }
+        }
+    }
+
+    /// Fold a retired data-plane's counters into the carried set.
+    pub fn absorb(&mut self, retired: &Counters) {
+        for (k, v) in retired.iter() {
+            self.carried.add(k, v);
+        }
+    }
+}
+
+/// What the control plane did over one run.
+#[derive(Clone, Debug, Default)]
+pub struct ReconfigReport {
+    /// Executed/skipped transitions, in execution order.
+    pub transitions: Vec<TransitionRecord>,
+    /// `(completion sim-time ps, latency ps)` per completed operation,
+    /// in completion order — the `fig_reconfig` dip timeline.
+    pub timeline: Vec<(u64, u64)>,
+}
+
+impl ReconfigReport {
+    /// Transitions that actually executed (fired before the completion
+    /// target).
+    pub fn executed(&self) -> usize {
+        self.transitions.iter().filter(|t| !t.skipped).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_time_spelling() {
+        let e = ReconfigEvent::parse("reslice:4@200us").unwrap();
+        assert_eq!(e.at, Duration::from_us(200));
+        assert_eq!(e.kind, ReconfigKind::Reslice(4));
+
+        let e = ReconfigEvent::parse("cache:64k@50").unwrap();
+        assert_eq!(e.at, Duration::from_us(50));
+        assert_eq!(e.kind, ReconfigKind::CacheResize(64 * 1024));
+        assert_eq!(
+            ReconfigEvent::parse("cache:1m@1us").unwrap().kind,
+            ReconfigKind::CacheResize(1024 * 1024)
+        );
+        assert_eq!(
+            ReconfigEvent::parse("cache:0@1us").unwrap().kind,
+            ReconfigKind::CacheResize(0)
+        );
+
+        let e = ReconfigEvent::parse("relmode:sr@300us").unwrap();
+        assert_eq!(e.kind, ReconfigKind::RelSwap(RelMode::SelectiveRepeat));
+        // `rel:` alias, and RelMode's own alias table
+        let e = ReconfigEvent::parse("rel:go-back-n@300us").unwrap();
+        assert_eq!(e.kind, ReconfigKind::RelSwap(RelMode::GoBackN));
+
+        assert_eq!(
+            ReconfigEvent::parse("drain:1@120us").unwrap().kind,
+            ReconfigKind::Drain(1)
+        );
+        assert_eq!(ReconfigEvent::parse("rejoin@240us").unwrap().kind, ReconfigKind::Rejoin);
+    }
+
+    #[test]
+    fn rejects_malformed_specs_loudly() {
+        for bad in [
+            "reslice:4",          // no time
+            "reslice@200us",      // no target
+            "reslice:0@200us",    // zero slices
+            "reslice:x@200us",    // non-numeric
+            "cache:64q@200us",    // bad suffix
+            "relmode:tcp@200us",  // unknown mode
+            "warp:9@200us",       // unknown kind
+            "rejoin:1@200us",     // rejoin takes no arg
+            "drain:one@200us",    // non-numeric slice
+            "reslice:4@fastus",   // bad time
+        ] {
+            assert!(ReconfigEvent::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn label_round_trips_through_parse() {
+        for spec in ["reslice:4", "cache:65536", "relmode:sr", "drain:1", "rejoin"] {
+            let e = ReconfigEvent::parse(&format!("{spec}@10us")).unwrap();
+            assert_eq!(e.kind.label(), *spec);
+            let again = ReconfigEvent::parse(&format!("{}@10us", e.kind.label())).unwrap();
+            assert_eq!(again.kind, e.kind);
+        }
+    }
+
+    #[test]
+    fn parse_list_splits_on_commas() {
+        let evs = ReconfigEvent::parse_list("reslice:4@200us,rejoin@400us").unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, ReconfigKind::Reslice(4));
+        assert_eq!(evs[1].kind, ReconfigKind::Rejoin);
+        assert!(ReconfigEvent::parse_list("reslice:4@200us,bogus").is_err());
+    }
+
+    #[test]
+    fn controller_sorts_events_and_applies_shape_surgery() {
+        let spec = SystemSpec::dcs_cached(2);
+        let evs = vec![
+            ReconfigEvent::parse("rejoin@400us").unwrap(),
+            ReconfigEvent::parse("drain:1@100us").unwrap(),
+        ];
+        let mut c = Controller::new(spec, evs);
+        assert_eq!(c.events[0].kind, ReconfigKind::Drain(1), "events sort by time");
+        assert_eq!(c.phase, Phase::Idle);
+        assert!(!c.quiescing());
+
+        c.apply(ReconfigKind::Drain(1));
+        assert_eq!(c.spec.dead_slice, Some(1));
+        c.apply(ReconfigKind::Rejoin);
+        assert_eq!(c.spec.dead_slice, None);
+        c.apply(ReconfigKind::Reslice(4));
+        assert_eq!(c.spec.slices, 4);
+        c.apply(ReconfigKind::CacheResize(0));
+        assert!(!c.spec.home_cached);
+        assert_eq!(c.spec.machine.home_cache_bytes, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rejoin with no slice drained")]
+    fn rejoin_without_drain_panics() {
+        let mut c = Controller::new(SystemSpec::default(), Vec::new());
+        c.apply(ReconfigKind::Rejoin);
+    }
+
+    #[test]
+    fn carried_counters_accumulate_across_absorbs() {
+        let mut c = Controller::new(SystemSpec::default(), Vec::new());
+        let mut a = Counters::new();
+        a.add("served", 10);
+        c.absorb(&a);
+        c.absorb(&a);
+        assert_eq!(c.carried.get("served"), 20);
+    }
+}

@@ -89,6 +89,11 @@ pub struct DcsConfig {
     /// delivery may coalesce into a single VC-disciplined hand-off
     /// (1 = batching off). See [`IngressBatcher`].
     pub batch: usize,
+    /// A slice that has been drained dark by the control plane
+    /// (`--reconfig drain:<s>@..`): it owns no lines and receives no
+    /// traffic; its natural address range spreads deterministically over
+    /// the survivors (see [`Dcs::slice_of`]). `None` = all slices live.
+    pub dead_slice: Option<usize>,
 }
 
 impl DcsConfig {
@@ -100,6 +105,7 @@ impl DcsConfig {
             cache_bytes: 0,
             cache_ways: DEFAULT_HOME_CACHE_WAYS,
             batch: 1,
+            dead_slice: None,
         }
     }
 
@@ -127,6 +133,17 @@ impl DcsConfig {
     pub fn with_batch(mut self, batch: usize) -> DcsConfig {
         assert!(batch >= 1, "batch size must be >= 1");
         self.batch = batch;
+        self
+    }
+
+    /// Mark slice `dead` drained dark (its address range re-homes across
+    /// the survivors), or clear the mark with `None`.
+    pub fn with_dead_slice(mut self, dead: Option<usize>) -> DcsConfig {
+        if let Some(d) = dead {
+            assert!(self.slices >= 2, "draining the only slice");
+            assert!(d < self.slices, "bad dead slice {d}/{}", self.slices);
+        }
+        self.dead_slice = dead;
         self
     }
 
@@ -252,19 +269,32 @@ impl Dcs {
     /// configuration is cached).
     pub fn new(cfg: DcsConfig, rules: HomeRules, policy: HomePolicy) -> Dcs {
         assert!(cfg.slices > 0);
+        if let Some(d) = cfg.dead_slice {
+            assert!(cfg.slices >= 2 && d < cfg.slices, "bad dead slice {d}/{}", cfg.slices);
+        }
         let slices = (0..cfg.slices)
-            .map(|i| Slice {
-                home: HomeAgent::new_slice(
+            .map(|i| {
+                let mut home = HomeAgent::new_slice(
                     rules.clone(),
                     policy,
                     cfg.slice_cache(),
                     i as u64,
                     cfg.slices as u64,
-                ),
-                mux: VcMux::new(Node::Remote),
-                arrivals: Default::default(),
-                busy_until: Time::ZERO,
-                stats: SliceStats::new(),
+                );
+                // survivors adopt their share of the drained range; the
+                // dead slice keeps its natural view (it sees no traffic)
+                if let Some(d) = cfg.dead_slice {
+                    if i != d {
+                        home.set_dead_sibling(Some(d as u64));
+                    }
+                }
+                Slice {
+                    home,
+                    mux: VcMux::new(Node::Remote),
+                    arrivals: Default::default(),
+                    busy_until: Time::ZERO,
+                    stats: SliceStats::new(),
+                }
             })
             .collect();
         Dcs {
@@ -298,9 +328,20 @@ impl Dcs {
     }
 
     /// Address-interleaved slice mapping (2 slices = even/odd lines).
+    /// While a slice is drained ([`DcsConfig::dead_slice`]) its natural
+    /// lines redirect to a survivor: line `a` with natural owner `d`
+    /// re-homes to `(d + 1 + (a/n) % (n-1)) % n` — never `d` itself, and
+    /// spread evenly. The formula is mirrored by [`HomeAgent::owns`] so
+    /// per-agent ownership asserts stay exact.
     #[inline]
     pub fn slice_of(&self, addr: LineAddr) -> usize {
-        (addr.0 % self.slices.len() as u64) as usize
+        let n = self.slices.len() as u64;
+        let natural = addr.0 % n;
+        if self.cfg.dead_slice == Some(natural as usize) {
+            let k = (addr.0 / n) % (n - 1);
+            return ((natural + 1 + k) % n) as usize;
+        }
+        natural as usize
     }
 
     // -- timed path ---------------------------------------------------------
@@ -411,6 +452,31 @@ impl Dcs {
     pub fn adopt_remote(&mut self, addr: LineAddr, view: crate::proto::spec::RemoteView, holders: u32) {
         let s = self.slice_of(addr);
         self.slices[s].home.adopt_remote(addr, view, holders);
+    }
+
+    /// Live-reconfiguration handoff, export side: pack up everything the
+    /// owning slice knows about `addr` (directory word, grant epochs,
+    /// cached copy) so a differently-shaped [`Dcs`] can
+    /// [`Dcs::import_line`] it verbatim. `None` when nothing is tracked.
+    /// Only legal on a quiesced data plane — see
+    /// [`HomeAgent::export_line`].
+    pub fn export_line(&mut self, addr: LineAddr) -> Option<crate::agents::home::ExportedLine> {
+        let s = self.slice_of(addr);
+        self.slices[s].home.export_line(addr)
+    }
+
+    /// Live-reconfiguration handoff, import side: install an exported
+    /// line on the owning slice of *this* shape (cache victims follow
+    /// the usual freshest-copy writeback rule). Returns the number of
+    /// cache victims displaced — see [`HomeAgent::import_line`].
+    pub fn import_line(
+        &mut self,
+        addr: LineAddr,
+        ex: crate::agents::home::ExportedLine,
+        ram: &mut MemStore,
+    ) -> u64 {
+        let s = self.slice_of(addr);
+        self.slices[s].home.import_line(addr, ex, ram)
     }
 
     /// Total queued messages across slices (staged ingress frames
@@ -760,6 +826,118 @@ mod tests {
         assert_eq!(dcs.batcher().deliveries, 2);
         assert_eq!(dcs.batcher().max_batch, 3);
         assert_eq!(dcs.slice_stats(0).served, 4);
+    }
+
+    #[test]
+    fn reslice_handoff_preserves_state_and_served_bytes() {
+        // build state on a 2-slice cached dcs, hand every line off to a
+        // 4-slice dcs, and check the directory words and served bytes
+        // survive the re-interleave exactly
+        let mut old = Dcs::with_reference_rules(DcsConfig::cached(2));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            ram.write_line(LineAddr(i), &[i as u8; 128]);
+        }
+        let mut id = 0u32;
+        for addr in 0..16u64 {
+            old.on_message_sync(
+                Message::coh_req(ReqId(id), Node::Remote, CohOp::ReadShared, LineAddr(addr)),
+                &mut ram,
+            );
+            id += 1;
+        }
+        let before: Vec<_> = (0..16u64).map(|a| old.state_of(LineAddr(a))).collect();
+        let mut new = Dcs::with_reference_rules(DcsConfig::cached(4));
+        let mut moved = 0;
+        for addr in 0..16u64 {
+            if let Some(ex) = old.export_line(LineAddr(addr)) {
+                new.import_line(LineAddr(addr), ex, &mut ram);
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, 16, "every granted line carries state");
+        assert_eq!(old.tracked_lines(), 0, "the old shape forgets everything");
+        for addr in 0..16u64 {
+            assert_eq!(new.state_of(LineAddr(addr)), before[addr as usize], "line {addr}");
+        }
+        // the imported shape is live protocol state: releases and repeat
+        // reads land on the new owning slices without complaint
+        for addr in 0..16u64 {
+            new.on_message_sync(
+                Message::coh_req(ReqId(id), Node::Remote, CohOp::VolDowngradeI, LineAddr(addr)),
+                &mut ram,
+            );
+            id += 1;
+            let fx = new.on_message_sync(
+                Message::coh_req(ReqId(id), Node::Remote, CohOp::ReadShared, LineAddr(addr)),
+                &mut ram,
+            );
+            id += 1;
+            let HomeEffect::Respond { msg, .. } = &fx[0] else { panic!("{fx:?}") };
+            assert_eq!(msg.payload.as_ref().unwrap()[0], addr as u8);
+        }
+    }
+
+    #[test]
+    fn dead_slice_redirects_to_survivors_and_rejoin_restores() {
+        let dcs = Dcs::with_reference_rules(DcsConfig::new(4).with_dead_slice(Some(1)));
+        let mut spread = [0usize; 4];
+        for addr in 0..4096u64 {
+            let s = dcs.slice_of(LineAddr(addr));
+            assert_ne!(s, 1, "drained slice must own nothing");
+            if addr % 4 == 1 {
+                spread[s] += 1;
+            } else {
+                assert_eq!(s, (addr % 4) as usize);
+            }
+        }
+        for s in [0usize, 2, 3] {
+            assert!(spread[s] >= 300, "survivor {s} got {}", spread[s]);
+        }
+        // rejoin = a dcs without the mark: natural interleave again
+        let dcs = Dcs::with_reference_rules(DcsConfig::new(4));
+        for addr in 0..64u64 {
+            assert_eq!(dcs.slice_of(LineAddr(addr)), (addr % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn drain_handoff_routes_orphans_through_survivor_slices() {
+        // 2-slice dcs with state on both parities; drain slice 1 and hand
+        // its lines to the survivors of the SAME slice count
+        let mut old = Dcs::with_reference_rules(DcsConfig::new(2));
+        let mut ram = MemStore::new(LineAddr(0), 1 << 20);
+        for i in 0..64 {
+            ram.write_line(LineAddr(i), &[i as u8; 128]);
+        }
+        for addr in 0..8u64 {
+            old.on_message_sync(
+                Message::coh_req(ReqId(addr as u32), Node::Remote, CohOp::ReadShared, LineAddr(addr)),
+                &mut ram,
+            );
+        }
+        let mut drained = Dcs::with_reference_rules(DcsConfig::new(2).with_dead_slice(Some(1)));
+        for addr in 0..8u64 {
+            if let Some(ex) = old.export_line(LineAddr(addr)) {
+                drained.import_line(LineAddr(addr), ex, &mut ram);
+            }
+        }
+        assert_eq!(drained.tracked_lines(), 8);
+        // odd lines now live on slice 0 (the only survivor of 2)
+        for addr in [1u64, 3, 5, 7] {
+            assert_eq!(drained.slice_of(LineAddr(addr)), 0);
+            assert_eq!(drained.state_of(LineAddr(addr)).view, RemoteView::S);
+        }
+        // and traffic for them is serviced by the survivor
+        let mut t = Time(0);
+        drained.enqueue(t, Message::coh_req(ReqId(99), Node::Remote, CohOp::VolDowngradeI, LineAddr(3)));
+        let Some(SliceService::Done(_, _, a, _)) = drained.service_one(0, t, &mut ram) else {
+            panic!("survivor must service the orphan")
+        };
+        assert_eq!(a, LineAddr(3));
+        t = t + drained.cfg.slice_proc;
+        assert!(drained.service_one(0, t, &mut ram).is_none());
+        assert_eq!(drained.state_of(LineAddr(3)), HomeSt::idle());
     }
 
     #[test]

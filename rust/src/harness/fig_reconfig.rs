@@ -1,0 +1,309 @@
+//! fig_reconfig — live-reconfiguration cost: what does an online shape
+//! change do to the latency tail, and for how long?
+//!
+//! One open-loop run executes a scripted transition sequence (re-slice,
+//! cache resize, rel-mode swap, drain/rejoin — see [`crate::ctrl`]);
+//! the per-completion timeline the control plane records is bucketed
+//! into windows and each transition gets a **p99 dip summary**: the
+//! steady-state p99 before quiescing began, the worst windowed p99
+//! after it, the depth of that excursion, and how long the tail stayed
+//! elevated. Parked-arrival counts and handoff volume (lines moved,
+//! cache victims) land in the same row, so the table reads as "this
+//! transition cost this much tail for this long".
+
+use crate::ctrl::{ReconfigEvent, ReconfigKind, TransitionRecord};
+use crate::sim::time::Duration;
+use crate::transport::rel::{RelConfig, RelMode};
+use crate::workload::openloop::{OpenLoop, OpenLoopConfig};
+use crate::workload::scenario::Scenario;
+
+use super::common::{ResultTable, Scale};
+
+/// The p99 excursion around one transition, measured on bucketed
+/// completion windows.
+#[derive(Clone, Copy, Debug)]
+pub struct DipSummary {
+    /// p99 of completions *before* quiescing began, ns.
+    pub pre_p99_ns: f64,
+    /// Worst windowed p99 at/after quiesce begin, ns.
+    pub peak_p99_ns: f64,
+    /// `100 * (peak/pre - 1)`, floored at 0.
+    pub depth_pct: f64,
+    /// How long the windowed p99 stayed above `1.2 * pre`, µs
+    /// (contiguous from the quiesce-begin window).
+    pub dip_us: f64,
+}
+
+/// p99 of a sample slice (ps in, ps out).
+fn p99(samples: &mut Vec<u64>) -> Option<u64> {
+    if samples.is_empty() {
+        return None;
+    }
+    samples.sort_unstable();
+    let idx = (samples.len() * 99 / 100).min(samples.len() - 1);
+    Some(samples[idx])
+}
+
+/// Bucket the control plane's completion timeline and summarize the
+/// p99 excursion around `t`. `None` when there is no pre-transition
+/// steady state to compare against.
+pub fn dip_summary(timeline: &[(u64, u64)], t: &TransitionRecord) -> Option<DipSummary> {
+    if timeline.len() < 2 {
+        return None;
+    }
+    let begin = t.quiesce_start.ps();
+    let mut pre: Vec<u64> =
+        timeline.iter().filter(|&&(at, _)| at < begin).map(|&(_, l)| l).collect();
+    let pre_p99 = p99(&mut pre)? as f64;
+    let first = timeline[0].0;
+    let last = timeline.last().expect("len >= 2").0;
+    let span = (last - first).max(1);
+    // >=1µs windows, at most 32 of them across the run (the same
+    // bucketing fig_fabric uses for the failover goodput dip)
+    let w = (span / 32).max(1_000_000);
+    let n_buckets = (span / w + 1) as usize;
+    let mut buckets: Vec<Vec<u64>> = vec![Vec::new(); n_buckets];
+    for &(at, lat) in timeline {
+        buckets[((at - first) / w) as usize].push(lat);
+    }
+    let first_post = ((begin.saturating_sub(first)) / w) as usize;
+    let mut peak = 0u64;
+    let mut dip_buckets = 0usize;
+    let mut still_elevated = true;
+    for (i, b) in buckets.iter_mut().enumerate().skip(first_post) {
+        let Some(p) = p99(b) else {
+            // an empty window right after quiesce begin *is* the stall
+            if i > first_post && still_elevated {
+                dip_buckets += 1;
+            }
+            continue;
+        };
+        peak = peak.max(p);
+        if still_elevated && p as f64 > 1.2 * pre_p99 {
+            dip_buckets += 1;
+        } else if i > first_post {
+            still_elevated = false;
+        }
+    }
+    let peak = (peak as f64).max(pre_p99);
+    Some(DipSummary {
+        pre_p99_ns: pre_p99 / 1e3,
+        peak_p99_ns: peak / 1e3,
+        depth_pct: (100.0 * (peak / pre_p99 - 1.0)).max(0.0),
+        dip_us: dip_buckets as f64 * w as f64 * 1e-6,
+    })
+}
+
+/// One transition's row.
+#[derive(Clone, Debug)]
+pub struct ReconfigPoint {
+    /// `reslice:4`, `cache:0`, `relmode:sr`, `drain:1`, `rejoin`.
+    pub kind: String,
+    /// Scripted fire time, µs.
+    pub at_us: f64,
+    pub quiesce_us: f64,
+    pub stall_us: f64,
+    pub parked: u64,
+    pub moved_lines: u64,
+    pub cache_victims: u64,
+    pub skipped: bool,
+    pub dip: Option<DipSummary>,
+}
+
+/// The figure: one scripted run, one row per transition.
+#[derive(Clone, Debug)]
+pub struct FigReconfig {
+    pub scenario: String,
+    pub completed: u64,
+    pub points: Vec<ReconfigPoint>,
+}
+
+/// Run `events` against one open-loop cell and summarize each
+/// transition's cost.
+pub fn run_custom(
+    cfg: OpenLoopConfig,
+    scenario: &Scenario,
+    slices: usize,
+    events: Vec<ReconfigEvent>,
+) -> FigReconfig {
+    let r = OpenLoop::new(cfg, scenario, slices).with_reconfig(events).run();
+    let rc = r.reconfig.expect("run_custom requires a non-empty script");
+    let points = rc
+        .transitions
+        .iter()
+        .map(|t| ReconfigPoint {
+            kind: t.kind.label(),
+            at_us: t.scheduled.ps() as f64 * 1e-6,
+            quiesce_us: t.quiesce_us(),
+            stall_us: t.stall_us(),
+            parked: t.parked,
+            moved_lines: t.moved_lines,
+            cache_victims: t.cache_victims,
+            skipped: t.skipped,
+            dip: if t.skipped { None } else { dip_summary(&rc.timeline, t) },
+        })
+        .collect();
+    FigReconfig { scenario: scenario.name.clone(), completed: r.completed, points }
+}
+
+pub fn ops_for(scale: Scale) -> u64 {
+    match scale {
+        Scale::Ci => 4_000,
+        Scale::Default => 12_000,
+        Scale::Paper => 48_000,
+    }
+}
+
+/// The default transition script for a run of `ops` arrivals at
+/// `rate`/s: all four transition families — re-slice 2→4, drain +
+/// rejoin, a rel-mode swap, and a cache resize — spaced evenly across
+/// the expected makespan. The `reconfig` CLI bench falls back to this
+/// when no `--reconfig` script is given.
+pub fn default_script(ops: u64, rate: f64) -> Vec<ReconfigEvent> {
+    let t_us = (ops as f64 / rate) * 1e6;
+    let at = |frac: f64| Duration::from_us((t_us * frac) as u64);
+    vec![
+        ReconfigEvent { at: at(0.15), kind: ReconfigKind::Reslice(4) },
+        ReconfigEvent { at: at(0.30), kind: ReconfigKind::Drain(1) },
+        ReconfigEvent { at: at(0.45), kind: ReconfigKind::Rejoin },
+        ReconfigEvent { at: at(0.60), kind: ReconfigKind::RelSwap(RelMode::SelectiveRepeat) },
+        ReconfigEvent { at: at(0.75), kind: ReconfigKind::CacheResize(0) },
+    ]
+}
+
+/// The default figure: a cached 2-slice cell under streaming scan
+/// traffic on a clean reliable link, walked through the
+/// [`default_script`] transition sequence.
+pub fn run(scale: Scale) -> FigReconfig {
+    let ops = ops_for(scale);
+    let rate = 6e6;
+    let mut cfg = OpenLoopConfig { rate_per_s: rate, ops, home_cached: true, ..Default::default() };
+    // reliable framing with zero injected faults: the rel-mode swap is
+    // a real swap, and the link stays loss-free
+    cfg.machine.rel = Some(RelConfig::from_ber(0.0, 0x5EED));
+    let scenario = Scenario::preset("scan", 1 << 10, 0.99).expect("scan preset");
+    run_custom(cfg, &scenario, 2, default_script(ops, rate))
+}
+
+pub fn render(f: &FigReconfig) -> ResultTable {
+    let mut t = ResultTable::new(
+        &format!(
+            "Live reconfiguration: p99 dip depth and duration, scenario `{}` ({} ops)",
+            f.scenario, f.completed
+        ),
+        &[
+            "transition",
+            "at_us",
+            "quiesce_us",
+            "stall_us",
+            "parked",
+            "moved_lines",
+            "cache_victims",
+            "pre_p99_ns",
+            "peak_p99_ns",
+            "dip_depth_pct",
+            "dip_us",
+        ],
+    );
+    for p in &f.points {
+        let (pre, peak, depth, dip) = match &p.dip {
+            Some(d) => (
+                format!("{:.1}", d.pre_p99_ns),
+                format!("{:.1}", d.peak_p99_ns),
+                format!("{:.1}", d.depth_pct),
+                format!("{:.2}", d.dip_us),
+            ),
+            None => {
+                let s = if p.skipped { "skipped" } else { "-" }.to_string();
+                (s.clone(), s.clone(), s.clone(), s)
+            }
+        };
+        t.row(vec![
+            p.kind.clone(),
+            format!("{:.1}", p.at_us),
+            format!("{:.2}", p.quiesce_us),
+            format!("{:.2}", p.stall_us),
+            p.parked.to_string(),
+            p.moved_lines.to_string(),
+            p.cache_victims.to_string(),
+            pre,
+            peak,
+            depth,
+            dip,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::Time;
+
+    fn rec(begin_ps: u64) -> TransitionRecord {
+        TransitionRecord::begun(
+            ReconfigEvent { at: Duration(begin_ps), kind: ReconfigKind::Reslice(4) },
+            Time(begin_ps),
+        )
+    }
+
+    #[test]
+    fn dip_summary_measures_a_synthetic_excursion() {
+        // one completion per µs: 1000 ps latency in steady state, a
+        // 50_000 ps spike over [100µs, 110µs)
+        let mut tl: Vec<(u64, u64)> = Vec::new();
+        for us in 0..200u64 {
+            let lat = if (100..110).contains(&us) { 50_000 } else { 1_000 };
+            tl.push((us * 1_000_000, lat));
+        }
+        let d = dip_summary(&tl, &rec(100 * 1_000_000)).expect("pre window exists");
+        assert!((d.pre_p99_ns - 1.0).abs() < 1e-9, "steady p99 1ns, got {}", d.pre_p99_ns);
+        assert!((d.peak_p99_ns - 50.0).abs() < 1e-9, "spike p99 50ns, got {}", d.peak_p99_ns);
+        assert!(d.depth_pct > 1_000.0, "{}", d.depth_pct);
+        assert!(d.dip_us >= 5.0 && d.dip_us <= 20.0, "{}", d.dip_us);
+    }
+
+    #[test]
+    fn dip_summary_needs_a_pre_window() {
+        let tl: Vec<(u64, u64)> = (0..50).map(|i| (i * 1_000_000, 1_000)).collect();
+        assert!(dip_summary(&tl, &rec(0)).is_none(), "transition at t=0 has no baseline");
+        assert!(dip_summary(&[], &rec(10)).is_none());
+    }
+
+    #[test]
+    fn figure_runs_the_full_transition_family_end_to_end() {
+        let mut cfg = OpenLoopConfig {
+            rate_per_s: 6e6,
+            ops: 2_500,
+            home_cached: true,
+            ..Default::default()
+        };
+        cfg.machine.rel = Some(RelConfig::from_ber(0.0, 0x5EED));
+        let events = vec![
+            ReconfigEvent { at: Duration::from_us(100), kind: ReconfigKind::Reslice(4) },
+            ReconfigEvent { at: Duration::from_us(200), kind: ReconfigKind::Drain(1) },
+            ReconfigEvent { at: Duration::from_us(280), kind: ReconfigKind::Rejoin },
+            ReconfigEvent {
+                at: Duration::from_us(340),
+                kind: ReconfigKind::RelSwap(RelMode::SelectiveRepeat),
+            },
+        ];
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let f = run_custom(cfg, &sc, 2, events);
+        assert_eq!(f.completed, 2_500);
+        assert_eq!(f.points.len(), 4);
+        assert!(f.points.iter().all(|p| !p.skipped));
+        assert!(f.points.iter().any(|p| p.parked > 0), "{:?}", f.points);
+        assert!(
+            f.points.iter().filter(|p| p.kind != "relmode:sr").all(|p| p.moved_lines > 0),
+            "cached-directory handoffs move lines: {:?}",
+            f.points
+        );
+        let table = render(&f);
+        assert_eq!(table.rows.len(), 4);
+        let md = table.to_markdown();
+        assert!(md.contains("reslice:4") && md.contains("drain:1") && md.contains("rejoin"));
+        // every executed transition has a measurable dip summary
+        assert!(f.points.iter().all(|p| p.dip.is_some()), "{:?}", f.points);
+    }
+}

@@ -11,6 +11,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig_goodput;
 pub mod fig_loadcurve;
+pub mod fig_reconfig;
 pub mod fig_retx;
 pub mod fig_throughput;
 pub mod selfperf;

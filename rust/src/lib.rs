@@ -24,6 +24,7 @@
 pub mod agents;
 pub mod anyhow;
 pub mod config;
+pub mod ctrl;
 pub mod dcs;
 pub mod fabric;
 pub mod harness;

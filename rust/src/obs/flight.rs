@@ -60,6 +60,18 @@ pub enum FlightKind {
     Rehome,
     /// Grant epoch reclaimed from a dead node (a = line, b = dead node).
     EpochReclaim,
+    /// Live reconfiguration began quiescing (a = transition ordinal,
+    /// b = arrivals parked so far).
+    ReconfigQuiesce,
+    /// Quiesced; the shape handoff executed (a = transition ordinal,
+    /// b = lines moved).
+    ReconfigHandoff,
+    /// Parked traffic released; the data plane resumed
+    /// (a = transition ordinal, b = arrivals released).
+    ReconfigResume,
+    /// A scripted reconfig event fired after the run's completion
+    /// target and was skipped (a = transition ordinal).
+    ReconfigSkipped,
 }
 
 impl FlightKind {
@@ -80,6 +92,10 @@ impl FlightKind {
             FlightKind::DeclareDead => "declare_dead",
             FlightKind::Rehome => "rehome",
             FlightKind::EpochReclaim => "epoch_reclaim",
+            FlightKind::ReconfigQuiesce => "reconfig_quiesce",
+            FlightKind::ReconfigHandoff => "reconfig_handoff",
+            FlightKind::ReconfigResume => "reconfig_resume",
+            FlightKind::ReconfigSkipped => "reconfig_skipped",
         }
     }
 }

@@ -69,6 +69,24 @@ impl Registry {
     #[inline(always)]
     fn guard(&mut self, _name: &str) {}
 
+    /// Retire every metric whose name starts with `prefix` — counters,
+    /// gauges, delta baselines, and (in debug builds) the current
+    /// refresh epoch's duplicate-name guard. A topology change (live
+    /// re-slicing, slice drain) legitimately re-registers per-slice
+    /// names like `dcs.slice3.depth` within the same refresh epoch it
+    /// retires the old shape's names in; without this the dotted-name
+    /// guard reports a false collision. Returns how many counters +
+    /// gauges were removed.
+    pub fn retire_prefix(&mut self, prefix: &str) -> usize {
+        let before = self.counters.len() + self.gauges.len();
+        self.counters.retain(|k, _| !k.starts_with(prefix));
+        self.gauges.retain(|k, _| !k.starts_with(prefix));
+        self.last.retain(|k, _| !k.starts_with(prefix));
+        #[cfg(debug_assertions)]
+        self.fresh.retain(|k| !k.starts_with(prefix));
+        before - (self.counters.len() + self.gauges.len())
+    }
+
     /// Set a counter to its current absolute value.
     pub fn set(&mut self, name: &str, v: u64) {
         self.guard(name);
@@ -258,6 +276,44 @@ mod tests {
         r.begin_refresh();
         r.set("node1.dcs.ops", 1);
         r.set("node1.dcs.ops", 2); // two sources on one dotted name
+    }
+
+    #[test]
+    fn retire_prefix_allows_reregistration_within_one_refresh() {
+        // a live topology change retires the old shape's per-slice names
+        // and re-registers the new shape's inside the SAME refresh epoch
+        let mut r = Registry::new();
+        r.begin_refresh();
+        r.set("dcs.slice0_served", 10);
+        r.gauge("dcs.slice1.depth", 3.0);
+        r.set("workload.issued", 7);
+        let _ = r.deltas(); // baseline the old names
+        let removed = r.retire_prefix("dcs.");
+        assert_eq!(removed, 2);
+        assert_eq!(r.get("dcs.slice0_served"), 0, "retired counters read as absent");
+        // re-registering a retired name in the same epoch must NOT trip
+        // the dotted-name guard (this is the re-slicing regression)
+        r.set("dcs.slice0_served", 0);
+        r.gauge("dcs.slice3.depth", 1.0);
+        assert_eq!(r.get("dcs.slice0_served"), 0);
+        assert_eq!(r.get("workload.issued"), 7, "other namespaces untouched");
+        // the delta baseline was retired too: the re-registered counter
+        // reports from scratch, not against the old shape's baseline
+        r.begin_refresh();
+        r.set("dcs.slice0_served", 4);
+        let d = r.deltas();
+        assert!(d.contains(&("dcs.slice0_served".to_string(), 4)), "{d:?}");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "duplicate metric registration")]
+    fn duplicate_without_retire_still_panics_after_a_retire_elsewhere() {
+        let mut r = Registry::new();
+        r.begin_refresh();
+        r.set("dcs.pending", 1);
+        let _ = r.retire_prefix("fabric."); // unrelated retire
+        r.set("dcs.pending", 2); // still a collision
     }
 
     #[test]

@@ -285,6 +285,26 @@ impl FramedIngress {
         self.link.rel_has_ack_debt()
     }
 
+    /// Live rel-mode swap (control plane): retarget this direction's
+    /// sequencing/replay discipline. No-op on a loss-free link (no rel
+    /// layer to retarget); asserts the replay window is drained — the
+    /// quiesce that precedes every reconfiguration guarantees it.
+    /// Returns `true` when a rel layer was actually swapped.
+    pub fn set_rel_mode(&mut self, mode: super::rel::RelMode) -> bool {
+        match self.link.rel.as_mut() {
+            Some(r) => {
+                r.set_mode(mode);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The retransmission discipline in force (rel links).
+    pub fn rel_mode(&self) -> Option<super::rel::RelMode> {
+        self.link.rel.as_ref().map(|r| r.mode)
+    }
+
     /// Frames queued at the transmitter right now.
     pub fn queued(&self) -> usize {
         self.link.mux.pending()

@@ -191,6 +191,16 @@ impl RelState {
         }
     }
 
+    /// Swap both halves of this direction to a new retransmission
+    /// discipline (live reconfiguration). Asserts the replay window is
+    /// fully drained — see [`RelTx::set_mode`] / [`RelRx::set_mode`];
+    /// sequence spaces, RTT estimators, and fault state all persist.
+    pub fn set_mode(&mut self, mode: RelMode) {
+        self.tx.set_mode(mode);
+        self.rx.set_mode(mode);
+        self.mode = mode;
+    }
+
     pub fn stats(&self) -> RelStats {
         RelStats::of(self)
     }

@@ -139,6 +139,18 @@ impl RelTx {
         self.mode
     }
 
+    /// Swap the retransmission discipline in place (live
+    /// reconfiguration). Only legal with the replay machinery empty —
+    /// every frame acked, nothing queued for resend — which the control
+    /// plane's quiesce guarantees. Sequence numbers continue across the
+    /// swap, so the peer's receiver state stays valid; RTT estimators
+    /// persist (the channel did not change, only the replay discipline).
+    pub fn set_mode(&mut self, mode: RelMode) {
+        assert_eq!(self.unacked_total(), 0, "rel-mode swap with unacked frames in replay");
+        assert!(!self.has_resend(), "rel-mode swap with queued retransmissions");
+        self.mode = mode;
+    }
+
     /// Frame a fresh message on `vc` at `now`, parking a pristine copy
     /// in the VC's replay buffer until it is cumulatively acked.
     pub fn frame(&mut self, now: Time, vc: VcId, msg: Message) -> Frame {
@@ -602,6 +614,20 @@ impl RelRx {
         None
     }
 
+    /// Receiver half of the live rel-mode swap: only legal with the
+    /// out-of-order buffer empty (the quiesced link has no holes).
+    /// `expected` continues, so in-flight sequence spaces stay aligned;
+    /// stale nack-dedup state is cleared — every hole it described has
+    /// drained.
+    pub fn set_mode(&mut self, mode: RelMode) {
+        assert_eq!(self.buffered(), 0, "rel-mode swap with out-of-order frames buffered");
+        self.mode = mode;
+        self.nacked = [None; NUM_VCS];
+        for s in self.nacked_sr.iter_mut() {
+            s.clear();
+        }
+    }
+
     pub fn expected_seq(&self, vc: VcId) -> Seq {
         self.expected[vc.0 as usize]
     }
@@ -963,6 +989,45 @@ mod tests {
                 assert_eq!(rx.buffered(), 0, "no stragglers in the OOO buffer");
             }
         }
+    }
+
+    #[test]
+    fn mode_swap_on_drained_pair_keeps_sequences_continuous() {
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        let mut rx = RelRx::new(RelMode::GoBackN, 64);
+        // traffic in GBN, fully acked
+        for i in 0..3u64 {
+            let f = tx.frame(T0, VcId(0), req(i, 2 * i));
+            assert_eq!(rx1(&mut rx, f).0.len(), 1);
+        }
+        tx.on_control(T0, Control::VcAck(VcId(0), 2));
+        assert_eq!(tx.unacked_total(), 0);
+        // live swap to selective repeat on the drained pair
+        tx.set_mode(RelMode::SelectiveRepeat);
+        rx.set_mode(RelMode::SelectiveRepeat);
+        assert_eq!(tx.mode(), RelMode::SelectiveRepeat);
+        // sequences continue where GBN left off, and the new discipline
+        // is live: a hole buffers + sacks instead of dropping the tail
+        let _d = tx.frame(T0, VcId(0), req(3, 6));
+        let e = tx.frame(T0, VcId(0), req(4, 8));
+        assert_eq!(e.seq, 4, "sequence space must survive the swap");
+        let (del, ctl) = rx1(&mut rx, e);
+        assert!(del.is_empty(), "SR holds out-of-order frames");
+        assert_eq!(ctl, vec![Control::VcSack(VcId(0), 4), Control::VcNack(VcId(0), 3)]);
+        tx.on_control(T0, Control::VcSack(VcId(0), 4));
+        tx.on_control(T0, Control::VcNack(VcId(0), 3));
+        let rd = tx.next_resend().unwrap();
+        assert_eq!(rd.seq, 3, "only the hole replays after the swap");
+        let (del, _) = rx1(&mut rx, rd);
+        assert_eq!(del.iter().map(|f| f.seq).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rel-mode swap with unacked frames")]
+    fn mode_swap_refuses_an_undrained_sender() {
+        let mut tx = RelTx::new(RelMode::GoBackN);
+        tx.frame(T0, VcId(0), req(0, 0));
+        tx.set_mode(RelMode::SelectiveRepeat);
     }
 
     /// The headline economics: under the same loss pattern, selective

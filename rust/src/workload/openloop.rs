@@ -29,14 +29,18 @@
 //! one where Zipf skew stresses single-slice hot spots instead of the
 //! client cache.
 
+use std::collections::VecDeque;
+
 use crate::agents::cache::Cache;
 use crate::agents::dram::{Dram, MemStore};
 use crate::agents::home::HomeEffect;
 use crate::agents::remote::{Access, RemoteAgent, RemoteEffect};
-use crate::dcs::{Dcs, SliceService};
+use crate::config::SystemSpec;
+use crate::ctrl::{Controller, Phase, ReconfigEvent, ReconfigKind, ReconfigReport, TransitionRecord};
+use crate::dcs::{Dcs, DcsConfig, SliceService};
 use crate::machine::MachineConfig;
 use crate::memctl::KvsService;
-use crate::obs::{Obs, ObsConfig, ObsReport, Registry, Stage};
+use crate::obs::{FlightKind, Obs, ObsConfig, ObsReport, Registry, Stage};
 use crate::proto::messages::{LineAddr, Message, MsgKind};
 use crate::proto::spec::generate_remote;
 use crate::proto::states::Node;
@@ -159,6 +163,12 @@ pub struct OpenLoopReport {
     /// Simulator events dispatched (host-side cost; the selfperf metric).
     pub events: u64,
     pub counters: Counters,
+    /// What the control plane did (present iff the run was configured
+    /// with [`OpenLoop::with_reconfig`]). Per-slice report columns
+    /// (`per_slice_served`, occupancy) cover the *final* shape only —
+    /// counters absorbed from retired directory instances live in
+    /// `counters`.
+    pub reconfig: Option<ReconfigReport>,
 }
 
 impl OpenLoopReport {
@@ -222,6 +232,11 @@ enum Ev {
     /// loss.
     AckFlushHome,
     AckFlushCpu,
+    /// Scripted reconfiguration event `i` fires (begin quiescing).
+    Reconfig(u32),
+    /// Control-plane poll: is the data plane quiet yet? Re-armed every
+    /// `ctrl_latency` until it is, then the handoff executes.
+    QuiesceCheck,
 }
 
 /// The open-loop engine: arrival clock + scenario samplers on one side,
@@ -283,6 +298,15 @@ pub struct OpenLoop {
     /// outside [`OpenLoopConfig`] — the config stays `Copy` and
     /// digest-relevant; obs never perturbs the simulation.
     obs: Option<Obs>,
+    /// The control plane (present iff scripted reconfigurations were
+    /// attached). Owns the canonical current-shape [`SystemSpec`].
+    ctrl: Option<Box<Controller>>,
+    /// Arrivals parked while quiescing, FIFO, stamped with their
+    /// *original* arrival times (the quiesce stall is real latency).
+    parked: VecDeque<Time>,
+    /// `(completion ps, latency ps)` per completed op — the
+    /// fig_reconfig dip timeline. Only recorded when `ctrl` is on.
+    timeline: Vec<(u64, u64)>,
 }
 
 impl OpenLoop {
@@ -375,6 +399,9 @@ impl OpenLoop {
             class_lat: vec![Histogram::new(); n_classes],
             counters: Counters::new(),
             obs: None,
+            ctrl: None,
+            parked: VecDeque::new(),
+            timeline: Vec::new(),
             cfg,
         }
     }
@@ -386,6 +413,21 @@ impl OpenLoop {
         if ocfg.enabled() {
             self.obs = Some(Obs::new(ocfg));
         }
+        self
+    }
+
+    /// Attach a scripted live-reconfiguration sequence (see
+    /// [`crate::ctrl`]). The controller seeds its canonical "current
+    /// shape" [`SystemSpec`] from this engine's own configuration;
+    /// every transition mutates that spec and rebuilds the affected
+    /// plane from it. An empty script is a no-op — the run stays
+    /// bit-identical to an unscripted one.
+    pub fn with_reconfig(mut self, events: Vec<ReconfigEvent>) -> OpenLoop {
+        if events.is_empty() {
+            return self;
+        }
+        let spec = SystemSpec::of_openloop(self.cfg, self.dcs.slices());
+        self.ctrl = Some(Box::new(Controller::new(spec, events)));
         self
     }
 
@@ -435,6 +477,13 @@ impl OpenLoop {
     }
 
     fn run_to_completion(&mut self) {
+        if let Some(c) = &self.ctrl {
+            let fire: Vec<(u32, Duration)> =
+                c.events.iter().enumerate().map(|(i, e)| (i as u32, e.at)).collect();
+            for (i, at) in fire {
+                self.eng.schedule(at, Ev::Reconfig(i));
+            }
+        }
         self.eng.schedule(Duration::ZERO, Ev::Arrive);
         while self.completed < self.cfg.ops {
             let Some((_, ev)) = self.eng.pop() else {
@@ -478,7 +527,16 @@ impl OpenLoop {
         reg.set("workload.issued", self.issued);
         reg.set("workload.completed", self.completed);
         reg.set("workload.kvs_lookups", self.kvs.served);
-        reg.absorb("dcs", &self.dcs.counters());
+        // counter continuity across control-plane rebuilds: the live
+        // directory's counters plus everything absorbed from retired
+        // instances
+        let mut dc = self.dcs.counters();
+        if let Some(c) = &self.ctrl {
+            for (k, v) in c.carried.iter() {
+                dc.add(k, v);
+            }
+        }
+        reg.absorb("dcs", &dc);
         self.dcs.observe_gauges("dcs", reg);
         self.to_home.observe("ingress.to_home", reg);
         self.to_cpu.observe("ingress.to_cpu", reg);
@@ -487,6 +545,11 @@ impl OpenLoop {
                 s.merge(&s2);
             }
             reg.absorb_rel("rel", &s);
+        }
+        if let Some(c) = &self.ctrl {
+            reg.gauge("ctrl.phase", c.quiescing() as u8 as f64);
+            reg.gauge("ctrl.parked", self.parked.len() as f64);
+            reg.set("ctrl.transitions", c.records.len() as u64);
         }
     }
 
@@ -553,6 +616,8 @@ impl OpenLoop {
             Ev::RetxCpu => self.on_retx(1),
             Ev::AckFlushHome => self.on_ack_flush(0),
             Ev::AckFlushCpu => self.on_ack_flush(1),
+            Ev::Reconfig(i) => self.ctrl_begin(i as usize),
+            Ev::QuiesceCheck => self.ctrl_check(),
         }
     }
 
@@ -616,7 +681,9 @@ impl OpenLoop {
         self.eng.schedule(rto, if dir == 0 { Ev::RetxHome } else { Ev::RetxCpu });
     }
 
-    fn report(self) -> OpenLoopReport {
+    fn report(mut self) -> OpenLoopReport {
+        let ctrl = self.ctrl.take();
+        let timeline = std::mem::take(&mut self.timeline);
         let sim_time = self.eng.now();
         let n = self.dcs.slices();
         let per_slice_served = self.dcs.per_slice_served();
@@ -625,6 +692,13 @@ impl OpenLoop {
         let served_skew = self.dcs.served_skew();
         let occupancy_skew = self.dcs.occupancy_skew(sim_time);
         let mut counters = self.dcs.counters();
+        if let Some(c) = &ctrl {
+            // counter continuity: directory instances retired by
+            // control-plane rebuilds still count
+            for (k, v) in c.carried.iter() {
+                counters.add(k, v);
+            }
+        }
         for (k, v) in self.remote.stats.iter() {
             counters.add(k, v);
         }
@@ -683,25 +757,36 @@ impl OpenLoop {
             peak_in_flight: self.peak_in_flight,
             events: self.eng.dispatched,
             counters,
+            reconfig: ctrl
+                .map(|c| ReconfigReport { transitions: c.records, timeline }),
         }
     }
 
     // -- arrivals -----------------------------------------------------------
 
     fn arrive(&mut self) {
-        if self.issued >= self.cfg.ops {
+        if self.issued + self.parked.len() as u64 >= self.cfg.ops {
             return;
         }
-        self.spawn();
-        if self.issued < self.cfg.ops {
+        if self.ctrl.as_ref().is_some_and(|c| c.quiescing()) {
+            // park the arrival, but keep the arrival *clock* ticking:
+            // the gap sequence (and with it every RNG draw) stays
+            // identical to a run that never reconfigured
+            self.parked.push_back(self.eng.now());
+        } else {
+            self.spawn_at(self.eng.now());
+        }
+        if self.issued + self.parked.len() as u64 < self.cfg.ops {
             let gap = self.arrivals.next_gap();
             self.eng.schedule(gap, Ev::Arrive);
         }
     }
 
     /// Draw (class, op kind, line) for one arrival and start it.
-    fn spawn(&mut self) {
-        let now = self.eng.now();
+    /// `started` is the op's arrival time — for a parked-then-released
+    /// arrival that is the *original* arrival instant, so the quiesce
+    /// stall lands in its measured latency.
+    fn spawn_at(&mut self, started: Time) {
         let (ci, kind, line) = self.sampler.sample(&mut self.traffic_rng);
         let kind = match kind {
             SampleKind::Read => OpKind::Read,
@@ -711,7 +796,7 @@ impl OpenLoop {
         let ctx = OpCtx {
             kind,
             addr: LineAddr(line),
-            started: now,
+            started,
             active: true,
             class: ci,
         };
@@ -834,6 +919,9 @@ impl OpenLoop {
         let d = now.since(started).ps();
         self.lat.record(d);
         self.class_lat[self.ops[slot as usize].class as usize].record(d);
+        if self.ctrl.is_some() {
+            self.timeline.push((now.ps(), d));
+        }
         self.ops[slot as usize].active = false;
         self.completed += 1;
         self.free.push(slot);
@@ -942,6 +1030,12 @@ impl OpenLoop {
     /// flow back to the generator as the slice consumes messages — that
     /// is the backpressure loop.
     fn pump_slice(&mut self, s: usize) {
+        if s >= self.dcs.slices() {
+            // stale poll scheduled against a pre-reconfiguration shape
+            // (the slice was resliced away mid-quiesce; its queues were
+            // provably empty at the handoff)
+            return;
+        }
         let now = self.eng.now();
         let ctrl = self.cfg.machine.ctrl_latency;
         loop {
@@ -1048,6 +1142,173 @@ impl OpenLoop {
         }
         for a in fills {
             self.wake(a);
+        }
+    }
+
+    // -- control plane ------------------------------------------------------
+
+    /// A scripted reconfiguration event fires: begin quiescing (or
+    /// defer behind the transition already in flight, or record a
+    /// post-completion event as skipped).
+    fn ctrl_begin(&mut self, i: usize) {
+        let now = self.eng.now();
+        let done = self.completed >= self.cfg.ops;
+        let Some(c) = self.ctrl.as_deref_mut() else { return };
+        let ev = c.events[i];
+        if done {
+            // fired after the run's completion target (e.g. during
+            // settle): record it, change nothing
+            let ord = c.records.len() as u64;
+            c.records.push(TransitionRecord::skipped_at(ev, now));
+            if let Some(o) = self.obs.as_mut() {
+                o.flight_record(now, 0, FlightKind::ReconfigSkipped, ord, 0);
+            }
+            return;
+        }
+        if c.quiescing() {
+            // one transition at a time; this one begins at the
+            // in-flight one's resume
+            c.backlog.push_back(i);
+            return;
+        }
+        c.phase = Phase::Quiescing;
+        c.active = Some(i);
+        let ord = c.records.len() as u64;
+        c.records.push(TransitionRecord::begun(ev, now));
+        if let Some(o) = self.obs.as_mut() {
+            o.flight_record(now, 0, FlightKind::ReconfigQuiesce, ord, 0);
+        }
+        self.eng.schedule(Duration::ZERO, Ev::QuiesceCheck);
+    }
+
+    /// The quiesce predicate: nothing issued is unfinished, nothing is
+    /// queued, staged, or in flight on either link direction, and no
+    /// reliable-link frame awaits acknowledgement. With arrivals
+    /// parked, this is monotone — once true it stays true until the
+    /// handoff resumes traffic.
+    fn data_plane_quiet(&self) -> bool {
+        self.completed == self.issued
+            && self.waiters.is_empty()
+            && self.dcs.pending() == 0
+            && self.to_home.queued() == 0
+            && self.to_cpu.queued() == 0
+            && self.to_home.in_flight_total() == 0
+            && self.to_cpu.in_flight_total() == 0
+            && self.to_home.rel_unacked() == 0
+            && self.to_cpu.rel_unacked() == 0
+    }
+
+    /// Control-plane poll: re-arm every `ctrl_latency` until the data
+    /// plane is quiet, then hand off.
+    fn ctrl_check(&mut self) {
+        if !self.ctrl.as_ref().is_some_and(|c| c.quiescing()) {
+            return;
+        }
+        if !self.data_plane_quiet() {
+            let lat = self.cfg.machine.ctrl_latency.max(Duration::from_ns(1));
+            self.eng.schedule(lat, Ev::QuiesceCheck);
+            return;
+        }
+        self.ctrl_handoff();
+    }
+
+    /// The data plane is quiet: mutate the canonical shape and apply
+    /// it — rebuild the directory (re-slice, cache resize, drain,
+    /// rejoin) or swap the link reliability mode in place — then
+    /// resume.
+    fn ctrl_handoff(&mut self) {
+        let now = self.eng.now();
+        let mut c = self.ctrl.take().expect("handoff without a controller");
+        let i = c.active.expect("handoff without an active transition");
+        let kind = c.events[i].kind;
+        c.apply(kind);
+        let (moved, victims) = match kind {
+            ReconfigKind::RelSwap(m) => {
+                // in-place swap on both directions; a recorded no-op on
+                // an unreliable link
+                let a = self.to_home.set_rel_mode(m);
+                let b = self.to_cpu.set_rel_mode(m);
+                self.counters.inc(if a || b { "ctrl_relmode_swaps" } else { "ctrl_relmode_noop" });
+                (0, 0)
+            }
+            _ => {
+                let dcfg = c.spec.dcs_config();
+                let (moved, victims, absorbed) = self.rebuild_dcs(dcfg);
+                c.absorb(&absorbed);
+                (moved, victims)
+            }
+        };
+        let ord = (c.records.len() - 1) as u64;
+        let rec = c.records.last_mut().expect("record pushed at begin");
+        rec.handoff_at = now;
+        rec.moved_lines = moved;
+        rec.cache_victims = victims;
+        if let Some(o) = self.obs.as_mut() {
+            o.flight_record(now, 0, FlightKind::ReconfigHandoff, ord, moved);
+        }
+        self.ctrl = Some(c);
+        self.ctrl_resume();
+    }
+
+    /// Replace the directory with one built to `dcfg`, handing every
+    /// tracked line across state-exactly (residency included). Only
+    /// legal quiesced. Returns `(lines moved, cache victims, retired
+    /// instance's counters)`.
+    fn rebuild_dcs(&mut self, dcfg: DcsConfig) -> (u64, u64, Counters) {
+        debug_assert_eq!(self.dcs.pending(), 0, "rebuild on a non-quiet directory");
+        let absorbed = self.dcs.counters();
+        let mut next = Dcs::with_reference_rules(dcfg);
+        let mut moved = 0u64;
+        let mut victims = 0u64;
+        for i in 0..self.region_lines {
+            let addr = LineAddr(i);
+            if let Some(ex) = self.dcs.export_line(addr) {
+                moved += 1;
+                victims += next.import_line(addr, ex, &mut self.mem);
+            }
+        }
+        debug_assert_eq!(
+            self.dcs.tracked_lines(),
+            0,
+            "lines left behind in the retired directory"
+        );
+        self.dcs = next;
+        // dedup state for the new shape; stale polls against the old
+        // one are bounds-guarded in pump_slice
+        self.poll_at = vec![Time::ZERO; self.dcs.slices()];
+        if let Some(o) = self.obs.as_mut() {
+            // per-slice gauge names change cardinality with the shape:
+            // retire the old registrations so the next refresh
+            // re-registers cleanly within its epoch
+            o.registry.retire_prefix("dcs.");
+        }
+        (moved, victims, absorbed)
+    }
+
+    /// Release parked arrivals FIFO with their original timestamps,
+    /// then start the next backlogged transition, if any.
+    fn ctrl_resume(&mut self) {
+        let now = self.eng.now();
+        let mut c = self.ctrl.take().expect("resume without a controller");
+        let released = self.parked.len() as u64;
+        let ord = (c.records.len() - 1) as u64;
+        {
+            let rec = c.records.last_mut().expect("record pushed at begin");
+            rec.resume_at = now;
+            rec.parked = released;
+        }
+        c.phase = Phase::Idle;
+        c.active = None;
+        if let Some(o) = self.obs.as_mut() {
+            o.flight_record(now, 0, FlightKind::ReconfigResume, ord, released);
+        }
+        self.ctrl = Some(c);
+        while let Some(started) = self.parked.pop_front() {
+            self.spawn_at(started);
+        }
+        let next = self.ctrl.as_deref_mut().and_then(|c| c.backlog.pop_front());
+        if let Some(i) = next {
+            self.ctrl_begin(i);
         }
     }
 }
@@ -1292,6 +1553,86 @@ mod tests {
         assert_eq!(obs.registry.get("workload.completed"), 1_000);
         assert!(obs.registry.get("dcs.slices_served") > 0);
         assert!(obs.registry.get("ingress.to_home.offered") > 0);
+    }
+
+    #[test]
+    fn live_reslice_is_transparent_to_the_settled_state() {
+        // read-only scan: the settled digest is time-independent, so a
+        // mid-run 2->4 reslice must land on exactly the baseline digest
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 2_000, ..Default::default() };
+        let (base, base_digest) = OpenLoop::new(cfg, &sc, 2).run_settled();
+        let evs = vec![ReconfigEvent::parse("reslice:4@50us").unwrap()];
+        let (r, digest) = OpenLoop::new(cfg, &sc, 2).with_reconfig(evs).run_settled();
+        assert_eq!(r.completed, 2_000, "every arrival completes across the transition");
+        assert_eq!(base.completed, 2_000);
+        assert_eq!(digest, base_digest, "reconfigured run must settle identically");
+        let rc = r.reconfig.expect("ctrl was attached");
+        assert_eq!(rc.executed(), 1);
+        let t = &rc.transitions[0];
+        assert!(matches!(t.kind, crate::ctrl::ReconfigKind::Reslice(4)));
+        assert!(!t.skipped);
+        assert!(t.handoff_at >= t.quiesce_start);
+        assert!(t.resume_at >= t.handoff_at);
+        assert_eq!(rc.timeline.len(), 2_000, "one timeline point per completion");
+        assert_eq!(r.per_slice_served.len(), 4, "the final shape has four slices");
+        assert!(base.reconfig.is_none(), "no ctrl, no reconfig report");
+    }
+
+    #[test]
+    fn quiesce_parks_arrivals_and_the_stall_shows_in_latency() {
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let cfg = OpenLoopConfig {
+            rate_per_s: 8e6,
+            ops: 2_000,
+            home_cached: true,
+            ..Default::default()
+        };
+        let evs = vec![ReconfigEvent::parse("cache:0@100us").unwrap()];
+        let r = OpenLoop::new(cfg, &sc, 2).with_reconfig(evs).run();
+        assert_eq!(r.completed, 2_000);
+        let rc = r.reconfig.expect("ctrl was attached");
+        let t = &rc.transitions[0];
+        assert!(t.parked > 0, "a sustained arrival process must park ops mid-quiesce");
+        assert!(t.stall_us() >= t.quiesce_us());
+        // turning the home cache off evicts every resident line through
+        // the writeback path
+        assert!(t.moved_lines > 0, "cached-directory lines must hand off");
+        assert!(t.cache_victims > 0, "cache:0 must evict residents: {t:?}");
+        // counter continuity: hits recorded before the resize survive
+        // in the final report
+        assert!(r.counters.get("home_cache_hit") > 0, "{:?}", r.counters);
+    }
+
+    #[test]
+    fn relmode_swap_midrun_stays_lossless_under_faults() {
+        use crate::transport::rel::{FaultConfig, FaultSpec, RelConfig};
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let spec = FaultSpec { ber: 1e-5, drop: 0.01, reorder: 0.0, burst_len: 1.0 };
+        let mut cfg = OpenLoopConfig { rate_per_s: 2e6, ops: 1_000, ..Default::default() };
+        cfg.machine.rel = Some(RelConfig::new(FaultConfig::new(spec, 11)));
+        let (_, base_digest) = OpenLoop::new(cfg, &sc, 2).run_settled();
+        let evs = vec![ReconfigEvent::parse("relmode:sr@100us").unwrap()];
+        let (r, digest) = OpenLoop::new(cfg, &sc, 2).with_reconfig(evs).run_settled();
+        assert_eq!(r.completed, 1_000);
+        assert_eq!(digest, base_digest, "rel-mode swap must not change what, only when");
+        assert_eq!(r.counters.get("ctrl_relmode_swaps"), 1, "{:?}", r.counters);
+        assert!(r.counters.get("rel_retransmitted") > 0, "faults were live: {:?}", r.counters);
+    }
+
+    #[test]
+    fn post_completion_reconfig_event_is_recorded_as_skipped() {
+        let sc = Scenario::preset("scan", 1 << 10, 0.99).expect("preset");
+        let cfg = OpenLoopConfig { rate_per_s: 4e6, ops: 400, ..Default::default() };
+        // ~100us of traffic; the event fires at 1s, deep in settle
+        let evs = vec![ReconfigEvent::parse("reslice:4@1000000us").unwrap()];
+        let (r, _) = OpenLoop::new(cfg, &sc, 2).with_reconfig(evs).run_settled();
+        assert_eq!(r.completed, 400);
+        let rc = r.reconfig.expect("ctrl was attached");
+        assert_eq!(rc.executed(), 0);
+        assert_eq!(rc.transitions.len(), 1);
+        assert!(rc.transitions[0].skipped);
+        assert_eq!(r.per_slice_served.len(), 2, "the shape never changed");
     }
 
     #[test]

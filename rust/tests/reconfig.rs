@@ -1,0 +1,209 @@
+//! Live-reconfiguration transparency suite: every scripted transition
+//! the control plane supports (`eci::ctrl`) must be **lossless** — a
+//! run that re-shapes itself mid-flight settles into bit-identical
+//! end state (per-line directory states + backing-store bytes) as a
+//! run that never reconfigured.
+//!
+//! Like the litmus suite, the whole file re-runs over the reliable
+//! lossy link: `ECI_LITMUS_FAULTS=<ber>` injects bit errors, drops and
+//! reordering (both runs of each pair see the same faults, so the
+//! digests stay comparable), and `ECI_LITMUS_REL_MODE=sr` starts the
+//! link in selective repeat with the adaptive RTO. Empty / "off"
+//! values mean unset, so a CI matrix can pass them literally. Loss and
+//! reconfiguration compose: a transition quiesces through retransmits
+//! like through anything else, and semantics never change.
+//!
+//! The digest pairs all drive the read-only `scan` scenario: writes
+//! stamp arrival timestamps into line bytes, which would make the
+//! digest timing-sensitive and mask (or fake) divergence. The region
+//! (128 KiB) fits every home-cache shape under test, so cached runs
+//! settle eviction-free and residency cannot skew the directory state.
+
+use eci::ctrl::{ReconfigEvent, ReconfigKind};
+use eci::sim::time::Duration;
+use eci::transport::rel::{FaultConfig, FaultSpec, RelConfig, RelMode};
+use eci::transport::NUM_VCS;
+use eci::workload::{OpenLoop, OpenLoopConfig, OpenLoopReport, Scenario};
+
+/// The lossy-link configuration the environment asks for, if any
+/// (mirrors the litmus suite's knob so one CI matrix drives both).
+fn rel_from_env() -> Option<RelConfig> {
+    let v = std::env::var("ECI_LITMUS_FAULTS").ok()?;
+    if v.is_empty() || v == "off" {
+        return None;
+    }
+    let ber: f64 = v.parse().expect("ECI_LITMUS_FAULTS must be a bit-error rate (or `off`)");
+    let spec = FaultSpec {
+        ber,
+        drop: (ber * 20.0).min(0.05),
+        reorder: (ber * 20.0).min(0.05),
+        burst_len: 1.0,
+    };
+    let mut rel = RelConfig::new(FaultConfig::new(spec, 7));
+    match std::env::var("ECI_LITMUS_REL_MODE").ok().filter(|m| !m.is_empty()) {
+        None => {}
+        Some(m) => match RelMode::parse(&m) {
+            Some(RelMode::GoBackN) => {}
+            Some(RelMode::SelectiveRepeat) => {
+                rel = rel.with_mode(RelMode::SelectiveRepeat).with_adaptive_rto(true);
+            }
+            None => panic!("ECI_LITMUS_REL_MODE must be gbn or sr, got {m:?}"),
+        },
+    }
+    Some(rel)
+}
+
+fn base_cfg(ops: u64, home_cached: bool) -> OpenLoopConfig {
+    let mut cfg = OpenLoopConfig { rate_per_s: 4e6, ops, home_cached, ..Default::default() };
+    if let Some(rel) = rel_from_env() {
+        cfg.machine.rel = Some(rel);
+    }
+    cfg
+}
+
+fn scan() -> Scenario {
+    Scenario::preset("scan", 1 << 10, 0.99).expect("scan preset")
+}
+
+fn ev(us: u64, kind: ReconfigKind) -> ReconfigEvent {
+    ReconfigEvent { at: Duration::from_us(us), kind }
+}
+
+/// Run the scan scenario on `slices` slices with `events` scripted;
+/// returns the report and the settled-state digest.
+fn settled(
+    cfg: OpenLoopConfig,
+    slices: usize,
+    events: Vec<ReconfigEvent>,
+) -> (OpenLoopReport, u64) {
+    let mut ol = OpenLoop::new(cfg, &scan(), slices);
+    if !events.is_empty() {
+        ol = ol.with_reconfig(events);
+    }
+    ol.run_settled()
+}
+
+/// Digest-gate a script against the never-reconfigured baseline and
+/// assert every scripted transition actually executed.
+fn assert_lossless(cfg: OpenLoopConfig, slices: usize, events: Vec<ReconfigEvent>, what: &str) {
+    let n = events.len();
+    let (_, base_digest) = settled(cfg, slices, Vec::new());
+    let (r, digest) = settled(cfg, slices, events);
+    assert_eq!(r.completed, cfg.ops, "{what}: every arrival must complete");
+    let rc = r.reconfig.expect("scripted run reports its transitions");
+    assert_eq!(rc.executed(), n, "{what}: no transition may be skipped: {:?}", rc.transitions);
+    assert_eq!(digest, base_digest, "{what}: settled state diverged from the baseline");
+}
+
+#[test]
+fn reslice_2_to_4_is_digest_transparent() {
+    // streaming (uncached-home) and cached-home variants both gate
+    for home_cached in [false, true] {
+        let cfg = base_cfg(1_600, home_cached);
+        let what = format!("reslice 2->4 (home_cached={home_cached})");
+        let (_, base_digest) = settled(cfg, 2, Vec::new());
+        let (r, digest) = settled(cfg, 2, vec![ev(60, ReconfigKind::Reslice(4))]);
+        assert_eq!(r.completed, cfg.ops, "{what}");
+        assert_eq!(r.per_slice_served.len(), 4, "{what}: report covers the final shape");
+        assert!(r.per_slice_served.iter().all(|&s| s > 0), "{what}: all four slices serve");
+        assert_eq!(r.reconfig.expect("scripted").executed(), 1, "{what}");
+        assert_eq!(digest, base_digest, "{what}: settled state diverged");
+    }
+}
+
+#[test]
+fn drain_and_rejoin_are_digest_transparent() {
+    // slice 1 leaves the rotation at 60us (its lines redistribute over
+    // the survivors) and rejoins at 180us — both handoffs lossless
+    let cfg = base_cfg(1_600, false);
+    assert_lossless(
+        cfg,
+        2,
+        vec![ev(60, ReconfigKind::Drain(1)), ev(180, ReconfigKind::Rejoin)],
+        "drain + rejoin",
+    );
+}
+
+#[test]
+fn relmode_swap_midrun_is_digest_transparent() {
+    // always a *real* swap: when the fault matrix leaves the link
+    // unframed, run a clean rel link so there is a mode to change, and
+    // swap away from whatever mode the run started in
+    let mut cfg = base_cfg(1_600, false);
+    if cfg.machine.rel.is_none() {
+        cfg.machine.rel = Some(RelConfig::from_ber(0.0, 7));
+    }
+    let target = match cfg.machine.rel.expect("just set").mode {
+        RelMode::GoBackN => RelMode::SelectiveRepeat,
+        RelMode::SelectiveRepeat => RelMode::GoBackN,
+    };
+    assert_lossless(
+        cfg,
+        2,
+        vec![ev(90, ReconfigKind::RelSwap(target))],
+        "rel-mode swap",
+    );
+}
+
+#[test]
+fn cache_grow_is_digest_transparent() {
+    // double the home-cache budget mid-run; the 128 KiB region fits
+    // both shapes, so the settled directory state cannot depend on the
+    // budget and the digest must gate exactly
+    let cfg = base_cfg(1_600, true);
+    assert_lossless(
+        cfg,
+        2,
+        vec![ev(80, ReconfigKind::CacheResize(2 << 20))],
+        "home-cache grow",
+    );
+}
+
+#[test]
+fn cache_shrink_to_zero_evicts_and_completes() {
+    // shrink-to-zero changes the final shape's residency, so this one
+    // is count-gated, not digest-gated: the handoff must export the
+    // cached lines, count the victims, and the run must still finish
+    // every arrival with the transition executed
+    let cfg = base_cfg(1_600, true);
+    let (r, _) = settled(cfg, 2, vec![ev(120, ReconfigKind::CacheResize(0))]);
+    assert_eq!(r.completed, cfg.ops);
+    let rc = r.reconfig.expect("scripted");
+    assert_eq!(rc.executed(), 1);
+    let t = &rc.transitions[0];
+    assert!(t.moved_lines > 0, "directory lines must survive the handoff");
+    assert!(t.cache_victims > 0, "shrinking to zero must evict the resident lines");
+}
+
+#[test]
+fn credits_neither_leak_nor_duplicate_across_handoffs() {
+    // the full transition family in one run. A leaked credit shows up
+    // as a stall (completed < ops); a duplicated credit shows up as
+    // peak in-flight beyond the per-VC budget times the VC count.
+    let mut cfg = base_cfg(2_400, true);
+    if cfg.machine.rel.is_none() {
+        cfg.machine.rel = Some(RelConfig::from_ber(0.0, 7));
+    }
+    let target = match cfg.machine.rel.expect("just set").mode {
+        RelMode::GoBackN => RelMode::SelectiveRepeat,
+        RelMode::SelectiveRepeat => RelMode::GoBackN,
+    };
+    let events = vec![
+        ev(60, ReconfigKind::Reslice(4)),
+        ev(150, ReconfigKind::Drain(1)),
+        ev(240, ReconfigKind::Rejoin),
+        ev(330, ReconfigKind::RelSwap(target)),
+        ev(420, ReconfigKind::CacheResize(0)),
+    ];
+    let n = events.len();
+    let (r, _) = settled(cfg, 2, events);
+    assert_eq!(r.completed, cfg.ops, "a leaked credit would strand arrivals");
+    assert_eq!(r.reconfig.expect("scripted").executed(), n);
+    let budget = cfg.machine.link.credits_per_vc * NUM_VCS as u32;
+    assert!(r.peak_in_flight > 0);
+    assert!(
+        r.peak_in_flight <= budget,
+        "a duplicated credit would overshoot the VC budget: {} > {budget}",
+        r.peak_in_flight
+    );
+}
